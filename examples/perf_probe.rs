@@ -1,0 +1,24 @@
+use plmu::benchlib::{bench, BenchConfig};
+use plmu::util::Rng;
+fn main() {
+    let cfg = BenchConfig { warmup_secs: 0.2, measure_secs: 1.0, max_iters: 2000, min_iters: 5 };
+    let mut rng = Rng::new(0);
+    for n in [256usize, 1024, 4096] {
+        let sig: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let kernel: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let nfft = plmu::fft::next_pow2(2 * n);
+        let cache = plmu::fft::RfftCache::new(&kernel, nfft);
+        let s = bench("conv", cfg, || {
+            std::hint::black_box(cache.conv(&sig, n));
+        });
+        println!("conv n={n}: {:.1} us", s.mean * 1e6);
+        // DN operator apply (d=32)
+        let dn = plmu::dn::DelayNetwork::new(32, n as f64);
+        let op = plmu::dn::DnFftOperator::new(&dn, n);
+        let u = plmu::Tensor::new(&[n, 1], sig.clone());
+        let s2 = bench("dnfft", cfg, || {
+            std::hint::black_box(op.apply(&u));
+        });
+        println!("dn_fft_apply n={n} d=32: {:.1} us", s2.mean * 1e6);
+    }
+}

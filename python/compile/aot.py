@@ -1,0 +1,160 @@
+"""AOT lowering: jit -> stablehlo -> HLO TEXT artifacts + manifest.
+
+HLO *text* is the interchange format, NOT ``lowered.compile().serialize()``:
+jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which the
+image's xla_extension 0.5.1 (the version the published ``xla`` 0.1.6 crate
+binds) rejects (``proto.id() <= INT_MAX``).  The text parser reassigns ids
+and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Run via ``make artifacts``:  ``cd python && python -m compile.aot --out ../artifacts``
+
+Artifacts produced (all f32 unless noted):
+
+  dn_fwd_fft.hlo.txt     bare DN forward, FFT path (eq. 26)
+  dn_fwd_pallas.hlo.txt  bare DN forward, Pallas chunked-scan kernel (L1)
+  fwd.hlo.txt            full classifier forward, batched
+  train_step.hlo.txt     fused fwd+bwd+Adam over one flat param vector
+  recurrent_step.hlo.txt eq. 19 single step for streaming inference
+  init_params.npy-txt    initial flat parameter vector (text, one per line)
+  manifest.txt           shapes/layout for the Rust loader
+
+The manifest is a whitespace-separated line format (the Rust side has no
+serde): see ``rust/src/runtime/manifest.rs``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: the default printer ELIDES large constants ("constant({...})"),
+    # and the text parser silently reconstitutes them as zeros — which nulls
+    # the baked F{H} spectrum / Abar matrices.  Print with full literals.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # jax's printer emits metadata attributes (source_end_line, ...) that
+    # the image's older HLO text parser rejects — strip metadata entirely.
+    opts.print_metadata = False
+    text = comp.as_hlo_module().to_string(opts)
+    assert "..." not in text, "HLO printer elided a constant — artifact would be corrupt"
+    return text
+
+
+def _spec_str(a) -> str:
+    dt = {"float32": "f32", "int32": "i32"}[str(a.dtype)]
+    dims = ",".join(str(s) for s in a.shape) if a.shape else "scalar"
+    return f"{dt} {dims}"
+
+
+def lower_and_write(fn, example_args, out_dir: str, name: str, manifest: list[str]):
+    """Lower ``fn`` at the example shapes, write HLO text, record manifest."""
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    outs = jax.eval_shape(fn, *example_args)
+    if not isinstance(outs, (tuple, list)):
+        outs = (outs,)
+    manifest.append(f"artifact {name} {name}.hlo.txt")
+    for i, a in enumerate(example_args):
+        manifest.append(f"  in {i} {_spec_str(a)}")
+    for i, a in enumerate(outs):
+        manifest.append(f"  out {i} {_spec_str(a)}")
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--hidden", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--block", type=int, default=64)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    spec = M.LmuSpec(
+        n=args.n,
+        d=args.d,
+        theta=float(args.n),
+        hidden=args.hidden,
+        batch=args.batch,
+        block=args.block,
+    )
+    P = spec.n_params
+    manifest: list[str] = ["# plmu artifact manifest v1"]
+    manifest.append(
+        "config "
+        f"n={spec.n} dx={spec.dx} du={spec.du} d={spec.d} theta={spec.theta} "
+        f"hidden={spec.hidden} classes={spec.classes} batch={spec.batch} "
+        f"block={spec.block} lr={spec.lr} n_params={P}"
+    )
+    ofs = 0
+    for pname, shape in spec.param_shapes().items():
+        size = int(np.prod(shape))
+        manifest.append(f"param {pname} offset={ofs} shape={'x'.join(map(str, shape))}")
+        ofs += size
+
+    f32 = jnp.float32
+    u_spec = jax.ShapeDtypeStruct((spec.n, spec.du), f32)
+    x1_spec = jax.ShapeDtypeStruct((spec.n, spec.dx), f32)
+    xb_spec = jax.ShapeDtypeStruct((spec.batch, spec.n, spec.dx), f32)
+    yb_spec = jax.ShapeDtypeStruct((spec.batch,), jnp.int32)
+    p_spec = jax.ShapeDtypeStruct((P,), f32)
+    s_spec = jax.ShapeDtypeStruct((), f32)
+    m_spec = jax.ShapeDtypeStruct((spec.d, spec.du), f32)
+    xt_spec = jax.ShapeDtypeStruct((spec.dx,), f32)
+
+    print(f"[aot] spec={spec} n_params={P}")
+
+    # L1 kernel artifacts: the bare DN in both parallel forms.
+    lower_and_write(M.make_dn_fwd(spec, use_pallas=False), (u_spec,), args.out, "dn_fwd_fft", manifest)
+    lower_and_write(M.make_dn_fwd(spec, use_pallas=True), (u_spec,), args.out, "dn_fwd_pallas", manifest)
+
+    # L2 model artifacts.
+    fwd = M.make_forward(spec, use_pallas=False)
+
+    def fwd_batched(params, x):
+        return jax.vmap(lambda xi: fwd(params, xi))(x)
+
+    lower_and_write(fwd_batched, (p_spec, xb_spec), args.out, "fwd", manifest)
+    lower_and_write(
+        M.make_train_step(spec, use_pallas=False),
+        (p_spec, p_spec, p_spec, s_spec, xb_spec, yb_spec),
+        args.out,
+        "train_step",
+        manifest,
+    )
+    lower_and_write(
+        M.make_recurrent_step(spec), (p_spec, m_spec, xt_spec), args.out, "recurrent_step", manifest
+    )
+
+    # Initial parameters, as plain text (one float per line; no npy parser
+    # on the Rust side).
+    params0 = M.init_params(spec, seed=0)
+    with open(os.path.join(args.out, "init_params.txt"), "w") as f:
+        f.write("\n".join(repr(float(v)) for v in params0))
+    manifest.append(f"blob init_params init_params.txt len={P}")
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"[aot] manifest with {len(manifest)} lines -> {args.out}/manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

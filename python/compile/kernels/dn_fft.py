@@ -1,0 +1,42 @@
+"""Eq. (26): the FFT form of the DN convolution, plus helpers shared by the
+L2 model.  The FFT itself stays at the jnp/XLA level (an FFT inside a Pallas
+kernel buys nothing on TPU — XLA's fused FFT is already optimal and the
+elementwise complex product is bandwidth-bound); the Pallas kernels in
+``dn_scan.py`` cover the matmul-shaped paths (eq. 24/25 and the chunked
+scan), which is where the MXU matters.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+
+
+def precompute_hfft(abar: np.ndarray, bbar: np.ndarray, n: int) -> np.ndarray:
+    """rfft of the zero-padded impulse response — frozen, computed once.
+
+    Because A and B are frozen during training (paper §3.3), FFT(H) is a
+    constant of the computation graph; only FFT(U) changes per batch.
+    """
+    H = ref.impulse_response(abar, bbar, n)  # (n, d)
+    return np.fft.rfft(H, n=2 * n, axis=0).astype(np.complex64)  # (n+1, d)
+
+
+def dn_fft_apply(hfft: jax.Array, u: jax.Array) -> jax.Array:
+    """m_{1:n} = irfft(hfft * rfft(u)) — all states, O(n log n d du).
+
+    hfft: (n+1, d) complex64 (precomputed), u: (n, du) -> m: (n, d, du)
+    """
+    n = u.shape[0]
+    nfft = 2 * n
+    uf = jnp.fft.rfft(u.astype(jnp.float32), n=nfft, axis=0)  # (n+1, du)
+    mf = hfft[:, :, None] * uf[:, None, :]  # (n+1, d, du)
+    return jnp.fft.irfft(mf, n=nfft, axis=0)[:n]  # (n, d, du)
+
+
+def dn_fft_apply_batched(hfft: jax.Array, u: jax.Array) -> jax.Array:
+    """Batched FFT form: u (B, n, du) -> m (B, n, d, du)."""
+    return jax.vmap(lambda x: dn_fft_apply(hfft, x))(u)

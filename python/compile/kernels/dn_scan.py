@@ -1,0 +1,215 @@
+"""L1 Pallas kernel: chunked block-parallel evaluation of the DN's LTI scan.
+
+The paper parallelizes ``m_t = Abar m_{t-1} + Bbar u_t`` (eq. 19) by writing
+the whole trajectory as a causal convolution with the impulse response
+(eq. 22/24/26).  On a TPU-shaped memory hierarchy the natural schedule is a
+*chunked scan* (the BlockSpec below is the HBM->VMEM schedule):
+
+  split the sequence into blocks of ``L`` steps; within block ``k``
+
+     local[i]  = sum_{j<=i} Abar^{i-j} Bbar u_{kL+j}      (a Toeplitz matmul
+                                                           against the block
+                                                           impulse response —
+                                                           MXU-friendly)
+     m[kL+i]   = Abar^{i+1} carry_k + local[i]            (carry propagation,
+                                                           a (L*d, d) matmul)
+     carry_{k+1} = m[(k+1)L - 1]
+
+  The grid dimension over blocks is sequential (Pallas TPU guarantees
+  in-order execution of the last grid axis; interpret mode preserves this),
+  so the carry lives in a VMEM scratch buffer.
+
+All tensors are f32; ``interpret=True`` is REQUIRED on this image — real
+TPU lowering emits a Mosaic custom-call the CPU PJRT plugin cannot run.
+
+VMEM footprint per grid step (f32 words):
+    u block       L * du
+    TH stack      d * L * L     (resident across steps)
+    APows stack   L * d * d     (resident across steps)
+    out block     L * d * du
+    carry         d * du
+e.g. d=64, L=64, du=1:  ~0.25M + 0.26M words  ~= 2.1 MB  — fits VMEM (16 MB)
+with room for double buffering of the u/out streams.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import ref
+
+
+def block_tables(abar: np.ndarray, bbar: np.ndarray, block: int) -> tuple[np.ndarray, np.ndarray]:
+    """Precompute the frozen per-block operators.
+
+    TH:    (d, L, L)  TH[s][i, j] = H[i - j, s] for i >= j else 0
+                      (lower-triangular Toeplitz of the block impulse
+                      response H[t] = Abar^t Bbar)
+    APows: (L, d, d)  APows[i] = Abar^{i+1}  (carry propagators)
+
+    A and B are frozen during training (paper §3.3), so this runs once.
+    """
+    d = abar.shape[0]
+    H = ref.impulse_response(abar, bbar, block)  # (L, d)
+    TH = np.zeros((d, block, block), np.float32)
+    for i in range(block):
+        for j in range(i + 1):
+            TH[:, i, j] = H[i - j]
+    APows = np.zeros((block, d, d), np.float64)
+    P = abar.copy()
+    for i in range(block):
+        P_next = P  # Abar^{i+1}
+        APows[i] = P_next
+        P = P @ abar
+    return TH, APows.astype(np.float32)
+
+
+def _dn_scan_kernel(u_ref, th_ref, ap_ref, o_ref, carry_ref):
+    """One grid step = one sequence block.  See module docstring."""
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    u_blk = u_ref[...]  # (L, du)
+    th = th_ref[...]  # (d, L, L)
+    ap = ap_ref[...]  # (L, d, d)
+    carry = carry_ref[...]  # (d, du)
+
+    # Toeplitz matmul: local[i, s, c] = sum_j TH[s, i, j] u[j, c]
+    local = jax.lax.dot_general(
+        th,
+        u_blk,
+        dimension_numbers=(((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (d, L, du)
+    local = jnp.transpose(local, (1, 0, 2))  # (L, d, du)
+
+    # Carry propagation: contrib[i, s, c] = sum_t APows[i, s, t] carry[t, c]
+    contrib = jax.lax.dot_general(
+        ap,
+        carry,
+        dimension_numbers=(((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (L, d, du)
+
+    out = local + contrib
+    o_ref[...] = out
+    carry_ref[...] = out[-1]
+
+
+def dn_scan_pallas(
+    abar: np.ndarray,
+    bbar: np.ndarray,
+    u: jax.Array,
+    block: int = 64,
+    interpret: bool = True,
+) -> jax.Array:
+    """All DN states for ``u`` of shape (n, du): returns m of shape (n, d, du).
+
+    Numerically equivalent to :func:`ref.dn_scan_ref` (the sequential
+    oracle) and :func:`ref.dn_parallel_fft_ref` (eq. 26).
+    """
+    d = abar.shape[0]
+    n, du = u.shape
+    block = int(min(block, n))
+    n_pad = ((n + block - 1) // block) * block
+    if n_pad != n:
+        u = jnp.concatenate([u, jnp.zeros((n_pad - n, du), u.dtype)], axis=0)
+
+    th, ap = block_tables(abar, bbar, block)
+    grid = (n_pad // block,)
+
+    out = pl.pallas_call(
+        _dn_scan_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, du), lambda k: (k, 0)),
+            pl.BlockSpec((d, block, block), lambda k: (0, 0, 0)),
+            pl.BlockSpec((block, d, d), lambda k: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, d, du), lambda k: (k, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, d, du), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((d, du), jnp.float32)],
+        interpret=interpret,
+    )(u.astype(jnp.float32), jnp.asarray(th), jnp.asarray(ap))
+    return out[:n]
+
+
+def _dn_last_kernel(u_ref, hrev_ref, o_ref, acc_ref):
+    """Final-state-only kernel (eq. 25): m_n = sum_j H[n-1-j] u[j].
+
+    Grid streams (L, du) input blocks against (L, d) reversed-impulse
+    blocks, accumulating the (d, du) result in VMEM scratch.  One matmul
+    per block, O(n d du) total — the paper's cheapest path when
+    return_sequences=False.
+    """
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    hrev = hrev_ref[...]  # (L, d)
+    u_blk = u_ref[...]  # (L, du)
+    acc_ref[...] += jax.lax.dot_general(
+        hrev,
+        u_blk,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (d, du)
+
+    @pl.when(k == pl.num_programs(0) - 1)
+    def _fin():
+        o_ref[...] = acc_ref[...]
+
+
+def dn_last_pallas(
+    abar: np.ndarray,
+    bbar: np.ndarray,
+    u: jax.Array,
+    block: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Final DN state m_n for ``u`` (n, du): returns (d, du).  Eq. (25)."""
+    d = abar.shape[0]
+    n, du = u.shape
+    block = int(min(block, n))
+    n_pad = ((n + block - 1) // block) * block
+
+    # H reversed so that the kernel's block-row dot implements H[n-1-j] u[j];
+    # padding rows are zero so the padded tail contributes nothing.
+    H = ref.impulse_response(abar, bbar, n)  # (n, d)
+    hrev = np.zeros((n_pad, d), np.float32)
+    hrev[:n] = H[::-1]
+    if n_pad != n:
+        u = jnp.concatenate([u, jnp.zeros((n_pad - n, du), u.dtype)], axis=0)
+        # shift: with zero-padded u appended, pair u[j] with hrev[j] requires
+        # hrev[:n] = H[::-1] and zeros afterwards — established above.
+
+    out = pl.pallas_call(
+        _dn_last_kernel,
+        grid=(n_pad // block,),
+        in_specs=[
+            pl.BlockSpec((block, du), lambda k: (k, 0)),
+            pl.BlockSpec((block, d), lambda k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((d, du), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, du), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((d, du), jnp.float32)],
+        interpret=interpret,
+    )(u.astype(jnp.float32), jnp.asarray(hrev))
+    return out
+
+
+def vmem_estimate_bytes(d: int, du: int, block: int) -> int:
+    """Static VMEM footprint estimate for one grid step of dn_scan (f32)."""
+    words = block * du + d * block * block + block * d * d + block * d * du + d * du
+    return 4 * words

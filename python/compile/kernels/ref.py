@@ -1,0 +1,179 @@
+"""Pure-jnp reference implementation of the Delay Network (DN) — the
+correctness oracle for the Pallas kernels and for the Rust implementation.
+
+Everything here follows the paper exactly:
+
+  * eq. (8)/(9):  continuous-time Pade approximant matrices A, B of the
+    delay line of order ``d`` and length ``theta``;
+  * footnote 3:   zero-order-hold discretization with dt = 1,
+    ``Abar = exp(A)``, ``Bbar = A^{-1} (exp(A) - I) B`` (we evaluate both
+    with a single matrix exponential of the augmented matrix
+    ``[[A, B], [0, 0]]`` which is numerically identical and avoids the
+    explicit inverse);
+  * eq. (10)/(14): Legendre decoders C(theta');
+  * eq. (19):     the sequential LTI state update (the oracle scan);
+  * eq. (22)-(26): impulse response H, Toeplitz/matmul and FFT parallel
+    forms.
+
+This module is used at build time only (pytest + AOT lowering); the Rust
+side re-implements the same math natively and is tested against artifacts
+produced from these functions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from scipy.linalg import expm as _scipy_expm
+
+
+# ---------------------------------------------------------------------------
+# Continuous-time DN matrices (eq. 8, 9) and Legendre decoders (eq. 10, 14)
+# ---------------------------------------------------------------------------
+
+
+def dn_continuous(d: int, theta: float) -> tuple[np.ndarray, np.ndarray]:
+    """Pade-approximant (A, B) of a ``theta``-long delay of order ``d``.
+
+    A[i, j] = (2i + 1)/theta * (-1            if i < j
+                                (-1)^{i-j+1}  if i >= j)
+    B[i]    = (2i + 1) (-1)^i / theta
+    """
+    if d < 1:
+        raise ValueError(f"DN order must be >= 1, got {d}")
+    if theta <= 0:
+        raise ValueError(f"theta must be > 0, got {theta}")
+    i = np.arange(d)[:, None]
+    j = np.arange(d)[None, :]
+    pre = (2.0 * i + 1.0) / theta
+    A = np.where(i < j, -1.0, (-1.0) ** (i - j + 1)) * pre
+    B = ((2.0 * np.arange(d) + 1.0) * (-1.0) ** np.arange(d) / theta)[:, None]
+    return A.astype(np.float64), B.astype(np.float64)
+
+
+def legendre_decoder(d: int, frac: float = 1.0) -> np.ndarray:
+    """C(theta') of eq. (14) with frac = theta'/theta in [0, 1].
+
+    ``frac == 1`` recovers eq. (10): decode u(t - theta).
+    The entries are shifted Legendre polynomials P_i(2 frac - 1).
+
+    Evaluated with the stable three-term recurrence
+    (n+1) P_{n+1}(y) = (2n+1) y P_n(y) - n P_{n-1}(y); the paper's explicit
+    binomial sum (eq. 14) cancels catastrophically in f64 for i >~ 25.
+    """
+    y = 2.0 * frac - 1.0
+    C = np.zeros(d)
+    if d >= 1:
+        C[0] = 1.0
+    if d >= 2:
+        C[1] = y
+    for i in range(1, d - 1):
+        C[i + 1] = ((2 * i + 1) * y * C[i] - i * C[i - 1]) / (i + 1)
+    return C
+
+
+# ---------------------------------------------------------------------------
+# ZOH discretization (footnote 3)
+# ---------------------------------------------------------------------------
+
+
+def discretize_zoh(A: np.ndarray, B: np.ndarray, dt: float = 1.0) -> tuple[np.ndarray, np.ndarray]:
+    """Exact zero-order-hold discretization via the augmented-matrix trick.
+
+    expm(dt * [[A, B], [0, 0]]) = [[Abar, Bbar], [0, I]]
+    """
+    d = A.shape[0]
+    du = B.shape[1]
+    aug = np.zeros((d + du, d + du))
+    aug[:d, :d] = A * dt
+    aug[:d, d:] = B * dt
+    M = _scipy_expm(aug)
+    return M[:d, :d], M[:d, d:]
+
+
+def dn_discrete(d: int, theta: float, dt: float = 1.0) -> tuple[np.ndarray, np.ndarray]:
+    """Convenience: (Abar, Bbar) for a DN of order ``d``, delay ``theta``."""
+    A, B = dn_continuous(d, theta)
+    return discretize_zoh(A, B, dt)
+
+
+# ---------------------------------------------------------------------------
+# Sequential oracle (eq. 19) and parallel forms (eq. 22-26)
+# ---------------------------------------------------------------------------
+
+
+def dn_scan_ref(abar: jax.Array, bbar: jax.Array, u: jax.Array, m0: jax.Array | None = None) -> jax.Array:
+    """Sequential LTI scan: m_t = Abar m_{t-1} + Bbar u_t  (eq. 19).
+
+    u: (n, du) — du independent input channels, each filtered by the same
+       single-input DN (the paper's eq. 21 reshape trick).
+    returns m: (n, d, du).
+    """
+    d = abar.shape[0]
+    n, du = u.shape
+    if m0 is None:
+        m0 = jnp.zeros((d, du), u.dtype)
+    abar = abar.astype(u.dtype)
+    bvec = bbar[:, 0].astype(u.dtype)  # single-input DN: Bbar is (d, 1)
+
+    def step(m, u_t):
+        m = abar @ m + bvec[:, None] * u_t[None, :]
+        return m, m
+
+    _, ms = jax.lax.scan(step, m0, u)
+    return ms
+
+
+def impulse_response(abar: np.ndarray, bbar: np.ndarray, n: int) -> np.ndarray:
+    """H = [Bbar, Abar Bbar, Abar^2 Bbar, ...]  (eq. 22) — shape (n, d).
+
+    H[t] is the state after feeding the impulse u = (1, 0, 0, ...) for
+    t + 1 steps, i.e. the causal convolution kernel mapping u_{1:n} to
+    m_{1:n}.  Computed by running the recurrent form once (as the paper
+    does: "we compute H by feeding in an impulse to the RNN version of
+    the DN").
+    """
+    H = np.zeros((n, abar.shape[0]))
+    m = bbar[:, 0].copy()
+    for t in range(n):
+        H[t] = m
+        m = abar @ m
+    return H
+
+
+def dn_parallel_fft_ref(H: jax.Array, u: jax.Array) -> jax.Array:
+    """All states by FFT convolution (eq. 26): m_{1:n} = IFFT(FFT(H) . FFT(U)).
+
+    H: (n, d), u: (n, du)  ->  m: (n, d, du)
+    """
+    n = u.shape[0]
+    nfft = 2 * n
+    Hf = jnp.fft.rfft(H.astype(jnp.float32), n=nfft, axis=0)  # (nf, d)
+    Uf = jnp.fft.rfft(u.astype(jnp.float32), n=nfft, axis=0)  # (nf, du)
+    mf = Hf[:, :, None] * Uf[:, None, :]  # (nf, d, du)
+    m = jnp.fft.irfft(mf, n=nfft, axis=0)[:n]
+    return m.astype(u.dtype)
+
+
+def dn_parallel_last_ref(H: jax.Array, u: jax.Array) -> jax.Array:
+    """Final state only (eq. 25): m_n = H U_{:n}  in O(n d du).
+
+    m_n = sum_j Abar^{n-j} Bbar u_j = sum_j H[n-1-j, :] u[j, :]
+    """
+    return jnp.einsum("nd,nc->dc", H[::-1].astype(u.dtype), u)
+
+
+def dn_parallel_toeplitz_ref(H: jax.Array, u: jax.Array) -> jax.Array:
+    """All states by explicit Toeplitz matmul (eq. 24): m_{1:n} = H U.
+
+    O(n^2 d du) — used only as a second oracle for small n.
+    """
+    n, du = u.shape
+    idx = jnp.arange(n)[:, None] - jnp.arange(n)[None, :]  # (t, j) -> t - j
+    T = jnp.where(
+        (idx >= 0)[:, :, None],
+        H.astype(u.dtype)[jnp.clip(idx, 0, n - 1)],
+        0.0,
+    )  # (n, n, d)
+    return jnp.einsum("tjd,jc->tdc", T, u)

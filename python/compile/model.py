@@ -1,0 +1,231 @@
+"""L2: the paper's model (eqs. 18-20) in JAX, calling the L1 kernels.
+
+The block is:
+
+    u_t = f1(Ux x_t + b_u)                      (eq. 18, time-distributed)
+    m_t = Abar m_{t-1} + Bbar u_t               (eq. 19, the frozen DN)
+    o_t = f2(Wm m_t + Wx x_t + b_o)             (eq. 20, time-distributed)
+
+Eq. 19 is evaluated in parallel over the sequence, either through the
+Pallas chunked-scan kernel (``kernels.dn_scan``) or the FFT form
+(``kernels.dn_fft``, eq. 26).  Training differentiates through the DN via
+a custom VJP: the adjoint of a causal convolution with H is the
+anticausal correlation with H, itself evaluated by FFT — so the backward
+pass is parallel too (this is the whole point of the paper).
+
+Everything here runs at BUILD TIME only.  ``aot.py`` lowers the jitted
+functions once to HLO text; the Rust runtime loads and executes them.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import dn_fft, dn_scan, ref
+
+
+# ---------------------------------------------------------------------------
+# Specs and parameter packing
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LmuSpec:
+    """Hyperparameters of a single-block LMU classifier (psMNIST-style)."""
+
+    n: int = 256  # sequence length
+    dx: int = 1  # input feature dim per step
+    du: int = 1  # DN input channels (width of eq. 18's output)
+    d: int = 64  # DN order
+    theta: float = 256.0  # delay length (paper uses theta = n for psMNIST)
+    hidden: int = 128  # width of eq. 20's output
+    classes: int = 10
+    batch: int = 32
+    block: int = 64  # pallas chunk length L
+    lr: float = 1e-3  # Adam (paper: default settings)
+
+    def param_shapes(self) -> dict[str, tuple[int, ...]]:
+        return {
+            "Ux": (self.dx, self.du),
+            "bu": (self.du,),
+            "Wm": (self.d * self.du, self.hidden),
+            "Wx": (self.dx, self.hidden),
+            "bo": (self.hidden,),
+            "Wout": (self.hidden, self.classes),
+            "bout": (self.classes,),
+        }
+
+    @property
+    def n_params(self) -> int:
+        return sum(int(np.prod(s)) for s in self.param_shapes().values())
+
+
+def init_params(spec: LmuSpec, seed: int = 0) -> np.ndarray:
+    """Glorot-uniform init, packed into one flat f32 vector.
+
+    A single flat vector keeps the AOT artifact signature small (one
+    params input instead of seven) and makes the Rust-side marshalling
+    trivial; the layout is recorded in the manifest.
+    """
+    rng = np.random.default_rng(seed)
+    chunks = []
+    for name, shape in spec.param_shapes().items():
+        if len(shape) == 2:
+            limit = np.sqrt(6.0 / (shape[0] + shape[1]))
+            w = rng.uniform(-limit, limit, size=shape)
+        else:
+            w = np.zeros(shape)
+        chunks.append(w.reshape(-1))
+    return np.concatenate(chunks).astype(np.float32)
+
+
+def unpack_params(spec: LmuSpec, flat: jax.Array) -> dict[str, jax.Array]:
+    out = {}
+    ofs = 0
+    for name, shape in spec.param_shapes().items():
+        size = int(np.prod(shape))
+        out[name] = flat[ofs : ofs + size].reshape(shape)
+        ofs += size
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The DN primitive with a parallel custom VJP
+# ---------------------------------------------------------------------------
+
+
+def make_dn_apply(spec: LmuSpec, use_pallas: bool = False):
+    """Returns dn_apply(u) -> m for u (n, du), m (n, d, du).
+
+    Forward: Pallas chunked scan or the FFT form.  Backward: the adjoint
+    convolution  du[j] = sum_{t>=j} H[t-j]^T dm[t],  evaluated by FFT on
+    time-reversed cotangents — parallel in the sequence dimension, exactly
+    as eq. (26) is.
+    """
+    abar, bbar = ref.dn_discrete(spec.d, spec.theta)
+    hfft = jnp.asarray(dn_fft.precompute_hfft(abar, bbar, spec.n))
+
+    @jax.custom_vjp
+    def dn_apply(u):
+        if use_pallas:
+            return dn_scan.dn_scan_pallas(abar, bbar, u, block=spec.block)
+        return dn_fft.dn_fft_apply(hfft, u)
+
+    def fwd(u):
+        return dn_apply(u), None
+
+    def bwd(_, dm):
+        # dm: (n, d, du).  du[j, c] = sum_{t >= j} sum_s H[t-j, s] dm[t, s, c]
+        # Reverse time, convolve causally with H, reverse back:
+        g = dm[::-1]  # (n, d, du)
+        n = g.shape[0]
+        nfft = 2 * n
+        gf = jnp.fft.rfft(g, n=nfft, axis=0)  # (n+1, d, du)
+        cf = (hfft[:, :, None] * gf).sum(axis=1)  # (n+1, du)
+        conv = jnp.fft.irfft(cf, n=nfft, axis=0)[:n]  # (n, du)
+        return (conv[::-1],)
+
+    dn_apply.defvjp(fwd, bwd)
+    return dn_apply
+
+
+# ---------------------------------------------------------------------------
+# Model forward / loss / train step
+# ---------------------------------------------------------------------------
+
+
+def make_forward(spec: LmuSpec, use_pallas: bool = False):
+    """Single-example forward: x (n, dx) -> logits (classes,)."""
+    dn_apply = make_dn_apply(spec, use_pallas=use_pallas)
+
+    def forward(flat_params, x):
+        p = unpack_params(spec, flat_params)
+        u = jnp.tanh(x @ p["Ux"] + p["bu"])  # (n, du)      eq. 18
+        m = dn_apply(u)  # (n, d, du)    eq. 19 (parallel)
+        m_last = m[-1].reshape(-1)  # (d * du,)
+        x_last = x[-1]
+        h = jnp.tanh(m_last @ p["Wm"] + x_last @ p["Wx"] + p["bo"])  # eq. 20
+        return h @ p["Wout"] + p["bout"]
+
+    return forward
+
+
+def make_batched_loss(spec: LmuSpec, use_pallas: bool = False):
+    forward = make_forward(spec, use_pallas=use_pallas)
+
+    def loss_fn(flat_params, x, y):
+        logits = jax.vmap(lambda xi: forward(flat_params, xi))(x)  # (B, C)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+        return nll
+
+    return loss_fn
+
+
+def make_train_step(spec: LmuSpec, use_pallas: bool = False):
+    """Fused fwd+bwd+Adam step over flat params.
+
+    signature: (params, adam_m, adam_v, step, x, y)
+            -> (params', adam_m', adam_v', loss)
+    """
+    loss_fn = make_batched_loss(spec, use_pallas=use_pallas)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    def train_step(params, adam_m, adam_v, step, x, y):
+        loss, g = jax.value_and_grad(loss_fn)(params, x, y)
+        step = step + 1.0
+        adam_m = b1 * adam_m + (1.0 - b1) * g
+        adam_v = b2 * adam_v + (1.0 - b2) * g * g
+        mhat = adam_m / (1.0 - b1**step)
+        vhat = adam_v / (1.0 - b2**step)
+        params = params - spec.lr * mhat / (jnp.sqrt(vhat) + eps)
+        return params, adam_m, adam_v, loss
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Recurrent inference step (eq. 19 run sequentially — streaming mode)
+# ---------------------------------------------------------------------------
+
+
+def make_recurrent_step(spec: LmuSpec):
+    """One streaming step: (m_state, x_t) -> (m_state', logits_t).
+
+    Exactly equivalent to the parallel form — the paper's "Recurrent
+    Inference" property.  The Rust serving coordinator keeps one
+    ``m_state`` per session and calls this artifact per token.
+    """
+    abar, bbar = ref.dn_discrete(spec.d, spec.theta)
+    abar = jnp.asarray(abar, jnp.float32)
+    bvec = jnp.asarray(bbar[:, 0], jnp.float32)
+
+    def step(flat_params, m_state, x_t):
+        # m_state: (d, du), x_t: (dx,)
+        p = unpack_params(spec, flat_params)
+        u_t = jnp.tanh(x_t @ p["Ux"] + p["bu"])  # (du,)
+        m_state = abar @ m_state + bvec[:, None] * u_t[None, :]
+        h = jnp.tanh(m_state.reshape(-1) @ p["Wm"] + x_t @ p["Wx"] + p["bo"])
+        return m_state, h @ p["Wout"] + p["bout"]
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Standalone DN forwards (kernel-only artifacts)
+# ---------------------------------------------------------------------------
+
+
+def make_dn_fwd(spec: LmuSpec, use_pallas: bool):
+    """u (n, du) -> m (n, d, du): the bare DN, Pallas or FFT path."""
+    dn_apply = make_dn_apply(spec, use_pallas=use_pallas)
+
+    def fwd(u):
+        return dn_apply(u)
+
+    return fwd

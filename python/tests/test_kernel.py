@@ -1,0 +1,230 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp sequential oracle.
+
+The sequential scan (eq. 19) is ground truth; every parallel form —
+Toeplitz matmul (eq. 24), last-state matmul (eq. 25), FFT (eq. 26), and
+the Pallas chunked scan — must agree with it.  Hypothesis sweeps shapes
+and block sizes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dn_fft, dn_scan, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand_u(n, du, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((n, du)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# DN matrix construction
+# ---------------------------------------------------------------------------
+
+
+class TestDnMatrices:
+    def test_a_matrix_small(self):
+        A, B = ref.dn_continuous(2, 1.0)
+        # i=0: pre=1: j=0 -> (-1)^1=-1 ; j=1 -> -1
+        # i=1: pre=3: j=0 -> (-1)^2=+1 -> 3 ; j=1 -> (-1)^1=-1 -> -3
+        np.testing.assert_allclose(A, [[-1.0, -1.0], [3.0, -3.0]])
+        np.testing.assert_allclose(B[:, 0], [1.0, -3.0])
+
+    def test_theta_scaling(self):
+        A1, B1 = ref.dn_continuous(4, 1.0)
+        A2, B2 = ref.dn_continuous(4, 2.0)
+        np.testing.assert_allclose(A1, A2 * 2.0)
+        np.testing.assert_allclose(B1, B2 * 2.0)
+
+    def test_invalid_args(self):
+        with pytest.raises(ValueError):
+            ref.dn_continuous(0, 1.0)
+        with pytest.raises(ValueError):
+            ref.dn_continuous(4, 0.0)
+
+    def test_zoh_against_series(self):
+        # For small dt, Abar ~ I + A dt, Bbar ~ B dt.
+        A, B = ref.dn_continuous(4, 10.0)
+        abar, bbar = ref.discretize_zoh(A, B, dt=1e-4)
+        np.testing.assert_allclose(abar, np.eye(4) + A * 1e-4, atol=1e-6)
+        np.testing.assert_allclose(bbar, B * 1e-4, atol=1e-6)
+
+    def test_zoh_matches_footnote3(self):
+        # footnote 3: Abar = e^A, Bbar = A^-1 (e^A - I) B with dt = 1
+        from scipy.linalg import expm
+
+        A, B = ref.dn_continuous(6, 20.0)
+        abar, bbar = ref.discretize_zoh(A, B, dt=1.0)
+        np.testing.assert_allclose(abar, expm(A), atol=1e-10)
+        np.testing.assert_allclose(bbar, np.linalg.solve(A, (expm(A) - np.eye(6)) @ B), atol=1e-10)
+
+    def test_dn_state_is_stable(self):
+        # The discretized DN must not blow up over theta steps.
+        abar, bbar = ref.dn_discrete(16, 64.0)
+        u = _rand_u(256, 1)
+        m = ref.dn_scan_ref(jnp.asarray(abar), jnp.asarray(bbar), u)
+        assert np.isfinite(np.asarray(m)).all()
+        assert np.abs(np.asarray(m)).max() < 100.0
+
+
+class TestLegendreDecoder:
+    def test_endpoint_values(self):
+        # Shifted Legendre polynomials: at frac=0 (decode the *current*
+        # input u(t)), C_i = (-1)^i; at frac=1 (decode u(t - theta),
+        # eq. 10), C_i = 1 for all i.
+        C0 = ref.legendre_decoder(5, frac=0.0)
+        np.testing.assert_allclose(C0, [(-1.0) ** i for i in range(5)])
+        C1 = ref.legendre_decoder(5, frac=1.0)
+        np.testing.assert_allclose(C1, np.ones(5))
+
+    def test_delay_decoding(self):
+        """End-to-end DN property: C(theta'/theta) decodes u(t - theta')."""
+        d, theta, n = 24, 32.0, 256
+        abar, bbar = ref.dn_discrete(d, theta)
+        rng = np.random.default_rng(3)
+        # smooth band-limited signal (the DN approximates delays of
+        # low-frequency content well)
+        t = np.arange(n)
+        u = sum(np.sin(2 * np.pi * f * t / n + p) for f, p in [(2, 0.3), (5, 1.1), (9, 2.0)])
+        u = (u / np.abs(u).max()).astype(np.float32)[:, None]
+        m = np.asarray(ref.dn_scan_ref(jnp.asarray(abar), jnp.asarray(bbar), jnp.asarray(u)))
+        # mid-window decodes carry more Pade ringing than the endpoint
+        for frac, tol in ((0.25, 0.15), (0.5, 0.15), (1.0, 0.12)):
+            delay = int(frac * theta)
+            C = ref.legendre_decoder(d, frac=frac)
+            decoded = m[:, :, 0] @ C
+            err = np.abs(decoded[64:] - u[64 - delay : n - delay, 0]).max()
+            assert err < tol, f"frac={frac}: delay decode err {err}"
+
+
+# ---------------------------------------------------------------------------
+# Parallel forms vs sequential oracle
+# ---------------------------------------------------------------------------
+
+
+class TestParallelForms:
+    @pytest.mark.parametrize("n,d,du", [(32, 8, 1), (64, 16, 3), (100, 24, 2), (256, 64, 1)])
+    def test_fft_matches_scan(self, n, d, du):
+        abar, bbar = ref.dn_discrete(d, float(n))
+        u = _rand_u(n, du, seed=n + d)
+        m_seq = ref.dn_scan_ref(jnp.asarray(abar), jnp.asarray(bbar), u)
+        H = jnp.asarray(ref.impulse_response(abar, bbar, n))
+        m_fft = ref.dn_parallel_fft_ref(H, u)
+        np.testing.assert_allclose(np.asarray(m_seq), np.asarray(m_fft), atol=2e-4)
+
+    @pytest.mark.parametrize("n,d", [(16, 4), (48, 12)])
+    def test_toeplitz_matches_scan(self, n, d):
+        abar, bbar = ref.dn_discrete(d, float(n))
+        u = _rand_u(n, 2, seed=7)
+        m_seq = ref.dn_scan_ref(jnp.asarray(abar), jnp.asarray(bbar), u)
+        H = jnp.asarray(ref.impulse_response(abar, bbar, n))
+        m_toep = ref.dn_parallel_toeplitz_ref(H, u)
+        np.testing.assert_allclose(np.asarray(m_seq), np.asarray(m_toep), atol=2e-4)
+
+    @pytest.mark.parametrize("n,d,du", [(32, 8, 1), (64, 16, 3), (256, 32, 2)])
+    def test_last_matches_scan(self, n, d, du):
+        abar, bbar = ref.dn_discrete(d, float(n))
+        u = _rand_u(n, du, seed=n)
+        m_seq = ref.dn_scan_ref(jnp.asarray(abar), jnp.asarray(bbar), u)
+        H = jnp.asarray(ref.impulse_response(abar, bbar, n))
+        m_last = ref.dn_parallel_last_ref(H, u)
+        np.testing.assert_allclose(np.asarray(m_seq)[-1], np.asarray(m_last), atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels vs oracle
+# ---------------------------------------------------------------------------
+
+
+class TestPallasScan:
+    @pytest.mark.parametrize(
+        "n,d,du,block",
+        [
+            (32, 8, 1, 8),
+            (64, 16, 2, 16),
+            (64, 16, 2, 64),  # single block
+            (100, 8, 1, 16),  # n not a multiple of block
+            (256, 64, 1, 64),  # artifact config
+            (17, 4, 3, 8),  # odd everything
+        ],
+    )
+    def test_scan_kernel_matches_oracle(self, n, d, du, block):
+        abar, bbar = ref.dn_discrete(d, float(max(n, 4)))
+        u = _rand_u(n, du, seed=n * 7 + d)
+        m_seq = np.asarray(ref.dn_scan_ref(jnp.asarray(abar), jnp.asarray(bbar), u))
+        m_pal = np.asarray(dn_scan.dn_scan_pallas(abar, bbar, u, block=block))
+        np.testing.assert_allclose(m_seq, m_pal, atol=2e-4)
+
+    @pytest.mark.parametrize("n,d,du,block", [(64, 16, 2, 16), (100, 8, 1, 32), (256, 64, 1, 128)])
+    def test_last_kernel_matches_oracle(self, n, d, du, block):
+        abar, bbar = ref.dn_discrete(d, float(n))
+        u = _rand_u(n, du, seed=n + 1)
+        m_seq = np.asarray(ref.dn_scan_ref(jnp.asarray(abar), jnp.asarray(bbar), u))
+        m_pal = np.asarray(dn_scan.dn_last_pallas(abar, bbar, u, block=block))
+        np.testing.assert_allclose(m_seq[-1], m_pal, atol=2e-4)
+
+    def test_block_tables_shapes(self):
+        abar, bbar = ref.dn_discrete(8, 32.0)
+        th, ap = dn_scan.block_tables(abar, bbar, 16)
+        assert th.shape == (8, 16, 16)
+        assert ap.shape == (16, 8, 8)
+        # TH strictly lower-triangular-with-diag in (i, j)
+        for s in range(8):
+            assert np.allclose(np.triu(th[s], 1), 0.0)
+        # APows[0] = Abar, APows[-1] = Abar^L
+        np.testing.assert_allclose(ap[0], abar, atol=1e-6)
+        np.testing.assert_allclose(ap[-1], np.linalg.matrix_power(abar, 16), atol=1e-5)
+
+    def test_vmem_estimate(self):
+        b = dn_scan.vmem_estimate_bytes(64, 1, 64)
+        assert 0 < b < 16 * 2**20  # fits VMEM
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.integers(min_value=4, max_value=96),
+        d=st.integers(min_value=1, max_value=24),
+        du=st.integers(min_value=1, max_value=4),
+        blk_log=st.integers(min_value=2, max_value=6),
+    )
+    def test_scan_kernel_hypothesis(self, n, d, du, blk_log):
+        block = 2**blk_log
+        abar, bbar = ref.dn_discrete(d, float(max(n, 4)))
+        u = _rand_u(n, du, seed=n * 31 + d * 7 + du)
+        m_seq = np.asarray(ref.dn_scan_ref(jnp.asarray(abar), jnp.asarray(bbar), u))
+        m_pal = np.asarray(dn_scan.dn_scan_pallas(abar, bbar, u, block=block))
+        np.testing.assert_allclose(m_seq, m_pal, atol=5e-4)
+
+
+class TestFftHelpers:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(min_value=4, max_value=128),
+        d=st.integers(min_value=1, max_value=32),
+        du=st.integers(min_value=1, max_value=4),
+    )
+    def test_fft_apply_hypothesis(self, n, d, du):
+        abar, bbar = ref.dn_discrete(d, float(max(n, 4)))
+        u = _rand_u(n, du, seed=n * 13 + d)
+        hfft = jnp.asarray(dn_fft.precompute_hfft(abar, bbar, n))
+        m_fft = np.asarray(dn_fft.dn_fft_apply(hfft, u))
+        m_seq = np.asarray(ref.dn_scan_ref(jnp.asarray(abar), jnp.asarray(bbar), u))
+        np.testing.assert_allclose(m_seq, m_fft, atol=5e-4)
+
+    def test_batched(self):
+        abar, bbar = ref.dn_discrete(8, 32.0)
+        hfft = jnp.asarray(dn_fft.precompute_hfft(abar, bbar, 32))
+        rng = np.random.default_rng(0)
+        u = jnp.asarray(rng.standard_normal((4, 32, 2)).astype(np.float32))
+        m = dn_fft.dn_fft_apply_batched(hfft, u)
+        assert m.shape == (4, 32, 8, 2)
+        for b in range(4):
+            np.testing.assert_allclose(
+                np.asarray(m[b]), np.asarray(dn_fft.dn_fft_apply(hfft, u[b])), atol=1e-5
+            )

@@ -1,0 +1,91 @@
+//! Coordinator benches: (a) streaming-server throughput vs batching
+//! window, (b) data-parallel scaling across worker threads.
+
+use plmu::autograd::ParamStore;
+use plmu::benchlib::Table;
+use plmu::coordinator::data_parallel::{shard_dataset, DataParallelConfig, DataParallelCoordinator};
+use plmu::coordinator::{NativeStreamingEngine, ServerConfig, StreamingServer};
+use plmu::data::PsMnist;
+use plmu::layers::lmu::{LmuParallelLayer, LmuSpec};
+use plmu::optim::Adam;
+use plmu::train::{ModelKind, SeqClassifier};
+use plmu::util::{Rng, Timer};
+use std::time::Duration;
+
+fn main() {
+    // ---------------- streaming server ---------------------------------
+    println!("=== streaming server: throughput vs batch window ===");
+    let mut rng = Rng::new(0);
+    let mut store = ParamStore::new();
+    let spec = LmuSpec::new(1, 1, 32, 64.0, 32);
+    let layer = LmuParallelLayer::new(spec.clone(), 64, &mut store, &mut rng, "b");
+    let mut table = Table::new(&["window (us)", "max batch", "tokens/s", "mean latency (us)", "mean batch"]);
+    for (window_us, max_batch) in [(0u64, 1usize), (200, 8), (500, 32), (2000, 64)] {
+        let server = StreamingServer::new(
+            1,
+            ServerConfig { max_batch, window: Duration::from_micros(window_us) },
+            || Box::new(NativeStreamingEngine::from_store(&spec, &layer.params, &store)),
+        );
+        let (sessions, tokens) = (8u64, 300usize);
+        let t = Timer::start();
+        std::thread::scope(|scope| {
+            for sid in 0..sessions {
+                let router = &server.router;
+                scope.spawn(move || {
+                    for k in 0..tokens {
+                        let _ = router.step_blocking(sid, vec![(k as f32).sin()]);
+                    }
+                });
+            }
+        });
+        let wall = t.elapsed();
+        let total = server.router.total_requests();
+        let b0 = &server.router;
+        let _ = b0;
+        let m = server.router.metrics_of(0);
+        table.row(&[
+            window_us.to_string(),
+            max_batch.to_string(),
+            format!("{:.0}", total as f64 / wall),
+            format!("{:.0}", m.mean_latency_us()),
+            format!("{:.2}", m.mean_batch_size()),
+        ]);
+    }
+    table.print("streaming throughput/latency trade-off");
+
+    // ---------------- data-parallel scaling -----------------------------
+    println!("\n=== data-parallel training scaling ===");
+    let side = 14usize;
+    let task = PsMnist::new(side, 10, 0);
+    let mut table = Table::new(&["workers", "sync steps", "wall s", "worker-batches/s", "speedup"]);
+    let mut base: Option<f64> = None;
+    for workers in [1usize, 2, 4] {
+        let (xs, ys) = task.dataset(384, 1);
+        let shards = shard_dataset(xs, ys, workers);
+        let seq = side * side;
+        let factory = move || {
+            let mut store = ParamStore::new();
+            let mut r = Rng::new(42);
+            let model = SeqClassifier::new(ModelKind::LmuParallel, seq, 1, 32, 64, 10, &mut store, &mut r);
+            (store, model)
+        };
+        let mut opt = Adam::new(1e-3);
+        let cfg = DataParallelConfig { workers, epochs: 2, batch_size: 16, grad_clip: None, seed: 0 };
+        let t = Timer::start();
+        let res = DataParallelCoordinator::run(factory, shards, &mut opt, &cfg);
+        let wall = t.elapsed();
+        // per sync step each worker processes one batch: samples/s scales
+        let sps = res.steps as f64 / wall * workers as f64; // worker-batches per second
+        if base.is_none() {
+            base = Some(sps);
+        }
+        table.row(&[
+            workers.to_string(),
+            res.steps.to_string(),
+            format!("{wall:.2}"),
+            format!("{sps:.1}"),
+            format!("{:.2}x", sps / base.unwrap()),
+        ]);
+    }
+    table.print("data-parallel scaling (worker-batches/s)");
+}

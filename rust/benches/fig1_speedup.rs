@@ -1,0 +1,71 @@
+//! Figure 1 (left): training-time speedup of our model over the original
+//! LMU, in both the sequential "LTI version" and the parallel version.
+//!
+//! One training step = forward + backward + Adam update, identical batch.
+//! The paper reports 220x (psMNIST shape, n=784) and 64-200x (MG shape)
+//! on a GTX 1080; we report the same ratios measured on this CPU.
+//!
+//! Run: cargo bench --bench fig1_speedup
+
+use plmu::autograd::{Graph, ParamStore};
+use plmu::benchlib::{bench, BenchConfig, Table};
+use plmu::data::batcher::{BatchIter, SeqDataset, Targets};
+use plmu::optim::{Adam, Optimizer};
+use plmu::train::{ModelKind, SeqClassifier, TrainableModel};
+use plmu::util::Rng;
+use plmu::Tensor;
+
+fn step_time(kind: ModelKind, n: usize, d: usize, hidden: usize, batch: usize) -> f64 {
+    let mut store = ParamStore::new();
+    let mut rng = Rng::new(0);
+    let model = SeqClassifier::new(kind, n, 1, d, hidden, 10, &mut store, &mut rng);
+    let xs: Vec<Tensor> = (0..batch).map(|_| Tensor::randn(&[n, 1], 1.0, &mut rng)).collect();
+    let ys: Vec<usize> = (0..batch).map(|i| i % 10).collect();
+    let ds = SeqDataset::classification(xs, ys);
+    let batch_data = BatchIter::sequential(&ds, batch).next().unwrap();
+    let _ = match &batch_data.targets {
+        Targets::Labels(l) => l.len(),
+        _ => 0,
+    };
+    let mut opt = Adam::new(1e-3);
+    let cfg = BenchConfig { warmup_secs: 0.2, measure_secs: 1.0, max_iters: 50, min_iters: 3 };
+    bench("step", cfg, || {
+        let mut g = Graph::new();
+        let loss = model.loss(&mut g, &store, &batch_data);
+        g.backward(loss);
+        let grads = g.param_grads();
+        opt.step(&mut store, &grads);
+    })
+    .mean
+}
+
+fn main() {
+    // psMNIST-shaped (paper: n=784, d=468; scaled so the ORIGINAL cell
+    // finishes in bench time — ratios are what matters)
+    let shapes = [
+        ("psMNIST-shaped", 256usize, 32usize, 64usize, 16usize),
+        ("Mackey-Glass-shaped", 128, 16, 28, 32),
+    ];
+    let mut table = Table::new(&[
+        "workload", "original LMU", "ours (LTI)", "ours (parallel)",
+        "LTI speedup", "parallel speedup", "paper (parallel)",
+    ]);
+    for (name, n, d, hidden, batch) in shapes {
+        println!("measuring {name} (n={n}, d={d}, h={hidden}, B={batch})...");
+        let t_orig = step_time(ModelKind::LmuOriginal, n, d, hidden, batch);
+        let t_lti = step_time(ModelKind::LmuSequential, n, d, hidden, batch);
+        let t_par = step_time(ModelKind::LmuParallel, n, d, hidden, batch);
+        let paper = if name.starts_with("psMNIST") { "220x" } else { "~200x" };
+        table.row(&[
+            name.into(),
+            format!("{:.1} ms", t_orig * 1e3),
+            format!("{:.1} ms", t_lti * 1e3),
+            format!("{:.1} ms", t_par * 1e3),
+            format!("{:.1}x", t_orig / t_lti),
+            format!("{:.1}x", t_orig / t_par),
+            paper.into(),
+        ]);
+    }
+    table.print("Figure 1 (left) — training-step speedup vs the original LMU");
+    println!("\nshape check: parallel >> LTI > original (paper); absolute ratios are hardware-dependent (paper: GTX 1080, here: CPU)");
+}

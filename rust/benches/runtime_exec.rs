@@ -1,0 +1,90 @@
+//! Runtime bench: PJRT artifact execution rates — the serving/training
+//! throughput of the AOT path (compile once, execute many).
+//!
+//! Requires `make artifacts`; prints a notice and exits cleanly otherwise.
+
+use plmu::benchlib::{bench_report, BenchConfig};
+use plmu::runtime::{ArtifactInput, Runtime};
+use plmu::util::Timer;
+use plmu::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::Path::new("artifacts");
+    let mut rt = match Runtime::open(dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("runtime_exec skipped: {e}");
+            return Ok(());
+        }
+    };
+    let n = rt.manifest.config_usize("n").unwrap();
+    let dx = rt.manifest.config_usize("dx").unwrap();
+    let du = rt.manifest.config_usize("du").unwrap();
+    let d = rt.manifest.config_usize("d").unwrap();
+    let batch = rt.manifest.config_usize("batch").unwrap();
+    let params = rt.init_params()?;
+    let p_len = params.len();
+    let cfg = BenchConfig { warmup_secs: 0.3, measure_secs: 1.5, max_iters: 300, min_iters: 3 };
+
+    println!("\n=== artifact compile times (one-off) ===");
+    for name in ["dn_fwd_fft", "dn_fwd_pallas", "fwd", "train_step", "recurrent_step"] {
+        let t = Timer::start();
+        rt.artifact(name)?;
+        println!("  compile {name:<16} {:.2}s", t.elapsed());
+    }
+
+    println!("\n=== execution rates ===");
+    {
+        let art = rt.artifact("dn_fwd_fft")?;
+        let u = Tensor::zeros(&[n, du]);
+        let s = bench_report("dn_fwd_fft (n=256)", cfg, || {
+            let _ = art.run(&[ArtifactInput::F32(u.clone())]).unwrap();
+        });
+        println!("    -> {:.0} sequences/s", 1.0 / s.mean);
+    }
+    {
+        let art = rt.artifact("fwd")?;
+        let x = Tensor::zeros(&[batch, n, dx]);
+        let s = bench_report("fwd (batched classifier)", cfg, || {
+            let _ = art
+                .run(&[ArtifactInput::F32(params.clone()), ArtifactInput::F32(x.clone())])
+                .unwrap();
+        });
+        println!("    -> {:.0} samples/s", batch as f64 / s.mean);
+    }
+    {
+        let art = rt.artifact("train_step")?;
+        let x = Tensor::zeros(&[batch, n, dx]);
+        let y = vec![0i32; batch];
+        let m = Tensor::zeros(&[p_len]);
+        let s = bench_report("train_step (fwd+bwd+Adam)", cfg, || {
+            let _ = art
+                .run(&[
+                    ArtifactInput::F32(params.clone()),
+                    ArtifactInput::F32(m.clone()),
+                    ArtifactInput::F32(m.clone()),
+                    ArtifactInput::F32(Tensor::scalar(1.0)),
+                    ArtifactInput::F32(x.clone()),
+                    ArtifactInput::I32(y.clone()),
+                ])
+                .unwrap();
+        });
+        println!("    -> {:.1} train steps/s = {:.0} samples/s", 1.0 / s.mean, batch as f64 / s.mean);
+    }
+    {
+        let art = rt.artifact("recurrent_step")?;
+        let m = Tensor::zeros(&[d, du]);
+        let x = Tensor::zeros(&[dx]);
+        let s = bench_report("recurrent_step (streaming)", cfg, || {
+            let _ = art
+                .run(&[
+                    ArtifactInput::F32(params.clone()),
+                    ArtifactInput::F32(m.clone()),
+                    ArtifactInput::F32(x.clone()),
+                ])
+                .unwrap();
+        });
+        println!("    -> {:.0} tokens/s/stream", 1.0 / s.mean);
+    }
+    Ok(())
+}

@@ -1,0 +1,118 @@
+//! Table 1: per-layer complexity.  Measures wall time of each evaluation
+//! strategy across n and d sweeps and fits the log-log slope, checking the
+//! paper's asymptotic rows:
+//!
+//!   RNN (LSTM fwd)  O(n dx^2)   sequential
+//!   Attention       O(n^2 dx)   parallel
+//!   DN eq.(19)      O(n d^2 dx) sequential
+//!   DN eq.(24)      O(n^2 d dx) parallel
+//!   DN eq.(25)      O(n d dx)   parallel (last state)
+//!   DN eq.(26)      O(n log n d dx) parallel
+//!
+//! Run: cargo bench --bench table1_complexity
+
+use plmu::autograd::ParamStore;
+use plmu::benchlib::{bench, BenchConfig, Table};
+use plmu::dn::DelayNetwork;
+use plmu::layers::{LstmLayer, SelfAttention};
+use plmu::util::Rng;
+use plmu::Tensor;
+
+fn loglog_slope(xs: &[f64], ys: &[f64]) -> f64 {
+    let lx: Vec<f64> = xs.iter().map(|v| v.ln()).collect();
+    let ly: Vec<f64> = ys.iter().map(|v| v.ln()).collect();
+    let n = lx.len() as f64;
+    let mx = lx.iter().sum::<f64>() / n;
+    let my = ly.iter().sum::<f64>() / n;
+    let cov: f64 = lx.iter().zip(&ly).map(|(a, b)| (a - mx) * (b - my)).sum();
+    let var: f64 = lx.iter().map(|a| (a - mx) * (a - mx)).sum();
+    cov / var
+}
+
+fn main() {
+    let cfg = BenchConfig { warmup_secs: 0.05, measure_secs: 0.25, max_iters: 200, min_iters: 3 };
+    let d = 16usize;
+    let ns = [128usize, 256, 512, 1024];
+    let mut rng = Rng::new(0);
+
+    // per-strategy timings over n
+    let mut rows: Vec<(&str, &str, &str, Vec<f64>)> = Vec::new();
+
+    // DN strategies
+    let mut t19 = Vec::new();
+    let mut t24 = Vec::new();
+    let mut t25 = Vec::new();
+    let mut t26 = Vec::new();
+    for &n in &ns {
+        let dn = DelayNetwork::new(d, n as f64);
+        let u = Tensor::randn(&[n, 1], 1.0, &mut rng);
+        t19.push(bench("dn19", cfg, || { std::hint::black_box(dn.scan_sequential(&u)); }).mean);
+        if n <= 512 {
+            t24.push(bench("dn24", cfg, || { std::hint::black_box(dn.parallel_toeplitz(&u)); }).mean);
+        }
+        t25.push(bench("dn25", cfg, || { std::hint::black_box(dn.parallel_last(&u)); }).mean);
+        let op = plmu::dn::DnFftOperator::new(&dn, n);
+        t26.push(bench("dn26", cfg, || { std::hint::black_box(op.apply(&u)); }).mean);
+    }
+    rows.push(("DN eq.19 (sequential scan)", "O(n d^2 dx)", "yes", t19.clone()));
+    rows.push(("DN eq.24 (Toeplitz matmul)", "O(n^2 d dx)", "no", t24.clone()));
+    rows.push(("DN eq.25 (final state)", "O(n d dx)", "no", t25.clone()));
+    rows.push(("DN eq.26 (FFT)", "O(n log n d dx)", "no", t26.clone()));
+
+    // LSTM forward (RNN row)
+    let mut t_rnn = Vec::new();
+    for &n in &ns {
+        let mut store = ParamStore::new();
+        let lstm = LstmLayer::new(16, 16, &mut store, &mut rng, "b");
+        let x = Tensor::randn(&[n, 16], 1.0, &mut rng);
+        t_rnn.push(
+            bench("rnn", cfg, || {
+                let mut g = plmu::autograd::Graph::new();
+                let xi = g.input(x.clone());
+                std::hint::black_box(lstm.forward_last(&mut g, &store, xi, 1, n));
+            })
+            .mean,
+        );
+    }
+    rows.push(("RNN (LSTM forward)", "O(n dx^2)", "yes", t_rnn.clone()));
+
+    // Attention
+    let mut t_att = Vec::new();
+    for &n in &ns {
+        let att = SelfAttention::new(16, false, &mut rng);
+        let x = Tensor::randn(&[n, 16], 1.0, &mut rng);
+        t_att.push(bench("att", cfg, || { std::hint::black_box(att.forward(&x)); }).mean);
+    }
+    rows.push(("Self-attention", "O(n^2 dx)", "no", t_att.clone()));
+
+    // print
+    let mut table = Table::new(&["layer type", "paper complexity", "seq ops", "n=128", "n=256", "n=512", "n=1024", "slope(n)"]);
+    for (name, cx, seq, times) in &rows {
+        let ns_used: Vec<f64> = ns.iter().take(times.len()).map(|&v| v as f64).collect();
+        let slope = loglog_slope(&ns_used, times);
+        let mut cells = vec![name.to_string(), cx.to_string(), seq.to_string()];
+        for i in 0..4 {
+            cells.push(times.get(i).map(|t| format!("{:.2}ms", t * 1e3)).unwrap_or("-".into()));
+        }
+        cells.push(format!("{slope:.2}"));
+        table.row(&cells);
+    }
+    table.print("Table 1 — complexity per layer (measured, d=16, dx=1/16)");
+
+    // d-sweep for DN(19) vs DN(25): quadratic vs linear in d
+    let n = 256usize;
+    let ds = [8usize, 16, 32, 64];
+    let mut t19d = Vec::new();
+    let mut t25d = Vec::new();
+    for &dd in &ds {
+        let dn = DelayNetwork::new(dd, n as f64);
+        let u = Tensor::randn(&[n, 1], 1.0, &mut rng);
+        t19d.push(bench("dn19d", cfg, || { std::hint::black_box(dn.scan_sequential(&u)); }).mean);
+        t25d.push(bench("dn25d", cfg, || { std::hint::black_box(dn.parallel_last(&u)); }).mean);
+    }
+    let dsf: Vec<f64> = ds.iter().map(|&v| v as f64).collect();
+    println!("\nd-scaling (n=256): eq.19 slope {:.2} (paper: 2 = d^2), eq.25 slope {:.2} (paper: 1 = d)",
+        loglog_slope(&dsf, &t19d), loglog_slope(&dsf, &t25d));
+
+    println!("\nexpected slopes(n): eq.19≈1, eq.24≈2, eq.25≈1, eq.26≈1+, RNN≈1, attention≈2");
+}

@@ -1,0 +1,42 @@
+//! Table 2: psMNIST accuracy (scaled-down synthetic; see DESIGN.md).
+//! A quick-budget version of examples/psmnist.rs suited to `cargo bench`;
+//! run the example with --side 16 --epochs 10 for the fuller experiment.
+
+use plmu::autograd::ParamStore;
+use plmu::benchlib::Table;
+use plmu::data::{PsMnist, SeqDataset};
+use plmu::optim::Adam;
+use plmu::train::{fit, FitOptions, ModelKind, SeqClassifier};
+use plmu::util::{human_count, Rng, Timer};
+
+fn main() {
+    let side = 10usize;
+    let task = PsMnist::new(side, 10, 0);
+    let (xs, ys) = task.dataset(400, 1);
+    let (train, test) = SeqDataset::classification(xs, ys).split(0.25);
+    println!("synthetic psMNIST {side}x{side} (n={}), {} train / {} test", task.seq_len(), train.len(), test.len());
+
+    let mut table = Table::new(&["model", "params", "train s", "acc % (ours)", "acc % (paper)"]);
+    for (kind, name, paper) in [
+        (ModelKind::Lstm, "LSTM", "89.86"),
+        (ModelKind::LmuParallel, "Our Model", "98.49"),
+    ] {
+        let mut store = ParamStore::new();
+        let mut rng = Rng::new(4);
+        let model = SeqClassifier::new(kind, task.seq_len(), 1, 24, 40, 10, &mut store, &mut rng);
+        let mut opt = Adam::new(1e-3);
+        let opts = FitOptions { epochs: 4, batch_size: 32, ..Default::default() };
+        let timer = Timer::start();
+        let res = fit(&model, &mut store, &mut opt, &train, Some(&test), &opts);
+        let acc = res.epochs.last().unwrap().eval_metric.unwrap();
+        table.row(&[
+            name.into(),
+            human_count(store.num_scalars()),
+            format!("{:.1}", timer.elapsed()),
+            format!("{acc:.2}"),
+            paper.into(),
+        ]);
+        println!("  {name}: {acc:.2}%");
+    }
+    table.print("Table 2 — psMNIST (quick bench; paper column = full-scale result)");
+}

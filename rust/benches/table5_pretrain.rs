@@ -1,0 +1,101 @@
+//! Table 5: semi-supervised sentiment — pretrain a language model on an
+//! unlabeled corpus (Amazon-reviews stand-in), then finetune a sentiment
+//! classifier on the deep (weighted-block) representations; compare with
+//! training the same architecture from scratch.
+//!
+//! The paper's claim: pretraining lifts IMDB accuracy above both the
+//! from-scratch model and larger baselines (92.88 LSTM / 92.82 DistilBERT
+//! / 93.20 ours, with ours at half the parameters).
+
+use plmu::autograd::{Graph, ParamStore};
+use plmu::benchlib::Table;
+use plmu::data::nlp::SynthLang;
+use plmu::layers::{Activation, Dense};
+use plmu::metrics::accuracy;
+use plmu::optim::{Adam, Optimizer};
+use plmu::train::LmModel;
+use plmu::util::{human_count, Rng, Timer};
+
+fn finetune_and_eval(
+    lm: &LmModel,
+    store: &mut ParamStore,
+    lang: &SynthLang,
+    steps: usize,
+    seed: u64,
+) -> f64 {
+    let n = lm.n;
+    let (tx, ty) = lang.sentiment_dataset(300, n, seed);
+    let (ex, ey) = lang.sentiment_dataset(120, n, seed + 1);
+    let mut rng = Rng::new(seed);
+    let head = Dense::new(lm.dim, 2, Activation::Linear, store, &mut rng, "ft.head");
+    let mut opt = Adam::new(1e-3); // paper: Adam defaults even when finetuning
+    for s in 0..steps {
+        let i = s % tx.len();
+        let mut g = Graph::new();
+        let h = lm.encode_deep(&mut g, store, &tx[i], 1); // (n, dim)
+        let last = g.slice_rows(h, n - 1, n);
+        let logits = head.forward(&mut g, store, last);
+        let loss = g.softmax_xent(logits, &[ty[i]]);
+        g.backward(loss);
+        let grads = g.param_grads();
+        opt.step(store, &grads);
+    }
+    let mut preds = Vec::new();
+    for x in &ex {
+        let mut g = Graph::new();
+        let h = lm.encode_deep(&mut g, store, x, 1);
+        let last = g.slice_rows(h, n - 1, n);
+        let logits = head.forward(&mut g, store, last);
+        preds.push(g.value(logits).argmax_rows()[0]);
+    }
+    accuracy(&preds, &ey)
+}
+
+fn main() {
+    let lang = SynthLang::new(300, 8, 0);
+    let (vocab, dim, blocks, d, theta, n) = (300usize, 24usize, 3usize, 6usize, 6.0f64, 24usize);
+    let pretrain_steps = 500usize;
+    let finetune_steps = 400usize;
+
+    // ---------------- pretrained path ----------------------------------
+    let mut store_a = ParamStore::new();
+    let mut rng = Rng::new(0);
+    let lm_a = LmModel::new(vocab, dim, blocks, d, theta, n, &mut store_a, &mut rng);
+    let stream = lang.lm_stream(pretrain_steps * (n + 1) + 64, 7);
+    let mut opt = Adam::new(1e-3);
+    let timer = Timer::start();
+    let mut lm_losses = Vec::new();
+    for s in 0..pretrain_steps {
+        let ofs = s * (n + 1) % (stream.len() - n - 1);
+        let window = stream[ofs..ofs + n + 1].to_vec();
+        let mut g = Graph::new();
+        let loss = lm_a.lm_loss(&mut g, &store_a, &[window]);
+        lm_losses.push(g.value(loss).item());
+        g.backward(loss);
+        let grads = g.param_grads();
+        opt.step(&mut store_a, &grads);
+    }
+    let pre_time = timer.elapsed();
+    println!(
+        "pretrained LM {pretrain_steps} steps in {pre_time:.1}s: loss {:.3} -> {:.3} (ln V = {:.2})",
+        lm_losses[0],
+        lm_losses.last().unwrap(),
+        (vocab as f32).ln()
+    );
+    let acc_pre = finetune_and_eval(&lm_a, &mut store_a, &lang, finetune_steps, 21);
+
+    // ---------------- from-scratch path ---------------------------------
+    let mut store_b = ParamStore::new();
+    let mut rng_b = Rng::new(0);
+    let lm_b = LmModel::new(vocab, dim, blocks, d, theta, n, &mut store_b, &mut rng_b);
+    let acc_scratch = finetune_and_eval(&lm_b, &mut store_b, &lang, finetune_steps, 21);
+
+    let mut table = Table::new(&["model", "params", "acc % (ours)", "acc % (paper)"]);
+    table.row(&["from scratch".into(), human_count(store_b.num_scalars()), format!("{acc_scratch:.2}"), "-".into()]);
+    table.row(&["pretrained + finetune".into(), human_count(store_a.num_scalars()), format!("{acc_pre:.2}"), "93.20 (34M)".into()]);
+    table.print("Table 5 — sentiment with LM pretraining (Amazon stand-in)");
+    println!(
+        "\nshape check (paper: pretraining helps): {}",
+        if acc_pre >= acc_scratch { "HOLDS" } else { "VIOLATED (budget too small)" }
+    );
+}

@@ -1,0 +1,631 @@
+//! Tape-based reverse-mode automatic differentiation over [`Tensor`]s.
+//!
+//! The native trainer uses this to train every architecture in the paper's
+//! comparisons (original LMU, our-model LTI, our-model parallel, LSTM)
+//! without hand-written BPTT.  Design:
+//!
+//!  * a [`Graph`] is a flat arena of nodes built per batch (define-by-run);
+//!  * ops are an enum, not closures — backward is one `match`, borrow-
+//!    checker friendly and cheap;
+//!  * trainable parameters live outside the graph in a [`ParamStore`];
+//!    `Graph::param` snapshots a value in and records the linkage so
+//!    gradients can be routed back to the optimizer;
+//!  * the DN enters the graph through [`Graph::dn_conv`] /
+//!    [`Graph::dn_last`], whose backward passes are the *adjoint
+//!    convolutions* — parallel over the sequence exactly like the forward
+//!    (the custom-VJP trick mirrored from python/compile/model.py).
+
+pub mod params;
+
+pub use params::{ParamId, ParamStore};
+
+use crate::dn::DnFftOperator;
+use crate::tensor::Tensor;
+use std::rc::Rc;
+
+pub type NodeId = usize;
+
+enum Op {
+    /// constant or input — no gradient propagation
+    Leaf,
+    /// trainable parameter snapshot (store index recorded separately)
+    Param,
+    Add,
+    Sub,
+    Mul,
+    Neg,
+    Scale(f32),
+    /// one_minus: 1 - x
+    OneMinus,
+    Abs,
+    AddRow,
+    MatMul,
+    /// C = A · Bᵀ (attention scores)
+    MatMulNT,
+    /// row-wise softmax; aux = the softmax output itself
+    SoftmaxRows,
+    Tanh,
+    Sigmoid,
+    Relu,
+    MeanAll,
+    SumAll,
+    SliceRows { lo: usize },
+    SliceCols { lo: usize, hi: usize },
+    ConcatCols { widths: Vec<usize> },
+    ConcatRows { heights: Vec<usize> },
+    Reshape { from: Vec<usize> },
+    /// fused mean softmax cross-entropy; aux = softmax probabilities
+    SoftmaxXent { labels: Vec<usize> },
+    /// mean squared error against a constant target; aux = target
+    Mse,
+    /// rows of a table gathered by token id
+    Embedding { ids: Vec<usize> },
+    Dropout { mask: Vec<f32> },
+    /// batched DN causal convolution (all states): (B·n, du) -> (B·n, du·d)
+    DnConv { op: Rc<DnFftOperator>, batch: usize },
+    /// batched DN final state (eq. 25): (B·n, du) -> (B, du·d); aux = H reversed (n, d)
+    DnLast { batch: usize },
+}
+
+struct Node {
+    value: Tensor,
+    grad: Option<Tensor>,
+    op: Op,
+    parents: Vec<NodeId>,
+    /// op-specific cached tensor (softmax probs, MSE target, H_rev, ...)
+    aux: Option<Tensor>,
+}
+
+/// A single-use computation tape.
+pub struct Graph {
+    nodes: Vec<Node>,
+    /// (store index, node) pairs for parameter leaves
+    param_nodes: Vec<(ParamId, NodeId)>,
+}
+
+impl Default for Graph {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Graph {
+    pub fn new() -> Self {
+        Graph { nodes: Vec::with_capacity(256), param_nodes: Vec::new() }
+    }
+
+    fn push(&mut self, value: Tensor, op: Op, parents: Vec<NodeId>, aux: Option<Tensor>) -> NodeId {
+        self.nodes.push(Node { value, grad: None, op, parents, aux });
+        self.nodes.len() - 1
+    }
+
+    // ------------------------------------------------------------- inputs
+
+    /// Non-trainable input / constant.
+    pub fn input(&mut self, t: Tensor) -> NodeId {
+        self.push(t, Op::Leaf, vec![], None)
+    }
+
+    /// Trainable parameter: snapshots the current value from the store.
+    pub fn param(&mut self, store: &ParamStore, id: ParamId) -> NodeId {
+        let n = self.push(store.get(id).clone(), Op::Param, vec![], None);
+        self.param_nodes.push((id, n));
+        n
+    }
+
+    pub fn value(&self, id: NodeId) -> &Tensor {
+        &self.nodes[id].value
+    }
+
+    pub fn grad(&self, id: NodeId) -> Option<&Tensor> {
+        self.nodes[id].grad.as_ref()
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    // ---------------------------------------------------------- arithmetic
+
+    pub fn add(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let v = self.nodes[a].value.add(&self.nodes[b].value);
+        self.push(v, Op::Add, vec![a, b], None)
+    }
+
+    pub fn sub(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let v = self.nodes[a].value.sub(&self.nodes[b].value);
+        self.push(v, Op::Sub, vec![a, b], None)
+    }
+
+    pub fn mul(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let v = self.nodes[a].value.mul(&self.nodes[b].value);
+        self.push(v, Op::Mul, vec![a, b], None)
+    }
+
+    pub fn neg(&mut self, a: NodeId) -> NodeId {
+        let v = self.nodes[a].value.neg();
+        self.push(v, Op::Neg, vec![a], None)
+    }
+
+    pub fn scale(&mut self, a: NodeId, s: f32) -> NodeId {
+        let v = self.nodes[a].value.scale(s);
+        self.push(v, Op::Scale(s), vec![a], None)
+    }
+
+    pub fn one_minus(&mut self, a: NodeId) -> NodeId {
+        let v = self.nodes[a].value.map(|x| 1.0 - x);
+        self.push(v, Op::OneMinus, vec![a], None)
+    }
+
+    pub fn abs(&mut self, a: NodeId) -> NodeId {
+        let v = self.nodes[a].value.map(f32::abs);
+        self.push(v, Op::Abs, vec![a], None)
+    }
+
+    /// Broadcast-add a bias row vector to each row of `a`.
+    pub fn add_row(&mut self, a: NodeId, bias: NodeId) -> NodeId {
+        let v = self.nodes[a].value.add_row(&self.nodes[bias].value);
+        self.push(v, Op::AddRow, vec![a, bias], None)
+    }
+
+    pub fn matmul(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let v = self.nodes[a].value.matmul(&self.nodes[b].value);
+        self.push(v, Op::MatMul, vec![a, b], None)
+    }
+
+    /// C = A · Bᵀ — used for attention score matrices.
+    pub fn matmul_nt(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let v = self.nodes[a].value.matmul_nt(&self.nodes[b].value);
+        self.push(v, Op::MatMulNT, vec![a, b], None)
+    }
+
+    /// Row-wise softmax (differentiable — attention weights).
+    pub fn softmax_rows(&mut self, a: NodeId) -> NodeId {
+        let v = self.nodes[a].value.softmax_rows();
+        self.push(v.clone(), Op::SoftmaxRows, vec![a], Some(v))
+    }
+
+    /// x @ W + b — the affine building block.
+    pub fn affine(&mut self, x: NodeId, w: NodeId, b: NodeId) -> NodeId {
+        let xw = self.matmul(x, w);
+        self.add_row(xw, b)
+    }
+
+    // ---------------------------------------------------------- nonlinear
+
+    pub fn tanh(&mut self, a: NodeId) -> NodeId {
+        let v = self.nodes[a].value.tanh();
+        self.push(v, Op::Tanh, vec![a], None)
+    }
+
+    pub fn sigmoid(&mut self, a: NodeId) -> NodeId {
+        let v = self.nodes[a].value.sigmoid();
+        self.push(v, Op::Sigmoid, vec![a], None)
+    }
+
+    pub fn relu(&mut self, a: NodeId) -> NodeId {
+        let v = self.nodes[a].value.relu();
+        self.push(v, Op::Relu, vec![a], None)
+    }
+
+    // ---------------------------------------------------------- reductions
+
+    pub fn mean_all(&mut self, a: NodeId) -> NodeId {
+        let v = Tensor::scalar(self.nodes[a].value.mean());
+        self.push(v, Op::MeanAll, vec![a], None)
+    }
+
+    pub fn sum_all(&mut self, a: NodeId) -> NodeId {
+        let v = Tensor::scalar(self.nodes[a].value.sum());
+        self.push(v, Op::SumAll, vec![a], None)
+    }
+
+    // ------------------------------------------------------------- shaping
+
+    pub fn slice_rows(&mut self, a: NodeId, lo: usize, hi: usize) -> NodeId {
+        let v = self.nodes[a].value.slice_rows(lo, hi);
+        self.push(v, Op::SliceRows { lo }, vec![a], None)
+    }
+
+    pub fn slice_cols(&mut self, a: NodeId, lo: usize, hi: usize) -> NodeId {
+        let src = &self.nodes[a].value;
+        let (r, c) = (src.rows(), src.cols());
+        assert!(lo <= hi && hi <= c);
+        let mut v = Tensor::zeros(&[r, hi - lo]);
+        for i in 0..r {
+            v.data_mut()[i * (hi - lo)..(i + 1) * (hi - lo)]
+                .copy_from_slice(&src.data()[i * c + lo..i * c + hi]);
+        }
+        self.push(v, Op::SliceCols { lo, hi }, vec![a], None)
+    }
+
+    pub fn concat_cols(&mut self, parts: &[NodeId]) -> NodeId {
+        let tensors: Vec<&Tensor> = parts.iter().map(|&p| &self.nodes[p].value).collect();
+        let widths: Vec<usize> = tensors.iter().map(|t| t.cols()).collect();
+        let v = Tensor::concat_cols(&tensors);
+        self.push(v, Op::ConcatCols { widths }, parts.to_vec(), None)
+    }
+
+    pub fn concat_rows(&mut self, parts: &[NodeId]) -> NodeId {
+        let tensors: Vec<&Tensor> = parts.iter().map(|&p| &self.nodes[p].value).collect();
+        let heights: Vec<usize> = tensors.iter().map(|t| t.rows()).collect();
+        let v = Tensor::concat_rows(&tensors);
+        self.push(v, Op::ConcatRows { heights }, parts.to_vec(), None)
+    }
+
+    pub fn reshape(&mut self, a: NodeId, shape: &[usize]) -> NodeId {
+        let from = self.nodes[a].value.shape().to_vec();
+        let v = self.nodes[a].value.reshaped(shape);
+        self.push(v, Op::Reshape { from }, vec![a], None)
+    }
+
+    // --------------------------------------------------------------- loss
+
+    /// Mean softmax cross-entropy of logits (B, C) against integer labels.
+    pub fn softmax_xent(&mut self, logits: NodeId, labels: &[usize]) -> NodeId {
+        let probs = self.nodes[logits].value.softmax_rows();
+        let c = probs.cols();
+        assert_eq!(labels.len(), probs.rows(), "labels/batch mismatch");
+        let mut nll = 0.0f64;
+        for (i, &y) in labels.iter().enumerate() {
+            assert!(y < c, "label {y} out of range {c}");
+            nll -= (probs.data()[i * c + y].max(1e-12) as f64).ln();
+        }
+        let v = Tensor::scalar((nll / labels.len() as f64) as f32);
+        self.push(v, Op::SoftmaxXent { labels: labels.to_vec() }, vec![logits], Some(probs))
+    }
+
+    /// Mean squared error against a constant target.
+    pub fn mse(&mut self, pred: NodeId, target: &Tensor) -> NodeId {
+        let diff = self.nodes[pred].value.sub(target);
+        let v = Tensor::scalar(diff.sq_norm() / diff.len() as f32);
+        self.push(v, Op::Mse, vec![pred], Some(target.clone()))
+    }
+
+    // ----------------------------------------------------------- embedding
+
+    /// Gather rows of an embedding table (V, E) by token ids -> (len, E).
+    pub fn embedding(&mut self, table: NodeId, ids: &[usize]) -> NodeId {
+        let t = &self.nodes[table].value;
+        let (v_sz, e) = (t.shape()[0], t.shape()[1]);
+        let mut out = Tensor::zeros(&[ids.len(), e]);
+        for (i, &id) in ids.iter().enumerate() {
+            assert!(id < v_sz, "token id {id} out of vocab {v_sz}");
+            out.data_mut()[i * e..(i + 1) * e].copy_from_slice(&t.data()[id * e..(id + 1) * e]);
+        }
+        self.push(out, Op::Embedding { ids: ids.to_vec() }, vec![table], None)
+    }
+
+    /// Inverted dropout with the given keep probability (training mode).
+    pub fn dropout(&mut self, a: NodeId, keep: f32, rng: &mut crate::util::Rng) -> NodeId {
+        assert!(keep > 0.0 && keep <= 1.0);
+        let src = &self.nodes[a].value;
+        let mask: Vec<f32> = (0..src.len())
+            .map(|_| if (rng.uniform() as f32) < keep { 1.0 / keep } else { 0.0 })
+            .collect();
+        let mut v = src.clone();
+        for (x, m) in v.data_mut().iter_mut().zip(&mask) {
+            *x *= m;
+        }
+        self.push(v, Op::Dropout { mask }, vec![a], None)
+    }
+
+    // ------------------------------------------------------------------ DN
+
+    /// Batched DN causal convolution, all states (the parallel training
+    /// path, eq. 26).  u: (B·n, du) channel-major output: (B·n, du·d).
+    pub fn dn_conv(&mut self, u: NodeId, op: Rc<DnFftOperator>, batch: usize) -> NodeId {
+        let uv = &self.nodes[u].value;
+        let n = op.n;
+        let du = uv.cols();
+        assert_eq!(uv.rows(), batch * n, "dn_conv: rows {} != B*n {}", uv.rows(), batch * n);
+        let d = op.d;
+        let mut out = Tensor::zeros(&[batch * n, du * d]);
+        for b in 0..batch {
+            let u_b = uv.slice_rows(b * n, (b + 1) * n);
+            let m = op.apply(&u_b); // (n, d, du)
+            // repack (n, d, du) -> rows (n, du*d) channel-major
+            for t in 0..n {
+                for c in 0..du {
+                    for s in 0..d {
+                        out.data_mut()[(b * n + t) * du * d + c * d + s] =
+                            m.data()[(t * d + s) * du + c];
+                    }
+                }
+            }
+        }
+        self.push(out, Op::DnConv { op, batch }, vec![u], None)
+    }
+
+    /// Batched DN final state (eq. 25).  u: (B·n, du) -> (B, du·d).
+    /// `hrev` is the time-reversed impulse response (n, d), computed once.
+    pub fn dn_last(&mut self, u: NodeId, hrev: &Tensor, batch: usize) -> NodeId {
+        let uv = &self.nodes[u].value;
+        let (n, d) = (hrev.shape()[0], hrev.shape()[1]);
+        let du = uv.cols();
+        assert_eq!(uv.rows(), batch * n, "dn_last: rows {} != B*n {}", uv.rows(), batch * n);
+        let mut out = Tensor::zeros(&[batch, du * d]);
+        for b in 0..batch {
+            let u_b = uv.slice_rows(b * n, (b + 1) * n); // (n, du)
+            let m = hrev.matmul_tn(&u_b); // (d, du) = Hrevᵀ·u
+            for c in 0..du {
+                for s in 0..d {
+                    out.data_mut()[b * du * d + c * d + s] = m.data()[s * du + c];
+                }
+            }
+        }
+        self.push(out, Op::DnLast { batch }, vec![u], Some(hrev.clone()))
+    }
+
+    // ------------------------------------------------------------ backward
+
+    /// Reverse-mode sweep from a scalar loss node.
+    pub fn backward(&mut self, loss: NodeId) {
+        assert_eq!(self.nodes[loss].value.len(), 1, "backward from non-scalar");
+        self.nodes[loss].grad = Some(Tensor::scalar(1.0));
+        for id in (0..=loss).rev() {
+            if self.nodes[id].grad.is_none() {
+                continue;
+            }
+            self.propagate(id);
+        }
+    }
+
+    fn accum(&mut self, node: NodeId, g: Tensor) {
+        match &mut self.nodes[node].grad {
+            Some(existing) => existing.add_assign(&g),
+            slot @ None => *slot = Some(g),
+        }
+    }
+
+    fn propagate(&mut self, id: NodeId) {
+        let g = self.nodes[id].grad.clone().unwrap();
+        let parents = self.nodes[id].parents.clone();
+        match &self.nodes[id].op {
+            Op::Leaf | Op::Param => {}
+            Op::Add => {
+                self.accum(parents[0], g.clone());
+                self.accum(parents[1], g);
+            }
+            Op::Sub => {
+                self.accum(parents[0], g.clone());
+                self.accum(parents[1], g.neg());
+            }
+            Op::Mul => {
+                let ga = g.mul(&self.nodes[parents[1]].value);
+                let gb = g.mul(&self.nodes[parents[0]].value);
+                self.accum(parents[0], ga);
+                self.accum(parents[1], gb);
+            }
+            Op::Neg => self.accum(parents[0], g.neg()),
+            Op::Scale(s) => {
+                let s = *s;
+                self.accum(parents[0], g.scale(s));
+            }
+            Op::OneMinus => self.accum(parents[0], g.neg()),
+            Op::Abs => {
+                let sign = self.nodes[parents[0]].value.map(|v| {
+                    if v > 0.0 {
+                        1.0
+                    } else if v < 0.0 {
+                        -1.0
+                    } else {
+                        0.0
+                    }
+                });
+                self.accum(parents[0], g.mul(&sign));
+            }
+            Op::AddRow => {
+                self.accum(parents[0], g.clone());
+                self.accum(parents[1], g.sum_rows());
+            }
+            Op::MatMul => {
+                // C = A·B: dA = dC·Bᵀ, dB = Aᵀ·dC
+                let da = g.matmul_nt(&self.nodes[parents[1]].value);
+                let db = self.nodes[parents[0]].value.matmul_tn(&g);
+                self.accum(parents[0], da);
+                self.accum(parents[1], db);
+            }
+            Op::MatMulNT => {
+                // C = A·Bᵀ: dA = dC·B, dB = dCᵀ·A
+                let da = g.matmul(&self.nodes[parents[1]].value);
+                let db = g.matmul_tn(&self.nodes[parents[0]].value);
+                self.accum(parents[0], da);
+                self.accum(parents[1], db);
+            }
+            Op::SoftmaxRows => {
+                // dx_ij = s_ij (g_ij - sum_k g_ik s_ik)
+                let s = self.nodes[id].aux.as_ref().unwrap();
+                let c = s.cols();
+                let mut gx = g.mul(s);
+                for (grow, srow) in gx
+                    .data_mut()
+                    .chunks_mut(c)
+                    .zip(s.data().chunks(c))
+                {
+                    let dot: f32 = grow.iter().sum();
+                    for (gv, sv) in grow.iter_mut().zip(srow) {
+                        *gv -= dot * sv;
+                    }
+                }
+                self.accum(parents[0], gx);
+            }
+            Op::Tanh => {
+                let y = &self.nodes[id].value;
+                let gy = g.mul(&y.map(|v| 1.0 - v * v));
+                self.accum(parents[0], gy);
+            }
+            Op::Sigmoid => {
+                let y = &self.nodes[id].value;
+                let gy = g.mul(&y.map(|v| v * (1.0 - v)));
+                self.accum(parents[0], gy);
+            }
+            Op::Relu => {
+                let x = &self.nodes[parents[0]].value;
+                let gy = g.mul(&x.map(|v| if v > 0.0 { 1.0 } else { 0.0 }));
+                self.accum(parents[0], gy);
+            }
+            Op::MeanAll => {
+                let p = &self.nodes[parents[0]].value;
+                let scale = g.item() / p.len() as f32;
+                let gp = Tensor::full(p.shape(), scale);
+                self.accum(parents[0], gp);
+            }
+            Op::SumAll => {
+                let p = &self.nodes[parents[0]].value;
+                let gp = Tensor::full(p.shape(), g.item());
+                self.accum(parents[0], gp);
+            }
+            Op::SliceRows { lo } => {
+                let lo = *lo;
+                let p = &self.nodes[parents[0]].value;
+                let c = p.cols();
+                let mut gp = Tensor::zeros(&[p.rows(), c]);
+                gp.data_mut()[lo * c..lo * c + g.len()].copy_from_slice(g.data());
+                self.accum(parents[0], gp.reshape(p.shape()));
+            }
+            Op::SliceCols { lo, hi } => {
+                let (lo, hi) = (*lo, *hi);
+                let p = &self.nodes[parents[0]].value;
+                let (r, c) = (p.rows(), p.cols());
+                let w = hi - lo;
+                let mut gp = Tensor::zeros(&[r, c]);
+                for i in 0..r {
+                    gp.data_mut()[i * c + lo..i * c + hi].copy_from_slice(&g.data()[i * w..(i + 1) * w]);
+                }
+                self.accum(parents[0], gp);
+            }
+            Op::ConcatCols { widths } => {
+                let widths = widths.clone();
+                let r = g.rows();
+                let total: usize = widths.iter().sum();
+                let mut ofs = 0;
+                for (p, w) in parents.iter().zip(&widths) {
+                    let mut gp = Tensor::zeros(&[r, *w]);
+                    for i in 0..r {
+                        gp.data_mut()[i * w..(i + 1) * w]
+                            .copy_from_slice(&g.data()[i * total + ofs..i * total + ofs + w]);
+                    }
+                    // match original parent shape
+                    let pshape = self.nodes[*p].value.shape().to_vec();
+                    self.accum(*p, gp.reshape(&pshape));
+                    ofs += w;
+                }
+            }
+            Op::ConcatRows { heights } => {
+                let heights = heights.clone();
+                let c = g.cols();
+                let mut ofs = 0;
+                for (p, h) in parents.iter().zip(&heights) {
+                    let gp = Tensor::new(&[*h, c], g.data()[ofs * c..(ofs + h) * c].to_vec());
+                    let pshape = self.nodes[*p].value.shape().to_vec();
+                    self.accum(*p, gp.reshape(&pshape));
+                    ofs += h;
+                }
+            }
+            Op::Reshape { from } => {
+                let from = from.clone();
+                self.accum(parents[0], g.reshaped(&from));
+            }
+            Op::SoftmaxXent { labels } => {
+                let labels = labels.clone();
+                let probs = self.nodes[id].aux.as_ref().unwrap();
+                let c = probs.cols();
+                let b = labels.len() as f32;
+                let mut gp = probs.clone();
+                for (i, &y) in labels.iter().enumerate() {
+                    gp.data_mut()[i * c + y] -= 1.0;
+                }
+                self.accum(parents[0], gp.scale(g.item() / b));
+            }
+            Op::Mse => {
+                let target = self.nodes[id].aux.as_ref().unwrap();
+                let p = &self.nodes[parents[0]].value;
+                let gp = p.sub(target).scale(2.0 * g.item() / p.len() as f32);
+                self.accum(parents[0], gp);
+            }
+            Op::Embedding { ids } => {
+                let ids = ids.clone();
+                let table = &self.nodes[parents[0]].value;
+                let (v_sz, e) = (table.shape()[0], table.shape()[1]);
+                let mut gt = Tensor::zeros(&[v_sz, e]);
+                for (i, &idx) in ids.iter().enumerate() {
+                    for j in 0..e {
+                        gt.data_mut()[idx * e + j] += g.data()[i * e + j];
+                    }
+                }
+                self.accum(parents[0], gt);
+            }
+            Op::Dropout { mask } => {
+                let mask = mask.clone();
+                let mut gp = g.clone();
+                for (x, m) in gp.data_mut().iter_mut().zip(&mask) {
+                    *x *= m;
+                }
+                self.accum(parents[0], gp);
+            }
+            Op::DnConv { op, batch } => {
+                let (op, batch) = (op.clone(), *batch);
+                let n = op.n;
+                let d = op.d;
+                let du = self.nodes[parents[0]].value.cols();
+                // unpack channel-major (B·n, du·d) grad -> (n, d, du) per b,
+                // run the adjoint convolution, pack back into (B·n, du)
+                let mut gu = Tensor::zeros(&[batch * n, du]);
+                for b in 0..batch {
+                    let mut dm = Tensor::zeros(&[n, d, du]);
+                    for t in 0..n {
+                        for c in 0..du {
+                            for s in 0..d {
+                                dm.data_mut()[(t * d + s) * du + c] =
+                                    g.data()[(b * n + t) * du * d + c * d + s];
+                            }
+                        }
+                    }
+                    let gb = op.apply_adjoint(&dm); // (n, du)
+                    gu.data_mut()[b * n * du..(b + 1) * n * du].copy_from_slice(gb.data());
+                }
+                self.accum(parents[0], gu);
+            }
+            Op::DnLast { batch } => {
+                let batch = *batch;
+                let hrev = self.nodes[id].aux.as_ref().unwrap().clone(); // (n, d)
+                let (n, d) = (hrev.shape()[0], hrev.shape()[1]);
+                let du = self.nodes[parents[0]].value.cols();
+                // dm (du·d per sample) -> du = Hrev · dmᵀ arranged (n, du)
+                let mut gu = Tensor::zeros(&[batch * n, du]);
+                for b in 0..batch {
+                    // dm as (d, du) from channel-major row b
+                    let mut dm = Tensor::zeros(&[d, du]);
+                    for c in 0..du {
+                        for s in 0..d {
+                            dm.data_mut()[s * du + c] = g.data()[b * du * d + c * d + s];
+                        }
+                    }
+                    let gb = hrev.matmul(&dm); // (n, du)
+                    gu.data_mut()[b * n * du..(b + 1) * n * du].copy_from_slice(gb.data());
+                }
+                self.accum(parents[0], gu);
+            }
+        }
+    }
+
+    /// Collect (param, gradient) pairs after `backward`.  Parameters used
+    /// more than once get their gradients summed.
+    pub fn param_grads(&self) -> Vec<(ParamId, Tensor)> {
+        let mut out: Vec<(ParamId, Tensor)> = Vec::new();
+        for &(pid, nid) in &self.param_nodes {
+            if let Some(g) = &self.nodes[nid].grad {
+                if let Some(slot) = out.iter_mut().find(|(p, _)| *p == pid) {
+                    slot.1.add_assign(g);
+                } else {
+                    out.push((pid, g.clone()));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests;

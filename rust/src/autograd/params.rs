@@ -1,0 +1,173 @@
+//! External storage for trainable parameters.  The tape ([`Graph`]) is
+//! rebuilt every batch; parameters persist here and are snapshotted in via
+//! `Graph::param`, with gradients routed back through `param_grads`.
+
+use crate::tensor::Tensor;
+
+/// Handle to a parameter in a [`ParamStore`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ParamId(pub usize);
+
+/// Named parameter arena shared by model layers and the optimizer.
+#[derive(Default)]
+pub struct ParamStore {
+    tensors: Vec<Tensor>,
+    names: Vec<String>,
+}
+
+impl ParamStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, name: &str, t: Tensor) -> ParamId {
+        self.tensors.push(t);
+        self.names.push(name.to_string());
+        ParamId(self.tensors.len() - 1)
+    }
+
+    pub fn get(&self, id: ParamId) -> &Tensor {
+        &self.tensors[id.0]
+    }
+
+    pub fn get_mut(&mut self, id: ParamId) -> &mut Tensor {
+        &mut self.tensors[id.0]
+    }
+
+    pub fn name(&self, id: ParamId) -> &str {
+        &self.names[id.0]
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn ids(&self) -> impl Iterator<Item = ParamId> {
+        (0..self.tensors.len()).map(ParamId)
+    }
+
+    /// Total scalar parameter count (the paper reports these per model).
+    pub fn num_scalars(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Flatten all parameters into one vector (checkpointing).
+    pub fn pack(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.num_scalars());
+        for t in &self.tensors {
+            out.extend_from_slice(t.data());
+        }
+        out
+    }
+
+    /// Restore from a packed vector (must match the current layout).
+    pub fn unpack(&mut self, flat: &[f32]) {
+        assert_eq!(flat.len(), self.num_scalars(), "checkpoint size mismatch");
+        let mut ofs = 0;
+        for t in &mut self.tensors {
+            let n = t.len();
+            t.data_mut().copy_from_slice(&flat[ofs..ofs + n]);
+            ofs += n;
+        }
+    }
+
+    /// Save to a plain text file (one float per line after a header) —
+    /// no serde offline, and text keeps checkpoints debuggable.
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "plmu-checkpoint v1 params={} scalars={}", self.len(), self.num_scalars())?;
+        for (t, name) in self.tensors.iter().zip(&self.names) {
+            let shape: Vec<String> = t.shape().iter().map(|s| s.to_string()).collect();
+            writeln!(f, "tensor {name} {}", shape.join("x"))?;
+            for v in t.data() {
+                writeln!(f, "{v:?}")?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Load values from `save` output into the existing (same-layout) store.
+    pub fn load(&mut self, path: &std::path::Path) -> std::io::Result<()> {
+        let text = std::fs::read_to_string(path)?;
+        let mut lines = text.lines();
+        let header = lines.next().unwrap_or("");
+        if !header.starts_with("plmu-checkpoint v1") {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("bad checkpoint header: {header}"),
+            ));
+        }
+        let mut flat = Vec::with_capacity(self.num_scalars());
+        for line in lines {
+            if line.starts_with("tensor ") {
+                continue;
+            }
+            let v: f32 = line.trim().parse().map_err(|e| {
+                std::io::Error::new(std::io::ErrorKind::InvalidData, format!("bad float: {e}"))
+            })?;
+            flat.push(v);
+        }
+        self.unpack(&flat);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn add_get_roundtrip() {
+        let mut s = ParamStore::new();
+        let id = s.add("w", Tensor::ones(&[2, 3]));
+        assert_eq!(s.get(id).shape(), &[2, 3]);
+        assert_eq!(s.name(id), "w");
+        assert_eq!(s.num_scalars(), 6);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut rng = Rng::new(0);
+        let mut s = ParamStore::new();
+        s.add("a", Tensor::randn(&[3, 4], 1.0, &mut rng));
+        s.add("b", Tensor::randn(&[5], 1.0, &mut rng));
+        let packed = s.pack();
+        let orig_a = s.get(ParamId(0)).clone();
+        s.get_mut(ParamId(0)).map_inplace(|_| 0.0);
+        s.unpack(&packed);
+        assert!(s.get(ParamId(0)).allclose(&orig_a, 0.0));
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut rng = Rng::new(1);
+        let dir = std::env::temp_dir().join("plmu_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.txt");
+        let mut s = ParamStore::new();
+        s.add("w1", Tensor::randn(&[4, 4], 0.5, &mut rng));
+        s.add("b1", Tensor::randn(&[4], 0.5, &mut rng));
+        let orig = s.pack();
+        s.save(&path).unwrap();
+        s.get_mut(ParamId(0)).map_inplace(|_| 9.0);
+        s.load(&path).unwrap();
+        assert_eq!(s.pack(), orig);
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("plmu_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.txt");
+        std::fs::write(&path, "not a checkpoint\n1.0\n").unwrap();
+        let mut s = ParamStore::new();
+        s.add("w", Tensor::ones(&[1]));
+        assert!(s.load(&path).is_err());
+    }
+}

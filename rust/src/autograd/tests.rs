@@ -1,0 +1,422 @@
+//! Autograd correctness: every op's analytic gradient is checked against
+//! central finite differences on random inputs.
+
+use super::*;
+use crate::dn::DelayNetwork;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Central finite-difference gradient of `f` w.r.t. the parameter at `id`.
+fn numeric_grad(
+    store: &mut ParamStore,
+    id: ParamId,
+    mut f: impl FnMut(&ParamStore) -> f32,
+    eps: f32,
+) -> Tensor {
+    let n = store.get(id).len();
+    let shape = store.get(id).shape().to_vec();
+    let mut g = Tensor::zeros(&shape);
+    for i in 0..n {
+        let orig = store.get(id).data()[i];
+        store.get_mut(id).data_mut()[i] = orig + eps;
+        let fp = f(store);
+        store.get_mut(id).data_mut()[i] = orig - eps;
+        let fm = f(store);
+        store.get_mut(id).data_mut()[i] = orig;
+        g.data_mut()[i] = (fp - fm) / (2.0 * eps);
+    }
+    g
+}
+
+fn check_grads(
+    store: &mut ParamStore,
+    build: impl Fn(&mut Graph, &ParamStore) -> NodeId,
+    tol: f32,
+) {
+    // analytic
+    let mut g = Graph::new();
+    let loss = build(&mut g, store);
+    g.backward(loss);
+    let analytic = g.param_grads();
+    assert!(!analytic.is_empty(), "no parameter gradients produced");
+    // numeric per param
+    for (pid, ag) in &analytic {
+        let ng = numeric_grad(
+            store,
+            *pid,
+            |s| {
+                let mut g2 = Graph::new();
+                let l = build(&mut g2, s);
+                g2.value(l).item()
+            },
+            1e-3,
+        );
+        let err = ag.max_abs_diff(&ng);
+        let scale = ng.abs_max().max(1.0);
+        assert!(
+            err / scale < tol,
+            "param {pid:?} grad mismatch: err={err} scale={scale}\nanalytic={ag:?}\nnumeric={ng:?}"
+        );
+    }
+}
+
+#[test]
+fn grad_affine_tanh_mse() {
+    let mut rng = Rng::new(0);
+    let mut store = ParamStore::new();
+    let w = store.add("w", Tensor::randn(&[3, 2], 0.5, &mut rng));
+    let b = store.add("b", Tensor::randn(&[2], 0.5, &mut rng));
+    let x = Tensor::randn(&[4, 3], 1.0, &mut rng);
+    let target = Tensor::randn(&[4, 2], 1.0, &mut rng);
+    check_grads(
+        &mut store,
+        |g, s| {
+            let xw = {
+                let xi = g.input(x.clone());
+                let wi = g.param(s, w);
+                let bi = g.param(s, b);
+                g.affine(xi, wi, bi)
+            };
+            let y = g.tanh(xw);
+            g.mse(y, &target)
+        },
+        2e-2,
+    );
+}
+
+#[test]
+fn grad_elementwise_chain() {
+    let mut rng = Rng::new(1);
+    let mut store = ParamStore::new();
+    let a = store.add("a", Tensor::randn(&[5], 0.8, &mut rng));
+    let b = store.add("b", Tensor::randn(&[5], 0.8, &mut rng));
+    check_grads(
+        &mut store,
+        |g, s| {
+            let ai = g.param(s, a);
+            let bi = g.param(s, b);
+            let prod = g.mul(ai, bi);
+            let sg = g.sigmoid(prod);
+            let om = g.one_minus(sg);
+            let sq = g.mul(om, om);
+            g.mean_all(sq)
+        },
+        2e-2,
+    );
+}
+
+#[test]
+fn grad_relu_abs_sub() {
+    let mut rng = Rng::new(2);
+    let mut store = ParamStore::new();
+    // offset away from 0 to dodge the kink in finite differences
+    let mut t = Tensor::randn(&[6], 1.0, &mut rng);
+    t.map_inplace(|v| if v.abs() < 0.2 { v + 0.5 } else { v });
+    let a = store.add("a", t);
+    check_grads(
+        &mut store,
+        |g, s| {
+            let ai = g.param(s, a);
+            let r = g.relu(ai);
+            let half = g.scale(ai, 0.5);
+            let d = g.sub(r, half);
+            let ab = g.abs(d);
+            g.sum_all(ab)
+        },
+        2e-2,
+    );
+}
+
+#[test]
+fn grad_softmax_xent() {
+    let mut rng = Rng::new(3);
+    let mut store = ParamStore::new();
+    let w = store.add("w", Tensor::randn(&[4, 3], 0.5, &mut rng));
+    let x = Tensor::randn(&[5, 4], 1.0, &mut rng);
+    let labels = vec![0usize, 2, 1, 2, 0];
+    check_grads(
+        &mut store,
+        |g, s| {
+            let xi = g.input(x.clone());
+            let wi = g.param(s, w);
+            let logits = g.matmul(xi, wi);
+            g.softmax_xent(logits, &labels)
+        },
+        2e-2,
+    );
+}
+
+#[test]
+fn grad_slice_concat_reshape() {
+    let mut rng = Rng::new(4);
+    let mut store = ParamStore::new();
+    let a = store.add("a", Tensor::randn(&[4, 6], 0.7, &mut rng));
+    check_grads(
+        &mut store,
+        |g, s| {
+            let ai = g.param(s, a);
+            let left = g.slice_cols(ai, 0, 3);
+            let right = g.slice_cols(ai, 3, 6);
+            let prod = g.mul(left, right);
+            let top = g.slice_rows(prod, 0, 2);
+            let bottom = g.slice_rows(prod, 2, 4);
+            let cat = g.concat_cols(&[top, bottom]);
+            let rs = g.reshape(cat, &[12, 1]);
+            let t = g.tanh(rs);
+            g.mean_all(t)
+        },
+        2e-2,
+    );
+}
+
+#[test]
+fn grad_concat_rows() {
+    let mut rng = Rng::new(5);
+    let mut store = ParamStore::new();
+    let a = store.add("a", Tensor::randn(&[2, 3], 0.7, &mut rng));
+    let b = store.add("b", Tensor::randn(&[3, 3], 0.7, &mut rng));
+    check_grads(
+        &mut store,
+        |g, s| {
+            let ai = g.param(s, a);
+            let bi = g.param(s, b);
+            let cat = g.concat_rows(&[ai, bi]);
+            let sq = g.mul(cat, cat);
+            g.sum_all(sq)
+        },
+        2e-2,
+    );
+}
+
+#[test]
+fn grad_embedding() {
+    let mut rng = Rng::new(6);
+    let mut store = ParamStore::new();
+    let table = store.add("emb", Tensor::randn(&[7, 4], 0.5, &mut rng));
+    let ids = vec![1usize, 3, 1, 6]; // repeated id accumulates
+    check_grads(
+        &mut store,
+        |g, s| {
+            let ti = g.param(s, table);
+            let e = g.embedding(ti, &ids);
+            let t = g.tanh(e);
+            g.mean_all(t)
+        },
+        2e-2,
+    );
+}
+
+#[test]
+fn grad_dn_conv_matches_fd() {
+    let mut rng = Rng::new(7);
+    let (n, d, du, batch) = (12usize, 4usize, 2usize, 2usize);
+    let dn = DelayNetwork::new(d, n as f64);
+    let op = std::rc::Rc::new(crate::dn::DnFftOperator::new(&dn, n));
+    let mut store = ParamStore::new();
+    let u = store.add("u", Tensor::randn(&[batch * n, du], 0.5, &mut rng));
+    let w = Tensor::randn(&[batch * n, du * d], 0.5, &mut rng);
+    check_grads(
+        &mut store,
+        |g, s| {
+            let ui = g.param(s, u);
+            let m = g.dn_conv(ui, op.clone(), batch);
+            let wi = g.input(w.clone());
+            let prod = g.mul(m, wi);
+            g.sum_all(prod)
+        },
+        2e-2,
+    );
+}
+
+#[test]
+fn grad_dn_last_matches_fd() {
+    let mut rng = Rng::new(8);
+    let (n, d, du, batch) = (10usize, 3usize, 2usize, 2usize);
+    let dn = DelayNetwork::new(d, n as f64);
+    let h = dn.impulse_response(n);
+    // time-reversed impulse response
+    let mut hrev = Tensor::zeros(&[n, d]);
+    for t in 0..n {
+        for s in 0..d {
+            hrev.data_mut()[t * d + s] = h.data()[(n - 1 - t) * d + s];
+        }
+    }
+    let mut store = ParamStore::new();
+    let u = store.add("u", Tensor::randn(&[batch * n, du], 0.5, &mut rng));
+    let w = Tensor::randn(&[batch, du * d], 0.5, &mut rng);
+    check_grads(
+        &mut store,
+        |g, s| {
+            let ui = g.param(s, u);
+            let m = g.dn_last(ui, &hrev, batch);
+            let wi = g.input(w.clone());
+            let prod = g.mul(m, wi);
+            g.sum_all(prod)
+        },
+        2e-2,
+    );
+}
+
+#[test]
+fn grad_matmul_nt() {
+    let mut rng = Rng::new(20);
+    let mut store = ParamStore::new();
+    let a = store.add("a", Tensor::randn(&[3, 4], 0.5, &mut rng));
+    let b = store.add("b", Tensor::randn(&[5, 4], 0.5, &mut rng));
+    check_grads(
+        &mut store,
+        |g, s| {
+            let ai = g.param(s, a);
+            let bi = g.param(s, b);
+            let c = g.matmul_nt(ai, bi); // (3, 5)
+            let sq = g.mul(c, c);
+            g.mean_all(sq)
+        },
+        2e-2,
+    );
+}
+
+#[test]
+fn grad_softmax_rows() {
+    let mut rng = Rng::new(21);
+    let mut store = ParamStore::new();
+    let a = store.add("a", Tensor::randn(&[3, 5], 1.0, &mut rng));
+    let w = Tensor::randn(&[3, 5], 1.0, &mut rng);
+    check_grads(
+        &mut store,
+        |g, s| {
+            let ai = g.param(s, a);
+            let sm = g.softmax_rows(ai);
+            let wi = g.input(w.clone());
+            let prod = g.mul(sm, wi);
+            g.sum_all(prod)
+        },
+        2e-2,
+    );
+}
+
+#[test]
+fn grad_attention_block() {
+    // full scaled-dot-product attention through the tape
+    let mut rng = Rng::new(22);
+    let mut store = ParamStore::new();
+    let wq = store.add("wq", Tensor::randn(&[4, 4], 0.4, &mut rng));
+    let wk = store.add("wk", Tensor::randn(&[4, 4], 0.4, &mut rng));
+    let wv = store.add("wv", Tensor::randn(&[4, 4], 0.4, &mut rng));
+    let x = Tensor::randn(&[6, 4], 1.0, &mut rng);
+    let target = Tensor::randn(&[6, 4], 1.0, &mut rng);
+    check_grads(
+        &mut store,
+        |g, s| {
+            let xi = g.input(x.clone());
+            let q = {
+                let w = g.param(s, wq);
+                g.matmul(xi, w)
+            };
+            let k = {
+                let w = g.param(s, wk);
+                g.matmul(xi, w)
+            };
+            let v = {
+                let w = g.param(s, wv);
+                g.matmul(xi, w)
+            };
+            let scores = g.matmul_nt(q, k);
+            let scaled = g.scale(scores, 0.5);
+            let attn = g.softmax_rows(scaled);
+            let out = g.matmul(attn, v);
+            g.mse(out, &target)
+        },
+        3e-2,
+    );
+}
+
+#[test]
+fn grad_param_reused_twice_accumulates() {
+    let mut rng = Rng::new(9);
+    let mut store = ParamStore::new();
+    let a = store.add("a", Tensor::randn(&[3], 0.5, &mut rng));
+    check_grads(
+        &mut store,
+        |g, s| {
+            let a1 = g.param(s, a);
+            let a2 = g.param(s, a); // same parameter, second snapshot
+            let sum = g.add(a1, a2);
+            let sq = g.mul(sum, a1);
+            g.sum_all(sq)
+        },
+        2e-2,
+    );
+}
+
+#[test]
+fn grad_add_row_bias() {
+    let mut rng = Rng::new(10);
+    let mut store = ParamStore::new();
+    let b = store.add("b", Tensor::randn(&[4], 0.5, &mut rng));
+    let x = Tensor::randn(&[3, 4], 1.0, &mut rng);
+    check_grads(
+        &mut store,
+        |g, s| {
+            let xi = g.input(x.clone());
+            let bi = g.param(s, b);
+            let y = g.add_row(xi, bi);
+            let t = g.tanh(y);
+            g.mean_all(t)
+        },
+        2e-2,
+    );
+}
+
+#[test]
+fn dropout_scales_and_masks() {
+    let mut rng = Rng::new(11);
+    let mut g = Graph::new();
+    let x = g.input(Tensor::ones(&[1000]));
+    let y = g.dropout(x, 0.8, &mut rng);
+    let vals = g.value(y).data();
+    let kept = vals.iter().filter(|&&v| v > 0.0).count();
+    // kept values are scaled by 1/keep
+    for &v in vals {
+        assert!(v == 0.0 || (v - 1.25).abs() < 1e-6);
+    }
+    assert!((kept as f64 / 1000.0 - 0.8).abs() < 0.05);
+}
+
+#[test]
+fn backward_through_deep_chain() {
+    // 50 stacked tanh-affine layers: gradient stays finite, no panic
+    let mut rng = Rng::new(12);
+    let mut store = ParamStore::new();
+    let w = store.add("w", Tensor::randn(&[4, 4], 0.5, &mut rng));
+    let b = store.add("b", Tensor::zeros(&[4]));
+    let mut g = Graph::new();
+    let mut h = g.input(Tensor::randn(&[2, 4], 1.0, &mut rng));
+    let wi = g.param(&store, w);
+    let bi = g.param(&store, b);
+    for _ in 0..50 {
+        let a = g.affine(h, wi, bi);
+        h = g.tanh(a);
+    }
+    let loss = g.mean_all(h);
+    g.backward(loss);
+    let grads = g.param_grads();
+    assert_eq!(grads.len(), 2);
+    for (_, gr) in grads {
+        assert!(gr.data().iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn no_grad_for_unused_params() {
+    let mut store = ParamStore::new();
+    let used = store.add("used", Tensor::ones(&[2]));
+    let _unused = store.add("unused", Tensor::ones(&[2]));
+    let mut g = Graph::new();
+    let u = g.param(&store, used);
+    let loss = g.sum_all(u);
+    g.backward(loss);
+    let grads = g.param_grads();
+    assert_eq!(grads.len(), 1);
+    assert_eq!(grads[0].0, used);
+}

@@ -1,0 +1,200 @@
+//! Micro-benchmark harness (criterion substitute — criterion is not in the
+//! offline vendor set).  Provides warmup, adaptive iteration counts, and
+//! robust statistics, plus a table printer the `rust/benches/*.rs` binaries
+//! use to emit the paper's tables/figures as aligned text.
+
+use crate::util::{human_duration, Timer};
+
+/// Statistics of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.mean
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// seconds of warmup before measurement
+    pub warmup_secs: f64,
+    /// target measurement time
+    pub measure_secs: f64,
+    /// hard cap on measured iterations
+    pub max_iters: usize,
+    /// minimum measured iterations
+    pub min_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_secs: 0.2, measure_secs: 1.0, max_iters: 1000, min_iters: 3 }
+    }
+}
+
+impl BenchConfig {
+    /// Fast settings for expensive end-to-end cases.
+    pub fn quick() -> Self {
+        BenchConfig { warmup_secs: 0.05, measure_secs: 0.3, max_iters: 50, min_iters: 2 }
+    }
+}
+
+/// Time a closure under the given config and return robust statistics.
+pub fn bench<F: FnMut()>(name: &str, cfg: BenchConfig, mut f: F) -> Stats {
+    // warmup + calibration
+    let t = Timer::start();
+    let mut warm_iters = 0usize;
+    while t.elapsed() < cfg.warmup_secs || warm_iters == 0 {
+        f();
+        warm_iters += 1;
+        if warm_iters >= cfg.max_iters {
+            break;
+        }
+    }
+    let per_iter = (t.elapsed() / warm_iters as f64).max(1e-9);
+    let iters = ((cfg.measure_secs / per_iter) as usize)
+        .clamp(cfg.min_iters, cfg.max_iters);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let it = Timer::start();
+        f();
+        samples.push(it.elapsed());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let pct = |q: f64| samples[(((samples.len() - 1) as f64) * q) as usize];
+    Stats {
+        name: name.to_string(),
+        iters,
+        mean,
+        p50: pct(0.5),
+        p95: pct(0.95),
+        min: samples[0],
+        max: *samples.last().unwrap(),
+    }
+}
+
+/// Convenience: run and immediately print one line.
+pub fn bench_report<F: FnMut()>(name: &str, cfg: BenchConfig, f: F) -> Stats {
+    let s = bench(name, cfg, f);
+    println!(
+        "  {:<44} mean {:>12}  p50 {:>12}  p95 {:>12}  (n={})",
+        s.name,
+        human_duration(s.mean),
+        human_duration(s.p50),
+        human_duration(s.p95),
+        s.iters
+    );
+    s
+}
+
+/// Aligned-text table printer for paper-style result tables.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "table row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let total: usize = widths.iter().sum::<usize>() + 3 * widths.len() + 1;
+        println!("\n{title}");
+        println!("{}", "=".repeat(total.min(120)));
+        let fmt_row = |cells: &[String]| {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(&widths) {
+                line.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            line
+        };
+        println!("{}", fmt_row(&self.headers));
+        println!("{}", "-".repeat(total.min(120)));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let cfg = BenchConfig { warmup_secs: 0.01, measure_secs: 0.05, max_iters: 100, min_iters: 3 };
+        let s = bench("spin", cfg, || {
+            std::hint::black_box((0..1000).sum::<usize>());
+        });
+        assert!(s.iters >= 3);
+        assert!(s.mean > 0.0);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.max);
+    }
+
+    #[test]
+    fn bench_ordering_detects_slower_work() {
+        let cfg = BenchConfig { warmup_secs: 0.01, measure_secs: 0.05, max_iters: 200, min_iters: 3 };
+        let fast = bench("fast", cfg, || {
+            std::hint::black_box((0..std::hint::black_box(100usize)).sum::<usize>());
+        });
+        let slow = bench("slow", cfg, || {
+            std::hint::black_box(
+                (0..std::hint::black_box(1_000_000usize)).map(|i| i ^ 3).sum::<usize>(),
+            );
+        });
+        assert!(slow.p50 > fast.p50, "slow {} <= fast {}", slow.p50, fast.p50);
+    }
+
+    #[test]
+    fn throughput_inverts_mean() {
+        let s = Stats {
+            name: "x".into(),
+            iters: 1,
+            mean: 0.5,
+            p50: 0.5,
+            p95: 0.5,
+            min: 0.5,
+            max: 0.5,
+        };
+        assert!((s.throughput(100.0) - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new(&["model", "acc"]);
+        t.row(&["LSTM".into(), "89.86".into()]);
+        t.row(&["ours".into(), "98.49".into()]);
+        t.print("Table 2 (smoke)");
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,246 @@
+//! Minimal CLI argument parser (clap substitute — not in the offline
+//! vendor set).  Supports `--key value`, `--key=value`, boolean `--flag`,
+//! positional arguments, and generated help.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+struct Spec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative argument parser.
+#[derive(Debug, Default)]
+pub struct Args {
+    program: String,
+    about: String,
+    specs: Vec<Spec>,
+    values: HashMap<String, String>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Args {
+            program: program.to_string(),
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Declare an option with a default value.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a required option.
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Parse from an iterator of argument strings (no program name).
+    pub fn parse_from<I: IntoIterator<Item = String>>(mut self, argv: I) -> Result<Self, String> {
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Err(self.help_text());
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n{}", self.help_text()))?
+                    .clone();
+                let value = if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    "true".to_string()
+                } else if let Some(v) = inline_val {
+                    v
+                } else {
+                    it.next().ok_or_else(|| format!("option --{key} needs a value"))?
+                };
+                self.values.insert(key, value);
+            } else {
+                self.positionals.push(arg);
+            }
+        }
+        // check required
+        for s in &self.specs {
+            if !s.is_flag && s.default.is_none() && !self.values.contains_key(&s.name) {
+                return Err(format!("missing required option --{}\n{}", s.name, self.help_text()));
+            }
+        }
+        Ok(self)
+    }
+
+    /// Parse from the process arguments, printing help/errors and exiting
+    /// on failure.
+    pub fn parse(self) -> Self {
+        match self.parse_from(std::env::args().skip(1)) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for spec in &self.specs {
+            let kind = if spec.is_flag {
+                "".to_string()
+            } else if let Some(d) = &spec.default {
+                format!(" <value> (default: {d})")
+            } else {
+                " <value> (required)".to_string()
+            };
+            s.push_str(&format!("  --{}{}\n      {}\n", spec.name, kind, spec.help));
+        }
+        s
+    }
+
+    // ------------------------------------------------------------- getters
+
+    pub fn get(&self, name: &str) -> String {
+        if let Some(v) = self.values.get(name) {
+            return v.clone();
+        }
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .and_then(|s| s.default.clone())
+            .unwrap_or_else(|| panic!("option --{name} was not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name).parse().unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name).parse().unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name).parse().unwrap_or_else(|_| panic!("--{name} must be a number"))
+    }
+
+    pub fn get_f32(&self, name: &str) -> f32 {
+        self.get(name).parse().unwrap_or_else(|_| panic!("--{name} must be a number"))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.values.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = Args::new("t", "test")
+            .opt("epochs", "10", "number of epochs")
+            .opt("lr", "0.001", "learning rate")
+            .parse_from(argv(&["--epochs", "5"]))
+            .unwrap();
+        assert_eq!(a.get_usize("epochs"), 5);
+        assert_eq!(a.get_f64("lr"), 0.001);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::new("t", "test")
+            .opt("mode", "train", "run mode")
+            .parse_from(argv(&["--mode=serve"]))
+            .unwrap();
+        assert_eq!(a.get("mode"), "serve");
+    }
+
+    #[test]
+    fn flags_default_false() {
+        let a = Args::new("t", "test")
+            .flag("verbose", "noisy output")
+            .parse_from(argv(&[]))
+            .unwrap();
+        assert!(!a.get_flag("verbose"));
+        let b = Args::new("t", "test")
+            .flag("verbose", "noisy output")
+            .parse_from(argv(&["--verbose"]))
+            .unwrap();
+        assert!(b.get_flag("verbose"));
+    }
+
+    #[test]
+    fn required_option_enforced() {
+        let r = Args::new("t", "test").req("data", "dataset path").parse_from(argv(&[]));
+        assert!(r.is_err());
+        assert!(r.unwrap_err().contains("missing required option --data"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let r = Args::new("t", "test").parse_from(argv(&["--bogus", "1"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = Args::new("t", "test")
+            .opt("k", "1", "k")
+            .parse_from(argv(&["train", "--k", "2", "extra"]))
+            .unwrap();
+        assert_eq!(a.positionals(), &["train".to_string(), "extra".to_string()]);
+        assert_eq!(a.get_usize("k"), 2);
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let h = Args::new("prog", "about text").opt("alpha", "1", "the alpha").help_text();
+        assert!(h.contains("prog"));
+        assert!(h.contains("--alpha"));
+        assert!(h.contains("default: 1"));
+    }
+}

@@ -1,0 +1,304 @@
+//! Experiment configuration: a TOML-subset parser (serde/toml are not in
+//! the offline vendor set) plus the typed configs the trainer and the
+//! serving coordinator consume.
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string
+//! (quoted), integer, float, and boolean values, `#` comments.  That is
+//! all the experiment files need.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+/// A parsed config value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "{s}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+        }
+    }
+}
+
+/// `section.key -> value` map with typed getters.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("line {0}: {1}")]
+    Parse(usize, String),
+    #[error("missing key: {0}")]
+    Missing(String),
+    #[error("key {0} has wrong type (found {1:?})")]
+    WrongType(String, Value),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(ConfigError::Parse(lineno + 1, "unterminated section".into()));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| ConfigError::Parse(lineno + 1, format!("expected key = value, got {line:?}")))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(ConfigError::Parse(lineno + 1, "empty key".into()));
+            }
+            let full_key = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            values.insert(full_key, parse_value(val.trim(), lineno + 1)?);
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Self, ConfigError> {
+        Config::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn set(&mut self, key: &str, v: Value) {
+        self.values.insert(key.to_string(), v);
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.values.keys()
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        match self.values.get(key) {
+            Some(Value::Str(s)) => s.clone(),
+            Some(v) => v.to_string(),
+            None => default.to_string(),
+        }
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        match self.values.get(key) {
+            Some(Value::Int(i)) => *i,
+            Some(Value::Float(f)) if f.fract() == 0.0 => *f as i64,
+            _ => default,
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.int_or(key, default as i64).max(0) as usize
+    }
+
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        match self.values.get(key) {
+            Some(Value::Float(f)) => *f,
+            Some(Value::Int(i)) => *i as f64,
+            _ => default,
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.values.get(key) {
+            Some(Value::Bool(b)) => *b,
+            _ => default,
+        }
+    }
+
+    pub fn require_str(&self, key: &str) -> Result<String, ConfigError> {
+        match self.values.get(key) {
+            Some(Value::Str(s)) => Ok(s.clone()),
+            Some(v) => Err(ConfigError::WrongType(key.into(), v.clone())),
+            None => Err(ConfigError::Missing(key.into())),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value, ConfigError> {
+    if s.starts_with('"') {
+        if s.len() >= 2 && s.ends_with('"') {
+            return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+        }
+        return Err(ConfigError::Parse(lineno, format!("unterminated string {s:?}")));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(ConfigError::Parse(lineno, format!("cannot parse value {s:?}")))
+}
+
+/// Typed training config (defaults match the paper: Adam with default
+/// parameters, no schedule except text8's step decay).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub batch_size: usize,
+    pub lr: f32,
+    pub lr_decay_epoch: Option<usize>,
+    pub lr_decay_factor: f32,
+    pub grad_clip: Option<f32>,
+    pub seed: u64,
+    pub log_every: usize,
+    pub workers: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            epochs: 10,
+            batch_size: 32,
+            lr: 1e-3,
+            lr_decay_epoch: None,
+            lr_decay_factor: 0.1,
+            grad_clip: None,
+            seed: 0,
+            log_every: 50,
+            workers: 1,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn from_config(c: &Config, section: &str) -> Self {
+        let k = |name: &str| format!("{section}.{name}");
+        let d = TrainConfig::default();
+        TrainConfig {
+            epochs: c.usize_or(&k("epochs"), d.epochs),
+            batch_size: c.usize_or(&k("batch_size"), d.batch_size),
+            lr: c.float_or(&k("lr"), d.lr as f64) as f32,
+            lr_decay_epoch: {
+                let v = c.int_or(&k("lr_decay_epoch"), -1);
+                if v >= 0 { Some(v as usize) } else { None }
+            },
+            lr_decay_factor: c.float_or(&k("lr_decay_factor"), d.lr_decay_factor as f64) as f32,
+            grad_clip: {
+                let v = c.float_or(&k("grad_clip"), -1.0);
+                if v > 0.0 { Some(v as f32) } else { None }
+            },
+            seed: c.int_or(&k("seed"), 0) as u64,
+            log_every: c.usize_or(&k("log_every"), d.log_every),
+            workers: c.usize_or(&k("workers"), d.workers),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+name = "psmnist"
+[train]
+epochs = 5
+lr = 0.001
+batch_size = 64
+grad_clip = 1.0
+parallel = true
+[model]
+d = 468
+theta = 784.0
+"#;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("name", ""), "psmnist");
+        assert_eq!(c.int_or("train.epochs", 0), 5);
+        assert_eq!(c.float_or("train.lr", 0.0), 0.001);
+        assert!(c.bool_or("train.parallel", false));
+        assert_eq!(c.int_or("model.d", 0), 468);
+        assert_eq!(c.float_or("model.theta", 0.0), 784.0);
+    }
+
+    #[test]
+    fn defaults_for_missing_keys() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.int_or("nope", 7), 7);
+        assert_eq!(c.str_or("nope", "x"), "x");
+        assert!(!c.bool_or("nope", false));
+    }
+
+    #[test]
+    fn comments_stripped_but_not_in_strings() {
+        let c = Config::parse("a = 1 # trailing\nb = \"has # inside\"").unwrap();
+        assert_eq!(c.int_or("a", 0), 1);
+        assert_eq!(c.str_or("b", ""), "has # inside");
+    }
+
+    #[test]
+    fn bad_lines_error_with_lineno() {
+        let err = Config::parse("x = 1\nnot a kv line").unwrap_err();
+        assert!(err.to_string().contains("line 2"));
+        let err2 = Config::parse("x = @nope").unwrap_err();
+        assert!(err2.to_string().contains("cannot parse"));
+    }
+
+    #[test]
+    fn int_float_coercion() {
+        let c = Config::parse("a = 3\nb = 2.5").unwrap();
+        assert_eq!(c.float_or("a", 0.0), 3.0);
+        assert_eq!(c.int_or("b", 9), 9); // 2.5 not coerced to int
+    }
+
+    #[test]
+    fn train_config_from_config() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let t = TrainConfig::from_config(&c, "train");
+        assert_eq!(t.epochs, 5);
+        assert_eq!(t.batch_size, 64);
+        assert_eq!(t.grad_clip, Some(1.0));
+        assert_eq!(t.lr_decay_epoch, None);
+    }
+
+    #[test]
+    fn require_str_errors() {
+        let c = Config::parse("a = 1").unwrap();
+        assert!(matches!(c.require_str("a"), Err(ConfigError::WrongType(..))));
+        assert!(matches!(c.require_str("zz"), Err(ConfigError::Missing(..))));
+    }
+}

@@ -1,0 +1,349 @@
+//! Data-parallel training coordinator.
+//!
+//! Because the parallel LMU has no sequential dependency inside a training
+//! step, scaling out is plain synchronous data parallelism:
+//!
+//!   coordinator                      worker w (thread)
+//!   ───────────                      ─────────────────
+//!   broadcast packed params  ───►    unpack into local replica store
+//!                                    build tape on local shard batch
+//!                                    backward, pack gradients
+//!   average gradients        ◄───    send packed grads
+//!   Adam step on canonical store
+//!   (repeat)
+//!
+//! Workers own their replicas (the tape's `Rc` internals are not `Send`,
+//! so graphs never cross threads — only packed `Vec<f32>` do, which is
+//! also how a real multi-host version would wire NCCL/collectives).
+
+use crate::autograd::{Graph, ParamId, ParamStore};
+use crate::data::batcher::{BatchIter, SeqDataset};
+use crate::optim::{clip_global_norm, Optimizer};
+use crate::train::TrainableModel;
+use crate::util::Rng;
+use std::sync::mpsc;
+
+/// Pack a sparse (ParamId, grad) list into a dense store-ordered flat
+/// vector (missing params get zeros) — the "wire format" of the allreduce.
+pub fn pack_grads(store: &ParamStore, grads: &[(ParamId, crate::tensor::Tensor)]) -> Vec<f32> {
+    let mut offsets = Vec::with_capacity(store.len());
+    let mut total = 0usize;
+    for id in store.ids() {
+        offsets.push(total);
+        total += store.get(id).len();
+    }
+    let mut flat = vec![0.0f32; total];
+    for (pid, g) in grads {
+        let ofs = offsets[pid.0];
+        for (dst, src) in flat[ofs..ofs + g.len()].iter_mut().zip(g.data()) {
+            *dst += src;
+        }
+    }
+    flat
+}
+
+/// Unpack a dense flat gradient into (ParamId, Tensor) pairs.
+pub fn unpack_grads(store: &ParamStore, flat: &[f32]) -> Vec<(ParamId, crate::tensor::Tensor)> {
+    let mut out = Vec::with_capacity(store.len());
+    let mut ofs = 0usize;
+    for id in store.ids() {
+        let t = store.get(id);
+        let g = crate::tensor::Tensor::new(t.shape(), flat[ofs..ofs + t.len()].to_vec());
+        ofs += t.len();
+        out.push((id, g));
+    }
+    out
+}
+
+#[derive(Clone, Debug)]
+pub struct DataParallelConfig {
+    pub workers: usize,
+    pub epochs: usize,
+    pub batch_size: usize,
+    pub grad_clip: Option<f32>,
+    pub seed: u64,
+}
+
+impl Default for DataParallelConfig {
+    fn default() -> Self {
+        DataParallelConfig { workers: 2, epochs: 1, batch_size: 16, grad_clip: None, seed: 0 }
+    }
+}
+
+/// Coordinator output.
+pub struct DataParallelResult {
+    /// per-step mean loss across workers
+    pub step_losses: Vec<f32>,
+    /// final packed parameters (canonical replica)
+    pub final_params: Vec<f32>,
+    pub steps: usize,
+}
+
+pub struct DataParallelCoordinator;
+
+impl DataParallelCoordinator {
+    /// Run synchronous data-parallel training.
+    ///
+    /// `factory` builds a fresh (store, model) replica — it is called once
+    /// on the coordinator (canonical replica, owns the optimizer state)
+    /// and once inside every worker thread.  All replicas must produce an
+    /// identical parameter layout (same construction order), which holds
+    /// by construction since they run the same code with the same shapes.
+    pub fn run<F, M>(
+        factory: F,
+        shards: Vec<SeqDataset>,
+        opt: &mut dyn Optimizer,
+        cfg: &DataParallelConfig,
+    ) -> DataParallelResult
+    where
+        F: Fn() -> (ParamStore, M) + Send + Sync + Clone + 'static,
+        M: TrainableModel,
+    {
+        assert_eq!(shards.len(), cfg.workers, "one shard per worker");
+        let (mut canon_store, _canon_model) = factory();
+
+        // per-worker command/result channels
+        enum Cmd {
+            Step(Vec<f32>), // packed params
+            Stop,
+        }
+        struct WorkerOut {
+            #[allow(dead_code)]
+            worker: usize,
+            grads: Vec<f32>,
+            loss: f32,
+            batches_left: usize,
+        }
+
+        let (res_tx, res_rx) = mpsc::channel::<WorkerOut>();
+        let mut cmd_txs = Vec::new();
+        let mut handles = Vec::new();
+        for (w, shard) in shards.into_iter().enumerate() {
+            let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
+            cmd_txs.push(cmd_tx);
+            let res_tx = res_tx.clone();
+            let factory = factory.clone();
+            let cfg = cfg.clone();
+            handles.push(std::thread::spawn(move || {
+                let (mut store, model) = factory();
+                let mut rng = Rng::new(cfg.seed ^ (w as u64 + 1).wrapping_mul(0x9E37_79B9));
+                let per_epoch = shard.len() / cfg.batch_size.min(shard.len());
+                let mut remaining = per_epoch * cfg.epochs;
+                'epochs: for _epoch in 0..cfg.epochs {
+                    let mut batches: Vec<_> =
+                        BatchIter::new(&shard, cfg.batch_size.min(shard.len()), &mut rng).collect();
+                    for batch in batches.drain(..) {
+                        // wait for fresh params
+                        match cmd_rx.recv() {
+                            Ok(Cmd::Step(params)) => store.unpack(&params),
+                            _ => break 'epochs,
+                        }
+                        let mut g = Graph::new();
+                        let loss = model.loss(&mut g, &store, &batch);
+                        g.backward(loss);
+                        let lv = g.value(loss).item();
+                        let grads = g.param_grads();
+                        let packed = pack_grads(&store, &grads);
+                        remaining -= 1;
+                        if res_tx
+                            .send(WorkerOut {
+                                worker: w,
+                                grads: packed,
+                                loss: lv,
+                                batches_left: remaining,
+                            })
+                            .is_err()
+                        {
+                            break 'epochs;
+                        }
+                    }
+                }
+                // drain any final Stop
+                while let Ok(cmd) = cmd_rx.recv() {
+                    if matches!(cmd, Cmd::Stop) {
+                        break;
+                    }
+                }
+            }));
+        }
+        drop(res_tx);
+
+        let mut step_losses = Vec::new();
+        let mut steps = 0usize;
+        loop {
+            // broadcast current parameters
+            let packed = canon_store.pack();
+            let mut live = 0usize;
+            for tx in &cmd_txs {
+                if tx.send(Cmd::Step(packed.clone())).is_ok() {
+                    live += 1;
+                }
+            }
+            if live == 0 {
+                break;
+            }
+            // gather gradients from every live worker (synchronous step)
+            let mut sum: Option<Vec<f32>> = None;
+            let mut losses = 0.0f32;
+            let mut got = 0usize;
+            let mut done_workers = 0usize;
+            for _ in 0..live {
+                match res_rx.recv() {
+                    Ok(out) => {
+                        losses += out.loss;
+                        got += 1;
+                        if out.batches_left == 0 {
+                            done_workers += 1;
+                        }
+                        match &mut sum {
+                            Some(s) => {
+                                for (a, b) in s.iter_mut().zip(&out.grads) {
+                                    *a += b;
+                                }
+                            }
+                            None => sum = Some(out.grads),
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }
+            if got == 0 {
+                break;
+            }
+            let mut avg = sum.unwrap();
+            let inv = 1.0 / got as f32;
+            for v in avg.iter_mut() {
+                *v *= inv;
+            }
+            let mut grads = unpack_grads(&canon_store, &avg);
+            if let Some(c) = cfg.grad_clip {
+                clip_global_norm(&mut grads, c);
+            }
+            opt.step(&mut canon_store, &grads);
+            step_losses.push(losses / got as f32);
+            steps += 1;
+            if done_workers == got {
+                break; // every worker exhausted its shard for all epochs
+            }
+        }
+        for tx in &cmd_txs {
+            let _ = tx.send(Cmd::Stop);
+        }
+        drop(cmd_txs);
+        for h in handles {
+            let _ = h.join();
+        }
+        DataParallelResult { step_losses, final_params: canon_store.pack(), steps }
+    }
+}
+
+/// Split a dataset into `k` shards (round-robin).
+pub fn shard_dataset(xs: Vec<crate::tensor::Tensor>, ys: Vec<usize>, k: usize) -> Vec<SeqDataset> {
+    let mut parts: Vec<(Vec<crate::tensor::Tensor>, Vec<usize>)> =
+        (0..k).map(|_| (Vec::new(), Vec::new())).collect();
+    for (i, (x, y)) in xs.into_iter().zip(ys).enumerate() {
+        parts[i % k].0.push(x);
+        parts[i % k].1.push(y);
+    }
+    parts
+        .into_iter()
+        .map(|(x, y)| SeqDataset::classification(x, y))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::Adam;
+    use crate::tensor::Tensor;
+    use crate::train::{ModelKind, SeqClassifier};
+
+    fn toy_data(n: usize, seq: usize, seed: u64) -> (Vec<Tensor>, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..n {
+            let sign = if i % 2 == 0 { 0.5f32 } else { -0.5 };
+            let mut x = Tensor::randn(&[seq, 1], 0.5, &mut rng);
+            x.map_inplace(|v| v + sign);
+            xs.push(x);
+            ys.push(usize::from(sign > 0.0));
+        }
+        (xs, ys)
+    }
+
+    fn factory(seq: usize) -> impl Fn() -> (ParamStore, SeqClassifier) + Send + Sync + Clone {
+        move || {
+            let mut store = ParamStore::new();
+            let mut rng = Rng::new(42);
+            let model =
+                SeqClassifier::new(ModelKind::LmuParallel, seq, 1, 4, 8, 2, &mut store, &mut rng);
+            (store, model)
+        }
+    }
+
+    #[test]
+    fn pack_unpack_grads_roundtrip() {
+        let (store, _model) = factory(8)();
+        let mut rng = Rng::new(0);
+        let grads: Vec<(ParamId, Tensor)> = store
+            .ids()
+            .map(|id| (id, Tensor::randn(store.get(id).shape(), 1.0, &mut rng)))
+            .collect();
+        let packed = pack_grads(&store, &grads);
+        assert_eq!(packed.len(), store.num_scalars());
+        let back = unpack_grads(&store, &packed);
+        for ((id1, g1), (id2, g2)) in grads.iter().zip(&back) {
+            assert_eq!(id1, id2);
+            assert!(g1.allclose(g2, 0.0));
+        }
+    }
+
+    #[test]
+    fn two_workers_train_and_loss_falls() {
+        let (xs, ys) = toy_data(64, 8, 1);
+        let shards = shard_dataset(xs, ys, 2);
+        let mut opt = Adam::new(5e-3);
+        let cfg = DataParallelConfig {
+            workers: 2,
+            epochs: 4,
+            batch_size: 8,
+            grad_clip: Some(5.0),
+            seed: 0,
+        };
+        let res = DataParallelCoordinator::run(factory(8), shards, &mut opt, &cfg);
+        assert!(res.steps >= 8, "too few steps: {}", res.steps);
+        let k = res.step_losses.len();
+        let early: f32 = res.step_losses[..3].iter().sum::<f32>() / 3.0;
+        let late: f32 = res.step_losses[k - 3..].iter().sum::<f32>() / 3.0;
+        assert!(late < early, "loss did not fall: {early} -> {late}");
+        assert_eq!(res.final_params.len(), factory(8)().0.num_scalars());
+    }
+
+    #[test]
+    fn single_worker_equals_plain_training() {
+        // workers=1 coordinator ~ serial fit on the same data/seed
+        let (xs, ys) = toy_data(32, 8, 2);
+        let shards = shard_dataset(xs, ys, 1);
+        let mut opt = Adam::new(1e-2);
+        let cfg = DataParallelConfig {
+            workers: 1,
+            epochs: 2,
+            batch_size: 8,
+            grad_clip: None,
+            seed: 0,
+        };
+        let res = DataParallelCoordinator::run(factory(8), shards, &mut opt, &cfg);
+        assert_eq!(res.steps, 8); // 32/8 * 2 epochs
+        assert!(res.step_losses.iter().all(|l| l.is_finite()));
+    }
+
+    #[test]
+    fn shard_dataset_balances() {
+        let (xs, ys) = toy_data(10, 4, 3);
+        let shards = shard_dataset(xs, ys, 3);
+        let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 10);
+        assert!(sizes.iter().all(|&s| s >= 3));
+    }
+}

@@ -1,0 +1,233 @@
+//! Streaming inference engines: one recurrent step (eq. 19 + eq. 18/20)
+//! per call, O(d·du + d²) per token, constant memory — the paper's
+//! "Recurrent Inference" deployment mode.
+//!
+//! Two implementations:
+//!  * [`NativeStreamingEngine`] — the step evaluated with the native
+//!    tensor kernels (no Python, no XLA);
+//!  * `PjrtStreamingEngine` (see examples/streaming_inference.rs) — the
+//!    same step through the AOT `recurrent_step.hlo.txt` artifact,
+//!    proving weight/semantics parity with the L2 jax model.
+
+use crate::dn::DelayNetwork;
+use crate::tensor::{matmul::matvec, Tensor};
+
+/// A streaming engine: advances one session's DN state by one input.
+pub trait StreamingEngine {
+    /// dimension of the per-session memory state (d·du floats)
+    fn state_size(&self) -> usize;
+    fn output_size(&self) -> usize;
+    /// step(state, x_t) -> output; `state` is updated in place.
+    fn step(&self, state: &mut [f32], x_t: &[f32]) -> Vec<f32>;
+}
+
+/// Our-model single step with explicit weights (eq. 18 -> 19 -> 20).
+pub struct NativeStreamingEngine {
+    pub dx: usize,
+    pub du: usize,
+    pub d: usize,
+    pub hidden: usize,
+    abar: Tensor,     // (d, d)
+    bbar: Vec<f32>,   // (d,)
+    ux: Tensor,       // (dx, du)
+    bu: Vec<f32>,     // (du,)
+    wm: Tensor,       // (du·d, hidden)  channel-major rows
+    wx: Tensor,       // (dx, hidden)
+    bo: Vec<f32>,     // (hidden,)
+    pub nonlin_u: bool,
+    pub nonlin_o: bool,
+}
+
+impl NativeStreamingEngine {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        dx: usize,
+        du: usize,
+        d: usize,
+        theta: f64,
+        hidden: usize,
+        ux: Tensor,
+        bu: Vec<f32>,
+        wm: Tensor,
+        wx: Tensor,
+        bo: Vec<f32>,
+    ) -> Self {
+        let dn = DelayNetwork::new(d, theta);
+        assert_eq!(ux.shape(), &[dx, du]);
+        assert_eq!(wm.shape(), &[du * d, hidden]);
+        assert_eq!(wx.shape(), &[dx, hidden]);
+        NativeStreamingEngine {
+            dx,
+            du,
+            d,
+            hidden,
+            abar: dn.abar_f32.clone(),
+            bbar: dn.bbar_f32.clone(),
+            ux,
+            bu,
+            wm,
+            wx,
+            bo,
+            nonlin_u: true,
+            nonlin_o: true,
+        }
+    }
+
+    /// Build from a trained parallel layer's parameters.
+    pub fn from_store(
+        spec: &crate::layers::lmu::LmuSpec,
+        params: &crate::layers::lmu::LmuParams,
+        store: &crate::autograd::ParamStore,
+    ) -> Self {
+        let mut e = NativeStreamingEngine::new(
+            spec.dx,
+            spec.du,
+            spec.d,
+            spec.theta,
+            spec.hidden,
+            store.get(params.ux).clone(),
+            store.get(params.bu).data().to_vec(),
+            store.get(params.wm).clone(),
+            store.get(params.wx).clone(),
+            store.get(params.bo).data().to_vec(),
+        );
+        e.nonlin_u = spec.nonlin_u;
+        e.nonlin_o = spec.nonlin_o;
+        e
+    }
+}
+
+impl StreamingEngine for NativeStreamingEngine {
+    fn state_size(&self) -> usize {
+        self.du * self.d
+    }
+
+    fn output_size(&self) -> usize {
+        self.hidden
+    }
+
+    fn step(&self, state: &mut [f32], x_t: &[f32]) -> Vec<f32> {
+        assert_eq!(state.len(), self.du * self.d, "state size");
+        assert_eq!(x_t.len(), self.dx, "input size");
+        let (du, d, hidden) = (self.du, self.d, self.hidden);
+        // eq. 18: u = f1(x Ux + bu)
+        let mut u = vec![0.0f32; du];
+        for c in 0..du {
+            let mut acc = self.bu[c];
+            for (j, &xv) in x_t.iter().enumerate() {
+                acc += xv * self.ux.data()[j * du + c];
+            }
+            u[c] = if self.nonlin_u { acc.tanh() } else { acc };
+        }
+        // eq. 19 per channel: m_c = Ā m_c + B̄ u_c  (state stored channel-major)
+        for c in 0..du {
+            let m_c = &state[c * d..(c + 1) * d];
+            let mut new_m = matvec(&self.abar, m_c);
+            for (s, nm) in new_m.iter_mut().enumerate() {
+                *nm += self.bbar[s] * u[c];
+            }
+            state[c * d..(c + 1) * d].copy_from_slice(&new_m);
+        }
+        // eq. 20: o = f2(m Wm + x Wx + bo)
+        let mut out = self.bo.clone();
+        for (r, &mv) in state.iter().enumerate() {
+            if mv == 0.0 {
+                continue;
+            }
+            let wrow = &self.wm.data()[r * hidden..(r + 1) * hidden];
+            for (o, &wv) in out.iter_mut().zip(wrow) {
+                *o += mv * wv;
+            }
+        }
+        for (j, &xv) in x_t.iter().enumerate() {
+            let wrow = &self.wx.data()[j * hidden..(j + 1) * hidden];
+            for (o, &wv) in out.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+        if self.nonlin_o {
+            for o in out.iter_mut() {
+                *o = o.tanh();
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autograd::{Graph, ParamStore};
+    use crate::layers::lmu::{LmuParallelLayer, LmuSpec};
+    use crate::util::Rng;
+
+    #[test]
+    fn streaming_matches_parallel_training_path() {
+        // Paper's central deployment claim: the recurrent engine computes
+        // exactly what the parallel (training) path computes.
+        let mut rng = Rng::new(0);
+        let mut store = ParamStore::new();
+        let (n, batch) = (24usize, 1usize);
+        let spec = LmuSpec::new(3, 2, 8, 24.0, 6);
+        let layer = LmuParallelLayer::new(spec.clone(), n, &mut store, &mut rng, "srv");
+        let x = Tensor::randn(&[n, 3], 1.0, &mut rng);
+
+        // parallel path (all states)
+        let mut g = Graph::new();
+        let xi = g.input(x.clone());
+        let o_par = layer.forward_all(&mut g, &store, xi, batch);
+        let par = g.value(o_par).clone(); // (n, hidden)
+
+        // streaming path
+        let engine = NativeStreamingEngine::from_store(&spec, &layer.params, &store);
+        let mut state = vec![0.0f32; engine.state_size()];
+        let mut max_err = 0.0f32;
+        for t in 0..n {
+            let out = engine.step(&mut state, &x.data()[t * 3..(t + 1) * 3]);
+            for (j, &v) in out.iter().enumerate() {
+                max_err = max_err.max((v - par.data()[t * 6 + j]).abs());
+            }
+        }
+        assert!(max_err < 2e-4, "stream vs parallel: {max_err}");
+    }
+
+    #[test]
+    fn state_isolated_between_sessions() {
+        let mut rng = Rng::new(1);
+        let mut store = ParamStore::new();
+        let spec = LmuSpec::new(1, 1, 4, 8.0, 3);
+        let layer = LmuParallelLayer::new(spec.clone(), 8, &mut store, &mut rng, "srv");
+        let engine = NativeStreamingEngine::from_store(&spec, &layer.params, &store);
+        let mut s1 = vec![0.0f32; engine.state_size()];
+        let mut s2 = vec![0.0f32; engine.state_size()];
+        // session 1 sees a big impulse, session 2 zeros
+        engine.step(&mut s1, &[10.0]);
+        engine.step(&mut s2, &[0.0]);
+        assert!(s1.iter().any(|&v| v.abs() > 1e-3));
+        // fresh state for s2 was never affected by s1's history
+        let out2 = engine.step(&mut s2, &[0.0]);
+        let mut s2b = vec![0.0f32; engine.state_size()];
+        engine.step(&mut s2b, &[0.0]);
+        let out2b = engine.step(&mut s2b, &[0.0]);
+        for (a, b) in out2.iter().zip(&out2b) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn per_token_cost_is_constant_memory() {
+        // state buffer never grows with stream length
+        let mut rng = Rng::new(2);
+        let mut store = ParamStore::new();
+        let spec = LmuSpec::new(1, 1, 6, 16.0, 4);
+        let layer = LmuParallelLayer::new(spec.clone(), 16, &mut store, &mut rng, "srv");
+        let engine = NativeStreamingEngine::from_store(&spec, &layer.params, &store);
+        let mut state = vec![0.0f32; engine.state_size()];
+        for t in 0..10_000 {
+            let out = engine.step(&mut state, &[(t as f32 * 0.01).sin()]);
+            assert_eq!(out.len(), 4);
+        }
+        assert_eq!(state.len(), engine.state_size());
+        assert!(state.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,22 @@
+//! L3 coordination: the data-parallel training coordinator and the
+//! streaming-inference serving stack.
+//!
+//! The paper's systems story has two halves and so does this module:
+//!
+//!  * **training** (`data_parallel`): the parallel form makes each
+//!    training step a big batched feed-forward computation, so scaling is
+//!    plain data parallelism — worker replicas compute gradients on
+//!    shards, the coordinator all-reduces (averages) and steps Adam, then
+//!    broadcasts fresh parameters;
+//!  * **serving** (`server`, `engine`): the *same* trained weights run in
+//!    the recurrent form (eq. 19) for O(d) per-token streaming inference —
+//!    sessions hold DN state, a dynamic batcher groups concurrent step
+//!    requests, and a router spreads sessions across engine replicas.
+
+pub mod data_parallel;
+pub mod engine;
+pub mod server;
+
+pub use data_parallel::{pack_grads, DataParallelConfig, DataParallelCoordinator};
+pub use engine::{NativeStreamingEngine, StreamingEngine};
+pub use server::{DynamicBatcher, Router, ServerConfig, StreamingServer};

@@ -1,0 +1,192 @@
+//! Batching and shuffling for sequence datasets.
+//!
+//! A [`SeqDataset`] holds per-example (seq_len, features) tensors plus
+//! integer or real targets; [`BatchIter`] yields shuffled minibatches
+//! packed sample-major `(B·n, f)` — the layout the parallel layers take
+//! (see `layers::to_time_major` for the sequential cells).
+
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Targets: classification labels or regression values.
+#[derive(Clone, Debug)]
+pub enum Targets {
+    Labels(Vec<usize>),
+    Values(Vec<f32>),
+}
+
+/// An in-memory sequence dataset with uniform sequence length.
+pub struct SeqDataset {
+    pub xs: Vec<Tensor>,
+    pub targets: Targets,
+    pub seq_len: usize,
+    pub features: usize,
+}
+
+impl SeqDataset {
+    pub fn classification(xs: Vec<Tensor>, ys: Vec<usize>) -> Self {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty());
+        let seq_len = xs[0].shape()[0];
+        let features = xs[0].shape()[1];
+        for x in &xs {
+            assert_eq!(x.shape(), &[seq_len, features], "ragged dataset");
+        }
+        SeqDataset { xs, targets: Targets::Labels(ys), seq_len, features }
+    }
+
+    pub fn regression(xs: Vec<Tensor>, ys: Vec<f32>) -> Self {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty());
+        let seq_len = xs[0].shape()[0];
+        let features = xs[0].shape()[1];
+        SeqDataset { xs, targets: Targets::Values(ys), seq_len, features }
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// Split off the last `frac` of examples as a holdout set.
+    pub fn split(mut self, frac: f32) -> (SeqDataset, SeqDataset) {
+        let n = self.len();
+        let cut = ((n as f32) * (1.0 - frac)) as usize;
+        let xs_b = self.xs.split_off(cut);
+        let targets_b = match &mut self.targets {
+            Targets::Labels(v) => Targets::Labels(v.split_off(cut)),
+            Targets::Values(v) => Targets::Values(v.split_off(cut)),
+        };
+        let b = SeqDataset {
+            xs: xs_b,
+            targets: targets_b,
+            seq_len: self.seq_len,
+            features: self.features,
+        };
+        (self, b)
+    }
+}
+
+/// One packed minibatch.
+pub struct Batch {
+    /// sample-major (B·n, f)
+    pub x: Tensor,
+    pub targets: Targets,
+    pub batch_size: usize,
+}
+
+/// Shuffled epoch iterator over full batches (drops the ragged tail).
+pub struct BatchIter<'a> {
+    ds: &'a SeqDataset,
+    order: Vec<usize>,
+    pos: usize,
+    batch_size: usize,
+}
+
+impl<'a> BatchIter<'a> {
+    pub fn new(ds: &'a SeqDataset, batch_size: usize, rng: &mut Rng) -> Self {
+        assert!(batch_size > 0 && batch_size <= ds.len(), "batch {batch_size} vs {}", ds.len());
+        let mut order: Vec<usize> = (0..ds.len()).collect();
+        rng.shuffle(&mut order);
+        BatchIter { ds, order, pos: 0, batch_size }
+    }
+
+    /// Deterministic order (evaluation).
+    pub fn sequential(ds: &'a SeqDataset, batch_size: usize) -> Self {
+        let order: Vec<usize> = (0..ds.len()).collect();
+        BatchIter { ds, order, pos: 0, batch_size }
+    }
+}
+
+impl<'a> Iterator for BatchIter<'a> {
+    type Item = Batch;
+
+    fn next(&mut self) -> Option<Batch> {
+        if self.pos + self.batch_size > self.order.len() {
+            return None;
+        }
+        let idx = &self.order[self.pos..self.pos + self.batch_size];
+        self.pos += self.batch_size;
+        let (n, f) = (self.ds.seq_len, self.ds.features);
+        let b = idx.len();
+        let mut x = Tensor::zeros(&[b * n, f]);
+        for (bi, &i) in idx.iter().enumerate() {
+            x.data_mut()[bi * n * f..(bi + 1) * n * f].copy_from_slice(self.ds.xs[i].data());
+        }
+        let targets = match &self.ds.targets {
+            Targets::Labels(v) => Targets::Labels(idx.iter().map(|&i| v[i]).collect()),
+            Targets::Values(v) => Targets::Values(idx.iter().map(|&i| v[i]).collect()),
+        };
+        Some(Batch { x, targets, batch_size: b })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_ds(n: usize) -> SeqDataset {
+        let xs: Vec<Tensor> = (0..n)
+            .map(|i| Tensor::full(&[4, 2], i as f32))
+            .collect();
+        let ys: Vec<usize> = (0..n).map(|i| i % 3).collect();
+        SeqDataset::classification(xs, ys)
+    }
+
+    #[test]
+    fn batches_pack_sample_major() {
+        let ds = toy_ds(6);
+        let mut it = BatchIter::sequential(&ds, 2);
+        let b = it.next().unwrap();
+        assert_eq!(b.x.shape(), &[8, 2]);
+        // first sample's rows all 0.0, second sample's rows all 1.0
+        assert!(b.x.data()[..8].iter().all(|&v| v == 0.0));
+        assert!(b.x.data()[8..].iter().all(|&v| v == 1.0));
+        match &b.targets {
+            Targets::Labels(l) => assert_eq!(l, &vec![0, 1]),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn epoch_covers_all_full_batches() {
+        let ds = toy_ds(10);
+        let mut rng = Rng::new(0);
+        let batches: Vec<Batch> = BatchIter::new(&ds, 3, &mut rng).collect();
+        assert_eq!(batches.len(), 3); // 10/3 full batches, tail dropped
+        let mut seen: Vec<f32> = batches
+            .iter()
+            .flat_map(|b| (0..3).map(move |i| b.x.data()[i * 8]))
+            .collect();
+        seen.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        seen.dedup();
+        assert_eq!(seen.len(), 9); // 9 distinct examples, no repeats
+    }
+
+    #[test]
+    fn shuffle_changes_order_between_epochs() {
+        let ds = toy_ds(32);
+        let mut rng = Rng::new(1);
+        let first: Vec<f32> = BatchIter::new(&ds, 4, &mut rng).map(|b| b.x.data()[0]).collect();
+        let second: Vec<f32> = BatchIter::new(&ds, 4, &mut rng).map(|b| b.x.data()[0]).collect();
+        assert_ne!(first, second);
+    }
+
+    #[test]
+    fn split_preserves_counts() {
+        let ds = toy_ds(10);
+        let (train, test) = ds.split(0.3);
+        assert_eq!(train.len(), 7);
+        assert_eq!(test.len(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_dataset_rejected() {
+        let xs = vec![Tensor::zeros(&[4, 2]), Tensor::zeros(&[5, 2])];
+        SeqDataset::classification(xs, vec![0, 1]);
+    }
+}

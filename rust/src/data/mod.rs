@@ -1,0 +1,16 @@
+//! Datasets and loaders.  Mackey-Glass is *real* (it is defined by an ODE
+//! we integrate ourselves); the NLP and image datasets are seeded
+//! synthetic stand-ins for gated corpora (see DESIGN.md §Substitutions) —
+//! generated with planted structure so they exercise the same code paths
+//! and the same model-ordering claims as the paper's benchmarks.
+
+pub mod batcher;
+pub mod mackey_glass;
+pub mod nlp;
+pub mod psmnist;
+pub mod tokenizer;
+
+pub use batcher::{BatchIter, SeqDataset};
+pub use mackey_glass::MackeyGlass;
+pub use psmnist::PsMnist;
+pub use tokenizer::{CharTokenizer, Vocab};

@@ -1,0 +1,443 @@
+//! Seeded synthetic NLP corpora (Tables 4–6 substitutions).
+//!
+//! A deterministic generative "language" with planted task structure:
+//!
+//!  * a vocabulary of synthetic word forms partitioned into topic
+//!    clusters, with a sentiment lexicon (positive/negative subsets) and
+//!    per-cluster synonym/antonym relations;
+//!  * **sentiment** (IMDB stand-in): reviews mixing neutral words with
+//!    sentiment words; the label is the sign of the polarity sum — a
+//!    linear functional of a sliding window of the token stream, which is
+//!    exactly the regime the paper's d=1 DN-only encoder exploits;
+//!  * **paraphrase** (QQP stand-in): pairs are (sentence, synonym-swapped
+//!    reordering) vs (sentence, different sentence with word overlap);
+//!  * **NLI** (SNLI stand-in): premise S-V-O; entailment substitutes
+//!    cluster representatives, contradiction swaps in the antonym verb,
+//!    neutral swaps the object cluster;
+//!  * **language modelling** (Amazon/text8 stand-ins): an order-2 Markov
+//!    chain with seeded sparse transitions (word level), decodable to a
+//!    27-symbol character stream for the text8 experiment;
+//!  * **translation** (IWSLT stand-in): target = deterministic word
+//!    mapping + clause-local reversal (simulating syntactic divergence).
+//!
+//! Everything is reproducible from a seed; see DESIGN.md §Substitutions
+//! for why each planted structure preserves the paper's claim under test.
+
+use crate::util::Rng;
+
+/// The synthetic language: vocabulary, clusters, sentiment lexicon,
+/// Markov transitions.
+pub struct SynthLang {
+    pub words: Vec<String>,
+    pub clusters: Vec<Vec<usize>>,
+    /// polarity[w] in {-1, 0, +1}
+    pub polarity: Vec<i8>,
+    /// antonym pairs among verbs (index -> index)
+    pub antonym: Vec<usize>,
+    /// order-1 transition candidates per word (sparse Markov chain)
+    trans: Vec<Vec<usize>>,
+    seed: u64,
+}
+
+impl SynthLang {
+    pub fn new(vocab_size: usize, n_clusters: usize, seed: u64) -> Self {
+        assert!(vocab_size >= 50, "need a non-trivial vocabulary");
+        let mut rng = Rng::new(seed);
+        let words: Vec<String> = (0..vocab_size).map(|i| format!("w{i:04}")).collect();
+        // clusters: round-robin assignment then shuffle membership
+        let mut ids: Vec<usize> = (0..vocab_size).collect();
+        rng.shuffle(&mut ids);
+        let mut clusters = vec![Vec::new(); n_clusters];
+        for (i, w) in ids.iter().enumerate() {
+            clusters[i % n_clusters].push(*w);
+        }
+        // sentiment lexicon: ~10% positive, ~10% negative
+        let mut polarity = vec![0i8; vocab_size];
+        for w in 0..vocab_size {
+            let r = rng.uniform();
+            if r < 0.10 {
+                polarity[w] = 1;
+            } else if r < 0.20 {
+                polarity[w] = -1;
+            }
+        }
+        // antonyms: pair up words within the polarity lexicons
+        let mut antonym: Vec<usize> = (0..vocab_size).collect();
+        let pos: Vec<usize> = (0..vocab_size).filter(|&w| polarity[w] == 1).collect();
+        let neg: Vec<usize> = (0..vocab_size).filter(|&w| polarity[w] == -1).collect();
+        for (p, n) in pos.iter().zip(&neg) {
+            antonym[*p] = *n;
+            antonym[*n] = *p;
+        }
+        // sparse Markov transitions: each word can be followed by ~8 others
+        let trans = (0..vocab_size)
+            .map(|_| (0..8).map(|_| rng.below(vocab_size)).collect())
+            .collect();
+        SynthLang { words, clusters, polarity, antonym, trans, seed }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.words.len()
+    }
+
+    fn cluster_of(&self, w: usize) -> usize {
+        self.clusters.iter().position(|c| c.contains(&w)).unwrap()
+    }
+
+    fn synonym(&self, w: usize, rng: &mut Rng) -> usize {
+        let c = &self.clusters[self.cluster_of(w)];
+        // same-cluster, same-polarity word
+        for _ in 0..10 {
+            let cand = c[rng.below(c.len())];
+            if self.polarity[cand] == self.polarity[w] {
+                return cand;
+            }
+        }
+        w
+    }
+
+    /// Sample a Markov sentence of `len` words as ids.
+    pub fn markov_sentence(&self, len: usize, rng: &mut Rng) -> Vec<usize> {
+        let mut out = Vec::with_capacity(len);
+        let mut cur = rng.below(self.vocab_size());
+        for _ in 0..len {
+            out.push(cur);
+            let cands = &self.trans[cur];
+            cur = cands[rng.below(cands.len())];
+        }
+        out
+    }
+
+    pub fn to_text(&self, ids: &[usize]) -> String {
+        ids.iter().map(|&i| self.words[i].as_str()).collect::<Vec<_>>().join(" ")
+    }
+
+    // ------------------------------------------------------------ sentiment
+
+    /// IMDB stand-in: (token ids, label) with label = 1 iff the polarity
+    /// sum is positive.  `len` tokens, ~25% of them sentiment-bearing.
+    pub fn sentiment_example(&self, len: usize, rng: &mut Rng) -> (Vec<usize>, usize) {
+        let want_positive = rng.below(2) == 1;
+        let mut ids = self.markov_sentence(len, rng);
+        // overwrite ~25% of positions with lexicon words, majority from
+        // the target polarity (signal strength ~3:1)
+        for t in 0..len {
+            if rng.uniform() < 0.25 {
+                let same_side = rng.uniform() < 0.75;
+                let positive = want_positive == same_side;
+                let side: Vec<usize> = (0..self.vocab_size())
+                    .filter(|&w| self.polarity[w] == if positive { 1 } else { -1 })
+                    .collect();
+                let w = side[rng.below(side.len())];
+                ids[t] = w;
+            }
+        }
+        // label from the full sentence's lexicon sum (the Markov base can
+        // itself contain sentiment words); ties resolve to negative
+        let total: i32 = ids.iter().map(|&w| self.polarity[w] as i32).sum();
+        let label = usize::from(total > 0);
+        (ids, label)
+    }
+
+    pub fn sentiment_dataset(&self, n: usize, len: usize, seed: u64) -> (Vec<Vec<usize>>, Vec<usize>) {
+        let mut rng = Rng::new(seed ^ self.seed.rotate_left(17));
+        let mut xs = Vec::with_capacity(n);
+        let mut ys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (x, y) = self.sentiment_example(len, &mut rng);
+            xs.push(x);
+            ys.push(y);
+        }
+        (xs, ys)
+    }
+
+    // ----------------------------------------------------------- paraphrase
+
+    /// QQP stand-in: ((s1, s2), label) — label 1 iff s2 paraphrases s1.
+    pub fn paraphrase_example(&self, len: usize, rng: &mut Rng) -> (Vec<usize>, Vec<usize>, usize) {
+        let s1 = self.markov_sentence(len, rng);
+        if rng.below(2) == 1 {
+            // paraphrase: synonym-substitute ~50% + swap two positions
+            let mut s2: Vec<usize> = s1
+                .iter()
+                .map(|&w| if rng.uniform() < 0.5 { self.synonym(w, rng) } else { w })
+                .collect();
+            if len >= 4 {
+                let i = rng.below(len - 1);
+                s2.swap(i, i + 1);
+            }
+            (s1, s2, 1)
+        } else {
+            // hard negative: different sentence sharing a few words
+            let mut s2 = self.markov_sentence(len, rng);
+            for t in 0..len.min(3) {
+                if rng.below(2) == 1 {
+                    s2[t] = s1[t];
+                }
+            }
+            (s1, s2, 0)
+        }
+    }
+
+    pub fn paraphrase_dataset(
+        &self,
+        n: usize,
+        len: usize,
+        seed: u64,
+    ) -> (Vec<(Vec<usize>, Vec<usize>)>, Vec<usize>) {
+        let mut rng = Rng::new(seed ^ self.seed.rotate_left(29));
+        let mut xs = Vec::with_capacity(n);
+        let mut ys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (a, b, y) = self.paraphrase_example(len, &mut rng);
+            xs.push((a, b));
+            ys.push(y);
+        }
+        (xs, ys)
+    }
+
+    // ------------------------------------------------------------------ NLI
+
+    /// SNLI stand-in: ((premise, hypothesis), label) with label in
+    /// {0: entail, 1: contradict, 2: neutral}.
+    pub fn nli_example(&self, len: usize, rng: &mut Rng) -> (Vec<usize>, Vec<usize>, usize) {
+        let premise = self.markov_sentence(len, rng);
+        let label = rng.below(3);
+        let hypothesis = match label {
+            0 => {
+                // entailment: synonym substitution (meaning preserved)
+                premise
+                    .iter()
+                    .map(|&w| if rng.uniform() < 0.6 { self.synonym(w, rng) } else { w })
+                    .collect()
+            }
+            1 => {
+                // contradiction: flip every sentiment-bearing word to one
+                // of opposite polarity (paired antonym when available,
+                // otherwise any opposite-lexicon word); if none present,
+                // plant an opposing pair
+                let mut h: Vec<usize> = premise.clone();
+                let opposite = |w: usize, rng: &mut Rng| -> usize {
+                    let a = self.antonym[w];
+                    if self.polarity[a] == -self.polarity[w] {
+                        return a;
+                    }
+                    let side: Vec<usize> = (0..self.vocab_size())
+                        .filter(|&c| self.polarity[c] == -self.polarity[w])
+                        .collect();
+                    side[rng.below(side.len())]
+                };
+                let mut flipped = false;
+                for w in h.iter_mut() {
+                    if self.polarity[*w] != 0 {
+                        *w = opposite(*w, rng);
+                        flipped = true;
+                    }
+                }
+                if !flipped && !h.is_empty() {
+                    let pos: Vec<usize> =
+                        (0..self.vocab_size()).filter(|&w| self.polarity[w] == 1).collect();
+                    let k = rng.below(h.len());
+                    h[k] = pos[rng.below(pos.len())];
+                }
+                h
+            }
+            _ => {
+                // neutral: unrelated sentence
+                self.markov_sentence(len, rng)
+            }
+        };
+        (premise, hypothesis, label)
+    }
+
+    pub fn nli_dataset(
+        &self,
+        n: usize,
+        len: usize,
+        seed: u64,
+    ) -> (Vec<(Vec<usize>, Vec<usize>)>, Vec<usize>) {
+        let mut rng = Rng::new(seed ^ self.seed.rotate_left(41));
+        let mut xs = Vec::with_capacity(n);
+        let mut ys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (a, b, y) = self.nli_example(len, &mut rng);
+            xs.push((a, b));
+            ys.push(y);
+        }
+        (xs, ys)
+    }
+
+    // ------------------------------------------------------- language model
+
+    /// A long token stream for LM pretraining (Amazon-reviews stand-in).
+    pub fn lm_stream(&self, len: usize, seed: u64) -> Vec<usize> {
+        let mut rng = Rng::new(seed ^ self.seed.rotate_left(7));
+        self.markov_sentence(len, &mut rng)
+    }
+
+    /// text8 stand-in: the LM stream rendered as a 27-symbol char stream.
+    pub fn char_stream(&self, approx_len: usize, seed: u64) -> Vec<usize> {
+        let tok = super::tokenizer::CharTokenizer;
+        let words_needed = approx_len / 6 + 1;
+        let ids = self.lm_stream(words_needed, seed);
+        let text = self.to_text(&ids);
+        let mut chars = tok.encode(&text);
+        chars.truncate(approx_len);
+        chars
+    }
+
+    // ---------------------------------------------------------- translation
+
+    /// IWSLT stand-in: source = Markov sentence; target = word-mapped
+    /// (id -> id + offset in a target vocab) with clause-local reversal
+    /// every `clause` words.  Deterministic given the source.
+    pub fn translation_pair(&self, len: usize, clause: usize, rng: &mut Rng) -> (Vec<usize>, Vec<usize>) {
+        let src = self.markov_sentence(len, rng);
+        let tgt = self.translate(&src, clause);
+        (src, tgt)
+    }
+
+    /// The deterministic "reference translation".
+    pub fn translate(&self, src: &[usize], clause: usize) -> Vec<usize> {
+        let v = self.vocab_size();
+        let mut tgt = Vec::with_capacity(src.len());
+        for chunk in src.chunks(clause.max(1)) {
+            for &w in chunk.iter().rev() {
+                tgt.push((w * 7 + 3) % v); // bijective word map (v odd-coprime w/ 7 not required; mod keeps range)
+            }
+        }
+        tgt
+    }
+
+    pub fn translation_dataset(
+        &self,
+        n: usize,
+        len: usize,
+        clause: usize,
+        seed: u64,
+    ) -> Vec<(Vec<usize>, Vec<usize>)> {
+        let mut rng = Rng::new(seed ^ self.seed.rotate_left(53));
+        (0..n).map(|_| self.translation_pair(len, clause, &mut rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lang() -> SynthLang {
+        SynthLang::new(200, 8, 0)
+    }
+
+    #[test]
+    fn vocabulary_and_clusters_partition() {
+        let l = lang();
+        assert_eq!(l.vocab_size(), 200);
+        let total: usize = l.clusters.iter().map(|c| c.len()).sum();
+        assert_eq!(total, 200);
+        // lexicons non-empty
+        assert!(l.polarity.iter().filter(|&&p| p == 1).count() > 5);
+        assert!(l.polarity.iter().filter(|&&p| p == -1).count() > 5);
+    }
+
+    #[test]
+    fn sentiment_label_matches_planted_polarity() {
+        let l = lang();
+        let (xs, ys) = l.sentiment_dataset(50, 30, 1);
+        for (x, &y) in xs.iter().zip(&ys) {
+            let sum: i32 = x.iter().map(|&w| l.polarity[w] as i32).sum();
+            assert_eq!(y, usize::from(sum > 0), "label inconsistent with lexicon");
+        }
+        // labels not degenerate
+        let pos = ys.iter().filter(|&&y| y == 1).count();
+        assert!(pos > 10 && pos < 40, "pos={pos}");
+    }
+
+    #[test]
+    fn paraphrase_pairs_share_structure() {
+        let l = lang();
+        let (xs, ys) = l.paraphrase_dataset(60, 12, 2);
+        // paraphrase pairs should share more cluster overlap than negatives
+        let cluster_overlap = |a: &[usize], b: &[usize]| -> f32 {
+            let ca: Vec<usize> = a.iter().map(|&w| l.cluster_of(w)).collect();
+            let cb: Vec<usize> = b.iter().map(|&w| l.cluster_of(w)).collect();
+            ca.iter().zip(&cb).filter(|(x, y)| x == y).count() as f32 / a.len() as f32
+        };
+        let mut pos_overlap = 0.0;
+        let mut neg_overlap = 0.0;
+        let (mut np, mut nn) = (0, 0);
+        for ((a, b), &y) in xs.iter().zip(&ys) {
+            if y == 1 {
+                pos_overlap += cluster_overlap(a, b);
+                np += 1;
+            } else {
+                neg_overlap += cluster_overlap(a, b);
+                nn += 1;
+            }
+        }
+        assert!(np > 5 && nn > 5);
+        assert!(pos_overlap / np as f32 > neg_overlap / nn as f32 + 0.2);
+    }
+
+    #[test]
+    fn nli_labels_balanced_and_contradictions_flip() {
+        let l = lang();
+        let (xs, ys) = l.nli_dataset(90, 10, 3);
+        for c in 0..3 {
+            let cnt = ys.iter().filter(|&&y| y == c).count();
+            assert!(cnt > 10, "class {c} underrepresented: {cnt}");
+        }
+        // contradiction pairs: polarity sums have opposite or reduced sign
+        for ((p, h), &y) in xs.iter().zip(&ys) {
+            if y == 1 {
+                let sp: i32 = p.iter().map(|&w| l.polarity[w] as i32).sum();
+                let sh: i32 = h.iter().map(|&w| l.polarity[w] as i32).sum();
+                if sp != 0 {
+                    assert!(sh * sp <= 0, "contradiction did not flip polarity: {sp} {sh}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lm_stream_deterministic_and_in_range() {
+        let l = lang();
+        let a = l.lm_stream(1000, 5);
+        let b = l.lm_stream(1000, 5);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&w| w < l.vocab_size()));
+        // markov structure: bigram distribution is sparse (each word has
+        // at most 8 successors)
+        use std::collections::HashMap;
+        let mut succ: HashMap<usize, std::collections::HashSet<usize>> = HashMap::new();
+        for w in a.windows(2) {
+            succ.entry(w[0]).or_default().insert(w[1]);
+        }
+        assert!(succ.values().all(|s| s.len() <= 8));
+    }
+
+    #[test]
+    fn char_stream_is_text8_alphabet() {
+        let l = lang();
+        let cs = l.char_stream(500, 1);
+        assert_eq!(cs.len(), 500);
+        assert!(cs.iter().all(|&c| c < 27));
+    }
+
+    #[test]
+    fn translation_is_deterministic_function_of_source() {
+        let l = lang();
+        let pairs = l.translation_dataset(10, 12, 4, 7);
+        for (src, tgt) in &pairs {
+            assert_eq!(tgt, &l.translate(src, 4));
+            assert_eq!(src.len(), tgt.len());
+        }
+        // clause reversal: first clause of target maps the reversed first
+        // clause of source
+        let (src, tgt) = &pairs[0];
+        let v = l.vocab_size();
+        for k in 0..4 {
+            assert_eq!(tgt[k], (src[3 - k] * 7 + 3) % v);
+        }
+    }
+}

@@ -1,0 +1,183 @@
+//! Synthetic permuted-sequential-MNIST (Table 2).
+//!
+//! Real MNIST is not available offline; this generator produces
+//! class-conditional images with MNIST-like statistics so that the
+//! *pipeline* is identical to the paper's psMNIST: images are flattened
+//! to a pixel sequence, a single fixed random permutation is applied to
+//! every example, and a model must integrate information across the whole
+//! sequence to classify.  Each class has a distinct layout of 2-D
+//! Gaussian "strokes"; instances jitter stroke positions/intensities and
+//! add pixel noise, so classes are not linearly separable from any single
+//! pixel but are from the full sequence (see DESIGN.md §Substitutions).
+
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+pub struct PsMnist {
+    pub side: usize,
+    pub classes: usize,
+    pub permutation: Vec<usize>,
+    /// per-class stroke templates: (cx, cy, sigma, amplitude)
+    templates: Vec<Vec<(f32, f32, f32, f32)>>,
+}
+
+impl PsMnist {
+    /// `side`: image side length (paper: 28; scaled-down runs use 16).
+    pub fn new(side: usize, classes: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        // one fixed permutation for the whole task (paper: "chosen randomly
+        // and fixed for the duration of the task")
+        let mut permutation: Vec<usize> = (0..side * side).collect();
+        rng.shuffle(&mut permutation);
+        // class templates: 4-7 strokes each
+        let templates = (0..classes)
+            .map(|_| {
+                let k = 4 + rng.below(4);
+                (0..k)
+                    .map(|_| {
+                        (
+                            rng.uniform_range(0.15, 0.85) * side as f32,
+                            rng.uniform_range(0.15, 0.85) * side as f32,
+                            rng.uniform_range(0.06, 0.16) * side as f32,
+                            rng.uniform_range(0.6, 1.0),
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
+        PsMnist { side, classes, permutation, templates }
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.side * self.side
+    }
+
+    /// Render one permuted example of class `label`.
+    pub fn sample(&self, label: usize, rng: &mut Rng) -> Tensor {
+        let side = self.side;
+        let mut img = vec![0.0f32; side * side];
+        for &(cx, cy, sigma, amp) in &self.templates[label] {
+            // per-instance jitter
+            let jx = cx + rng.normal_f32(0.0, 0.06 * side as f32);
+            let jy = cy + rng.normal_f32(0.0, 0.06 * side as f32);
+            let ja = amp * rng.uniform_range(0.8, 1.2);
+            let inv = 1.0 / (2.0 * sigma * sigma);
+            for y in 0..side {
+                for x in 0..side {
+                    let dx = x as f32 - jx;
+                    let dy = y as f32 - jy;
+                    img[y * side + x] += ja * (-(dx * dx + dy * dy) * inv).exp();
+                }
+            }
+        }
+        // pixel noise + clamp, like anti-aliased handwriting on [0,1]
+        for v in img.iter_mut() {
+            *v = (*v + rng.normal_f32(0.0, 0.05)).clamp(0.0, 1.0);
+        }
+        // permute and emit as a (n, 1) sequence
+        let seq: Vec<f32> = self.permutation.iter().map(|&p| img[p]).collect();
+        Tensor::new(&[side * side, 1], seq)
+    }
+
+    /// Generate a dataset of `n` examples with balanced labels.
+    pub fn dataset(&self, n: usize, seed: u64) -> (Vec<Tensor>, Vec<usize>) {
+        let mut rng = Rng::new(seed ^ 0x9E3779B97F4A7C15);
+        let mut xs = Vec::with_capacity(n);
+        let mut ys = Vec::with_capacity(n);
+        for i in 0..n {
+            let label = i % self.classes;
+            xs.push(self.sample(label, &mut rng));
+            ys.push(label);
+        }
+        (xs, ys)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_range() {
+        let task = PsMnist::new(16, 10, 0);
+        let mut rng = Rng::new(1);
+        let x = task.sample(3, &mut rng);
+        assert_eq!(x.shape(), &[256, 1]);
+        assert!(x.data().iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn permutation_is_fixed_and_valid() {
+        let task = PsMnist::new(8, 10, 0);
+        let mut sorted = task.permutation.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..64).collect::<Vec<_>>());
+        let task2 = PsMnist::new(8, 10, 0);
+        assert_eq!(task.permutation, task2.permutation); // same seed
+        let task3 = PsMnist::new(8, 10, 1);
+        assert_ne!(task.permutation, task3.permutation); // different seed
+    }
+
+    #[test]
+    fn classes_are_distinguishable_instances_vary() {
+        let task = PsMnist::new(12, 4, 0);
+        let mut rng = Rng::new(2);
+        // same class, different instances: similar but not identical
+        let a1 = task.sample(0, &mut rng);
+        let a2 = task.sample(0, &mut rng);
+        assert!(a1.max_abs_diff(&a2) > 1e-3);
+        // different classes differ more on average than same class does
+        let b = task.sample(1, &mut rng);
+        let same: f32 = a1.sub(&a2).sq_norm();
+        let diff: f32 = a1.sub(&b).sq_norm();
+        assert!(diff > same, "class structure too weak: same={same} diff={diff}");
+    }
+
+    #[test]
+    fn dataset_balanced() {
+        let task = PsMnist::new(8, 5, 0);
+        let (xs, ys) = task.dataset(25, 0);
+        assert_eq!(xs.len(), 25);
+        for c in 0..5 {
+            assert_eq!(ys.iter().filter(|&&y| y == c).count(), 5);
+        }
+    }
+
+    #[test]
+    fn nearest_centroid_beats_chance() {
+        // sanity: the planted structure is learnable (nearest class
+        // centroid in pixel space classifies well above 1/classes)
+        let task = PsMnist::new(12, 4, 3);
+        let (train_x, train_y) = task.dataset(80, 1);
+        let (test_x, test_y) = task.dataset(40, 2);
+        let n = task.seq_len();
+        let mut centroids = vec![vec![0.0f32; n]; 4];
+        let mut counts = [0usize; 4];
+        for (x, &y) in train_x.iter().zip(&train_y) {
+            for (c, v) in centroids[y].iter_mut().zip(x.data()) {
+                *c += v;
+            }
+            counts[y] += 1;
+        }
+        for (c, cnt) in centroids.iter_mut().zip(&counts) {
+            for v in c.iter_mut() {
+                *v /= *cnt as f32;
+            }
+        }
+        let mut correct = 0;
+        for (x, &y) in test_x.iter().zip(&test_y) {
+            let mut best = (f32::MAX, 0usize);
+            for (k, c) in centroids.iter().enumerate() {
+                let dist: f32 = x.data().iter().zip(c).map(|(a, b)| (a - b) * (a - b)).sum();
+                if dist < best.0 {
+                    best = (dist, k);
+                }
+            }
+            if best.1 == y {
+                correct += 1;
+            }
+        }
+        let acc = correct as f32 / 40.0;
+        assert!(acc > 0.5, "planted structure unlearnable: acc={acc}");
+    }
+}

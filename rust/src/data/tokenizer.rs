@@ -1,0 +1,190 @@
+//! Word-level vocabulary and a character tokenizer (text8-style 27-symbol
+//! alphabet: 'a'..'z' + space).
+
+use std::collections::HashMap;
+
+pub const PAD: usize = 0;
+pub const UNK: usize = 1;
+pub const BOS: usize = 2;
+pub const EOS: usize = 3;
+pub const N_SPECIAL: usize = 4;
+
+/// Word-level vocabulary with the four standard specials.
+#[derive(Clone, Debug, Default)]
+pub struct Vocab {
+    word_to_id: HashMap<String, usize>,
+    id_to_word: Vec<String>,
+}
+
+impl Vocab {
+    pub fn new() -> Self {
+        let mut v = Vocab { word_to_id: HashMap::new(), id_to_word: Vec::new() };
+        for w in ["<pad>", "<unk>", "<bos>", "<eos>"] {
+            v.push(w);
+        }
+        v
+    }
+
+    fn push(&mut self, w: &str) -> usize {
+        if let Some(&id) = self.word_to_id.get(w) {
+            return id;
+        }
+        let id = self.id_to_word.len();
+        self.word_to_id.insert(w.to_string(), id);
+        self.id_to_word.push(w.to_string());
+        id
+    }
+
+    /// Build from sentences, keeping words with count >= `min_count`
+    /// (the paper's IWSLT preprocessing replaces words occurring < 5 times
+    /// with `<unk>`), capped at `max_size` total entries.
+    pub fn build<'a, I: IntoIterator<Item = &'a str>>(
+        sentences: I,
+        min_count: usize,
+        max_size: usize,
+    ) -> Self {
+        let mut counts: HashMap<&str, usize> = HashMap::new();
+        for s in sentences {
+            for w in s.split_whitespace() {
+                *counts.entry(w).or_insert(0) += 1;
+            }
+        }
+        let mut items: Vec<(&str, usize)> =
+            counts.into_iter().filter(|(_, c)| *c >= min_count).collect();
+        items.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+        let mut v = Vocab::new();
+        for (w, _) in items.into_iter().take(max_size.saturating_sub(N_SPECIAL)) {
+            v.push(w);
+        }
+        v
+    }
+
+    pub fn id(&self, w: &str) -> usize {
+        *self.word_to_id.get(w).unwrap_or(&UNK)
+    }
+
+    pub fn word(&self, id: usize) -> &str {
+        self.id_to_word.get(id).map(|s| s.as_str()).unwrap_or("<unk>")
+    }
+
+    pub fn len(&self) -> usize {
+        self.id_to_word.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.id_to_word.is_empty()
+    }
+
+    /// Encode a sentence, truncating/padding to `max_len` (0 = no limit).
+    pub fn encode(&self, sentence: &str, max_len: usize) -> Vec<usize> {
+        let mut ids: Vec<usize> = sentence.split_whitespace().map(|w| self.id(w)).collect();
+        if max_len > 0 {
+            ids.truncate(max_len);
+            while ids.len() < max_len {
+                ids.push(PAD);
+            }
+        }
+        ids
+    }
+
+    pub fn decode(&self, ids: &[usize]) -> String {
+        ids.iter()
+            .filter(|&&i| i != PAD && i != BOS && i != EOS)
+            .map(|&i| self.word(i))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// text8-style character tokenizer: 'a'..'z' -> 1..26, everything else
+/// (treated as space) -> 0.  Alphabet size 27, as in the paper's §4.4.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CharTokenizer;
+
+impl CharTokenizer {
+    pub const ALPHABET: usize = 27;
+
+    pub fn encode(&self, text: &str) -> Vec<usize> {
+        text.chars()
+            .map(|c| {
+                let c = c.to_ascii_lowercase();
+                if c.is_ascii_lowercase() {
+                    (c as usize) - ('a' as usize) + 1
+                } else {
+                    0
+                }
+            })
+            .collect()
+    }
+
+    pub fn decode(&self, ids: &[usize]) -> String {
+        ids.iter()
+            .map(|&i| {
+                if i == 0 || i > 26 {
+                    ' '
+                } else {
+                    (b'a' + (i as u8) - 1) as char
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specials_reserved() {
+        let v = Vocab::new();
+        assert_eq!(v.len(), N_SPECIAL);
+        assert_eq!(v.id("<unk>"), UNK);
+        assert_eq!(v.word(PAD), "<pad>");
+    }
+
+    #[test]
+    fn build_respects_min_count_and_cap() {
+        let sents = ["a a a b b c", "a b d"];
+        let v = Vocab::build(sents.iter().copied(), 2, 100);
+        assert_ne!(v.id("a"), UNK);
+        assert_ne!(v.id("b"), UNK);
+        assert_eq!(v.id("c"), UNK); // count 1 < 2
+        assert_eq!(v.id("d"), UNK);
+        let capped = Vocab::build(sents.iter().copied(), 1, 5);
+        assert_eq!(capped.len(), 5); // 4 specials + 1 word ("a", most frequent)
+        assert_ne!(capped.id("a"), UNK);
+        assert_eq!(capped.id("d"), UNK);
+    }
+
+    #[test]
+    fn encode_pads_and_truncates() {
+        let v = Vocab::build(["x y z"].iter().copied(), 1, 100);
+        let enc = v.encode("x y", 4);
+        assert_eq!(enc.len(), 4);
+        assert_eq!(enc[2], PAD);
+        let trunc = v.encode("x y z", 2);
+        assert_eq!(trunc.len(), 2);
+    }
+
+    #[test]
+    fn roundtrip_known_words() {
+        let v = Vocab::build(["hello world"].iter().copied(), 1, 100);
+        let ids = v.encode("hello world", 0);
+        assert_eq!(v.decode(&ids), "hello world");
+    }
+
+    #[test]
+    fn char_tokenizer_roundtrip() {
+        let t = CharTokenizer;
+        let ids = t.encode("hello world");
+        assert_eq!(ids.len(), 11);
+        assert_eq!(t.decode(&ids), "hello world");
+        assert!(ids.iter().all(|&i| i < CharTokenizer::ALPHABET));
+    }
+
+    #[test]
+    fn char_tokenizer_maps_punct_to_space() {
+        let t = CharTokenizer;
+        assert_eq!(t.decode(&t.encode("a.b!C")), "a b c");
+    }
+}

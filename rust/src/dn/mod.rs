@@ -1,0 +1,562 @@
+//! The Delay Network (DN): the paper's frozen LTI memory and all four of
+//! its evaluation strategies from Table 1.
+//!
+//!  * eq. (8)/(9)   `dn_continuous` — Padé approximant (A, B);
+//!  * footnote 3    `DelayNetwork::new` — ZOH discretization (Ā, B̄);
+//!  * eq. (10)/(14) `legendre_decoder` — sliding-window readouts C(θ');
+//!  * eq. (19)      `scan_sequential` — the recurrent form, O(n d²) per ch;
+//!  * eq. (24)      `parallel_toeplitz` — explicit H·U matmul, O(n² d);
+//!  * eq. (25)      `parallel_last` — final state only, O(n d);
+//!  * eq. (26)      `DnFftOperator` — FFT convolution, O(n log n d);
+//!  * plus `chunked_scan`, the Rust mirror of the L1 Pallas kernel
+//!    (block-Toeplitz matmul + Ā^L carry), used to validate the kernel's
+//!    schedule and as a cache-friendly CPU path.
+//!
+//! All strategies are *exactly* equivalent in exact arithmetic; the tests
+//! pin them against each other to ~1e-4 in f32.
+
+use crate::fft::{next_pow2, RfftCache};
+use crate::linalg::{expm, Mat};
+use crate::tensor::Tensor;
+
+/// Continuous-time Padé matrices (A, B) of eq. (8)/(9).
+pub fn dn_continuous(d: usize, theta: f64) -> (Mat, Mat) {
+    assert!(d >= 1, "DN order must be >= 1");
+    assert!(theta > 0.0, "theta must be > 0");
+    let mut a = Mat::zeros(d, d);
+    let mut b = Mat::zeros(d, 1);
+    for i in 0..d {
+        let pre = (2.0 * i as f64 + 1.0) / theta;
+        for j in 0..d {
+            let v = if i < j {
+                -1.0
+            } else if (i - j + 1) % 2 == 0 {
+                1.0
+            } else {
+                -1.0
+            };
+            a.set(i, j, pre * v);
+        }
+        b.set(i, 0, pre * if i % 2 == 0 { 1.0 } else { -1.0 });
+    }
+    (a, b)
+}
+
+/// Zero-order-hold discretization via the augmented-matrix exponential:
+/// expm([[A, B], [0, 0]] dt) = [[Ā, B̄], [0, I]]  (footnote 3 with dt = 1).
+pub fn discretize_zoh(a: &Mat, b: &Mat, dt: f64) -> (Mat, Mat) {
+    let d = a.rows;
+    let du = b.cols;
+    let mut aug = Mat::zeros(d + du, d + du);
+    for i in 0..d {
+        for j in 0..d {
+            aug.set(i, j, a.at(i, j) * dt);
+        }
+        for j in 0..du {
+            aug.set(i, d + j, b.at(i, j) * dt);
+        }
+    }
+    let m = expm(&aug);
+    let mut abar = Mat::zeros(d, d);
+    let mut bbar = Mat::zeros(d, du);
+    for i in 0..d {
+        for j in 0..d {
+            abar.set(i, j, m.at(i, j));
+        }
+        for j in 0..du {
+            bbar.set(i, j, m.at(i, d + j));
+        }
+    }
+    (abar, bbar)
+}
+
+/// Legendre readout C(θ') of eq. (14); `frac` = θ'/θ ∈ [0, 1].
+/// `frac == 1` is eq. (10): decode u(t − θ).
+///
+/// The entries are shifted Legendre polynomials C_i = P_i(2·frac − 1),
+/// evaluated with the stable three-term recurrence
+/// `(n+1) P_{n+1}(y) = (2n+1) y P_n(y) − n P_{n−1}(y)` — the paper's
+/// explicit binomial sum (eq. 14) cancels catastrophically for i ≳ 25.
+pub fn legendre_decoder(d: usize, frac: f64) -> Vec<f64> {
+    let y = 2.0 * frac - 1.0;
+    let mut c = vec![0.0; d];
+    if d >= 1 {
+        c[0] = 1.0;
+    }
+    if d >= 2 {
+        c[1] = y;
+    }
+    for i in 1..d.saturating_sub(1) {
+        c[i + 1] = ((2 * i + 1) as f64 * y * c[i] - i as f64 * c[i - 1]) / (i + 1) as f64;
+    }
+    c
+}
+
+/// A discretized Delay Network with precomputed operators for every
+/// evaluation strategy.
+pub struct DelayNetwork {
+    pub d: usize,
+    pub theta: f64,
+    /// Ā as f64 (exact ops) and f32 row-major (hot path).
+    pub abar: Mat,
+    pub abar_f32: Tensor,
+    /// B̄ column as a plain vector.
+    pub bbar: Vec<f64>,
+    pub bbar_f32: Vec<f32>,
+}
+
+impl DelayNetwork {
+    pub fn new(d: usize, theta: f64) -> Self {
+        let (a, b) = dn_continuous(d, theta);
+        let (abar, bbar_m) = discretize_zoh(&a, &b, 1.0);
+        let bbar: Vec<f64> = (0..d).map(|i| bbar_m.at(i, 0)).collect();
+        let abar_f32 = Tensor::new(&[d, d], abar.to_f32());
+        let bbar_f32: Vec<f32> = bbar.iter().map(|&v| v as f32).collect();
+        DelayNetwork { d, theta, abar, abar_f32, bbar, bbar_f32 }
+    }
+
+    /// Impulse response H: (n, d) with H[t] = Ā^t B̄  (eq. 22).
+    /// Computed the way the paper does: feed an impulse through eq. (19).
+    pub fn impulse_response(&self, n: usize) -> Tensor {
+        let d = self.d;
+        let mut h = Tensor::zeros(&[n, d]);
+        let mut m: Vec<f64> = self.bbar.clone();
+        for t in 0..n {
+            for s in 0..d {
+                h.data_mut()[t * d + s] = m[s] as f32;
+            }
+            m = self.abar.matvec(&m);
+        }
+        h
+    }
+
+    /// eq. (19): sequential scan.  u: (n, du) -> m: (n, d, du).
+    pub fn scan_sequential(&self, u: &Tensor) -> Tensor {
+        assert_eq!(u.ndim(), 2, "u must be (n, du)");
+        let (n, du) = (u.shape()[0], u.shape()[1]);
+        let d = self.d;
+        let mut out = Tensor::zeros(&[n, d, du]);
+        let mut m = vec![0.0f32; d * du]; // (d, du) row-major
+        let mut next = vec![0.0f32; d * du];
+        let ad = self.abar_f32.data();
+        for t in 0..n {
+            let u_t = &u.data()[t * du..(t + 1) * du];
+            // next = Ā m + B̄ u_t  (per channel)
+            for s in 0..d {
+                let arow = &ad[s * d..(s + 1) * d];
+                for c in 0..du {
+                    let mut acc = self.bbar_f32[s] * u_t[c];
+                    for (k, &av) in arow.iter().enumerate() {
+                        acc += av * m[k * du + c];
+                    }
+                    next[s * du + c] = acc;
+                }
+            }
+            std::mem::swap(&mut m, &mut next);
+            out.data_mut()[t * d * du..(t + 1) * d * du].copy_from_slice(&m);
+        }
+        out
+    }
+
+    /// eq. (26): all states via FFT convolution.  Builds a fresh operator;
+    /// prefer [`DnFftOperator`] to amortize F{H} across calls.
+    pub fn parallel_fft(&self, u: &Tensor) -> Tensor {
+        DnFftOperator::new(self, u.shape()[0]).apply(u)
+    }
+
+    /// eq. (25): final state only.  u: (n, du) -> (d, du) in O(n d du).
+    pub fn parallel_last(&self, u: &Tensor) -> Tensor {
+        let (n, du) = (u.shape()[0], u.shape()[1]);
+        let h = self.impulse_response(n);
+        let d = self.d;
+        let mut out = Tensor::zeros(&[d, du]);
+        // m_n[s, c] = sum_j H[n-1-j, s] u[j, c]
+        for j in 0..n {
+            let hrow = &h.data()[(n - 1 - j) * d..(n - j) * d];
+            let urow = &u.data()[j * du..(j + 1) * du];
+            for (s, &hv) in hrow.iter().enumerate() {
+                let orow = &mut out.data_mut()[s * du..(s + 1) * du];
+                for (o, &uv) in orow.iter_mut().zip(urow) {
+                    *o += hv * uv;
+                }
+            }
+        }
+        out
+    }
+
+    /// eq. (24): explicit Toeplitz matmul, O(n² d du) — small-n oracle.
+    pub fn parallel_toeplitz(&self, u: &Tensor) -> Tensor {
+        let (n, du) = (u.shape()[0], u.shape()[1]);
+        let d = self.d;
+        let h = self.impulse_response(n);
+        let mut out = Tensor::zeros(&[n, d, du]);
+        for t in 0..n {
+            for j in 0..=t {
+                let hrow = &h.data()[(t - j) * d..(t - j + 1) * d];
+                let urow = &u.data()[j * du..(j + 1) * du];
+                for (s, &hv) in hrow.iter().enumerate() {
+                    for (c, &uv) in urow.iter().enumerate() {
+                        out.data_mut()[(t * d + s) * du + c] += hv * uv;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The Rust mirror of the L1 Pallas kernel: block-Toeplitz matmul with
+    /// Ā^L carry propagation.  Exactly the same schedule the BlockSpec
+    /// expresses (see python/compile/kernels/dn_scan.py).
+    pub fn chunked_scan(&self, u: &Tensor, block: usize) -> Tensor {
+        let (n, du) = (u.shape()[0], u.shape()[1]);
+        let d = self.d;
+        let block = block.min(n).max(1);
+        let h = self.impulse_response(block); // (L, d)
+        // carry propagators Ā^{i+1}, i in [0, L)
+        let mut apows: Vec<Mat> = Vec::with_capacity(block);
+        let mut p = self.abar.clone();
+        for _ in 0..block {
+            apows.push(p.clone());
+            p = p.matmul(&self.abar);
+        }
+        let apows_f32: Vec<Vec<f32>> = apows.iter().map(|m| m.to_f32()).collect();
+
+        let mut out = Tensor::zeros(&[n, d, du]);
+        let mut carry = vec![0.0f32; d * du];
+        let nblocks = n.div_ceil(block);
+        for kb in 0..nblocks {
+            let t0 = kb * block;
+            let len = block.min(n - t0);
+            for i in 0..len {
+                let t = t0 + i;
+                let orow = &mut out.data_mut()[t * d * du..(t + 1) * d * du];
+                // local: sum_{j<=i} H[i-j] u[t0+j]
+                for j in 0..=i {
+                    let hrow = &h.data()[(i - j) * d..(i - j + 1) * d];
+                    let urow = &u.data()[(t0 + j) * du..(t0 + j + 1) * du];
+                    for (s, &hv) in hrow.iter().enumerate() {
+                        for (c, &uv) in urow.iter().enumerate() {
+                            orow[s * du + c] += hv * uv;
+                        }
+                    }
+                }
+                // carry contribution: Ā^{i+1} carry
+                let ap = &apows_f32[i];
+                for s in 0..d {
+                    let arow = &ap[s * d..(s + 1) * d];
+                    for c in 0..du {
+                        let mut acc = 0.0f32;
+                        for (k, &av) in arow.iter().enumerate() {
+                            acc += av * carry[k * du + c];
+                        }
+                        orow[s * du + c] += acc;
+                    }
+                }
+            }
+            // new carry = state at last step of this block
+            let t_last = t0 + len - 1;
+            carry.copy_from_slice(&out.data()[t_last * d * du..(t_last + 1) * d * du]);
+        }
+        out
+    }
+}
+
+/// The frozen-spectrum FFT operator for eq. (26): F{H} computed once,
+/// reused for every signal (A, B are not trained — paper §3.3).
+pub struct DnFftOperator {
+    pub n: usize,
+    pub d: usize,
+    nfft: usize,
+    /// one cached kernel spectrum per state dimension
+    caches: Vec<RfftCache>,
+}
+
+impl DnFftOperator {
+    pub fn new(dn: &DelayNetwork, n: usize) -> Self {
+        let d = dn.d;
+        let h = dn.impulse_response(n);
+        let nfft = next_pow2(2 * n);
+        let caches = (0..d)
+            .map(|s| {
+                let kernel: Vec<f32> = (0..n).map(|t| h.data()[t * d + s]).collect();
+                RfftCache::new(&kernel, nfft)
+            })
+            .collect();
+        DnFftOperator { n, d, nfft, caches }
+    }
+
+    /// u: (n, du) -> m: (n, d, du).
+    pub fn apply(&self, u: &Tensor) -> Tensor {
+        let (n, du) = (u.shape()[0], u.shape()[1]);
+        assert_eq!(n, self.n, "operator built for n={}, got {n}", self.n);
+        let d = self.d;
+        let mut out = Tensor::zeros(&[n, d, du]);
+        let mut chan = vec![0.0f32; n];
+        for c in 0..du {
+            for (t, ch) in chan.iter_mut().enumerate() {
+                *ch = u.data()[t * du + c];
+            }
+            // reuse the signal half-spectrum across all d kernels
+            let fs = crate::fft::rfft_half(&chan, self.nfft);
+            for (s, cache) in self.caches.iter().enumerate() {
+                let m_sc = cache.conv_spectrum(&fs, n);
+                for (t, &v) in m_sc.iter().enumerate() {
+                    out.data_mut()[(t * d + s) * du + c] = v;
+                }
+            }
+        }
+        out
+    }
+
+    /// Adjoint (transpose) of `apply` w.r.t. u — the backward pass of the
+    /// DN convolution: du[j, c] = Σ_{t≥j} Σ_s H[t−j, s] dm[t, s, c].
+    /// Evaluated as time-reversed causal convolution (parallel, like fwd).
+    pub fn apply_adjoint(&self, dm: &Tensor) -> Tensor {
+        let (n, d, du) = (dm.shape()[0], dm.shape()[1], dm.shape()[2]);
+        assert_eq!(n, self.n);
+        assert_eq!(d, self.d);
+        let mut out = Tensor::zeros(&[n, du]);
+        let mut chan = vec![0.0f32; n];
+        for c in 0..du {
+            for s in 0..d {
+                // g[t] = dm[n-1-t, s, c] (time reversed)
+                for (t, ch) in chan.iter_mut().enumerate() {
+                    *ch = dm.data()[((n - 1 - t) * d + s) * du + c];
+                }
+                let conv = self.caches[s].conv(&chan, n);
+                // du[j] += conv[n-1-j]
+                for j in 0..n {
+                    out.data_mut()[j * du + c] += conv[n - 1 - j];
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_u(n: usize, du: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::randn(&[n, du], 1.0, &mut rng)
+    }
+
+    #[test]
+    fn continuous_matrices_small_case() {
+        let (a, b) = dn_continuous(2, 1.0);
+        assert_eq!(a.at(0, 0), -1.0);
+        assert_eq!(a.at(0, 1), -1.0);
+        assert_eq!(a.at(1, 0), 3.0);
+        assert_eq!(a.at(1, 1), -3.0);
+        assert_eq!(b.at(0, 0), 1.0);
+        assert_eq!(b.at(1, 0), -3.0);
+    }
+
+    #[test]
+    fn theta_scales_inversely() {
+        let (a1, b1) = dn_continuous(4, 1.0);
+        let (a2, b2) = dn_continuous(4, 2.0);
+        for (x, y) in a1.data.iter().zip(&a2.data) {
+            assert!((x - y * 2.0).abs() < 1e-12);
+        }
+        for (x, y) in b1.data.iter().zip(&b2.data) {
+            assert!((x - y * 2.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn zoh_matches_footnote3_formula() {
+        // B̄ = A^{-1} (e^A − I) B
+        let (a, b) = dn_continuous(6, 20.0);
+        let (abar, bbar) = discretize_zoh(&a, &b, 1.0);
+        let ea = expm(&a);
+        for i in 0..6 {
+            for j in 0..6 {
+                assert!((abar.at(i, j) - ea.at(i, j)).abs() < 1e-10);
+            }
+        }
+        let mut ea_minus_i = ea.clone();
+        for i in 0..6 {
+            ea_minus_i.set(i, i, ea_minus_i.at(i, i) - 1.0);
+        }
+        let rhs = ea_minus_i.matmul(&b);
+        let expect = crate::linalg::solve_mat(&a, &rhs).unwrap();
+        for i in 0..6 {
+            assert!((bbar.at(i, 0) - expect.at(i, 0)).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn discrete_dn_is_stable() {
+        for &(d, theta) in &[(8usize, 32.0f64), (32, 128.0), (64, 256.0)] {
+            let dn = DelayNetwork::new(d, theta);
+            let u = rand_u(512, 1, 1);
+            let m = dn.scan_sequential(&u);
+            assert!(m.data().iter().all(|v| v.is_finite()));
+            assert!(m.abs_max() < 100.0, "d={d} theta={theta}: {}", m.abs_max());
+        }
+    }
+
+    #[test]
+    fn legendre_decoder_endpoints() {
+        let c0 = legendre_decoder(5, 0.0);
+        for (i, v) in c0.iter().enumerate() {
+            let expect = if i % 2 == 0 { 1.0 } else { -1.0 };
+            assert!((v - expect).abs() < 1e-12);
+        }
+        let c1 = legendre_decoder(5, 1.0);
+        for v in &c1 {
+            assert!((v - 1.0).abs() < 1e-9, "{v}");
+        }
+    }
+
+    #[test]
+    fn delay_decoding_recovers_delayed_signal() {
+        // The DN's defining property (eq. 12/13): C(θ'/θ)ᵀ m_t ≈ u(t − θ').
+        let (d, theta, n) = (24usize, 32.0f64, 256usize);
+        let dn = DelayNetwork::new(d, theta);
+        // smooth band-limited signal
+        let u_vec: Vec<f32> = (0..n)
+            .map(|t| {
+                let x = t as f64 / n as f64;
+                ((2.0 * std::f64::consts::PI * 2.0 * x + 0.3).sin()
+                    + (2.0 * std::f64::consts::PI * 5.0 * x + 1.1).sin())
+                    as f32
+                    / 2.0
+            })
+            .collect();
+        let u = Tensor::new(&[n, 1], u_vec.clone());
+        let m = dn.scan_sequential(&u);
+        for (frac, tol) in [(0.5f64, 0.15f32), (1.0, 0.12)] {
+            let delay = (frac * theta) as usize;
+            let c = legendre_decoder(d, frac);
+            let mut max_err = 0.0f32;
+            for t in 64..n {
+                let mut dec = 0.0f64;
+                for s in 0..d {
+                    dec += c[s] * m.data()[t * d + s] as f64;
+                }
+                let err = (dec as f32 - u_vec[t - delay]).abs();
+                max_err = max_err.max(err);
+            }
+            assert!(max_err < tol, "frac={frac}: err={max_err}");
+        }
+    }
+
+    #[test]
+    fn impulse_response_first_rows() {
+        let dn = DelayNetwork::new(4, 16.0);
+        let h = dn.impulse_response(3);
+        // H[0] = B̄
+        for s in 0..4 {
+            assert!((h.data()[s] - dn.bbar_f32[s]).abs() < 1e-6);
+        }
+        // H[1] = Ā B̄
+        let ab = dn.abar.matvec(&dn.bbar);
+        for s in 0..4 {
+            assert!((h.data()[4 + s] - ab[s] as f32).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn fft_matches_sequential() {
+        for &(n, d, du) in &[(32usize, 8usize, 1usize), (64, 16, 3), (100, 24, 2), (256, 64, 1)] {
+            let dn = DelayNetwork::new(d, n as f64);
+            let u = rand_u(n, du, (n + d) as u64);
+            let m_seq = dn.scan_sequential(&u);
+            let m_fft = dn.parallel_fft(&u);
+            let err = m_seq.max_abs_diff(&m_fft);
+            assert!(err < 2e-4, "n={n} d={d} du={du}: err={err}");
+        }
+    }
+
+    #[test]
+    fn toeplitz_matches_sequential() {
+        for &(n, d) in &[(16usize, 4usize), (48, 12)] {
+            let dn = DelayNetwork::new(d, n as f64);
+            let u = rand_u(n, 2, 7);
+            let err = dn.scan_sequential(&u).max_abs_diff(&dn.parallel_toeplitz(&u));
+            assert!(err < 2e-4, "n={n} d={d}: err={err}");
+        }
+    }
+
+    #[test]
+    fn last_matches_sequential_tail() {
+        for &(n, d, du) in &[(32usize, 8usize, 1usize), (64, 16, 3), (256, 32, 2)] {
+            let dn = DelayNetwork::new(d, n as f64);
+            let u = rand_u(n, du, n as u64);
+            let m_seq = dn.scan_sequential(&u);
+            let last = dn.parallel_last(&u);
+            let tail = Tensor::new(&[d, du], m_seq.data()[(n - 1) * d * du..].to_vec());
+            let err = tail.max_abs_diff(&last);
+            assert!(err < 2e-4, "n={n} d={d} du={du}: err={err}");
+        }
+    }
+
+    #[test]
+    fn chunked_scan_matches_sequential() {
+        for &(n, d, du, block) in &[
+            (32usize, 8usize, 1usize, 8usize),
+            (64, 16, 2, 16),
+            (64, 16, 2, 64),
+            (100, 8, 1, 16),
+            (17, 4, 3, 8),
+        ] {
+            let dn = DelayNetwork::new(d, n.max(4) as f64);
+            let u = rand_u(n, du, (n * 7 + d) as u64);
+            let err = dn.scan_sequential(&u).max_abs_diff(&dn.chunked_scan(&u, block));
+            assert!(err < 2e-4, "n={n} d={d} du={du} block={block}: err={err}");
+        }
+    }
+
+    #[test]
+    fn fft_operator_reuse_across_signals() {
+        let dn = DelayNetwork::new(16, 64.0);
+        let op = DnFftOperator::new(&dn, 64);
+        for seed in 0..3 {
+            let u = rand_u(64, 2, seed);
+            let err = dn.scan_sequential(&u).max_abs_diff(&op.apply(&u));
+            assert!(err < 2e-4);
+        }
+    }
+
+    #[test]
+    fn adjoint_is_transpose_of_forward() {
+        // <apply(u), w> == <u, apply_adjoint(w)> for random u, w
+        let dn = DelayNetwork::new(6, 24.0);
+        let n = 40;
+        let op = DnFftOperator::new(&dn, n);
+        let u = rand_u(n, 2, 10);
+        let mut rng = Rng::new(11);
+        let w = Tensor::randn(&[n, 6, 2], 1.0, &mut rng);
+        let lhs: f64 = op
+            .apply(&u)
+            .data()
+            .iter()
+            .zip(w.data())
+            .map(|(a, b)| (*a as f64) * (*b as f64))
+            .sum();
+        let rhs: f64 = u
+            .data()
+            .iter()
+            .zip(op.apply_adjoint(&w).data())
+            .map(|(a, b)| (*a as f64) * (*b as f64))
+            .sum();
+        assert!((lhs - rhs).abs() < 1e-2 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn linearity_of_delay() {
+        // eq. (2): D[a f + b g] = a D[f] + b D[g]
+        let dn = DelayNetwork::new(8, 16.0);
+        let f = rand_u(64, 1, 20);
+        let g = rand_u(64, 1, 21);
+        let combo = f.scale(2.0).add(&g.scale(-3.0));
+        let lhs = dn.scan_sequential(&combo);
+        let rhs = dn.scan_sequential(&f).scale(2.0).add(&dn.scan_sequential(&g).scale(-3.0));
+        assert!(lhs.max_abs_diff(&rhs) < 1e-4);
+    }
+}

@@ -1,0 +1,520 @@
+//! Radix-2 FFT and FFT-based causal convolution — the engine behind the
+//! paper's eq. (26): `m_{1:n} = F^{-1}{ F{H} · F{U} }`.
+//!
+//! A `Plan` precomputes twiddle factors and the bit-reversal permutation
+//! for a given power-of-two size; convolutions pad to `next_pow2(2n)` so a
+//! circular convolution realizes the causal (linear) one exactly.
+//! The impulse-response spectrum `F{H}` is frozen (A, B are not trained),
+//! so `RfftCache` lets callers reuse it across every batch — this is the
+//! single biggest win on the training hot path (see EXPERIMENTS.md §Perf).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::f64::consts::PI;
+
+/// Complex number (f64 — convolution error compounds across long sequences,
+/// and the FFT is a small fraction of total time).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Cpx {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl Cpx {
+    pub const ZERO: Cpx = Cpx { re: 0.0, im: 0.0 };
+
+    #[inline]
+    pub fn new(re: f64, im: f64) -> Self {
+        Cpx { re, im }
+    }
+
+    #[inline]
+    pub fn mul(self, o: Cpx) -> Cpx {
+        Cpx::new(self.re * o.re - self.im * o.im, self.re * o.im + self.im * o.re)
+    }
+
+    #[inline]
+    pub fn add(self, o: Cpx) -> Cpx {
+        Cpx::new(self.re + o.re, self.im + o.im)
+    }
+
+    #[inline]
+    pub fn sub(self, o: Cpx) -> Cpx {
+        Cpx::new(self.re - o.re, self.im - o.im)
+    }
+
+    #[inline]
+    pub fn conj(self) -> Cpx {
+        Cpx::new(self.re, -self.im)
+    }
+
+    #[inline]
+    pub fn scale(self, s: f64) -> Cpx {
+        Cpx::new(self.re * s, self.im * s)
+    }
+}
+
+/// Next power of two >= n (n >= 1).
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+/// Precomputed FFT plan for a fixed power-of-two length.
+pub struct Plan {
+    n: usize,
+    /// twiddles[s] holds the n/2 factors for stage with half-size m/2
+    twiddles: Vec<Vec<Cpx>>,
+    bitrev: Vec<usize>,
+}
+
+impl Plan {
+    pub fn new(n: usize) -> Self {
+        assert!(n.is_power_of_two(), "Plan requires power-of-two n, got {n}");
+        let levels = n.trailing_zeros() as usize;
+        // bit-reversal permutation
+        let mut bitrev = vec![0usize; n];
+        for i in 0..n {
+            bitrev[i] = (i.reverse_bits()) >> (usize::BITS as usize - levels);
+        }
+        // per-stage twiddles: stage with block size m uses w = exp(-2πi k/m)
+        let mut twiddles = Vec::with_capacity(levels);
+        let mut m = 2;
+        while m <= n {
+            let half = m / 2;
+            let mut tw = Vec::with_capacity(half);
+            for k in 0..half {
+                let ang = -2.0 * PI * k as f64 / m as f64;
+                tw.push(Cpx::new(ang.cos(), ang.sin()));
+            }
+            twiddles.push(tw);
+            m <<= 1;
+        }
+        Plan { n, twiddles, bitrev }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// In-place forward FFT.
+    pub fn forward(&self, buf: &mut [Cpx]) {
+        self.dispatch(buf, false);
+    }
+
+    /// In-place inverse FFT (includes 1/n normalization).
+    pub fn inverse(&self, buf: &mut [Cpx]) {
+        self.dispatch(buf, true);
+        let inv = 1.0 / self.n as f64;
+        for v in buf.iter_mut() {
+            *v = v.scale(inv);
+        }
+    }
+
+    fn dispatch(&self, buf: &mut [Cpx], invert: bool) {
+        let n = self.n;
+        assert_eq!(buf.len(), n, "buffer length {} != plan size {n}", buf.len());
+        if n == 1 {
+            return;
+        }
+        // bit-reversal reorder
+        for i in 0..n {
+            let j = self.bitrev[i];
+            if i < j {
+                buf.swap(i, j);
+            }
+        }
+        // butterflies
+        let mut m = 2;
+        let mut stage = 0;
+        while m <= n {
+            let half = m / 2;
+            let tw = &self.twiddles[stage];
+            for start in (0..n).step_by(m) {
+                for k in 0..half {
+                    let w = if invert { tw[k].conj() } else { tw[k] };
+                    let a = buf[start + k];
+                    let b = buf[start + k + half].mul(w);
+                    buf[start + k] = a.add(b);
+                    buf[start + k + half] = a.sub(b);
+                }
+            }
+            m <<= 1;
+            stage += 1;
+        }
+    }
+}
+
+thread_local! {
+    static PLAN_CACHE: RefCell<HashMap<usize, std::rc::Rc<Plan>>> = RefCell::new(HashMap::new());
+    /// post-twiddles w^k = exp(-2pi i k / nfft), k in [0, nfft/2] — shared
+    /// by rfft_half / irfft_half (recomputing trig per call dominated the
+    /// half-spectrum savings; see EXPERIMENTS.md §Perf).
+    static RTWIDDLE_CACHE: RefCell<HashMap<usize, std::rc::Rc<Vec<Cpx>>>> = RefCell::new(HashMap::new());
+}
+
+fn rtwiddles(nfft: usize) -> std::rc::Rc<Vec<Cpx>> {
+    RTWIDDLE_CACHE.with(|c| {
+        c.borrow_mut()
+            .entry(nfft)
+            .or_insert_with(|| {
+                std::rc::Rc::new(
+                    (0..=nfft / 2)
+                        .map(|k| {
+                            let ang = -2.0 * PI * k as f64 / nfft as f64;
+                            Cpx::new(ang.cos(), ang.sin())
+                        })
+                        .collect(),
+                )
+            })
+            .clone()
+    })
+}
+
+/// Fetch (or build) the cached plan for a power-of-two length.
+pub fn plan(n: usize) -> std::rc::Rc<Plan> {
+    PLAN_CACHE.with(|c| {
+        c.borrow_mut()
+            .entry(n)
+            .or_insert_with(|| std::rc::Rc::new(Plan::new(n)))
+            .clone()
+    })
+}
+
+/// FFT of a real signal zero-padded to `nfft` (power of two).
+pub fn rfft(signal: &[f32], nfft: usize) -> Vec<Cpx> {
+    let p = plan(nfft);
+    let mut buf = vec![Cpx::ZERO; nfft];
+    for (b, &s) in buf.iter_mut().zip(signal.iter()) {
+        b.re = s as f64;
+    }
+    p.forward(&mut buf);
+    buf
+}
+
+/// Half-spectrum FFT of a real signal via the packed half-size complex
+/// transform: pack x[2k] + i·x[2k+1], FFT at nfft/2, then unpack with the
+/// split-radix post-twiddle.  ~2× faster than `rfft` (which wastes a full
+/// complex transform on a real input).  Returns nfft/2 + 1 bins.
+pub fn rfft_half(signal: &[f32], nfft: usize) -> Vec<Cpx> {
+    assert!(nfft.is_power_of_two() && nfft >= 2);
+    let half = nfft / 2;
+    if half == 1 {
+        // nfft == 2: trivial DFT
+        let a = *signal.first().unwrap_or(&0.0) as f64;
+        let b = *signal.get(1).unwrap_or(&0.0) as f64;
+        return vec![Cpx::new(a + b, 0.0), Cpx::new(a - b, 0.0)];
+    }
+    let p = plan(half);
+    let mut buf = vec![Cpx::ZERO; half];
+    for k in 0..half {
+        let re = signal.get(2 * k).copied().unwrap_or(0.0) as f64;
+        let im = signal.get(2 * k + 1).copied().unwrap_or(0.0) as f64;
+        buf[k] = Cpx::new(re, im);
+    }
+    p.forward(&mut buf);
+    // unpack: X[k] = E[k] + w^k O[k] with
+    //   E[k] = (Z[k] + conj(Z[half-k]))/2, O[k] = -i (Z[k] - conj(Z[half-k]))/2
+    let tw = rtwiddles(nfft);
+    let mut out = vec![Cpx::ZERO; half + 1];
+    for k in 0..=half {
+        let zk = if k == half { buf[0] } else { buf[k] };
+        let zc = buf[(half - k) % half].conj();
+        let e = zk.add(zc).scale(0.5);
+        let o_times_i = zk.sub(zc).scale(0.5); // = i·O[k]
+        let o = Cpx::new(o_times_i.im, -o_times_i.re); // divide by i
+        out[k] = e.add(tw[k].mul(o));
+    }
+    out
+}
+
+/// Inverse of `rfft_half`: half-spectrum (nfft/2 + 1 bins) -> real signal
+/// truncated to `out_len`, via the packed half-size complex inverse.
+pub fn irfft_half(spectrum: &[Cpx], nfft: usize, out_len: usize) -> Vec<f32> {
+    assert!(nfft.is_power_of_two() && nfft >= 2);
+    let half = nfft / 2;
+    assert_eq!(spectrum.len(), half + 1, "half-spectrum length");
+    if half == 1 {
+        let x0 = (spectrum[0].re + spectrum[1].re) * 0.5;
+        let x1 = (spectrum[0].re - spectrum[1].re) * 0.5;
+        return [x0, x1].iter().take(out_len).map(|&v| v as f32).collect();
+    }
+    // repack: Z[k] = E[k] + i·O[k] where
+    //   E[k] = (X[k] + conj(X[half-k]))/2, O[k] = w^{-k} (X[k] - conj(X[half-k]))/2
+    let p = plan(half);
+    let tw = rtwiddles(nfft);
+    let mut buf = vec![Cpx::ZERO; half];
+    for (k, b) in buf.iter_mut().enumerate() {
+        let xk = spectrum[k];
+        let xc = spectrum[half - k].conj();
+        let e = xk.add(xc).scale(0.5);
+        let diff = xk.sub(xc).scale(0.5);
+        let o = tw[k].conj().mul(diff);
+        // Z[k] = E[k] + i·O[k]
+        *b = Cpx::new(e.re - o.im, e.im + o.re);
+    }
+    p.inverse(&mut buf);
+    let mut out = Vec::with_capacity(out_len);
+    for k in 0..half {
+        if out.len() < out_len {
+            out.push(buf[k].re as f32);
+        }
+        if out.len() < out_len {
+            out.push(buf[k].im as f32);
+        }
+    }
+    while out.len() < out_len {
+        out.push(0.0);
+    }
+    out
+}
+
+/// Inverse FFT, returning the real part truncated to `out_len`.
+pub fn irfft_real(mut spectrum: Vec<Cpx>, out_len: usize) -> Vec<f32> {
+    let nfft = spectrum.len();
+    let p = plan(nfft);
+    p.inverse(&mut spectrum);
+    spectrum.iter().take(out_len).map(|c| c.re as f32).collect()
+}
+
+/// Causal (linear) convolution of two real sequences, truncated to `out_len`:
+/// out[t] = sum_{j<=t} a[j] b[t-j].
+pub fn conv_causal(a: &[f32], b: &[f32], out_len: usize) -> Vec<f32> {
+    let need = a.len() + b.len() - 1;
+    let nfft = next_pow2(need.max(out_len));
+    let fa = rfft(a, nfft);
+    let fb = rfft(b, nfft);
+    let prod: Vec<Cpx> = fa.iter().zip(&fb).map(|(x, y)| x.mul(*y)).collect();
+    irfft_real(prod, out_len)
+}
+
+/// A cached half-spectrum of a fixed real kernel at a fixed FFT size —
+/// reused across every convolution with that kernel (the DN's frozen
+/// F{H}).  Real-to-real convolutions run entirely in half-spectrum space
+/// (§Perf: ~2× over the full complex transform).
+pub struct RfftCache {
+    pub nfft: usize,
+    /// half spectrum: nfft/2 + 1 bins
+    pub spectrum: Vec<Cpx>,
+}
+
+impl RfftCache {
+    pub fn new(kernel: &[f32], nfft: usize) -> Self {
+        RfftCache { nfft, spectrum: rfft_half(kernel, nfft) }
+    }
+
+    /// Convolve a real signal with the cached kernel, truncated to out_len.
+    pub fn conv(&self, signal: &[f32], out_len: usize) -> Vec<f32> {
+        let fs = rfft_half(signal, self.nfft);
+        self.conv_spectrum(&fs, out_len)
+    }
+
+    /// Convolve a precomputed signal half-spectrum with the cached kernel.
+    pub fn conv_spectrum(&self, signal_spectrum: &[Cpx], out_len: usize) -> Vec<f32> {
+        let prod: Vec<Cpx> = self
+            .spectrum
+            .iter()
+            .zip(signal_spectrum)
+            .map(|(x, y)| x.mul(*y))
+            .collect();
+        irfft_half(&prod, self.nfft, out_len)
+    }
+}
+
+/// Naive O(n^2) causal convolution — test oracle.
+pub fn conv_causal_naive(a: &[f32], b: &[f32], out_len: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; out_len];
+    for (t, o) in out.iter_mut().enumerate() {
+        let mut s = 0.0f64;
+        for j in 0..=t.min(a.len().saturating_sub(1)) {
+            if t - j < b.len() {
+                s += a[j] as f64 * b[t - j] as f64;
+            }
+        }
+        *o = s as f32;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn next_pow2_values() {
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(2), 2);
+        assert_eq!(next_pow2(3), 4);
+        assert_eq!(next_pow2(1000), 1024);
+    }
+
+    #[test]
+    fn fft_of_impulse_is_flat() {
+        let p = Plan::new(8);
+        let mut buf = vec![Cpx::ZERO; 8];
+        buf[0].re = 1.0;
+        p.forward(&mut buf);
+        for c in &buf {
+            assert!((c.re - 1.0).abs() < 1e-12 && c.im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fft_roundtrip() {
+        let mut rng = Rng::new(0);
+        for &n in &[2usize, 8, 64, 256] {
+            let p = Plan::new(n);
+            let orig: Vec<Cpx> =
+                (0..n).map(|_| Cpx::new(rng.normal(), rng.normal())).collect();
+            let mut buf = orig.clone();
+            p.forward(&mut buf);
+            p.inverse(&mut buf);
+            for (a, b) in buf.iter().zip(&orig) {
+                assert!((a.re - b.re).abs() < 1e-9 && (a.im - b.im).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn fft_matches_dft() {
+        let mut rng = Rng::new(1);
+        let n = 16;
+        let sig: Vec<Cpx> = (0..n).map(|_| Cpx::new(rng.normal(), 0.0)).collect();
+        let mut buf = sig.clone();
+        Plan::new(n).forward(&mut buf);
+        for k in 0..n {
+            let mut expect = Cpx::ZERO;
+            for (t, s) in sig.iter().enumerate() {
+                let ang = -2.0 * PI * (k * t) as f64 / n as f64;
+                expect = expect.add(s.mul(Cpx::new(ang.cos(), ang.sin())));
+            }
+            assert!((buf[k].re - expect.re).abs() < 1e-9);
+            assert!((buf[k].im - expect.im).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn parseval_energy_conserved() {
+        let mut rng = Rng::new(2);
+        let n = 64;
+        let sig: Vec<Cpx> = (0..n).map(|_| Cpx::new(rng.normal(), 0.0)).collect();
+        let time_energy: f64 = sig.iter().map(|c| c.re * c.re + c.im * c.im).sum();
+        let mut buf = sig;
+        Plan::new(n).forward(&mut buf);
+        let freq_energy: f64 =
+            buf.iter().map(|c| c.re * c.re + c.im * c.im).sum::<f64>() / n as f64;
+        assert!((time_energy - freq_energy).abs() < 1e-8);
+    }
+
+    #[test]
+    fn conv_matches_naive() {
+        let mut rng = Rng::new(3);
+        for &(na, nb) in &[(4usize, 4usize), (16, 7), (100, 100), (33, 129)] {
+            let a: Vec<f32> = (0..na).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let b: Vec<f32> = (0..nb).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let out_len = na.max(nb);
+            let fast = conv_causal(&a, &b, out_len);
+            let slow = conv_causal_naive(&a, &b, out_len);
+            for (x, y) in fast.iter().zip(&slow) {
+                assert!((x - y).abs() < 1e-3, "na={na} nb={nb}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let delta = [1.0f32];
+        let out = conv_causal(&a, &delta, 4);
+        for (x, y) in out.iter().zip(&a) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn conv_shift_kernel_delays() {
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let shift = [0.0f32, 1.0]; // delay by one step
+        let out = conv_causal(&a, &shift, 4);
+        assert!((out[0]).abs() < 1e-6);
+        for t in 1..4 {
+            assert!((out[t] - a[t - 1]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rfft_cache_reuse_matches_direct() {
+        let mut rng = Rng::new(4);
+        let kernel: Vec<f32> = (0..32).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let cache = RfftCache::new(&kernel, next_pow2(64));
+        for seed in 0..3 {
+            let mut r2 = Rng::new(seed);
+            let sig: Vec<f32> = (0..32).map(|_| r2.normal_f32(0.0, 1.0)).collect();
+            let fast = cache.conv(&sig, 32);
+            let slow = conv_causal_naive(&sig, &kernel, 32);
+            for (x, y) in fast.iter().zip(&slow) {
+                assert!((x - y).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn plan_rejects_non_pow2() {
+        Plan::new(12);
+    }
+
+    #[test]
+    fn rfft_half_matches_full() {
+        let mut rng = Rng::new(8);
+        for &nfft in &[2usize, 4, 16, 128, 512] {
+            let sig: Vec<f32> = (0..nfft / 2 + 1).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let full = rfft(&sig, nfft);
+            let half = rfft_half(&sig, nfft);
+            assert_eq!(half.len(), nfft / 2 + 1);
+            for k in 0..=nfft / 2 {
+                assert!(
+                    (full[k].re - half[k].re).abs() < 1e-9
+                        && (full[k].im - half[k].im).abs() < 1e-9,
+                    "nfft={nfft} k={k}: {:?} vs {:?}",
+                    full[k],
+                    half[k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn irfft_half_roundtrip() {
+        let mut rng = Rng::new(9);
+        for &nfft in &[4usize, 32, 256] {
+            let sig: Vec<f32> = (0..nfft).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let spec = rfft_half(&sig, nfft);
+            let back = irfft_half(&spec, nfft, nfft);
+            for (a, b) in sig.iter().zip(&back) {
+                assert!((a - b).abs() < 1e-5, "nfft={nfft}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn half_spectrum_conv_matches_naive() {
+        let mut rng = Rng::new(10);
+        for &(na, nb) in &[(16usize, 7usize), (100, 100), (33, 129)] {
+            let a: Vec<f32> = (0..na).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let b: Vec<f32> = (0..nb).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let out_len = na.max(nb);
+            let nfft = next_pow2(na + nb - 1);
+            let cache = RfftCache::new(&b, nfft);
+            let fast = cache.conv(&a, out_len);
+            let slow = conv_causal_naive(&a, &b, out_len);
+            for (x, y) in fast.iter().zip(&slow) {
+                assert!((x - y).abs() < 1e-3, "na={na} nb={nb}: {x} vs {y}");
+            }
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! Single-head scaled dot-product self-attention (Vaswani et al. 2017).
+//!
+//! Two uses in this repo:
+//!  * the Table 1 complexity row (`O(n² d_x)`) — forward-only timing;
+//!  * the decoder attention of the translation experiment (Table 6) and
+//!    the text8 note (§4.4) — trained through autograd using the
+//!    primitive ops (matmul/softmax are expressed with existing nodes is
+//!    not possible for row-softmax, so training uses [`attention_forward`]
+//!    outputs as features via the fixed-context trick; the benches only
+//!    need the forward cost).
+
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Forward-only self-attention over one sequence: x (n, dx) -> (n, dx).
+pub struct SelfAttention {
+    pub dx: usize,
+    pub wq: Tensor,
+    pub wk: Tensor,
+    pub wv: Tensor,
+    /// causal masking (decoder-style) if true
+    pub causal: bool,
+}
+
+impl SelfAttention {
+    pub fn new(dx: usize, causal: bool, rng: &mut Rng) -> Self {
+        SelfAttention {
+            dx,
+            wq: Tensor::glorot(dx, dx, rng),
+            wk: Tensor::glorot(dx, dx, rng),
+            wv: Tensor::glorot(dx, dx, rng),
+            causal,
+        }
+    }
+
+    /// softmax(Q Kᵀ / √dx) V
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let n = x.rows();
+        let q = x.matmul(&self.wq);
+        let k = x.matmul(&self.wk);
+        let v = x.matmul(&self.wv);
+        let mut scores = q.matmul_nt(&k); // (n, n)
+        let scale = 1.0 / (self.dx as f32).sqrt();
+        scores.map_inplace(|s| s * scale);
+        if self.causal {
+            for i in 0..n {
+                for j in i + 1..n {
+                    scores.data_mut()[i * n + j] = f32::NEG_INFINITY;
+                }
+            }
+        }
+        let attn = scores.softmax_rows();
+        attn.matmul(&v)
+    }
+
+    /// Cross-attention: queries from `x` (n, dx), keys/values from
+    /// `context` (m, dx) — the translation decoder's attention.
+    pub fn forward_cross(&self, x: &Tensor, context: &Tensor) -> Tensor {
+        let q = x.matmul(&self.wq);
+        let k = context.matmul(&self.wk);
+        let v = context.matmul(&self.wv);
+        let mut scores = q.matmul_nt(&k);
+        let scale = 1.0 / (self.dx as f32).sqrt();
+        scores.map_inplace(|s| s * scale);
+        let attn = scores.softmax_rows();
+        attn.matmul(&v)
+    }
+
+    pub fn num_params(&self) -> usize {
+        3 * self.dx * self.dx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_shape_matches_input() {
+        let mut rng = Rng::new(0);
+        let att = SelfAttention::new(8, false, &mut rng);
+        let x = Tensor::randn(&[12, 8], 1.0, &mut rng);
+        let y = att.forward(&x);
+        assert_eq!(y.shape(), &[12, 8]);
+        assert!(y.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn causal_mask_respects_order() {
+        // with a causal mask, changing future inputs must not change
+        // earlier outputs
+        let mut rng = Rng::new(1);
+        let att = SelfAttention::new(4, true, &mut rng);
+        let mut x = Tensor::randn(&[6, 4], 1.0, &mut rng);
+        let y1 = att.forward(&x);
+        // perturb the last timestep
+        for j in 0..4 {
+            x.data_mut()[5 * 4 + j] += 10.0;
+        }
+        let y2 = att.forward(&x);
+        for t in 0..5 {
+            for j in 0..4 {
+                assert!(
+                    (y1.data()[t * 4 + j] - y2.data()[t * 4 + j]).abs() < 1e-5,
+                    "future leaked into t={t}"
+                );
+            }
+        }
+        // ...but the last step does change
+        let mut changed = false;
+        for j in 0..4 {
+            if (y1.data()[5 * 4 + j] - y2.data()[5 * 4 + j]).abs() > 1e-4 {
+                changed = true;
+            }
+        }
+        assert!(changed);
+    }
+
+    #[test]
+    fn non_causal_attends_globally() {
+        let mut rng = Rng::new(2);
+        let att = SelfAttention::new(4, false, &mut rng);
+        let mut x = Tensor::randn(&[6, 4], 1.0, &mut rng);
+        let y1 = att.forward(&x);
+        for j in 0..4 {
+            x.data_mut()[5 * 4 + j] += 10.0;
+        }
+        let y2 = att.forward(&x);
+        // earlier outputs DO change without the mask
+        let diff = y1.max_abs_diff(&y2);
+        assert!(diff > 1e-3);
+    }
+
+    #[test]
+    fn cross_attention_shapes() {
+        let mut rng = Rng::new(3);
+        let att = SelfAttention::new(8, false, &mut rng);
+        let x = Tensor::randn(&[5, 8], 1.0, &mut rng);
+        let ctx = Tensor::randn(&[9, 8], 1.0, &mut rng);
+        let y = att.forward_cross(&x, &ctx);
+        assert_eq!(y.shape(), &[5, 8]);
+    }
+}

@@ -1,0 +1,210 @@
+//! Feed-forward building blocks: dense, highway (Srivastava et al. 2015 —
+//! the paper's language-model blocks are DN + dense + highway), and token
+//! embedding.
+
+use crate::autograd::{Graph, NodeId, ParamId, ParamStore};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    Linear,
+    Tanh,
+    Relu,
+    Sigmoid,
+}
+
+impl Activation {
+    pub fn apply(&self, g: &mut Graph, x: NodeId) -> NodeId {
+        match self {
+            Activation::Linear => x,
+            Activation::Tanh => g.tanh(x),
+            Activation::Relu => g.relu(x),
+            Activation::Sigmoid => g.sigmoid(x),
+        }
+    }
+}
+
+/// y = act(x W + b)
+pub struct Dense {
+    pub w: ParamId,
+    pub b: ParamId,
+    pub act: Activation,
+    pub din: usize,
+    pub dout: usize,
+}
+
+impl Dense {
+    pub fn new(
+        din: usize,
+        dout: usize,
+        act: Activation,
+        store: &mut ParamStore,
+        rng: &mut Rng,
+        prefix: &str,
+    ) -> Self {
+        Dense {
+            w: store.add(&format!("{prefix}.w"), Tensor::glorot(din, dout, rng)),
+            b: store.add(&format!("{prefix}.b"), Tensor::zeros(&[dout])),
+            act,
+            din,
+            dout,
+        }
+    }
+
+    pub fn forward(&self, g: &mut Graph, store: &ParamStore, x: NodeId) -> NodeId {
+        let w = g.param(store, self.w);
+        let b = g.param(store, self.b);
+        let a = g.affine(x, w, b);
+        self.act.apply(g, a)
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.din * self.dout + self.dout
+    }
+}
+
+/// Highway layer: y = t ⊙ h(x) + (1 − t) ⊙ x with t = σ(x Wt + bt).
+/// Gate bias initialized negative (paper: −1) so early training passes
+/// the input through.
+pub struct Highway {
+    pub wt: ParamId,
+    pub bt: ParamId,
+    pub wh: ParamId,
+    pub bh: ParamId,
+    pub dim: usize,
+}
+
+impl Highway {
+    pub fn new(dim: usize, store: &mut ParamStore, rng: &mut Rng, prefix: &str) -> Self {
+        Highway {
+            wt: store.add(&format!("{prefix}.wt"), Tensor::glorot(dim, dim, rng)),
+            bt: store.add(&format!("{prefix}.bt"), Tensor::full(&[dim], -1.0)),
+            wh: store.add(&format!("{prefix}.wh"), Tensor::glorot(dim, dim, rng)),
+            bh: store.add(&format!("{prefix}.bh"), Tensor::zeros(&[dim])),
+            dim,
+        }
+    }
+
+    pub fn forward(&self, g: &mut Graph, store: &ParamStore, x: NodeId) -> NodeId {
+        let wt = g.param(store, self.wt);
+        let bt = g.param(store, self.bt);
+        let wh = g.param(store, self.wh);
+        let bh = g.param(store, self.bh);
+        let ta = g.affine(x, wt, bt);
+        let t = g.sigmoid(ta);
+        let ha = g.affine(x, wh, bh);
+        let h = g.tanh(ha);
+        let th = g.mul(t, h);
+        let one_minus_t = g.one_minus(t);
+        let carry = g.mul(one_minus_t, x);
+        g.add(th, carry)
+    }
+
+    pub fn num_params(&self) -> usize {
+        2 * (self.dim * self.dim + self.dim)
+    }
+}
+
+/// Token embedding table, optionally frozen (the paper's GloVe stand-in is
+/// frozen random embeddings — see DESIGN.md §Substitutions).
+pub struct Embedding {
+    pub table: ParamId,
+    pub vocab: usize,
+    pub dim: usize,
+    pub frozen: bool,
+}
+
+impl Embedding {
+    pub fn new(vocab: usize, dim: usize, store: &mut ParamStore, rng: &mut Rng, prefix: &str) -> Self {
+        let t = Tensor::randn(&[vocab, dim], 1.0 / (dim as f32).sqrt(), rng);
+        Embedding { table: store.add(&format!("{prefix}.emb"), t), vocab, dim, frozen: false }
+    }
+
+    pub fn frozen(mut self) -> Self {
+        self.frozen = true;
+        self
+    }
+
+    /// ids -> (len, dim).  Frozen tables enter the graph as constants so
+    /// no gradient is computed or applied.
+    pub fn forward(&self, g: &mut Graph, store: &ParamStore, ids: &[usize]) -> NodeId {
+        let table = if self.frozen {
+            g.input(store.get(self.table).clone())
+        } else {
+            g.param(store, self.table)
+        };
+        g.embedding(table, ids)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_shapes_and_activation() {
+        let mut rng = Rng::new(0);
+        let mut store = ParamStore::new();
+        let layer = Dense::new(4, 3, Activation::Relu, &mut store, &mut rng, "d");
+        assert_eq!(layer.num_params(), 15);
+        let mut g = Graph::new();
+        let x = g.input(Tensor::randn(&[5, 4], 1.0, &mut rng));
+        let y = layer.forward(&mut g, &store, x);
+        assert_eq!(g.value(y).shape(), &[5, 3]);
+        assert!(g.value(y).data().iter().all(|&v| v >= 0.0)); // relu
+    }
+
+    #[test]
+    fn highway_initially_passes_input_through() {
+        // bt = -1 => gate ≈ 0.27, output closer to x than to h; with
+        // bt very negative it converges to identity
+        let mut rng = Rng::new(1);
+        let mut store = ParamStore::new();
+        let hw = Highway::new(6, &mut store, &mut rng, "hw");
+        // force the gate closed
+        store.get_mut(hw.bt).map_inplace(|_| -20.0);
+        let mut g = Graph::new();
+        let x_val = Tensor::randn(&[3, 6], 1.0, &mut rng);
+        let x = g.input(x_val.clone());
+        let y = hw.forward(&mut g, &store, x);
+        assert!(g.value(y).allclose(&x_val, 1e-4));
+    }
+
+    #[test]
+    fn highway_gradients_flow() {
+        let mut rng = Rng::new(2);
+        let mut store = ParamStore::new();
+        let hw = Highway::new(4, &mut store, &mut rng, "hw");
+        let mut g = Graph::new();
+        let x = g.input(Tensor::randn(&[2, 4], 1.0, &mut rng));
+        let y = hw.forward(&mut g, &store, x);
+        let sq = g.mul(y, y);
+        let loss = g.mean_all(sq);
+        g.backward(loss);
+        assert_eq!(g.param_grads().len(), 4);
+    }
+
+    #[test]
+    fn embedding_gathers_and_freezes() {
+        let mut rng = Rng::new(3);
+        let mut store = ParamStore::new();
+        let emb = Embedding::new(10, 4, &mut store, &mut rng, "e");
+        let ids = vec![2usize, 7, 2];
+        let mut g = Graph::new();
+        let e = emb.forward(&mut g, &store, &ids);
+        assert_eq!(g.value(e).shape(), &[3, 4]);
+        // rows 0 and 2 identical (same token)
+        let v = g.value(e);
+        for j in 0..4 {
+            assert_eq!(v.data()[j], v.data()[2 * 4 + j]);
+        }
+        // frozen variant: no grads
+        let emb_f = Embedding::new(10, 4, &mut store, &mut rng, "ef").frozen();
+        let mut g2 = Graph::new();
+        let e2 = emb_f.forward(&mut g2, &store, &ids);
+        let loss = g2.mean_all(e2);
+        g2.backward(loss);
+        assert!(g2.param_grads().is_empty());
+    }
+}

@@ -1,0 +1,575 @@
+//! The three LMU variants the paper compares (§4.6, Fig. 1):
+//!
+//!  * [`LmuOriginalCell`] — Voelker et al. (2019), eqs. 15–17: nonlinear
+//!    hidden state coupled to the DN, fully sequential (the baseline);
+//!  * [`LmuSequentialLayer`] — *our model* (eqs. 18–20) run in its
+//!    recurrent "LTI version" (eq. 19 step by step);
+//!  * [`LmuParallelLayer`] — *our model* with the DN evaluated in parallel
+//!    (FFT eq. 26 when all states are needed, matmul eq. 25 when only the
+//!    final state is).
+//!
+//! Sequential and parallel versions compute identical functions — the
+//! tests pin this — which is the paper's train-parallel / infer-recurrent
+//! equivalence.
+
+use crate::autograd::{Graph, NodeId, ParamId, ParamStore};
+use crate::dn::{DelayNetwork, DnFftOperator};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+use std::rc::Rc;
+
+/// Shared hyperparameters of our-model layers.
+#[derive(Clone, Debug)]
+pub struct LmuSpec {
+    pub dx: usize,
+    pub du: usize,
+    pub d: usize,
+    pub theta: f64,
+    pub hidden: usize,
+    /// apply tanh in eq. 18 (f1). DN-only models (Table 4) use identity+no-encoder.
+    pub nonlin_u: bool,
+    /// apply tanh in eq. 20 (f2).
+    pub nonlin_o: bool,
+}
+
+impl LmuSpec {
+    pub fn new(dx: usize, du: usize, d: usize, theta: f64, hidden: usize) -> Self {
+        LmuSpec { dx, du, d, theta, hidden, nonlin_u: true, nonlin_o: true }
+    }
+}
+
+/// Parameters of our-model (eqs. 18 & 20): shared by the sequential and
+/// parallel evaluation strategies so equivalence is exact.
+pub struct LmuParams {
+    pub ux: ParamId,
+    pub bu: ParamId,
+    pub wm: ParamId,
+    pub wx: ParamId,
+    pub bo: ParamId,
+}
+
+impl LmuParams {
+    pub fn init(spec: &LmuSpec, store: &mut ParamStore, rng: &mut Rng, prefix: &str) -> Self {
+        LmuParams {
+            ux: store.add(&format!("{prefix}.Ux"), Tensor::glorot(spec.dx, spec.du, rng)),
+            bu: store.add(&format!("{prefix}.bu"), Tensor::zeros(&[spec.du])),
+            wm: store.add(&format!("{prefix}.Wm"), Tensor::glorot(spec.du * spec.d, spec.hidden, rng)),
+            wx: store.add(&format!("{prefix}.Wx"), Tensor::glorot(spec.dx, spec.hidden, rng)),
+            bo: store.add(&format!("{prefix}.bo"), Tensor::zeros(&[spec.hidden])),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parallel form
+// ---------------------------------------------------------------------------
+
+/// Our model with the DN evaluated in parallel over the sequence.
+pub struct LmuParallelLayer {
+    pub spec: LmuSpec,
+    pub params: LmuParams,
+    dn_op: Rc<DnFftOperator>,
+    /// time-reversed impulse response for the eq. 25 last-state path
+    hrev: Tensor,
+    pub n: usize,
+}
+
+impl LmuParallelLayer {
+    pub fn new(spec: LmuSpec, n: usize, store: &mut ParamStore, rng: &mut Rng, prefix: &str) -> Self {
+        let dn = DelayNetwork::new(spec.d, spec.theta);
+        let dn_op = Rc::new(DnFftOperator::new(&dn, n));
+        let h = dn.impulse_response(n);
+        let d = spec.d;
+        let mut hrev = Tensor::zeros(&[n, d]);
+        for t in 0..n {
+            for s in 0..d {
+                hrev.data_mut()[t * d + s] = h.data()[(n - 1 - t) * d + s];
+            }
+        }
+        let params = LmuParams::init(&spec, store, rng, prefix);
+        LmuParallelLayer { spec, params, dn_op, hrev, n }
+    }
+
+    /// Encoder (eq. 18): u = f1(x Ux + bu).  x sample-major (B·n, dx).
+    fn encode(&self, g: &mut Graph, store: &ParamStore, x: NodeId) -> NodeId {
+        let ux = g.param(store, self.params.ux);
+        let bu = g.param(store, self.params.bu);
+        let a = g.affine(x, ux, bu);
+        if self.spec.nonlin_u {
+            g.tanh(a)
+        } else {
+            a
+        }
+    }
+
+    /// Output map (eq. 20): o = f2(m Wm + x Wx + bo).
+    fn output(&self, g: &mut Graph, store: &ParamStore, m: NodeId, x: NodeId) -> NodeId {
+        let wm = g.param(store, self.params.wm);
+        let wx = g.param(store, self.params.wx);
+        let bo = g.param(store, self.params.bo);
+        let mm = g.matmul(m, wm);
+        let xx = g.matmul(x, wx);
+        let s = g.add(mm, xx);
+        let s = g.add_row(s, bo);
+        if self.spec.nonlin_o {
+            g.tanh(s)
+        } else {
+            s
+        }
+    }
+
+    /// All-states forward (eq. 26 path): x (B·n, dx) -> o (B·n, hidden).
+    pub fn forward_all(&self, g: &mut Graph, store: &ParamStore, x: NodeId, batch: usize) -> NodeId {
+        let u = self.encode(g, store, x);
+        let m = g.dn_conv(u, self.dn_op.clone(), batch); // (B·n, du·d)
+        self.output(g, store, m, x)
+    }
+
+    /// Last-state forward (eq. 25 path, return_sequences=False):
+    /// x (B·n, dx), x_last (B, dx) -> o (B, hidden).
+    pub fn forward_last(
+        &self,
+        g: &mut Graph,
+        store: &ParamStore,
+        x: NodeId,
+        x_last: NodeId,
+        batch: usize,
+    ) -> NodeId {
+        let u = self.encode(g, store, x);
+        let m = g.dn_last(u, &self.hrev, batch); // (B, du·d)
+        self.output(g, store, m, x_last)
+    }
+
+    /// DN-only final state (Table 4 sentence encoders): no encoder, no
+    /// output map — m_n of the raw input, (B, du·d) with du = dx.
+    pub fn dn_only_last(&self, g: &mut Graph, x: NodeId, batch: usize) -> NodeId {
+        g.dn_last(x, &self.hrev, batch)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sequential (LTI version) form
+// ---------------------------------------------------------------------------
+
+/// Our model with eq. 19 evaluated step by step (the "LTI version" of
+/// §4.6 and the streaming-inference path).
+pub struct LmuSequentialLayer {
+    pub spec: LmuSpec,
+    pub params: LmuParams,
+    abar_t: Tensor,
+    /// B̄ as a (1, d) row for rank-1 updates
+    bbar_row: Tensor,
+}
+
+impl LmuSequentialLayer {
+    pub fn new(spec: LmuSpec, store: &mut ParamStore, rng: &mut Rng, prefix: &str) -> Self {
+        let dn = DelayNetwork::new(spec.d, spec.theta);
+        let abar_t = dn.abar_f32.transpose2();
+        let bbar_row = Tensor::new(&[1, spec.d], dn.bbar_f32.clone());
+        let params = LmuParams::init(&spec, store, rng, prefix);
+        LmuSequentialLayer { spec, params, abar_t, bbar_row }
+    }
+
+    /// Share parameters with a parallel layer (for equivalence tests and
+    /// train-parallel / serve-recurrent deployments).
+    pub fn with_params(spec: LmuSpec, params: LmuParams) -> Self {
+        let dn = DelayNetwork::new(spec.d, spec.theta);
+        let abar_t = dn.abar_f32.transpose2();
+        let bbar_row = Tensor::new(&[1, spec.d], dn.bbar_f32.clone());
+        LmuSequentialLayer { spec, params, abar_t, bbar_row }
+    }
+
+    /// Full sequential forward.  x time-major (n·B, dx).
+    /// Returns time-major (n·B, hidden).
+    pub fn forward_all(
+        &self,
+        g: &mut Graph,
+        store: &ParamStore,
+        x: NodeId,
+        batch: usize,
+        n: usize,
+    ) -> NodeId {
+        let (du, d) = (self.spec.du, self.spec.d);
+        let ux = g.param(store, self.params.ux);
+        let bu = g.param(store, self.params.bu);
+        let u_aff = g.affine(x, ux, bu);
+        let u_full = if self.spec.nonlin_u { g.tanh(u_aff) } else { u_aff }; // (n·B, du)
+
+        let abar_t = g.input(self.abar_t.clone());
+        let bbar_row = g.input(self.bbar_row.clone());
+        // memory in (B·du, d) layout so the step is one matmul
+        let mut m = g.input(Tensor::zeros(&[batch * du, d]));
+        let mut per_step: Vec<NodeId> = Vec::with_capacity(n);
+        for t in 0..n {
+            let u_t = g.slice_rows(u_full, t * batch, (t + 1) * batch); // (B, du)
+            let u_col = g.reshape(u_t, &[batch * du, 1]);
+            let drive = g.matmul(u_col, bbar_row); // (B·du, d)
+            let decay = g.matmul(m, abar_t);
+            m = g.add(decay, drive);
+            per_step.push(g.reshape(m, &[batch, du * d]));
+        }
+        let m_all = g.concat_rows(&per_step); // (n·B, du·d) time-major
+
+        let wm = g.param(store, self.params.wm);
+        let wx = g.param(store, self.params.wx);
+        let bo = g.param(store, self.params.bo);
+        let mm = g.matmul(m_all, wm);
+        let xx = g.matmul(x, wx);
+        let s = g.add(mm, xx);
+        let s = g.add_row(s, bo);
+        if self.spec.nonlin_o {
+            g.tanh(s)
+        } else {
+            s
+        }
+    }
+
+    /// Sequential forward returning only the final step's output (B, hidden).
+    pub fn forward_last(
+        &self,
+        g: &mut Graph,
+        store: &ParamStore,
+        x: NodeId,
+        batch: usize,
+        n: usize,
+    ) -> NodeId {
+        let (du, d) = (self.spec.du, self.spec.d);
+        let ux = g.param(store, self.params.ux);
+        let bu = g.param(store, self.params.bu);
+        let u_aff = g.affine(x, ux, bu);
+        let u_full = if self.spec.nonlin_u { g.tanh(u_aff) } else { u_aff };
+
+        let abar_t = g.input(self.abar_t.clone());
+        let bbar_row = g.input(self.bbar_row.clone());
+        let mut m = g.input(Tensor::zeros(&[batch * du, d]));
+        for t in 0..n {
+            let u_t = g.slice_rows(u_full, t * batch, (t + 1) * batch);
+            let u_col = g.reshape(u_t, &[batch * du, 1]);
+            let drive = g.matmul(u_col, bbar_row);
+            let decay = g.matmul(m, abar_t);
+            m = g.add(decay, drive);
+        }
+        let m_last = g.reshape(m, &[batch, du * d]);
+        let x_last = g.slice_rows(x, (n - 1) * batch, n * batch);
+
+        let wm = g.param(store, self.params.wm);
+        let wx = g.param(store, self.params.wx);
+        let bo = g.param(store, self.params.bo);
+        let mm = g.matmul(m_last, wm);
+        let xx = g.matmul(x_last, wx);
+        let s = g.add(mm, xx);
+        let s = g.add_row(s, bo);
+        if self.spec.nonlin_o {
+            g.tanh(s)
+        } else {
+            s
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Original LMU (eqs. 15-17)
+// ---------------------------------------------------------------------------
+
+/// The original LMU cell: scalar DN input computed from x, h, and m
+/// (eq. 15), DN update (eq. 16), nonlinear hidden state (eq. 17).
+/// Three recurrent dependencies — cannot be parallelized.
+pub struct LmuOriginalCell {
+    pub dx: usize,
+    pub dh: usize,
+    pub d: usize,
+    pub ex: ParamId,
+    pub eh: ParamId,
+    pub em: ParamId,
+    pub wx: ParamId,
+    pub wh: ParamId,
+    pub wm: ParamId,
+    abar_t: Tensor,
+    bbar_row: Tensor,
+}
+
+impl LmuOriginalCell {
+    pub fn new(
+        dx: usize,
+        dh: usize,
+        d: usize,
+        theta: f64,
+        store: &mut ParamStore,
+        rng: &mut Rng,
+        prefix: &str,
+    ) -> Self {
+        let dn = DelayNetwork::new(d, theta);
+        LmuOriginalCell {
+            dx,
+            dh,
+            d,
+            ex: store.add(&format!("{prefix}.ex"), Tensor::glorot(dx, 1, rng)),
+            eh: store.add(&format!("{prefix}.eh"), Tensor::glorot(dh, 1, rng)),
+            em: store.add(&format!("{prefix}.em"), Tensor::glorot(d, 1, rng)),
+            wx: store.add(&format!("{prefix}.Wx"), Tensor::glorot(dx, dh, rng)),
+            wh: store.add(&format!("{prefix}.Wh"), Tensor::recurrent_init(dh, rng)),
+            wm: store.add(&format!("{prefix}.Wm"), Tensor::glorot(d, dh, rng)),
+            abar_t: dn.abar_f32.transpose2(),
+            bbar_row: Tensor::new(&[1, d], dn.bbar_f32.clone()),
+        }
+    }
+
+    /// x time-major (n·B, dx) -> final hidden state (B, dh).
+    pub fn forward_last(
+        &self,
+        g: &mut Graph,
+        store: &ParamStore,
+        x: NodeId,
+        batch: usize,
+        n: usize,
+    ) -> NodeId {
+        let ex = g.param(store, self.ex);
+        let eh = g.param(store, self.eh);
+        let em = g.param(store, self.em);
+        let wx = g.param(store, self.wx);
+        let wh = g.param(store, self.wh);
+        let wm = g.param(store, self.wm);
+        let abar_t = g.input(self.abar_t.clone());
+        let bbar_row = g.input(self.bbar_row.clone());
+
+        let mut h = g.input(Tensor::zeros(&[batch, self.dh]));
+        let mut m = g.input(Tensor::zeros(&[batch, self.d]));
+        for t in 0..n {
+            let x_t = g.slice_rows(x, t * batch, (t + 1) * batch);
+            // eq. 15: u_t = e_xᵀ x + e_hᵀ h_{t-1} + e_mᵀ m_{t-1}
+            let uxp = g.matmul(x_t, ex);
+            let uhp = g.matmul(h, eh);
+            let ump = g.matmul(m, em);
+            let s1 = g.add(uxp, uhp);
+            let u_t = g.add(s1, ump); // (B, 1)
+            // eq. 16
+            let drive = g.matmul(u_t, bbar_row);
+            let decay = g.matmul(m, abar_t);
+            m = g.add(decay, drive);
+            // eq. 17: h = f(Wx x + Wh h + Wm m)
+            let hx = g.matmul(x_t, wx);
+            let hh = g.matmul(h, wh);
+            let hm = g.matmul(m, wm);
+            let s2 = g.add(hx, hh);
+            let s3 = g.add(s2, hm);
+            h = g.tanh(s3);
+        }
+        h
+    }
+
+    /// x time-major (n·B, dx) -> all hidden states, time-major (n·B, dh).
+    pub fn forward_all(
+        &self,
+        g: &mut Graph,
+        store: &ParamStore,
+        x: NodeId,
+        batch: usize,
+        n: usize,
+    ) -> NodeId {
+        let ex = g.param(store, self.ex);
+        let eh = g.param(store, self.eh);
+        let em = g.param(store, self.em);
+        let wx = g.param(store, self.wx);
+        let wh = g.param(store, self.wh);
+        let wm = g.param(store, self.wm);
+        let abar_t = g.input(self.abar_t.clone());
+        let bbar_row = g.input(self.bbar_row.clone());
+
+        let mut h = g.input(Tensor::zeros(&[batch, self.dh]));
+        let mut m = g.input(Tensor::zeros(&[batch, self.d]));
+        let mut steps = Vec::with_capacity(n);
+        for t in 0..n {
+            let x_t = g.slice_rows(x, t * batch, (t + 1) * batch);
+            let uxp = g.matmul(x_t, ex);
+            let uhp = g.matmul(h, eh);
+            let ump = g.matmul(m, em);
+            let s1 = g.add(uxp, uhp);
+            let u_t = g.add(s1, ump);
+            let drive = g.matmul(u_t, bbar_row);
+            let decay = g.matmul(m, abar_t);
+            m = g.add(decay, drive);
+            let hx = g.matmul(x_t, wx);
+            let hh = g.matmul(h, wh);
+            let hm = g.matmul(m, wm);
+            let s2 = g.add(hx, hh);
+            let s3 = g.add(s2, hm);
+            h = g.tanh(s3);
+            steps.push(h);
+        }
+        g.concat_rows(&steps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layers::to_time_major;
+
+    fn spec_small() -> LmuSpec {
+        LmuSpec::new(3, 2, 8, 24.0, 5)
+    }
+
+    #[test]
+    fn parallel_and_sequential_agree_all_states() {
+        // identical parameters => identical outputs (train-parallel /
+        // infer-recurrent equivalence, the paper's central claim)
+        let mut rng = Rng::new(0);
+        let mut store = ParamStore::new();
+        let (batch, n) = (3usize, 24usize);
+        let par = LmuParallelLayer::new(spec_small(), n, &mut store, &mut rng, "lmu");
+        let seq = LmuSequentialLayer::with_params(
+            spec_small(),
+            LmuParams {
+                ux: par.params.ux,
+                bu: par.params.bu,
+                wm: par.params.wm,
+                wx: par.params.wx,
+                bo: par.params.bo,
+            },
+        );
+
+        let x_sm = Tensor::randn(&[batch * n, 3], 1.0, &mut rng);
+        let x_tm = to_time_major(&x_sm, batch, n);
+
+        let mut g1 = Graph::new();
+        let xi = g1.input(x_sm.clone());
+        let o_par = par.forward_all(&mut g1, &store, xi, batch);
+
+        let mut g2 = Graph::new();
+        let xi2 = g2.input(x_tm);
+        let o_seq = seq.forward_all(&mut g2, &store, xi2, batch, n);
+
+        // compare time-major vs sample-major
+        let par_v = g1.value(o_par);
+        let seq_v = g2.value(o_seq);
+        let h = 5;
+        let mut max_err = 0.0f32;
+        for b in 0..batch {
+            for t in 0..n {
+                for j in 0..h {
+                    let pv = par_v.data()[(b * n + t) * h + j];
+                    let sv = seq_v.data()[(t * batch + b) * h + j];
+                    max_err = max_err.max((pv - sv).abs());
+                }
+            }
+        }
+        assert!(max_err < 2e-4, "parallel/sequential diverge: {max_err}");
+    }
+
+    #[test]
+    fn parallel_and_sequential_agree_last_state() {
+        let mut rng = Rng::new(1);
+        let mut store = ParamStore::new();
+        let (batch, n) = (2usize, 16usize);
+        let par = LmuParallelLayer::new(spec_small(), n, &mut store, &mut rng, "lmu");
+        let seq = LmuSequentialLayer::with_params(
+            spec_small(),
+            LmuParams {
+                ux: par.params.ux,
+                bu: par.params.bu,
+                wm: par.params.wm,
+                wx: par.params.wx,
+                bo: par.params.bo,
+            },
+        );
+        let x_sm = Tensor::randn(&[batch * n, 3], 1.0, &mut rng);
+        let x_tm = to_time_major(&x_sm, batch, n);
+        let x_last = crate::layers::last_steps(&x_sm, batch, n);
+
+        let mut g1 = Graph::new();
+        let xi = g1.input(x_sm);
+        let xl = g1.input(x_last);
+        let o_par = par.forward_last(&mut g1, &store, xi, xl, batch);
+
+        let mut g2 = Graph::new();
+        let xi2 = g2.input(x_tm);
+        let o_seq = seq.forward_last(&mut g2, &store, xi2, batch, n);
+
+        let err = g1.value(o_par).max_abs_diff(g2.value(o_seq));
+        assert!(err < 2e-4, "last-state diverge: {err}");
+    }
+
+    #[test]
+    fn parallel_layer_trains() {
+        // a few Adam-free GD steps reduce a regression loss
+        let mut rng = Rng::new(2);
+        let mut store = ParamStore::new();
+        let (batch, n) = (4usize, 12usize);
+        let layer = LmuParallelLayer::new(spec_small(), n, &mut store, &mut rng, "lmu");
+        let x = Tensor::randn(&[batch * n, 3], 1.0, &mut rng);
+        let x_last = crate::layers::last_steps(&x, batch, n);
+        let target = Tensor::randn(&[batch, 5], 0.5, &mut rng);
+        let mut opt = crate::optim::Adam::new(0.02);
+        let mut losses = Vec::new();
+        for _ in 0..60 {
+            let mut g = Graph::new();
+            let xi = g.input(x.clone());
+            let xl = g.input(x_last.clone());
+            let o = layer.forward_last(&mut g, &store, xi, xl, batch);
+            let loss = g.mse(o, &target);
+            g.backward(loss);
+            losses.push(g.value(loss).item());
+            let grads = g.param_grads();
+            crate::optim::Optimizer::step(&mut opt, &mut store, &grads);
+        }
+        assert!(
+            losses.last().unwrap() < &(losses[0] * 0.5),
+            "loss did not halve: {:?} -> {:?}",
+            losses[0],
+            losses.last().unwrap()
+        );
+    }
+
+    #[test]
+    fn original_cell_shapes_and_grads() {
+        let mut rng = Rng::new(3);
+        let mut store = ParamStore::new();
+        let (batch, n, dx, dh, d) = (2usize, 10usize, 3usize, 6usize, 4usize);
+        let cell = LmuOriginalCell::new(dx, dh, d, n as f64, &mut store, &mut rng, "orig");
+        let x = Tensor::randn(&[n * batch, dx], 1.0, &mut rng);
+        let mut g = Graph::new();
+        let xi = g.input(x);
+        let h = cell.forward_last(&mut g, &store, xi, batch, n);
+        assert_eq!(g.value(h).shape(), &[batch, dh]);
+        let sq = g.mul(h, h);
+        let loss = g.mean_all(sq);
+        g.backward(loss);
+        let grads = g.param_grads();
+        assert_eq!(grads.len(), 6, "all six param groups get gradients");
+        for (pid, gr) in grads {
+            assert!(
+                gr.data().iter().all(|v| v.is_finite()),
+                "non-finite grad for {}",
+                store.name(pid)
+            );
+            assert!(gr.abs_max() > 0.0, "zero grad for {}", store.name(pid));
+        }
+    }
+
+    #[test]
+    fn dn_only_matches_delay_network_last() {
+        let mut rng = Rng::new(4);
+        let mut store = ParamStore::new();
+        let (batch, n, d) = (2usize, 20usize, 6usize);
+        let spec = LmuSpec { dx: 3, du: 3, d, theta: n as f64, hidden: 1, nonlin_u: false, nonlin_o: false };
+        let layer = LmuParallelLayer::new(spec, n, &mut store, &mut rng, "dn");
+        let x = Tensor::randn(&[batch * n, 3], 1.0, &mut rng);
+        let mut g = Graph::new();
+        let xi = g.input(x.clone());
+        let m = layer.dn_only_last(&mut g, xi, batch);
+        assert_eq!(g.value(m).shape(), &[batch, 3 * d]);
+        // cross-check against DelayNetwork::parallel_last per sample
+        let dn = DelayNetwork::new(d, n as f64);
+        for b in 0..batch {
+            let xb = x.slice_rows(b * n, (b + 1) * n);
+            let last = dn.parallel_last(&xb); // (d, du)
+            for c in 0..3 {
+                for s in 0..d {
+                    let got = g.value(m).data()[b * 3 * d + c * d + s];
+                    let expect = last.data()[s * 3 + c];
+                    assert!((got - expect).abs() < 2e-4);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,227 @@
+//! LSTM baseline (Hochreiter & Schmidhuber 1997) — the model the paper
+//! compares against on every task.  Standard formulation with a fused
+//! gate matmul and forget-gate bias init of 1.
+
+use crate::autograd::{Graph, NodeId, ParamId, ParamStore};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// A single LSTM layer with fused gates: [i, f, g, o] = x Wx + h Wh + b.
+pub struct LstmLayer {
+    pub dx: usize,
+    pub dh: usize,
+    pub wx: ParamId,
+    pub wh: ParamId,
+    pub b: ParamId,
+}
+
+impl LstmLayer {
+    pub fn new(dx: usize, dh: usize, store: &mut ParamStore, rng: &mut Rng, prefix: &str) -> Self {
+        let wx = store.add(&format!("{prefix}.Wx"), Tensor::glorot(dx, 4 * dh, rng));
+        let wh = store.add(&format!("{prefix}.Wh"), {
+            let mut t = Tensor::recurrent_init(dh, rng);
+            // widen to (dh, 4dh)
+            let mut full = Tensor::glorot(dh, 4 * dh, rng);
+            // keep the recurrent block scaling for the candidate gate region
+            for i in 0..dh {
+                for j in 0..dh {
+                    full.data_mut()[i * 4 * dh + 2 * dh + j] = t.data()[i * dh + j];
+                }
+            }
+            t = full;
+            t
+        });
+        // forget gate bias = 1 (standard trick for gradient flow)
+        let mut bias = Tensor::zeros(&[4 * dh]);
+        for j in dh..2 * dh {
+            bias.data_mut()[j] = 1.0;
+        }
+        let b = store.add(&format!("{prefix}.b"), bias);
+        LstmLayer { dx, dh, wx, wh, b }
+    }
+
+    fn step(
+        &self,
+        g: &mut Graph,
+        x_t: NodeId,
+        h: NodeId,
+        c: NodeId,
+        wx: NodeId,
+        wh: NodeId,
+        b: NodeId,
+    ) -> (NodeId, NodeId) {
+        let dh = self.dh;
+        let gx = g.matmul(x_t, wx);
+        let gh = g.matmul(h, wh);
+        let s = g.add(gx, gh);
+        let gates = g.add_row(s, b); // (B, 4dh)
+        let i_g = {
+            let sl = g.slice_cols(gates, 0, dh);
+            g.sigmoid(sl)
+        };
+        let f_g = {
+            let sl = g.slice_cols(gates, dh, 2 * dh);
+            g.sigmoid(sl)
+        };
+        let g_g = {
+            let sl = g.slice_cols(gates, 2 * dh, 3 * dh);
+            g.tanh(sl)
+        };
+        let o_g = {
+            let sl = g.slice_cols(gates, 3 * dh, 4 * dh);
+            g.sigmoid(sl)
+        };
+        let fc = g.mul(f_g, c);
+        let ig = g.mul(i_g, g_g);
+        let c_new = g.add(fc, ig);
+        let tc = g.tanh(c_new);
+        let h_new = g.mul(o_g, tc);
+        (h_new, c_new)
+    }
+
+    /// x time-major (n·B, dx) -> final hidden state (B, dh).
+    pub fn forward_last(
+        &self,
+        g: &mut Graph,
+        store: &ParamStore,
+        x: NodeId,
+        batch: usize,
+        n: usize,
+    ) -> NodeId {
+        let wx = g.param(store, self.wx);
+        let wh = g.param(store, self.wh);
+        let b = g.param(store, self.b);
+        let mut h = g.input(Tensor::zeros(&[batch, self.dh]));
+        let mut c = g.input(Tensor::zeros(&[batch, self.dh]));
+        for t in 0..n {
+            let x_t = g.slice_rows(x, t * batch, (t + 1) * batch);
+            let (h2, c2) = self.step(g, x_t, h, c, wx, wh, b);
+            h = h2;
+            c = c2;
+        }
+        h
+    }
+
+    /// x time-major (n·B, dx) -> all hidden states, time-major (n·B, dh).
+    pub fn forward_all(
+        &self,
+        g: &mut Graph,
+        store: &ParamStore,
+        x: NodeId,
+        batch: usize,
+        n: usize,
+    ) -> NodeId {
+        let wx = g.param(store, self.wx);
+        let wh = g.param(store, self.wh);
+        let b = g.param(store, self.b);
+        let mut h = g.input(Tensor::zeros(&[batch, self.dh]));
+        let mut c = g.input(Tensor::zeros(&[batch, self.dh]));
+        let mut steps = Vec::with_capacity(n);
+        for t in 0..n {
+            let x_t = g.slice_rows(x, t * batch, (t + 1) * batch);
+            let (h2, c2) = self.step(g, x_t, h, c, wx, wh, b);
+            h = h2;
+            c = c2;
+            steps.push(h);
+        }
+        g.concat_rows(&steps)
+    }
+
+    /// Parameter count: 4·dh·(dx + dh + 1).
+    pub fn num_params(&self) -> usize {
+        4 * self.dh * (self.dx + self.dh + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_param_count() {
+        let mut rng = Rng::new(0);
+        let mut store = ParamStore::new();
+        let lstm = LstmLayer::new(3, 8, &mut store, &mut rng, "lstm");
+        assert_eq!(lstm.num_params(), 4 * 8 * (3 + 8 + 1));
+        assert_eq!(store.num_scalars(), lstm.num_params());
+        let (batch, n) = (2, 5);
+        let x = Tensor::randn(&[n * batch, 3], 1.0, &mut rng);
+        let mut g = Graph::new();
+        let xi = g.input(x);
+        let h = lstm.forward_last(&mut g, &store, xi, batch, n);
+        assert_eq!(g.value(h).shape(), &[batch, 8]);
+        let all = lstm.forward_all(&mut g, &store, xi, batch, n);
+        assert_eq!(g.value(all).shape(), &[n * batch, 8]);
+    }
+
+    #[test]
+    fn hidden_state_bounded() {
+        // |h| <= 1 by construction (o · tanh(c))
+        let mut rng = Rng::new(1);
+        let mut store = ParamStore::new();
+        let lstm = LstmLayer::new(2, 4, &mut store, &mut rng, "lstm");
+        let (batch, n) = (3, 50);
+        let x = Tensor::randn(&[n * batch, 2], 3.0, &mut rng);
+        let mut g = Graph::new();
+        let xi = g.input(x);
+        let h = lstm.forward_last(&mut g, &store, xi, batch, n);
+        assert!(g.value(h).abs_max() <= 1.0 + 1e-6);
+    }
+
+    #[test]
+    fn gradients_flow_to_all_params() {
+        let mut rng = Rng::new(2);
+        let mut store = ParamStore::new();
+        let lstm = LstmLayer::new(3, 4, &mut store, &mut rng, "lstm");
+        let (batch, n) = (2, 8);
+        let x = Tensor::randn(&[n * batch, 3], 1.0, &mut rng);
+        let mut g = Graph::new();
+        let xi = g.input(x);
+        let h = lstm.forward_last(&mut g, &store, xi, batch, n);
+        let sq = g.mul(h, h);
+        let loss = g.mean_all(sq);
+        g.backward(loss);
+        let grads = g.param_grads();
+        assert_eq!(grads.len(), 3);
+        for (pid, gr) in grads {
+            assert!(gr.abs_max() > 0.0, "zero grad for {}", store.name(pid));
+            assert!(gr.data().iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn lstm_learns_to_remember_first_token() {
+        // task: output sign of the first input — requires memory
+        let mut rng = Rng::new(3);
+        let mut store = ParamStore::new();
+        let lstm = LstmLayer::new(1, 8, &mut store, &mut rng, "lstm");
+        let wout = store.add("out.w", Tensor::glorot(8, 2, &mut rng));
+        let bout = store.add("out.b", Tensor::zeros(&[2]));
+        let (batch, n) = (8, 12);
+        let mut opt = crate::optim::Adam::new(0.01);
+        let mut losses = Vec::new();
+        for it in 0..250 {
+            let mut data = Tensor::randn(&[n * batch, 1], 1.0, &mut rng);
+            let mut labels = vec![0usize; batch];
+            for b in 0..batch {
+                let first = if (it + b) % 2 == 0 { 1.0 } else { -1.0 };
+                data.data_mut()[b] = first; // time-major row t=0
+                labels[b] = if first > 0.0 { 1 } else { 0 };
+            }
+            let mut g = Graph::new();
+            let xi = g.input(data);
+            let h = lstm.forward_last(&mut g, &store, xi, batch, n);
+            let wo = g.param(&store, wout);
+            let bo = g.param(&store, bout);
+            let logits = g.affine(h, wo, bo);
+            let loss = g.softmax_xent(logits, &labels);
+            g.backward(loss);
+            losses.push(g.value(loss).item());
+            let grads = g.param_grads();
+            crate::optim::Optimizer::step(&mut opt, &mut store, &grads);
+        }
+        let early: f32 = losses[..10].iter().sum::<f32>() / 10.0;
+        let late: f32 = losses[losses.len() - 10..].iter().sum::<f32>() / 10.0;
+        assert!(late < early * 0.5, "LSTM failed to learn: {early} -> {late}");
+    }
+}

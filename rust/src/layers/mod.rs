@@ -1,0 +1,97 @@
+//! Model layers: the three LMU variants under comparison (original
+//! eq. 15–17, our-model sequential LTI eq. 18–20, our-model parallel
+//! eq. 24/25/26), the LSTM baseline, and the feed-forward building blocks
+//! (dense / highway / embedding) the paper's NLP architectures use.
+//!
+//! Sequence layout conventions:
+//!  * parallel layers take **sample-major** rows `(B·n, dx)` (row `b·n+t`);
+//!  * sequential cells take **time-major** rows `(n·B, dx)` (row `t·B+b`)
+//!    so each step is a contiguous row slice.
+//! `to_time_major` / `to_sample_major` convert.
+
+pub mod attention;
+pub mod dense;
+pub mod lmu;
+pub mod lstm;
+
+pub use attention::SelfAttention;
+pub use dense::{Activation, Dense, Embedding, Highway};
+pub use lmu::{LmuOriginalCell, LmuParallelLayer, LmuSequentialLayer};
+pub use lstm::LstmLayer;
+
+use crate::tensor::Tensor;
+
+/// (B, n, f) sample-major rows -> (n, B, f) time-major rows.
+pub fn to_time_major(x: &Tensor, batch: usize, n: usize) -> Tensor {
+    let f = x.cols();
+    assert_eq!(x.rows(), batch * n);
+    let mut out = Tensor::zeros(&[n * batch, f]);
+    for b in 0..batch {
+        for t in 0..n {
+            let src = &x.data()[(b * n + t) * f..(b * n + t + 1) * f];
+            out.data_mut()[(t * batch + b) * f..(t * batch + b + 1) * f].copy_from_slice(src);
+        }
+    }
+    out
+}
+
+/// (n, B, f) time-major rows -> (B, n, f) sample-major rows.
+pub fn to_sample_major(x: &Tensor, batch: usize, n: usize) -> Tensor {
+    let f = x.cols();
+    assert_eq!(x.rows(), batch * n);
+    let mut out = Tensor::zeros(&[batch * n, f]);
+    for t in 0..n {
+        for b in 0..batch {
+            let src = &x.data()[(t * batch + b) * f..(t * batch + b + 1) * f];
+            out.data_mut()[(b * n + t) * f..(b * n + t + 1) * f].copy_from_slice(src);
+        }
+    }
+    out
+}
+
+/// Extract the last timestep rows from a sample-major (B·n, f) tensor.
+pub fn last_steps(x: &Tensor, batch: usize, n: usize) -> Tensor {
+    let f = x.cols();
+    let mut out = Tensor::zeros(&[batch, f]);
+    for b in 0..batch {
+        let src = &x.data()[(b * n + n - 1) * f..(b * n + n) * f];
+        out.data_mut()[b * f..(b + 1) * f].copy_from_slice(src);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn layout_roundtrip() {
+        let mut rng = Rng::new(0);
+        let (b, n, f) = (3, 5, 2);
+        let x = Tensor::randn(&[b * n, f], 1.0, &mut rng);
+        let tm = to_time_major(&x, b, n);
+        let back = to_sample_major(&tm, b, n);
+        assert!(x.allclose(&back, 0.0));
+    }
+
+    #[test]
+    fn time_major_places_rows() {
+        // sample-major row (b=1, t=0) must land at time-major row (t=0, b=1)
+        let (b, n, f) = (2, 3, 1);
+        let x = Tensor::new(&[b * n, f], vec![0., 1., 2., 10., 11., 12.]);
+        let tm = to_time_major(&x, b, n);
+        assert_eq!(tm.data(), &[0., 10., 1., 11., 2., 12.]);
+    }
+
+    #[test]
+    fn last_steps_extracts_tail() {
+        let (b, n, f) = (2, 3, 2);
+        let x = Tensor::new(
+            &[b * n, f],
+            (0..12).map(|i| i as f32).collect::<Vec<_>>(),
+        );
+        let last = last_steps(&x, b, n);
+        assert_eq!(last.data(), &[4., 5., 10., 11.]);
+    }
+}

@@ -1,0 +1,41 @@
+//! # plmu — Parallelized Legendre Memory Unit training & serving
+//!
+//! A Rust + JAX + Pallas reproduction of *“Parallelizing Legendre Memory
+//! Unit Training”* (Chilkuri & Eliasmith, ICML 2021).
+//!
+//! The paper's observation: the LMU's memory is a **frozen linear
+//! time-invariant system** (the Delay Network), so its recurrence
+//! `m_t = Ā m_{t-1} + B̄ u_t` can be *solved* — evaluated as a causal
+//! convolution with the impulse response — making training parallel over
+//! the sequence dimension while an exactly-equivalent recurrent form
+//! serves streaming inference.
+//!
+//! Architecture (three layers, Python never on the request path):
+//!  * L1: Pallas chunked-scan kernel (`python/compile/kernels/`);
+//!  * L2: JAX model fwd/bwd (`python/compile/model.py`), AOT-lowered once
+//!    to HLO text artifacts;
+//!  * L3: this crate — the training coordinator, the streaming inference
+//!    server, a PJRT runtime that executes the artifacts, and a complete
+//!    native substrate (tensor/FFT/autograd/data/optim) used for the
+//!    paper's benchmark reproductions.
+//!
+//! See DESIGN.md for the experiment index and EXPERIMENTS.md for results.
+
+pub mod autograd;
+pub mod benchlib;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dn;
+pub mod fft;
+pub mod layers;
+pub mod linalg;
+pub mod metrics;
+pub mod optim;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+pub use tensor::Tensor;

@@ -1,0 +1,379 @@
+//! f64 dense linear algebra used by the Delay Network construction:
+//! matrix exponential (ZOH discretization), LU solves, matrix powers.
+//!
+//! These run once at model-build time (A and B are frozen during training,
+//! paper §3.3), so clarity wins over speed; f64 because `expm` of the DN's
+//! stiff A matrix at large d/θ loses digits in f32.
+
+/// Dense row-major f64 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = rows[0].len();
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c);
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul dims");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for p in 0..self.cols {
+                let a = self.at(i, p);
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out.data[i * out.cols + j] += a * other.at(p, j);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows)
+            .map(|i| {
+                let row = &self.data[i * self.cols..(i + 1) * self.cols];
+                row.iter().zip(x).map(|(a, b)| a * b).sum()
+            })
+            .collect()
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect(),
+        }
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        Mat { rows: self.rows, cols: self.cols, data: self.data.iter().map(|v| v * s).collect() }
+    }
+
+    /// 1-norm (max absolute column sum) — used by expm scaling.
+    pub fn norm_1(&self) -> f64 {
+        (0..self.cols)
+            .map(|j| (0..self.rows).map(|i| self.at(i, j).abs()).sum::<f64>())
+            .fold(0.0, f64::max)
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, v| m.max(v.abs()))
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.set(j, i, self.at(i, j));
+            }
+        }
+        out
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&v| v as f32).collect()
+    }
+
+    /// A^k by repeated squaring.
+    pub fn pow(&self, mut k: usize) -> Mat {
+        assert_eq!(self.rows, self.cols);
+        let mut result = Mat::eye(self.rows);
+        let mut base = self.clone();
+        while k > 0 {
+            if k & 1 == 1 {
+                result = result.matmul(&base);
+            }
+            base = base.matmul(&base);
+            k >>= 1;
+        }
+        result
+    }
+}
+
+/// LU decomposition with partial pivoting.  Returns (LU, perm, sign).
+pub fn lu_decompose(a: &Mat) -> Option<(Mat, Vec<usize>, f64)> {
+    assert_eq!(a.rows, a.cols, "LU requires square");
+    let n = a.rows;
+    let mut lu = a.clone();
+    let mut perm: Vec<usize> = (0..n).collect();
+    let mut sign = 1.0;
+    for k in 0..n {
+        // pivot
+        let mut p = k;
+        let mut best = lu.at(k, k).abs();
+        for i in k + 1..n {
+            let v = lu.at(i, k).abs();
+            if v > best {
+                best = v;
+                p = i;
+            }
+        }
+        if best < 1e-300 {
+            return None; // singular
+        }
+        if p != k {
+            for j in 0..n {
+                let tmp = lu.at(k, j);
+                lu.set(k, j, lu.at(p, j));
+                lu.set(p, j, tmp);
+            }
+            perm.swap(k, p);
+            sign = -sign;
+        }
+        let pivot = lu.at(k, k);
+        for i in k + 1..n {
+            let f = lu.at(i, k) / pivot;
+            lu.set(i, k, f);
+            for j in k + 1..n {
+                let v = lu.at(i, j) - f * lu.at(k, j);
+                lu.set(i, j, v);
+            }
+        }
+    }
+    Some((lu, perm, sign))
+}
+
+/// Solve A x = b via a precomputed LU.
+pub fn lu_solve(lu: &Mat, perm: &[usize], b: &[f64]) -> Vec<f64> {
+    let n = lu.rows;
+    assert_eq!(b.len(), n);
+    let mut x: Vec<f64> = perm.iter().map(|&p| b[p]).collect();
+    // forward substitution (unit lower)
+    for i in 1..n {
+        let mut s = x[i];
+        for j in 0..i {
+            s -= lu.at(i, j) * x[j];
+        }
+        x[i] = s;
+    }
+    // back substitution
+    for i in (0..n).rev() {
+        let mut s = x[i];
+        for j in i + 1..n {
+            s -= lu.at(i, j) * x[j];
+        }
+        x[i] = s / lu.at(i, i);
+    }
+    x
+}
+
+/// Solve A X = B for matrix B.
+pub fn solve_mat(a: &Mat, b: &Mat) -> Option<Mat> {
+    let (lu, perm, _) = lu_decompose(a)?;
+    let n = a.rows;
+    let mut out = Mat::zeros(n, b.cols);
+    for j in 0..b.cols {
+        let col: Vec<f64> = (0..n).map(|i| b.at(i, j)).collect();
+        let x = lu_solve(&lu, &perm, &col);
+        for i in 0..n {
+            out.set(i, j, x[i]);
+        }
+    }
+    Some(out)
+}
+
+/// Matrix inverse.
+pub fn inverse(a: &Mat) -> Option<Mat> {
+    solve_mat(a, &Mat::eye(a.rows))
+}
+
+/// Matrix exponential by Padé-13 with scaling and squaring (Higham 2005,
+/// the algorithm scipy's `expm` uses, without the order-switching).
+pub fn expm(a: &Mat) -> Mat {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    if n == 0 {
+        return Mat::zeros(0, 0);
+    }
+    // scale so that ||A/2^s|| <= theta_13 ~= 5.37
+    const THETA_13: f64 = 5.371920351148152;
+    let norm = a.norm_1();
+    let s = if norm > THETA_13 { ((norm / THETA_13).log2().ceil()) as u32 } else { 0 };
+    let a_scaled = a.scale(1.0 / (1u64 << s) as f64);
+
+    // Pade-13 coefficients
+    const B: [f64; 14] = [
+        64764752532480000.0,
+        32382376266240000.0,
+        7771770303897600.0,
+        1187353796428800.0,
+        129060195264000.0,
+        10559470521600.0,
+        670442572800.0,
+        33522128640.0,
+        1323241920.0,
+        40840800.0,
+        960960.0,
+        16380.0,
+        182.0,
+        1.0,
+    ];
+
+    let i_mat = Mat::eye(n);
+    let a2 = a_scaled.matmul(&a_scaled);
+    let a4 = a2.matmul(&a2);
+    let a6 = a4.matmul(&a2);
+
+    // U = A (A6 (b13 A6 + b11 A4 + b9 A2) + b7 A6 + b5 A4 + b3 A2 + b1 I)
+    let w1 = a6.scale(B[13]).add(&a4.scale(B[11])).add(&a2.scale(B[9]));
+    let w2 = a6.scale(B[7]).add(&a4.scale(B[5])).add(&a2.scale(B[3])).add(&i_mat.scale(B[1]));
+    let u = a_scaled.matmul(&a6.matmul(&w1).add(&w2));
+    // V = A6 (b12 A6 + b10 A4 + b8 A2) + b6 A6 + b4 A4 + b2 A2 + b0 I
+    let z1 = a6.scale(B[12]).add(&a4.scale(B[10])).add(&a2.scale(B[8]));
+    let v = a6.matmul(&z1).add(&a6.scale(B[6])).add(&a4.scale(B[4])).add(&a2.scale(B[2])).add(&i_mat.scale(B[0]));
+
+    // solve (V - U) R = (V + U)
+    let lhs = v.add(&u.scale(-1.0));
+    let rhs = v.add(&u);
+    let mut r = solve_mat(&lhs, &rhs).expect("expm: singular (V - U)");
+    for _ in 0..s {
+        r = r.matmul(&r);
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: &Mat, b: &Mat, tol: f64) {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() < tol, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_rows(&[&[1., 2.], &[3., 4.]]);
+        assert_close(&a.matmul(&Mat::eye(2)), &a, 1e-12);
+    }
+
+    #[test]
+    fn lu_solve_known_system() {
+        // 2x + y = 5 ; x + 3y = 10  -> x = 1, y = 3
+        let a = Mat::from_rows(&[&[2., 1.], &[1., 3.]]);
+        let (lu, p, _) = lu_decompose(&a).unwrap();
+        let x = lu_solve(&lu, &p, &[5., 10.]);
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lu_detects_singular() {
+        let a = Mat::from_rows(&[&[1., 2.], &[2., 4.]]);
+        assert!(lu_decompose(&a).is_none());
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let a = Mat::from_rows(&[&[4., 7., 1.], &[2., 6., 0.], &[1., 0., 3.]]);
+        let ai = inverse(&a).unwrap();
+        assert_close(&a.matmul(&ai), &Mat::eye(3), 1e-10);
+    }
+
+    #[test]
+    fn expm_zero_is_identity() {
+        let z = Mat::zeros(4, 4);
+        assert_close(&expm(&z), &Mat::eye(4), 1e-12);
+    }
+
+    #[test]
+    fn expm_diagonal() {
+        let mut a = Mat::zeros(3, 3);
+        a.set(0, 0, 1.0);
+        a.set(1, 1, -2.0);
+        a.set(2, 2, 0.5);
+        let e = expm(&a);
+        assert!((e.at(0, 0) - 1.0f64.exp()).abs() < 1e-10);
+        assert!((e.at(1, 1) - (-2.0f64).exp()).abs() < 1e-10);
+        assert!((e.at(2, 2) - 0.5f64.exp()).abs() < 1e-10);
+        assert!(e.at(0, 1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn expm_rotation() {
+        // exp([[0, -t], [t, 0]]) = [[cos t, -sin t], [sin t, cos t]]
+        let t = 0.7f64;
+        let a = Mat::from_rows(&[&[0., -t], &[t, 0.]]);
+        let e = expm(&a);
+        assert!((e.at(0, 0) - t.cos()).abs() < 1e-12);
+        assert!((e.at(1, 0) - t.sin()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn expm_additivity_for_commuting() {
+        // exp(A) exp(A) = exp(2A)
+        let a = Mat::from_rows(&[&[0.1, 0.3], &[-0.2, 0.05]]);
+        let e1 = expm(&a);
+        let e2 = expm(&a.scale(2.0));
+        assert_close(&e1.matmul(&e1), &e2, 1e-10);
+    }
+
+    #[test]
+    fn expm_large_norm_uses_squaring() {
+        // matrix with norm >> theta13 must still be accurate:
+        // exp(diag(10, -10))
+        let mut a = Mat::zeros(2, 2);
+        a.set(0, 0, 10.0);
+        a.set(1, 1, -10.0);
+        let e = expm(&a);
+        assert!((e.at(0, 0) - 10.0f64.exp()).abs() / 10.0f64.exp() < 1e-10);
+        assert!((e.at(1, 1) - (-10.0f64).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pow_matches_repeated_matmul() {
+        let a = Mat::from_rows(&[&[0.9, 0.1], &[-0.2, 0.8]]);
+        let mut expect = Mat::eye(2);
+        for _ in 0..7 {
+            expect = expect.matmul(&a);
+        }
+        assert_close(&a.pow(7), &expect, 1e-12);
+        assert_close(&a.pow(0), &Mat::eye(2), 1e-15);
+    }
+
+    #[test]
+    fn norm1_is_max_col_sum() {
+        let a = Mat::from_rows(&[&[1., -4.], &[2., 1.]]);
+        assert_eq!(a.norm_1(), 5.0);
+    }
+}

@@ -1,0 +1,292 @@
+//! `plmu` — the framework launcher.
+//!
+//! Subcommands (first positional argument):
+//!   info      platform + artifact inventory
+//!   train     train a model natively (psmnist)
+//!   train-dp  data-parallel training across worker threads
+//!   serve     demo the streaming-inference server on synthetic traffic
+//!   exec      compile + run an AOT artifact once (sanity check)
+//!
+//! Examples:
+//!   plmu train --task psmnist --model parallel --epochs 3
+//!   plmu train-dp --workers 4 --epochs 2
+//!   plmu serve --sessions 16 --tokens 100 --replicas 2
+//!   plmu exec --artifact dn_fwd_fft
+
+use plmu::autograd::ParamStore;
+use plmu::cli::Args;
+use plmu::coordinator::{
+    data_parallel::{shard_dataset, DataParallelConfig, DataParallelCoordinator},
+    NativeStreamingEngine, ServerConfig, StreamingServer,
+};
+use plmu::data::{PsMnist, SeqDataset};
+use plmu::layers::lmu::{LmuParallelLayer, LmuSpec};
+use plmu::optim::{Adam, LrSchedule};
+use plmu::runtime::{ArtifactInput, Runtime};
+use plmu::train::{fit, FitOptions, ModelKind, SeqClassifier};
+use plmu::util::{human_count, Rng, Timer};
+use plmu::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::new("plmu", "Parallelized LMU training & serving framework")
+        .opt("task", "psmnist", "train: psmnist")
+        .opt("model", "parallel", "architecture: parallel | sequential | original | lstm")
+        .opt("epochs", "2", "training epochs")
+        .opt("batch", "16", "batch size")
+        .opt("lr", "0.001", "Adam learning rate (paper default)")
+        .opt("examples", "128", "number of synthetic examples")
+        .opt("side", "16", "psmnist image side (28 = paper scale)")
+        .opt("d", "32", "DN order")
+        .opt("hidden", "64", "hidden width")
+        .opt("workers", "2", "train-dp: worker threads")
+        .opt("sessions", "8", "serve: concurrent sessions")
+        .opt("tokens", "64", "serve: tokens per session")
+        .opt("replicas", "1", "serve: engine replicas")
+        .opt("artifact", "dn_fwd_fft", "exec: artifact name")
+        .opt("artifacts-dir", "artifacts", "artifact directory")
+        .opt("seed", "0", "RNG seed")
+        .opt("config", "", "TOML config file (configs/*.toml); config values take precedence")
+        .parse();
+
+    let cmd = args.positionals().first().map(|s| s.as_str()).unwrap_or("info");
+    match cmd {
+        "info" => info(&args),
+        "train" => train(&args),
+        "train-dp" => train_dp(&args),
+        "serve" => serve(&args),
+        "exec" => exec(&args),
+        other => {
+            eprintln!("unknown command {other:?}\n{}", args.help_text());
+            std::process::exit(2);
+        }
+    }
+}
+
+fn info(args: &Args) -> anyhow::Result<()> {
+    let client = xla::PjRtClient::cpu()?;
+    println!("plmu — Parallelizing Legendre Memory Unit Training (ICML 2021) reproduction");
+    println!("PJRT platform: {} ({} devices)", client.platform_name(), client.device_count());
+    let dir = std::path::PathBuf::from(args.get("artifacts-dir"));
+    match Runtime::open(&dir) {
+        Ok(rt) => {
+            println!("artifacts in {}:", dir.display());
+            for a in &rt.manifest.artifacts {
+                println!(
+                    "  {:<16} {} inputs, {} outputs",
+                    a.name,
+                    a.inputs.len(),
+                    a.outputs.len()
+                );
+            }
+            println!(
+                "model config: n={} d={} hidden={} n_params={}",
+                rt.manifest.config_usize("n").unwrap_or(0),
+                rt.manifest.config_usize("d").unwrap_or(0),
+                rt.manifest.config_usize("hidden").unwrap_or(0),
+                human_count(rt.manifest.config_usize("n_params").unwrap_or(0)),
+            );
+        }
+        Err(e) => println!("(no artifacts: {e})"),
+    }
+    Ok(())
+}
+
+fn parse_kind(s: &str) -> ModelKind {
+    match s {
+        "parallel" => ModelKind::LmuParallel,
+        "sequential" => ModelKind::LmuSequential,
+        "original" => ModelKind::LmuOriginal,
+        "lstm" => ModelKind::Lstm,
+        other => {
+            eprintln!("unknown model {other}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn psmnist_data(args: &Args) -> (SeqDataset, SeqDataset) {
+    let side = args.get_usize("side");
+    let n = args.get_usize("examples");
+    let task = PsMnist::new(side, 10, args.get_u64("seed"));
+    let (xs, ys) = task.dataset(n, args.get_u64("seed") + 1);
+    SeqDataset::classification(xs, ys).split(0.2)
+}
+
+fn train(args: &Args) -> anyhow::Result<()> {
+    // config file (if given) supplies defaults; explicit CLI flags win
+    let cfg_path = args.get("config");
+    let file_cfg = if cfg_path.is_empty() {
+        None
+    } else {
+        let c = plmu::config::Config::load(std::path::Path::new(&cfg_path))?;
+        println!("loaded config {} ({})", cfg_path, c.str_or("name", "?"));
+        Some(c)
+    };
+    let tc = file_cfg
+        .as_ref()
+        .map(|c| plmu::config::TrainConfig::from_config(c, "train"));
+    let epochs = tc.as_ref().map(|t| t.epochs).unwrap_or(args.get_usize("epochs"));
+    let batch = tc.as_ref().map(|t| t.batch_size).unwrap_or(args.get_usize("batch"));
+    let lr = tc.as_ref().map(|t| t.lr).unwrap_or(args.get_f32("lr"));
+    let model_kind_s = file_cfg
+        .as_ref()
+        .map(|c| c.str_or("model.kind", &args.get("model")))
+        .unwrap_or_else(|| args.get("model"));
+    let d = file_cfg
+        .as_ref()
+        .map(|c| c.usize_or("model.d", args.get_usize("d")))
+        .unwrap_or_else(|| args.get_usize("d"));
+    let hidden = file_cfg
+        .as_ref()
+        .map(|c| c.usize_or("model.hidden", args.get_usize("hidden")))
+        .unwrap_or_else(|| args.get_usize("hidden"));
+    let kind = parse_kind(&model_kind_s);
+    let (train_ds, test_ds) = match args.get("task").as_str() {
+        "psmnist" => psmnist_data(args),
+        other => {
+            eprintln!("task {other} has a dedicated example binary — see examples/");
+            std::process::exit(2);
+        }
+    };
+    let mut store = ParamStore::new();
+    let mut rng = Rng::new(args.get_u64("seed"));
+    let model = SeqClassifier::new(
+        kind,
+        train_ds.seq_len,
+        1,
+        d,
+        hidden,
+        10,
+        &mut store,
+        &mut rng,
+    );
+    println!(
+        "training {kind:?} on {} ({} train / {} test, n={}), {} params",
+        args.get("task"),
+        train_ds.len(),
+        test_ds.len(),
+        train_ds.seq_len,
+        human_count(store.num_scalars())
+    );
+    let mut opt = Adam::new(lr);
+    let schedule = match tc.as_ref().and_then(|t| t.lr_decay_epoch) {
+        Some(e) => LrSchedule::step_decay(lr, e, tc.as_ref().map(|t| t.lr_decay_factor).unwrap_or(0.1)),
+        None => LrSchedule::constant(lr),
+    };
+    let opts = FitOptions {
+        epochs,
+        batch_size: batch,
+        schedule,
+        verbose: true,
+        ..Default::default()
+    };
+    let timer = Timer::start();
+    let res = fit(&model, &mut store, &mut opt, &train_ds, Some(&test_ds), &opts);
+    let acc = res.epochs.last().and_then(|e| e.eval_metric).unwrap_or(0.0);
+    println!("done in {:.1}s — final test accuracy {acc:.2}%", timer.elapsed());
+    Ok(())
+}
+
+fn train_dp(args: &Args) -> anyhow::Result<()> {
+    let workers = args.get_usize("workers");
+    let side = args.get_usize("side");
+    let n = args.get_usize("examples");
+    let seed = args.get_u64("seed");
+    let task = PsMnist::new(side, 10, seed);
+    let (xs, ys) = task.dataset(n, seed + 1);
+    let shards = shard_dataset(xs, ys, workers);
+    let seq_len = side * side;
+    let d = args.get_usize("d");
+    let hidden = args.get_usize("hidden");
+    let factory = move || {
+        let mut store = ParamStore::new();
+        let mut rng = Rng::new(12345);
+        let model =
+            SeqClassifier::new(ModelKind::LmuParallel, seq_len, 1, d, hidden, 10, &mut store, &mut rng);
+        (store, model)
+    };
+    println!("data-parallel training: {workers} workers, {n} examples");
+    let mut opt = Adam::new(args.get_f32("lr"));
+    let cfg = DataParallelConfig {
+        workers,
+        epochs: args.get_usize("epochs"),
+        batch_size: args.get_usize("batch"),
+        grad_clip: Some(5.0),
+        seed,
+    };
+    let timer = Timer::start();
+    let res = DataParallelCoordinator::run(factory, shards, &mut opt, &cfg);
+    println!(
+        "done: {} sync steps in {:.1}s, loss {:.4} -> {:.4}",
+        res.steps,
+        timer.elapsed(),
+        res.step_losses.first().unwrap_or(&f32::NAN),
+        res.step_losses.last().unwrap_or(&f32::NAN)
+    );
+    Ok(())
+}
+
+fn serve(args: &Args) -> anyhow::Result<()> {
+    let sessions = args.get_u64("sessions");
+    let tokens = args.get_usize("tokens");
+    let replicas = args.get_usize("replicas");
+    let mut rng = Rng::new(args.get_u64("seed"));
+    let mut store = ParamStore::new();
+    let spec = LmuSpec::new(1, 1, args.get_usize("d"), 64.0, args.get_usize("hidden"));
+    let layer = LmuParallelLayer::new(spec.clone(), 64, &mut store, &mut rng, "srv");
+    // engines share the trained weights (here: fresh init for the demo)
+    let server = StreamingServer::new(replicas, ServerConfig::default(), || {
+        Box::new(NativeStreamingEngine::from_store(&spec, &layer.params, &store))
+    });
+    println!("serving {sessions} sessions x {tokens} tokens on {replicas} replica(s)");
+    let timer = Timer::start();
+    let server = std::sync::Arc::new(server);
+    let mut handles = Vec::new();
+    for sid in 0..sessions {
+        let s = server.clone();
+        handles.push(std::thread::spawn(move || {
+            for t in 0..tokens {
+                let x = ((t as f32) * 0.1 + sid as f32).sin();
+                let _ = s.router.step_blocking(sid, vec![x]);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall = timer.elapsed();
+    let total = server.router.total_requests();
+    println!(
+        "served {total} steps in {wall:.2}s = {:.0} tokens/s",
+        total as f64 / wall
+    );
+    Ok(())
+}
+
+fn exec(args: &Args) -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from(args.get("artifacts-dir"));
+    let mut rt = Runtime::open(&dir)?;
+    let name = args.get("artifact");
+    let timer = Timer::start();
+    let art = rt.artifact(&name)?;
+    println!("compiled {name} in {:.2}s", timer.elapsed());
+    // synthesize zero inputs of the right shapes
+    let inputs: Vec<ArtifactInput> = art
+        .spec
+        .inputs
+        .iter()
+        .map(|spec| match spec.dtype.as_str() {
+            "i32" => ArtifactInput::I32(vec![0; spec.num_elements()]),
+            _ => ArtifactInput::F32(Tensor::zeros(
+                if spec.dims.is_empty() { &[1] } else { &spec.dims },
+            )),
+        })
+        .collect();
+    let timer = Timer::start();
+    let outs = art.run(&inputs)?;
+    println!("executed in {:.4}s — {} outputs:", timer.elapsed(), outs.len());
+    for (i, o) in outs.iter().enumerate() {
+        println!("  out[{i}]: shape {:?}, |max| {:.4}", o.shape(), o.abs_max());
+    }
+    Ok(())
+}

@@ -1,0 +1,202 @@
+//! Evaluation metrics matching the paper's reporting: accuracy (Tables
+//! 2/4/5), NRMSE (Table 3), bits-per-character (Table 6 text8), and BLEU-4
+//! (Table 6 IWSLT).
+
+use std::collections::HashMap;
+
+/// Classification accuracy in percent.
+pub fn accuracy(pred: &[usize], truth: &[usize]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    assert!(!pred.is_empty());
+    let correct = pred.iter().zip(truth).filter(|(a, b)| a == b).count();
+    100.0 * correct as f64 / pred.len() as f64
+}
+
+/// Normalized root mean squared error, as in the Mackey-Glass experiment:
+/// RMSE / RMS(truth).
+pub fn nrmse(pred: &[f32], truth: &[f32]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    assert!(!pred.is_empty());
+    let mse: f64 = pred
+        .iter()
+        .zip(truth)
+        .map(|(p, t)| ((p - t) as f64).powi(2))
+        .sum::<f64>()
+        / pred.len() as f64;
+    let rms: f64 = (truth.iter().map(|t| (*t as f64).powi(2)).sum::<f64>() / truth.len() as f64).sqrt();
+    mse.sqrt() / rms.max(1e-12)
+}
+
+/// Bits per character from a mean cross-entropy in nats.
+pub fn bpc_from_nats(mean_nll_nats: f64) -> f64 {
+    mean_nll_nats / std::f64::consts::LN_2
+}
+
+/// Corpus BLEU-4 with the standard brevity penalty (uniform 4-gram
+/// weights, add-0 clipping; sentences shorter than 4 tokens fall back to
+/// the available n-gram orders).
+pub fn bleu4(candidates: &[Vec<usize>], references: &[Vec<usize>]) -> f64 {
+    assert_eq!(candidates.len(), references.len());
+    let max_order = 4usize;
+    let mut match_counts = vec![0usize; max_order];
+    let mut total_counts = vec![0usize; max_order];
+    let mut cand_len = 0usize;
+    let mut ref_len = 0usize;
+    for (c, r) in candidates.iter().zip(references) {
+        cand_len += c.len();
+        ref_len += r.len();
+        for order in 1..=max_order {
+            if c.len() < order {
+                continue;
+            }
+            let mut ref_ngrams: HashMap<&[usize], usize> = HashMap::new();
+            if r.len() >= order {
+                for w in r.windows(order) {
+                    *ref_ngrams.entry(w).or_insert(0) += 1;
+                }
+            }
+            for w in c.windows(order) {
+                total_counts[order - 1] += 1;
+                if let Some(cnt) = ref_ngrams.get_mut(w) {
+                    if *cnt > 0 {
+                        *cnt -= 1;
+                        match_counts[order - 1] += 1;
+                    }
+                }
+            }
+        }
+    }
+    // geometric mean of precisions over orders with any candidates
+    let mut log_sum = 0.0f64;
+    let mut orders = 0usize;
+    for k in 0..max_order {
+        if total_counts[k] == 0 {
+            continue;
+        }
+        orders += 1;
+        let p = match_counts[k] as f64 / total_counts[k] as f64;
+        if p == 0.0 {
+            return 0.0;
+        }
+        log_sum += p.ln();
+    }
+    if orders == 0 {
+        return 0.0;
+    }
+    let geo = (log_sum / orders as f64).exp();
+    let bp = if cand_len >= ref_len {
+        1.0
+    } else if cand_len == 0 {
+        0.0
+    } else {
+        (1.0 - ref_len as f64 / cand_len as f64).exp()
+    };
+    100.0 * bp * geo
+}
+
+/// Perplexity from mean NLL in nats.
+pub fn perplexity(mean_nll_nats: f64) -> f64 {
+    mean_nll_nats.exp()
+}
+
+/// Streaming mean/min/max accumulator for loss curves.
+#[derive(Clone, Debug, Default)]
+pub struct Running {
+    pub n: usize,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Running { n: 0, sum: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.n += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[1, 2, 3], &[1, 2, 3]), 100.0);
+        assert_eq!(accuracy(&[1, 0, 3], &[1, 2, 3]), 100.0 * 2.0 / 3.0);
+    }
+
+    #[test]
+    fn nrmse_zero_for_perfect_and_scales() {
+        let truth = [1.0f32, 2.0, 3.0];
+        assert_eq!(nrmse(&truth, &truth), 0.0);
+        // constant offset: rmse = 1, rms(truth) = sqrt(14/3)
+        let pred = [2.0f32, 3.0, 4.0];
+        let expect = 1.0 / (14.0f64 / 3.0).sqrt();
+        assert!((nrmse(&pred, &truth) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bpc_conversion() {
+        assert!((bpc_from_nats(std::f64::consts::LN_2) - 1.0).abs() < 1e-12);
+        assert!((bpc_from_nats(2.0 * std::f64::consts::LN_2) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bleu_perfect_match_is_100() {
+        let c = vec![vec![1usize, 2, 3, 4, 5]];
+        assert!((bleu4(&c, &c) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bleu_no_overlap_is_0() {
+        let c = vec![vec![1usize, 2, 3, 4, 5]];
+        let r = vec![vec![6usize, 7, 8, 9, 10]];
+        assert_eq!(bleu4(&c, &r), 0.0);
+    }
+
+    #[test]
+    fn bleu_partial_ordering() {
+        let reference = vec![vec![1usize, 2, 3, 4, 5, 6]];
+        let close = vec![vec![1usize, 2, 3, 4, 6, 5]];
+        let far = vec![vec![1usize, 9, 3, 8, 6, 7]];
+        let b_close = bleu4(&close, &reference);
+        let b_far = bleu4(&far, &reference);
+        assert!(b_close > b_far, "{b_close} <= {b_far}");
+        assert!(b_close < 100.0);
+    }
+
+    #[test]
+    fn bleu_brevity_penalty_kicks_in() {
+        let reference = vec![vec![1usize, 2, 3, 4, 5, 6, 7, 8]];
+        let full = vec![reference[0].clone()];
+        let short = vec![vec![1usize, 2, 3, 4, 5]];
+        let b_full = bleu4(&full, &reference);
+        let b_short = bleu4(&short, &reference);
+        assert!(b_short < b_full);
+    }
+
+    #[test]
+    fn running_stats() {
+        let mut r = Running::new();
+        for v in [1.0, 2.0, 3.0] {
+            r.push(v);
+        }
+        assert_eq!(r.mean(), 2.0);
+        assert_eq!(r.min, 1.0);
+        assert_eq!(r.max, 3.0);
+    }
+}

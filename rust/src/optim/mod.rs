@@ -1,0 +1,240 @@
+//! Optimizers.  The paper trains everything with Adam at Keras defaults
+//! (lr 1e-3, β₁ 0.9, β₂ 0.999) and only text8 gets a ×0.1 step decay —
+//! both are provided, plus SGD+momentum for ablations.
+
+use crate::autograd::{ParamId, ParamStore};
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+/// Clip a set of gradients to a maximum global L2 norm (in place).
+/// Returns the pre-clip norm.
+pub fn clip_global_norm(grads: &mut [(ParamId, Tensor)], max_norm: f32) -> f32 {
+    let total: f32 = grads.iter().map(|(_, g)| g.sq_norm()).sum::<f32>().sqrt();
+    if total > max_norm && total > 0.0 {
+        let scale = max_norm / total;
+        for (_, g) in grads.iter_mut() {
+            g.map_inplace(|v| v * scale);
+        }
+    }
+    total
+}
+
+pub trait Optimizer {
+    /// Apply one update step given (param, grad) pairs.
+    fn step(&mut self, store: &mut ParamStore, grads: &[(ParamId, Tensor)]);
+    fn set_lr(&mut self, lr: f32);
+    fn lr(&self) -> f32;
+}
+
+/// Adam (Kingma & Ba 2014) with bias correction — the paper's optimizer.
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    t: u64,
+    m: HashMap<ParamId, Tensor>,
+    v: HashMap<ParamId, Tensor>,
+}
+
+impl Adam {
+    /// Keras-default settings, as the paper uses throughout.
+    pub fn new(lr: f32) -> Self {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, t: 0, m: HashMap::new(), v: HashMap::new() }
+    }
+
+    pub fn steps_taken(&self) -> u64 {
+        self.t
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, store: &mut ParamStore, grads: &[(ParamId, Tensor)]) {
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for (pid, g) in grads {
+            let m = self
+                .m
+                .entry(*pid)
+                .or_insert_with(|| Tensor::zeros(g.shape()));
+            let v = self
+                .v
+                .entry(*pid)
+                .or_insert_with(|| Tensor::zeros(g.shape()));
+            let p = store.get_mut(*pid);
+            let (b1, b2, eps, lr) = (self.beta1, self.beta2, self.eps, self.lr);
+            for i in 0..g.len() {
+                let gi = g.data()[i];
+                let mi = b1 * m.data()[i] + (1.0 - b1) * gi;
+                let vi = b2 * v.data()[i] + (1.0 - b2) * gi * gi;
+                m.data_mut()[i] = mi;
+                v.data_mut()[i] = vi;
+                let mhat = mi / bc1;
+                let vhat = vi / bc2;
+                p.data_mut()[i] -= lr * mhat / (vhat.sqrt() + eps);
+            }
+        }
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+}
+
+/// SGD with classical momentum.
+pub struct Sgd {
+    pub lr: f32,
+    pub momentum: f32,
+    velocity: HashMap<ParamId, Tensor>,
+}
+
+impl Sgd {
+    pub fn new(lr: f32, momentum: f32) -> Self {
+        Sgd { lr, momentum, velocity: HashMap::new() }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, store: &mut ParamStore, grads: &[(ParamId, Tensor)]) {
+        for (pid, g) in grads {
+            if self.momentum == 0.0 {
+                store.get_mut(*pid).axpy(-self.lr, g);
+                continue;
+            }
+            let v = self
+                .velocity
+                .entry(*pid)
+                .or_insert_with(|| Tensor::zeros(g.shape()));
+            for i in 0..g.len() {
+                let vi = self.momentum * v.data()[i] + g.data()[i];
+                v.data_mut()[i] = vi;
+            }
+            store.get_mut(*pid).axpy(-self.lr, v);
+        }
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+}
+
+/// Learning-rate schedule: constant with optional step decay at an epoch
+/// boundary (paper §4.4: "reduce the learning rate by a factor of 10
+/// halfway into training" for text8 only).
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    pub base: f32,
+    pub decay_epoch: Option<usize>,
+    pub decay_factor: f32,
+}
+
+impl LrSchedule {
+    pub fn constant(base: f32) -> Self {
+        LrSchedule { base, decay_epoch: None, decay_factor: 1.0 }
+    }
+
+    pub fn step_decay(base: f32, at_epoch: usize, factor: f32) -> Self {
+        LrSchedule { base, decay_epoch: Some(at_epoch), decay_factor: factor }
+    }
+
+    pub fn lr_at(&self, epoch: usize) -> f32 {
+        match self.decay_epoch {
+            Some(e) if epoch >= e => self.base * self.decay_factor,
+            _ => self.base,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autograd::Graph;
+    use crate::util::Rng;
+
+    /// Minimize ||x - target||² and check convergence.
+    fn converges(opt: &mut dyn Optimizer, iters: usize) -> f32 {
+        let mut rng = Rng::new(0);
+        let mut store = ParamStore::new();
+        let x = store.add("x", Tensor::randn(&[8], 1.0, &mut rng));
+        let target = Tensor::full(&[8], 3.0);
+        let mut last = f32::MAX;
+        for _ in 0..iters {
+            let mut g = Graph::new();
+            let xi = g.param(&store, x);
+            let loss = g.mse(xi, &target);
+            g.backward(loss);
+            last = g.value(loss).item();
+            let grads = g.param_grads();
+            opt.step(&mut store, &grads);
+        }
+        last
+    }
+
+    #[test]
+    fn adam_converges_quadratic() {
+        let mut adam = Adam::new(0.1);
+        let final_loss = converges(&mut adam, 200);
+        assert!(final_loss < 1e-3, "adam final loss {final_loss}");
+        assert_eq!(adam.steps_taken(), 200);
+    }
+
+    #[test]
+    fn sgd_converges_quadratic() {
+        let mut sgd = Sgd::new(0.1, 0.9);
+        let final_loss = converges(&mut sgd, 200);
+        assert!(final_loss < 1e-3, "sgd final loss {final_loss}");
+    }
+
+    #[test]
+    fn adam_first_step_size_bounded_by_lr() {
+        // classic Adam property: |Δθ| <= lr after bias correction
+        let mut store = ParamStore::new();
+        let x = store.add("x", Tensor::full(&[4], 1.0));
+        let before = store.get(x).clone();
+        let grads = vec![(x, Tensor::new(&[4], vec![0.5, -2.0, 10.0, 1e-4]))];
+        let mut adam = Adam::new(0.01);
+        adam.step(&mut store, &grads);
+        let delta = store.get(x).sub(&before);
+        assert!(delta.abs_max() <= 0.01 * 1.01, "step {:?}", delta);
+    }
+
+    #[test]
+    fn clip_global_norm_scales_down() {
+        let mut grads = vec![
+            (ParamId(0), Tensor::full(&[4], 3.0)),
+            (ParamId(1), Tensor::full(&[4], 4.0)),
+        ];
+        let pre = clip_global_norm(&mut grads, 1.0);
+        assert!((pre - 10.0).abs() < 1e-5); // sqrt(4*9 + 4*16) = 10
+        let post: f32 = grads.iter().map(|(_, g)| g.sq_norm()).sum::<f32>().sqrt();
+        assert!((post - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn clip_noop_below_threshold() {
+        let mut grads = vec![(ParamId(0), Tensor::full(&[2], 0.1))];
+        let orig = grads[0].1.clone();
+        clip_global_norm(&mut grads, 100.0);
+        assert!(grads[0].1.allclose(&orig, 0.0));
+    }
+
+    #[test]
+    fn lr_schedule_step_decay() {
+        let s = LrSchedule::step_decay(1e-3, 10, 0.1);
+        assert_eq!(s.lr_at(0), 1e-3);
+        assert_eq!(s.lr_at(9), 1e-3);
+        assert!((s.lr_at(10) - 1e-4).abs() < 1e-9);
+        assert!((s.lr_at(20) - 1e-4).abs() < 1e-9);
+        let c = LrSchedule::constant(0.01);
+        assert_eq!(c.lr_at(100), 0.01);
+    }
+}

@@ -1,0 +1,239 @@
+//! Parser for `artifacts/manifest.txt` (written by python/compile/aot.py).
+//!
+//! Line format (whitespace separated):
+//!   # comment
+//!   config k=v k=v ...
+//!   param <name> offset=<int> shape=<d0>x<d1>...
+//!   artifact <name> <file>
+//!     in <idx> <dtype> <d0,d1,...|scalar>
+//!     out <idx> <dtype> <dims|scalar>
+//!   blob <name> <file> len=<int>
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+/// dtype + dims of one artifact input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn num_elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct BlobSpec {
+    pub name: String,
+    pub file: String,
+    pub len: usize,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub config: HashMap<String, String>,
+    pub params: Vec<ParamSpec>,
+    pub artifacts: Vec<ArtifactSpec>,
+    pub blobs: Vec<BlobSpec>,
+}
+
+fn parse_dims(s: &str) -> Result<Vec<usize>> {
+    if s == "scalar" {
+        return Ok(vec![]);
+    }
+    s.split(',')
+        .map(|d| d.parse::<usize>().map_err(|e| anyhow!("bad dim {d}: {e}")))
+        .collect()
+}
+
+fn kv(s: &str) -> Option<(&str, &str)> {
+    s.split_once('=')
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut m = Manifest::default();
+        let mut current: Option<ArtifactSpec> = None;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            match toks[0] {
+                "config" => {
+                    for t in &toks[1..] {
+                        if let Some((k, v)) = kv(t) {
+                            m.config.insert(k.to_string(), v.to_string());
+                        }
+                    }
+                }
+                "param" => {
+                    if toks.len() < 4 {
+                        bail!("line {}: malformed param", lineno + 1);
+                    }
+                    let offset = kv(toks[2])
+                        .filter(|(k, _)| *k == "offset")
+                        .ok_or_else(|| anyhow!("line {}: missing offset", lineno + 1))?
+                        .1
+                        .parse()?;
+                    let shape_str = kv(toks[3])
+                        .filter(|(k, _)| *k == "shape")
+                        .ok_or_else(|| anyhow!("line {}: missing shape", lineno + 1))?
+                        .1;
+                    let shape: Result<Vec<usize>, _> =
+                        shape_str.split('x').map(|d| d.parse::<usize>()).collect();
+                    m.params.push(ParamSpec {
+                        name: toks[1].to_string(),
+                        offset,
+                        shape: shape?,
+                    });
+                }
+                "artifact" => {
+                    if let Some(a) = current.take() {
+                        m.artifacts.push(a);
+                    }
+                    if toks.len() < 3 {
+                        bail!("line {}: malformed artifact", lineno + 1);
+                    }
+                    current = Some(ArtifactSpec {
+                        name: toks[1].to_string(),
+                        file: toks[2].to_string(),
+                        inputs: vec![],
+                        outputs: vec![],
+                    });
+                }
+                "in" | "out" => {
+                    let a = current
+                        .as_mut()
+                        .ok_or_else(|| anyhow!("line {}: io outside artifact", lineno + 1))?;
+                    if toks.len() < 4 {
+                        bail!("line {}: malformed io line", lineno + 1);
+                    }
+                    let spec = IoSpec { dtype: toks[2].to_string(), dims: parse_dims(toks[3])? };
+                    if toks[0] == "in" {
+                        a.inputs.push(spec);
+                    } else {
+                        a.outputs.push(spec);
+                    }
+                }
+                "blob" => {
+                    if toks.len() < 4 {
+                        bail!("line {}: malformed blob", lineno + 1);
+                    }
+                    let len = kv(toks[3])
+                        .filter(|(k, _)| *k == "len")
+                        .ok_or_else(|| anyhow!("line {}: missing len", lineno + 1))?
+                        .1
+                        .parse()?;
+                    m.blobs.push(BlobSpec {
+                        name: toks[1].to_string(),
+                        file: toks[2].to_string(),
+                        len,
+                    });
+                }
+                other => bail!("line {}: unknown directive {other}", lineno + 1),
+            }
+        }
+        if let Some(a) = current.take() {
+            m.artifacts.push(a);
+        }
+        Ok(m)
+    }
+
+    pub fn config_usize(&self, key: &str) -> Option<usize> {
+        self.config.get(key).and_then(|v| v.parse().ok())
+    }
+
+    pub fn config_f64(&self, key: &str) -> Option<f64> {
+        self.config.get(key).and_then(|v| v.parse().ok())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"# plmu artifact manifest v1
+config n=256 d=64 lr=0.001 n_params=9740
+param Ux offset=0 shape=1x1
+param Wm offset=2 shape=64x128
+artifact fwd fwd.hlo.txt
+  in 0 f32 9740
+  in 1 f32 32,256,1
+  out 0 f32 32,10
+artifact train_step train_step.hlo.txt
+  in 0 f32 9740
+  in 1 i32 32
+  out 0 f32 scalar
+blob init_params init_params.txt len=9740
+"#;
+
+    #[test]
+    fn parses_all_sections() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.config_usize("n"), Some(256));
+        assert_eq!(m.config_f64("lr"), Some(0.001));
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[1].name, "Wm");
+        assert_eq!(m.params[1].offset, 2);
+        assert_eq!(m.params[1].shape, vec![64, 128]);
+        assert_eq!(m.artifacts.len(), 2);
+        let fwd = &m.artifacts[0];
+        assert_eq!(fwd.inputs.len(), 2);
+        assert_eq!(fwd.inputs[1].dims, vec![32, 256, 1]);
+        assert_eq!(fwd.outputs[0].dims, vec![32, 10]);
+        assert_eq!(m.artifacts[1].inputs[1].dtype, "i32");
+        assert_eq!(m.artifacts[1].outputs[0].dims, Vec::<usize>::new());
+        assert_eq!(m.blobs[0].len, 9740);
+    }
+
+    #[test]
+    fn scalar_dims_are_empty() {
+        assert_eq!(parse_dims("scalar").unwrap(), Vec::<usize>::new());
+        assert_eq!(parse_dims("3,4").unwrap(), vec![3, 4]);
+        assert!(parse_dims("3,x").is_err());
+    }
+
+    #[test]
+    fn io_outside_artifact_rejected() {
+        assert!(Manifest::parse("in 0 f32 3").is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // integration: parse the actual artifact manifest when it exists
+        let p = std::path::Path::new("artifacts/manifest.txt");
+        if let Ok(text) = std::fs::read_to_string(p) {
+            let m = Manifest::parse(&text).unwrap();
+            assert!(m.artifacts.iter().any(|a| a.name == "train_step"));
+            assert!(m.config_usize("n_params").unwrap() > 0);
+        }
+    }
+
+    #[test]
+    fn num_elements() {
+        let io = IoSpec { dtype: "f32".into(), dims: vec![2, 3, 4] };
+        assert_eq!(io.num_elements(), 24);
+        let s = IoSpec { dtype: "f32".into(), dims: vec![] };
+        assert_eq!(s.num_elements(), 1);
+    }
+}

@@ -1,0 +1,166 @@
+//! The PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` (`make artifacts`) and executes them from Rust.
+//! Python is never on this path — artifacts are self-contained.
+//!
+//! Flow (see /opt/xla-example/load_hlo for the reference wiring):
+//!   HLO text --HloModuleProto::from_text_file--> XlaComputation
+//!            --PjRtClient::compile-->            PjRtLoadedExecutable
+//!            --execute(Literal inputs)-->        tuple of output Literals
+//!
+//! The manifest (`manifest.txt`) describes every artifact's I/O shapes and
+//! the flat-parameter layout; [`Manifest::parse`] is a tiny hand-rolled
+//! parser (no serde offline).
+
+pub mod manifest;
+
+pub use manifest::{ArtifactSpec, IoSpec, Manifest};
+
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled artifact ready to execute.
+pub struct Artifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute with f32 tensor inputs (and optional i32 inputs marked in
+    /// the spec).  Returns the flattened output tensors.
+    pub fn run(&self, inputs: &[ArtifactInput]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(anyhow!(
+                "artifact {} expects {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (inp, spec) in inputs.iter().zip(&self.spec.inputs) {
+            literals.push(inp.to_literal(spec)?);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.spec.name))?;
+        // jax lowering uses return_tuple=True: one tuple literal
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("device->host transfer")?;
+        let parts = tuple.to_tuple().context("untupling outputs")?;
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, ospec) in parts.iter().zip(&self.spec.outputs) {
+            let data: Vec<f32> = match ospec.dtype.as_str() {
+                "f32" => lit.to_vec::<f32>()?,
+                "i32" => lit.to_vec::<i32>()?.into_iter().map(|v| v as f32).collect(),
+                other => return Err(anyhow!("unsupported output dtype {other}")),
+            };
+            out.push(Tensor::new(&ospec.dims, data));
+        }
+        Ok(out)
+    }
+}
+
+/// One input value for `Artifact::run`.
+pub enum ArtifactInput {
+    F32(Tensor),
+    I32(Vec<i32>),
+}
+
+impl ArtifactInput {
+    fn to_literal(&self, spec: &IoSpec) -> Result<xla::Literal> {
+        let dims_i64: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
+        match (self, spec.dtype.as_str()) {
+            (ArtifactInput::F32(t), "f32") => {
+                let expect: usize = spec.dims.iter().product();
+                if t.len() != expect {
+                    return Err(anyhow!(
+                        "input size mismatch: tensor {} vs spec {:?}",
+                        t.len(),
+                        spec.dims
+                    ));
+                }
+                let lit = xla::Literal::vec1(t.data());
+                Ok(if spec.dims.is_empty() {
+                    lit.reshape(&[])?
+                } else {
+                    lit.reshape(&dims_i64)?
+                })
+            }
+            (ArtifactInput::I32(v), "i32") => {
+                let lit = xla::Literal::vec1(v.as_slice());
+                Ok(if spec.dims.is_empty() {
+                    lit.reshape(&[])?
+                } else {
+                    lit.reshape(&dims_i64)?
+                })
+            }
+            (_, dt) => Err(anyhow!("input/spec dtype mismatch (spec {dt})")),
+        }
+    }
+}
+
+/// The runtime: a PJRT client plus the compiled artifact registry.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    artifacts: HashMap<String, Artifact>,
+}
+
+impl Runtime {
+    /// Load the manifest and lazily compile nothing yet.
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::parse(
+            &std::fs::read_to_string(dir.join("manifest.txt"))
+                .with_context(|| format!("reading {}/manifest.txt — run `make artifacts`", dir.display()))?,
+        )?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, dir: dir.to_path_buf(), artifacts: HashMap::new() })
+    }
+
+    /// Compile (memoized) and return an artifact by name.
+    pub fn artifact(&mut self, name: &str) -> Result<&Artifact> {
+        if !self.artifacts.contains_key(name) {
+            let spec = self
+                .manifest
+                .artifacts
+                .iter()
+                .find(|a| a.name == name)
+                .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?
+                .clone();
+            let path = self.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            self.artifacts.insert(name.to_string(), Artifact { spec, exe });
+        }
+        Ok(&self.artifacts[name])
+    }
+
+    /// Load the exported initial parameter vector.
+    pub fn init_params(&self) -> Result<Tensor> {
+        let blob = self
+            .manifest
+            .blobs
+            .iter()
+            .find(|b| b.name == "init_params")
+            .ok_or_else(|| anyhow!("no init_params blob in manifest"))?;
+        let text = std::fs::read_to_string(self.dir.join(&blob.file))?;
+        let vals: Result<Vec<f32>, _> = text.lines().map(|l| l.trim().parse::<f32>()).collect();
+        let vals = vals.context("parsing init_params")?;
+        if vals.len() != blob.len {
+            return Err(anyhow!("init_params length {} != manifest {}", vals.len(), blob.len));
+        }
+        Ok(Tensor::new(&[vals.len()], vals))
+    }
+}

@@ -1,0 +1,220 @@
+//! Blocked matrix multiplication.  No BLAS offline, so this is the hot
+//! kernel of the native trainer; the layout choices matter:
+//!
+//!  * `matmul`   — C = A·B with an i-k-j loop order so the inner loop is a
+//!    contiguous axpy over B's rows (auto-vectorizes well);
+//!  * `matmul_tn`— C = Aᵀ·B without materializing Aᵀ (used by backprop for
+//!    weight gradients: dW = Xᵀ·dY);
+//!  * `matmul_nt`— C = A·Bᵀ (used by backprop for input gradients:
+//!    dX = dY·Wᵀ); inner loop is a dot product of two contiguous rows.
+//!
+//! Cache blocking over k keeps the working set of B in L1/L2 for large
+//! shapes; for the small-to-medium shapes the models use, the simple loop
+//! order dominates.
+
+use super::Tensor;
+
+const KC: usize = 256; // k-panel height (keeps a B panel ~KC*cols*4B in cache)
+
+/// C = A (m,k) · B (k,n)
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = dims2(a, "matmul lhs");
+    let (kb, n) = dims2(b, "matmul rhs");
+    assert_eq!(k, kb, "matmul inner dims: {:?} x {:?}", a.shape(), b.shape());
+    let mut c = Tensor::zeros(&[m, n]);
+    let (ad, bd, cd) = (a.data(), b.data(), c.data_mut());
+    for k0 in (0..k).step_by(KC) {
+        let k1 = (k0 + KC).min(k);
+        for i in 0..m {
+            let crow = &mut cd[i * n..(i + 1) * n];
+            for p in k0..k1 {
+                let aip = ad[i * k + p];
+                if aip == 0.0 {
+                    continue;
+                }
+                let brow = &bd[p * n..(p + 1) * n];
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += aip * bv;
+                }
+            }
+        }
+    }
+    c
+}
+
+/// C = Aᵀ (k,m)ᵀ · B (k,n) -> (m, n)
+pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    let (k, m) = dims2(a, "matmul_tn lhs");
+    let (kb, n) = dims2(b, "matmul_tn rhs");
+    assert_eq!(k, kb, "matmul_tn inner dims: {:?} x {:?}", a.shape(), b.shape());
+    let mut c = Tensor::zeros(&[m, n]);
+    let (ad, bd, cd) = (a.data(), b.data(), c.data_mut());
+    // iterate over k (rows of both A and B): rank-1 update per row,
+    // contiguous in both A's row and B's row.
+    for p in 0..k {
+        let arow = &ad[p * m..(p + 1) * m];
+        let brow = &bd[p * n..(p + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut cd[i * n..(i + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    c
+}
+
+/// C = A (m,k) · Bᵀ (n,k)ᵀ -> (m, n)
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = dims2(a, "matmul_nt lhs");
+    let (n, kb) = dims2(b, "matmul_nt rhs");
+    assert_eq!(k, kb, "matmul_nt inner dims: {:?} x {:?}", a.shape(), b.shape());
+    let mut c = Tensor::zeros(&[m, n]);
+    let (ad, bd, cd) = (a.data(), b.data(), c.data_mut());
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &bd[j * k..(j + 1) * k];
+            cd[i * n + j] = dot(arow, brow);
+        }
+    }
+    c
+}
+
+/// Contiguous dot product, 4-way unrolled for ILP.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+fn dims2(t: &Tensor, what: &str) -> (usize, usize) {
+    assert_eq!(t.ndim(), 2, "{what} must be 2-D, got {:?}", t.shape());
+    (t.shape()[0], t.shape()[1])
+}
+
+/// y = M (m,n) · x (n,)  — matrix-vector product.
+pub fn matvec(m: &Tensor, x: &[f32]) -> Vec<f32> {
+    let (rows, cols) = dims2(m, "matvec lhs");
+    assert_eq!(cols, x.len(), "matvec dims");
+    let md = m.data();
+    (0..rows).map(|i| dot(&md[i * cols..(i + 1) * cols], x)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn naive(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.shape()[0], a.shape()[1]);
+        let n = b.shape()[1];
+        let mut c = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for p in 0..k {
+                    s += a.at2(i, p) * b.at2(p, j);
+                }
+                c.set2(i, j, s);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::new(&[2, 2], vec![1., 1., 1., 1.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(0);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (17, 9, 4), (32, 300, 20), (64, 64, 64)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let c = matmul(&a, &b);
+            assert!(c.allclose(&naive(&a, &b), 1e-4), "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn matmul_tn_matches_transpose() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[(4, 6, 3), (13, 31, 7), (64, 128, 32)] {
+            let at = Tensor::randn(&[k, m], 1.0, &mut rng); // A stored transposed
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let c = matmul_tn(&at, &b);
+            let c_ref = matmul(&at.transpose2(), &b);
+            assert!(c.allclose(&c_ref, 1e-4), "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn matmul_nt_matches_transpose() {
+        let mut rng = Rng::new(2);
+        for &(m, k, n) in &[(4, 6, 3), (13, 31, 7), (32, 64, 16)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let bt = Tensor::randn(&[n, k], 1.0, &mut rng); // B stored transposed
+            let c = matmul_nt(&a, &bt);
+            let c_ref = matmul(&a, &bt.transpose2());
+            assert!(c.allclose(&c_ref, 1e-4), "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(3);
+        let a = Tensor::randn(&[5, 5], 1.0, &mut rng);
+        assert!(matmul(&a, &Tensor::eye(5)).allclose(&a, 1e-6));
+        assert!(matmul(&Tensor::eye(5), &a).allclose(&a, 1e-6));
+    }
+
+    #[test]
+    fn dot_matches_sum() {
+        let a: Vec<f32> = (0..13).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..13).map(|i| (i * 2) as f32).collect();
+        let expect: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert_eq!(dot(&a, &b), expect);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::new(4);
+        let m = Tensor::randn(&[7, 11], 1.0, &mut rng);
+        let x = Tensor::randn(&[11, 1], 1.0, &mut rng);
+        let y = matvec(&m, x.data());
+        let y_ref = matmul(&m, &x);
+        for (a, b) in y.iter().zip(y_ref.data()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dims")]
+    fn mismatched_dims_panic() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[4, 2]);
+        matmul(&a, &b);
+    }
+}

@@ -1,0 +1,568 @@
+//! Dense row-major f32 tensors and the numeric kernels the framework is
+//! built on.  No BLAS is available offline, so `matmul` carries its own
+//! blocked/packed implementation (see `matmul.rs`); everything else is
+//! straightforward contiguous-slice arithmetic.
+
+pub mod matmul;
+
+use crate::util::Rng;
+use std::fmt;
+
+/// A dense row-major f32 tensor with a dynamic shape.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.data.len() <= 8 {
+            write!(f, " {:?}", self.data)
+        } else {
+            write!(f, " [{:.4}, {:.4}, …, {:.4}]", self.data[0], self.data[1], self.data[self.data.len() - 1])
+        }
+    }
+}
+
+impl Tensor {
+    // ----------------------------------------------------------------- ctor
+
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match data length {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        Tensor::full(shape, 1.0)
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    /// N(0, std) initialization.
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Self {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, std);
+        t
+    }
+
+    /// U[lo, hi) initialization.
+    pub fn rand_uniform(shape: &[usize], lo: f32, hi: f32, rng: &mut Rng) -> Self {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_uniform(&mut t.data, lo, hi);
+        t
+    }
+
+    /// Glorot/Xavier-uniform for a (fan_in, fan_out) weight matrix.
+    pub fn glorot(fan_in: usize, fan_out: usize, rng: &mut Rng) -> Self {
+        let limit = (6.0 / (fan_in + fan_out) as f32).sqrt();
+        Tensor::rand_uniform(&[fan_in, fan_out], -limit, limit, rng)
+    }
+
+    /// Orthogonal-ish init for recurrent matrices: scaled Gaussian.
+    pub fn recurrent_init(n: usize, rng: &mut Rng) -> Self {
+        Tensor::randn(&[n, n], 1.0 / (n as f32).sqrt(), rng)
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut t = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    // ------------------------------------------------------------ accessors
+
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    #[inline]
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Number of rows / row length, treating the tensor as 2-D
+    /// (all-but-last dims collapsed).
+    pub fn rows(&self) -> usize {
+        if self.shape.is_empty() {
+            1
+        } else {
+            self.shape[..self.shape.len() - 1].iter().product()
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        *self.shape.last().unwrap_or(&1)
+    }
+
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.ndim(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.ndim(), 2);
+        let c = self.shape[1];
+        self.data[i * c + j] = v;
+    }
+
+    pub fn item(&self) -> f32 {
+        assert_eq!(self.data.len(), 1, "item() on non-scalar tensor {:?}", self.shape);
+        self.data[0]
+    }
+
+    // -------------------------------------------------------------- reshape
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "cannot reshape {:?} to {:?}",
+            self.shape,
+            shape
+        );
+        self.shape = shape.to_vec();
+        self
+    }
+
+    pub fn reshaped(&self, shape: &[usize]) -> Self {
+        self.clone().reshape(shape)
+    }
+
+    /// 2-D transpose (copies).
+    pub fn transpose2(&self) -> Self {
+        assert_eq!(self.ndim(), 2, "transpose2 on {:?}", self.shape);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[c, r]);
+        for i in 0..r {
+            for j in 0..c {
+                out.data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        out
+    }
+
+    // ---------------------------------------------------------- elementwise
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Self {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&v| f(v)).collect() }
+    }
+
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for v in self.data.iter_mut() {
+            *v = f(*v);
+        }
+    }
+
+    fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Self {
+        assert_eq!(self.shape, other.shape, "elementwise shape mismatch");
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Self {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Self {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn mul(&self, other: &Tensor) -> Self {
+        self.zip(other, |a, b| a * b)
+    }
+
+    pub fn div(&self, other: &Tensor) -> Self {
+        self.zip(other, |a, b| a / b)
+    }
+
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// self += alpha * other (axpy).
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn scale(&self, s: f32) -> Self {
+        self.map(|v| v * s)
+    }
+
+    pub fn neg(&self) -> Self {
+        self.map(|v| -v)
+    }
+
+    /// Broadcast-add a length-`cols` bias vector to every row.
+    pub fn add_row(&self, bias: &Tensor) -> Self {
+        let c = self.cols();
+        assert_eq!(bias.len(), c, "bias length {} != cols {}", bias.len(), c);
+        let mut out = self.clone();
+        for row in out.data.chunks_mut(c) {
+            for (v, b) in row.iter_mut().zip(&bias.data) {
+                *v += b;
+            }
+        }
+        out
+    }
+
+    // ------------------------------------------------------------ nonlinear
+
+    pub fn tanh(&self) -> Self {
+        self.map(f32::tanh)
+    }
+
+    pub fn sigmoid(&self) -> Self {
+        self.map(|v| 1.0 / (1.0 + (-v).exp()))
+    }
+
+    pub fn relu(&self) -> Self {
+        self.map(|v| v.max(0.0))
+    }
+
+    // ----------------------------------------------------------- reductions
+
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.sum() / self.data.len() as f32
+        }
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    pub fn sq_norm(&self) -> f32 {
+        self.data.iter().map(|&v| v * v).sum()
+    }
+
+    /// Row-wise sum: (r, c) -> (c,) summing over rows.
+    pub fn sum_rows(&self) -> Tensor {
+        let c = self.cols();
+        let mut out = Tensor::zeros(&[c]);
+        for row in self.data.chunks(c) {
+            for (o, v) in out.data.iter_mut().zip(row) {
+                *o += v;
+            }
+        }
+        out
+    }
+
+    /// Argmax of each row: (r, c) -> Vec of r indices.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        let c = self.cols();
+        self.data
+            .chunks(c)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+            .collect()
+    }
+
+    /// Row-wise softmax, numerically stabilized.
+    pub fn softmax_rows(&self) -> Tensor {
+        let c = self.cols();
+        let mut out = self.clone();
+        for row in out.data.chunks_mut(c) {
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0;
+            for v in row.iter_mut() {
+                *v = (*v - mx).exp();
+                z += *v;
+            }
+            let inv = 1.0 / z;
+            for v in row.iter_mut() {
+                *v *= inv;
+            }
+        }
+        out
+    }
+
+    // -------------------------------------------------------------- slicing
+
+    /// Rows [lo, hi) of a 2-D-viewed tensor.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Tensor {
+        let c = self.cols();
+        assert!(lo <= hi && hi <= self.rows(), "slice [{lo},{hi}) of {} rows", self.rows());
+        Tensor::new(&[hi - lo, c], self.data[lo * c..hi * c].to_vec())
+    }
+
+    /// Single row as a (c,) vector.
+    pub fn row(&self, i: usize) -> Tensor {
+        let c = self.cols();
+        Tensor::new(&[c], self.data[i * c..(i + 1) * c].to_vec())
+    }
+
+    /// Concatenate along axis 0 (first dims may differ, rest must match).
+    pub fn concat_rows(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let c = parts[0].cols();
+        let mut rows = 0;
+        let mut data = Vec::new();
+        for p in parts {
+            assert_eq!(p.cols(), c, "concat col mismatch");
+            rows += p.rows();
+            data.extend_from_slice(&p.data);
+        }
+        Tensor::new(&[rows, c], data)
+    }
+
+    /// Concatenate along the last axis: all parts (r, c_i) -> (r, sum c_i).
+    pub fn concat_cols(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let r = parts[0].rows();
+        let total_c: usize = parts.iter().map(|p| p.cols()).sum();
+        let mut out = Tensor::zeros(&[r, total_c]);
+        let mut ofs = 0;
+        for p in parts {
+            assert_eq!(p.rows(), r, "concat row mismatch");
+            let c = p.cols();
+            for i in 0..r {
+                out.data[i * total_c + ofs..i * total_c + ofs + c]
+                    .copy_from_slice(&p.data[i * c..(i + 1) * c]);
+            }
+            ofs += c;
+        }
+        out
+    }
+
+    // --------------------------------------------------------------- matmul
+
+    /// 2-D matrix product: (m, k) x (k, n) -> (m, n).
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        matmul::matmul(self, other)
+    }
+
+    /// self^T * other: (k, m) x (k, n) -> (m, n) without materializing
+    /// the transpose.
+    pub fn matmul_tn(&self, other: &Tensor) -> Tensor {
+        matmul::matmul_tn(self, other)
+    }
+
+    /// self * other^T: (m, k) x (n, k) -> (m, n).
+    pub fn matmul_nt(&self, other: &Tensor) -> Tensor {
+        matmul::matmul_nt(self, other)
+    }
+
+    // ----------------------------------------------------------- comparison
+
+    pub fn allclose(&self, other: &Tensor, atol: f32) -> bool {
+        self.shape == other.shape
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(a, b)| (a - b).abs() <= atol + 1e-5 * b.abs())
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_shape() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+        assert_eq!(t.at2(1, 2), 6.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn bad_shape_panics() {
+        Tensor::new(&[2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn zeros_ones_eye() {
+        assert_eq!(Tensor::zeros(&[3]).sum(), 0.0);
+        assert_eq!(Tensor::ones(&[4]).sum(), 4.0);
+        let i = Tensor::eye(3);
+        assert_eq!(i.sum(), 3.0);
+        assert_eq!(i.at2(1, 1), 1.0);
+        assert_eq!(i.at2(0, 1), 0.0);
+    }
+
+    #[test]
+    fn elementwise_ops() {
+        let a = Tensor::new(&[2], vec![1., 2.]);
+        let b = Tensor::new(&[2], vec![3., 5.]);
+        assert_eq!(a.add(&b).data(), &[4., 7.]);
+        assert_eq!(b.sub(&a).data(), &[2., 3.]);
+        assert_eq!(a.mul(&b).data(), &[3., 10.]);
+        assert_eq!(b.div(&a).data(), &[3., 2.5]);
+        assert_eq!(a.scale(2.0).data(), &[2., 4.]);
+        assert_eq!(a.neg().data(), &[-1., -2.]);
+    }
+
+    #[test]
+    fn axpy_and_add_assign() {
+        let mut a = Tensor::new(&[2], vec![1., 2.]);
+        let b = Tensor::new(&[2], vec![10., 20.]);
+        a.axpy(0.5, &b);
+        assert_eq!(a.data(), &[6., 12.]);
+        a.add_assign(&b);
+        assert_eq!(a.data(), &[16., 32.]);
+    }
+
+    #[test]
+    fn add_row_broadcast() {
+        let x = Tensor::new(&[2, 3], vec![0.; 6]);
+        let b = Tensor::new(&[3], vec![1., 2., 3.]);
+        let y = x.add_row(&b);
+        assert_eq!(y.data(), &[1., 2., 3., 1., 2., 3.]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(0);
+        let t = Tensor::randn(&[3, 5], 1.0, &mut rng);
+        let tt = t.transpose2().transpose2();
+        assert!(t.allclose(&tt, 0.0));
+    }
+
+    #[test]
+    fn reductions() {
+        let t = Tensor::new(&[2, 2], vec![1., -2., 3., -4.]);
+        assert_eq!(t.sum(), -2.0);
+        assert_eq!(t.mean(), -0.5);
+        assert_eq!(t.abs_max(), 4.0);
+        assert_eq!(t.sq_norm(), 30.0);
+        assert_eq!(t.sum_rows().data(), &[4., -6.]);
+    }
+
+    #[test]
+    fn softmax_rows_normalized() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 1000., 1000., 1000.]);
+        let s = t.softmax_rows();
+        for row in s.data().chunks(3) {
+            let total: f32 = row.iter().sum();
+            assert!((total - 1.0).abs() < 1e-5);
+        }
+        // large-logit row must not produce NaN
+        assert!(s.data().iter().all(|v| v.is_finite()));
+        assert!((s.at2(1, 0) - 1.0 / 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn argmax_rows_works() {
+        let t = Tensor::new(&[2, 3], vec![1., 5., 3., 9., 0., 2.]);
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn slicing_and_concat() {
+        let t = Tensor::new(&[3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let s = t.slice_rows(1, 3);
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.data(), &[3., 4., 5., 6.]);
+        let r = t.row(0);
+        assert_eq!(r.data(), &[1., 2.]);
+        let c = Tensor::concat_rows(&[&s, &t.slice_rows(0, 1)]);
+        assert_eq!(c.shape(), &[3, 2]);
+        assert_eq!(c.data(), &[3., 4., 5., 6., 1., 2.]);
+    }
+
+    #[test]
+    fn concat_cols_interleaves() {
+        let a = Tensor::new(&[2, 1], vec![1., 2.]);
+        let b = Tensor::new(&[2, 2], vec![3., 4., 5., 6.]);
+        let c = Tensor::concat_cols(&[&a, &b]);
+        assert_eq!(c.shape(), &[2, 3]);
+        assert_eq!(c.data(), &[1., 3., 4., 2., 5., 6.]);
+    }
+
+    #[test]
+    fn glorot_within_limit() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::glorot(100, 50, &mut rng);
+        let limit = (6.0f32 / 150.0).sqrt();
+        assert!(w.abs_max() <= limit);
+        assert!(w.abs_max() > limit * 0.8);
+    }
+
+    #[test]
+    fn nonlinearities() {
+        let t = Tensor::new(&[3], vec![-1., 0., 1.]);
+        assert_eq!(t.relu().data(), &[0., 0., 1.]);
+        let s = t.sigmoid();
+        assert!((s.data()[1] - 0.5).abs() < 1e-6);
+        let th = t.tanh();
+        assert!((th.data()[2] - 0.76159).abs() < 1e-4);
+    }
+}

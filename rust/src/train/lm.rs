@@ -1,0 +1,342 @@
+//! Language models and the encoder-decoder translator, built from the
+//! paper's repeating block (DN/LMU + dense + highway, §4.3-4.5 and the
+//! supplementary figure).
+//!
+//!  * [`LmModel`] — token LM: embedding -> N blocks -> vocab head, with
+//!    next-token cross-entropy over every position (the Amazon-reviews
+//!    pretraining and text8 experiments);
+//!  * finetuning reuses the pretrained blocks via [`LmModel::encode`]
+//!    plus a fresh classification head — with a learned weighted sum of
+//!    per-block representations ("deep representations", Peters et al.);
+//!  * [`Translator`] — LMU encoder + cross-attention decoder predicting
+//!    the target sequence position-wise (IWSLT experiment).
+
+use crate::autograd::{Graph, NodeId, ParamId, ParamStore};
+use crate::layers::lmu::{LmuParallelLayer, LmuSpec};
+use crate::layers::{Activation, Dense, Embedding, Highway};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// One repeating block: our-model LMU layer + highway + residual-friendly
+/// dimensionality (all widths = `dim`).
+pub struct LmBlock {
+    pub lmu: LmuParallelLayer,
+    pub highway: Highway,
+}
+
+impl LmBlock {
+    pub fn new(
+        dim: usize,
+        d: usize,
+        theta: f64,
+        n: usize,
+        store: &mut ParamStore,
+        rng: &mut Rng,
+        prefix: &str,
+    ) -> Self {
+        // du = 1 keeps the memory d-dimensional per block (the paper works
+        // with small theta/d per block and stacks blocks for long context)
+        let spec = LmuSpec::new(dim, 1, d, theta, dim);
+        LmBlock {
+            lmu: LmuParallelLayer::new(spec, n, store, rng, &format!("{prefix}.lmu")),
+            highway: Highway::new(dim, store, rng, &format!("{prefix}.hw")),
+        }
+    }
+
+    /// (B·n, dim) -> (B·n, dim), with a skip connection around the LMU.
+    pub fn forward(&self, g: &mut Graph, store: &ParamStore, x: NodeId, batch: usize) -> NodeId {
+        let o = self.lmu.forward_all(g, store, x, batch);
+        let res = g.add(o, x); // skip connection (supplementary figure)
+        self.highway.forward(g, store, res)
+    }
+}
+
+/// Token language model with stacked blocks.
+pub struct LmModel {
+    pub emb: Embedding,
+    pub blocks: Vec<LmBlock>,
+    pub head: Dense,
+    pub dim: usize,
+    pub n: usize,
+    pub vocab: usize,
+    /// learned per-block mixing weights for deep representations
+    pub mix: ParamId,
+}
+
+impl LmModel {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        vocab: usize,
+        dim: usize,
+        n_blocks: usize,
+        d: usize,
+        theta: f64,
+        n: usize,
+        store: &mut ParamStore,
+        rng: &mut Rng,
+    ) -> Self {
+        let emb = Embedding::new(vocab, dim, store, rng, "lm");
+        let blocks = (0..n_blocks)
+            .map(|i| LmBlock::new(dim, d, theta, n, store, rng, &format!("lm.b{i}")))
+            .collect();
+        let head = Dense::new(dim, vocab, Activation::Linear, store, rng, "lm.head");
+        let mix = store.add("lm.mix", Tensor::full(&[n_blocks], 1.0 / n_blocks as f32));
+        LmModel { emb, blocks, head, dim, n, vocab, mix }
+    }
+
+    /// Hidden states of every block: input ids (B·n,) -> per-block
+    /// (B·n, dim) nodes.
+    fn block_states(
+        &self,
+        g: &mut Graph,
+        store: &ParamStore,
+        ids: &[usize],
+        batch: usize,
+    ) -> Vec<NodeId> {
+        let mut h = self.emb.forward(g, store, ids);
+        let mut states = Vec::with_capacity(self.blocks.len());
+        for b in &self.blocks {
+            h = b.forward(g, store, h, batch);
+            states.push(h);
+        }
+        states
+    }
+
+    /// Top-block representation (text8-style: "we simply work with the
+    /// output from the top block").
+    pub fn encode_top(&self, g: &mut Graph, store: &ParamStore, ids: &[usize], batch: usize) -> NodeId {
+        *self.block_states(g, store, ids, batch).last().unwrap()
+    }
+
+    /// Deep representation: learned weighted sum over block outputs
+    /// (Amazon-reviews finetuning).
+    pub fn encode_deep(&self, g: &mut Graph, store: &ParamStore, ids: &[usize], batch: usize) -> NodeId {
+        let states = self.block_states(g, store, ids, batch);
+        let mix0 = g.param(store, self.mix);
+        let mix = g.reshape(mix0, &[1, self.blocks.len()]);
+        let mut acc: Option<NodeId> = None;
+        for (i, s) in states.iter().enumerate() {
+            let wi = g.slice_cols(mix, i, i + 1); // (1, 1) scalar
+            let w_mat = g.reshape(wi, &[1, 1]);
+            // (B·n, dim) x scalar: use matmul with (1,1) after reshaping rows
+            let flat = g.reshape(*s, &[g.value(*s).len(), 1]);
+            let scaled = g.matmul(flat, w_mat);
+            let back = {
+                let dim = self.dim;
+                let rows = g.value(*s).rows();
+                g.reshape(scaled, &[rows, dim])
+            };
+            acc = Some(match acc {
+                None => back,
+                Some(a) => g.add(a, back),
+            });
+        }
+        acc.unwrap()
+    }
+
+    /// Next-token LM loss on a (B, n+1) id batch: predict ids[t+1] from
+    /// prefix ending at t, causal by the DN's construction.
+    pub fn lm_loss(&self, g: &mut Graph, store: &ParamStore, batch_ids: &[Vec<usize>]) -> NodeId {
+        let b = batch_ids.len();
+        let n = self.n;
+        let mut inputs = Vec::with_capacity(b * n);
+        let mut labels = Vec::with_capacity(b * n);
+        for ids in batch_ids {
+            assert!(ids.len() >= n + 1, "need n+1 tokens per LM sample");
+            inputs.extend_from_slice(&ids[..n]);
+            labels.extend(ids[1..n + 1].iter().copied());
+        }
+        let h = self.encode_top(g, store, &inputs, b);
+        let logits = self.head.forward(g, store, h); // (B·n, V)
+        g.softmax_xent(logits, &labels)
+    }
+
+    /// Mean next-token NLL (nats) on held-out windows, for bpc reporting.
+    pub fn eval_nll(&self, store: &ParamStore, batch_ids: &[Vec<usize>]) -> f64 {
+        let mut g = Graph::new();
+        let loss = self.lm_loss(&mut g, store, batch_ids);
+        g.value(loss).item() as f64
+    }
+}
+
+/// Cross-attention (trainable) for the translation decoder.
+pub struct CrossAttention {
+    pub wq: ParamId,
+    pub wk: ParamId,
+    pub wv: ParamId,
+    pub dim: usize,
+}
+
+impl CrossAttention {
+    pub fn new(dim: usize, store: &mut ParamStore, rng: &mut Rng, prefix: &str) -> Self {
+        CrossAttention {
+            wq: store.add(&format!("{prefix}.wq"), Tensor::glorot(dim, dim, rng)),
+            wk: store.add(&format!("{prefix}.wk"), Tensor::glorot(dim, dim, rng)),
+            wv: store.add(&format!("{prefix}.wv"), Tensor::glorot(dim, dim, rng)),
+            dim,
+        }
+    }
+
+    /// queries (R_q, dim), context (R_k, dim) -> (R_q, dim).
+    /// NOTE: rows attend across the WHOLE context block, so callers batch
+    /// one sample at a time (translation batches are per-sample graphs).
+    pub fn forward(&self, g: &mut Graph, store: &ParamStore, x_q: NodeId, x_kv: NodeId) -> NodeId {
+        let wq = g.param(store, self.wq);
+        let wk = g.param(store, self.wk);
+        let wv = g.param(store, self.wv);
+        let q = g.matmul(x_q, wq);
+        let k = g.matmul(x_kv, wk);
+        let v = g.matmul(x_kv, wv);
+        let scores = g.matmul_nt(q, k);
+        let scaled = g.scale(scores, 1.0 / (self.dim as f32).sqrt());
+        let attn = g.softmax_rows(scaled);
+        g.matmul(attn, v)
+    }
+}
+
+/// Encoder-decoder translator: LMU encoder over source embeddings, then a
+/// per-position decoder that cross-attends into the encoder states
+/// (§4.5's "standard encoder-decoder architecture ... with an attention
+/// layer to help with translation").
+pub struct Translator {
+    pub src_emb: Embedding,
+    pub encoder: LmuParallelLayer,
+    pub attn: CrossAttention,
+    pub out: Dense,
+    pub n: usize,
+    pub dim: usize,
+}
+
+impl Translator {
+    pub fn new(
+        src_vocab: usize,
+        tgt_vocab: usize,
+        dim: usize,
+        d: usize,
+        n: usize,
+        store: &mut ParamStore,
+        rng: &mut Rng,
+    ) -> Self {
+        let src_emb = Embedding::new(src_vocab, dim, store, rng, "tr.src");
+        let spec = LmuSpec::new(dim, 1, d, n as f64, dim);
+        let encoder = LmuParallelLayer::new(spec, n, store, rng, "tr.enc");
+        let attn = CrossAttention::new(dim, store, rng, "tr.attn");
+        let out = Dense::new(2 * dim, tgt_vocab, Activation::Linear, store, rng, "tr.out");
+        Translator { src_emb, encoder, attn, out, n, dim }
+    }
+
+    /// Per-sample logits over target positions: src ids (n,) -> (n, V_tgt).
+    pub fn logits(&self, g: &mut Graph, store: &ParamStore, src: &[usize]) -> NodeId {
+        assert_eq!(src.len(), self.n);
+        let e = self.src_emb.forward(g, store, src); // (n, dim)
+        let enc = self.encoder.forward_all(g, store, e, 1); // (n, dim)
+        let ctx = self.attn.forward(g, store, enc, enc); // (n, dim)
+        let cat = g.concat_cols(&[enc, ctx]); // (n, 2dim)
+        self.out.forward(g, store, cat)
+    }
+
+    pub fn loss(&self, g: &mut Graph, store: &ParamStore, src: &[usize], tgt: &[usize]) -> NodeId {
+        let logits = self.logits(g, store, src);
+        g.softmax_xent(logits, tgt)
+    }
+
+    pub fn translate(&self, store: &ParamStore, src: &[usize]) -> Vec<usize> {
+        let mut g = Graph::new();
+        let logits = self.logits(&mut g, store, src);
+        g.value(logits).argmax_rows()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{Adam, Optimizer};
+
+    #[test]
+    fn lm_shapes_and_loss_finite() {
+        let mut store = ParamStore::new();
+        let mut rng = Rng::new(0);
+        let lm = LmModel::new(30, 16, 2, 4, 8.0, 12, &mut store, &mut rng);
+        let batch: Vec<Vec<usize>> = (0..3).map(|i| (0..13).map(|t| (t * 3 + i) % 30).collect()).collect();
+        let mut g = Graph::new();
+        let loss = lm.lm_loss(&mut g, &store, &batch);
+        let lv = g.value(loss).item();
+        assert!(lv.is_finite());
+        // near-uniform init => loss ~ ln(vocab)
+        assert!((lv - (30.0f32).ln()).abs() < 1.0, "init loss {lv}");
+        g.backward(loss);
+        assert!(g.param_grads().len() > 5);
+    }
+
+    #[test]
+    fn lm_memorizes_tiny_corpus() {
+        let mut store = ParamStore::new();
+        let mut rng = Rng::new(1);
+        let lm = LmModel::new(10, 12, 1, 4, 8.0, 8, &mut store, &mut rng);
+        // deterministic cyclic sequence: fully predictable
+        let seq: Vec<usize> = (0..9).map(|t| t % 10).collect();
+        let batch = vec![seq; 4];
+        let mut opt = Adam::new(1e-2);
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for it in 0..80 {
+            let mut g = Graph::new();
+            let loss = lm.lm_loss(&mut g, &store, &batch);
+            let lv = g.value(loss).item();
+            if it == 0 {
+                first = lv;
+            }
+            last = lv;
+            g.backward(loss);
+            let grads = g.param_grads();
+            opt.step(&mut store, &grads);
+        }
+        assert!(last < first * 0.3, "LM failed to memorize: {first} -> {last}");
+    }
+
+    #[test]
+    fn deep_representation_mixes_blocks() {
+        let mut store = ParamStore::new();
+        let mut rng = Rng::new(2);
+        let lm = LmModel::new(20, 8, 3, 4, 6.0, 6, &mut store, &mut rng);
+        let ids: Vec<usize> = (0..12).map(|t| t % 20).collect();
+        let mut g = Graph::new();
+        let deep = lm.encode_deep(&mut g, &store, &ids, 2);
+        assert_eq!(g.value(deep).shape(), &[12, 8]);
+        // gradient reaches the mixing weights
+        let sq = g.mul(deep, deep);
+        let loss = g.mean_all(sq);
+        g.backward(loss);
+        let grads = g.param_grads();
+        assert!(
+            grads.iter().any(|(pid, g2)| store.name(*pid) == "lm.mix" && g2.abs_max() > 0.0),
+            "mix weights got no gradient"
+        );
+    }
+
+    #[test]
+    fn translator_learns_identity_mapping() {
+        // trivial translation task (identity) to validate the pipeline
+        let mut store = ParamStore::new();
+        let mut rng = Rng::new(3);
+        let tr = Translator::new(12, 12, 16, 6, 6, &mut store, &mut rng);
+        let mut opt = Adam::new(5e-3);
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for it in 0..60 {
+            let src: Vec<usize> = (0..6).map(|t| (t * 5 + it) % 12).collect();
+            let tgt = src.clone();
+            let mut g = Graph::new();
+            let loss = tr.loss(&mut g, &store, &src, &tgt);
+            let lv = g.value(loss).item();
+            if it == 0 {
+                first = lv;
+            }
+            last = lv;
+            g.backward(loss);
+            let grads = g.param_grads();
+            opt.step(&mut store, &grads);
+        }
+        assert!(last < first * 0.6, "translator not learning: {first} -> {last}");
+    }
+}

@@ -1,0 +1,228 @@
+//! The trainer: epoch loops, loss-curve logging, checkpointing, and the
+//! ready-made models for the paper's experiments (classifier/regressor
+//! heads over the LMU/LSTM layers).
+
+pub mod lm;
+pub mod models;
+
+pub use lm::{LmModel, Translator};
+pub use models::{ModelKind, RegressorKind, SeqClassifier, SeqRegressor};
+
+use crate::autograd::{Graph, NodeId, ParamStore};
+use crate::data::batcher::{Batch, BatchIter, SeqDataset, Targets};
+use crate::optim::{clip_global_norm, LrSchedule, Optimizer};
+use crate::util::{Rng, Timer};
+
+/// A trainable model: build the loss node for one batch, and predict.
+pub trait TrainableModel {
+    fn loss(&self, g: &mut Graph, store: &ParamStore, batch: &Batch) -> NodeId;
+    /// Class predictions (classification) or scalar outputs (regression).
+    fn predict(&self, store: &ParamStore, batch: &Batch) -> Prediction;
+}
+
+pub enum Prediction {
+    Classes(Vec<usize>),
+    Values(Vec<f32>),
+}
+
+/// Per-epoch record for EXPERIMENTS.md loss curves.
+#[derive(Clone, Debug)]
+pub struct EpochLog {
+    pub epoch: usize,
+    pub mean_loss: f64,
+    pub wall_secs: f64,
+    pub eval_metric: Option<f64>,
+}
+
+/// Result of a full training run.
+pub struct TrainResult {
+    pub epochs: Vec<EpochLog>,
+    pub step_losses: Vec<f32>,
+}
+
+/// Options for `fit`.
+pub struct FitOptions {
+    pub epochs: usize,
+    pub batch_size: usize,
+    pub schedule: LrSchedule,
+    pub grad_clip: Option<f32>,
+    pub seed: u64,
+    pub log_every: usize,
+    pub verbose: bool,
+}
+
+impl Default for FitOptions {
+    fn default() -> Self {
+        FitOptions {
+            epochs: 5,
+            batch_size: 32,
+            schedule: LrSchedule::constant(1e-3),
+            grad_clip: None,
+            seed: 0,
+            log_every: 0,
+            verbose: false,
+        }
+    }
+}
+
+/// Train `model` on `train`, optionally evaluating on `eval` each epoch.
+pub fn fit(
+    model: &dyn TrainableModel,
+    store: &mut ParamStore,
+    opt: &mut dyn Optimizer,
+    train: &SeqDataset,
+    eval: Option<&SeqDataset>,
+    opts: &FitOptions,
+) -> TrainResult {
+    let mut rng = Rng::new(opts.seed);
+    let mut epochs = Vec::new();
+    let mut step_losses = Vec::new();
+    for epoch in 0..opts.epochs {
+        opt.set_lr(opts.schedule.lr_at(epoch));
+        let timer = Timer::start();
+        let mut running = crate::metrics::Running::new();
+        let mut step = 0usize;
+        for batch in BatchIter::new(train, opts.batch_size, &mut rng) {
+            let mut g = Graph::new();
+            let loss = model.loss(&mut g, store, &batch);
+            g.backward(loss);
+            let lv = g.value(loss).item();
+            let mut grads = g.param_grads();
+            if let Some(c) = opts.grad_clip {
+                clip_global_norm(&mut grads, c);
+            }
+            opt.step(store, &grads);
+            running.push(lv as f64);
+            step_losses.push(lv);
+            step += 1;
+            if opts.verbose && opts.log_every > 0 && step % opts.log_every == 0 {
+                println!("    epoch {epoch} step {step}: loss {lv:.4}");
+            }
+        }
+        let eval_metric = eval.map(|ds| evaluate(model, store, ds, opts.batch_size));
+        let log = EpochLog {
+            epoch,
+            mean_loss: running.mean(),
+            wall_secs: timer.elapsed(),
+            eval_metric,
+        };
+        if opts.verbose {
+            match log.eval_metric {
+                Some(m) => println!(
+                    "  epoch {epoch}: loss {:.4}, eval {m:.4}, {:.1}s",
+                    log.mean_loss, log.wall_secs
+                ),
+                None => println!("  epoch {epoch}: loss {:.4}, {:.1}s", log.mean_loss, log.wall_secs),
+            }
+        }
+        epochs.push(log);
+    }
+    TrainResult { epochs, step_losses }
+}
+
+/// Evaluate accuracy (classification) or NRMSE (regression).
+pub fn evaluate(
+    model: &dyn TrainableModel,
+    store: &ParamStore,
+    ds: &SeqDataset,
+    batch_size: usize,
+) -> f64 {
+    let mut all_pred_c = Vec::new();
+    let mut all_true_c = Vec::new();
+    let mut all_pred_v = Vec::new();
+    let mut all_true_v = Vec::new();
+    for batch in BatchIter::sequential(ds, batch_size.min(ds.len())) {
+        match (model.predict(store, &batch), &batch.targets) {
+            (Prediction::Classes(p), Targets::Labels(t)) => {
+                all_pred_c.extend(p);
+                all_true_c.extend_from_slice(t);
+            }
+            (Prediction::Values(p), Targets::Values(t)) => {
+                all_pred_v.extend(p);
+                all_true_v.extend_from_slice(t);
+            }
+            _ => panic!("prediction/target kind mismatch"),
+        }
+    }
+    if !all_pred_c.is_empty() {
+        crate::metrics::accuracy(&all_pred_c, &all_true_c)
+    } else {
+        crate::metrics::nrmse(&all_pred_v, &all_true_v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SeqDataset;
+    use crate::optim::Adam;
+    use crate::tensor::Tensor;
+
+    /// A separable toy task: class = sign of the mean of the sequence.
+    fn toy_classification(n_examples: usize, seq_len: usize, seed: u64) -> SeqDataset {
+        let mut rng = Rng::new(seed);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..n_examples {
+            let sign = if i % 2 == 0 { 1.0f32 } else { -1.0 };
+            let mut x = Tensor::randn(&[seq_len, 1], 0.5, &mut rng);
+            x.map_inplace(|v| v + sign * 0.4);
+            xs.push(x);
+            ys.push(usize::from(sign > 0.0));
+        }
+        SeqDataset::classification(xs, ys)
+    }
+
+    #[test]
+    fn fit_reduces_loss_and_evaluates() {
+        let ds = toy_classification(64, 16, 0);
+        let (train, test) = ds.split(0.25);
+        let mut store = ParamStore::new();
+        let mut rng = Rng::new(1);
+        let model = SeqClassifier::new(
+            ModelKind::LmuParallel,
+            16, // seq len
+            1,  // dx
+            8,  // d
+            16, // hidden
+            2,  // classes
+            &mut store,
+            &mut rng,
+        );
+        let mut opt = Adam::new(1e-2);
+        let opts = FitOptions { epochs: 12, batch_size: 8, ..Default::default() };
+        let res = fit(&model, &mut store, &mut opt, &train, Some(&test), &opts);
+        assert_eq!(res.epochs.len(), 12);
+        let first = res.epochs[0].mean_loss;
+        let last = res.epochs.last().unwrap().mean_loss;
+        assert!(last < first * 0.7, "loss {first} -> {last}");
+        let acc = res.epochs.last().unwrap().eval_metric.unwrap();
+        assert!(acc > 80.0, "eval accuracy {acc}");
+    }
+
+    #[test]
+    fn schedule_applies_decay() {
+        let ds = toy_classification(16, 8, 2);
+        let mut store = ParamStore::new();
+        let mut rng = Rng::new(3);
+        let model = SeqClassifier::new(
+            ModelKind::LmuParallel,
+            8,
+            1,
+            4,
+            8,
+            2,
+            &mut store,
+            &mut rng,
+        );
+        let mut opt = Adam::new(1.0); // overwritten by schedule
+        let opts = FitOptions {
+            epochs: 2,
+            batch_size: 8,
+            schedule: LrSchedule::step_decay(1e-2, 1, 0.1),
+            ..Default::default()
+        };
+        fit(&model, &mut store, &mut opt, &ds, None, &opts);
+        assert!((opt.lr() - 1e-3).abs() < 1e-9, "decay not applied: {}", opt.lr());
+    }
+}

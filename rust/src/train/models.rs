@@ -1,0 +1,331 @@
+//! Ready-made models for the paper's experiments: sequence classifiers
+//! (psMNIST, sentiment) and regressors (Mackey-Glass) over any of the
+//! compared architectures.
+
+use crate::autograd::{Graph, NodeId, ParamStore};
+use crate::data::batcher::{Batch, Targets};
+use crate::layers::{
+    last_steps, lmu::LmuSpec, to_time_major, Activation, Dense, LmuOriginalCell,
+    LmuParallelLayer, LmuSequentialLayer, LstmLayer,
+};
+use crate::tensor::Tensor;
+use crate::train::{Prediction, TrainableModel};
+use crate::util::Rng;
+
+/// Which architecture backs the model (the paper's comparison set).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    /// our model, parallel training path (eq. 25/26)
+    LmuParallel,
+    /// our model, sequential "LTI version" (eq. 19 step by step)
+    LmuSequential,
+    /// the original LMU (eqs. 15-17)
+    LmuOriginal,
+    /// LSTM baseline
+    Lstm,
+}
+
+enum Backbone {
+    Parallel(LmuParallelLayer),
+    Sequential(LmuSequentialLayer),
+    Original(LmuOriginalCell),
+    Lstm(LstmLayer),
+}
+
+/// Classifier: backbone -> dense softmax head on the final-step features.
+pub struct SeqClassifier {
+    pub kind: ModelKind,
+    backbone: Backbone,
+    head: Dense,
+    pub seq_len: usize,
+    pub dx: usize,
+}
+
+impl SeqClassifier {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        kind: ModelKind,
+        seq_len: usize,
+        dx: usize,
+        d: usize,
+        hidden: usize,
+        classes: usize,
+        store: &mut ParamStore,
+        rng: &mut Rng,
+    ) -> Self {
+        let theta = seq_len as f64;
+        let backbone = match kind {
+            ModelKind::LmuParallel => Backbone::Parallel(LmuParallelLayer::new(
+                LmuSpec::new(dx, 1, d, theta, hidden),
+                seq_len,
+                store,
+                rng,
+                "clf.lmu",
+            )),
+            ModelKind::LmuSequential => Backbone::Sequential(LmuSequentialLayer::new(
+                LmuSpec::new(dx, 1, d, theta, hidden),
+                store,
+                rng,
+                "clf.lmu",
+            )),
+            ModelKind::LmuOriginal => Backbone::Original(LmuOriginalCell::new(
+                dx, hidden, d, theta, store, rng, "clf.orig",
+            )),
+            ModelKind::Lstm => Backbone::Lstm(LstmLayer::new(dx, hidden, store, rng, "clf.lstm")),
+        };
+        let head = Dense::new(hidden, classes, Activation::Linear, store, rng, "clf.head");
+        SeqClassifier { kind, backbone, head, seq_len, dx }
+    }
+
+    fn features(&self, g: &mut Graph, store: &ParamStore, batch: &Batch) -> NodeId {
+        let b = batch.batch_size;
+        let n = self.seq_len;
+        match &self.backbone {
+            Backbone::Parallel(layer) => {
+                let x = g.input(batch.x.clone());
+                let xl = g.input(last_steps(&batch.x, b, n));
+                layer.forward_last(g, store, x, xl, b)
+            }
+            Backbone::Sequential(layer) => {
+                let x = g.input(to_time_major(&batch.x, b, n));
+                layer.forward_last(g, store, x, b, n)
+            }
+            Backbone::Original(cell) => {
+                let x = g.input(to_time_major(&batch.x, b, n));
+                cell.forward_last(g, store, x, b, n)
+            }
+            Backbone::Lstm(layer) => {
+                let x = g.input(to_time_major(&batch.x, b, n));
+                layer.forward_last(g, store, x, b, n)
+            }
+        }
+    }
+
+    pub fn logits(&self, g: &mut Graph, store: &ParamStore, batch: &Batch) -> NodeId {
+        let f = self.features(g, store, batch);
+        self.head.forward(g, store, f)
+    }
+}
+
+impl TrainableModel for SeqClassifier {
+    fn loss(&self, g: &mut Graph, store: &ParamStore, batch: &Batch) -> NodeId {
+        let logits = self.logits(g, store, batch);
+        match &batch.targets {
+            Targets::Labels(y) => g.softmax_xent(logits, y),
+            _ => panic!("classifier needs labels"),
+        }
+    }
+
+    fn predict(&self, store: &ParamStore, batch: &Batch) -> Prediction {
+        let mut g = Graph::new();
+        let logits = self.logits(&mut g, store, batch);
+        Prediction::Classes(g.value(logits).argmax_rows())
+    }
+}
+
+/// Regressor for Mackey-Glass (Table 3): backbone -> dense(80, tanh) ->
+/// dense(1), matching the paper's "our model + an additional dense layer".
+pub struct SeqRegressor {
+    pub kind: RegressorKind,
+    backbone: RegressorBackbone,
+    mid: Dense,
+    out: Dense,
+    pub seq_len: usize,
+}
+
+/// The four rows of Table 3.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RegressorKind {
+    /// stacked LSTMs (paper baseline row 1)
+    Lstm,
+    /// original LMU cells (row 2)
+    LmuOriginal,
+    /// LMU -> LSTM hybrid (row 3)
+    Hybrid,
+    /// our model, parallel (row 4)
+    LmuParallel,
+}
+
+enum RegressorBackbone {
+    Lstm(LstmLayer, LstmLayer),
+    Original(LmuOriginalCell),
+    Hybrid(LmuOriginalCell, LstmLayer),
+    Parallel(LmuParallelLayer),
+}
+
+impl SeqRegressor {
+    pub fn new(
+        kind: RegressorKind,
+        seq_len: usize,
+        d: usize,
+        theta: f64,
+        hidden: usize,
+        store: &mut ParamStore,
+        rng: &mut Rng,
+    ) -> Self {
+        let backbone = match kind {
+            RegressorKind::Lstm => RegressorBackbone::Lstm(
+                LstmLayer::new(1, hidden, store, rng, "reg.lstm1"),
+                LstmLayer::new(hidden, hidden, store, rng, "reg.lstm2"),
+            ),
+            RegressorKind::LmuOriginal => RegressorBackbone::Original(LmuOriginalCell::new(
+                1, hidden, d, theta, store, rng, "reg.orig",
+            )),
+            RegressorKind::Hybrid => RegressorBackbone::Hybrid(
+                LmuOriginalCell::new(1, hidden, d, theta, store, rng, "reg.hlmu"),
+                LstmLayer::new(hidden, hidden, store, rng, "reg.hlstm"),
+            ),
+            RegressorKind::LmuParallel => RegressorBackbone::Parallel(LmuParallelLayer::new(
+                LmuSpec::new(1, 1, d, theta, hidden),
+                seq_len,
+                store,
+                rng,
+                "reg.lmu",
+            )),
+        };
+        let mid = Dense::new(hidden, 80.min(hidden * 4), Activation::Tanh, store, rng, "reg.mid");
+        let out = Dense::new(mid.dout, 1, Activation::Linear, store, rng, "reg.out");
+        SeqRegressor { kind, backbone, mid, out, seq_len }
+    }
+
+    fn features(&self, g: &mut Graph, store: &ParamStore, batch: &Batch) -> NodeId {
+        let b = batch.batch_size;
+        let n = self.seq_len;
+        match &self.backbone {
+            RegressorBackbone::Parallel(layer) => {
+                let x = g.input(batch.x.clone());
+                let xl = g.input(last_steps(&batch.x, b, n));
+                layer.forward_last(g, store, x, xl, b)
+            }
+            RegressorBackbone::Lstm(l1, l2) => {
+                let x = g.input(to_time_major(&batch.x, b, n));
+                let h1 = l1.forward_all(g, store, x, b, n);
+                l2.forward_last(g, store, h1, b, n)
+            }
+            RegressorBackbone::Original(cell) => {
+                let x = g.input(to_time_major(&batch.x, b, n));
+                cell.forward_last(g, store, x, b, n)
+            }
+            RegressorBackbone::Hybrid(cell, lstm) => {
+                let x = g.input(to_time_major(&batch.x, b, n));
+                let h1 = cell.forward_all(g, store, x, b, n);
+                lstm.forward_last(g, store, h1, b, n)
+            }
+        }
+    }
+
+    pub fn outputs(&self, g: &mut Graph, store: &ParamStore, batch: &Batch) -> NodeId {
+        let f = self.features(g, store, batch);
+        let m = self.mid.forward(g, store, f);
+        self.out.forward(g, store, m)
+    }
+}
+
+impl TrainableModel for SeqRegressor {
+    fn loss(&self, g: &mut Graph, store: &ParamStore, batch: &Batch) -> NodeId {
+        let pred = self.outputs(g, store, batch);
+        match &batch.targets {
+            Targets::Values(v) => {
+                let target = Tensor::new(&[v.len(), 1], v.clone());
+                g.mse(pred, &target)
+            }
+            _ => panic!("regressor needs values"),
+        }
+    }
+
+    fn predict(&self, store: &ParamStore, batch: &Batch) -> Prediction {
+        let mut g = Graph::new();
+        let out = self.outputs(&mut g, store, batch);
+        Prediction::Values(g.value(out).data().to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::batcher::{BatchIter, SeqDataset};
+    use crate::optim::{Adam, Optimizer};
+
+    fn toy_batch(b: usize, n: usize, seed: u64) -> (SeqDataset, Batch) {
+        let mut rng = Rng::new(seed);
+        let xs: Vec<Tensor> = (0..b * 2).map(|_| Tensor::randn(&[n, 1], 1.0, &mut rng)).collect();
+        let ys: Vec<usize> = (0..b * 2).map(|i| i % 2).collect();
+        let ds = SeqDataset::classification(xs, ys);
+        let batch = BatchIter::sequential(&ds, b).next().unwrap();
+        (ds, batch)
+    }
+
+    #[test]
+    fn all_classifier_kinds_run_forward_and_backward() {
+        for kind in [
+            ModelKind::LmuParallel,
+            ModelKind::LmuSequential,
+            ModelKind::LmuOriginal,
+            ModelKind::Lstm,
+        ] {
+            let mut store = ParamStore::new();
+            let mut rng = Rng::new(0);
+            let model = SeqClassifier::new(kind, 12, 1, 6, 10, 3, &mut store, &mut rng);
+            let (_ds, batch) = toy_batch(4, 12, 1);
+            let mut g = Graph::new();
+            let loss = model.loss(&mut g, &store, &batch);
+            assert!(g.value(loss).item().is_finite(), "{kind:?}");
+            g.backward(loss);
+            assert!(!g.param_grads().is_empty(), "{kind:?}");
+            match model.predict(&store, &batch) {
+                Prediction::Classes(c) => assert_eq!(c.len(), 4),
+                _ => panic!(),
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_and_sequential_classifiers_same_function() {
+        // build parallel, copy params into a sequential twin, compare
+        let mut store = ParamStore::new();
+        let mut rng = Rng::new(5);
+        let par = SeqClassifier::new(ModelKind::LmuParallel, 10, 1, 5, 8, 3, &mut store, &mut rng);
+        let mut store2 = ParamStore::new();
+        let mut rng2 = Rng::new(5); // same seed => same init draws
+        let seq =
+            SeqClassifier::new(ModelKind::LmuSequential, 10, 1, 5, 8, 3, &mut store2, &mut rng2);
+        let (_ds, batch) = toy_batch(3, 10, 2);
+        let mut g1 = Graph::new();
+        let l1 = par.logits(&mut g1, &store, &batch);
+        let mut g2 = Graph::new();
+        let l2 = seq.logits(&mut g2, &store2, &batch);
+        let err = g1.value(l1).max_abs_diff(g2.value(l2));
+        assert!(err < 2e-4, "parallel vs sequential classifier: {err}");
+    }
+
+    #[test]
+    fn all_regressor_kinds_train_a_step() {
+        let mut rng0 = Rng::new(7);
+        let xs: Vec<Tensor> = (0..8).map(|_| Tensor::randn(&[10, 1], 1.0, &mut rng0)).collect();
+        let ys: Vec<f32> = (0..8).map(|i| (i % 3) as f32 * 0.1).collect();
+        let ds = SeqDataset::regression(xs, ys);
+        for kind in [
+            RegressorKind::Lstm,
+            RegressorKind::LmuOriginal,
+            RegressorKind::Hybrid,
+            RegressorKind::LmuParallel,
+        ] {
+            let mut store = ParamStore::new();
+            let mut rng = Rng::new(8);
+            let model = SeqRegressor::new(kind, 10, 4, 10.0, 8, &mut store, &mut rng);
+            let batch = BatchIter::sequential(&ds, 4).next().unwrap();
+            let mut g = Graph::new();
+            let loss = model.loss(&mut g, &store, &batch);
+            let l0 = g.value(loss).item();
+            assert!(l0.is_finite(), "{kind:?}");
+            g.backward(loss);
+            let grads = g.param_grads();
+            let mut opt = Adam::new(1e-2);
+            opt.step(&mut store, &grads);
+            // second pass must see a changed (typically lower) loss
+            let mut g2 = Graph::new();
+            let loss2 = model.loss(&mut g2, &store, &batch);
+            assert_ne!(l0, g2.value(loss2).item(), "{kind:?} params did not move");
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! Small utilities shared across the framework: a seedable PRNG (no `rand`
+//! crate is available offline), wall-clock timing helpers and formatting.
+
+pub mod rng;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Timer;
+
+/// Format a byte count as a human-readable string.
+pub fn human_bytes(n: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a duration in seconds with an adaptive unit.
+pub fn human_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{secs:.2} s")
+    } else {
+        format!("{:.1} min", secs / 60.0)
+    }
+}
+
+/// Format a large count with thousands separators (e.g. 1_234_567 -> "1,234,567").
+pub fn human_count(n: usize) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(human_duration(0.5e-9 * 2.0), "1.0 ns");
+        assert_eq!(human_duration(2e-6), "2.00 µs");
+        assert_eq!(human_duration(0.015), "15.00 ms");
+        assert_eq!(human_duration(2.5), "2.50 s");
+        assert_eq!(human_duration(300.0), "5.0 min");
+    }
+
+    #[test]
+    fn count_formatting() {
+        assert_eq!(human_count(5), "5");
+        assert_eq!(human_count(1234), "1,234");
+        assert_eq!(human_count(1234567), "1,234,567");
+    }
+}

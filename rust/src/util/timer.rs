@@ -1,0 +1,69 @@
+//! Wall-clock timing helper used by the trainer and the bench harness.
+
+use std::time::Instant;
+
+/// A simple stopwatch.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+    laps: Vec<(String, f64)>,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now(), laps: Vec::new() }
+    }
+
+    /// Seconds elapsed since construction (or last `reset`).
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn reset(&mut self) {
+        self.start = Instant::now();
+    }
+
+    /// Record a named lap with the elapsed time, then reset.
+    pub fn lap(&mut self, name: &str) -> f64 {
+        let dt = self.elapsed();
+        self.laps.push((name.to_string(), dt));
+        self.reset();
+        dt
+    }
+
+    pub fn laps(&self) -> &[(String, f64)] {
+        &self.laps
+    }
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elapsed_increases() {
+        let t = Timer::start();
+        let a = t.elapsed();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let b = t.elapsed();
+        assert!(b > a);
+    }
+
+    #[test]
+    fn laps_record_and_reset() {
+        let mut t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        let l1 = t.lap("one");
+        assert!(l1 >= 0.001);
+        let l2 = t.elapsed();
+        assert!(l2 < l1 + 0.5); // reset happened
+        assert_eq!(t.laps().len(), 1);
+        assert_eq!(t.laps()[0].0, "one");
+    }
+}
