@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Repo CI: build → test → fmt check → thread-scaling bench (smoke).
+# Mirrors the tier-1 verify (cargo build --release && cargo test -q)
+# and additionally smoke-runs the exec-substrate scaling bench so the
+# BENCH_threads.json perf record stays fresh.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== build (release) =="
+cargo build --release
+
+echo "== test =="
+cargo test -q
+
+echo "== fmt check =="
+if cargo fmt --version >/dev/null 2>&1; then
+    # report-only: formatting drift should not mask build/test signal
+    cargo fmt --all -- --check || echo "fmt check found diffs (non-fatal)"
+else
+    echo "rustfmt not installed; skipping fmt check"
+fi
+
+echo "== thread-scaling bench (smoke) =="
+PLMU_BENCH_SMOKE=1 cargo bench --bench fig1_threads
+
+echo "== ci OK =="

@@ -13,6 +13,7 @@
 
 use plmu::autograd::ParamStore;
 use plmu::coordinator::{NativeStreamingEngine, ServerConfig, StreamingEngine, StreamingServer};
+use plmu::error::Result;
 use plmu::layers::lmu::{LmuParallelLayer, LmuSpec};
 use plmu::runtime::{ArtifactInput, Runtime};
 use plmu::util::{Rng, Timer};
@@ -30,7 +31,7 @@ struct PjrtStreamingEngine {
 }
 
 impl PjrtStreamingEngine {
-    fn new(dir: &std::path::Path) -> anyhow::Result<Self> {
+    fn new(dir: &std::path::Path) -> Result<Self> {
         let mut rt = Runtime::open(dir)?;
         let params = rt.init_params()?;
         let d = rt.manifest.config_usize("d").unwrap();
@@ -87,7 +88,7 @@ fn drive(server: &StreamingServer, sessions: u64, tokens: usize, label: &str) {
     );
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let (sessions, tokens) = (8u64, 200usize);
     println!("=== streaming inference: {sessions} sessions x {tokens} tokens ===\n");
 

@@ -1,0 +1,210 @@
+//! Thread-scaling bench for the exec substrate: sweeps the worker-thread
+//! count over the two kernels that dominate parallel-LMU training wall
+//! clock — blocked matmul and the batched FFT causal convolution — on
+//! shapes drawn from `table1_complexity` (d=16, n up to 1024), plus the
+//! full DnFftOperator apply.  Emits a machine-readable perf record to
+//! `BENCH_threads.json` at the repo root (the perf trajectory file).
+//!
+//! Also asserts, per sweep point, that the parallel result is
+//! bit-identical to the single-thread reference — the substrate's core
+//! invariant.
+//!
+//! Run: cargo bench --bench fig1_threads
+//! Smoke mode (CI): PLMU_BENCH_SMOKE=1 cargo bench --bench fig1_threads
+
+use plmu::benchlib::{bench, BenchConfig, JsonValue, PerfJson, Table};
+use plmu::dn::{DelayNetwork, DnFftOperator};
+use plmu::exec;
+use plmu::fft::{next_pow2, RfftCache};
+use plmu::util::Rng;
+use plmu::Tensor;
+
+/// Walk up from cwd looking for the repo root (ROADMAP.md marker); the
+/// bench process runs with cwd = the crate dir (rust/), the trajectory
+/// file belongs at the repo root.
+fn repo_root() -> std::path::PathBuf {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    for _ in 0..5 {
+        if dir.join("ROADMAP.md").exists() {
+            return dir;
+        }
+        match dir.parent() {
+            Some(p) => dir = p.to_path_buf(),
+            None => break,
+        }
+    }
+    std::env::current_dir().unwrap_or_else(|_| ".".into())
+}
+
+fn checksum(xs: &[f32]) -> u64 {
+    // order-sensitive bit-level fingerprint: equal iff bit-identical
+    let mut h = 0xcbf29ce484222325u64;
+    for v in xs {
+        h ^= v.to_bits() as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+struct Case {
+    name: &'static str,
+    /// items processed per run (for throughput)
+    items: f64,
+    /// run the kernel, return a fingerprint of the result
+    run: Box<dyn Fn() -> u64>,
+}
+
+fn main() {
+    let smoke = std::env::var("PLMU_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
+    let cfg = if smoke {
+        BenchConfig { warmup_secs: 0.02, measure_secs: 0.08, max_iters: 20, min_iters: 2 }
+    } else {
+        BenchConfig { warmup_secs: 0.1, measure_secs: 0.6, max_iters: 200, min_iters: 3 }
+    };
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut sweep = vec![1usize, 2, 4];
+    if hw >= 8 && !smoke {
+        sweep.push(8);
+    }
+    println!(
+        "thread-scaling sweep {:?} on {} hardware threads{} (shapes from table1_complexity: d=16, n<=1024)",
+        sweep,
+        hw,
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let mut rng = Rng::new(0);
+
+    // ---- case 1/2: matmul + matmul_tn (training fwd + weight-grad) -----
+    let (m, k, n) = if smoke { (256usize, 128usize, 128usize) } else { (1024, 256, 256) };
+    let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+    let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+    let at = Tensor::randn(&[k, m], 1.0, &mut rng);
+
+    // ---- case 3: batched causal convolution over B·dx rows -------------
+    let conv_n = if smoke { 512usize } else { 1024 };
+    let conv_rows = if smoke { 16usize } else { 64 };
+    let kernel: Vec<f32> = (0..conv_n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let cache = RfftCache::new(&kernel, next_pow2(2 * conv_n));
+    let rows: Vec<Vec<f32>> = (0..conv_rows)
+        .map(|_| (0..conv_n).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+        .collect();
+
+    // ---- case 4: full DN FFT operator (eq. 26) -------------------------
+    let (dn_n, dn_d, dn_du) = if smoke { (256usize, 8usize, 8usize) } else { (512, 16, 16) };
+    let dn = DelayNetwork::new(dn_d, dn_n as f64);
+    let op = DnFftOperator::new(&dn, dn_n);
+    let u = Tensor::randn(&[dn_n, dn_du], 1.0, &mut rng);
+
+    let cases: Vec<Case> = vec![
+        Case {
+            name: "matmul",
+            items: (m * k * n) as f64,
+            run: {
+                let (a, b) = (a.clone(), b.clone());
+                Box::new(move || checksum(a.matmul(&b).data()))
+            },
+        },
+        Case {
+            name: "matmul_tn",
+            items: (m * k * n) as f64,
+            run: {
+                let (at, b) = (at.clone(), b.clone());
+                Box::new(move || checksum(at.matmul_tn(&b).data()))
+            },
+        },
+        Case {
+            name: "conv_batch",
+            items: (conv_rows * conv_n) as f64,
+            run: {
+                let rows = rows.clone();
+                Box::new(move || {
+                    let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+                    let outs = cache.conv_batch(&refs, conv_n);
+                    // order-sensitive fold so row reordering is detected
+                    let mut h = 0u64;
+                    for o in &outs {
+                        h = h.wrapping_mul(0x100000001b3) ^ checksum(o);
+                    }
+                    h
+                })
+            },
+        },
+        Case {
+            name: "dn_fft_apply",
+            items: (dn_n * dn_d * dn_du) as f64,
+            run: Box::new(move || checksum(op.apply(&u).data())),
+        },
+    ];
+
+    let mut record = PerfJson::new("fig1_threads");
+    let mut table = Table::new(&["case", "threads", "mean (ms)", "items/s", "speedup vs 1t"]);
+    // speedup of matmul-family and conv-family at 4 threads (acceptance:
+    // >1.5x each)
+    let mut speedup_at_4: Vec<(String, f64)> = Vec::new();
+
+    for case in &cases {
+        let mut base_mean = 0.0f64;
+        let mut ref_sum: Option<u64> = None;
+        for &t in &sweep {
+            exec::set_threads(t);
+            // correctness first: parallel must be bit-identical to serial
+            let sum = (case.run)();
+            match ref_sum {
+                None => ref_sum = Some(sum),
+                Some(r) => assert_eq!(
+                    r, sum,
+                    "{}: result at {t} threads differs from 1-thread reference",
+                    case.name
+                ),
+            }
+            let stats = bench(case.name, cfg, || {
+                std::hint::black_box((case.run)());
+            });
+            if t == 1 {
+                base_mean = stats.mean;
+            }
+            let speedup = base_mean / stats.mean;
+            if t == 4 {
+                speedup_at_4.push((case.name.to_string(), speedup));
+            }
+            table.row(&[
+                case.name.to_string(),
+                t.to_string(),
+                format!("{:.2}", stats.mean * 1e3),
+                format!("{:.3e}", case.items / stats.mean),
+                format!("{speedup:.2}x"),
+            ]);
+            record.push(&[
+                ("case", JsonValue::Str(case.name.to_string())),
+                ("threads", JsonValue::Int(t as i64)),
+                ("mean_s", JsonValue::Num(stats.mean)),
+                ("p50_s", JsonValue::Num(stats.p50)),
+                ("items_per_s", JsonValue::Num(case.items / stats.mean)),
+                ("speedup_vs_1t", JsonValue::Num(speedup)),
+                ("smoke", JsonValue::Bool(smoke)),
+                ("hw_threads", JsonValue::Int(hw as i64)),
+            ]);
+        }
+    }
+    exec::set_threads(1);
+
+    table.print("thread scaling — exec substrate hot kernels");
+
+    let out = repo_root().join("BENCH_threads.json");
+    match record.write(&out) {
+        Ok(()) => println!("\nwrote {} ({} records)", out.display(), record.len()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", out.display()),
+    }
+
+    if sweep.contains(&4) {
+        println!("\nacceptance (>1.5x at 4 threads vs 1):");
+        for (name, s) in &speedup_at_4 {
+            let verdict = if *s > 1.5 { "PASS" } else { "MISS" };
+            println!("  {name:<14} {s:.2}x  {verdict}");
+        }
+        if hw < 4 {
+            println!("  (only {hw} hardware threads available — scaling is bounded by the machine)");
+        }
+    }
+}

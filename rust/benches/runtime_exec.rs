@@ -4,11 +4,12 @@
 //! Requires `make artifacts`; prints a notice and exits cleanly otherwise.
 
 use plmu::benchlib::{bench_report, BenchConfig};
+use plmu::error::Result;
 use plmu::runtime::{ArtifactInput, Runtime};
 use plmu::util::Timer;
 use plmu::Tensor;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let dir = std::path::Path::new("artifacts");
     let mut rt = match Runtime::open(dir) {
         Ok(rt) => rt,

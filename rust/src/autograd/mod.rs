@@ -314,6 +314,11 @@ impl Graph {
 
     /// Batched DN causal convolution, all states (the parallel training
     /// path, eq. 26).  u: (B·n, du) channel-major output: (B·n, du·d).
+    ///
+    /// The B samples are independent and each owns a contiguous block of
+    /// output rows, so the batch fans out across `crate::exec` workers
+    /// (the per-channel parallelism inside [`DnFftOperator::apply`] then
+    /// runs serially — nested regions don't over-subscribe).
     pub fn dn_conv(&mut self, u: NodeId, op: Rc<DnFftOperator>, batch: usize) -> NodeId {
         let uv = &self.nodes[u].value;
         let n = op.n;
@@ -321,19 +326,24 @@ impl Graph {
         assert_eq!(uv.rows(), batch * n, "dn_conv: rows {} != B*n {}", uv.rows(), batch * n);
         let d = op.d;
         let mut out = Tensor::zeros(&[batch * n, du * d]);
-        for b in 0..batch {
-            let u_b = uv.slice_rows(b * n, (b + 1) * n);
-            let m = op.apply(&u_b); // (n, d, du)
-            // repack (n, d, du) -> rows (n, du*d) channel-major
-            for t in 0..n {
-                for c in 0..du {
-                    for s in 0..d {
-                        out.data_mut()[(b * n + t) * du * d + c * d + s] =
-                            m.data()[(t * d + s) * du + c];
+        let op_ref: &DnFftOperator = &op;
+        let sample_len = n * du * d;
+        let workers = crate::exec::workers_for(batch, batch * du * (d + 1) * n * 32);
+        crate::exec::parallel_rows_mut(out.data_mut(), sample_len, workers, |b0, block| {
+            for (bi, sample) in block.chunks_mut(sample_len).enumerate() {
+                let b = b0 + bi;
+                let u_b = uv.slice_rows(b * n, (b + 1) * n);
+                let m = op_ref.apply(&u_b); // (n, d, du)
+                // repack (n, d, du) -> rows (n, du*d) channel-major
+                for t in 0..n {
+                    for c in 0..du {
+                        for s in 0..d {
+                            sample[t * du * d + c * d + s] = m.data()[(t * d + s) * du + c];
+                        }
                     }
                 }
             }
-        }
+        });
         self.push(out, Op::DnConv { op, batch }, vec![u], None)
     }
 
@@ -570,21 +580,30 @@ impl Graph {
                 let d = op.d;
                 let du = self.nodes[parents[0]].value.cols();
                 // unpack channel-major (B·n, du·d) grad -> (n, d, du) per b,
-                // run the adjoint convolution, pack back into (B·n, du)
+                // run the adjoint convolution, pack back into (B·n, du);
+                // samples are independent, so the batch fans out like the
+                // forward pass does.
                 let mut gu = Tensor::zeros(&[batch * n, du]);
-                for b in 0..batch {
-                    let mut dm = Tensor::zeros(&[n, d, du]);
-                    for t in 0..n {
-                        for c in 0..du {
-                            for s in 0..d {
-                                dm.data_mut()[(t * d + s) * du + c] =
-                                    g.data()[(b * n + t) * du * d + c * d + s];
+                let op_ref: &DnFftOperator = &op;
+                let g_ref = &g;
+                let sample_len = n * du;
+                let workers = crate::exec::workers_for(batch, batch * du * (d + 1) * n * 32);
+                crate::exec::parallel_rows_mut(gu.data_mut(), sample_len, workers, |b0, block| {
+                    for (bi, sample) in block.chunks_mut(sample_len).enumerate() {
+                        let b = b0 + bi;
+                        let mut dm = Tensor::zeros(&[n, d, du]);
+                        for t in 0..n {
+                            for c in 0..du {
+                                for s in 0..d {
+                                    dm.data_mut()[(t * d + s) * du + c] =
+                                        g_ref.data()[(b * n + t) * du * d + c * d + s];
+                                }
                             }
                         }
+                        let gb = op_ref.apply_adjoint(&dm); // (n, du)
+                        sample.copy_from_slice(gb.data());
                     }
-                    let gb = op.apply_adjoint(&dm); // (n, du)
-                    gu.data_mut()[b * n * du..(b + 1) * n * du].copy_from_slice(gb.data());
-                }
+                });
                 self.accum(parents[0], gu);
             }
             Op::DnLast { batch } => {

@@ -1,7 +1,9 @@
 //! Micro-benchmark harness (criterion substitute — criterion is not in the
 //! offline vendor set).  Provides warmup, adaptive iteration counts, and
-//! robust statistics, plus a table printer the `rust/benches/*.rs` binaries
-//! use to emit the paper's tables/figures as aligned text.
+//! robust statistics, a table printer the `rust/benches/*.rs` binaries use
+//! to emit the paper's tables/figures as aligned text, and a minimal JSON
+//! perf-record writer ([`PerfJson`], no serde offline) for machine-readable
+//! trajectory files like `BENCH_threads.json`.
 
 use crate::util::{human_duration, Timer};
 
@@ -140,6 +142,97 @@ impl Table {
     }
 }
 
+// --------------------------------------------------------------- perf JSON
+
+/// A JSON value for perf records (numbers, strings, bools).
+#[derive(Clone, Debug)]
+pub enum JsonValue {
+    Num(f64),
+    Int(i64),
+    Str(String),
+    Bool(bool),
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl JsonValue {
+    fn render(&self) -> String {
+        match self {
+            // f64 Display never emits exponents or inf/nan-safe text, so
+            // guard non-finite values explicitly
+            JsonValue::Num(v) if v.is_finite() => format!("{v}"),
+            JsonValue::Num(_) => "null".to_string(),
+            JsonValue::Int(v) => format!("{v}"),
+            JsonValue::Str(s) => format!("\"{}\"", json_escape(s)),
+            JsonValue::Bool(b) => format!("{b}"),
+        }
+    }
+}
+
+/// Flat-record JSON writer for perf trajectory files:
+/// `{"bench": ..., "records": [{...}, ...]}`.
+pub struct PerfJson {
+    bench: String,
+    records: Vec<Vec<(String, JsonValue)>>,
+}
+
+impl PerfJson {
+    pub fn new(bench: &str) -> Self {
+        PerfJson { bench: bench.to_string(), records: Vec::new() }
+    }
+
+    /// Append one flat record of (field, value) pairs.
+    pub fn push(&mut self, fields: &[(&str, JsonValue)]) {
+        self.records
+            .push(fields.iter().map(|(k, v)| (k.to_string(), v.clone())).collect());
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Serialize the whole document.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(&self.bench)));
+        out.push_str("  \"records\": [\n");
+        for (i, rec) in self.records.iter().enumerate() {
+            let fields: Vec<String> = rec
+                .iter()
+                .map(|(k, v)| format!("\"{}\": {}", json_escape(k), v.render()))
+                .collect();
+            let comma = if i + 1 < self.records.len() { "," } else { "" };
+            out.push_str(&format!("    {{{}}}{comma}\n", fields.join(", ")));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write the document to `path`.
+    pub fn write(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.render())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -196,5 +289,40 @@ mod tests {
     fn table_rejects_bad_row() {
         let mut t = Table::new(&["a", "b"]);
         t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn perf_json_renders_valid_structure() {
+        let mut p = PerfJson::new("fig1_threads");
+        p.push(&[
+            ("case", JsonValue::Str("matmul \"odd\"".into())),
+            ("threads", JsonValue::Int(4)),
+            ("mean_s", JsonValue::Num(0.0125)),
+            ("ok", JsonValue::Bool(true)),
+            ("bad", JsonValue::Num(f64::NAN)),
+        ]);
+        p.push(&[("threads", JsonValue::Int(1))]);
+        let s = p.render();
+        assert!(s.contains("\"bench\": \"fig1_threads\""));
+        assert!(s.contains("\"threads\": 4"));
+        assert!(s.contains("\"mean_s\": 0.0125"));
+        assert!(s.contains("\"case\": \"matmul \\\"odd\\\"\""));
+        assert!(s.contains("\"bad\": null"));
+        assert_eq!(p.len(), 2);
+        // balanced braces/brackets as a cheap well-formedness check
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
+    }
+
+    #[test]
+    fn perf_json_roundtrips_to_disk() {
+        let dir = std::env::temp_dir().join("plmu_perfjson_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.json");
+        let mut p = PerfJson::new("t");
+        p.push(&[("v", JsonValue::Num(1.5))]);
+        p.write(&path).unwrap();
+        let back = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(back, p.render());
     }
 }

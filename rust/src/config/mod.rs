@@ -36,16 +36,38 @@ pub struct Config {
     values: BTreeMap<String, Value>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("line {0}: {1}")]
     Parse(usize, String),
-    #[error("missing key: {0}")]
     Missing(String),
-    #[error("key {0} has wrong type (found {1:?})")]
     WrongType(String, Value),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::Parse(line, msg) => write!(f, "line {line}: {msg}"),
+            ConfigError::Missing(key) => write!(f, "missing key: {key}"),
+            ConfigError::WrongType(key, v) => write!(f, "key {key} has wrong type (found {v:?})"),
+            ConfigError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ConfigError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ConfigError {
+    fn from(e: std::io::Error) -> Self {
+        ConfigError::Io(e)
+    }
 }
 
 impl Config {
@@ -173,6 +195,11 @@ fn parse_value(s: &str, lineno: usize) -> Result<Value, ConfigError> {
 
 /// Typed training config (defaults match the paper: Adam with default
 /// parameters, no schedule except text8's step decay).
+///
+/// `threads` is the kernel-level worker count for the `crate::exec`
+/// substrate (matmul / FFT conv / elementwise): 0 = auto (all cores,
+/// capped), 1 = the serial reference path.  Distinct from `workers`,
+/// which is the number of *data-parallel replicas* in `train-dp`.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
     pub epochs: usize,
@@ -184,6 +211,7 @@ pub struct TrainConfig {
     pub seed: u64,
     pub log_every: usize,
     pub workers: usize,
+    pub threads: usize,
 }
 
 impl Default for TrainConfig {
@@ -198,6 +226,7 @@ impl Default for TrainConfig {
             seed: 0,
             log_every: 50,
             workers: 1,
+            threads: 0,
         }
     }
 }
@@ -222,6 +251,15 @@ impl TrainConfig {
             seed: c.int_or(&k("seed"), 0) as u64,
             log_every: c.usize_or(&k("log_every"), d.log_every),
             workers: c.usize_or(&k("workers"), d.workers),
+            threads: c.usize_or(&k("threads"), d.threads),
+        }
+    }
+
+    /// Apply the `threads` knob to the global execution substrate
+    /// (0 = leave the auto default in place).
+    pub fn apply_threads(&self) {
+        if self.threads > 0 {
+            crate::exec::set_threads(self.threads);
         }
     }
 }
@@ -293,6 +331,14 @@ theta = 784.0
         assert_eq!(t.batch_size, 64);
         assert_eq!(t.grad_clip, Some(1.0));
         assert_eq!(t.lr_decay_epoch, None);
+        assert_eq!(t.threads, 0); // default: auto
+    }
+
+    #[test]
+    fn threads_knob_parses() {
+        let c = Config::parse("[train]\nthreads = 4").unwrap();
+        let t = TrainConfig::from_config(&c, "train");
+        assert_eq!(t.threads, 4);
     }
 
     #[test]

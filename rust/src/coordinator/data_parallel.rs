@@ -124,46 +124,53 @@ impl DataParallelCoordinator {
             let res_tx = res_tx.clone();
             let factory = factory.clone();
             let cfg = cfg.clone();
+            // replica threads ARE the parallelism: the whole worker body
+            // (model construction included — DnFftOperator::new fans out
+            // too) runs with the kernel-level exec substrate serialized,
+            // so replica count × kernel threads never multiply.
             handles.push(std::thread::spawn(move || {
-                let (mut store, model) = factory();
-                let mut rng = Rng::new(cfg.seed ^ (w as u64 + 1).wrapping_mul(0x9E37_79B9));
-                let per_epoch = shard.len() / cfg.batch_size.min(shard.len());
-                let mut remaining = per_epoch * cfg.epochs;
-                'epochs: for _epoch in 0..cfg.epochs {
-                    let mut batches: Vec<_> =
-                        BatchIter::new(&shard, cfg.batch_size.min(shard.len()), &mut rng).collect();
-                    for batch in batches.drain(..) {
-                        // wait for fresh params
-                        match cmd_rx.recv() {
-                            Ok(Cmd::Step(params)) => store.unpack(&params),
-                            _ => break 'epochs,
-                        }
-                        let mut g = Graph::new();
-                        let loss = model.loss(&mut g, &store, &batch);
-                        g.backward(loss);
-                        let lv = g.value(loss).item();
-                        let grads = g.param_grads();
-                        let packed = pack_grads(&store, &grads);
-                        remaining -= 1;
-                        if res_tx
-                            .send(WorkerOut {
-                                worker: w,
-                                grads: packed,
-                                loss: lv,
-                                batches_left: remaining,
-                            })
-                            .is_err()
-                        {
-                            break 'epochs;
+                crate::exec::run_serialized(|| {
+                    let (mut store, model) = factory();
+                    let mut rng = Rng::new(cfg.seed ^ (w as u64 + 1).wrapping_mul(0x9E37_79B9));
+                    let per_epoch = shard.len() / cfg.batch_size.min(shard.len());
+                    let mut remaining = per_epoch * cfg.epochs;
+                    'epochs: for _epoch in 0..cfg.epochs {
+                        let mut batches: Vec<_> =
+                            BatchIter::new(&shard, cfg.batch_size.min(shard.len()), &mut rng)
+                                .collect();
+                        for batch in batches.drain(..) {
+                            // wait for fresh params
+                            match cmd_rx.recv() {
+                                Ok(Cmd::Step(params)) => store.unpack(&params),
+                                _ => break 'epochs,
+                            }
+                            let mut g = Graph::new();
+                            let loss = model.loss(&mut g, &store, &batch);
+                            g.backward(loss);
+                            let lv = g.value(loss).item();
+                            let grads = g.param_grads();
+                            let packed = pack_grads(&store, &grads);
+                            remaining -= 1;
+                            if res_tx
+                                .send(WorkerOut {
+                                    worker: w,
+                                    grads: packed,
+                                    loss: lv,
+                                    batches_left: remaining,
+                                })
+                                .is_err()
+                            {
+                                break 'epochs;
+                            }
                         }
                     }
-                }
-                // drain any final Stop
-                while let Ok(cmd) = cmd_rx.recv() {
-                    if matches!(cmd, Cmd::Stop) {
-                        break;
+                    // drain any final Stop
+                    while let Ok(cmd) = cmd_rx.recv() {
+                        if matches!(cmd, Cmd::Stop) {
+                            break;
+                        }
                     }
-                }
+                });
             }));
         }
         drop(res_tx);

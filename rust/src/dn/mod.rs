@@ -14,7 +14,15 @@
 //!
 //! All strategies are *exactly* equivalent in exact arithmetic; the tests
 //! pin them against each other to ~1e-4 in f32.
+//!
+//! The parallel evaluation strategies dispatch through `crate::exec`:
+//! [`DnFftOperator`] fans its independent input channels (and, at build
+//! time, its d kernel spectra) across scoped worker threads, and
+//! [`DelayNetwork::parallel_last`] row-partitions the impulse-response
+//! application.  Every partition computes each output element with the
+//! identical serial op order, so thread count never changes results.
 
+use crate::exec;
 use crate::fft::{next_pow2, RfftCache};
 use crate::linalg::{expm, Mat};
 use crate::tensor::Tensor;
@@ -165,22 +173,29 @@ impl DelayNetwork {
     }
 
     /// eq. (25): final state only.  u: (n, du) -> (d, du) in O(n d du).
+    /// The impulse-response application is row-partitioned over the d
+    /// state dimensions; per element the j-ascending accumulation order
+    /// matches the serial loop exactly.
     pub fn parallel_last(&self, u: &Tensor) -> Tensor {
         let (n, du) = (u.shape()[0], u.shape()[1]);
         let h = self.impulse_response(n);
         let d = self.d;
         let mut out = Tensor::zeros(&[d, du]);
+        let (hd, ud) = (h.data(), u.data());
+        let workers = exec::workers_for(d, n * d * du);
         // m_n[s, c] = sum_j H[n-1-j, s] u[j, c]
-        for j in 0..n {
-            let hrow = &h.data()[(n - 1 - j) * d..(n - j) * d];
-            let urow = &u.data()[j * du..(j + 1) * du];
-            for (s, &hv) in hrow.iter().enumerate() {
-                let orow = &mut out.data_mut()[s * du..(s + 1) * du];
-                for (o, &uv) in orow.iter_mut().zip(urow) {
-                    *o += hv * uv;
+        exec::parallel_rows_mut(out.data_mut(), du, workers, |s0, block| {
+            for (r, orow) in block.chunks_mut(du).enumerate() {
+                let s = s0 + r;
+                for j in 0..n {
+                    let hv = hd[(n - 1 - j) * d + s];
+                    let urow = &ud[j * du..(j + 1) * du];
+                    for (o, &uv) in orow.iter_mut().zip(urow) {
+                        *o += hv * uv;
+                    }
                 }
             }
-        }
+        });
         out
     }
 
@@ -276,32 +291,71 @@ impl DnFftOperator {
         let d = dn.d;
         let h = dn.impulse_response(n);
         let nfft = next_pow2(2 * n);
-        let caches = (0..d)
-            .map(|s| {
-                let kernel: Vec<f32> = (0..n).map(|t| h.data()[t * d + s]).collect();
-                RfftCache::new(&kernel, nfft)
-            })
-            .collect();
+        // the d kernel spectra are independent FFTs — build them in parallel
+        let workers = exec::workers_for(d, d * nfft * 16);
+        let caches = exec::parallel_map(d, workers, |s| {
+            let kernel: Vec<f32> = (0..n).map(|t| h.data()[t * d + s]).collect();
+            RfftCache::new(&kernel, nfft)
+        });
         DnFftOperator { n, d, nfft, caches }
     }
 
     /// u: (n, du) -> m: (n, d, du).
+    ///
+    /// The du input channels are independent; each worker computes one
+    /// channel's signal spectrum and its d convolutions into a private
+    /// contiguous block, then a single scatter pass interleaves the blocks
+    /// into the (n, d, du) layout.  Per element the computation is the
+    /// identical serial op sequence, so results are bit-exact at any
+    /// thread count.
     pub fn apply(&self, u: &Tensor) -> Tensor {
         let (n, du) = (u.shape()[0], u.shape()[1]);
         assert_eq!(n, self.n, "operator built for n={}, got {n}", self.n);
         let d = self.d;
+        let ud = u.data();
         let mut out = Tensor::zeros(&[n, d, du]);
-        let mut chan = vec![0.0f32; n];
-        for c in 0..du {
-            for (t, ch) in chan.iter_mut().enumerate() {
-                *ch = u.data()[t * du + c];
+        let workers = exec::workers_for(du, du * (d + 1) * self.nfft * 16);
+        if workers <= 1 {
+            // serial reference: scatter each conv result straight into the
+            // interleaved output (no intermediate block allocation) — this
+            // is the path the batch-parallel dn_conv nests into
+            let od = out.data_mut();
+            let mut chan = vec![0.0f32; n];
+            for c in 0..du {
+                for (t, ch) in chan.iter_mut().enumerate() {
+                    *ch = ud[t * du + c];
+                }
+                // reuse the signal half-spectrum across all d kernels
+                let fs = crate::fft::rfft_half(&chan, self.nfft);
+                for (s, cache) in self.caches.iter().enumerate() {
+                    let m_sc = cache.conv_spectrum(&fs, n);
+                    for (t, &v) in m_sc.iter().enumerate() {
+                        od[(t * d + s) * du + c] = v;
+                    }
+                }
             }
-            // reuse the signal half-spectrum across all d kernels
+            return out;
+        }
+        // channel-parallel: each worker fills a private [s][t] block, then
+        // one scatter pass interleaves (same values, same per-element ops)
+        let chan_blocks: Vec<Vec<f32>> = exec::parallel_map(du, workers, |c| {
+            let mut chan = vec![0.0f32; n];
+            for (t, ch) in chan.iter_mut().enumerate() {
+                *ch = ud[t * du + c];
+            }
             let fs = crate::fft::rfft_half(&chan, self.nfft);
+            let mut block = vec![0.0f32; d * n];
             for (s, cache) in self.caches.iter().enumerate() {
                 let m_sc = cache.conv_spectrum(&fs, n);
-                for (t, &v) in m_sc.iter().enumerate() {
-                    out.data_mut()[(t * d + s) * du + c] = v;
+                block[s * n..(s + 1) * n].copy_from_slice(&m_sc);
+            }
+            block
+        });
+        let od = out.data_mut();
+        for (c, block) in chan_blocks.iter().enumerate() {
+            for s in 0..d {
+                for (t, &v) in block[s * n..(s + 1) * n].iter().enumerate() {
+                    od[(t * d + s) * du + c] = v;
                 }
             }
         }
@@ -310,24 +364,55 @@ impl DnFftOperator {
 
     /// Adjoint (transpose) of `apply` w.r.t. u — the backward pass of the
     /// DN convolution: du[j, c] = Σ_{t≥j} Σ_s H[t−j, s] dm[t, s, c].
-    /// Evaluated as time-reversed causal convolution (parallel, like fwd).
+    /// Evaluated as time-reversed causal convolution, channel-parallel
+    /// like the forward; per element the s-ascending accumulation matches
+    /// the serial loop exactly.
     pub fn apply_adjoint(&self, dm: &Tensor) -> Tensor {
         let (n, d, du) = (dm.shape()[0], dm.shape()[1], dm.shape()[2]);
         assert_eq!(n, self.n);
         assert_eq!(d, self.d);
+        let dmd = dm.data();
         let mut out = Tensor::zeros(&[n, du]);
-        let mut chan = vec![0.0f32; n];
-        for c in 0..du {
+        let workers = exec::workers_for(du, du * (d + 1) * self.nfft * 16);
+        if workers <= 1 {
+            // serial reference: accumulate straight into the output
+            let od = out.data_mut();
+            let mut chan = vec![0.0f32; n];
+            for c in 0..du {
+                for s in 0..d {
+                    // g[t] = dm[n-1-t, s, c] (time reversed)
+                    for (t, ch) in chan.iter_mut().enumerate() {
+                        *ch = dmd[((n - 1 - t) * d + s) * du + c];
+                    }
+                    let conv = self.caches[s].conv(&chan, n);
+                    // du[j] += conv[n-1-j]
+                    for j in 0..n {
+                        od[j * du + c] += conv[n - 1 - j];
+                    }
+                }
+            }
+            return out;
+        }
+        let cols: Vec<Vec<f32>> = exec::parallel_map(du, workers, |c| {
+            let mut col = vec![0.0f32; n];
+            let mut chan = vec![0.0f32; n];
             for s in 0..d {
                 // g[t] = dm[n-1-t, s, c] (time reversed)
                 for (t, ch) in chan.iter_mut().enumerate() {
-                    *ch = dm.data()[((n - 1 - t) * d + s) * du + c];
+                    *ch = dmd[((n - 1 - t) * d + s) * du + c];
                 }
                 let conv = self.caches[s].conv(&chan, n);
                 // du[j] += conv[n-1-j]
-                for j in 0..n {
-                    out.data_mut()[j * du + c] += conv[n - 1 - j];
+                for (j, o) in col.iter_mut().enumerate() {
+                    *o += conv[n - 1 - j];
                 }
+            }
+            col
+        });
+        let od = out.data_mut();
+        for (c, col) in cols.iter().enumerate() {
+            for (j, &v) in col.iter().enumerate() {
+                od[j * du + c] = v;
             }
         }
         out

@@ -1,0 +1,132 @@
+//! Minimal error type with context chaining (anyhow substitute — anyhow is
+//! not in the offline vendor set).  Provides the small surface the runtime
+//! and CLI layers need: an opaque [`Error`], a [`Result`] alias defaulting
+//! to it, the [`crate::anyhow!`] / [`crate::bail!`] macros, and a
+//! [`Context`] extension trait for `Result`.
+//!
+//! Like anyhow's, [`Error`] deliberately does NOT implement
+//! `std::error::Error`: that keeps the blanket `From<E: std::error::Error>`
+//! conversion coherent, so `?` works on `io::Error`, parse errors,
+//! [`crate::config::ConfigError`], and friends without per-type glue.
+
+use std::fmt;
+
+/// An opaque error: a message with optional context prefixes accumulated
+/// by [`Context::context`] (outermost context first, like anyhow's chain
+/// rendered on one line).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    fn wrap(self, ctx: impl fmt::Display) -> Self {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    // main() exits print the Debug form; keep it human-readable.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// Result alias defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to the error branch of a `Result`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+/// Construct an [`Error`](crate::error::Error) from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return an [`Err`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn from_std_error_and_display() {
+        let e: Error = io_err().into();
+        assert!(e.to_string().contains("gone"));
+        assert_eq!(format!("{e}"), format!("{e:?}"));
+    }
+
+    #[test]
+    fn context_prefixes_outermost_first() {
+        let r: Result<()> = Err(io_err()).context("reading manifest");
+        let msg = r.unwrap_err().to_string();
+        assert!(msg.starts_with("reading manifest: "), "{msg}");
+        let r2: Result<()> = Err(Error::msg("inner"))
+            .context("mid")
+            .with_context(|| format!("outer {}", 1));
+        assert_eq!(r2.unwrap_err().to_string(), "outer 1: mid: inner");
+    }
+
+    #[test]
+    fn macros_build_and_bail() {
+        fn fails(n: usize) -> Result<usize> {
+            if n == 0 {
+                bail!("n was {n}");
+            }
+            Err(anyhow!("always {}", n))
+        }
+        assert_eq!(fails(0).unwrap_err().to_string(), "n was 0");
+        assert_eq!(fails(3).unwrap_err().to_string(), "always 3");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn parse(s: &str) -> Result<i64> {
+            Ok(s.parse::<i64>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+}

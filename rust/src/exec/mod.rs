@@ -1,0 +1,288 @@
+//! Thread-parallel execution substrate for the native compute hot paths.
+//!
+//! The paper's entire point is that the LMU's frozen LTI memory removes
+//! the sequential dependency from training, leaving big, embarrassingly
+//! parallel batched kernels (matmul, FFT causal convolution, elementwise
+//! maps).  This module is the single place that turns that latent
+//! parallelism into wall-clock speedup on CPU: a scoped-thread
+//! row-partition executor (`std::thread::scope` — no crate dependencies,
+//! builds are offline) with a global thread-count knob plumbed through the
+//! CLI (`--threads`) and config (`[train] threads`).
+//!
+//! Design rules every dispatch site follows:
+//!
+//!  * **Bit-exact equivalence.**  Work is partitioned over *output* rows
+//!    (or independent items); each element is computed by exactly the same
+//!    sequence of floating-point operations as the serial reference, so
+//!    results are identical for every thread count.  `threads = 1` (or any
+//!    job below [`MIN_PARALLEL_WORK`]) takes the serial path outright.
+//!    The `rust/tests/exec_equivalence.rs` suite pins this.
+//!  * **No nested fan-out.**  A worker that calls back into a parallel
+//!    kernel (e.g. per-sample DN conv → per-channel FFT) runs it serially:
+//!    [`workers_for`] returns 1 inside a parallel region, bounding live
+//!    threads at the configured count.
+//!  * **Threshold-gated.**  Scoped threads are spawned per call; jobs
+//!    smaller than [`MIN_PARALLEL_WORK`] scalar ops stay serial so the
+//!    many tiny per-timestep matmuls of the sequential baselines don't pay
+//!    spawn overhead.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Global worker-count knob.  0 = unresolved (first read resolves the
+/// default from `PLMU_THREADS` or the machine's parallelism).
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Default cap: beyond this, per-call spawn overhead and memory bandwidth
+/// dominate for the shapes these models use.
+const DEFAULT_MAX_THREADS: usize = 8;
+
+/// Minimum total scalar ops before a kernel fans out.  A scoped-thread
+/// spawn costs ~10µs; this keeps the crossover comfortably profitable.
+pub const MIN_PARALLEL_WORK: usize = 1 << 18;
+
+fn resolve_default() -> usize {
+    if let Ok(v) = std::env::var("PLMU_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .clamp(1, DEFAULT_MAX_THREADS)
+}
+
+/// The configured worker count (resolving the default on first use).
+pub fn threads() -> usize {
+    let t = THREADS.load(Ordering::Relaxed);
+    if t != 0 {
+        return t;
+    }
+    let d = resolve_default();
+    // racy double-resolve is benign: resolve_default is deterministic
+    THREADS.store(d, Ordering::Relaxed);
+    d
+}
+
+/// Set the worker count (clamped to >= 1).  1 selects the serial
+/// reference path everywhere.
+pub fn set_threads(n: usize) {
+    THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+thread_local! {
+    static IN_PARALLEL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True while the current thread is executing inside a parallel region
+/// (used to serialize nested kernels).
+pub fn in_parallel_region() -> bool {
+    IN_PARALLEL.with(|c| c.get())
+}
+
+struct RegionGuard(bool);
+
+impl Drop for RegionGuard {
+    fn drop(&mut self) {
+        IN_PARALLEL.with(|c| c.set(self.0));
+    }
+}
+
+fn enter_region() -> RegionGuard {
+    RegionGuard(IN_PARALLEL.with(|c| c.replace(true)))
+}
+
+/// Run `f` with kernel-level parallel dispatch disabled on the current
+/// thread: every `workers_for` inside reports 1.  For coordinators that
+/// manage their own thread-level parallelism (e.g. data-parallel replica
+/// workers) so replica count × kernel threads don't multiply.
+pub fn run_serialized<R>(f: impl FnOnce() -> R) -> R {
+    let _g = enter_region();
+    f()
+}
+
+/// Worker count for a job of `items` independent units totalling `work`
+/// scalar ops: the global knob, capped by the item count, 1 when the job
+/// is too small or we are already inside a parallel region.
+pub fn workers_for(items: usize, work: usize) -> usize {
+    if in_parallel_region() {
+        return 1;
+    }
+    let t = threads();
+    if t <= 1 || items <= 1 || work < MIN_PARALLEL_WORK {
+        return 1;
+    }
+    t.min(items)
+}
+
+/// Partition `out` into per-worker blocks of whole rows (`row_len`
+/// elements each) and run `f(first_row_index, block)` on each block, the
+/// first block on the calling thread and the rest on scoped threads.
+///
+/// `workers <= 1` (or a single row) short-circuits to `f(0, out)` with no
+/// scope and no region flag — the serial reference path.
+pub fn parallel_rows_mut<T, F>(out: &mut [T], row_len: usize, workers: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let rows = if row_len == 0 { 0 } else { out.len() / row_len };
+    if workers <= 1 || rows <= 1 {
+        f(0, out);
+        return;
+    }
+    let workers = workers.min(rows);
+    let chunk_rows = rows.div_ceil(workers);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut rest = out;
+        let mut row0 = 0usize;
+        let mut first: Option<(usize, &mut [T])> = None;
+        while !rest.is_empty() {
+            let take = (chunk_rows * row_len).min(rest.len());
+            let (head, tail) = {
+                let tmp = rest;
+                tmp.split_at_mut(take)
+            };
+            if first.is_none() {
+                first = Some((row0, head));
+            } else {
+                scope.spawn(move || {
+                    let _g = enter_region();
+                    f(row0, head);
+                });
+            }
+            row0 += take / row_len;
+            rest = tail;
+        }
+        if let Some((r0, block)) = first {
+            let _g = enter_region();
+            f(r0, block);
+        }
+    });
+}
+
+/// Run `f(lo, hi)` over a partition of `0..n` into `workers` contiguous
+/// ranges (first range on the calling thread).  For jobs whose output is
+/// not one contiguous mutable slice.
+pub fn parallel_ranges<F>(n: usize, workers: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if workers <= 1 || n <= 1 {
+        if n > 0 {
+            f(0, n);
+        }
+        return;
+    }
+    let workers = workers.min(n);
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|scope| {
+        let f = &f;
+        for w in 1..workers {
+            let lo = w * chunk;
+            if lo >= n {
+                break;
+            }
+            let hi = ((w + 1) * chunk).min(n);
+            scope.spawn(move || {
+                let _g = enter_region();
+                f(lo, hi);
+            });
+        }
+        let _g = enter_region();
+        f(0, chunk.min(n));
+    });
+}
+
+/// Order-preserving parallel map: `out[i] = f(i)` for `i in 0..n`.
+pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if workers <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    parallel_rows_mut(&mut out, 1, workers, |i0, block| {
+        for (k, slot) in block.iter_mut().enumerate() {
+            *slot = Some(f(i0 + k));
+        }
+    });
+    out.into_iter().map(|v| v.expect("parallel_map: slot unfilled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn rows_partition_covers_exactly_once() {
+        for &(rows, row_len, workers) in
+            &[(7usize, 3usize, 4usize), (1, 5, 4), (16, 1, 3), (5, 2, 8), (4, 4, 4)]
+        {
+            let mut out = vec![0u32; rows * row_len];
+            parallel_rows_mut(&mut out, row_len, workers, |r0, block| {
+                for (k, row) in block.chunks_mut(row_len).enumerate() {
+                    for v in row.iter_mut() {
+                        *v += (r0 + k + 1) as u32;
+                    }
+                }
+            });
+            // every row touched exactly once with its own index
+            for r in 0..rows {
+                for c in 0..row_len {
+                    assert_eq!(out[r * row_len + c], (r + 1) as u32, "rows={rows} w={workers}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ranges_partition_covers_exactly_once() {
+        for &(n, workers) in &[(10usize, 3usize), (1, 4), (0, 2), (8, 8), (9, 2)] {
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            parallel_ranges(n, workers, |lo, hi| {
+                for i in lo..hi {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "n={n} w={workers}");
+        }
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        for &workers in &[1usize, 2, 3, 5] {
+            let v = parallel_map(11, workers, |i| i * i);
+            assert_eq!(v, (0..11).map(|i| i * i).collect::<Vec<_>>());
+        }
+        assert!(parallel_map(0, 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn nested_region_serializes() {
+        // inside a parallel region, workers_for must report 1
+        let saw_nested: AtomicU64 = AtomicU64::new(0);
+        parallel_ranges(4, 2, |_, _| {
+            assert!(in_parallel_region());
+            if workers_for(100, usize::MAX) == 1 {
+                saw_nested.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(saw_nested.load(Ordering::Relaxed), 2);
+        assert!(!in_parallel_region(), "region flag leaked");
+    }
+
+    #[test]
+    fn small_work_stays_serial() {
+        assert_eq!(workers_for(8, 10), 1);
+        assert_eq!(workers_for(1, usize::MAX), 1);
+    }
+}

@@ -7,10 +7,19 @@
 //! The impulse-response spectrum `F{H}` is frozen (A, B are not trained),
 //! so `RfftCache` lets callers reuse it across every batch — this is the
 //! single biggest win on the training hot path (see EXPERIMENTS.md §Perf).
+//!
+//! Plans and post-twiddle tables live in a process-global `Arc` cache
+//! (RwLock'd HashMap) rather than the former `thread_local!` `Rc` cache:
+//! the batched convolutions fan out over `crate::exec` scoped worker
+//! threads, and per-thread caches would rebuild every plan on every
+//! spawned worker.  Batch-level parallelism partitions the *independent
+//! signal rows* (B·dx of them); each row's transform is the identical
+//! serial op sequence, so results are bit-exact at any thread count.
 
-use std::cell::RefCell;
+use crate::exec;
 use std::collections::HashMap;
 use std::f64::consts::PI;
+use std::sync::{Arc, OnceLock, RwLock};
 
 /// Complex number (f64 — convolution error compounds across long sequences,
 /// and the FFT is a small fraction of total time).
@@ -148,40 +157,42 @@ impl Plan {
     }
 }
 
-thread_local! {
-    static PLAN_CACHE: RefCell<HashMap<usize, std::rc::Rc<Plan>>> = RefCell::new(HashMap::new());
-    /// post-twiddles w^k = exp(-2pi i k / nfft), k in [0, nfft/2] — shared
-    /// by rfft_half / irfft_half (recomputing trig per call dominated the
-    /// half-spectrum savings; see EXPERIMENTS.md §Perf).
-    static RTWIDDLE_CACHE: RefCell<HashMap<usize, std::rc::Rc<Vec<Cpx>>>> = RefCell::new(HashMap::new());
+static PLAN_CACHE: OnceLock<RwLock<HashMap<usize, Arc<Plan>>>> = OnceLock::new();
+/// post-twiddles w^k = exp(-2pi i k / nfft), k in [0, nfft/2] — shared
+/// by rfft_half / irfft_half (recomputing trig per call dominated the
+/// half-spectrum savings; see EXPERIMENTS.md §Perf).
+static RTWIDDLE_CACHE: OnceLock<RwLock<HashMap<usize, Arc<Vec<Cpx>>>>> = OnceLock::new();
+
+/// Read-mostly lookup in a global keyed cache, building on miss.
+fn cached<V: Clone>(
+    cache: &OnceLock<RwLock<HashMap<usize, V>>>,
+    key: usize,
+    build: impl FnOnce() -> V,
+) -> V {
+    let lock = cache.get_or_init(|| RwLock::new(HashMap::new()));
+    if let Some(v) = lock.read().expect("fft cache poisoned").get(&key) {
+        return v.clone();
+    }
+    let mut map = lock.write().expect("fft cache poisoned");
+    map.entry(key).or_insert_with(build).clone()
 }
 
-fn rtwiddles(nfft: usize) -> std::rc::Rc<Vec<Cpx>> {
-    RTWIDDLE_CACHE.with(|c| {
-        c.borrow_mut()
-            .entry(nfft)
-            .or_insert_with(|| {
-                std::rc::Rc::new(
-                    (0..=nfft / 2)
-                        .map(|k| {
-                            let ang = -2.0 * PI * k as f64 / nfft as f64;
-                            Cpx::new(ang.cos(), ang.sin())
-                        })
-                        .collect(),
-                )
-            })
-            .clone()
+fn rtwiddles(nfft: usize) -> Arc<Vec<Cpx>> {
+    cached(&RTWIDDLE_CACHE, nfft, || {
+        Arc::new(
+            (0..=nfft / 2)
+                .map(|k| {
+                    let ang = -2.0 * PI * k as f64 / nfft as f64;
+                    Cpx::new(ang.cos(), ang.sin())
+                })
+                .collect(),
+        )
     })
 }
 
 /// Fetch (or build) the cached plan for a power-of-two length.
-pub fn plan(n: usize) -> std::rc::Rc<Plan> {
-    PLAN_CACHE.with(|c| {
-        c.borrow_mut()
-            .entry(n)
-            .or_insert_with(|| std::rc::Rc::new(Plan::new(n)))
-            .clone()
-    })
+pub fn plan(n: usize) -> Arc<Plan> {
+    cached(&PLAN_CACHE, n, || Arc::new(Plan::new(n)))
 }
 
 /// FFT of a real signal zero-padded to `nfft` (power of two).
@@ -321,6 +332,16 @@ impl RfftCache {
             .map(|(x, y)| x.mul(*y))
             .collect();
         irfft_half(&prod, self.nfft, out_len)
+    }
+
+    /// Convolve many independent signals with the cached kernel, fanning
+    /// the rows out across `crate::exec` worker threads (the batched
+    /// training path: B·dx independent sequences share one frozen F{H}).
+    /// Row order is preserved and each row is the identical serial
+    /// computation, so the result is bit-exact at any thread count.
+    pub fn conv_batch(&self, signals: &[&[f32]], out_len: usize) -> Vec<Vec<f32>> {
+        let workers = exec::workers_for(signals.len(), signals.len() * self.nfft * 16);
+        exec::parallel_map(signals.len(), workers, |i| self.conv(signals[i], out_len))
     }
 }
 
@@ -486,6 +507,29 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn conv_batch_matches_per_row_conv() {
+        let mut rng = Rng::new(12);
+        let kernel: Vec<f32> = (0..40).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let cache = RfftCache::new(&kernel, next_pow2(128));
+        let rows: Vec<Vec<f32>> =
+            (0..9).map(|_| (0..64).map(|_| rng.normal_f32(0.0, 1.0)).collect()).collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let batch = cache.conv_batch(&refs, 64);
+        assert_eq!(batch.len(), rows.len());
+        for (b, r) in batch.iter().zip(&rows) {
+            assert_eq!(b, &cache.conv(r, 64), "batched row differs from serial conv");
+        }
+    }
+
+    #[test]
+    fn plan_cache_shared_across_threads() {
+        // the global Arc cache must hand identical plans to worker threads
+        let p_main = plan(64);
+        let p_thread = std::thread::spawn(|| plan(64)).join().unwrap();
+        assert!(Arc::ptr_eq(&p_main, &p_thread), "plan cache not shared across threads");
     }
 
     #[test]

@@ -11,9 +11,17 @@
 //! Sequential and parallel versions compute identical functions — the
 //! tests pin this — which is the paper's train-parallel / infer-recurrent
 //! equivalence.
+//!
+//! [`LmuParallelLayer`]'s compute runs on the thread-parallel substrate
+//! end to end: the encoder/output matmuls, the batched DN convolution
+//! (`Graph::dn_conv` → [`DnFftOperator`]), and the eq. 25 last-state
+//! matmul all dispatch through `crate::exec`, while the sequential/
+//! original cells remain the serial references.  Serial and parallel
+//! execution are bit-exact, so `threads` never changes a result.
 
 use crate::autograd::{Graph, NodeId, ParamId, ParamStore};
 use crate::dn::{DelayNetwork, DnFftOperator};
+use crate::exec;
 use crate::tensor::Tensor;
 use crate::util::Rng;
 use std::rc::Rc;
@@ -80,12 +88,16 @@ impl LmuParallelLayer {
         let dn_op = Rc::new(DnFftOperator::new(&dn, n));
         let h = dn.impulse_response(n);
         let d = spec.d;
+        // time-reversal is a pure row permutation — partition output rows
         let mut hrev = Tensor::zeros(&[n, d]);
-        for t in 0..n {
-            for s in 0..d {
-                hrev.data_mut()[t * d + s] = h.data()[(n - 1 - t) * d + s];
+        let hd = h.data();
+        let workers = exec::workers_for(n, n * d);
+        exec::parallel_rows_mut(hrev.data_mut(), d, workers, |t0, block| {
+            for (r, row) in block.chunks_mut(d).enumerate() {
+                let t = t0 + r;
+                row.copy_from_slice(&hd[(n - 1 - t) * d..(n - t) * d]);
             }
-        }
+        });
         let params = LmuParams::init(&spec, store, rng, prefix);
         LmuParallelLayer { spec, params, dn_op, hrev, n }
     }

@@ -7,7 +7,10 @@
 //!  * parallel layers take **sample-major** rows `(B·n, dx)` (row `b·n+t`);
 //!  * sequential cells take **time-major** rows `(n·B, dx)` (row `t·B+b`)
 //!    so each step is a contiguous row slice.
-//! `to_time_major` / `to_sample_major` convert.
+//! `to_time_major` / `to_sample_major` convert; both are pure row
+//! permutations, so they row-partition the output across `crate::exec`
+//! workers above the size threshold (each output row is written exactly
+//! once — bit-exact at any thread count).
 
 pub mod attention;
 pub mod dense;
@@ -19,6 +22,7 @@ pub use dense::{Activation, Dense, Embedding, Highway};
 pub use lmu::{LmuOriginalCell, LmuParallelLayer, LmuSequentialLayer};
 pub use lstm::LstmLayer;
 
+use crate::exec;
 use crate::tensor::Tensor;
 
 /// (B, n, f) sample-major rows -> (n, B, f) time-major rows.
@@ -26,12 +30,18 @@ pub fn to_time_major(x: &Tensor, batch: usize, n: usize) -> Tensor {
     let f = x.cols();
     assert_eq!(x.rows(), batch * n);
     let mut out = Tensor::zeros(&[n * batch, f]);
-    for b in 0..batch {
-        for t in 0..n {
-            let src = &x.data()[(b * n + t) * f..(b * n + t + 1) * f];
-            out.data_mut()[(t * batch + b) * f..(t * batch + b + 1) * f].copy_from_slice(src);
-        }
+    if f == 0 || batch * n == 0 {
+        return out;
     }
+    let xd = x.data();
+    let workers = exec::workers_for(batch * n, batch * n * f);
+    exec::parallel_rows_mut(out.data_mut(), f, workers, |r0, block| {
+        for (k, row) in block.chunks_mut(f).enumerate() {
+            let r = r0 + k; // time-major row index = t*batch + b
+            let (t, b) = (r / batch, r % batch);
+            row.copy_from_slice(&xd[(b * n + t) * f..(b * n + t + 1) * f]);
+        }
+    });
     out
 }
 
@@ -40,12 +50,18 @@ pub fn to_sample_major(x: &Tensor, batch: usize, n: usize) -> Tensor {
     let f = x.cols();
     assert_eq!(x.rows(), batch * n);
     let mut out = Tensor::zeros(&[batch * n, f]);
-    for t in 0..n {
-        for b in 0..batch {
-            let src = &x.data()[(t * batch + b) * f..(t * batch + b + 1) * f];
-            out.data_mut()[(b * n + t) * f..(b * n + t + 1) * f].copy_from_slice(src);
-        }
+    if f == 0 || batch * n == 0 {
+        return out;
     }
+    let xd = x.data();
+    let workers = exec::workers_for(batch * n, batch * n * f);
+    exec::parallel_rows_mut(out.data_mut(), f, workers, |r0, block| {
+        for (k, row) in block.chunks_mut(f).enumerate() {
+            let r = r0 + k; // sample-major row index = b*n + t
+            let (b, t) = (r / n, r % n);
+            row.copy_from_slice(&xd[(t * batch + b) * f..(t * batch + b + 1) * f]);
+        }
+    });
     out
 }
 

@@ -19,7 +19,14 @@
 //!    native substrate (tensor/FFT/autograd/data/optim) used for the
 //!    paper's benchmark reproductions.
 //!
-//! See DESIGN.md for the experiment index and EXPERIMENTS.md for results.
+//! The native substrate's hot kernels (matmul, FFT causal convolution,
+//! elementwise maps, DN application) dispatch through the [`exec`]
+//! thread-parallel execution substrate — serial (`threads = 1`) and
+//! parallel execution are bit-exact, mirroring the paper's claim that the
+//! parallel and recurrent forms compute the same function.
+//!
+//! See DESIGN.md for the experiment index and architecture notes, and
+//! EXPERIMENTS.md for results and perf records.
 
 pub mod autograd;
 pub mod benchlib;
@@ -28,6 +35,8 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod dn;
+pub mod error;
+pub mod exec;
 pub mod fft;
 pub mod layers;
 pub mod linalg;
@@ -37,5 +46,6 @@ pub mod runtime;
 pub mod tensor;
 pub mod train;
 pub mod util;
+pub mod xla;
 
 pub use tensor::Tensor;

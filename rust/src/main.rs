@@ -20,14 +20,15 @@ use plmu::coordinator::{
     NativeStreamingEngine, ServerConfig, StreamingServer,
 };
 use plmu::data::{PsMnist, SeqDataset};
+use plmu::error::Result;
 use plmu::layers::lmu::{LmuParallelLayer, LmuSpec};
 use plmu::optim::{Adam, LrSchedule};
 use plmu::runtime::{ArtifactInput, Runtime};
 use plmu::train::{fit, FitOptions, ModelKind, SeqClassifier};
 use plmu::util::{human_count, Rng, Timer};
-use plmu::Tensor;
+use plmu::{xla, Tensor};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args = Args::new("plmu", "Parallelized LMU training & serving framework")
         .opt("task", "psmnist", "train: psmnist")
         .opt("model", "parallel", "architecture: parallel | sequential | original | lstm")
@@ -38,6 +39,12 @@ fn main() -> anyhow::Result<()> {
         .opt("side", "16", "psmnist image side (28 = paper scale)")
         .opt("d", "32", "DN order")
         .opt("hidden", "64", "hidden width")
+        .opt(
+            "threads",
+            "0",
+            "kernel worker threads for the exec substrate (matmul/FFT/DN); \
+             0 = all cores (capped), 1 = serial reference — results are bit-identical either way",
+        )
         .opt("workers", "2", "train-dp: worker threads")
         .opt("sessions", "8", "serve: concurrent sessions")
         .opt("tokens", "64", "serve: tokens per session")
@@ -47,6 +54,11 @@ fn main() -> anyhow::Result<()> {
         .opt("seed", "0", "RNG seed")
         .opt("config", "", "TOML config file (configs/*.toml); config values take precedence")
         .parse();
+
+    let threads = args.get_usize("threads");
+    if threads > 0 {
+        plmu::exec::set_threads(threads);
+    }
 
     let cmd = args.positionals().first().map(|s| s.as_str()).unwrap_or("info");
     match cmd {
@@ -62,7 +74,7 @@ fn main() -> anyhow::Result<()> {
     }
 }
 
-fn info(args: &Args) -> anyhow::Result<()> {
+fn info(args: &Args) -> Result<()> {
     let client = xla::PjRtClient::cpu()?;
     println!("plmu — Parallelizing Legendre Memory Unit Training (ICML 2021) reproduction");
     println!("PJRT platform: {} ({} devices)", client.platform_name(), client.device_count());
@@ -112,7 +124,7 @@ fn psmnist_data(args: &Args) -> (SeqDataset, SeqDataset) {
     SeqDataset::classification(xs, ys).split(0.2)
 }
 
-fn train(args: &Args) -> anyhow::Result<()> {
+fn train(args: &Args) -> Result<()> {
     // config file (if given) supplies defaults; explicit CLI flags win
     let cfg_path = args.get("config");
     let file_cfg = if cfg_path.is_empty() {
@@ -125,6 +137,10 @@ fn train(args: &Args) -> anyhow::Result<()> {
     let tc = file_cfg
         .as_ref()
         .map(|c| plmu::config::TrainConfig::from_config(c, "train"));
+    if let Some(t) = tc.as_ref() {
+        t.apply_threads(); // [train] threads wins over --threads
+    }
+    println!("exec substrate: {} worker thread(s)", plmu::exec::threads());
     let epochs = tc.as_ref().map(|t| t.epochs).unwrap_or(args.get_usize("epochs"));
     let batch = tc.as_ref().map(|t| t.batch_size).unwrap_or(args.get_usize("batch"));
     let lr = tc.as_ref().map(|t| t.lr).unwrap_or(args.get_f32("lr"));
@@ -187,7 +203,7 @@ fn train(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn train_dp(args: &Args) -> anyhow::Result<()> {
+fn train_dp(args: &Args) -> Result<()> {
     let workers = args.get_usize("workers");
     let side = args.get_usize("side");
     let n = args.get_usize("examples");
@@ -226,7 +242,7 @@ fn train_dp(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn serve(args: &Args) -> anyhow::Result<()> {
+fn serve(args: &Args) -> Result<()> {
     let sessions = args.get_u64("sessions");
     let tokens = args.get_usize("tokens");
     let replicas = args.get_usize("replicas");
@@ -263,7 +279,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn exec(args: &Args) -> anyhow::Result<()> {
+fn exec(args: &Args) -> Result<()> {
     let dir = std::path::PathBuf::from(args.get("artifacts-dir"));
     let mut rt = Runtime::open(&dir)?;
     let name = args.get("artifact");

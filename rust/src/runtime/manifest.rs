@@ -9,7 +9,8 @@
 //!     out <idx> <dtype> <dims|scalar>
 //!   blob <name> <file> len=<int>
 
-use anyhow::{anyhow, bail, Result};
+use crate::error::Result;
+use crate::{anyhow, bail};
 use std::collections::HashMap;
 
 /// dtype + dims of one artifact input/output.

@@ -15,8 +15,10 @@ pub mod manifest;
 
 pub use manifest::{ArtifactSpec, IoSpec, Manifest};
 
+use crate::anyhow;
+use crate::error::{Context, Result};
 use crate::tensor::Tensor;
-use anyhow::{anyhow, Context, Result};
+use crate::xla;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 

@@ -11,8 +11,18 @@
 //! Cache blocking over k keeps the working set of B in L1/L2 for large
 //! shapes; for the small-to-medium shapes the models use, the simple loop
 //! order dominates.
+//!
+//! All three kernels dispatch through `crate::exec`: the output C is
+//! row-partitioned across scoped worker threads, so every thread owns a
+//! disjoint contiguous shard of C and no accumulation races exist —
+//! including `matmul_tn`, whose rank-1 updates stay race-free because each
+//! worker applies the full p-sweep to its own rows only.  Per output
+//! element the floating-point operation order is identical to the serial
+//! loop, so results are bit-exact at every thread count (pinned by
+//! `rust/tests/exec_equivalence.rs`).
 
 use super::Tensor;
+use crate::exec;
 
 const KC: usize = 256; // k-panel height (keeps a B panel ~KC*cols*4B in cache)
 
@@ -22,11 +32,23 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     let (kb, n) = dims2(b, "matmul rhs");
     assert_eq!(k, kb, "matmul inner dims: {:?} x {:?}", a.shape(), b.shape());
     let mut c = Tensor::zeros(&[m, n]);
-    let (ad, bd, cd) = (a.data(), b.data(), c.data_mut());
+    let (ad, bd) = (a.data(), b.data());
+    let workers = exec::workers_for(m, m * k * n);
+    exec::parallel_rows_mut(c.data_mut(), n, workers, |i0, cblock| {
+        matmul_rows(ad, bd, cblock, i0, k, n);
+    });
+    c
+}
+
+/// The serial kernel over one contiguous block of C's rows
+/// (`cblock` = rows `i0 ..` of C).
+fn matmul_rows(ad: &[f32], bd: &[f32], cblock: &mut [f32], i0: usize, k: usize, n: usize) {
+    let rows = if n == 0 { 0 } else { cblock.len() / n };
     for k0 in (0..k).step_by(KC) {
         let k1 = (k0 + KC).min(k);
-        for i in 0..m {
-            let crow = &mut cd[i * n..(i + 1) * n];
+        for r in 0..rows {
+            let i = i0 + r;
+            let crow = &mut cblock[r * n..(r + 1) * n];
             for p in k0..k1 {
                 let aip = ad[i * k + p];
                 if aip == 0.0 {
@@ -39,7 +61,6 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
             }
         }
     }
-    c
 }
 
 /// C = Aᵀ (k,m)ᵀ · B (k,n) -> (m, n)
@@ -48,22 +69,28 @@ pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
     let (kb, n) = dims2(b, "matmul_tn rhs");
     assert_eq!(k, kb, "matmul_tn inner dims: {:?} x {:?}", a.shape(), b.shape());
     let mut c = Tensor::zeros(&[m, n]);
-    let (ad, bd, cd) = (a.data(), b.data(), c.data_mut());
-    // iterate over k (rows of both A and B): rank-1 update per row,
-    // contiguous in both A's row and B's row.
-    for p in 0..k {
-        let arow = &ad[p * m..(p + 1) * m];
-        let brow = &bd[p * n..(p + 1) * n];
-        for (i, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let crow = &mut cd[i * n..(i + 1) * n];
-            for (cv, bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
+    let (ad, bd) = (a.data(), b.data());
+    let workers = exec::workers_for(m, m * k * n);
+    // Each worker owns rows [i0, i0+rows) of C and scans all k rank-1
+    // updates itself: contiguous in B's row, p-ascending per element
+    // exactly like the serial p-outer loop.
+    exec::parallel_rows_mut(c.data_mut(), n, workers, |i0, cblock| {
+        let rows = if n == 0 { 0 } else { cblock.len() / n };
+        for p in 0..k {
+            let brow = &bd[p * n..(p + 1) * n];
+            let arow = &ad[p * m..(p + 1) * m];
+            for r in 0..rows {
+                let av = arow[i0 + r];
+                if av == 0.0 {
+                    continue;
+                }
+                let crow = &mut cblock[r * n..(r + 1) * n];
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
             }
         }
-    }
+    });
     c
 }
 
@@ -73,14 +100,20 @@ pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
     let (n, kb) = dims2(b, "matmul_nt rhs");
     assert_eq!(k, kb, "matmul_nt inner dims: {:?} x {:?}", a.shape(), b.shape());
     let mut c = Tensor::zeros(&[m, n]);
-    let (ad, bd, cd) = (a.data(), b.data(), c.data_mut());
-    for i in 0..m {
-        let arow = &ad[i * k..(i + 1) * k];
-        for j in 0..n {
-            let brow = &bd[j * k..(j + 1) * k];
-            cd[i * n + j] = dot(arow, brow);
+    let (ad, bd) = (a.data(), b.data());
+    let workers = exec::workers_for(m, m * k * n);
+    exec::parallel_rows_mut(c.data_mut(), n, workers, |i0, cblock| {
+        let rows = if n == 0 { 0 } else { cblock.len() / n };
+        for r in 0..rows {
+            let i = i0 + r;
+            let arow = &ad[i * k..(i + 1) * k];
+            let crow = &mut cblock[r * n..(r + 1) * n];
+            for (j, cv) in crow.iter_mut().enumerate() {
+                let brow = &bd[j * k..(j + 1) * k];
+                *cv = dot(arow, brow);
+            }
         }
-    }
+    });
     c
 }
 
@@ -216,5 +249,19 @@ mod tests {
         let a = Tensor::zeros(&[2, 3]);
         let b = Tensor::zeros(&[4, 2]);
         matmul(&a, &b);
+    }
+
+    #[test]
+    fn large_shapes_match_naive_above_parallel_threshold() {
+        // (129, 67, 65) crosses MIN_PARALLEL_WORK with odd, non-divisible
+        // dimensions; the default thread count exercises the parallel path.
+        let mut rng = Rng::new(5);
+        let a = Tensor::randn(&[129, 67], 1.0, &mut rng);
+        let b = Tensor::randn(&[67, 65], 1.0, &mut rng);
+        assert!(matmul(&a, &b).allclose(&naive(&a, &b), 1e-3));
+        let at = Tensor::randn(&[67, 129], 1.0, &mut rng);
+        assert!(matmul_tn(&at, &b).allclose(&matmul(&at.transpose2(), &b), 1e-3));
+        let bt = Tensor::randn(&[65, 67], 1.0, &mut rng);
+        assert!(matmul_nt(&a, &bt).allclose(&matmul(&a, &bt.transpose2()), 1e-3));
     }
 }

@@ -2,9 +2,16 @@
 //! built on.  No BLAS is available offline, so `matmul` carries its own
 //! blocked/packed implementation (see `matmul.rs`); everything else is
 //! straightforward contiguous-slice arithmetic.
+//!
+//! Elementwise maps, row-wise softmax, and the 2-D transpose dispatch
+//! through `crate::exec` above a size threshold: the output is
+//! row-partitioned across scoped worker threads, each element is computed
+//! by the identical op sequence as the serial loop, so results are
+//! bit-exact at every thread count.
 
 pub mod matmul;
 
+use crate::exec;
 use crate::util::Rng;
 use std::fmt;
 
@@ -175,37 +182,62 @@ impl Tensor {
         self.clone().reshape(shape)
     }
 
-    /// 2-D transpose (copies).
+    /// 2-D transpose (copies).  Parallel over output rows (each output row
+    /// gathers one input column), bit-exact at any thread count.
     pub fn transpose2(&self) -> Self {
         assert_eq!(self.ndim(), 2, "transpose2 on {:?}", self.shape);
         let (r, c) = (self.shape[0], self.shape[1]);
         let mut out = Tensor::zeros(&[c, r]);
-        for i in 0..r {
-            for j in 0..c {
-                out.data[j * r + i] = self.data[i * c + j];
-            }
+        if r == 0 || c == 0 {
+            return out;
         }
+        let workers = exec::workers_for(c, r * c);
+        let src = &self.data;
+        exec::parallel_rows_mut(&mut out.data, r, workers, |j0, block| {
+            for (k, orow) in block.chunks_mut(r).enumerate() {
+                let j = j0 + k;
+                for (i, o) in orow.iter_mut().enumerate() {
+                    *o = src[i * c + j];
+                }
+            }
+        });
         out
     }
 
     // ---------------------------------------------------------- elementwise
 
-    pub fn map(&self, f: impl Fn(f32) -> f32) -> Self {
-        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&v| f(v)).collect() }
+    pub fn map(&self, f: impl Fn(f32) -> f32 + Sync) -> Self {
+        let mut out = Tensor::zeros(&self.shape);
+        let workers = exec::workers_for(self.data.len(), self.data.len());
+        let src = &self.data;
+        exec::parallel_rows_mut(&mut out.data, 1, workers, |i0, block| {
+            for (dst, &v) in block.iter_mut().zip(&src[i0..i0 + block.len()]) {
+                *dst = f(v);
+            }
+        });
+        out
     }
 
-    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
-        for v in self.data.iter_mut() {
-            *v = f(*v);
-        }
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32 + Sync) {
+        let workers = exec::workers_for(self.data.len(), self.data.len());
+        exec::parallel_rows_mut(&mut self.data, 1, workers, |_, block| {
+            for v in block.iter_mut() {
+                *v = f(*v);
+            }
+        });
     }
 
-    fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Self {
+    fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32 + Sync) -> Self {
         assert_eq!(self.shape, other.shape, "elementwise shape mismatch");
-        Tensor {
-            shape: self.shape.clone(),
-            data: self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect(),
-        }
+        let mut out = Tensor::zeros(&self.shape);
+        let workers = exec::workers_for(self.data.len(), self.data.len());
+        let (a, b) = (&self.data, &other.data);
+        exec::parallel_rows_mut(&mut out.data, 1, workers, |i0, block| {
+            for (k, dst) in block.iter_mut().enumerate() {
+                *dst = f(a[i0 + k], b[i0 + k]);
+            }
+        });
+        out
     }
 
     pub fn add(&self, other: &Tensor) -> Self {
@@ -252,11 +284,15 @@ impl Tensor {
         let c = self.cols();
         assert_eq!(bias.len(), c, "bias length {} != cols {}", bias.len(), c);
         let mut out = self.clone();
-        for row in out.data.chunks_mut(c) {
-            for (v, b) in row.iter_mut().zip(&bias.data) {
-                *v += b;
+        let workers = exec::workers_for(self.rows(), self.data.len());
+        let bd = &bias.data;
+        exec::parallel_rows_mut(&mut out.data, c, workers, |_, block| {
+            for row in block.chunks_mut(c) {
+                for (v, b) in row.iter_mut().zip(bd) {
+                    *v += b;
+                }
             }
-        }
+        });
         out
     }
 
@@ -323,22 +359,26 @@ impl Tensor {
             .collect()
     }
 
-    /// Row-wise softmax, numerically stabilized.
+    /// Row-wise softmax, numerically stabilized.  Rows are independent, so
+    /// the row partition is bit-exact at any thread count.
     pub fn softmax_rows(&self) -> Tensor {
         let c = self.cols();
         let mut out = self.clone();
-        for row in out.data.chunks_mut(c) {
-            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let mut z = 0.0;
-            for v in row.iter_mut() {
-                *v = (*v - mx).exp();
-                z += *v;
+        let workers = exec::workers_for(self.rows(), self.data.len() * 4);
+        exec::parallel_rows_mut(&mut out.data, c, workers, |_, block| {
+            for row in block.chunks_mut(c) {
+                let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut z = 0.0;
+                for v in row.iter_mut() {
+                    *v = (*v - mx).exp();
+                    z += *v;
+                }
+                let inv = 1.0 / z;
+                for v in row.iter_mut() {
+                    *v *= inv;
+                }
             }
-            let inv = 1.0 / z;
-            for v in row.iter_mut() {
-                *v *= inv;
-            }
-        }
+        });
         out
     }
 
