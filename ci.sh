@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
-# Repo CI: build → test → fmt check → thread-scaling bench (smoke).
-# Mirrors the tier-1 verify (cargo build --release && cargo test -q)
-# and additionally smoke-runs the exec-substrate scaling bench so the
-# BENCH_threads.json perf record stays fresh.
+# Repo CI: build → test → docs → fmt check → perf smoke benches.
+# Mirrors the tier-1 verify (cargo build --release && cargo test -q),
+# gates the rustdoc build (warnings are errors), and smoke-runs the
+# exec-substrate benches so the BENCH_threads.json / BENCH_pool.json
+# perf records stay fresh.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -11,6 +12,9 @@ cargo build --release
 
 echo "== test =="
 cargo test -q
+
+echo "== docs (rustdoc, warnings as errors) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
 echo "== fmt check =="
 if cargo fmt --version >/dev/null 2>&1; then
@@ -22,5 +26,8 @@ fi
 
 echo "== thread-scaling bench (smoke) =="
 PLMU_BENCH_SMOKE=1 cargo bench --bench fig1_threads
+
+echo "== pool-crossover bench (smoke) =="
+PLMU_BENCH_SMOKE=1 cargo bench --bench pool_crossover
 
 echo "== ci OK =="

@@ -1,0 +1,227 @@
+//! Dispatch-overhead bench for the persistent worker pool: finds the
+//! serial/parallel *crossover point* — the smallest job (total scalar
+//! ops) where fanning out beats staying serial — for
+//!
+//!  * the persistent parked pool (`exec::parallel_rows_mut`, the shipped
+//!    dispatch), and
+//!  * a per-call scoped-spawn baseline (a faithful copy of the old exec
+//!    substrate's `std::thread::scope` dispatch, kept here for
+//!    comparison),
+//!
+//! by sweeping small matmul shapes across both substrates' thresholds
+//! (the scoped substrate gated at 2^18 scalar ops; the pool ships with
+//! `MIN_PARALLEL_WORK = 2^14`).  Emits `BENCH_pool.json` at the repo
+//! root; per sweep point the pool result is asserted bit-identical to
+//! the serial reference.
+//!
+//! Run: cargo bench --bench pool_crossover
+//! Smoke mode (CI): PLMU_BENCH_SMOKE=1 cargo bench --bench pool_crossover
+
+use plmu::benchlib::{bench, BenchConfig, JsonValue, PerfJson, Table};
+use plmu::exec;
+use plmu::util::Rng;
+
+/// Walk up from cwd looking for the repo root (ROADMAP.md marker).
+fn repo_root() -> std::path::PathBuf {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    for _ in 0..5 {
+        if dir.join("ROADMAP.md").exists() {
+            return dir;
+        }
+        match dir.parent() {
+            Some(p) => dir = p.to_path_buf(),
+            None => break,
+        }
+    }
+    std::env::current_dir().unwrap_or_else(|_| ".".into())
+}
+
+fn checksum(xs: &[f32]) -> u64 {
+    // order-sensitive bit-level fingerprint: equal iff bit-identical
+    let mut h = 0xcbf29ce484222325u64;
+    for v in xs {
+        h ^= v.to_bits() as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// The scoped-spawn dispatch the pool replaced (verbatim partition logic
+/// of the old exec substrate) — the bench baseline.
+fn scoped_rows_mut<T, F>(out: &mut [T], row_len: usize, workers: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let rows = if row_len == 0 { 0 } else { out.len() / row_len };
+    if workers <= 1 || rows <= 1 {
+        f(0, out);
+        return;
+    }
+    let workers = workers.min(rows);
+    let chunk_rows = rows.div_ceil(workers);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut rest = out;
+        let mut row0 = 0usize;
+        let mut first: Option<(usize, &mut [T])> = None;
+        while !rest.is_empty() {
+            let take = (chunk_rows * row_len).min(rest.len());
+            let (head, tail) = {
+                let tmp = rest;
+                tmp.split_at_mut(take)
+            };
+            if first.is_none() {
+                first = Some((row0, head));
+            } else {
+                scope.spawn(move || f(row0, head));
+            }
+            row0 += take / row_len;
+            rest = tail;
+        }
+        if let Some((r0, block)) = first {
+            f(r0, block);
+        }
+    });
+}
+
+/// One output row of the m×k · k×n matmul (identical op order in every
+/// substrate, so results are bit-comparable).
+fn matmul_block(a: &[f32], b: &[f32], k: usize, n: usize, r0: usize, block: &mut [f32]) {
+    for (i, row) in block.chunks_mut(n).enumerate() {
+        let arow = &a[(r0 + i) * k..(r0 + i + 1) * k];
+        for (j, o) in row.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for (kk, &av) in arow.iter().enumerate() {
+                acc += av * b[kk * n + j];
+            }
+            *o = acc;
+        }
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("PLMU_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
+    let cfg = if smoke {
+        BenchConfig { warmup_secs: 0.01, measure_secs: 0.04, max_iters: 400, min_iters: 3 }
+    } else {
+        BenchConfig { warmup_secs: 0.05, measure_secs: 0.25, max_iters: 4000, min_iters: 5 }
+    };
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let t = hw.min(4);
+    // fixed k=n=32, m sweeps the total work m*k*n from 2^12 to 2^19 —
+    // spanning the pool threshold (2^14) and the old scoped one (2^18)
+    let (k, n) = (32usize, 32usize);
+    let ms: &[usize] = if smoke { &[4, 16, 64, 256] } else { &[4, 8, 16, 32, 64, 128, 256, 512] };
+    println!(
+        "pool-vs-scoped crossover sweep: k={k} n={n}, m in {ms:?}, {t} workers on {hw} hw threads{}",
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let mut rng = Rng::new(0);
+    let m_max = *ms.last().unwrap();
+    let a: Vec<f32> = (0..m_max * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+
+    let mut record = PerfJson::new("pool_crossover");
+    let mut table =
+        Table::new(&["work (ops)", "m", "serial (us)", "pool (us)", "scoped (us)", "pool x", "scoped x"]);
+    let mut pool_crossover: Option<usize> = None;
+    let mut scoped_crossover: Option<usize> = None;
+
+    for &m in ms {
+        let work = m * k * n;
+        let mut out = vec![0.0f32; m * n];
+
+        // correctness first: pool result must be bit-identical to serial
+        matmul_block(&a, &b, k, n, 0, &mut out);
+        let ref_sum = checksum(&out);
+        out.iter_mut().for_each(|v| *v = 0.0);
+        exec::parallel_rows_mut(&mut out, n, t, |r0, block| {
+            matmul_block(&a, &b, k, n, r0, block)
+        });
+        assert_eq!(checksum(&out), ref_sum, "pool result differs from serial at m={m}");
+
+        let s_serial = bench("serial", cfg, || {
+            matmul_block(&a, &b, k, n, 0, std::hint::black_box(&mut out));
+        });
+        let s_pool = bench("pool", cfg, || {
+            exec::parallel_rows_mut(std::hint::black_box(&mut out), n, t, |r0, block| {
+                matmul_block(&a, &b, k, n, r0, block)
+            });
+        });
+        let s_scoped = bench("scoped", cfg, || {
+            scoped_rows_mut(std::hint::black_box(&mut out), n, t, |r0, block| {
+                matmul_block(&a, &b, k, n, r0, block)
+            });
+        });
+
+        let pool_x = s_serial.mean / s_pool.mean;
+        let scoped_x = s_serial.mean / s_scoped.mean;
+        if pool_x > 1.0 && pool_crossover.is_none() {
+            pool_crossover = Some(work);
+        }
+        if scoped_x > 1.0 && scoped_crossover.is_none() {
+            scoped_crossover = Some(work);
+        }
+        table.row(&[
+            work.to_string(),
+            m.to_string(),
+            format!("{:.1}", s_serial.mean * 1e6),
+            format!("{:.1}", s_pool.mean * 1e6),
+            format!("{:.1}", s_scoped.mean * 1e6),
+            format!("{pool_x:.2}x"),
+            format!("{scoped_x:.2}x"),
+        ]);
+        record.push(&[
+            ("case", JsonValue::Str("small_matmul".into())),
+            ("work", JsonValue::Int(work as i64)),
+            ("m", JsonValue::Int(m as i64)),
+            ("k", JsonValue::Int(k as i64)),
+            ("n", JsonValue::Int(n as i64)),
+            ("workers", JsonValue::Int(t as i64)),
+            ("serial_s", JsonValue::Num(s_serial.mean)),
+            ("pool_s", JsonValue::Num(s_pool.mean)),
+            ("scoped_s", JsonValue::Num(s_scoped.mean)),
+            ("pool_speedup", JsonValue::Num(pool_x)),
+            ("scoped_speedup", JsonValue::Num(scoped_x)),
+            ("smoke", JsonValue::Bool(smoke)),
+            ("hw_threads", JsonValue::Int(hw as i64)),
+        ]);
+    }
+
+    // summary: the crossover points (smallest job where parallel wins)
+    record.push(&[
+        ("case", JsonValue::Str("crossover".into())),
+        ("pool_crossover_work", JsonValue::Int(pool_crossover.map(|w| w as i64).unwrap_or(-1))),
+        (
+            "scoped_crossover_work",
+            JsonValue::Int(scoped_crossover.map(|w| w as i64).unwrap_or(-1)),
+        ),
+        ("min_parallel_work", JsonValue::Int(exec::MIN_PARALLEL_WORK as i64)),
+        ("scoped_min_parallel_work", JsonValue::Int(1i64 << 18)),
+        ("workers", JsonValue::Int(t as i64)),
+        ("hw_threads", JsonValue::Int(hw as i64)),
+        ("smoke", JsonValue::Bool(smoke)),
+    ]);
+
+    table.print("serial/parallel crossover — persistent pool vs per-call scoped spawn");
+    match (pool_crossover, scoped_crossover) {
+        (Some(p), Some(s)) => {
+            let verdict = if p <= s { "PASS (pool crossover <= scoped)" } else { "MISS" };
+            println!("\ncrossover: pool at {p} ops, scoped at {s} ops — {verdict}");
+        }
+        (Some(p), None) => {
+            println!("\ncrossover: pool at {p} ops; scoped never won on this sweep — PASS")
+        }
+        (None, _) => println!(
+            "\ncrossover: parallel never won (only {hw} hardware threads?) — scaling is machine-bound"
+        ),
+    }
+
+    let out_path = repo_root().join("BENCH_pool.json");
+    match record.write(&out_path) {
+        Ok(()) => println!("wrote {} ({} records)", out_path.display(), record.len()),
+        Err(e) => eprintln!("failed to write {}: {e}", out_path.display()),
+    }
+}

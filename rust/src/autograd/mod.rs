@@ -21,7 +21,7 @@ pub use params::{ParamId, ParamStore};
 
 use crate::dn::DnFftOperator;
 use crate::tensor::Tensor;
-use std::rc::Rc;
+use std::sync::Arc;
 
 pub type NodeId = usize;
 
@@ -62,7 +62,7 @@ enum Op {
     Embedding { ids: Vec<usize> },
     Dropout { mask: Vec<f32> },
     /// batched DN causal convolution (all states): (B·n, du) -> (B·n, du·d)
-    DnConv { op: Rc<DnFftOperator>, batch: usize },
+    DnConv { op: Arc<DnFftOperator>, batch: usize },
     /// batched DN final state (eq. 25): (B·n, du) -> (B, du·d); aux = H reversed (n, d)
     DnLast { batch: usize },
 }
@@ -319,7 +319,7 @@ impl Graph {
     /// output rows, so the batch fans out across `crate::exec` workers
     /// (the per-channel parallelism inside [`DnFftOperator::apply`] then
     /// runs serially — nested regions don't over-subscribe).
-    pub fn dn_conv(&mut self, u: NodeId, op: Rc<DnFftOperator>, batch: usize) -> NodeId {
+    pub fn dn_conv(&mut self, u: NodeId, op: Arc<DnFftOperator>, batch: usize) -> NodeId {
         let uv = &self.nodes[u].value;
         let n = op.n;
         let du = uv.cols();

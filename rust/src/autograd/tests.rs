@@ -211,7 +211,7 @@ fn grad_dn_conv_matches_fd() {
     let mut rng = Rng::new(7);
     let (n, d, du, batch) = (12usize, 4usize, 2usize, 2usize);
     let dn = DelayNetwork::new(d, n as f64);
-    let op = std::rc::Rc::new(crate::dn::DnFftOperator::new(&dn, n));
+    let op = std::sync::Arc::new(crate::dn::DnFftOperator::new(&dn, n));
     let mut store = ParamStore::new();
     let u = store.add("u", Tensor::randn(&[batch * n, du], 0.5, &mut rng));
     let w = Tensor::randn(&[batch * n, du * d], 0.5, &mut rng);

@@ -1,30 +1,44 @@
-//! Data-parallel training coordinator.
+//! Data-parallel training coordinator on the shared exec pool.
 //!
 //! Because the parallel LMU has no sequential dependency inside a training
 //! step, scaling out is plain synchronous data parallelism:
 //!
-//!   coordinator                      worker w (thread)
-//!   ───────────                      ─────────────────
-//!   broadcast packed params  ───►    unpack into local replica store
-//!                                    build tape on local shard batch
-//!                                    backward, pack gradients
-//!   average gradients        ◄───    send packed grads
+//! ```text
+//!   coordinator (pool dispatcher)     replica r (pool chunk)
+//!   ─────────────────────────────     ──────────────────────
+//!   pack canonical params      ───►   unpack into replica store
+//!                                     build tape on local shard batch
+//!                                     backward, pack gradients
+//!   deterministic all-reduce   ◄───   per-replica packed grads
 //!   Adam step on canonical store
 //!   (repeat)
+//! ```
 //!
-//! Workers own their replicas (the tape's `Rc` internals are not `Send`,
-//! so graphs never cross threads — only packed `Vec<f32>` do, which is
-//! also how a real multi-host version would wire NCCL/collectives).
+//! Replica steps are **chunks of one job on the `crate::exec` worker
+//! pool** — the same pool the tensor/FFT kernels dispatch through — so
+//! replica-level and kernel-level parallelism share a single thread
+//! budget: inside a replica chunk the exec region flag serializes every
+//! nested kernel, and the chunk count is capped at [`crate::exec::threads`],
+//! so replicas × kernel-threads can never oversubscribe the machine
+//! (pinned by `rust/tests/exec_equivalence.rs`).
+//!
+//! Replica state (parameter store, model, RNG, batch queue) is `Send` and
+//! migrates between pool threads across steps; the autograd [`Graph`] is
+//! built and dropped *inside* a single chunk, so tapes never cross
+//! threads.  Only packed `Vec<f32>` parameter/gradient buffers move
+//! between coordinator and replicas — which is also how a real multi-host
+//! version would wire NCCL-style collectives.
 
 use crate::autograd::{Graph, ParamId, ParamStore};
-use crate::data::batcher::{BatchIter, SeqDataset};
+use crate::data::batcher::{Batch, BatchIter, SeqDataset};
+use crate::exec;
 use crate::optim::{clip_global_norm, Optimizer};
 use crate::train::TrainableModel;
 use crate::util::Rng;
-use std::sync::mpsc;
 
 /// Pack a sparse (ParamId, grad) list into a dense store-ordered flat
-/// vector (missing params get zeros) — the "wire format" of the allreduce.
+/// vector (missing params get zeros) — the "wire format" of the
+/// all-reduce.
 pub fn pack_grads(store: &ParamStore, grads: &[(ParamId, crate::tensor::Tensor)]) -> Vec<f32> {
     let mut offsets = Vec::with_capacity(store.len());
     let mut total = 0usize;
@@ -42,7 +56,8 @@ pub fn pack_grads(store: &ParamStore, grads: &[(ParamId, crate::tensor::Tensor)]
     flat
 }
 
-/// Unpack a dense flat gradient into (ParamId, Tensor) pairs.
+/// Unpack a dense flat gradient into (ParamId, Tensor) pairs, inverting
+/// [`pack_grads`] (store order defines the layout).
 pub fn unpack_grads(store: &ParamStore, flat: &[f32]) -> Vec<(ParamId, crate::tensor::Tensor)> {
     let mut out = Vec::with_capacity(store.len());
     let mut ofs = 0usize;
@@ -55,12 +70,46 @@ pub fn unpack_grads(store: &ParamStore, flat: &[f32]) -> Vec<(ParamId, crate::te
     out
 }
 
+/// Deterministic mean of per-replica packed gradients: `out[i]` sums
+/// `parts[0][i], parts[1][i], ...` in replica order and scales by
+/// `1 / parts.len()`.  The per-element summation order never depends on
+/// the worker count, so the result is bit-identical at every `threads`
+/// setting (pinned by `rust/tests/exec_equivalence.rs`); the element
+/// range is partitioned across the shared exec pool.
+pub fn allreduce_mean(parts: &[&[f32]]) -> Vec<f32> {
+    assert!(!parts.is_empty(), "allreduce over zero replicas");
+    let len = parts[0].len();
+    for p in parts {
+        assert_eq!(p.len(), len, "replica gradient length mismatch");
+    }
+    let inv = 1.0f32 / parts.len() as f32;
+    let mut out = vec![0.0f32; len];
+    let workers = exec::workers_for(len, len * (parts.len() + 1));
+    exec::parallel_rows_mut(&mut out, 1, workers, |i0, block| {
+        for (k, o) in block.iter_mut().enumerate() {
+            let i = i0 + k;
+            let mut acc = 0.0f32;
+            for p in parts {
+                acc += p[i];
+            }
+            *o = acc * inv;
+        }
+    });
+    out
+}
+
+/// Configuration of one data-parallel run.
 #[derive(Clone, Debug)]
 pub struct DataParallelConfig {
+    /// number of model replicas (one shard each)
     pub workers: usize,
+    /// passes over each replica's shard
     pub epochs: usize,
+    /// per-replica batch size (clamped to the shard size)
     pub batch_size: usize,
+    /// optional global-norm gradient clip applied after the all-reduce
     pub grad_clip: Option<f32>,
+    /// base RNG seed; replica `w` shuffles with `seed ^ hash(w)`
     pub seed: u64,
 }
 
@@ -72,21 +121,82 @@ impl Default for DataParallelConfig {
 
 /// Coordinator output.
 pub struct DataParallelResult {
-    /// per-step mean loss across workers
+    /// per-step mean loss across replicas
     pub step_losses: Vec<f32>,
     /// final packed parameters (canonical replica)
     pub final_params: Vec<f32>,
+    /// synchronous optimizer steps taken
     pub steps: usize,
 }
 
+/// One model replica: `Send` state that migrates between pool threads
+/// across steps (the autograd tape lives and dies inside a single step).
+struct Replica<M> {
+    store: ParamStore,
+    model: M,
+    shard: SeqDataset,
+    rng: Rng,
+    batch_size: usize,
+    epochs_left: usize,
+    /// current epoch's remaining batches, reversed so `pop` yields the
+    /// shuffled order
+    queue: Vec<Batch>,
+    /// batch pulled for the step in flight
+    pending: Option<Batch>,
+    /// (loss, packed gradient) produced by the step in flight
+    out: Option<(f32, Vec<f32>)>,
+}
+
+impl<M: TrainableModel> Replica<M> {
+    /// Stage the next batch (refilling from the next epoch if needed).
+    /// Returns false when the shard is exhausted for every epoch.
+    fn pull_batch(&mut self) -> bool {
+        loop {
+            if let Some(b) = self.queue.pop() {
+                self.pending = Some(b);
+                return true;
+            }
+            if self.epochs_left == 0 {
+                return false;
+            }
+            self.epochs_left -= 1;
+            let bs = self.batch_size.min(self.shard.len());
+            if bs == 0 {
+                // degenerate shard or batch_size=0: retire this replica
+                // instead of panicking inside a pool chunk
+                self.epochs_left = 0;
+                return false;
+            }
+            self.queue = BatchIter::new(&self.shard, bs, &mut self.rng).collect();
+            self.queue.reverse();
+        }
+    }
+
+    /// One local step: unpack broadcast params, forward/backward on the
+    /// staged batch, pack gradients.  Runs inside one pool chunk.
+    fn step(&mut self, packed_params: &[f32]) {
+        if let Some(batch) = self.pending.take() {
+            self.store.unpack(packed_params);
+            let mut g = Graph::new();
+            let loss = self.model.loss(&mut g, &self.store, &batch);
+            g.backward(loss);
+            let lv = g.value(loss).item();
+            let grads = g.param_grads();
+            self.out = Some((lv, pack_grads(&self.store, &grads)));
+        }
+    }
+}
+
+/// Synchronous data-parallel trainer (see the module docs for the step
+/// anatomy and the shared-budget story).
 pub struct DataParallelCoordinator;
 
 impl DataParallelCoordinator {
     /// Run synchronous data-parallel training.
     ///
     /// `factory` builds a fresh (store, model) replica — it is called once
-    /// on the coordinator (canonical replica, owns the optimizer state)
-    /// and once inside every worker thread.  All replicas must produce an
+    /// for the coordinator's canonical replica (which owns the optimizer
+    /// state) and once per worker replica.  All replicas must produce an
     /// identical parameter layout (same construction order), which holds
     /// by construction since they run the same code with the same shapes.
     pub fn run<F, M>(
@@ -96,149 +206,81 @@ impl DataParallelCoordinator {
         cfg: &DataParallelConfig,
     ) -> DataParallelResult
     where
-        F: Fn() -> (ParamStore, M) + Send + Sync + Clone + 'static,
-        M: TrainableModel,
+        F: Fn() -> (ParamStore, M) + Sync,
+        M: TrainableModel + Send,
     {
         assert_eq!(shards.len(), cfg.workers, "one shard per worker");
         let (mut canon_store, _canon_model) = factory();
 
-        // per-worker command/result channels
-        enum Cmd {
-            Step(Vec<f32>), // packed params
-            Stop,
-        }
-        struct WorkerOut {
-            #[allow(dead_code)]
-            worker: usize,
-            grads: Vec<f32>,
-            loss: f32,
-            batches_left: usize,
-        }
-
-        let (res_tx, res_rx) = mpsc::channel::<WorkerOut>();
-        let mut cmd_txs = Vec::new();
-        let mut handles = Vec::new();
-        for (w, shard) in shards.into_iter().enumerate() {
-            let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
-            cmd_txs.push(cmd_tx);
-            let res_tx = res_tx.clone();
-            let factory = factory.clone();
-            let cfg = cfg.clone();
-            // replica threads ARE the parallelism: the whole worker body
-            // (model construction included — DnFftOperator::new fans out
-            // too) runs with the kernel-level exec substrate serialized,
-            // so replica count × kernel threads never multiply.
-            handles.push(std::thread::spawn(move || {
-                crate::exec::run_serialized(|| {
-                    let (mut store, model) = factory();
-                    let mut rng = Rng::new(cfg.seed ^ (w as u64 + 1).wrapping_mul(0x9E37_79B9));
-                    let per_epoch = shard.len() / cfg.batch_size.min(shard.len());
-                    let mut remaining = per_epoch * cfg.epochs;
-                    'epochs: for _epoch in 0..cfg.epochs {
-                        let mut batches: Vec<_> =
-                            BatchIter::new(&shard, cfg.batch_size.min(shard.len()), &mut rng)
-                                .collect();
-                        for batch in batches.drain(..) {
-                            // wait for fresh params
-                            match cmd_rx.recv() {
-                                Ok(Cmd::Step(params)) => store.unpack(&params),
-                                _ => break 'epochs,
-                            }
-                            let mut g = Graph::new();
-                            let loss = model.loss(&mut g, &store, &batch);
-                            g.backward(loss);
-                            let lv = g.value(loss).item();
-                            let grads = g.param_grads();
-                            let packed = pack_grads(&store, &grads);
-                            remaining -= 1;
-                            if res_tx
-                                .send(WorkerOut {
-                                    worker: w,
-                                    grads: packed,
-                                    loss: lv,
-                                    batches_left: remaining,
-                                })
-                                .is_err()
-                            {
-                                break 'epochs;
-                            }
-                        }
-                    }
-                    // drain any final Stop
-                    while let Ok(cmd) = cmd_rx.recv() {
-                        if matches!(cmd, Cmd::Stop) {
-                            break;
-                        }
-                    }
-                });
-            }));
-        }
-        drop(res_tx);
+        // replica construction is itself parallel work (DnFftOperator
+        // spectra), so it fans out on the pool too
+        let k = shards.len();
+        let build_workers = exec::workers_for(k, usize::MAX);
+        let built = exec::parallel_map(k, build_workers, |_| factory());
+        let mut replicas: Vec<Replica<M>> = built
+            .into_iter()
+            .zip(shards)
+            .enumerate()
+            .map(|(w, ((store, model), shard))| Replica {
+                store,
+                model,
+                shard,
+                rng: Rng::new(cfg.seed ^ (w as u64 + 1).wrapping_mul(0x9E37_79B9)),
+                batch_size: cfg.batch_size,
+                epochs_left: cfg.epochs,
+                queue: Vec::new(),
+                pending: None,
+                out: None,
+            })
+            .collect();
 
         let mut step_losses = Vec::new();
         let mut steps = 0usize;
         loop {
-            // broadcast current parameters
+            // stage one batch per replica that still has data, then fan
+            // out over the *live* replicas only — with uneven shards the
+            // exhausted ones would otherwise hog chunk slots and cluster
+            // the remaining work onto fewer threads
+            for r in replicas.iter_mut() {
+                r.pull_batch();
+            }
+            let mut live: Vec<&mut Replica<M>> =
+                replicas.iter_mut().filter(|r| r.pending.is_some()).collect();
+            if live.is_empty() {
+                break;
+            }
+            let live_n = live.len();
+            // broadcast: every replica reads the same packed parameters
             let packed = canon_store.pack();
-            let mut live = 0usize;
-            for tx in &cmd_txs {
-                if tx.send(Cmd::Step(packed.clone())).is_ok() {
-                    live += 1;
+            // replica fan-out: one pool job, chunk count capped at the
+            // thread budget; kernels inside each chunk run serialized
+            let workers = exec::workers_for(live_n, usize::MAX);
+            exec::parallel_rows_mut(&mut live, 1, workers, |_, block| {
+                for r in block.iter_mut() {
+                    r.step(&packed);
                 }
-            }
-            if live == 0 {
-                break;
-            }
-            // gather gradients from every live worker (synchronous step)
-            let mut sum: Option<Vec<f32>> = None;
-            let mut losses = 0.0f32;
-            let mut got = 0usize;
-            let mut done_workers = 0usize;
-            for _ in 0..live {
-                match res_rx.recv() {
-                    Ok(out) => {
-                        losses += out.loss;
-                        got += 1;
-                        if out.batches_left == 0 {
-                            done_workers += 1;
-                        }
-                        match &mut sum {
-                            Some(s) => {
-                                for (a, b) in s.iter_mut().zip(&out.grads) {
-                                    *a += b;
-                                }
-                            }
-                            None => sum = Some(out.grads),
-                        }
-                    }
-                    Err(_) => break,
-                }
-            }
-            if got == 0 {
-                break;
-            }
-            let mut avg = sum.unwrap();
-            let inv = 1.0 / got as f32;
-            for v in avg.iter_mut() {
-                *v *= inv;
-            }
+            });
+            drop(live);
+            // gather + deterministic all-reduce (replica order)
+            let parts: Vec<&[f32]> = replicas
+                .iter()
+                .filter_map(|r| r.out.as_ref().map(|(_, g)| g.as_slice()))
+                .collect();
+            let loss_sum: f32 =
+                replicas.iter().filter_map(|r| r.out.as_ref().map(|(l, _)| *l)).sum();
+            let got = parts.len();
+            debug_assert_eq!(got, live_n, "every staged replica must produce gradients");
+            let avg = allreduce_mean(&parts);
             let mut grads = unpack_grads(&canon_store, &avg);
             if let Some(c) = cfg.grad_clip {
                 clip_global_norm(&mut grads, c);
             }
             opt.step(&mut canon_store, &grads);
-            step_losses.push(losses / got as f32);
+            step_losses.push(loss_sum / got as f32);
             steps += 1;
-            if done_workers == got {
-                break; // every worker exhausted its shard for all epochs
+            for r in replicas.iter_mut() {
+                r.out = None;
             }
-        }
-        for tx in &cmd_txs {
-            let _ = tx.send(Cmd::Stop);
-        }
-        drop(cmd_txs);
-        for h in handles {
-            let _ = h.join();
         }
         DataParallelResult { step_losses, final_params: canon_store.pack(), steps }
     }
@@ -304,6 +346,50 @@ mod tests {
             assert_eq!(id1, id2);
             assert!(g1.allclose(g2, 0.0));
         }
+        // and the inverse direction: unpack then re-pack is the identity
+        let repacked = pack_grads(&store, &back);
+        assert_eq!(repacked, packed);
+    }
+
+    #[test]
+    fn pack_grads_zero_fills_missing_params() {
+        let (store, _model) = factory(8)();
+        // gradient list covering only the first parameter
+        let first = store.ids().next().unwrap();
+        let g0 = Tensor::zeros(store.get(first).shape());
+        let packed = pack_grads(&store, &[(first, g0)]);
+        assert_eq!(packed.len(), store.num_scalars());
+        assert!(packed.iter().all(|&v| v == 0.0));
+        // shapes survive the round trip even with zero-filled params
+        let back = unpack_grads(&store, &packed);
+        assert_eq!(back.len(), store.len());
+        for (id, g) in &back {
+            assert_eq!(g.shape(), store.get(*id).shape());
+        }
+    }
+
+    #[test]
+    fn allreduce_mean_matches_scalar_reference() {
+        let mut rng = Rng::new(3);
+        let len = 1000usize;
+        let parts_owned: Vec<Vec<f32>> = (0..3)
+            .map(|_| (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect();
+        let parts: Vec<&[f32]> = parts_owned.iter().map(|p| p.as_slice()).collect();
+        let got = allreduce_mean(&parts);
+        // the contract is a *deterministic* replica-order sum scaled by a
+        // precomputed reciprocal — mirror that exact op order here
+        // (x * (1/3) differs from x / 3 in the last ulp for ~1/3 of f32s)
+        let inv = 1.0f32 / 3.0;
+        for i in 0..len {
+            let want = (parts_owned[0][i] + parts_owned[1][i] + parts_owned[2][i]) * inv;
+            assert!(
+                got[i].to_bits() == want.to_bits(),
+                "element {i}: {} vs {}",
+                got[i],
+                want
+            );
+        }
     }
 
     #[test]
@@ -342,6 +428,25 @@ mod tests {
         };
         let res = DataParallelCoordinator::run(factory(8), shards, &mut opt, &cfg);
         assert_eq!(res.steps, 8); // 32/8 * 2 epochs
+        assert!(res.step_losses.iter().all(|l| l.is_finite()));
+    }
+
+    #[test]
+    fn uneven_shards_still_complete() {
+        // 3 shards over 10 examples: sizes 4/3/3 — replicas exhaust their
+        // shards at different steps and the run must still drain cleanly
+        let (xs, ys) = toy_data(10, 8, 5);
+        let shards = shard_dataset(xs, ys, 3);
+        let mut opt = Adam::new(1e-2);
+        let cfg = DataParallelConfig {
+            workers: 3,
+            epochs: 2,
+            batch_size: 3,
+            grad_clip: None,
+            seed: 0,
+        };
+        let res = DataParallelCoordinator::run(factory(8), shards, &mut opt, &cfg);
+        assert!(res.steps >= 2, "steps {}", res.steps);
         assert!(res.step_losses.iter().all(|l| l.is_finite()));
     }
 

@@ -14,18 +14,32 @@ use crate::tensor::{matmul::matvec, Tensor};
 
 /// A streaming engine: advances one session's DN state by one input.
 pub trait StreamingEngine {
-    /// dimension of the per-session memory state (d·du floats)
+    /// Dimension of the per-session memory state (d·du floats).
     fn state_size(&self) -> usize;
+    /// Dimension of the per-step output vector (hidden floats).
     fn output_size(&self) -> usize;
-    /// step(state, x_t) -> output; `state` is updated in place.
+    /// `step(state, x_t) -> output`; `state` is updated in place.
     fn step(&self, state: &mut [f32], x_t: &[f32]) -> Vec<f32>;
+    /// Rough scalar-op cost of one [`StreamingEngine::step`] call — the
+    /// work estimate the dynamic batcher feeds to
+    /// `crate::exec::workers_for` when deciding whether a batch is big
+    /// enough to fan out on the worker pool.  The default overestimates
+    /// slightly (safe: it only moves the crossover, never correctness);
+    /// implementations with exact shape knowledge should override.
+    fn step_work(&self) -> usize {
+        self.state_size() * (self.state_size() + self.output_size() + 1)
+    }
 }
 
 /// Our-model single step with explicit weights (eq. 18 -> 19 -> 20).
 pub struct NativeStreamingEngine {
+    /// input dimension
     pub dx: usize,
+    /// DN channels (eq. 18 encoder width)
     pub du: usize,
+    /// DN order (memory dimensions per channel)
     pub d: usize,
+    /// output width (eq. 20)
     pub hidden: usize,
     abar: Tensor,     // (d, d)
     bbar: Vec<f32>,   // (d,)
@@ -34,11 +48,15 @@ pub struct NativeStreamingEngine {
     wm: Tensor,       // (du·d, hidden)  channel-major rows
     wx: Tensor,       // (dx, hidden)
     bo: Vec<f32>,     // (hidden,)
+    /// apply tanh in eq. 18 (f1)
     pub nonlin_u: bool,
+    /// apply tanh in eq. 20 (f2)
     pub nonlin_o: bool,
 }
 
 impl NativeStreamingEngine {
+    /// Build from explicit weights (shapes asserted); the DN's discretized
+    /// (Ā, B̄) pair is derived from `(d, theta)`.
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         dx: usize,
@@ -104,6 +122,13 @@ impl StreamingEngine for NativeStreamingEngine {
 
     fn output_size(&self) -> usize {
         self.hidden
+    }
+
+    fn step_work(&self) -> usize {
+        // eq. 19 Ā matvec per channel + eq. 20 output map + eq. 18 encoder
+        self.du * self.d * self.d
+            + self.du * self.d * self.hidden
+            + self.dx * (self.du + self.hidden)
     }
 
     fn step(&self, state: &mut [f32], x_t: &[f32]) -> Vec<f32> {

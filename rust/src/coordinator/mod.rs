@@ -5,18 +5,27 @@
 //!
 //!  * **training** (`data_parallel`): the parallel form makes each
 //!    training step a big batched feed-forward computation, so scaling is
-//!    plain data parallelism — worker replicas compute gradients on
-//!    shards, the coordinator all-reduces (averages) and steps Adam, then
-//!    broadcasts fresh parameters;
+//!    plain data parallelism — replica steps run as chunks of one job on
+//!    the shared `crate::exec` worker pool, the coordinator all-reduces
+//!    (deterministic replica-order mean) and steps Adam, then broadcasts
+//!    fresh parameters;
 //!  * **serving** (`server`, `engine`): the *same* trained weights run in
 //!    the recurrent form (eq. 19) for O(d) per-token streaming inference —
 //!    sessions hold DN state, a dynamic batcher groups concurrent step
-//!    requests, and a router spreads sessions across engine replicas.
+//!    requests and fans the batch's sessions out on the same pool, and a
+//!    router spreads sessions across engine replicas.
+//!
+//! Both halves dispatch their thread-level fan-out through `crate::exec`,
+//! so replica-level and kernel-level parallelism share one process-wide
+//! thread budget (the `--threads` / `[train] threads` / `PLMU_THREADS`
+//! knob) instead of multiplying.
 
 pub mod data_parallel;
 pub mod engine;
 pub mod server;
 
-pub use data_parallel::{pack_grads, DataParallelConfig, DataParallelCoordinator};
+pub use data_parallel::{
+    allreduce_mean, pack_grads, unpack_grads, DataParallelConfig, DataParallelCoordinator,
+};
 pub use engine::{NativeStreamingEngine, StreamingEngine};
 pub use server::{DynamicBatcher, Router, ServerConfig, StreamingServer};

@@ -3,8 +3,26 @@
 //! this paper: the "KV cache" of an LMU is a single (d·du) DN state per
 //! session, constant in sequence length — the paper's memory-constrained
 //! inference story).
+//!
+//! ## Thread-budget story
+//!
+//! Each [`DynamicBatcher`] owns one *control* thread that blocks on its
+//! request channel (parked, costing nothing while idle).  The *compute* —
+//! executing a filled batch — is dispatched through the shared
+//! `crate::exec` worker pool, fanning out across the batch's distinct
+//! sessions.  The pool admits one job at a time and caps each job at the
+//! configured `threads` budget, so engine replicas × kernel threads can
+//! never oversubscribe the machine: concurrent batchers time-share the
+//! pool (a batcher that finds the pool busy runs its batch serially on
+//! its own control thread).
+//!
+//! Engines that are not `Sync` (e.g. PJRT-backed engines holding
+//! thread-bound handles, built via [`DynamicBatcher::with_factory`]) stay
+//! pinned to their control thread and execute serially inside
+//! `exec::run_serialized`, so their kernel calls don't fan out either.
 
 use super::engine::StreamingEngine;
+use crate::exec;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -12,20 +30,28 @@ use std::time::{Duration, Instant};
 
 /// A step request: advance `session` with input `x`, reply on `reply`.
 pub struct StepRequest {
+    /// session id whose DN state this step advances
     pub session: u64,
+    /// one input vector (dx floats)
     pub x: Vec<f32>,
+    /// channel the [`StepResponse`] is delivered on
     pub reply: mpsc::Sender<StepResponse>,
+    /// when the request entered the batcher queue
     pub enqueued: Instant,
 }
 
+/// The result of one streaming step.
 #[derive(Clone, Debug)]
 pub struct StepResponse {
+    /// session id the output belongs to
     pub session: u64,
+    /// engine output (hidden floats)
     pub output: Vec<f32>,
     /// time from enqueue to completion
     pub latency: Duration,
 }
 
+/// Dynamic-batching knobs.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// max requests per batch window
@@ -40,15 +66,20 @@ impl Default for ServerConfig {
     }
 }
 
-/// Aggregate serving metrics.
+/// Aggregate serving metrics (updated by the batcher thread, read from
+/// anywhere through the shared `Arc`).
 #[derive(Default)]
 pub struct ServerMetrics {
+    /// total step requests completed
     pub requests: AtomicU64,
+    /// total batch windows executed
     pub batches: AtomicU64,
+    /// sum of request latencies in microseconds
     pub total_latency_us: AtomicU64,
 }
 
 impl ServerMetrics {
+    /// Mean request latency in microseconds (0 before the first request).
     pub fn mean_latency_us(&self) -> f64 {
         let n = self.requests.load(Ordering::Relaxed);
         if n == 0 {
@@ -58,6 +89,7 @@ impl ServerMetrics {
         }
     }
 
+    /// Mean number of requests per executed batch (0 before the first).
     pub fn mean_batch_size(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
         if b == 0 {
@@ -68,9 +100,12 @@ impl ServerMetrics {
     }
 }
 
-/// Dynamic batcher + session table driving one engine on its own thread.
+/// Dynamic batcher + session table driving one engine replica.  The
+/// control thread blocks on the request channel; batch compute dispatches
+/// through the shared exec pool (see the module docs).
 pub struct DynamicBatcher {
     tx: mpsc::Sender<BatcherCmd>,
+    /// live serving metrics of this replica
     pub metrics: Arc<ServerMetrics>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
@@ -81,24 +116,128 @@ enum BatcherCmd {
     Shutdown,
 }
 
+/// How the batcher thread obtains its engine.
+enum EngineSource {
+    /// a `Sync` engine moved into the thread — batches fan out on the pool
+    Shared(Box<dyn StreamingEngine + Send + Sync>),
+    /// built inside the thread (thread-bound handles) — batches run serial
+    Factory(Box<dyn FnOnce() -> Box<dyn StreamingEngine> + Send>),
+}
+
+/// The engine as held by the running batcher thread.
+enum BatchEngine {
+    Shared(Box<dyn StreamingEngine + Send + Sync>),
+    Local(Box<dyn StreamingEngine>),
+}
+
+impl BatchEngine {
+    fn engine(&self) -> &dyn StreamingEngine {
+        match self {
+            BatchEngine::Shared(e) => &**e,
+            BatchEngine::Local(e) => &**e,
+        }
+    }
+}
+
+/// One session's share of a batch: its state, its requests (arrival
+/// order), and the outputs produced for them.
+struct SessionRun {
+    session: u64,
+    state: Vec<f32>,
+    reqs: Vec<StepRequest>,
+    outs: Vec<Vec<f32>>,
+}
+
+/// Execute one filled batch: group requests by session (per-session order
+/// preserved), fan the independent sessions out on the exec pool (shared
+/// engines) or run them serialized (thread-bound engines), then reinsert
+/// states and deliver replies.
+fn execute_batch(
+    engine: &BatchEngine,
+    sessions: &mut HashMap<u64, Vec<f32>>,
+    pending: &mut Vec<StepRequest>,
+    metrics: &ServerMetrics,
+) {
+    let state_size = engine.engine().state_size();
+    let mut groups: Vec<SessionRun> = Vec::new();
+    let mut index: HashMap<u64, usize> = HashMap::new();
+    for req in pending.drain(..) {
+        let gi = *index.entry(req.session).or_insert_with(|| {
+            let state =
+                sessions.remove(&req.session).unwrap_or_else(|| vec![0.0f32; state_size]);
+            groups.push(SessionRun { session: req.session, state, reqs: Vec::new(), outs: Vec::new() });
+            groups.len() - 1
+        });
+        groups[gi].reqs.push(req);
+    }
+    let total_reqs: usize = groups.iter().map(|g| g.reqs.len()).sum();
+    match engine {
+        BatchEngine::Shared(e) => {
+            let eng: &(dyn StreamingEngine + Send + Sync) = &**e;
+            // distinct sessions are independent; requests within a session
+            // stay in order inside their chunk
+            let workers = exec::workers_for(groups.len(), total_reqs * eng.step_work());
+            exec::parallel_rows_mut(&mut groups, 1, workers, |_, block| {
+                for g in block.iter_mut() {
+                    for req in &g.reqs {
+                        g.outs.push(eng.step(&mut g.state, &req.x));
+                    }
+                }
+            });
+        }
+        BatchEngine::Local(e) => {
+            // thread-bound engine: serial, and flagged so nested kernels
+            // don't fan out under a control thread
+            exec::run_serialized(|| {
+                for g in groups.iter_mut() {
+                    for req in &g.reqs {
+                        g.outs.push(e.step(&mut g.state, &req.x));
+                    }
+                }
+            });
+        }
+    }
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    for g in groups {
+        sessions.insert(g.session, g.state);
+        for (req, output) in g.reqs.into_iter().zip(g.outs) {
+            let latency = req.enqueued.elapsed();
+            metrics.requests.fetch_add(1, Ordering::Relaxed);
+            metrics
+                .total_latency_us
+                .fetch_add(latency.as_micros() as u64, Ordering::Relaxed);
+            let _ = req.reply.send(StepResponse { session: req.session, output, latency });
+        }
+    }
+}
+
 impl DynamicBatcher {
-    /// Build from a `Send` engine (native engines).
-    pub fn new(engine: Box<dyn StreamingEngine + Send>, cfg: ServerConfig) -> Self {
-        Self::with_factory(Box::new(move || engine as Box<dyn StreamingEngine>), cfg)
+    /// Build from a shareable engine: batch compute fans out across the
+    /// batch's sessions on the shared exec pool.
+    pub fn new(engine: Box<dyn StreamingEngine + Send + Sync>, cfg: ServerConfig) -> Self {
+        Self::start(EngineSource::Shared(engine), cfg)
     }
 
     /// Build from a factory that constructs the engine INSIDE the batcher
-    /// thread — required for engines that are not `Send` (the PJRT client
-    /// holds thread-bound handles).
+    /// thread — required for engines that are not `Send`/`Sync` (the PJRT
+    /// client holds thread-bound handles).  Batches for such engines run
+    /// serially on the control thread.
     pub fn with_factory(
         factory: Box<dyn FnOnce() -> Box<dyn StreamingEngine> + Send>,
         cfg: ServerConfig,
     ) -> Self {
+        Self::start(EngineSource::Factory(factory), cfg)
+    }
+
+    fn start(source: EngineSource, cfg: ServerConfig) -> Self {
         let (tx, rx) = mpsc::channel::<BatcherCmd>();
         let metrics = Arc::new(ServerMetrics::default());
         let m = metrics.clone();
         let handle = std::thread::spawn(move || {
-            let engine = factory();
+            let engine = match source {
+                EngineSource::Shared(e) => BatchEngine::Shared(e),
+                EngineSource::Factory(f) => BatchEngine::Local(f()),
+            };
             let mut sessions: HashMap<u64, Vec<f32>> = HashMap::new();
             let mut pending: Vec<StepRequest> = Vec::new();
             loop {
@@ -131,25 +270,13 @@ impl DynamicBatcher {
                         Err(_) => return,
                     }
                 }
-                // execute the batch (one engine pass per request; the DN
-                // state update itself is the batched compute unit)
-                m.batches.fetch_add(1, Ordering::Relaxed);
-                for req in pending.drain(..) {
-                    let state = sessions
-                        .entry(req.session)
-                        .or_insert_with(|| vec![0.0f32; engine.state_size()]);
-                    let output = engine.step(state, &req.x);
-                    let latency = req.enqueued.elapsed();
-                    m.requests.fetch_add(1, Ordering::Relaxed);
-                    m.total_latency_us
-                        .fetch_add(latency.as_micros() as u64, Ordering::Relaxed);
-                    let _ = req.reply.send(StepResponse { session: req.session, output, latency });
-                }
+                execute_batch(&engine, &mut sessions, &mut pending, &m);
             }
         });
         DynamicBatcher { tx, metrics, handle: Some(handle) }
     }
 
+    /// Enqueue one step; the response arrives on `reply`.
     pub fn submit(&self, session: u64, x: Vec<f32>, reply: mpsc::Sender<StepResponse>) {
         let _ = self.tx.send(BatcherCmd::Step(StepRequest {
             session,
@@ -190,11 +317,13 @@ pub struct Router {
 }
 
 impl Router {
+    /// Build over a non-empty replica set.
     pub fn new(batchers: Vec<DynamicBatcher>) -> Self {
         assert!(!batchers.is_empty());
         Router { batchers, assignment: Mutex::new(HashMap::new()), next: AtomicUsize::new(0) }
     }
 
+    /// Number of engine replicas behind this router.
     pub fn replicas(&self) -> usize {
         self.batchers.len()
     }
@@ -208,11 +337,13 @@ impl Router {
         })
     }
 
+    /// Route, submit, and wait for the response.
     pub fn step_blocking(&self, session: u64, x: Vec<f32>) -> StepResponse {
         let idx = self.route(session);
         self.batchers[idx].step_blocking(session, x)
     }
 
+    /// Forget a session: drop its routing entry and its replica-side state.
     pub fn end_session(&self, session: u64) {
         let idx = {
             let mut map = self.assignment.lock().unwrap();
@@ -223,6 +354,7 @@ impl Router {
         }
     }
 
+    /// Total requests served across all replicas.
     pub fn total_requests(&self) -> u64 {
         self.batchers
             .iter()
@@ -238,14 +370,16 @@ impl Router {
 
 /// Full server façade: router + config.
 pub struct StreamingServer {
+    /// the replica router (sticky sessions, round-robin assignment)
     pub router: Router,
 }
 
 impl StreamingServer {
-    /// Build with `replicas` engines from a factory (engines must be Send).
+    /// Build with `replicas` engines from a factory (engines must be
+    /// `Send + Sync`; batch compute shares the exec pool).
     pub fn new<F>(replicas: usize, cfg: ServerConfig, factory: F) -> Self
     where
-        F: Fn() -> Box<dyn StreamingEngine + Send>,
+        F: Fn() -> Box<dyn StreamingEngine + Send + Sync>,
     {
         let batchers = (0..replicas)
             .map(|_| DynamicBatcher::new(factory(), cfg.clone()))
@@ -320,6 +454,47 @@ mod tests {
         let after_reset = b.step_blocking(5, vec![1.0]);
         for (a, c) in first.output.iter().zip(&after_reset.output) {
             assert!((a - c).abs() < 1e-6, "reset did not clear DN state");
+        }
+    }
+
+    #[test]
+    fn batched_sessions_match_serial_reference() {
+        // many sessions submitted together execute as one pooled batch;
+        // each session's stream must be bit-identical to stepping a
+        // standalone engine with the same weights serially
+        let b = DynamicBatcher::new(Box::new(make_engine(9)), ServerConfig::default());
+        let reference = make_engine(9);
+        let n_sessions = 6u64;
+        let rounds = 4usize;
+        let mut rxs: Vec<(u64, mpsc::Receiver<StepResponse>)> = Vec::new();
+        for t in 0..rounds {
+            let mut round_rx = Vec::new();
+            for s in 0..n_sessions {
+                let (tx, rx) = mpsc::channel();
+                b.submit(s, vec![(s as f32 + 1.0) * 0.1 + t as f32 * 0.01], tx);
+                round_rx.push((s, rx));
+            }
+            rxs.extend(round_rx);
+        }
+        let mut got: HashMap<u64, Vec<Vec<f32>>> = HashMap::new();
+        for (s, rx) in rxs {
+            let resp = rx.recv().expect("batcher died");
+            assert_eq!(resp.session, s);
+            got.entry(s).or_default().push(resp.output);
+        }
+        for s in 0..n_sessions {
+            let mut state = vec![0.0f32; reference.state_size()];
+            for (t, out) in got[&s].iter().enumerate() {
+                let want =
+                    reference.step(&mut state, &[(s as f32 + 1.0) * 0.1 + t as f32 * 0.01]);
+                assert_eq!(out.len(), want.len());
+                for (a, b) in out.iter().zip(&want) {
+                    assert!(
+                        a.to_bits() == b.to_bits(),
+                        "session {s} step {t}: {a} vs {b}"
+                    );
+                }
+            }
         }
     }
 

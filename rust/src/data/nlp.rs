@@ -30,7 +30,7 @@ use crate::util::Rng;
 pub struct SynthLang {
     pub words: Vec<String>,
     pub clusters: Vec<Vec<usize>>,
-    /// polarity[w] in {-1, 0, +1}
+    /// `polarity[w]` in {-1, 0, +1}
     pub polarity: Vec<i8>,
     /// antonym pairs among verbs (index -> index)
     pub antonym: Vec<usize>,

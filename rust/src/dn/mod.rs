@@ -17,7 +17,7 @@
 //!
 //! The parallel evaluation strategies dispatch through `crate::exec`:
 //! [`DnFftOperator`] fans its independent input channels (and, at build
-//! time, its d kernel spectra) across scoped worker threads, and
+//! time, its d kernel spectra) across the exec pool workers, and
 //! [`DelayNetwork::parallel_last`] row-partitions the impulse-response
 //! application.  Every partition computes each output element with the
 //! identical serial op order, so thread count never changes results.
@@ -123,7 +123,7 @@ impl DelayNetwork {
         DelayNetwork { d, theta, abar, abar_f32, bbar, bbar_f32 }
     }
 
-    /// Impulse response H: (n, d) with H[t] = Ā^t B̄  (eq. 22).
+    /// Impulse response H: (n, d) with `H[t] = Ā^t B̄`  (eq. 22).
     /// Computed the way the paper does: feed an impulse through eq. (19).
     pub fn impulse_response(&self, n: usize) -> Tensor {
         let d = self.d;

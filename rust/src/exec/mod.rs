@@ -4,10 +4,11 @@
 //! the sequential dependency from training, leaving big, embarrassingly
 //! parallel batched kernels (matmul, FFT causal convolution, elementwise
 //! maps).  This module is the single place that turns that latent
-//! parallelism into wall-clock speedup on CPU: a scoped-thread
-//! row-partition executor (`std::thread::scope` — no crate dependencies,
-//! builds are offline) with a global thread-count knob plumbed through the
-//! CLI (`--threads`) and config (`[train] threads`).
+//! parallelism into wall-clock speedup on CPU: a row-partition executor
+//! backed by a **persistent parked worker pool** (see `pool.rs` — plain
+//! `Mutex`/`Condvar`, no crate dependencies, builds are offline) with a
+//! global thread-count knob plumbed through the CLI (`--threads`), config
+//! (`[train] threads`), and environment (`PLMU_THREADS`).
 //!
 //! Design rules every dispatch site follows:
 //!
@@ -20,11 +21,17 @@
 //!  * **No nested fan-out.**  A worker that calls back into a parallel
 //!    kernel (e.g. per-sample DN conv → per-channel FFT) runs it serially:
 //!    [`workers_for`] returns 1 inside a parallel region, bounding live
-//!    threads at the configured count.
-//!  * **Threshold-gated.**  Scoped threads are spawned per call; jobs
-//!    smaller than [`MIN_PARALLEL_WORK`] scalar ops stay serial so the
-//!    many tiny per-timestep matmuls of the sequential baselines don't pay
-//!    spawn overhead.
+//!    compute threads at the configured count.  The data-parallel
+//!    coordinator and the serving batcher dispatch *their* fan-out through
+//!    this same pool, so replica-level and kernel-level parallelism share
+//!    one budget instead of multiplying.
+//!  * **Threshold-gated.**  Jobs smaller than [`MIN_PARALLEL_WORK`] scalar
+//!    ops stay serial.  With the persistent pool a dispatch is a parked
+//!    hand-off (~1µs) instead of a thread spawn (~10µs), so the threshold
+//!    sits an order of magnitude lower than the scoped-spawn substrate's —
+//!    the crossover measured by `cargo bench --bench pool_crossover`.
+
+mod pool;
 
 use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -33,13 +40,15 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 /// default from `PLMU_THREADS` or the machine's parallelism).
 static THREADS: AtomicUsize = AtomicUsize::new(0);
 
-/// Default cap: beyond this, per-call spawn overhead and memory bandwidth
-/// dominate for the shapes these models use.
+/// Default cap: beyond this, memory bandwidth dominates for the shapes
+/// these models use.
 const DEFAULT_MAX_THREADS: usize = 8;
 
-/// Minimum total scalar ops before a kernel fans out.  A scoped-thread
-/// spawn costs ~10µs; this keeps the crossover comfortably profitable.
-pub const MIN_PARALLEL_WORK: usize = 1 << 18;
+/// Minimum total scalar ops before a kernel fans out.  A parked-pool
+/// hand-off costs ~1µs (versus ~10µs for the scoped-spawn substrate this
+/// replaced, whose threshold was `1 << 18`); `cargo bench --bench
+/// pool_crossover` measures the crossover and writes `BENCH_pool.json`.
+pub const MIN_PARALLEL_WORK: usize = 1 << 14;
 
 fn resolve_default() -> usize {
     if let Ok(v) = std::env::var("PLMU_THREADS") {
@@ -68,7 +77,9 @@ pub fn threads() -> usize {
 }
 
 /// Set the worker count (clamped to >= 1).  1 selects the serial
-/// reference path everywhere.
+/// reference path everywhere.  Raising the knob grows the pool lazily on
+/// the next dispatch; lowering it caps future dispatches (already-spawned
+/// helpers park and stay idle).
 pub fn set_threads(n: usize) {
     THREADS.store(n.max(1), Ordering::Relaxed);
 }
@@ -96,9 +107,10 @@ fn enter_region() -> RegionGuard {
 }
 
 /// Run `f` with kernel-level parallel dispatch disabled on the current
-/// thread: every `workers_for` inside reports 1.  For coordinators that
-/// manage their own thread-level parallelism (e.g. data-parallel replica
-/// workers) so replica count × kernel threads don't multiply.
+/// thread: every `workers_for` inside reports 1.  For code that manages
+/// its own thread-level parallelism (e.g. engines constructed on
+/// thread-bound batcher threads) so external thread counts and kernel
+/// threads don't multiply.
 pub fn run_serialized<R>(f: impl FnOnce() -> R) -> R {
     let _g = enter_region();
     f()
@@ -118,12 +130,23 @@ pub fn workers_for(items: usize, work: usize) -> usize {
     t.min(items)
 }
 
+/// Raw-pointer wrapper that lets disjoint sub-slices of one buffer be
+/// handed to pool workers.  Soundness relies on the chunk ranges being
+/// disjoint (they partition the buffer) and on `T: Send`.
+struct SendPtr<T>(*mut T);
+
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
 /// Partition `out` into per-worker blocks of whole rows (`row_len`
-/// elements each) and run `f(first_row_index, block)` on each block, the
-/// first block on the calling thread and the rest on scoped threads.
+/// elements each) and run `f(first_row_index, block)` on each block, on
+/// the persistent worker pool with the calling thread participating.
 ///
 /// `workers <= 1` (or a single row) short-circuits to `f(0, out)` with no
-/// scope and no region flag — the serial reference path.
+/// pool dispatch and no region flag — the serial reference path.  The
+/// block partition depends only on `(rows, workers)`, never on which pool
+/// thread runs which block, so results are bit-exact at every thread
+/// count.
 pub fn parallel_rows_mut<T, F>(out: &mut [T], row_len: usize, workers: usize, f: F)
 where
     T: Send,
@@ -136,38 +159,28 @@ where
     }
     let workers = workers.min(rows);
     let chunk_rows = rows.div_ceil(workers);
-    std::thread::scope(|scope| {
-        let f = &f;
-        let mut rest = out;
-        let mut row0 = 0usize;
-        let mut first: Option<(usize, &mut [T])> = None;
-        while !rest.is_empty() {
-            let take = (chunk_rows * row_len).min(rest.len());
-            let (head, tail) = {
-                let tmp = rest;
-                tmp.split_at_mut(take)
-            };
-            if first.is_none() {
-                first = Some((row0, head));
-            } else {
-                scope.spawn(move || {
-                    let _g = enter_region();
-                    f(row0, head);
-                });
-            }
-            row0 += take / row_len;
-            rest = tail;
-        }
-        if let Some((r0, block)) = first {
-            let _g = enter_region();
-            f(r0, block);
-        }
+    let chunks = rows.div_ceil(chunk_rows);
+    if chunks <= 1 {
+        f(0, out);
+        return;
+    }
+    let total_len = out.len();
+    let base = SendPtr(out.as_mut_ptr());
+    pool::run(chunks, &|ci| {
+        let start = ci * chunk_rows * row_len;
+        // the last chunk absorbs any ragged tail beyond rows * row_len
+        let end = if ci + 1 == chunks { total_len } else { start + chunk_rows * row_len };
+        // SAFETY: chunk ranges [start, end) are in-bounds, pairwise
+        // disjoint, and cover the buffer exactly once; `T: Send` lets the
+        // sub-slice cross to a pool thread.
+        let block = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
+        f(ci * chunk_rows, block);
     });
 }
 
 /// Run `f(lo, hi)` over a partition of `0..n` into `workers` contiguous
-/// ranges (first range on the calling thread).  For jobs whose output is
-/// not one contiguous mutable slice.
+/// ranges on the persistent worker pool (calling thread participating).
+/// For jobs whose output is not one contiguous mutable slice.
 pub fn parallel_ranges<F>(n: usize, workers: usize, f: F)
 where
     F: Fn(usize, usize) + Sync,
@@ -180,21 +193,15 @@ where
     }
     let workers = workers.min(n);
     let chunk = n.div_ceil(workers);
-    std::thread::scope(|scope| {
-        let f = &f;
-        for w in 1..workers {
-            let lo = w * chunk;
-            if lo >= n {
-                break;
-            }
-            let hi = ((w + 1) * chunk).min(n);
-            scope.spawn(move || {
-                let _g = enter_region();
-                f(lo, hi);
-            });
-        }
-        let _g = enter_region();
-        f(0, chunk.min(n));
+    let chunks = n.div_ceil(chunk);
+    if chunks <= 1 {
+        f(0, n);
+        return;
+    }
+    pool::run(chunks, &|ci| {
+        let lo = ci * chunk;
+        let hi = ((ci + 1) * chunk).min(n);
+        f(lo, hi);
     });
 }
 
@@ -215,6 +222,29 @@ where
         }
     });
     out.into_iter().map(|v| v.expect("parallel_map: slot unfilled")).collect()
+}
+
+// ------------------------------------------------------- pool observability
+
+/// High-water mark of concurrently busy exec threads (pool workers, the
+/// dispatching caller, and serial-fallback callers) since the last
+/// [`reset_pool_peak`].  The budget invariant — pinned by
+/// `rust/tests/exec_equivalence.rs` — is that a single dispatching
+/// pipeline never drives this above [`threads`].
+pub fn pool_peak_concurrency() -> usize {
+    pool::peak_concurrency()
+}
+
+/// Reset the [`pool_peak_concurrency`] high-water mark to zero.
+pub fn reset_pool_peak() {
+    pool::reset_peak()
+}
+
+/// Number of persistent helper threads the pool has spawned so far
+/// (excludes the dispatching caller).  Grows lazily with demand, never
+/// shrinks; idle helpers are parked on a condvar and cost nothing.
+pub fn pool_helpers() -> usize {
+    pool::helper_count()
 }
 
 #[cfg(test)]
@@ -242,6 +272,19 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn ragged_tail_is_covered() {
+        // out.len() not a multiple of row_len: the tail elements beyond
+        // the last whole row must still be handed to exactly one block
+        let mut out = vec![0u32; 11]; // 5 rows of 2 + 1 ragged element
+        parallel_rows_mut(&mut out, 2, 2, |_, block| {
+            for v in block.iter_mut() {
+                *v += 1;
+            }
+        });
+        assert!(out.iter().all(|&v| v == 1), "{out:?}");
     }
 
     #[test]
@@ -284,5 +327,66 @@ mod tests {
     fn small_work_stays_serial() {
         assert_eq!(workers_for(8, 10), 1);
         assert_eq!(workers_for(1, usize::MAX), 1);
+    }
+
+    #[test]
+    fn pool_is_reused_across_many_dispatches() {
+        // hammer the pool: helpers must be reused, results exact each time
+        for round in 0..200usize {
+            let n = 16 + round % 7;
+            let v = parallel_map(n, 4, |i| i * 3 + round);
+            assert_eq!(v, (0..n).map(|i| i * 3 + round).collect::<Vec<_>>());
+        }
+        // the pool never spawns more helpers than the largest job needed
+        assert!(pool_helpers() <= 16, "helpers {}", pool_helpers());
+    }
+
+    #[test]
+    fn concurrent_dispatchers_stay_correct() {
+        // several OS threads dispatching at once: one owns the pool, the
+        // rest degrade to serial — every result must still be exact
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    for round in 0..50usize {
+                        let v = parallel_map(13, 3, |i| i * 7 + t * 1000 + round);
+                        let want: Vec<usize> =
+                            (0..13).map(|i| i * 7 + t * 1000 + round).collect();
+                        assert_eq!(v, want);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn panic_in_chunk_propagates_and_pool_survives() {
+        let r = std::panic::catch_unwind(|| {
+            parallel_ranges(8, 4, |lo, _| {
+                if lo >= 4 {
+                    panic!("chunk boom");
+                }
+            });
+        });
+        assert!(r.is_err(), "panic was swallowed");
+        // the pool must remain fully usable after a failed job
+        let v = parallel_map(9, 3, |i| i + 1);
+        assert_eq!(v, (1..=9).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn peak_concurrency_is_tracked() {
+        // at least the dispatching thread is counted while a job runs
+        reset_pool_peak();
+        parallel_ranges(64, 4, |lo, hi| {
+            std::hint::black_box((lo..hi).sum::<usize>());
+        });
+        assert!(pool_peak_concurrency() >= 1);
+        // (the exact upper bound is pinned by exec_equivalence.rs, which
+        // owns the global thread knob; unit tests here may run
+        // concurrently with each other so only the lower bound is safe)
     }
 }

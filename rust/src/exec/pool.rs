@@ -1,0 +1,289 @@
+//! The persistent worker pool behind the `exec` dispatch helpers.
+//!
+//! The previous substrate spawned scoped threads per call
+//! (`std::thread::scope`), which costs ~10µs per dispatch and forced a
+//! high serial/parallel crossover (`MIN_PARALLEL_WORK` was 2^18 scalar
+//! ops).  This pool keeps workers alive across calls, parked on a
+//! `Condvar` when idle, so a dispatch is a mutex hand-off (~1µs) and the
+//! crossover drops by an order of magnitude — exactly what the
+//! many-small-batch serving workload needs.
+//!
+//! Design:
+//!
+//!  * **Lazy, process-global.**  The pool is created on first parallel
+//!    dispatch; helper threads are spawned on demand up to
+//!    `chunks - 1` for the largest job seen and then reused forever
+//!    (they are parked, not spinning, so idle helpers cost nothing).
+//!  * **One job at a time.**  A dispatching thread takes the `dispatch`
+//!    mutex for the whole job.  A second thread that wants to dispatch
+//!    while the pool is busy runs its job serially on itself instead —
+//!    so two concurrent dispatchers can never multiply thread counts,
+//!    and the process-wide compute concurrency the pool *creates* stays
+//!    bounded by the `threads` budget.
+//!  * **Work queue, caller participates.**  A job is `chunks` disjoint
+//!    chunk indices; the dispatcher and the helpers claim indices from a
+//!    shared counter until none remain.  Which thread runs which chunk
+//!    never affects results (chunks are independent and internally
+//!    serial), so bit-exactness is preserved.
+//!  * **Panic safe.**  A panic inside a chunk is caught on the worker,
+//!    recorded, and re-raised on the dispatching thread after the job
+//!    drains; unstarted chunks of the failed job are abandoned.  Helpers
+//!    survive and the pool stays usable.
+//!
+//! "Pinned" here means the workers are long-lived named threads; OS-level
+//! CPU affinity would need a syscall crate that is not in the offline
+//! vendor set (see DESIGN.md §Substitutions).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard, OnceLock, TryLockError};
+
+/// Lifetime-erased fat pointer to the active job's per-chunk closure.
+///
+/// Soundness: the pointer is dereferenced only between job publication
+/// and the `unfinished == 0` handshake in [`run`], and `run` does not
+/// return (so the borrowed closure cannot be dropped) until that
+/// handshake completes.
+#[derive(Clone, Copy)]
+struct JobFn(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (shared-callable from any thread) and the
+// completion handshake in `run` bounds its lifetime.
+unsafe impl Send for JobFn {}
+
+struct State {
+    /// the active job's chunk closure (`None` = pool idle)
+    job: Option<JobFn>,
+    /// next chunk index to hand out
+    next_chunk: usize,
+    /// one past the last chunk index of the active job
+    total_chunks: usize,
+    /// chunks of the active job not yet completed
+    unfinished: usize,
+    /// helper threads spawned so far (grows lazily, never shrinks)
+    helpers: usize,
+    /// first panic payload observed in a chunk of the active job
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+struct Pool {
+    state: Mutex<State>,
+    /// helpers and the dispatcher both wait here; every state change that
+    /// could unblock a waiter does `notify_all`
+    cv: Condvar,
+    /// held by the dispatching thread for the whole job
+    dispatch: Mutex<()>,
+    /// threads currently executing exec-dispatched work
+    busy: AtomicUsize,
+    /// high-water mark of `busy` since the last [`reset_peak`]
+    peak: AtomicUsize,
+}
+
+fn lock(m: &Mutex<State>) -> MutexGuard<'_, State> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn wait<'a>(cv: &Condvar, g: MutexGuard<'a, State>) -> MutexGuard<'a, State> {
+    cv.wait(g).unwrap_or_else(|e| e.into_inner())
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool {
+        state: Mutex::new(State {
+            job: None,
+            next_chunk: 0,
+            total_chunks: 0,
+            unfinished: 0,
+            helpers: 0,
+            panic: None,
+        }),
+        cv: Condvar::new(),
+        dispatch: Mutex::new(()),
+        busy: AtomicUsize::new(0),
+        peak: AtomicUsize::new(0),
+    })
+}
+
+/// RAII busy-thread accounting (peak tracking survives panics).
+struct BusyGuard<'a>(&'a Pool);
+
+impl<'a> BusyGuard<'a> {
+    fn new(pool: &'a Pool) -> Self {
+        let b = pool.busy.fetch_add(1, Ordering::Relaxed) + 1;
+        pool.peak.fetch_max(b, Ordering::Relaxed);
+        BusyGuard(pool)
+    }
+}
+
+impl Drop for BusyGuard<'_> {
+    fn drop(&mut self) {
+        self.0.busy.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+fn spawn_helper(pool: &'static Pool) {
+    std::thread::Builder::new()
+        .name("plmu-exec".to_string())
+        .spawn(move || helper_loop(pool))
+        .expect("exec: failed to spawn pool worker");
+}
+
+fn helper_loop(pool: &'static Pool) {
+    let mut st = lock(&pool.state);
+    loop {
+        if let Some(job) = st.job {
+            if st.next_chunk < st.total_chunks {
+                let idx = st.next_chunk;
+                st.next_chunk += 1;
+                drop(st);
+                let panicked = run_chunk(pool, job, idx);
+                st = lock(&pool.state);
+                finish_chunk(pool, &mut st, panicked);
+                continue;
+            }
+        }
+        st = wait(&pool.cv, st);
+    }
+}
+
+/// Execute one chunk inside a parallel region, catching panics.
+fn run_chunk(pool: &Pool, job: JobFn, idx: usize) -> Option<Box<dyn std::any::Any + Send>> {
+    let _busy = BusyGuard::new(pool);
+    let _region = super::enter_region();
+    catch_unwind(AssertUnwindSafe(|| {
+        // SAFETY: see `JobFn` — the dispatcher keeps the closure alive
+        // until every chunk has reported completion.
+        let f = unsafe { &*job.0 };
+        f(idx)
+    }))
+    .err()
+}
+
+fn finish_chunk(pool: &Pool, st: &mut State, panicked: Option<Box<dyn std::any::Any + Send>>) {
+    st.unfinished -= 1;
+    if let Some(p) = panicked {
+        if st.panic.is_none() {
+            st.panic = Some(p);
+        }
+        // failed job: abandon every chunk nobody has started yet
+        st.unfinished -= st.total_chunks - st.next_chunk;
+        st.next_chunk = st.total_chunks;
+    }
+    // the only waiter that consumes this transition is the dispatcher
+    // blocked on job completion; helpers only wait for new jobs, so
+    // skipping the wakeup while chunks remain avoids O(chunks × helpers)
+    // spurious wakeups on the hot dispatch path
+    if st.unfinished == 0 {
+        pool.cv.notify_all();
+    }
+}
+
+/// Run `f(chunk)` for every chunk index in `0..chunks` on the persistent
+/// pool, with the calling thread participating.  Blocks until every chunk
+/// has completed; a panic in any chunk is re-raised here.
+///
+/// `chunks` must already respect the thread budget — dispatch sites derive
+/// it from [`super::workers_for`], which caps at [`super::threads`].  If
+/// another thread currently owns the pool (or this is a re-entrant call),
+/// the whole job runs serially on the caller instead, so concurrent
+/// dispatchers never oversubscribe.
+pub(super) fn run(chunks: usize, f: &(dyn Fn(usize) + Sync)) {
+    if chunks == 0 {
+        return;
+    }
+    let pool = pool();
+    let owner = match pool.dispatch.try_lock() {
+        Ok(g) => g,
+        // a previous dispatcher panicked while holding the lock (only
+        // possible on the degenerate single-chunk path); the pool state
+        // is consistent, so just take ownership
+        Err(TryLockError::Poisoned(p)) => p.into_inner(),
+        Err(TryLockError::WouldBlock) => {
+            // pool busy: degrade to serial on this thread (still flagged
+            // as a region so kernels below do not try to fan out)
+            let _busy = BusyGuard::new(pool);
+            let _region = super::enter_region();
+            for i in 0..chunks {
+                f(i);
+            }
+            return;
+        }
+    };
+    if chunks == 1 {
+        let _busy = BusyGuard::new(pool);
+        let _region = super::enter_region();
+        f(0);
+        return;
+    }
+    // SAFETY: erases the closure's lifetime so it can sit in the shared
+    // state; `run` does not return until `unfinished == 0`, after the
+    // last dereference.
+    let job = {
+        let f_erased: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
+        JobFn(f_erased)
+    };
+    {
+        let mut st = lock(&pool.state);
+        let want = chunks - 1;
+        while st.helpers < want {
+            spawn_helper(pool);
+            st.helpers += 1;
+        }
+        debug_assert!(st.job.is_none(), "exec pool: overlapping jobs");
+        st.job = Some(job);
+        st.next_chunk = 0;
+        st.total_chunks = chunks;
+        st.unfinished = chunks;
+        st.panic = None;
+        // wake only as many helpers as this job can occupy — notify_all
+        // would stampede every helper ever spawned through the state
+        // mutex on each dispatch.  Under-waking is harmless: the
+        // dispatcher claims leftover chunks itself, and a not-yet-parked
+        // helper re-checks the claim condition before waiting.
+        for _ in 0..want {
+            pool.cv.notify_one();
+        }
+    }
+    // claim chunks alongside the helpers, then wait out the stragglers
+    let mut st = lock(&pool.state);
+    loop {
+        if st.next_chunk < st.total_chunks {
+            let idx = st.next_chunk;
+            st.next_chunk += 1;
+            drop(st);
+            let panicked = run_chunk(pool, job, idx);
+            st = lock(&pool.state);
+            finish_chunk(pool, &mut st, panicked);
+            continue;
+        }
+        if st.unfinished == 0 {
+            break;
+        }
+        st = wait(&pool.cv, st);
+    }
+    st.job = None;
+    let panic = st.panic.take();
+    drop(st);
+    drop(owner);
+    if let Some(p) = panic {
+        std::panic::resume_unwind(p);
+    }
+}
+
+/// High-water mark of concurrently busy exec threads since the last
+/// [`reset_peak`] (dispatcher and serial-fallback callers included).
+pub(super) fn peak_concurrency() -> usize {
+    pool().peak.load(Ordering::Relaxed)
+}
+
+/// Reset the [`peak_concurrency`] high-water mark to zero.
+pub(super) fn reset_peak() {
+    pool().peak.store(0, Ordering::Relaxed)
+}
+
+/// Number of helper threads the pool has spawned so far (excludes the
+/// dispatching caller; grows lazily, never shrinks).
+pub(super) fn helper_count() -> usize {
+    lock(&pool().state).helpers
+}

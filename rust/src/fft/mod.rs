@@ -10,7 +10,7 @@
 //!
 //! Plans and post-twiddle tables live in a process-global `Arc` cache
 //! (RwLock'd HashMap) rather than the former `thread_local!` `Rc` cache:
-//! the batched convolutions fan out over `crate::exec` scoped worker
+//! the batched convolutions fan out over `crate::exec` pool worker
 //! threads, and per-thread caches would rebuild every plan on every
 //! spawned worker.  Batch-level parallelism partitions the *independent
 //! signal rows* (B·dx of them); each row's transform is the identical
@@ -71,7 +71,7 @@ pub fn next_pow2(n: usize) -> usize {
 /// Precomputed FFT plan for a fixed power-of-two length.
 pub struct Plan {
     n: usize,
-    /// twiddles[s] holds the n/2 factors for stage with half-size m/2
+    /// `twiddles[s]` holds the n/2 factors for stage with half-size m/2
     twiddles: Vec<Vec<Cpx>>,
     bitrev: Vec<usize>,
 }
@@ -292,7 +292,7 @@ pub fn irfft_real(mut spectrum: Vec<Cpx>, out_len: usize) -> Vec<f32> {
 }
 
 /// Causal (linear) convolution of two real sequences, truncated to `out_len`:
-/// out[t] = sum_{j<=t} a[j] b[t-j].
+/// `out[t] = sum_{j<=t} a[j] b[t-j]`.
 pub fn conv_causal(a: &[f32], b: &[f32], out_len: usize) -> Vec<f32> {
     let need = a.len() + b.len() - 1;
     let nfft = next_pow2(need.max(out_len));

@@ -24,7 +24,7 @@ use crate::dn::{DelayNetwork, DnFftOperator};
 use crate::exec;
 use crate::tensor::Tensor;
 use crate::util::Rng;
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// Shared hyperparameters of our-model layers.
 #[derive(Clone, Debug)]
@@ -76,7 +76,7 @@ impl LmuParams {
 pub struct LmuParallelLayer {
     pub spec: LmuSpec,
     pub params: LmuParams,
-    dn_op: Rc<DnFftOperator>,
+    dn_op: Arc<DnFftOperator>,
     /// time-reversed impulse response for the eq. 25 last-state path
     hrev: Tensor,
     pub n: usize,
@@ -85,7 +85,7 @@ pub struct LmuParallelLayer {
 impl LmuParallelLayer {
     pub fn new(spec: LmuSpec, n: usize, store: &mut ParamStore, rng: &mut Rng, prefix: &str) -> Self {
         let dn = DelayNetwork::new(spec.d, spec.theta);
-        let dn_op = Rc::new(DnFftOperator::new(&dn, n));
+        let dn_op = Arc::new(DnFftOperator::new(&dn, n));
         let h = dn.impulse_response(n);
         let d = spec.d;
         // time-reversal is a pure row permutation — partition output rows

@@ -21,9 +21,12 @@
 //!
 //! The native substrate's hot kernels (matmul, FFT causal convolution,
 //! elementwise maps, DN application) dispatch through the [`exec`]
-//! thread-parallel execution substrate — serial (`threads = 1`) and
-//! parallel execution are bit-exact, mirroring the paper's claim that the
-//! parallel and recurrent forms compute the same function.
+//! thread-parallel execution substrate — a persistent parked worker pool
+//! that the data-parallel coordinator and the serving batcher also fan
+//! out on, so every parallel code path in the process shares one thread
+//! budget.  Serial (`threads = 1`) and parallel execution are bit-exact,
+//! mirroring the paper's claim that the parallel and recurrent forms
+//! compute the same function.
 //!
 //! See DESIGN.md for the experiment index and architecture notes, and
 //! EXPERIMENTS.md for results and perf records.

@@ -42,10 +42,11 @@ fn main() -> Result<()> {
         .opt(
             "threads",
             "0",
-            "kernel worker threads for the exec substrate (matmul/FFT/DN); \
+            "worker threads of the shared exec pool (kernels, data-parallel replicas, \
+             server batches all draw on this one budget); \
              0 = all cores (capped), 1 = serial reference — results are bit-identical either way",
         )
-        .opt("workers", "2", "train-dp: worker threads")
+        .opt("workers", "2", "train-dp: data-parallel replicas (they share the --threads budget)")
         .opt("sessions", "8", "serve: concurrent sessions")
         .opt("tokens", "64", "serve: tokens per session")
         .opt("replicas", "1", "serve: engine replicas")

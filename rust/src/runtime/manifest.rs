@@ -1,13 +1,16 @@
 //! Parser for `artifacts/manifest.txt` (written by python/compile/aot.py).
 //!
 //! Line format (whitespace separated):
-//!   # comment
-//!   config k=v k=v ...
-//!   param <name> offset=<int> shape=<d0>x<d1>...
-//!   artifact <name> <file>
-//!     in <idx> <dtype> <d0,d1,...|scalar>
-//!     out <idx> <dtype> <dims|scalar>
-//!   blob <name> <file> len=<int>
+//!
+//! ```text
+//! # comment
+//! config k=v k=v ...
+//! param <name> offset=<int> shape=<d0>x<d1>...
+//! artifact <name> <file>
+//!   in <idx> <dtype> <d0,d1,...|scalar>
+//!   out <idx> <dtype> <dims|scalar>
+//! blob <name> <file> len=<int>
+//! ```
 
 use crate::error::Result;
 use crate::{anyhow, bail};

@@ -13,7 +13,7 @@
 //! order dominates.
 //!
 //! All three kernels dispatch through `crate::exec`: the output C is
-//! row-partitioned across scoped worker threads, so every thread owns a
+//! row-partitioned across the exec pool workers, so every thread owns a
 //! disjoint contiguous shard of C and no accumulation races exist —
 //! including `matmul_tn`, whose rank-1 updates stay race-free because each
 //! worker applies the full p-sweep to its own rows only.  Per output

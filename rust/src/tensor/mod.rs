@@ -5,7 +5,7 @@
 //!
 //! Elementwise maps, row-wise softmax, and the 2-D transpose dispatch
 //! through `crate::exec` above a size threshold: the output is
-//! row-partitioned across scoped worker threads, each element is computed
+//! row-partitioned across the exec pool workers, each element is computed
 //! by the identical op sequence as the serial loop, so results are
 //! bit-exact at every thread count.
 

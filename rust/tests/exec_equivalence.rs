@@ -10,21 +10,35 @@
 //! unaffected.
 
 use plmu::autograd::{Graph, ParamStore};
+use plmu::coordinator::data_parallel::{
+    shard_dataset, DataParallelConfig, DataParallelCoordinator,
+};
 use plmu::dn::{DelayNetwork, DnFftOperator};
 use plmu::exec;
 use plmu::fft::{next_pow2, RfftCache};
 use plmu::layers::lmu::{LmuParallelLayer, LmuSpec};
 use plmu::layers::{to_sample_major, to_time_major};
+use plmu::optim::Adam;
+use plmu::train::{ModelKind, SeqClassifier};
 use plmu::util::Rng;
 use plmu::Tensor;
 use std::sync::Mutex;
 
 static THREAD_KNOB: Mutex<()> = Mutex::new(());
 
+/// Hold the global thread-knob lock for a whole test body.  The knob,
+/// the worker pool, and its peak-concurrency counter are process-global,
+/// so *every* test in this binary — including its setup work, which may
+/// itself dispatch on the pool (e.g. `DnFftOperator::new`) — must be
+/// serialized, or the budget assertions below turn flaky.
+fn knob_guard() -> std::sync::MutexGuard<'static, ()> {
+    THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 /// Run `f` at each thread count and assert the outputs are bit-identical
-/// to the 1-thread reference.
+/// to the 1-thread reference.  Callers hold [`knob_guard`] around their
+/// whole test body.
 fn assert_equal_across_threads(label: &str, f: impl Fn() -> Vec<f32>) {
-    let _guard = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
     exec::set_threads(1);
     let reference = f();
     for &t in &[2usize, 3, 4] {
@@ -49,6 +63,7 @@ fn assert_equal_across_threads(label: &str, f: impl Fn() -> Vec<f32>) {
 
 #[test]
 fn matmul_family_bit_equal() {
+    let _k = knob_guard();
     let mut rng = Rng::new(1);
     let shapes: &[(usize, usize, usize)] =
         &[(129, 67, 65), (517, 33, 31), (7, 300, 5), (1, 1, 1), (3, 2, 1)];
@@ -71,6 +86,7 @@ fn matmul_family_bit_equal() {
 
 #[test]
 fn elementwise_and_softmax_bit_equal() {
+    let _k = knob_guard();
     let mut rng = Rng::new(2);
     // big enough to cross the parallel threshold, odd row count
     let x = Tensor::randn(&[301, 1031], 1.0, &mut rng);
@@ -87,6 +103,7 @@ fn elementwise_and_softmax_bit_equal() {
 
 #[test]
 fn fft_conv_batch_bit_equal() {
+    let _k = knob_guard();
     let mut rng = Rng::new(3);
     let n = 700usize;
     let kernel: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
@@ -101,6 +118,7 @@ fn fft_conv_batch_bit_equal() {
 
 #[test]
 fn dn_fft_operator_bit_equal() {
+    let _k = knob_guard();
     let mut rng = Rng::new(4);
     for &(n, d, du) in &[(257usize, 12usize, 5usize), (64, 8, 1), (1, 4, 2)] {
         let dn = DelayNetwork::new(d, n.max(4) as f64);
@@ -121,6 +139,7 @@ fn dn_fft_operator_bit_equal() {
 
 #[test]
 fn dn_parallel_last_bit_equal_large() {
+    let _k = knob_guard();
     // big enough that the row partition over the d state dimensions
     // actually engages (n*d*du crosses MIN_PARALLEL_WORK)
     let mut rng = Rng::new(9);
@@ -134,6 +153,7 @@ fn dn_parallel_last_bit_equal_large() {
 
 #[test]
 fn dn_operator_rebuild_bit_equal_across_threads() {
+    let _k = knob_guard();
     // operator CONSTRUCTION also fans out (per-kernel FFTs) — rebuilding
     // under different thread counts must give identical spectra, observed
     // through apply()
@@ -149,6 +169,7 @@ fn dn_operator_rebuild_bit_equal_across_threads() {
 
 #[test]
 fn lmu_parallel_layer_forward_bit_equal() {
+    let _k = knob_guard();
     // full layer forward through the autograd graph: encoder matmul ->
     // batched DN conv (nested parallelism) -> output matmul; odd batch
     // and sequence sizes, plus the B=1 and n=1 degenerate cases
@@ -172,6 +193,7 @@ fn lmu_parallel_layer_forward_bit_equal() {
 
 #[test]
 fn lmu_backward_grads_bit_equal() {
+    let _k = knob_guard();
     // gradients flow through the adjoint convolution and matmul_tn —
     // the full training step must also be thread-count invariant
     let (batch, n, dx, d, hidden) = (2usize, 257usize, 4usize, 7usize, 9usize);
@@ -197,6 +219,7 @@ fn lmu_backward_grads_bit_equal() {
 
 #[test]
 fn layout_transposes_bit_equal() {
+    let _k = knob_guard();
     let mut rng = Rng::new(8);
     for &(batch, n, f) in &[(7usize, 53usize, 19usize), (1, 5, 3), (4, 1, 2)] {
         let x = Tensor::randn(&[batch * n, f], 1.0, &mut rng);
@@ -212,9 +235,77 @@ fn layout_transposes_bit_equal() {
     }
 }
 
+fn dp_toy_data(n: usize, seq: usize, seed: u64) -> (Vec<Tensor>, Vec<usize>) {
+    let mut rng = Rng::new(seed);
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for i in 0..n {
+        xs.push(Tensor::randn(&[seq, 1], 1.0, &mut rng));
+        ys.push(i % 2);
+    }
+    (xs, ys)
+}
+
+fn dp_factory(seq: usize) -> impl Fn() -> (ParamStore, SeqClassifier) + Sync {
+    move || {
+        let mut store = ParamStore::new();
+        let mut rng = Rng::new(7);
+        let model =
+            SeqClassifier::new(ModelKind::LmuParallel, seq, 1, 6, 12, 2, &mut store, &mut rng);
+        (store, model)
+    }
+}
+
+#[test]
+fn data_parallel_step_respects_thread_budget() {
+    // 4 replicas on a 2-thread budget: the replica fan-out runs as chunks
+    // of one pool job and every nested kernel is serialized, so the
+    // process must never have more than `threads` compute threads busy.
+    let _k = knob_guard();
+    exec::set_threads(2);
+    exec::reset_pool_peak();
+    let (xs, ys) = dp_toy_data(32, 16, 11);
+    let shards = shard_dataset(xs, ys, 4);
+    let mut opt = Adam::new(1e-3);
+    let cfg = DataParallelConfig {
+        workers: 4,
+        epochs: 1,
+        batch_size: 4,
+        grad_clip: None,
+        seed: 0,
+    };
+    let res = DataParallelCoordinator::run(dp_factory(16), shards, &mut opt, &cfg);
+    assert!(res.steps >= 1, "no steps ran");
+    let peak = exec::pool_peak_concurrency();
+    assert!(peak >= 1, "the pool never engaged during a data-parallel run");
+    assert!(peak <= 2, "thread budget exceeded: peak {peak} busy > 2 configured");
+    exec::set_threads(1);
+}
+
+#[test]
+fn data_parallel_training_bit_equal_across_threads() {
+    let _k = knob_guard();
+    // whole data-parallel runs — replica fan-out, kernels, deterministic
+    // all-reduce, Adam — must produce bit-identical final parameters at
+    // every thread count
+    assert_equal_across_threads("data-parallel final params", || {
+        let (xs, ys) = dp_toy_data(16, 12, 3);
+        let shards = shard_dataset(xs, ys, 2);
+        let mut opt = Adam::new(1e-2);
+        let cfg = DataParallelConfig {
+            workers: 2,
+            epochs: 1,
+            batch_size: 4,
+            grad_clip: Some(5.0),
+            seed: 0,
+        };
+        DataParallelCoordinator::run(dp_factory(12), shards, &mut opt, &cfg).final_params
+    });
+}
+
 #[test]
 fn thread_knob_roundtrip() {
-    let _guard = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let _k = knob_guard();
     exec::set_threads(5);
     assert_eq!(exec::threads(), 5);
     exec::set_threads(0); // clamped to 1
