@@ -27,7 +27,7 @@ fi
 echo "== thread-scaling bench (smoke) =="
 PLMU_BENCH_SMOKE=1 cargo bench --bench fig1_threads
 
-echo "== pool-crossover bench (smoke) =="
+echo "== scheduler bench: crossover + ragged + nested sub-budget (smoke) =="
 PLMU_BENCH_SMOKE=1 cargo bench --bench pool_crossover
 
 echo "== ci OK =="

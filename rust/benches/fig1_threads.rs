@@ -96,6 +96,11 @@ fn main() {
     let op = DnFftOperator::new(&dn, dn_n);
     let u = Tensor::randn(&[dn_n, dn_du], 1.0, &mut rng);
 
+    // ---- case 5: matvec (RNN-mode streaming inference hot path) --------
+    let (mv_r, mv_c) = if smoke { (512usize, 512usize) } else { (1024, 1024) };
+    let mv_m = Tensor::randn(&[mv_r, mv_c], 1.0, &mut rng);
+    let mv_x: Vec<f32> = (0..mv_c).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+
     let cases: Vec<Case> = vec![
         Case {
             name: "matmul",
@@ -134,6 +139,11 @@ fn main() {
             name: "dn_fft_apply",
             items: (dn_n * dn_d * dn_du) as f64,
             run: Box::new(move || checksum(op.apply(&u).data())),
+        },
+        Case {
+            name: "matvec",
+            items: (mv_r * mv_c) as f64,
+            run: Box::new(move || checksum(&plmu::tensor::matmul::matvec(&mv_m, &mv_x))),
         },
     ];
 

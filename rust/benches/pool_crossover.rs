@@ -1,25 +1,33 @@
-//! Dispatch-overhead bench for the persistent worker pool: finds the
-//! serial/parallel *crossover point* — the smallest job (total scalar
-//! ops) where fanning out beats staying serial — for
+//! Scheduler bench for the work-stealing pool.  Three experiments, all
+//! recorded to `BENCH_pool.json` at the repo root:
 //!
-//!  * the persistent parked pool (`exec::parallel_rows_mut`, the shipped
-//!    dispatch), and
-//!  * a per-call scoped-spawn baseline (a faithful copy of the old exec
-//!    substrate's `std::thread::scope` dispatch, kept here for
-//!    comparison),
+//!  1. **Uniform crossover sweep** — the serial/parallel *crossover
+//!     point* (smallest job where fanning out beats staying serial) for
+//!     the shipped work-stealing dispatch (`Plan::sized`), the previous
+//!     static one-chunk-per-worker partition (`Plan::static_partition`),
+//!     and a per-call scoped-spawn baseline (a faithful copy of the
+//!     pre-pool substrate's `std::thread::scope` dispatch).  On uniform
+//!     rows stealing must be no slower than static — the finer chunks
+//!     cost one atomic claim each, amortized by `CHUNK_WORK_TARGET`.
+//!  2. **Ragged-tail workload** — rows with linearly growing cost (a
+//!     batch of variable-length sequences).  The static partition stalls
+//!     on the chunk holding the longest rows; stealing rebalances.
+//!  3. **Nested crossover** — an outer 2-replica fan-out whose chunks
+//!     each run a matmul, with nested kernels serialized (the old
+//!     degenerate path) vs fanning out under hierarchical sub-budgets
+//!     (`threads / 2` per replica).  This is the data-parallel
+//!     R < threads scenario the scheduler overhaul unblocks.
 //!
-//! by sweeping small matmul shapes across both substrates' thresholds
-//! (the scoped substrate gated at 2^18 scalar ops; the pool ships with
-//! `MIN_PARALLEL_WORK = 2^14`).  Emits `BENCH_pool.json` at the repo
-//! root; per sweep point the pool result is asserted bit-identical to
-//! the serial reference.
+//! Per experiment the pool results are asserted bit-identical to the
+//! serial reference.
 //!
 //! Run: cargo bench --bench pool_crossover
 //! Smoke mode (CI): PLMU_BENCH_SMOKE=1 cargo bench --bench pool_crossover
 
 use plmu::benchlib::{bench, BenchConfig, JsonValue, PerfJson, Table};
-use plmu::exec;
+use plmu::exec::{self, Plan};
 use plmu::util::Rng;
+use plmu::Tensor;
 
 /// Walk up from cwd looking for the repo root (ROADMAP.md marker).
 fn repo_root() -> std::path::PathBuf {
@@ -47,7 +55,7 @@ fn checksum(xs: &[f32]) -> u64 {
 }
 
 /// The scoped-spawn dispatch the pool replaced (verbatim partition logic
-/// of the old exec substrate) — the bench baseline.
+/// of the pre-pool exec substrate) — the bench baseline.
 fn scoped_rows_mut<T, F>(out: &mut [T], row_len: usize, workers: usize, f: F)
 where
     T: Send,
@@ -100,6 +108,33 @@ fn matmul_block(a: &[f32], b: &[f32], k: usize, n: usize, r0: usize, block: &mut
     }
 }
 
+/// Ragged workload: row i multiplies over a prefix of k that grows
+/// linearly with the row index — a batch of variable-length sequences
+/// sorted by length.  A static partition hands the longest rows to one
+/// worker; stealing splits them finer.
+fn ragged_block(
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    n: usize,
+    rows_total: usize,
+    r0: usize,
+    block: &mut [f32],
+) {
+    for (i, row) in block.chunks_mut(n).enumerate() {
+        let r = r0 + i;
+        let ki = (((r + 1) * k) / rows_total).max(1);
+        let arow = &a[r * k..r * k + ki];
+        for (j, o) in row.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for (kk, &av) in arow.iter().enumerate() {
+                acc += av * b[kk * n + j];
+            }
+            *o = acc;
+        }
+    }
+}
+
 fn main() {
     let smoke = std::env::var("PLMU_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
     let cfg = if smoke {
@@ -109,12 +144,15 @@ fn main() {
     };
     let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let t = hw.min(4);
+    let mut record = PerfJson::new("pool_crossover");
+
+    // ---------------------------------------- 1. uniform crossover sweep
     // fixed k=n=32, m sweeps the total work m*k*n from 2^12 to 2^19 —
     // spanning the pool threshold (2^14) and the old scoped one (2^18)
     let (k, n) = (32usize, 32usize);
     let ms: &[usize] = if smoke { &[4, 16, 64, 256] } else { &[4, 8, 16, 32, 64, 128, 256, 512] };
     println!(
-        "pool-vs-scoped crossover sweep: k={k} n={n}, m in {ms:?}, {t} workers on {hw} hw threads{}",
+        "uniform crossover sweep: k={k} n={n}, m in {ms:?}, {t} workers on {hw} hw threads{}",
         if smoke { " [smoke]" } else { "" }
     );
 
@@ -123,32 +161,52 @@ fn main() {
     let a: Vec<f32> = (0..m_max * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
     let b: Vec<f32> = (0..k * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
 
-    let mut record = PerfJson::new("pool_crossover");
-    let mut table =
-        Table::new(&["work (ops)", "m", "serial (us)", "pool (us)", "scoped (us)", "pool x", "scoped x"]);
-    let mut pool_crossover: Option<usize> = None;
+    let mut table = Table::new(&[
+        "work (ops)",
+        "m",
+        "serial (us)",
+        "steal (us)",
+        "static (us)",
+        "scoped (us)",
+        "steal x",
+        "static x",
+        "scoped x",
+    ]);
+    let mut steal_crossover: Option<usize> = None;
     let mut scoped_crossover: Option<usize> = None;
+    let mut uniform_ok = true;
 
     for &m in ms {
         let work = m * k * n;
         let mut out = vec![0.0f32; m * n];
 
-        // correctness first: pool result must be bit-identical to serial
+        // correctness first: both pool partitions must be bit-identical
+        // to serial
         matmul_block(&a, &b, k, n, 0, &mut out);
         let ref_sum = checksum(&out);
-        out.iter_mut().for_each(|v| *v = 0.0);
-        exec::parallel_rows_mut(&mut out, n, t, |r0, block| {
-            matmul_block(&a, &b, k, n, r0, block)
-        });
-        assert_eq!(checksum(&out), ref_sum, "pool result differs from serial at m={m}");
+        for plan in [Plan::sized(t, m, work), Plan::static_partition(t)] {
+            out.iter_mut().for_each(|v| *v = 0.0);
+            exec::parallel_rows_mut(&mut out, n, plan, |r0, block| {
+                matmul_block(&a, &b, k, n, r0, block)
+            });
+            assert_eq!(checksum(&out), ref_sum, "pool result differs from serial at m={m}");
+        }
 
         let s_serial = bench("serial", cfg, || {
             matmul_block(&a, &b, k, n, 0, std::hint::black_box(&mut out));
         });
-        let s_pool = bench("pool", cfg, || {
-            exec::parallel_rows_mut(std::hint::black_box(&mut out), n, t, |r0, block| {
+        let s_steal = bench("steal", cfg, || {
+            exec::parallel_rows_mut(std::hint::black_box(&mut out), n, Plan::sized(t, m, work), |r0, block| {
                 matmul_block(&a, &b, k, n, r0, block)
             });
+        });
+        let s_static = bench("static", cfg, || {
+            exec::parallel_rows_mut(
+                std::hint::black_box(&mut out),
+                n,
+                Plan::static_partition(t),
+                |r0, block| matmul_block(&a, &b, k, n, r0, block),
+            );
         });
         let s_scoped = bench("scoped", cfg, || {
             scoped_rows_mut(std::hint::black_box(&mut out), n, t, |r0, block| {
@@ -156,21 +214,29 @@ fn main() {
             });
         });
 
-        let pool_x = s_serial.mean / s_pool.mean;
+        let steal_x = s_serial.mean / s_steal.mean;
+        let static_x = s_serial.mean / s_static.mean;
         let scoped_x = s_serial.mean / s_scoped.mean;
-        if pool_x > 1.0 && pool_crossover.is_none() {
-            pool_crossover = Some(work);
+        if steal_x > 1.0 && steal_crossover.is_none() {
+            steal_crossover = Some(work);
         }
         if scoped_x > 1.0 && scoped_crossover.is_none() {
             scoped_crossover = Some(work);
+        }
+        // acceptance: stealing within 10% of static on uniform loads
+        // (only meaningful where parallelism wins at all)
+        if static_x > 1.0 && s_steal.mean > s_static.mean * 1.10 {
+            uniform_ok = false;
         }
         table.row(&[
             work.to_string(),
             m.to_string(),
             format!("{:.1}", s_serial.mean * 1e6),
-            format!("{:.1}", s_pool.mean * 1e6),
+            format!("{:.1}", s_steal.mean * 1e6),
+            format!("{:.1}", s_static.mean * 1e6),
             format!("{:.1}", s_scoped.mean * 1e6),
-            format!("{pool_x:.2}x"),
+            format!("{steal_x:.2}x"),
+            format!("{static_x:.2}x"),
             format!("{scoped_x:.2}x"),
         ]);
         record.push(&[
@@ -181,9 +247,11 @@ fn main() {
             ("n", JsonValue::Int(n as i64)),
             ("workers", JsonValue::Int(t as i64)),
             ("serial_s", JsonValue::Num(s_serial.mean)),
-            ("pool_s", JsonValue::Num(s_pool.mean)),
+            ("pool_s", JsonValue::Num(s_steal.mean)),
+            ("static_s", JsonValue::Num(s_static.mean)),
             ("scoped_s", JsonValue::Num(s_scoped.mean)),
-            ("pool_speedup", JsonValue::Num(pool_x)),
+            ("pool_speedup", JsonValue::Num(steal_x)),
+            ("static_speedup", JsonValue::Num(static_x)),
             ("scoped_speedup", JsonValue::Num(scoped_x)),
             ("smoke", JsonValue::Bool(smoke)),
             ("hw_threads", JsonValue::Int(hw as i64)),
@@ -193,7 +261,7 @@ fn main() {
     // summary: the crossover points (smallest job where parallel wins)
     record.push(&[
         ("case", JsonValue::Str("crossover".into())),
-        ("pool_crossover_work", JsonValue::Int(pool_crossover.map(|w| w as i64).unwrap_or(-1))),
+        ("pool_crossover_work", JsonValue::Int(steal_crossover.map(|w| w as i64).unwrap_or(-1))),
         (
             "scoped_crossover_work",
             JsonValue::Int(scoped_crossover.map(|w| w as i64).unwrap_or(-1)),
@@ -205,19 +273,139 @@ fn main() {
         ("smoke", JsonValue::Bool(smoke)),
     ]);
 
-    table.print("serial/parallel crossover — persistent pool vs per-call scoped spawn");
-    match (pool_crossover, scoped_crossover) {
+    table.print("uniform crossover — work stealing vs static partition vs scoped spawn");
+    match (steal_crossover, scoped_crossover) {
         (Some(p), Some(s)) => {
-            let verdict = if p <= s { "PASS (pool crossover <= scoped)" } else { "MISS" };
-            println!("\ncrossover: pool at {p} ops, scoped at {s} ops — {verdict}");
+            let verdict = if p <= s { "PASS (steal crossover <= scoped)" } else { "MISS" };
+            println!("\ncrossover: steal at {p} ops, scoped at {s} ops — {verdict}");
         }
         (Some(p), None) => {
-            println!("\ncrossover: pool at {p} ops; scoped never won on this sweep — PASS")
+            println!("\ncrossover: steal at {p} ops; scoped never won on this sweep — PASS")
         }
         (None, _) => println!(
             "\ncrossover: parallel never won (only {hw} hardware threads?) — scaling is machine-bound"
         ),
     }
+    println!(
+        "uniform loads: stealing {} static partition",
+        if uniform_ok { "matches (PASS, within 10%)" } else { "slower than (MISS)" }
+    );
+
+    // ------------------------------------------- 2. ragged-tail workload
+    let rag_rows = if smoke { 48usize } else { 96 };
+    let rag_k = 512usize;
+    let rag_n = 32usize;
+    // total work = sum_i ceil((i+1)k/rows) * n ≈ rows*k*n/2
+    let rag_work = rag_rows * rag_k * rag_n / 2;
+    let ar: Vec<f32> = (0..rag_rows * rag_k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let br: Vec<f32> = (0..rag_k * rag_n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let mut rout = vec![0.0f32; rag_rows * rag_n];
+
+    ragged_block(&ar, &br, rag_k, rag_n, rag_rows, 0, &mut rout);
+    let rag_ref = checksum(&rout);
+    for plan in [Plan::sized(t, rag_rows, rag_work), Plan::static_partition(t)] {
+        rout.iter_mut().for_each(|v| *v = 0.0);
+        exec::parallel_rows_mut(&mut rout, rag_n, plan, |r0, block| {
+            ragged_block(&ar, &br, rag_k, rag_n, rag_rows, r0, block)
+        });
+        assert_eq!(checksum(&rout), rag_ref, "ragged pool result differs from serial");
+    }
+
+    let rg_serial = bench("ragged serial", cfg, || {
+        ragged_block(&ar, &br, rag_k, rag_n, rag_rows, 0, std::hint::black_box(&mut rout));
+    });
+    let rg_steal = bench("ragged steal", cfg, || {
+        exec::parallel_rows_mut(
+            std::hint::black_box(&mut rout),
+            rag_n,
+            Plan::sized(t, rag_rows, rag_work),
+            |r0, block| ragged_block(&ar, &br, rag_k, rag_n, rag_rows, r0, block),
+        );
+    });
+    let rg_static = bench("ragged static", cfg, || {
+        exec::parallel_rows_mut(
+            std::hint::black_box(&mut rout),
+            rag_n,
+            Plan::static_partition(t),
+            |r0, block| ragged_block(&ar, &br, rag_k, rag_n, rag_rows, r0, block),
+        );
+    });
+    let rag_steal_x = rg_serial.mean / rg_steal.mean;
+    let rag_static_x = rg_serial.mean / rg_static.mean;
+    println!(
+        "\nragged tail ({rag_rows} rows, linear cost): serial {:.0}us, steal {:.0}us ({rag_steal_x:.2}x), static {:.0}us ({rag_static_x:.2}x) — {}",
+        rg_serial.mean * 1e6,
+        rg_steal.mean * 1e6,
+        rg_static.mean * 1e6,
+        if rg_steal.mean <= rg_static.mean { "PASS (steal faster)" } else { "MISS" }
+    );
+    record.push(&[
+        ("case", JsonValue::Str("ragged".into())),
+        ("rows", JsonValue::Int(rag_rows as i64)),
+        ("k", JsonValue::Int(rag_k as i64)),
+        ("n", JsonValue::Int(rag_n as i64)),
+        ("workers", JsonValue::Int(t as i64)),
+        ("serial_s", JsonValue::Num(rg_serial.mean)),
+        ("pool_s", JsonValue::Num(rg_steal.mean)),
+        ("static_s", JsonValue::Num(rg_static.mean)),
+        ("pool_speedup", JsonValue::Num(rag_steal_x)),
+        ("static_speedup", JsonValue::Num(rag_static_x)),
+        ("smoke", JsonValue::Bool(smoke)),
+        ("hw_threads", JsonValue::Int(hw as i64)),
+    ]);
+
+    // -------------------------------------------- 3. nested crossover
+    // 2 "replicas" on a t-thread budget, each running one matmul: the old
+    // scheduler serialized the nested kernels (sub-budget 1 everywhere);
+    // hierarchical budgets hand each replica t/2 threads' worth.
+    exec::set_threads(t);
+    let (nm, nk, nn) = if smoke { (64usize, 64usize, 48usize) } else { (128, 96, 64) };
+    let reps: Vec<(Tensor, Tensor)> = (0..2)
+        .map(|_| {
+            let mut r = Rng::new(7);
+            (Tensor::randn(&[nm, nk], 1.0, &mut r), Tensor::randn(&[nk, nn], 1.0, &mut r))
+        })
+        .collect();
+    let run_nested = |serialize: bool| -> u64 {
+        let sums: Vec<u64> = exec::parallel_map(2, exec::plan_for(2, usize::MAX), |i| {
+            let (a, b) = &reps[i];
+            if serialize {
+                exec::run_serialized(|| checksum(a.matmul(b).data()))
+            } else {
+                checksum(a.matmul(b).data())
+            }
+        });
+        sums[0] ^ sums[1].rotate_left(1)
+    };
+    let nested_ref = run_nested(true);
+    assert_eq!(run_nested(false), nested_ref, "nested fan-out changed results");
+    let ns_old = bench("nested serialized", cfg, || {
+        std::hint::black_box(run_nested(true));
+    });
+    let ns_new = bench("nested sub-budget", cfg, || {
+        std::hint::black_box(run_nested(false));
+    });
+    exec::set_threads(1);
+    let nested_x = ns_old.mean / ns_new.mean;
+    println!(
+        "nested 2-replica ({nm}x{nk}x{nn} each, {t} threads): serialized-nested {:.0}us, sub-budget {:.0}us ({nested_x:.2}x){}",
+        ns_old.mean * 1e6,
+        ns_new.mean * 1e6,
+        if hw < 4 { " — only meaningful with >=4 hw threads" } else { "" }
+    );
+    record.push(&[
+        ("case", JsonValue::Str("nested".into())),
+        ("replicas", JsonValue::Int(2)),
+        ("m", JsonValue::Int(nm as i64)),
+        ("k", JsonValue::Int(nk as i64)),
+        ("n", JsonValue::Int(nn as i64)),
+        ("threads", JsonValue::Int(t as i64)),
+        ("serialized_nested_s", JsonValue::Num(ns_old.mean)),
+        ("sub_budget_s", JsonValue::Num(ns_new.mean)),
+        ("nested_speedup", JsonValue::Num(nested_x)),
+        ("smoke", JsonValue::Bool(smoke)),
+        ("hw_threads", JsonValue::Int(hw as i64)),
+    ]);
 
     let out_path = repo_root().join("BENCH_pool.json");
     match record.write(&out_path) {

@@ -316,9 +316,12 @@ impl Graph {
     /// path, eq. 26).  u: (B·n, du) channel-major output: (B·n, du·d).
     ///
     /// The B samples are independent and each owns a contiguous block of
-    /// output rows, so the batch fans out across `crate::exec` workers
-    /// (the per-channel parallelism inside [`DnFftOperator::apply`] then
-    /// runs serially — nested regions don't over-subscribe).
+    /// output rows, so the batch fans out across `crate::exec` workers.
+    /// The per-channel parallelism inside [`DnFftOperator::apply`] runs
+    /// under the chunk's sub-budget: serial when the batch already fills
+    /// the thread budget, a nested pool job when spare threads remain
+    /// (e.g. under a 2-replica data-parallel run on 8 threads) — either
+    /// way the tree never over-subscribes and values are bit-identical.
     pub fn dn_conv(&mut self, u: NodeId, op: Arc<DnFftOperator>, batch: usize) -> NodeId {
         let uv = &self.nodes[u].value;
         let n = op.n;
@@ -328,8 +331,8 @@ impl Graph {
         let mut out = Tensor::zeros(&[batch * n, du * d]);
         let op_ref: &DnFftOperator = &op;
         let sample_len = n * du * d;
-        let workers = crate::exec::workers_for(batch, batch * du * (d + 1) * n * 32);
-        crate::exec::parallel_rows_mut(out.data_mut(), sample_len, workers, |b0, block| {
+        let plan = crate::exec::plan_for(batch, batch * du * (d + 1) * n * 32);
+        crate::exec::parallel_rows_mut(out.data_mut(), sample_len, plan, |b0, block| {
             for (bi, sample) in block.chunks_mut(sample_len).enumerate() {
                 let b = b0 + bi;
                 let u_b = uv.slice_rows(b * n, (b + 1) * n);
@@ -587,8 +590,8 @@ impl Graph {
                 let op_ref: &DnFftOperator = &op;
                 let g_ref = &g;
                 let sample_len = n * du;
-                let workers = crate::exec::workers_for(batch, batch * du * (d + 1) * n * 32);
-                crate::exec::parallel_rows_mut(gu.data_mut(), sample_len, workers, |b0, block| {
+                let plan = crate::exec::plan_for(batch, batch * du * (d + 1) * n * 32);
+                crate::exec::parallel_rows_mut(gu.data_mut(), sample_len, plan, |b0, block| {
                     for (bi, sample) in block.chunks_mut(sample_len).enumerate() {
                         let b = b0 + bi;
                         let mut dm = Tensor::zeros(&[n, d, du]);

@@ -17,10 +17,16 @@
 //! Replica steps are **chunks of one job on the `crate::exec` worker
 //! pool** — the same pool the tensor/FFT kernels dispatch through — so
 //! replica-level and kernel-level parallelism share a single thread
-//! budget: inside a replica chunk the exec region flag serializes every
-//! nested kernel, and the chunk count is capped at [`crate::exec::threads`],
-//! so replicas × kernel-threads can never oversubscribe the machine
-//! (pinned by `rust/tests/exec_equivalence.rs`).
+//! budget, hierarchically: the replica fan-out splits the global budget
+//! over its chunk slots, so a run with fewer replicas than threads (say
+//! 2 replicas on 8 threads) hands each replica a sub-budget of 4 and its
+//! nested kernels fan out as first-class pool jobs on the spare threads,
+//! while a run with more replicas than threads gives each chunk a unit
+//! budget and nested kernels serialize.  Either way replicas ×
+//! kernel-threads can never oversubscribe the machine (pinned by
+//! `rust/tests/exec_equivalence.rs`).  Replicas are dispatched as more
+//! steal-chunks than workers, so uneven shards (ragged tails) rebalance
+//! instead of stalling the job on its slowest static chunk.
 //!
 //! Replica state (parameter store, model, RNG, batch queue) is `Send` and
 //! migrates between pool threads across steps; the autograd [`Graph`] is
@@ -84,8 +90,8 @@ pub fn allreduce_mean(parts: &[&[f32]]) -> Vec<f32> {
     }
     let inv = 1.0f32 / parts.len() as f32;
     let mut out = vec![0.0f32; len];
-    let workers = exec::workers_for(len, len * (parts.len() + 1));
-    exec::parallel_rows_mut(&mut out, 1, workers, |i0, block| {
+    let plan = exec::plan_for(len, len * (parts.len() + 1));
+    exec::parallel_rows_mut(&mut out, 1, plan, |i0, block| {
         for (k, o) in block.iter_mut().enumerate() {
             let i = i0 + k;
             let mut acc = 0.0f32;
@@ -213,10 +219,11 @@ impl DataParallelCoordinator {
         let (mut canon_store, _canon_model) = factory();
 
         // replica construction is itself parallel work (DnFftOperator
-        // spectra), so it fans out on the pool too
+        // spectra), so it fans out on the pool too — and with fewer
+        // replicas than threads each build chunk gets a sub-budget, so
+        // the per-replica spectrum FFTs fan out beneath it
         let k = shards.len();
-        let build_workers = exec::workers_for(k, usize::MAX);
-        let built = exec::parallel_map(k, build_workers, |_| factory());
+        let built = exec::parallel_map(k, exec::plan_for(k, usize::MAX), |_| factory());
         let mut replicas: Vec<Replica<M>> = built
             .into_iter()
             .zip(shards)
@@ -252,10 +259,15 @@ impl DataParallelCoordinator {
             let live_n = live.len();
             // broadcast: every replica reads the same packed parameters
             let packed = canon_store.pack();
-            // replica fan-out: one pool job, chunk count capped at the
-            // thread budget; kernels inside each chunk run serialized
-            let workers = exec::workers_for(live_n, usize::MAX);
-            exec::parallel_rows_mut(&mut live, 1, workers, |_, block| {
+            // replica fan-out: one pool job whose worker count is capped
+            // at the thread budget.  With R < threads live replicas each
+            // chunk inherits a `threads / R` sub-budget and the kernels
+            // inside fan out as nested pool jobs; with R >= threads the
+            // sub-budget is 1 and kernels serialize.  One steal-chunk per
+            // replica, so replicas that finish early free their thread to
+            // the stragglers' nested kernels.
+            let plan = exec::plan_for(live_n, usize::MAX);
+            exec::parallel_rows_mut(&mut live, 1, plan, |_, block| {
                 for r in block.iter_mut() {
                     r.step(&packed);
                 }

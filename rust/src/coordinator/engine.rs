@@ -22,7 +22,7 @@ pub trait StreamingEngine {
     fn step(&self, state: &mut [f32], x_t: &[f32]) -> Vec<f32>;
     /// Rough scalar-op cost of one [`StreamingEngine::step`] call — the
     /// work estimate the dynamic batcher feeds to
-    /// `crate::exec::workers_for` when deciding whether a batch is big
+    /// `crate::exec::plan_for` when deciding whether a batch is big
     /// enough to fan out on the worker pool.  The default overestimates
     /// slightly (safe: it only moves the crossover, never correctness);
     /// implementations with exact shape knowledge should override.

@@ -10,11 +10,13 @@
 //! request channel (parked, costing nothing while idle).  The *compute* —
 //! executing a filled batch — is dispatched through the shared
 //! `crate::exec` worker pool, fanning out across the batch's distinct
-//! sessions.  The pool admits one job at a time and caps each job at the
-//! configured `threads` budget, so engine replicas × kernel threads can
-//! never oversubscribe the machine: concurrent batchers time-share the
-//! pool (a batcher that finds the pool busy runs its batch serially on
-//! its own control thread).
+//! sessions as work-stealing chunks.  The pool admits one *top-level*
+//! dispatcher at a time and splits the configured `threads` budget
+//! hierarchically over a job's chunk slots (a batch with fewer sessions
+//! than threads hands each session a sub-budget for its nested kernels),
+//! so engine replicas × kernel threads can never oversubscribe the
+//! machine: concurrent batchers time-share the pool (a batcher that finds
+//! the pool busy runs its batch serially on its own control thread).
 //!
 //! Engines that are not `Sync` (e.g. PJRT-backed engines holding
 //! thread-bound handles, built via [`DynamicBatcher::with_factory`]) stay
@@ -175,9 +177,14 @@ fn execute_batch(
         BatchEngine::Shared(e) => {
             let eng: &(dyn StreamingEngine + Send + Sync) = &**e;
             // distinct sessions are independent; requests within a session
-            // stay in order inside their chunk
-            let workers = exec::workers_for(groups.len(), total_reqs * eng.step_work());
-            exec::parallel_rows_mut(&mut groups, 1, workers, |_, block| {
+            // stay in order inside their chunk.  Fewer sessions than
+            // threads hands each session chunk a sub-budget, so a big
+            // per-step kernel can still fan out beneath it; session
+            // chunks are stolen off the shared counter, so a batch with
+            // one long session no longer stalls the whole window on a
+            // static partition.
+            let plan = exec::plan_for(groups.len(), total_reqs * eng.step_work());
+            exec::parallel_rows_mut(&mut groups, 1, plan, |_, block| {
                 for g in block.iter_mut() {
                     for req in &g.reqs {
                         g.outs.push(eng.step(&mut g.state, &req.x));
@@ -240,7 +247,8 @@ impl DynamicBatcher {
             };
             let mut sessions: HashMap<u64, Vec<f32>> = HashMap::new();
             let mut pending: Vec<StepRequest> = Vec::new();
-            loop {
+            let mut shutdown = false;
+            while !shutdown {
                 // block for the first request (or control message)
                 let first = match rx.recv() {
                     Ok(BatcherCmd::Step(r)) => Some(r),
@@ -265,9 +273,14 @@ impl DynamicBatcher {
                         Ok(BatcherCmd::Reset(sid)) => {
                             sessions.remove(&sid);
                         }
-                        Ok(BatcherCmd::Shutdown) => return,
+                        // drain the already-queued requests before exiting,
+                        // or their blocked step_blocking callers would
+                        // panic on a dropped reply channel
+                        Ok(BatcherCmd::Shutdown) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            shutdown = true;
+                            break;
+                        }
                         Err(mpsc::RecvTimeoutError::Timeout) => break,
-                        Err(_) => return,
                     }
                 }
                 execute_batch(&engine, &mut sessions, &mut pending, &m);

@@ -182,9 +182,9 @@ impl DelayNetwork {
         let d = self.d;
         let mut out = Tensor::zeros(&[d, du]);
         let (hd, ud) = (h.data(), u.data());
-        let workers = exec::workers_for(d, n * d * du);
+        let plan = exec::plan_for(d, n * d * du);
         // m_n[s, c] = sum_j H[n-1-j, s] u[j, c]
-        exec::parallel_rows_mut(out.data_mut(), du, workers, |s0, block| {
+        exec::parallel_rows_mut(out.data_mut(), du, plan, |s0, block| {
             for (r, orow) in block.chunks_mut(du).enumerate() {
                 let s = s0 + r;
                 for j in 0..n {
@@ -292,8 +292,8 @@ impl DnFftOperator {
         let h = dn.impulse_response(n);
         let nfft = next_pow2(2 * n);
         // the d kernel spectra are independent FFTs — build them in parallel
-        let workers = exec::workers_for(d, d * nfft * 16);
-        let caches = exec::parallel_map(d, workers, |s| {
+        let plan = exec::plan_for(d, d * nfft * 16);
+        let caches = exec::parallel_map(d, plan, |s| {
             let kernel: Vec<f32> = (0..n).map(|t| h.data()[t * d + s]).collect();
             RfftCache::new(&kernel, nfft)
         });
@@ -314,11 +314,13 @@ impl DnFftOperator {
         let d = self.d;
         let ud = u.data();
         let mut out = Tensor::zeros(&[n, d, du]);
-        let workers = exec::workers_for(du, du * (d + 1) * self.nfft * 16);
-        if workers <= 1 {
+        let plan = exec::plan_for(du, du * (d + 1) * self.nfft * 16);
+        if plan.is_serial() {
             // serial reference: scatter each conv result straight into the
-            // interleaved output (no intermediate block allocation) — this
-            // is the path the batch-parallel dn_conv nests into
+            // interleaved output (no intermediate block allocation) — the
+            // path batch-parallel dn_conv chunks take when their
+            // sub-budget is 1; larger sub-budgets take the parallel path
+            // below, which computes bit-identical values
             let od = out.data_mut();
             let mut chan = vec![0.0f32; n];
             for c in 0..du {
@@ -338,7 +340,7 @@ impl DnFftOperator {
         }
         // channel-parallel: each worker fills a private [s][t] block, then
         // one scatter pass interleaves (same values, same per-element ops)
-        let chan_blocks: Vec<Vec<f32>> = exec::parallel_map(du, workers, |c| {
+        let chan_blocks: Vec<Vec<f32>> = exec::parallel_map(du, plan, |c| {
             let mut chan = vec![0.0f32; n];
             for (t, ch) in chan.iter_mut().enumerate() {
                 *ch = ud[t * du + c];
@@ -373,8 +375,8 @@ impl DnFftOperator {
         assert_eq!(d, self.d);
         let dmd = dm.data();
         let mut out = Tensor::zeros(&[n, du]);
-        let workers = exec::workers_for(du, du * (d + 1) * self.nfft * 16);
-        if workers <= 1 {
+        let plan = exec::plan_for(du, du * (d + 1) * self.nfft * 16);
+        if plan.is_serial() {
             // serial reference: accumulate straight into the output
             let od = out.data_mut();
             let mut chan = vec![0.0f32; n];
@@ -393,7 +395,7 @@ impl DnFftOperator {
             }
             return out;
         }
-        let cols: Vec<Vec<f32>> = exec::parallel_map(du, workers, |c| {
+        let cols: Vec<Vec<f32>> = exec::parallel_map(du, plan, |c| {
             let mut col = vec![0.0f32; n];
             let mut chan = vec![0.0f32; n];
             for s in 0..d {

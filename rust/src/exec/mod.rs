@@ -4,32 +4,42 @@
 //! the sequential dependency from training, leaving big, embarrassingly
 //! parallel batched kernels (matmul, FFT causal convolution, elementwise
 //! maps).  This module is the single place that turns that latent
-//! parallelism into wall-clock speedup on CPU: a row-partition executor
-//! backed by a **persistent parked worker pool** (see `pool.rs` — plain
-//! `Mutex`/`Condvar`, no crate dependencies, builds are offline) with a
-//! global thread-count knob plumbed through the CLI (`--threads`), config
-//! (`[train] threads`), and environment (`PLMU_THREADS`).
+//! parallelism into wall-clock speedup on CPU: a **work-stealing,
+//! budget-aware scheduler** over a persistent parked worker pool (see
+//! `pool.rs` — plain `Mutex`/`Condvar`/atomics, no crate dependencies,
+//! builds offline) with a global thread-count knob plumbed through the
+//! CLI (`--threads`), config (`[train] threads`), and environment
+//! (`PLMU_THREADS`).
 //!
 //! Design rules every dispatch site follows:
 //!
 //!  * **Bit-exact equivalence.**  Work is partitioned over *output* rows
 //!    (or independent items); each element is computed by exactly the same
 //!    sequence of floating-point operations as the serial reference, so
-//!    results are identical for every thread count.  `threads = 1` (or any
-//!    job below [`MIN_PARALLEL_WORK`]) takes the serial path outright.
-//!    The `rust/tests/exec_equivalence.rs` suite pins this.
-//!  * **No nested fan-out.**  A worker that calls back into a parallel
-//!    kernel (e.g. per-sample DN conv → per-channel FFT) runs it serially:
-//!    [`workers_for`] returns 1 inside a parallel region, bounding live
-//!    compute threads at the configured count.  The data-parallel
-//!    coordinator and the serving batcher dispatch *their* fan-out through
-//!    this same pool, so replica-level and kernel-level parallelism share
-//!    one budget instead of multiplying.
+//!    results are identical for every thread count AND every chunk
+//!    granularity — which thread steals which chunk never matters.
+//!    `threads = 1` (or any job below [`MIN_PARALLEL_WORK`]) takes the
+//!    serial path outright.  `rust/tests/exec_equivalence.rs` pins this.
+//!  * **Work stealing.**  A [`Plan`] splits a job into more chunks than
+//!    workers (targeting ~[`CHUNK_WORK_TARGET`] scalar ops per chunk, so
+//!    the one-atomic-op claim stays below ~5% of chunk runtime); threads
+//!    claim chunks off an atomic counter, smoothing ragged tails and
+//!    uneven per-row costs that a static `rows.div_ceil(workers)`
+//!    partition would stall on.
+//!  * **Hierarchical budgets.**  Every thread carries a parallelism
+//!    budget ([`budget`]): the global knob at top level, a *sub-budget*
+//!    inside a pool chunk.  A parallel region entered with `R` chunk
+//!    slots hands each chunk `budget / R`, so a data-parallel run with 2
+//!    replicas on 8 threads drives 4 threads' worth of nested kernel
+//!    fan-out per replica — nested dispatch is a first-class pool job,
+//!    not a degenerate serial path — while the busy-thread high-water
+//!    mark of the whole tree never exceeds the root budget.  A chunk
+//!    whose sub-budget is 1 (the common case when chunks >= threads)
+//!    runs nested kernels serially, exactly like the old region flag.
 //!  * **Threshold-gated.**  Jobs smaller than [`MIN_PARALLEL_WORK`] scalar
 //!    ops stay serial.  With the persistent pool a dispatch is a parked
-//!    hand-off (~1µs) instead of a thread spawn (~10µs), so the threshold
-//!    sits an order of magnitude lower than the scoped-spawn substrate's —
-//!    the crossover measured by `cargo bench --bench pool_crossover`.
+//!    hand-off (~1µs) instead of a thread spawn (~10µs) — the crossover
+//!    measured by `cargo bench --bench pool_crossover`.
 
 mod pool;
 
@@ -49,6 +59,15 @@ const DEFAULT_MAX_THREADS: usize = 8;
 /// replaced, whose threshold was `1 << 18`); `cargo bench --bench
 /// pool_crossover` measures the crossover and writes `BENCH_pool.json`.
 pub const MIN_PARALLEL_WORK: usize = 1 << 14;
+
+/// Target scalar ops per work-stealing chunk (~a few µs of kernel time),
+/// sized so the per-chunk claim — one atomic `fetch_add`, ~0.1µs with
+/// cache-line traffic — stays below ~5% of chunk runtime.
+pub const CHUNK_WORK_TARGET: usize = 1 << 12;
+
+/// Steal-granularity cap: a [`Plan`] never carries more than this many
+/// chunks per worker, bounding total claim traffic per job.
+pub const MAX_CHUNKS_PER_WORKER: usize = 8;
 
 fn resolve_default() -> usize {
     if let Ok(v) = std::env::var("PLMU_THREADS") {
@@ -84,50 +103,139 @@ pub fn set_threads(n: usize) {
     THREADS.store(n.max(1), Ordering::Relaxed);
 }
 
+/// Sentinel for "no budget installed": fall back to the global knob.
+const BUDGET_UNSET: usize = usize::MAX;
+
 thread_local! {
-    static IN_PARALLEL: Cell<bool> = const { Cell::new(false) };
+    /// Parallelism budget of the current thread (see [`budget`]).
+    static BUDGET: Cell<usize> = const { Cell::new(BUDGET_UNSET) };
+    /// Pool-chunk nesting depth of the current thread (0 = not inside a
+    /// pool chunk; used for busy-thread accounting and to route nested
+    /// dispatch past the top-level admission gate).
+    static DEPTH: Cell<usize> = const { Cell::new(0) };
+}
+
+/// The parallelism budget of the current thread: how many threads a
+/// kernel dispatched *from this thread* may occupy, itself included.
+///
+/// Top-level threads get the global [`threads`] knob.  Inside a pool
+/// chunk this is the chunk's sub-budget (the dispatcher's budget divided
+/// over the job's concurrent chunk slots); inside [`run_serialized`] it
+/// is 1.  [`plan_for`] caps every plan at this value, which is what makes
+/// the budget hierarchical: sub-budgets of concurrently running chunks
+/// never sum past the root budget.
+pub fn budget() -> usize {
+    let b = BUDGET.with(|c| c.get());
+    if b == BUDGET_UNSET {
+        threads()
+    } else {
+        b
+    }
+}
+
+/// Pool-chunk nesting depth of the current thread.
+fn chunk_depth() -> usize {
+    DEPTH.with(|c| c.get())
 }
 
 /// True while the current thread is executing inside a parallel region
-/// (used to serialize nested kernels).
+/// (a pool chunk or a [`run_serialized`] scope) — i.e. whenever a budget
+/// other than the global knob is installed.
 pub fn in_parallel_region() -> bool {
-    IN_PARALLEL.with(|c| c.get())
+    BUDGET.with(|c| c.get()) != BUDGET_UNSET
 }
 
-struct RegionGuard(bool);
+/// RAII scope installing a chunk's sub-budget (and, for real pool
+/// chunks, the nesting depth used by busy accounting).
+struct ChunkGuard {
+    prev_budget: usize,
+    raised_depth: bool,
+}
 
-impl Drop for RegionGuard {
+impl Drop for ChunkGuard {
     fn drop(&mut self) {
-        IN_PARALLEL.with(|c| c.set(self.0));
+        if self.raised_depth {
+            DEPTH.with(|c| c.set(c.get() - 1));
+        }
+        BUDGET.with(|c| c.set(self.prev_budget));
     }
 }
 
-fn enter_region() -> RegionGuard {
-    RegionGuard(IN_PARALLEL.with(|c| c.replace(true)))
+/// Enter a pool-chunk scope with the given sub-budget (pool.rs calls this
+/// around every chunk execution and serial-degraded job).
+fn enter_chunk(sub_budget: usize) -> ChunkGuard {
+    let prev_budget = BUDGET.with(|c| c.replace(sub_budget.max(1)));
+    DEPTH.with(|c| c.set(c.get() + 1));
+    ChunkGuard { prev_budget, raised_depth: true }
 }
 
 /// Run `f` with kernel-level parallel dispatch disabled on the current
-/// thread: every `workers_for` inside reports 1.  For code that manages
-/// its own thread-level parallelism (e.g. engines constructed on
-/// thread-bound batcher threads) so external thread counts and kernel
-/// threads don't multiply.
+/// thread: every [`plan_for`] inside reports serial.  For
+/// code that manages its own thread-level parallelism (e.g. engines
+/// constructed on thread-bound batcher threads) so external thread counts
+/// and kernel threads don't multiply.
 pub fn run_serialized<R>(f: impl FnOnce() -> R) -> R {
-    let _g = enter_region();
+    let prev_budget = BUDGET.with(|c| c.replace(1));
+    let _g = ChunkGuard { prev_budget, raised_depth: false };
     f()
 }
 
-/// Worker count for a job of `items` independent units totalling `work`
-/// scalar ops: the global knob, capped by the item count, 1 when the job
-/// is too small or we are already inside a parallel region.
-pub fn workers_for(items: usize, work: usize) -> usize {
-    if in_parallel_region() {
-        return 1;
+/// A dispatch plan: how many threads may work a job at once, and how many
+/// steal-granularity chunks the job is split into.
+///
+/// `workers` is the concurrency share (capped at the dispatching thread's
+/// [`budget`] by [`plan_for`]); `chunks >= workers` adds steal slots
+/// without adding threads, so uneven per-chunk costs smooth out.  The
+/// partition a plan induces depends only on `(rows, chunks)` — never on
+/// which thread steals which chunk — so results stay bit-exact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Plan {
+    /// max threads working the job concurrently
+    pub workers: usize,
+    /// total claimable chunks (`1` = the serial reference path)
+    pub chunks: usize,
+}
+
+impl Plan {
+    /// The serial reference path: one worker, one chunk, no pool dispatch.
+    pub const SERIAL: Plan = Plan { workers: 1, chunks: 1 };
+
+    /// True when this plan takes the serial path outright.
+    pub fn is_serial(&self) -> bool {
+        self.workers <= 1 || self.chunks <= 1
     }
-    let t = threads();
-    if t <= 1 || items <= 1 || work < MIN_PARALLEL_WORK {
-        return 1;
+
+    /// Plan for an explicit worker count (benches and tests; production
+    /// call sites should use [`plan_for`], which reads the budget):
+    /// chunks target [`CHUNK_WORK_TARGET`] scalar ops each, clamped to
+    /// `[workers, workers * MAX_CHUNKS_PER_WORKER]` and the item count.
+    pub fn sized(workers: usize, items: usize, work: usize) -> Plan {
+        if workers <= 1 || items <= 1 {
+            return Plan::SERIAL;
+        }
+        let workers = workers.min(items);
+        let by_work = work / CHUNK_WORK_TARGET;
+        let chunks =
+            by_work.clamp(workers, workers.saturating_mul(MAX_CHUNKS_PER_WORKER)).min(items);
+        Plan { workers, chunks }
     }
-    t.min(items)
+
+    /// A static one-chunk-per-worker partition (the pre-work-stealing
+    /// scheduler's granularity; kept for A/B benchmarking).
+    pub fn static_partition(workers: usize) -> Plan {
+        Plan { workers: workers.max(1), chunks: workers.max(1) }
+    }
+}
+
+/// Dispatch plan for a job of `items` independent units totalling `work`
+/// scalar ops: workers = the current thread's [`budget`] capped by the
+/// item count, serial when the job is too small or the budget is 1.
+pub fn plan_for(items: usize, work: usize) -> Plan {
+    let b = budget();
+    if b <= 1 || items <= 1 || work < MIN_PARALLEL_WORK {
+        return Plan::SERIAL;
+    }
+    Plan::sized(b, items, work)
 }
 
 /// Raw-pointer wrapper that lets disjoint sub-slices of one buffer be
@@ -138,27 +246,26 @@ struct SendPtr<T>(*mut T);
 unsafe impl<T: Send> Send for SendPtr<T> {}
 unsafe impl<T: Send> Sync for SendPtr<T> {}
 
-/// Partition `out` into per-worker blocks of whole rows (`row_len`
-/// elements each) and run `f(first_row_index, block)` on each block, on
-/// the persistent worker pool with the calling thread participating.
+/// Partition `out` into chunk blocks of whole rows (`row_len` elements
+/// each) per `plan` and run `f(first_row_index, block)` on each block on
+/// the work-stealing pool, with the calling thread participating.
 ///
-/// `workers <= 1` (or a single row) short-circuits to `f(0, out)` with no
-/// pool dispatch and no region flag — the serial reference path.  The
-/// block partition depends only on `(rows, workers)`, never on which pool
-/// thread runs which block, so results are bit-exact at every thread
-/// count.
-pub fn parallel_rows_mut<T, F>(out: &mut [T], row_len: usize, workers: usize, f: F)
+/// A serial plan (or a single row) short-circuits to `f(0, out)` with no
+/// pool dispatch and no budget change — the serial reference path.  The
+/// block partition depends only on `(rows, plan.chunks)`, never on which
+/// pool thread steals which block, so results are bit-exact at every
+/// thread count and granularity.
+pub fn parallel_rows_mut<T, F>(out: &mut [T], row_len: usize, plan: Plan, f: F)
 where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
 {
     let rows = if row_len == 0 { 0 } else { out.len() / row_len };
-    if workers <= 1 || rows <= 1 {
+    if plan.is_serial() || rows <= 1 {
         f(0, out);
         return;
     }
-    let workers = workers.min(rows);
-    let chunk_rows = rows.div_ceil(workers);
+    let chunk_rows = rows.div_ceil(plan.chunks.min(rows));
     let chunks = rows.div_ceil(chunk_rows);
     if chunks <= 1 {
         f(0, out);
@@ -166,7 +273,7 @@ where
     }
     let total_len = out.len();
     let base = SendPtr(out.as_mut_ptr());
-    pool::run(chunks, &|ci| {
+    pool::run(chunks, plan.workers, &|ci| {
         let start = ci * chunk_rows * row_len;
         // the last chunk absorbs any ragged tail beyond rows * row_len
         let end = if ci + 1 == chunks { total_len } else { start + chunk_rows * row_len };
@@ -178,27 +285,27 @@ where
     });
 }
 
-/// Run `f(lo, hi)` over a partition of `0..n` into `workers` contiguous
-/// ranges on the persistent worker pool (calling thread participating).
-/// For jobs whose output is not one contiguous mutable slice.
-pub fn parallel_ranges<F>(n: usize, workers: usize, f: F)
+/// Run `f(lo, hi)` over a partition of `0..n` into `plan.chunks`
+/// contiguous ranges on the work-stealing pool (calling thread
+/// participating).  For jobs whose output is not one contiguous mutable
+/// slice.
+pub fn parallel_ranges<F>(n: usize, plan: Plan, f: F)
 where
     F: Fn(usize, usize) + Sync,
 {
-    if workers <= 1 || n <= 1 {
+    if plan.is_serial() || n <= 1 {
         if n > 0 {
             f(0, n);
         }
         return;
     }
-    let workers = workers.min(n);
-    let chunk = n.div_ceil(workers);
+    let chunk = n.div_ceil(plan.chunks.min(n));
     let chunks = n.div_ceil(chunk);
     if chunks <= 1 {
         f(0, n);
         return;
     }
-    pool::run(chunks, &|ci| {
+    pool::run(chunks, plan.workers, &|ci| {
         let lo = ci * chunk;
         let hi = ((ci + 1) * chunk).min(n);
         f(lo, hi);
@@ -206,17 +313,17 @@ where
 }
 
 /// Order-preserving parallel map: `out[i] = f(i)` for `i in 0..n`.
-pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+pub fn parallel_map<T, F>(n: usize, plan: Plan, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    if workers <= 1 || n <= 1 {
+    if plan.is_serial() || n <= 1 {
         return (0..n).map(f).collect();
     }
     let mut out: Vec<Option<T>> = Vec::with_capacity(n);
     out.resize_with(n, || None);
-    parallel_rows_mut(&mut out, 1, workers, |i0, block| {
+    parallel_rows_mut(&mut out, 1, plan, |i0, block| {
         for (k, slot) in block.iter_mut().enumerate() {
             *slot = Some(f(i0 + k));
         }
@@ -226,11 +333,12 @@ where
 
 // ------------------------------------------------------- pool observability
 
-/// High-water mark of concurrently busy exec threads (pool workers, the
-/// dispatching caller, and serial-fallback callers) since the last
+/// High-water mark of concurrently busy exec threads (each OS thread
+/// counted once, however deeply nested) since the last
 /// [`reset_pool_peak`].  The budget invariant — pinned by
 /// `rust/tests/exec_equivalence.rs` — is that a single dispatching
-/// pipeline never drives this above [`threads`].
+/// pipeline never drives this above [`threads`], even with nested
+/// fan-out under hierarchical sub-budgets.
 pub fn pool_peak_concurrency() -> usize {
     pool::peak_concurrency()
 }
@@ -241,8 +349,8 @@ pub fn reset_pool_peak() {
 }
 
 /// Number of persistent helper threads the pool has spawned so far
-/// (excludes the dispatching caller).  Grows lazily with demand, never
-/// shrinks; idle helpers are parked on a condvar and cost nothing.
+/// (excludes the dispatching caller).  Grows with unmet attach demand,
+/// never shrinks; idle helpers are parked on a condvar and cost nothing.
 pub fn pool_helpers() -> usize {
     pool::helper_count()
 }
@@ -252,13 +360,29 @@ mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;
 
+    /// Explicit plan shorthand for the partition tests.
+    fn plan(workers: usize, chunks: usize) -> Plan {
+        Plan { workers, chunks }
+    }
+
     #[test]
     fn rows_partition_covers_exactly_once() {
-        for &(rows, row_len, workers) in
-            &[(7usize, 3usize, 4usize), (1, 5, 4), (16, 1, 3), (5, 2, 8), (4, 4, 4)]
-        {
+        // (rows, row_len, workers, chunks) — including chunks > workers
+        // (steal granularity), chunks not dividing rows (ragged tails),
+        // and chunks > rows (clamped)
+        for &(rows, row_len, workers, chunks) in &[
+            (7usize, 3usize, 4usize, 4usize),
+            (1, 5, 4, 4),
+            (16, 1, 3, 3),
+            (5, 2, 8, 8),
+            (4, 4, 4, 4),
+            (13, 3, 2, 7),
+            (29, 2, 3, 12),
+            (6, 5, 2, 16),
+            (10, 1, 3, 10),
+        ] {
             let mut out = vec![0u32; rows * row_len];
-            parallel_rows_mut(&mut out, row_len, workers, |r0, block| {
+            parallel_rows_mut(&mut out, row_len, plan(workers, chunks), |r0, block| {
                 for (k, row) in block.chunks_mut(row_len).enumerate() {
                     for v in row.iter_mut() {
                         *v += (r0 + k + 1) as u32;
@@ -268,7 +392,11 @@ mod tests {
             // every row touched exactly once with its own index
             for r in 0..rows {
                 for c in 0..row_len {
-                    assert_eq!(out[r * row_len + c], (r + 1) as u32, "rows={rows} w={workers}");
+                    assert_eq!(
+                        out[r * row_len + c],
+                        (r + 1) as u32,
+                        "rows={rows} w={workers} ch={chunks}"
+                    );
                 }
             }
         }
@@ -279,7 +407,7 @@ mod tests {
         // out.len() not a multiple of row_len: the tail elements beyond
         // the last whole row must still be handed to exactly one block
         let mut out = vec![0u32; 11]; // 5 rows of 2 + 1 ragged element
-        parallel_rows_mut(&mut out, 2, 2, |_, block| {
+        parallel_rows_mut(&mut out, 2, plan(2, 4), |_, block| {
             for v in block.iter_mut() {
                 *v += 1;
             }
@@ -289,44 +417,93 @@ mod tests {
 
     #[test]
     fn ranges_partition_covers_exactly_once() {
-        for &(n, workers) in &[(10usize, 3usize), (1, 4), (0, 2), (8, 8), (9, 2)] {
+        for &(n, workers, chunks) in &[
+            (10usize, 3usize, 3usize),
+            (1, 4, 4),
+            (0, 2, 2),
+            (8, 8, 8),
+            (9, 2, 2),
+            (17, 2, 9),
+            (23, 3, 24),
+        ] {
             let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
-            parallel_ranges(n, workers, |lo, hi| {
+            parallel_ranges(n, plan(workers, chunks), |lo, hi| {
                 for i in lo..hi {
                     hits[i].fetch_add(1, Ordering::Relaxed);
                 }
             });
-            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "n={n} w={workers}");
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "n={n} w={workers} ch={chunks}"
+            );
         }
     }
 
     #[test]
     fn map_preserves_order() {
-        for &workers in &[1usize, 2, 3, 5] {
-            let v = parallel_map(11, workers, |i| i * i);
+        for &(workers, chunks) in &[(1usize, 1usize), (2, 2), (3, 6), (5, 11)] {
+            let v = parallel_map(11, plan(workers, chunks), |i| i * i);
             assert_eq!(v, (0..11).map(|i| i * i).collect::<Vec<_>>());
         }
-        assert!(parallel_map(0, 4, |i| i).is_empty());
+        assert!(parallel_map(0, plan(4, 4), |i| i).is_empty());
     }
 
     #[test]
-    fn nested_region_serializes() {
-        // inside a parallel region, workers_for must report 1
-        let saw_nested: AtomicU64 = AtomicU64::new(0);
-        parallel_ranges(4, 2, |_, _| {
-            assert!(in_parallel_region());
-            if workers_for(100, usize::MAX) == 1 {
-                saw_nested.fetch_add(1, Ordering::Relaxed);
-            }
-        });
-        assert_eq!(saw_nested.load(Ordering::Relaxed), 2);
-        assert!(!in_parallel_region(), "region flag leaked");
+    fn plan_sizing_rules() {
+        // below two workers or two items: serial
+        assert!(Plan::sized(1, 100, usize::MAX).is_serial());
+        assert!(Plan::sized(4, 1, usize::MAX).is_serial());
+        // workers capped by items; chunks within [workers, workers*MAX]
+        let p = Plan::sized(4, 3, usize::MAX);
+        assert_eq!(p.workers, 3);
+        assert_eq!(p.chunks, 3);
+        let p = Plan::sized(4, 1 << 20, usize::MAX);
+        assert_eq!(p.workers, 4);
+        assert_eq!(p.chunks, 4 * MAX_CHUNKS_PER_WORKER);
+        // small work: chunk count shrinks toward the worker count so the
+        // claim traffic stays amortized
+        let p = Plan::sized(4, 1 << 20, MIN_PARALLEL_WORK);
+        assert_eq!(p.workers, 4);
+        assert_eq!(p.chunks, (MIN_PARALLEL_WORK / CHUNK_WORK_TARGET).max(4));
+        // chunks never exceed items
+        let p = Plan::sized(2, 3, usize::MAX);
+        assert!(p.chunks <= 3);
     }
 
     #[test]
     fn small_work_stays_serial() {
-        assert_eq!(workers_for(8, 10), 1);
-        assert_eq!(workers_for(1, usize::MAX), 1);
+        assert!(plan_for(8, 10).is_serial());
+        assert!(plan_for(1, usize::MAX).is_serial());
+    }
+
+    #[test]
+    fn run_serialized_installs_unit_budget() {
+        assert!(!in_parallel_region());
+        run_serialized(|| {
+            assert!(in_parallel_region());
+            assert_eq!(budget(), 1);
+            assert!(plan_for(100, usize::MAX).is_serial());
+        });
+        assert!(!in_parallel_region(), "budget scope leaked");
+    }
+
+    #[test]
+    fn chunks_inherit_sub_budgets() {
+        // a 4-chunk job splits the dispatcher's budget across its chunk
+        // slots; with explicit workers == chunks == 4 every sub-budget is
+        // deterministic per chunk index regardless of the global knob
+        let budgets: Vec<AtomicU64> = (0..4).map(|_| AtomicU64::new(0)).collect();
+        parallel_ranges(4, plan(4, 4), |lo, _| {
+            assert!(in_parallel_region());
+            budgets[lo].store(budget() as u64, Ordering::Relaxed);
+        });
+        assert!(!in_parallel_region(), "budget scope leaked");
+        // sub-budgets sum to at most the dispatcher's budget and are
+        // spread base/base+1 by chunk index
+        let total: u64 = budgets.iter().map(|b| b.load(Ordering::Relaxed)).sum();
+        assert!(total >= 4, "every chunk gets at least budget 1: {total}");
+        let read: Vec<u64> = budgets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        assert!(read.windows(2).all(|w| w[0] >= w[1]), "extras go to low indices: {read:?}");
     }
 
     #[test]
@@ -334,10 +511,11 @@ mod tests {
         // hammer the pool: helpers must be reused, results exact each time
         for round in 0..200usize {
             let n = 16 + round % 7;
-            let v = parallel_map(n, 4, |i| i * 3 + round);
+            let v = parallel_map(n, Plan::sized(4, n, usize::MAX), |i| i * 3 + round);
             assert_eq!(v, (0..n).map(|i| i * 3 + round).collect::<Vec<_>>());
         }
-        // the pool never spawns more helpers than the largest job needed
+        // demand-driven spawning keeps the pool near the worker cap even
+        // though each job carries more steal chunks than workers
         assert!(pool_helpers() <= 16, "helpers {}", pool_helpers());
     }
 
@@ -349,7 +527,9 @@ mod tests {
             .map(|t| {
                 std::thread::spawn(move || {
                     for round in 0..50usize {
-                        let v = parallel_map(13, 3, |i| i * 7 + t * 1000 + round);
+                        let v = parallel_map(13, Plan::sized(3, 13, usize::MAX), |i| {
+                            i * 7 + t * 1000 + round
+                        });
                         let want: Vec<usize> =
                             (0..13).map(|i| i * 7 + t * 1000 + round).collect();
                         assert_eq!(v, want);
@@ -365,7 +545,7 @@ mod tests {
     #[test]
     fn panic_in_chunk_propagates_and_pool_survives() {
         let r = std::panic::catch_unwind(|| {
-            parallel_ranges(8, 4, |lo, _| {
+            parallel_ranges(8, plan(4, 8), |lo, _| {
                 if lo >= 4 {
                     panic!("chunk boom");
                 }
@@ -373,7 +553,27 @@ mod tests {
         });
         assert!(r.is_err(), "panic was swallowed");
         // the pool must remain fully usable after a failed job
-        let v = parallel_map(9, 3, |i| i + 1);
+        let v = parallel_map(9, plan(3, 9), |i| i + 1);
+        assert_eq!(v, (1..=9).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn panic_in_stolen_fine_grained_chunk_propagates() {
+        // many more chunks than workers, the failure deep in the steal
+        // stream: whichever thread steals it, the panic must surface on
+        // the dispatcher and the remaining chunks must be abandoned
+        // without wedging the pool
+        for _ in 0..20 {
+            let r = std::panic::catch_unwind(|| {
+                parallel_ranges(64, plan(2, 16), |lo, _| {
+                    if lo >= 32 {
+                        panic!("stolen chunk boom");
+                    }
+                });
+            });
+            assert!(r.is_err(), "panic was swallowed");
+        }
+        let v = parallel_map(9, plan(3, 9), |i| i + 1);
         assert_eq!(v, (1..=9).collect::<Vec<_>>());
     }
 
@@ -381,7 +581,7 @@ mod tests {
     fn peak_concurrency_is_tracked() {
         // at least the dispatching thread is counted while a job runs
         reset_pool_peak();
-        parallel_ranges(64, 4, |lo, hi| {
+        parallel_ranges(64, plan(4, 8), |lo, hi| {
             std::hint::black_box((lo..hi).sum::<usize>());
         });
         assert!(pool_peak_concurrency() >= 1);

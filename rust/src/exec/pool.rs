@@ -1,79 +1,154 @@
-//! The persistent worker pool behind the `exec` dispatch helpers.
+//! The persistent work-stealing worker pool behind the `exec` dispatch
+//! helpers.
 //!
-//! The previous substrate spawned scoped threads per call
-//! (`std::thread::scope`), which costs ~10µs per dispatch and forced a
-//! high serial/parallel crossover (`MIN_PARALLEL_WORK` was 2^18 scalar
-//! ops).  This pool keeps workers alive across calls, parked on a
-//! `Condvar` when idle, so a dispatch is a mutex hand-off (~1µs) and the
-//! crossover drops by an order of magnitude — exactly what the
-//! many-small-batch serving workload needs.
+//! Two generations ago the substrate spawned scoped threads per call
+//! (~10µs per dispatch); the first pool generation parked persistent
+//! workers on a condvar (~1µs hand-off) but ran **one job at a time**
+//! with a *static* partition (`rows.div_ceil(workers)` chunks, one per
+//! worker), which left threads idle in exactly the scenarios the paper's
+//! speedup claim needs saturated: ragged per-row costs stalled on the
+//! largest static chunk, and a parallel region entered with fewer items
+//! than threads (e.g. 2 data-parallel replicas on 8 threads) serialized
+//! every nested kernel.
 //!
-//! Design:
+//! This generation fixes both:
 //!
-//!  * **Lazy, process-global.**  The pool is created on first parallel
-//!    dispatch; helper threads are spawned on demand up to
-//!    `chunks - 1` for the largest job seen and then reused forever
-//!    (they are parked, not spinning, so idle helpers cost nothing).
-//!  * **One job at a time.**  A dispatching thread takes the `dispatch`
-//!    mutex for the whole job.  A second thread that wants to dispatch
-//!    while the pool is busy runs its job serially on itself instead —
-//!    so two concurrent dispatchers can never multiply thread counts,
-//!    and the process-wide compute concurrency the pool *creates* stays
-//!    bounded by the `threads` budget.
-//!  * **Work queue, caller participates.**  A job is `chunks` disjoint
-//!    chunk indices; the dispatcher and the helpers claim indices from a
-//!    shared counter until none remain.  Which thread runs which chunk
-//!    never affects results (chunks are independent and internally
-//!    serial), so bit-exactness is preserved.
+//!  * **Work stealing.**  A job is published as `chunks` fine-grained
+//!    chunk indices (`chunks >= workers`, sized by `exec::Plan` so one
+//!    chunk is ~[`super::CHUNK_WORK_TARGET`] scalar ops) and every thread
+//!    working the job claims indices off a single **atomic counter**
+//!    ([`JobCore::next`], one `fetch_add` per chunk, no lock on the claim
+//!    path).  A thread that finishes early steals the next index instead
+//!    of idling, so ragged tails and uneven per-row costs smooth out.
+//!    Which thread runs which chunk never affects results (chunks are
+//!    independent and internally serial), so bit-exactness is preserved.
+//!  * **Multiple in-flight jobs + hierarchical budgets.**  The pool keeps
+//!    a registry of active jobs.  A chunk that dispatches a kernel is no
+//!    longer forced serial: its dispatch registers a first-class *nested*
+//!    job whose concurrency is capped by the **sub-budget** the chunk was
+//!    handed (the dispatcher's budget split evenly over the job's
+//!    `workers_cap` concurrent chunk slots — see [`JobCore::sub_budget`]).
+//!    Any set of `workers_cap` concurrently running chunks is handed at
+//!    most the dispatcher's whole budget, so the busy-thread high-water
+//!    mark of a job tree never exceeds the root budget
+//!    ([`super::threads`] for a top-level dispatch), pinned by
+//!    `rust/tests/exec_equivalence.rs`.
+//!  * **Per-job worker caps.**  `workers_cap` bounds how many threads may
+//!    attach to one job at once, so fine-grained chunking adds steal
+//!    slots without adding threads.  Helpers are spawned lazily: each
+//!    registration tops the pool up until the *unmet attach demand* of
+//!    every live job is covered by unattached helpers (demand is bounded
+//!    by the budget invariant, so the pool converges to ~`threads`
+//!    helpers and then only reuses them).
+//!  * **Top-level admission.**  Unrelated OS threads that dispatch
+//!    concurrently (e.g. two serving batchers) still time-share: one owns
+//!    the `dispatch` mutex, the rest degrade to serial with a unit
+//!    budget, so independent dispatchers can never multiply thread
+//!    counts.  Nested dispatch (from inside a pool chunk) skips this gate
+//!    — its concurrency is already paid for by its chunk's sub-budget.
 //!  * **Panic safe.**  A panic inside a chunk is caught on the worker,
-//!    recorded, and re-raised on the dispatching thread after the job
-//!    drains; unstarted chunks of the failed job are abandoned.  Helpers
-//!    survive and the pool stays usable.
+//!    recorded on the job, and re-raised on the dispatching thread after
+//!    the job drains; chunks nobody has claimed yet are abandoned.  A
+//!    panic in a *nested* job unwinds its dispatcher — which is itself a
+//!    chunk of the parent job — and therefore propagates level by level
+//!    to the root dispatcher.  Helpers survive and the pool stays usable.
 //!
 //! "Pinned" here means the workers are long-lived named threads; OS-level
 //! CPU affinity would need a syscall crate that is not in the offline
 //! vendor set (see DESIGN.md §Substitutions).
 
+use std::any::Any;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex, MutexGuard, OnceLock, TryLockError};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, TryLockError};
 
-/// Lifetime-erased fat pointer to the active job's per-chunk closure.
+/// Hard backstop on helper-thread growth (demand-driven spawning keeps
+/// the real count near the thread budget; this only guards against a
+/// pathological registration storm).
+const MAX_HELPERS: usize = 256;
+
+/// Lifetime-erased fat pointer to a job's per-chunk closure.
 ///
-/// Soundness: the pointer is dereferenced only between job publication
-/// and the `unfinished == 0` handshake in [`run`], and `run` does not
-/// return (so the borrowed closure cannot be dropped) until that
-/// handshake completes.
+/// Soundness: the pointer is dereferenced only inside [`run_chunk`], and
+/// every such call finishes (and bumps [`JobCore::done`]) before [`run`]
+/// — which keeps the borrowed closure alive — observes `done == chunks`
+/// and returns.
 #[derive(Clone, Copy)]
 struct JobFn(*const (dyn Fn(usize) + Sync));
 
 // SAFETY: the pointee is `Sync` (shared-callable from any thread) and the
-// completion handshake in `run` bounds its lifetime.
+// `done`-counter handshake in `run` bounds its lifetime; the pointer
+// itself is plain data.
 unsafe impl Send for JobFn {}
+unsafe impl Sync for JobFn {}
+
+/// Shared state of one in-flight job.  Lives in an `Arc` so helpers can
+/// outlast the dispatcher's registry entry; the closure behind `f` is
+/// only guaranteed alive until `done == chunks` (see [`JobFn`]).
+struct JobCore {
+    /// the job's per-chunk closure
+    f: JobFn,
+    /// total chunk indices to hand out
+    chunks: usize,
+    /// steal counter: next chunk index to claim (may overshoot `chunks`;
+    /// claims at or past it are no-ops)
+    next: AtomicUsize,
+    /// chunks executed or abandoned; the job is complete at `== chunks`
+    done: AtomicUsize,
+    /// max threads attached to this job at once (its concurrency share)
+    workers_cap: usize,
+    /// sub-budget floor handed to every chunk (`dispatcher budget / cap`)
+    budget_base: usize,
+    /// the first `budget_extra` chunk indices get `budget_base + 1`
+    budget_extra: usize,
+    /// threads currently attached (only mutated under the pool state
+    /// lock; atomic so [`run`] can read it lock-free in debug asserts)
+    attached: AtomicUsize,
+    /// first panic payload observed in a chunk of this job
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+impl JobCore {
+    fn has_work(&self) -> bool {
+        self.next.load(Ordering::Relaxed) < self.chunks
+    }
+
+    fn is_done(&self) -> bool {
+        // Acquire pairs with the AcqRel `fetch_add` in `finish`: once the
+        // dispatcher sees `done == chunks`, every chunk's writes (to the
+        // output buffer and the panic slot) are visible to it.
+        self.done.load(Ordering::Acquire) >= self.chunks
+    }
+
+    /// Nested-dispatch budget for chunk `idx`: the dispatcher's budget is
+    /// split `base + 1` for the first `extra` indices, `base` for the
+    /// rest, so ANY `workers_cap` concurrently running chunks sum to at
+    /// most the dispatcher's budget (`cap * base + extra`).
+    fn sub_budget(&self, idx: usize) -> usize {
+        (self.budget_base + usize::from(idx < self.budget_extra)).max(1)
+    }
+}
 
 struct State {
-    /// the active job's chunk closure (`None` = pool idle)
-    job: Option<JobFn>,
-    /// next chunk index to hand out
-    next_chunk: usize,
-    /// one past the last chunk index of the active job
-    total_chunks: usize,
-    /// chunks of the active job not yet completed
-    unfinished: usize,
-    /// helper threads spawned so far (grows lazily, never shrinks)
+    /// active jobs in registration order (stealers scan newest-first so
+    /// leaf jobs of a nested tree drain first and unblock their parents)
+    jobs: Vec<Arc<JobCore>>,
+    /// helper threads spawned so far (grows with demand, never shrinks)
     helpers: usize,
-    /// first panic payload observed in a chunk of the active job
-    panic: Option<Box<dyn std::any::Any + Send>>,
+    /// helpers currently attached to a job (under the state lock this is
+    /// exact, so `helpers - busy_helpers` is the spawn-deficit baseline)
+    busy_helpers: usize,
 }
 
 struct Pool {
     state: Mutex<State>,
-    /// helpers and the dispatcher both wait here; every state change that
-    /// could unblock a waiter does `notify_all`
-    cv: Condvar,
-    /// held by the dispatching thread for the whole job
+    /// helpers park here waiting for claimable work
+    cv_work: Condvar,
+    /// dispatchers park here waiting for their job's stragglers
+    cv_done: Condvar,
+    /// held by the top-level dispatching thread for its whole job tree
     dispatch: Mutex<()>,
-    /// threads currently executing exec-dispatched work
+    /// distinct threads currently executing exec-dispatched work
     busy: AtomicUsize,
     /// high-water mark of `busy` since the last [`reset_peak`]
     peak: AtomicUsize,
@@ -90,35 +165,40 @@ fn wait<'a>(cv: &Condvar, g: MutexGuard<'a, State>) -> MutexGuard<'a, State> {
 fn pool() -> &'static Pool {
     static POOL: OnceLock<Pool> = OnceLock::new();
     POOL.get_or_init(|| Pool {
-        state: Mutex::new(State {
-            job: None,
-            next_chunk: 0,
-            total_chunks: 0,
-            unfinished: 0,
-            helpers: 0,
-            panic: None,
-        }),
-        cv: Condvar::new(),
+        state: Mutex::new(State { jobs: Vec::new(), helpers: 0, busy_helpers: 0 }),
+        cv_work: Condvar::new(),
+        cv_done: Condvar::new(),
         dispatch: Mutex::new(()),
         busy: AtomicUsize::new(0),
         peak: AtomicUsize::new(0),
     })
 }
 
-/// RAII busy-thread accounting (peak tracking survives panics).
-struct BusyGuard<'a>(&'a Pool);
+/// RAII busy-thread accounting.  Counts each OS thread once: nested
+/// chunks on a thread already inside a chunk (depth > 0) don't re-count,
+/// so `busy` is the number of distinct threads doing exec work and `peak`
+/// is directly comparable to the `threads` budget.
+struct BusyGuard<'a> {
+    pool: &'a Pool,
+    counted: bool,
+}
 
 impl<'a> BusyGuard<'a> {
     fn new(pool: &'a Pool) -> Self {
-        let b = pool.busy.fetch_add(1, Ordering::Relaxed) + 1;
-        pool.peak.fetch_max(b, Ordering::Relaxed);
-        BusyGuard(pool)
+        let counted = super::chunk_depth() == 0;
+        if counted {
+            let b = pool.busy.fetch_add(1, Ordering::Relaxed) + 1;
+            pool.peak.fetch_max(b, Ordering::Relaxed);
+        }
+        BusyGuard { pool, counted }
     }
 }
 
 impl Drop for BusyGuard<'_> {
     fn drop(&mut self) {
-        self.0.busy.fetch_sub(1, Ordering::Relaxed);
+        if self.counted {
+            self.pool.busy.fetch_sub(1, Ordering::Relaxed);
+        }
     }
 }
 
@@ -129,150 +209,213 @@ fn spawn_helper(pool: &'static Pool) {
         .expect("exec: failed to spawn pool worker");
 }
 
+/// Pick a job worth attaching to: claimable work left and a free worker
+/// slot.  Newest-first so nested (leaf) jobs complete before their
+/// parents' remaining chunks are stolen.
+fn claimable(st: &State) -> Option<Arc<JobCore>> {
+    st.jobs
+        .iter()
+        .rev()
+        .find(|c| c.has_work() && c.attached.load(Ordering::Relaxed) < c.workers_cap)
+        .cloned()
+}
+
 fn helper_loop(pool: &'static Pool) {
     let mut st = lock(&pool.state);
     loop {
-        if let Some(job) = st.job {
-            if st.next_chunk < st.total_chunks {
-                let idx = st.next_chunk;
-                st.next_chunk += 1;
-                drop(st);
-                let panicked = run_chunk(pool, job, idx);
-                st = lock(&pool.state);
-                finish_chunk(pool, &mut st, panicked);
-                continue;
-            }
+        if let Some(core) = claimable(&st) {
+            core.attached.fetch_add(1, Ordering::Relaxed);
+            st.busy_helpers += 1;
+            drop(st);
+            drain(pool, &core);
+            st = lock(&pool.state);
+            core.attached.fetch_sub(1, Ordering::Relaxed);
+            st.busy_helpers -= 1;
+            continue;
         }
-        st = wait(&pool.cv, st);
+        st = wait(&pool.cv_work, st);
     }
 }
 
-/// Execute one chunk inside a parallel region, catching panics.
-fn run_chunk(pool: &Pool, job: JobFn, idx: usize) -> Option<Box<dyn std::any::Any + Send>> {
+/// Steal chunks off `core`'s claim counter until none remain.  Called by
+/// helpers and by the dispatcher itself (which participates in its own
+/// job).  One atomic `fetch_add` per chunk — the entire hand-off cost.
+fn drain(pool: &Pool, core: &JobCore) {
+    loop {
+        let idx = core.next.fetch_add(1, Ordering::Relaxed);
+        if idx >= core.chunks {
+            return;
+        }
+        match run_chunk(pool, core, idx) {
+            None => finish(pool, core, 1),
+            Some(p) => {
+                {
+                    let mut slot = core.panic.lock().unwrap_or_else(|e| e.into_inner());
+                    if slot.is_none() {
+                        *slot = Some(p);
+                    }
+                }
+                // failed job: abandon every chunk nobody has claimed yet
+                // (the swap also stops further claims; `min` discounts
+                // counter overshoot from racing claimers)
+                let prev = core.next.swap(core.chunks, Ordering::Relaxed).min(core.chunks);
+                finish(pool, core, 1 + (core.chunks - prev));
+            }
+        }
+    }
+}
+
+/// Execute one chunk: busy accounting, sub-budget install, panic capture.
+fn run_chunk(pool: &Pool, core: &JobCore, idx: usize) -> Option<Box<dyn Any + Send>> {
     let _busy = BusyGuard::new(pool);
-    let _region = super::enter_region();
+    let _env = super::enter_chunk(core.sub_budget(idx));
     catch_unwind(AssertUnwindSafe(|| {
         // SAFETY: see `JobFn` — the dispatcher keeps the closure alive
-        // until every chunk has reported completion.
-        let f = unsafe { &*job.0 };
+        // until `done == chunks`, and this call's `finish` contribution
+        // happens only after `f` returns.
+        let f = unsafe { &*core.f.0 };
         f(idx)
     }))
     .err()
 }
 
-fn finish_chunk(pool: &Pool, st: &mut State, panicked: Option<Box<dyn std::any::Any + Send>>) {
-    st.unfinished -= 1;
-    if let Some(p) = panicked {
-        if st.panic.is_none() {
-            st.panic = Some(p);
-        }
-        // failed job: abandon every chunk nobody has started yet
-        st.unfinished -= st.total_chunks - st.next_chunk;
-        st.next_chunk = st.total_chunks;
-    }
-    // the only waiter that consumes this transition is the dispatcher
-    // blocked on job completion; helpers only wait for new jobs, so
-    // skipping the wakeup while chunks remain avoids O(chunks × helpers)
-    // spurious wakeups on the hot dispatch path
-    if st.unfinished == 0 {
-        pool.cv.notify_all();
+/// Record `n` chunks as executed/abandoned; on completion, wake the
+/// dispatcher (the state-lock round trip closes the race against a
+/// dispatcher that just checked `is_done` and is about to park).
+fn finish(pool: &Pool, core: &JobCore, n: usize) {
+    if core.done.fetch_add(n, Ordering::AcqRel) + n >= core.chunks {
+        drop(lock(&pool.state));
+        pool.cv_done.notify_all();
     }
 }
 
 /// Run `f(chunk)` for every chunk index in `0..chunks` on the persistent
-/// pool, with the calling thread participating.  Blocks until every chunk
-/// has completed; a panic in any chunk is re-raised here.
+/// pool, with the calling thread participating and at most `workers`
+/// threads attached at once.  Blocks until every chunk has completed; a
+/// panic in any chunk is re-raised here.
 ///
-/// `chunks` must already respect the thread budget — dispatch sites derive
-/// it from [`super::workers_for`], which caps at [`super::threads`].  If
-/// another thread currently owns the pool (or this is a re-entrant call),
-/// the whole job runs serially on the caller instead, so concurrent
-/// dispatchers never oversubscribe.
-pub(super) fn run(chunks: usize, f: &(dyn Fn(usize) + Sync)) {
+/// The dispatcher's current budget (see [`super::budget`]) is split over
+/// the job's `min(workers, chunks)` concurrent slots, and each chunk runs
+/// with its share installed as the thread budget — so kernels inside a
+/// chunk fan out as first-class nested pool jobs instead of serializing,
+/// while the whole tree stays within the root budget.
+///
+/// Top-level calls (not from inside a pool chunk) take the `dispatch`
+/// gate; if another top-level thread owns it, the job degrades to serial
+/// on the caller with a unit budget, so concurrent dispatchers never
+/// oversubscribe.
+pub(super) fn run(chunks: usize, workers: usize, f: &(dyn Fn(usize) + Sync)) {
     if chunks == 0 {
         return;
     }
     let pool = pool();
-    let owner = match pool.dispatch.try_lock() {
-        Ok(g) => g,
-        // a previous dispatcher panicked while holding the lock (only
-        // possible on the degenerate single-chunk path); the pool state
-        // is consistent, so just take ownership
-        Err(TryLockError::Poisoned(p)) => p.into_inner(),
-        Err(TryLockError::WouldBlock) => {
-            // pool busy: degrade to serial on this thread (still flagged
-            // as a region so kernels below do not try to fan out)
-            let _busy = BusyGuard::new(pool);
-            let _region = super::enter_region();
-            for i in 0..chunks {
-                f(i);
+    let owner = if super::chunk_depth() > 0 {
+        // nested dispatch: already accounted for by this chunk's
+        // sub-budget, no admission gate
+        None
+    } else {
+        match pool.dispatch.try_lock() {
+            Ok(g) => Some(g),
+            // a previous dispatcher panicked while holding the lock (only
+            // possible on the inline single-chunk path); the pool state
+            // is consistent, so just take ownership
+            Err(TryLockError::Poisoned(p)) => Some(p.into_inner()),
+            Err(TryLockError::WouldBlock) => {
+                // pool owned by another top-level dispatcher: degrade to
+                // serial on this thread with a unit budget so kernels
+                // below do not fan out either
+                let _busy = BusyGuard::new(pool);
+                let _env = super::enter_chunk(1);
+                for i in 0..chunks {
+                    f(i);
+                }
+                return;
             }
-            return;
         }
     };
     if chunks == 1 {
+        // degenerate single-chunk job: run inline, keeping the full
+        // current budget (a lone chunk may still fan out beneath itself)
         let _busy = BusyGuard::new(pool);
-        let _region = super::enter_region();
+        let _env = super::enter_chunk(super::budget());
         f(0);
         return;
     }
+    let budget = super::budget();
+    let cap = workers.max(1).min(chunks);
     // SAFETY: erases the closure's lifetime so it can sit in the shared
-    // state; `run` does not return until `unfinished == 0`, after the
+    // job core; `run` does not return until `done == chunks`, after the
     // last dereference.
-    let job = {
+    let job_fn = {
         let f_erased: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
         JobFn(f_erased)
     };
+    let core = Arc::new(JobCore {
+        f: job_fn,
+        chunks,
+        next: AtomicUsize::new(0),
+        done: AtomicUsize::new(0),
+        workers_cap: cap,
+        budget_base: budget / cap,
+        budget_extra: budget % cap,
+        attached: AtomicUsize::new(1), // the dispatcher occupies one slot
+        panic: Mutex::new(None),
+    });
+    let to_spawn = {
+        let mut st = lock(&pool.state);
+        st.jobs.push(core.clone());
+        // top the pool up so every live job's unmet attach demand is
+        // covered by helpers that are not currently attached anywhere —
+        // demand is bounded by the budget invariant, so growth converges
+        // to ~`threads` helpers which are then reused forever
+        let want: usize = st
+            .jobs
+            .iter()
+            .filter(|c| c.has_work())
+            .map(|c| c.workers_cap.saturating_sub(c.attached.load(Ordering::Relaxed)))
+            .sum();
+        let available = st.helpers - st.busy_helpers;
+        let deficit =
+            want.saturating_sub(available).min(MAX_HELPERS.saturating_sub(st.helpers));
+        // reserve the slots under the lock, but do the (~10µs each)
+        // thread spawns after dropping it so concurrent finish()/rescan
+        // paths are not stalled behind a spawn burst; a reserved helper
+        // counts as available, which is exactly right — it scans the
+        // registry as its first action
+        st.helpers += deficit;
+        // wake only as many parked helpers as this job can seat; helpers
+        // that finish other work rescan the registry on their own
+        for _ in 0..cap - 1 {
+            pool.cv_work.notify_one();
+        }
+        deficit
+    };
+    for _ in 0..to_spawn {
+        spawn_helper(pool);
+    }
+    // claim chunks alongside the helpers...
+    drain(pool, &core);
+    // ...then wait out stragglers still running stolen chunks
+    if !core.is_done() {
+        let mut st = lock(&pool.state);
+        while !core.is_done() {
+            st = wait(&pool.cv_done, st);
+        }
+    }
     {
         let mut st = lock(&pool.state);
-        let want = chunks - 1;
-        while st.helpers < want {
-            spawn_helper(pool);
-            st.helpers += 1;
-        }
-        debug_assert!(st.job.is_none(), "exec pool: overlapping jobs");
-        st.job = Some(job);
-        st.next_chunk = 0;
-        st.total_chunks = chunks;
-        st.unfinished = chunks;
-        st.panic = None;
-        // wake only as many helpers as this job can occupy — notify_all
-        // would stampede every helper ever spawned through the state
-        // mutex on each dispatch.  Under-waking is harmless: the
-        // dispatcher claims leftover chunks itself, and a not-yet-parked
-        // helper re-checks the claim condition before waiting.
-        for _ in 0..want {
-            pool.cv.notify_one();
-        }
+        st.jobs.retain(|c| !Arc::ptr_eq(c, &core));
+        core.attached.fetch_sub(1, Ordering::Relaxed);
     }
-    // claim chunks alongside the helpers, then wait out the stragglers
-    let mut st = lock(&pool.state);
-    loop {
-        if st.next_chunk < st.total_chunks {
-            let idx = st.next_chunk;
-            st.next_chunk += 1;
-            drop(st);
-            let panicked = run_chunk(pool, job, idx);
-            st = lock(&pool.state);
-            finish_chunk(pool, &mut st, panicked);
-            continue;
-        }
-        if st.unfinished == 0 {
-            break;
-        }
-        st = wait(&pool.cv, st);
-    }
-    st.job = None;
-    let panic = st.panic.take();
-    drop(st);
     drop(owner);
+    let panic = core.panic.lock().unwrap_or_else(|e| e.into_inner()).take();
     if let Some(p) = panic {
         std::panic::resume_unwind(p);
     }
 }
 
 /// High-water mark of concurrently busy exec threads since the last
-/// [`reset_peak`] (dispatcher and serial-fallback callers included).
+/// [`reset_peak`] (each OS thread counted once, however deeply nested).
 pub(super) fn peak_concurrency() -> usize {
     pool().peak.load(Ordering::Relaxed)
 }
@@ -283,7 +426,7 @@ pub(super) fn reset_peak() {
 }
 
 /// Number of helper threads the pool has spawned so far (excludes the
-/// dispatching caller; grows lazily, never shrinks).
+/// dispatching caller; grows with demand, never shrinks).
 pub(super) fn helper_count() -> usize {
     lock(&pool().state).helpers
 }

@@ -340,8 +340,8 @@ impl RfftCache {
     /// Row order is preserved and each row is the identical serial
     /// computation, so the result is bit-exact at any thread count.
     pub fn conv_batch(&self, signals: &[&[f32]], out_len: usize) -> Vec<Vec<f32>> {
-        let workers = exec::workers_for(signals.len(), signals.len() * self.nfft * 16);
-        exec::parallel_map(signals.len(), workers, |i| self.conv(signals[i], out_len))
+        let plan = exec::plan_for(signals.len(), signals.len() * self.nfft * 16);
+        exec::parallel_map(signals.len(), plan, |i| self.conv(signals[i], out_len))
     }
 }
 

@@ -91,8 +91,8 @@ impl LmuParallelLayer {
         // time-reversal is a pure row permutation — partition output rows
         let mut hrev = Tensor::zeros(&[n, d]);
         let hd = h.data();
-        let workers = exec::workers_for(n, n * d);
-        exec::parallel_rows_mut(hrev.data_mut(), d, workers, |t0, block| {
+        let plan = exec::plan_for(n, n * d);
+        exec::parallel_rows_mut(hrev.data_mut(), d, plan, |t0, block| {
             for (r, row) in block.chunks_mut(d).enumerate() {
                 let t = t0 + r;
                 row.copy_from_slice(&hd[(n - 1 - t) * d..(n - t) * d]);

@@ -34,8 +34,8 @@ pub fn to_time_major(x: &Tensor, batch: usize, n: usize) -> Tensor {
         return out;
     }
     let xd = x.data();
-    let workers = exec::workers_for(batch * n, batch * n * f);
-    exec::parallel_rows_mut(out.data_mut(), f, workers, |r0, block| {
+    let plan = exec::plan_for(batch * n, batch * n * f);
+    exec::parallel_rows_mut(out.data_mut(), f, plan, |r0, block| {
         for (k, row) in block.chunks_mut(f).enumerate() {
             let r = r0 + k; // time-major row index = t*batch + b
             let (t, b) = (r / batch, r % batch);
@@ -54,8 +54,8 @@ pub fn to_sample_major(x: &Tensor, batch: usize, n: usize) -> Tensor {
         return out;
     }
     let xd = x.data();
-    let workers = exec::workers_for(batch * n, batch * n * f);
-    exec::parallel_rows_mut(out.data_mut(), f, workers, |r0, block| {
+    let plan = exec::plan_for(batch * n, batch * n * f);
+    exec::parallel_rows_mut(out.data_mut(), f, plan, |r0, block| {
         for (k, row) in block.chunks_mut(f).enumerate() {
             let r = r0 + k; // sample-major row index = b*n + t
             let (b, t) = (r / n, r % n);

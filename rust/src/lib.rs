@@ -21,10 +21,12 @@
 //!
 //! The native substrate's hot kernels (matmul, FFT causal convolution,
 //! elementwise maps, DN application) dispatch through the [`exec`]
-//! thread-parallel execution substrate — a persistent parked worker pool
-//! that the data-parallel coordinator and the serving batcher also fan
-//! out on, so every parallel code path in the process shares one thread
-//! budget.  Serial (`threads = 1`) and parallel execution are bit-exact,
+//! thread-parallel execution substrate — a work-stealing persistent
+//! worker pool with hierarchical parallelism budgets, which the
+//! data-parallel coordinator and the serving batcher also fan out on, so
+//! every parallel code path in the process shares one thread budget
+//! (nested kernels get a sub-budget share instead of serializing).
+//! Serial (`threads = 1`) and parallel execution are bit-exact,
 //! mirroring the paper's claim that the parallel and recurrent forms
 //! compute the same function.
 //!

@@ -13,13 +13,22 @@
 //! order dominates.
 //!
 //! All three kernels dispatch through `crate::exec`: the output C is
-//! row-partitioned across the exec pool workers, so every thread owns a
+//! row-partitioned into work-stealing chunks, so every chunk owns a
 //! disjoint contiguous shard of C and no accumulation races exist —
 //! including `matmul_tn`, whose rank-1 updates stay race-free because each
-//! worker applies the full p-sweep to its own rows only.  Per output
+//! chunk applies the full p-sweep to its own rows only.  Per output
 //! element the floating-point operation order is identical to the serial
 //! loop, so results are bit-exact at every thread count (pinned by
 //! `rust/tests/exec_equivalence.rs`).
+//!
+//! Non-finite propagation: `matmul` and `matmul_tn` skip zero entries of
+//! A (a cheap sparsity win for one-hot-ish operands), but `0 · NaN` and
+//! `0 · ±Inf` must still produce `NaN` like the naive triple loop.  The
+//! skip is therefore gated on a one-pass "B is entirely finite" scan —
+//! when B is finite the skip is bit-exact (the accumulator starts at
+//! `+0.0` and can never become `-0.0`, so adding `±0.0` is the identity),
+//! and when B carries any NaN/Inf the skip is disabled so propagation
+//! matches the naive reference exactly.
 
 use super::Tensor;
 use crate::exec;
@@ -33,16 +42,26 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(k, kb, "matmul inner dims: {:?} x {:?}", a.shape(), b.shape());
     let mut c = Tensor::zeros(&[m, n]);
     let (ad, bd) = (a.data(), b.data());
-    let workers = exec::workers_for(m, m * k * n);
-    exec::parallel_rows_mut(c.data_mut(), n, workers, |i0, cblock| {
-        matmul_rows(ad, bd, cblock, i0, k, n);
+    // zero-skip is only sound when B carries no NaN/Inf (0 · NaN = NaN)
+    let skip_zeros = all_finite(bd);
+    let plan = exec::plan_for(m, m * k * n);
+    exec::parallel_rows_mut(c.data_mut(), n, plan, |i0, cblock| {
+        matmul_rows(ad, bd, cblock, i0, k, n, skip_zeros);
     });
     c
 }
 
 /// The serial kernel over one contiguous block of C's rows
 /// (`cblock` = rows `i0 ..` of C).
-fn matmul_rows(ad: &[f32], bd: &[f32], cblock: &mut [f32], i0: usize, k: usize, n: usize) {
+fn matmul_rows(
+    ad: &[f32],
+    bd: &[f32],
+    cblock: &mut [f32],
+    i0: usize,
+    k: usize,
+    n: usize,
+    skip_zeros: bool,
+) {
     let rows = if n == 0 { 0 } else { cblock.len() / n };
     for k0 in (0..k).step_by(KC) {
         let k1 = (k0 + KC).min(k);
@@ -51,7 +70,7 @@ fn matmul_rows(ad: &[f32], bd: &[f32], cblock: &mut [f32], i0: usize, k: usize, 
             let crow = &mut cblock[r * n..(r + 1) * n];
             for p in k0..k1 {
                 let aip = ad[i * k + p];
-                if aip == 0.0 {
+                if aip == 0.0 && skip_zeros {
                     continue;
                 }
                 let brow = &bd[p * n..(p + 1) * n];
@@ -70,18 +89,19 @@ pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(k, kb, "matmul_tn inner dims: {:?} x {:?}", a.shape(), b.shape());
     let mut c = Tensor::zeros(&[m, n]);
     let (ad, bd) = (a.data(), b.data());
-    let workers = exec::workers_for(m, m * k * n);
-    // Each worker owns rows [i0, i0+rows) of C and scans all k rank-1
+    let skip_zeros = all_finite(bd);
+    let plan = exec::plan_for(m, m * k * n);
+    // Each chunk owns rows [i0, i0+rows) of C and scans all k rank-1
     // updates itself: contiguous in B's row, p-ascending per element
     // exactly like the serial p-outer loop.
-    exec::parallel_rows_mut(c.data_mut(), n, workers, |i0, cblock| {
+    exec::parallel_rows_mut(c.data_mut(), n, plan, |i0, cblock| {
         let rows = if n == 0 { 0 } else { cblock.len() / n };
         for p in 0..k {
             let brow = &bd[p * n..(p + 1) * n];
             let arow = &ad[p * m..(p + 1) * m];
             for r in 0..rows {
                 let av = arow[i0 + r];
-                if av == 0.0 {
+                if av == 0.0 && skip_zeros {
                     continue;
                 }
                 let crow = &mut cblock[r * n..(r + 1) * n];
@@ -101,8 +121,8 @@ pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(k, kb, "matmul_nt inner dims: {:?} x {:?}", a.shape(), b.shape());
     let mut c = Tensor::zeros(&[m, n]);
     let (ad, bd) = (a.data(), b.data());
-    let workers = exec::workers_for(m, m * k * n);
-    exec::parallel_rows_mut(c.data_mut(), n, workers, |i0, cblock| {
+    let plan = exec::plan_for(m, m * k * n);
+    exec::parallel_rows_mut(c.data_mut(), n, plan, |i0, cblock| {
         let rows = if n == 0 { 0 } else { cblock.len() / n };
         for r in 0..rows {
             let i = i0 + r;
@@ -115,6 +135,13 @@ pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
         }
     });
     c
+}
+
+/// One pass over a buffer checking every value is finite (no NaN/Inf);
+/// O(len) against the kernels' O(m·k·n), and branch-free enough to
+/// auto-vectorize.
+fn all_finite(xs: &[f32]) -> bool {
+    xs.iter().all(|v| v.is_finite())
 }
 
 /// Contiguous dot product, 4-way unrolled for ILP.
@@ -143,12 +170,24 @@ fn dims2(t: &Tensor, what: &str) -> (usize, usize) {
     (t.shape()[0], t.shape()[1])
 }
 
-/// y = M (m,n) · x (n,)  — matrix-vector product.
+/// y = M (m,n) · x (n,)  — matrix-vector product, the RNN-mode streaming
+/// inference hot path.  Output rows are independent dot products, so the
+/// row range dispatches through the exec pool like every other kernel;
+/// per element the op order is the untouched serial [`dot`], so results
+/// are bit-exact at every thread count.
 pub fn matvec(m: &Tensor, x: &[f32]) -> Vec<f32> {
     let (rows, cols) = dims2(m, "matvec lhs");
     assert_eq!(cols, x.len(), "matvec dims");
     let md = m.data();
-    (0..rows).map(|i| dot(&md[i * cols..(i + 1) * cols], x)).collect()
+    let mut y = vec![0.0f32; rows];
+    let plan = exec::plan_for(rows, 2 * rows * cols);
+    exec::parallel_rows_mut(&mut y, 1, plan, |i0, block| {
+        for (r, o) in block.iter_mut().enumerate() {
+            let i = i0 + r;
+            *o = dot(&md[i * cols..(i + 1) * cols], x);
+        }
+    });
+    y
 }
 
 #[cfg(test)]
@@ -240,6 +279,77 @@ mod tests {
         let y_ref = matmul(&m, &x);
         for (a, b) in y.iter().zip(y_ref.data()) {
             assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn matvec_large_matches_serial_dots() {
+        // large enough to cross the exec threshold: the parallel path must
+        // be bit-identical to per-row serial dot products
+        let mut rng = Rng::new(6);
+        let (r, c) = (300usize, 101usize);
+        let m = Tensor::randn(&[r, c], 1.0, &mut rng);
+        let xv: Vec<f32> = (0..c).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let y = matvec(&m, &xv);
+        for i in 0..r {
+            let want = dot(&m.data()[i * c..(i + 1) * c], &xv);
+            assert!(y[i].to_bits() == want.to_bits(), "row {i}");
+        }
+    }
+
+    /// Naive reference on data that may contain NaN/Inf: the kernels must
+    /// propagate non-finite values exactly like the plain triple loop.
+    #[test]
+    fn non_finite_in_b_propagates_through_zero_entries_of_a() {
+        // A holds explicit zeros exactly where the old unconditional
+        // zero-skip would have dropped B's NaN/Inf contribution
+        let a = Tensor::new(&[2, 3], vec![0.0, 1.0, 0.0, 0.0, 0.0, 2.0]);
+        let mut bdata = vec![1.0f32; 3 * 2];
+        bdata[0] = f32::NAN; // B[0,0]
+        bdata[5] = f32::INFINITY; // B[2,1]
+        let b = Tensor::new(&[3, 2], bdata);
+        let c = matmul(&a, &b);
+        let r = naive(&a, &b);
+        for (i, (x, y)) in c.data().iter().zip(r.data()).enumerate() {
+            assert!(
+                x.to_bits() == y.to_bits() || (x.is_nan() && y.is_nan()),
+                "matmul elem {i}: {x} vs naive {y}"
+            );
+        }
+        // C[0,0] = 0*NaN + 1*1 + 0*1 -> NaN; C[1,1] = 0 + 0 + 2*Inf -> Inf
+        assert!(c.at2(0, 0).is_nan(), "0 * NaN was silently dropped");
+        assert!(c.at2(1, 1).is_infinite());
+
+        // same for the transposed kernel (A stored as (k, m))
+        let at = a.transpose2();
+        let c_tn = matmul_tn(&at, &b);
+        for (i, (x, y)) in c_tn.data().iter().zip(r.data()).enumerate() {
+            assert!(
+                x.to_bits() == y.to_bits() || (x.is_nan() && y.is_nan()),
+                "matmul_tn elem {i}: {x} vs naive {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn finite_b_keeps_zero_skip_bit_exact() {
+        // with finite B, the zero-skip path must be bit-identical to the
+        // naive reference even for A dense in zeros (incl. -0.0)
+        let mut rng = Rng::new(7);
+        let mut a = Tensor::randn(&[9, 13], 1.0, &mut rng);
+        for (i, v) in a.data_mut().iter_mut().enumerate() {
+            if i % 3 == 0 {
+                *v = 0.0;
+            }
+            if i % 7 == 0 {
+                *v = -0.0;
+            }
+        }
+        let b = Tensor::randn(&[13, 5], 1.0, &mut rng);
+        let c = matmul(&a, &b);
+        let r = naive(&a, &b);
+        for (x, y) in c.data().iter().zip(r.data()) {
+            assert!(x.to_bits() == y.to_bits(), "{x} vs {y}");
         }
     }
 

@@ -191,9 +191,9 @@ impl Tensor {
         if r == 0 || c == 0 {
             return out;
         }
-        let workers = exec::workers_for(c, r * c);
+        let plan = exec::plan_for(c, r * c);
         let src = &self.data;
-        exec::parallel_rows_mut(&mut out.data, r, workers, |j0, block| {
+        exec::parallel_rows_mut(&mut out.data, r, plan, |j0, block| {
             for (k, orow) in block.chunks_mut(r).enumerate() {
                 let j = j0 + k;
                 for (i, o) in orow.iter_mut().enumerate() {
@@ -208,9 +208,9 @@ impl Tensor {
 
     pub fn map(&self, f: impl Fn(f32) -> f32 + Sync) -> Self {
         let mut out = Tensor::zeros(&self.shape);
-        let workers = exec::workers_for(self.data.len(), self.data.len());
+        let plan = exec::plan_for(self.data.len(), self.data.len());
         let src = &self.data;
-        exec::parallel_rows_mut(&mut out.data, 1, workers, |i0, block| {
+        exec::parallel_rows_mut(&mut out.data, 1, plan, |i0, block| {
             for (dst, &v) in block.iter_mut().zip(&src[i0..i0 + block.len()]) {
                 *dst = f(v);
             }
@@ -219,8 +219,8 @@ impl Tensor {
     }
 
     pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32 + Sync) {
-        let workers = exec::workers_for(self.data.len(), self.data.len());
-        exec::parallel_rows_mut(&mut self.data, 1, workers, |_, block| {
+        let plan = exec::plan_for(self.data.len(), self.data.len());
+        exec::parallel_rows_mut(&mut self.data, 1, plan, |_, block| {
             for v in block.iter_mut() {
                 *v = f(*v);
             }
@@ -230,9 +230,9 @@ impl Tensor {
     fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32 + Sync) -> Self {
         assert_eq!(self.shape, other.shape, "elementwise shape mismatch");
         let mut out = Tensor::zeros(&self.shape);
-        let workers = exec::workers_for(self.data.len(), self.data.len());
+        let plan = exec::plan_for(self.data.len(), self.data.len());
         let (a, b) = (&self.data, &other.data);
-        exec::parallel_rows_mut(&mut out.data, 1, workers, |i0, block| {
+        exec::parallel_rows_mut(&mut out.data, 1, plan, |i0, block| {
             for (k, dst) in block.iter_mut().enumerate() {
                 *dst = f(a[i0 + k], b[i0 + k]);
             }
@@ -284,9 +284,9 @@ impl Tensor {
         let c = self.cols();
         assert_eq!(bias.len(), c, "bias length {} != cols {}", bias.len(), c);
         let mut out = self.clone();
-        let workers = exec::workers_for(self.rows(), self.data.len());
+        let plan = exec::plan_for(self.rows(), self.data.len());
         let bd = &bias.data;
-        exec::parallel_rows_mut(&mut out.data, c, workers, |_, block| {
+        exec::parallel_rows_mut(&mut out.data, c, plan, |_, block| {
             for row in block.chunks_mut(c) {
                 for (v, b) in row.iter_mut().zip(bd) {
                     *v += b;
@@ -345,16 +345,25 @@ impl Tensor {
     }
 
     /// Argmax of each row: (r, c) -> Vec of r indices.
+    ///
+    /// Total over NaN with a deterministic rule (a diverged model must
+    /// yield a stable prediction, not a `partial_cmp(..).unwrap()` panic):
+    /// NaN never beats a non-NaN value, ties keep the lowest index, and
+    /// an all-NaN row yields index 0.
     pub fn argmax_rows(&self) -> Vec<usize> {
         let c = self.cols();
         self.data
             .chunks(c)
             .map(|row| {
-                row.iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(i, _)| i)
-                    .unwrap()
+                let mut best = 0usize;
+                let mut best_v = row[0];
+                for (i, &v) in row.iter().enumerate().skip(1) {
+                    if v > best_v || (best_v.is_nan() && !v.is_nan()) {
+                        best = i;
+                        best_v = v;
+                    }
+                }
+                best
             })
             .collect()
     }
@@ -364,8 +373,8 @@ impl Tensor {
     pub fn softmax_rows(&self) -> Tensor {
         let c = self.cols();
         let mut out = self.clone();
-        let workers = exec::workers_for(self.rows(), self.data.len() * 4);
-        exec::parallel_rows_mut(&mut out.data, c, workers, |_, block| {
+        let plan = exec::plan_for(self.rows(), self.data.len() * 4);
+        exec::parallel_rows_mut(&mut out.data, c, plan, |_, block| {
             for row in block.chunks_mut(c) {
                 let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
                 let mut z = 0.0;
@@ -563,6 +572,36 @@ mod tests {
     fn argmax_rows_works() {
         let t = Tensor::new(&[2, 3], vec![1., 5., 3., 9., 0., 2.]);
         assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn argmax_rows_is_total_over_nan() {
+        // NaN logits (a diverged model) must not panic and must lose to
+        // every non-NaN value; an all-NaN row deterministically yields 0
+        let t = Tensor::new(
+            &[4, 3],
+            vec![
+                f32::NAN,
+                1.0,
+                0.5, // NaN first, real max later
+                2.0,
+                f32::NAN,
+                3.0, // NaN in the middle
+                f32::NAN,
+                f32::NAN,
+                f32::NAN, // all NaN
+                -1.0,
+                f32::NEG_INFINITY,
+                f32::NAN, // -inf beats NaN
+            ],
+        );
+        assert_eq!(t.argmax_rows(), vec![1, 2, 0, 0]);
+    }
+
+    #[test]
+    fn argmax_rows_ties_take_lowest_index() {
+        let t = Tensor::new(&[2, 3], vec![7., 7., 7., 1., 4., 4.]);
+        assert_eq!(t.argmax_rows(), vec![0, 1]);
     }
 
     #[test]

@@ -22,6 +22,7 @@ use plmu::optim::Adam;
 use plmu::train::{ModelKind, SeqClassifier};
 use plmu::util::Rng;
 use plmu::Tensor;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 static THREAD_KNOB: Mutex<()> = Mutex::new(());
@@ -60,6 +61,21 @@ fn assert_equal_across_threads(label: &str, f: impl Fn() -> Vec<f32>) {
 // (non-divisible row counts, single rows) that exercise the partition
 // edge cases (they may fall back to serial — equivalence must hold
 // regardless).
+
+#[test]
+fn matvec_bit_equal() {
+    let _k = knob_guard();
+    let mut rng = Rng::new(12);
+    // first shape crosses MIN_PARALLEL_WORK so the (newly routed) exec
+    // dispatch genuinely engages; the rest are degenerate fallbacks
+    for &(r, c) in &[(600usize, 300usize), (7, 11), (1, 5)] {
+        let m = Tensor::randn(&[r, c], 1.0, &mut rng);
+        let x: Vec<f32> = (0..c).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        assert_equal_across_threads(&format!("matvec {r}x{c}"), || {
+            plmu::tensor::matmul::matvec(&m, &x)
+        });
+    }
+}
 
 #[test]
 fn matmul_family_bit_equal() {
@@ -301,6 +317,166 @@ fn data_parallel_training_bit_equal_across_threads() {
         };
         DataParallelCoordinator::run(dp_factory(12), shards, &mut opt, &cfg).final_params
     });
+}
+
+// --------------------------------------------------------- scheduler tests
+// Hierarchical budgets + work stealing: deterministic sub-budget split,
+// full-budget saturation under nested fan-out, nested panic propagation,
+// and the 2-replica/8-thread data-parallel scenario the scheduler
+// overhaul unblocks (previously every nested kernel serialized).
+
+#[test]
+fn hierarchical_budget_split_is_deterministic() {
+    let _k = knob_guard();
+    exec::set_threads(8);
+    assert_eq!(exec::budget(), 8, "top-level budget is the global knob");
+    let budgets = Mutex::new(vec![0usize; 2]);
+    exec::parallel_ranges(2, exec::plan_for(2, usize::MAX), |lo, _| {
+        budgets.lock().unwrap()[lo] = exec::budget();
+        // nested plans are capped by the chunk's sub-budget, not the knob
+        assert_eq!(exec::plan_for(100, usize::MAX).workers, exec::budget());
+    });
+    assert_eq!(
+        *budgets.lock().unwrap(),
+        vec![4, 4],
+        "2 chunk slots on 8 threads get 4 threads' worth each"
+    );
+    // uneven split: the remainder goes to the lowest chunk indices
+    exec::set_threads(7);
+    let budgets = Mutex::new(vec![0usize; 2]);
+    exec::parallel_ranges(2, exec::plan_for(2, usize::MAX), |lo, _| {
+        budgets.lock().unwrap()[lo] = exec::budget();
+    });
+    assert_eq!(*budgets.lock().unwrap(), vec![4, 3]);
+    // more chunks than budget: everything below runs serial, like before
+    exec::set_threads(2);
+    exec::parallel_ranges(4, exec::plan_for(4, usize::MAX), |_, _| {
+        assert_eq!(exec::budget(), 1);
+        assert!(exec::plan_for(100, usize::MAX).is_serial());
+    });
+    // run_serialized still pins the budget to 1
+    exec::set_threads(8);
+    exec::run_serialized(|| {
+        assert_eq!(exec::budget(), 1);
+        assert!(exec::plan_for(100, usize::MAX).is_serial());
+    });
+    exec::set_threads(1);
+}
+
+/// Spin (yielding) until `counter` reaches `target`; gives up after 10s
+/// so a scheduler bug fails the calling assertion instead of hanging CI.
+fn spin_until(counter: &AtomicUsize, target: usize) {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    while counter.load(Ordering::Relaxed) < target {
+        if std::time::Instant::now() > deadline {
+            return;
+        }
+        std::thread::yield_now();
+    }
+}
+
+#[test]
+fn nested_fanout_saturates_thread_budget_exactly() {
+    // 2 outer chunks on an 8-thread budget, each dispatching a nested
+    // 4-chunk job: all 8 chunk slots must be occupied by 8 distinct
+    // threads SIMULTANEOUSLY (the old scheduler pinned this at 2), and
+    // never more than 8 — the hierarchical budget invariant, made
+    // deterministic with barriers instead of timing luck.
+    let _k = knob_guard();
+    exec::set_threads(8);
+    exec::reset_pool_peak();
+    let top = AtomicUsize::new(0);
+    let inner = AtomicUsize::new(0);
+    exec::parallel_ranges(2, exec::plan_for(2, usize::MAX), |_, _| {
+        top.fetch_add(1, Ordering::SeqCst);
+        spin_until(&top, 2); // both replica slots running concurrently
+        exec::parallel_ranges(4, exec::plan_for(4, usize::MAX), |_, _| {
+            inner.fetch_add(1, Ordering::SeqCst);
+            spin_until(&inner, 8); // all 8 nested chunks in flight at once
+        });
+    });
+    let peak = exec::pool_peak_concurrency();
+    assert_eq!(
+        peak, 8,
+        "nested fan-out should saturate exactly the 8-thread budget (got {peak})"
+    );
+    exec::set_threads(1);
+}
+
+#[test]
+fn panic_in_nested_job_propagates_to_root_dispatcher() {
+    let _k = knob_guard();
+    exec::set_threads(4);
+    let r = std::panic::catch_unwind(|| {
+        exec::parallel_ranges(2, exec::plan_for(2, usize::MAX), |lo, _| {
+            // each outer chunk has sub-budget 2, so this genuinely
+            // dispatches a nested pool job whose chunk may be stolen
+            exec::parallel_ranges(2, exec::plan_for(2, usize::MAX), |ilo, _| {
+                if lo == 1 && ilo == 1 {
+                    panic!("nested boom");
+                }
+            });
+        });
+    });
+    assert!(r.is_err(), "nested panic was swallowed");
+    // the pool must stay fully usable afterwards
+    let v = exec::parallel_map(6, exec::plan_for(6, usize::MAX), |i| i * 2);
+    assert_eq!(v, vec![0, 2, 4, 6, 8, 10]);
+    exec::set_threads(1);
+}
+
+fn dp_wide_factory(seq: usize) -> impl Fn() -> (ParamStore, SeqClassifier) + Sync {
+    // wide enough that per-replica kernels cross MIN_PARALLEL_WORK, so a
+    // replica chunk with a sub-budget > 1 really fans its kernels out
+    move || {
+        let mut store = ParamStore::new();
+        let mut rng = Rng::new(13);
+        let model =
+            SeqClassifier::new(ModelKind::LmuParallel, seq, 1, 8, 16, 2, &mut store, &mut rng);
+        (store, model)
+    }
+}
+
+#[test]
+fn dp_two_replicas_on_eight_threads_bit_exact_and_budgeted() {
+    // The acceptance scenario: a 2-replica data-parallel run on an
+    // 8-thread budget.  Each replica chunk gets a sub-budget of 4 and its
+    // nested kernels dispatch as first-class pool jobs (previously they
+    // serialized), the busy-thread peak must stay within the configured
+    // budget, and the final parameters must be bit-identical to the fully
+    // serial run.
+    let _k = knob_guard();
+    let run = || {
+        let (xs, ys) = dp_toy_data(16, 128, 21);
+        let shards = shard_dataset(xs, ys, 2);
+        let mut opt = Adam::new(1e-2);
+        let cfg = DataParallelConfig {
+            workers: 2,
+            epochs: 4,
+            batch_size: 8,
+            grad_clip: Some(5.0),
+            seed: 0,
+        };
+        DataParallelCoordinator::run(dp_wide_factory(128), shards, &mut opt, &cfg)
+    };
+    exec::set_threads(1);
+    let reference = run();
+    exec::set_threads(8);
+    exec::reset_pool_peak();
+    let got = run();
+    let peak = exec::pool_peak_concurrency();
+    exec::set_threads(1);
+    assert_eq!(reference.steps, got.steps, "step count changed with threads");
+    assert!(reference.steps >= 4, "too few steps to exercise nesting");
+    assert_eq!(reference.final_params.len(), got.final_params.len());
+    for (i, (a, b)) in got.final_params.iter().zip(&reference.final_params).enumerate() {
+        assert!(
+            a.to_bits() == b.to_bits(),
+            "final param {i} differs under nested fan-out: {a} vs {b}"
+        );
+    }
+    assert!(peak >= 2, "replica fan-out never engaged (peak {peak})");
+    assert!(peak <= 8, "thread budget exceeded: peak {peak} busy > 8 configured");
 }
 
 #[test]
