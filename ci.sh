@@ -1,33 +1,152 @@
 #!/usr/bin/env bash
-# Repo CI: build → test → docs → fmt check → perf smoke benches.
-# Mirrors the tier-1 verify (cargo build --release && cargo test -q),
-# gates the rustdoc build (warnings are errors), and smoke-runs the
-# exec-substrate benches so the BENCH_threads.json / BENCH_pool.json
-# perf records stay fresh.
-set -euo pipefail
+# Staged repo CI with named, individually-runnable stages and a pass/fail
+# summary table, so a tier-1 failure is attributable at a glance.
+#
+#   ./ci.sh                 # all stages, in order
+#   ./ci.sh all             # same
+#   ./ci.sh build test      # just those stages
+#
+# Stages (in `all` order):
+#   build        cargo build --release  (the tier-1 build half)
+#   test         cargo test -q          (the tier-1 test half)
+#   lint         cargo clippy --all-targets -- -D warnings  (skipped with a
+#                note when clippy is not installed); cargo fmt stays
+#                report-only so formatting drift never masks test signal
+#   docs         rustdoc build with warnings as errors
+#   determinism  the determinism matrix: the exec-equivalence suite under
+#                PLMU_THREADS in {1, 2, 8}, plus a canonical training-loss
+#                fingerprint (plmu train-dp) diffed byte-for-byte across
+#                the three thread counts
+#   bench        smoke-runs the perf benches and validates every emitted
+#                BENCH_*.json artifact (plmu bench-check): required keys,
+#                sane timings — a bench refactor cannot silently emit an
+#                empty perf record
+set -uo pipefail
 cd "$(dirname "$0")"
 
-echo "== build (release) =="
-cargo build --release
+STAGE_NAMES=()
+STAGE_RESULTS=()
 
-echo "== test =="
-cargo test -q
+# ----------------------------------------------------------------- stages
 
-echo "== docs (rustdoc, warnings as errors) =="
-RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+stage_build() {
+    cargo build --release
+}
 
-echo "== fmt check =="
-if cargo fmt --version >/dev/null 2>&1; then
-    # report-only: formatting drift should not mask build/test signal
-    cargo fmt --all -- --check || echo "fmt check found diffs (non-fatal)"
-else
-    echo "rustfmt not installed; skipping fmt check"
+stage_test() {
+    cargo test -q
+}
+
+stage_lint() {
+    local ok=0
+    if cargo clippy --version >/dev/null 2>&1; then
+        cargo clippy --all-targets -- -D warnings || ok=1
+    else
+        echo "cargo-clippy not installed; skipping clippy (install via rustup component add clippy)"
+    fi
+    if cargo fmt --version >/dev/null 2>&1; then
+        # report-only: formatting drift should not mask build/test signal
+        cargo fmt --all -- --check || echo "fmt check found diffs (non-fatal)"
+    else
+        echo "rustfmt not installed; skipping fmt check"
+    fi
+    return $ok
+}
+
+stage_docs() {
+    RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+}
+
+stage_determinism() {
+    # the exec-equivalence suite must hold under every pool size, and a
+    # canonical training run must produce a byte-identical fingerprint
+    # whether the pool has 1, 2, or 8 threads
+    cargo build --release || return 1
+    local ref_fp="" out fp
+    for t in 1 2 8; do
+        echo "-- determinism: PLMU_THREADS=$t --"
+        PLMU_THREADS=$t cargo test -q --test exec_equivalence || return 1
+        out=$(PLMU_THREADS=$t ./target/release/plmu train-dp \
+            --workers 2 --epochs 1 --examples 32 --side 8 --batch 8) || return 1
+        fp=$(printf '%s\n' "$out" | grep '^train fingerprint:')
+        if [ -z "$fp" ]; then
+            echo "no 'train fingerprint:' line in train-dp output"
+            return 1
+        fi
+        echo "   PLMU_THREADS=$t -> $fp"
+        if [ -z "$ref_fp" ]; then
+            ref_fp="$fp"
+        elif [ "$fp" != "$ref_fp" ]; then
+            echo "DETERMINISM MISMATCH: PLMU_THREADS=$t fingerprint differs from the 1-thread run"
+            echo "  1-thread: $ref_fp"
+            echo "  $t-thread: $fp"
+            return 1
+        fi
+    done
+    echo "fingerprints byte-identical across PLMU_THREADS in {1, 2, 8}"
+}
+
+stage_bench() {
+    cargo build --release || return 1
+    PLMU_BENCH_SMOKE=1 cargo bench --bench fig1_threads || return 1
+    PLMU_BENCH_SMOKE=1 cargo bench --bench pool_crossover || return 1
+    PLMU_BENCH_SMOKE=1 cargo bench --bench coordinator || return 1
+    echo "-- validating perf records --"
+    ./target/release/plmu bench-check \
+        BENCH_threads.json BENCH_pool.json BENCH_coordinator.json
+}
+
+# ----------------------------------------------------------------- driver
+
+run_stage() {
+    local name="$1"
+    echo
+    echo "===== stage: $name ====="
+    local result
+    if "stage_$name"; then
+        result=PASS
+    else
+        result=FAIL
+    fi
+    STAGE_NAMES+=("$name")
+    STAGE_RESULTS+=("$result")
+}
+
+ALL_STAGES=(build test lint docs determinism bench)
+
+requested=("$@")
+if [ ${#requested[@]} -eq 0 ]; then
+    requested=(all)
 fi
 
-echo "== thread-scaling bench (smoke) =="
-PLMU_BENCH_SMOKE=1 cargo bench --bench fig1_threads
+to_run=()
+for arg in "${requested[@]}"; do
+    case "$arg" in
+        all) to_run+=("${ALL_STAGES[@]}") ;;
+        build|test|lint|docs|determinism|bench) to_run+=("$arg") ;;
+        *)
+            echo "unknown stage '$arg' (stages: ${ALL_STAGES[*]} | all)" >&2
+            exit 2
+            ;;
+    esac
+done
 
-echo "== scheduler bench: crossover + ragged + nested sub-budget (smoke) =="
-PLMU_BENCH_SMOKE=1 cargo bench --bench pool_crossover
+for s in "${to_run[@]}"; do
+    run_stage "$s"
+done
 
-echo "== ci OK =="
+echo
+echo "===== CI summary ====="
+fail=0
+for i in "${!STAGE_NAMES[@]}"; do
+    printf '  %-12s %s\n' "${STAGE_NAMES[$i]}" "${STAGE_RESULTS[$i]}"
+    if [ "${STAGE_RESULTS[$i]}" != PASS ]; then
+        fail=1
+    fi
+done
+if [ "$fail" -ne 0 ]; then
+    echo "CI FAILED"
+else
+    echo "ci OK"
+fi
+exit "$fail"

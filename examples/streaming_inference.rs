@@ -106,7 +106,7 @@ fn main() -> Result<()> {
     // The PJRT client is not Send, so the engine is constructed INSIDE the
     // batcher thread via with_factories.
     if std::path::Path::new("artifacts/manifest.txt").exists() {
-        let factory: Box<dyn FnOnce() -> Box<dyn StreamingEngine> + Send> = Box::new(|| {
+        let factory: plmu::coordinator::server::EngineFactory = Box::new(|| {
             Box::new(PjrtStreamingEngine::new(std::path::Path::new("artifacts")).unwrap())
         });
         let server = StreamingServer::with_factories(vec![factory], ServerConfig::default());

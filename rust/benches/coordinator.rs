@@ -1,11 +1,27 @@
-//! Coordinator benches: (a) streaming-server throughput vs batching
-//! window, (b) data-parallel scaling across worker threads.
+//! Coordinator benches, recorded to `BENCH_coordinator.json`:
+//!
+//!  1. **Pipelined vs synchronous data-parallel training** — the same
+//!     workload run with `pipeline` off (bulk-synchronous: every step
+//!     barriers on the all-reduce) and on (staleness-1: the optimizer
+//!     stage of step k overlaps batch k+1's replica forward/backward as
+//!     an async pool job), across ≥ 2 replica counts.  The pipelined
+//!     run is asserted reproducible (two runs bit-identical) before it
+//!     is timed.
+//!  2. **Streaming-server throughput vs batching window** — the dynamic
+//!     batcher's latency/throughput trade-off, with the batch-pipelining
+//!     knob exercised at the widest window.
+//!
+//! Run: cargo bench --bench coordinator
+//! Smoke mode (CI): PLMU_BENCH_SMOKE=1 cargo bench --bench coordinator
 
 use plmu::autograd::ParamStore;
-use plmu::benchlib::Table;
-use plmu::coordinator::data_parallel::{shard_dataset, DataParallelConfig, DataParallelCoordinator};
+use plmu::benchlib::{repo_root, JsonValue, PerfJson, Table};
+use plmu::coordinator::data_parallel::{
+    shard_dataset, DataParallelConfig, DataParallelCoordinator,
+};
 use plmu::coordinator::{NativeStreamingEngine, ServerConfig, StreamingServer};
 use plmu::data::PsMnist;
+use plmu::exec;
 use plmu::layers::lmu::{LmuParallelLayer, LmuSpec};
 use plmu::optim::Adam;
 use plmu::train::{ModelKind, SeqClassifier};
@@ -13,20 +29,132 @@ use plmu::util::{Rng, Timer};
 use std::time::Duration;
 
 fn main() {
-    // ---------------- streaming server ---------------------------------
-    println!("=== streaming server: throughput vs batch window ===");
+    let smoke = std::env::var("PLMU_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let threads = hw.min(8);
+    let mut record = PerfJson::new("coordinator");
+
+    // ------------------- 1. pipelined vs synchronous data parallelism --
+    let side = if smoke { 8usize } else { 14 };
+    let examples = if smoke { 64usize } else { 384 };
+    let epochs = if smoke { 1usize } else { 2 };
+    let (d, hidden) = if smoke { (8usize, 16usize) } else { (32, 64) };
+    let seq = side * side;
+    let task = PsMnist::new(side, 10, 0);
+    exec::set_threads(threads);
+    println!(
+        "=== data-parallel: pipelined vs synchronous ({threads} threads on {hw} hw{}) ===",
+        if smoke { ", smoke" } else { "" }
+    );
+    let mut table =
+        Table::new(&["replicas", "mode", "steps", "wall s", "steps/s", "pipeline speedup"]);
+    for replicas in [2usize, 4] {
+        let mut sync_wall: Option<f64> = None;
+        for pipeline in [false, true] {
+            let factory = move || {
+                let mut store = ParamStore::new();
+                let mut r = Rng::new(42);
+                let model = SeqClassifier::new(
+                    ModelKind::LmuParallel,
+                    seq,
+                    1,
+                    d,
+                    hidden,
+                    10,
+                    &mut store,
+                    &mut r,
+                );
+                (store, model)
+            };
+            let cfg = DataParallelConfig {
+                workers: replicas,
+                epochs,
+                batch_size: 16,
+                grad_clip: None,
+                seed: 0,
+                pipeline,
+            };
+            let run = || {
+                let (xs, ys) = task.dataset(examples, 1);
+                let shards = shard_dataset(xs, ys, replicas);
+                let mut opt = Adam::new(1e-3);
+                DataParallelCoordinator::run(factory, shards, &mut opt, &cfg)
+            };
+            if pipeline {
+                // reproducibility gate before timing: two pipelined runs
+                // must agree bit-for-bit
+                let a = run();
+                let b = run();
+                assert_eq!(a.final_params.len(), b.final_params.len());
+                for (i, (x, y)) in a.final_params.iter().zip(&b.final_params).enumerate() {
+                    assert!(
+                        x.to_bits() == y.to_bits(),
+                        "pipelined run not reproducible (replicas={replicas}, param {i})"
+                    );
+                }
+            }
+            let t = Timer::start();
+            let res = run();
+            let wall = t.elapsed();
+            let mode = if pipeline { "pipelined" } else { "sync" };
+            let speedup = match (pipeline, sync_wall) {
+                (true, Some(s)) => s / wall,
+                _ => {
+                    sync_wall = Some(wall);
+                    1.0
+                }
+            };
+            table.row(&[
+                replicas.to_string(),
+                mode.to_string(),
+                res.steps.to_string(),
+                format!("{wall:.2}"),
+                format!("{:.1}", res.steps as f64 / wall),
+                format!("{speedup:.2}x"),
+            ]);
+            record.push(&[
+                ("case", JsonValue::Str(format!("dp_{mode}"))),
+                ("threads", JsonValue::Int(threads as i64)),
+                ("wall_ns", JsonValue::Int((wall * 1e9) as i64)),
+                ("replicas", JsonValue::Int(replicas as i64)),
+                ("steps", JsonValue::Int(res.steps as i64)),
+                ("steps_per_s", JsonValue::Num(res.steps as f64 / wall)),
+                ("pipeline", JsonValue::Bool(pipeline)),
+                ("pipeline_speedup", JsonValue::Num(speedup)),
+                ("smoke", JsonValue::Bool(smoke)),
+                ("hw_threads", JsonValue::Int(hw as i64)),
+            ]);
+        }
+    }
+    table.print("data-parallel training — pipelined vs synchronous");
+
+    // ------------------- 2. streaming server: throughput vs window ------
+    println!("\n=== streaming server: throughput vs batch window ===");
     let mut rng = Rng::new(0);
     let mut store = ParamStore::new();
     let spec = LmuSpec::new(1, 1, 32, 64.0, 32);
     let layer = LmuParallelLayer::new(spec.clone(), 64, &mut store, &mut rng, "b");
-    let mut table = Table::new(&["window (us)", "max batch", "tokens/s", "mean latency (us)", "mean batch"]);
-    for (window_us, max_batch) in [(0u64, 1usize), (200, 8), (500, 32), (2000, 64)] {
+    let mut table = Table::new(&[
+        "window (us)",
+        "max batch",
+        "pipelined",
+        "tokens/s",
+        "mean latency (us)",
+        "mean batch",
+    ]);
+    let (sessions, tokens) = if smoke { (4u64, 60usize) } else { (8, 300) };
+    for (window_us, max_batch, pipeline) in
+        [(0u64, 1usize, false), (200, 8, false), (500, 32, false), (2000, 64, false), (2000, 64, true)]
+    {
         let server = StreamingServer::new(
             1,
-            ServerConfig { max_batch, window: Duration::from_micros(window_us) },
+            ServerConfig {
+                max_batch,
+                window: Duration::from_micros(window_us),
+                pipeline,
+            },
             || Box::new(NativeStreamingEngine::from_store(&spec, &layer.params, &store)),
         );
-        let (sessions, tokens) = (8u64, 300usize);
         let t = Timer::start();
         std::thread::scope(|scope| {
             for sid in 0..sessions {
@@ -40,52 +168,35 @@ fn main() {
         });
         let wall = t.elapsed();
         let total = server.router.total_requests();
-        let b0 = &server.router;
-        let _ = b0;
         let m = server.router.metrics_of(0);
         table.row(&[
             window_us.to_string(),
             max_batch.to_string(),
+            pipeline.to_string(),
             format!("{:.0}", total as f64 / wall),
             format!("{:.0}", m.mean_latency_us()),
             format!("{:.2}", m.mean_batch_size()),
         ]);
-    }
-    table.print("streaming throughput/latency trade-off");
-
-    // ---------------- data-parallel scaling -----------------------------
-    println!("\n=== data-parallel training scaling ===");
-    let side = 14usize;
-    let task = PsMnist::new(side, 10, 0);
-    let mut table = Table::new(&["workers", "sync steps", "wall s", "worker-batches/s", "speedup"]);
-    let mut base: Option<f64> = None;
-    for workers in [1usize, 2, 4] {
-        let (xs, ys) = task.dataset(384, 1);
-        let shards = shard_dataset(xs, ys, workers);
-        let seq = side * side;
-        let factory = move || {
-            let mut store = ParamStore::new();
-            let mut r = Rng::new(42);
-            let model = SeqClassifier::new(ModelKind::LmuParallel, seq, 1, 32, 64, 10, &mut store, &mut r);
-            (store, model)
-        };
-        let mut opt = Adam::new(1e-3);
-        let cfg = DataParallelConfig { workers, epochs: 2, batch_size: 16, grad_clip: None, seed: 0 };
-        let t = Timer::start();
-        let res = DataParallelCoordinator::run(factory, shards, &mut opt, &cfg);
-        let wall = t.elapsed();
-        // per sync step each worker processes one batch: samples/s scales
-        let sps = res.steps as f64 / wall * workers as f64; // worker-batches per second
-        if base.is_none() {
-            base = Some(sps);
-        }
-        table.row(&[
-            workers.to_string(),
-            res.steps.to_string(),
-            format!("{wall:.2}"),
-            format!("{sps:.1}"),
-            format!("{:.2}x", sps / base.unwrap()),
+        record.push(&[
+            ("case", JsonValue::Str("serving".into())),
+            ("threads", JsonValue::Int(threads as i64)),
+            ("wall_ns", JsonValue::Int((wall * 1e9) as i64)),
+            ("window_us", JsonValue::Int(window_us as i64)),
+            ("max_batch", JsonValue::Int(max_batch as i64)),
+            ("pipeline", JsonValue::Bool(pipeline)),
+            ("tokens_per_s", JsonValue::Num(total as f64 / wall)),
+            ("mean_latency_us", JsonValue::Num(m.mean_latency_us())),
+            ("mean_batch", JsonValue::Num(m.mean_batch_size())),
+            ("smoke", JsonValue::Bool(smoke)),
+            ("hw_threads", JsonValue::Int(hw as i64)),
         ]);
     }
-    table.print("data-parallel scaling (worker-batches/s)");
+    table.print("streaming throughput/latency trade-off");
+    exec::set_threads(1);
+
+    let out = repo_root().join("BENCH_coordinator.json");
+    match record.write(&out) {
+        Ok(()) => println!("\nwrote {} ({} records)", out.display(), record.len()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", out.display()),
+    }
 }

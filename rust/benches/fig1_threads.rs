@@ -12,29 +12,12 @@
 //! Run: cargo bench --bench fig1_threads
 //! Smoke mode (CI): PLMU_BENCH_SMOKE=1 cargo bench --bench fig1_threads
 
-use plmu::benchlib::{bench, BenchConfig, JsonValue, PerfJson, Table};
+use plmu::benchlib::{bench, repo_root, BenchConfig, JsonValue, PerfJson, Table};
 use plmu::dn::{DelayNetwork, DnFftOperator};
 use plmu::exec;
 use plmu::fft::{next_pow2, RfftCache};
 use plmu::util::Rng;
 use plmu::Tensor;
-
-/// Walk up from cwd looking for the repo root (ROADMAP.md marker); the
-/// bench process runs with cwd = the crate dir (rust/), the trajectory
-/// file belongs at the repo root.
-fn repo_root() -> std::path::PathBuf {
-    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
-    for _ in 0..5 {
-        if dir.join("ROADMAP.md").exists() {
-            return dir;
-        }
-        match dir.parent() {
-            Some(p) => dir = p.to_path_buf(),
-            None => break,
-        }
-    }
-    std::env::current_dir().unwrap_or_else(|_| ".".into())
-}
 
 fn checksum(xs: &[f32]) -> u64 {
     // order-sensitive bit-level fingerprint: equal iff bit-identical
@@ -188,6 +171,7 @@ fn main() {
             record.push(&[
                 ("case", JsonValue::Str(case.name.to_string())),
                 ("threads", JsonValue::Int(t as i64)),
+                ("wall_ns", JsonValue::Int((stats.mean * 1e9) as i64)),
                 ("mean_s", JsonValue::Num(stats.mean)),
                 ("p50_s", JsonValue::Num(stats.p50)),
                 ("items_per_s", JsonValue::Num(case.items / stats.mean)),

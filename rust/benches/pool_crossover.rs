@@ -24,25 +24,10 @@
 //! Run: cargo bench --bench pool_crossover
 //! Smoke mode (CI): PLMU_BENCH_SMOKE=1 cargo bench --bench pool_crossover
 
-use plmu::benchlib::{bench, BenchConfig, JsonValue, PerfJson, Table};
+use plmu::benchlib::{bench, repo_root, BenchConfig, JsonValue, PerfJson, Table};
 use plmu::exec::{self, Plan};
 use plmu::util::Rng;
 use plmu::Tensor;
-
-/// Walk up from cwd looking for the repo root (ROADMAP.md marker).
-fn repo_root() -> std::path::PathBuf {
-    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
-    for _ in 0..5 {
-        if dir.join("ROADMAP.md").exists() {
-            return dir;
-        }
-        match dir.parent() {
-            Some(p) => dir = p.to_path_buf(),
-            None => break,
-        }
-    }
-    std::env::current_dir().unwrap_or_else(|_| ".".into())
-}
 
 fn checksum(xs: &[f32]) -> u64 {
     // order-sensitive bit-level fingerprint: equal iff bit-identical
@@ -241,6 +226,8 @@ fn main() {
         ]);
         record.push(&[
             ("case", JsonValue::Str("small_matmul".into())),
+            ("threads", JsonValue::Int(t as i64)),
+            ("wall_ns", JsonValue::Int((s_steal.mean * 1e9) as i64)),
             ("work", JsonValue::Int(work as i64)),
             ("m", JsonValue::Int(m as i64)),
             ("k", JsonValue::Int(k as i64)),
@@ -261,6 +248,8 @@ fn main() {
     // summary: the crossover points (smallest job where parallel wins)
     record.push(&[
         ("case", JsonValue::Str("crossover".into())),
+        ("threads", JsonValue::Int(t as i64)),
+        ("wall_ns", JsonValue::Int(0)),
         ("pool_crossover_work", JsonValue::Int(steal_crossover.map(|w| w as i64).unwrap_or(-1))),
         (
             "scoped_crossover_work",
@@ -341,6 +330,8 @@ fn main() {
     );
     record.push(&[
         ("case", JsonValue::Str("ragged".into())),
+        ("threads", JsonValue::Int(t as i64)),
+        ("wall_ns", JsonValue::Int((rg_steal.mean * 1e9) as i64)),
         ("rows", JsonValue::Int(rag_rows as i64)),
         ("k", JsonValue::Int(rag_k as i64)),
         ("n", JsonValue::Int(rag_n as i64)),
@@ -395,6 +386,7 @@ fn main() {
     );
     record.push(&[
         ("case", JsonValue::Str("nested".into())),
+        ("wall_ns", JsonValue::Int((ns_new.mean * 1e9) as i64)),
         ("replicas", JsonValue::Int(2)),
         ("m", JsonValue::Int(nm as i64)),
         ("k", JsonValue::Int(nk as i64)),

@@ -58,10 +58,19 @@ impl ParamStore {
     /// Flatten all parameters into one vector (checkpointing).
     pub fn pack(&self) -> Vec<f32> {
         let mut out = Vec::with_capacity(self.num_scalars());
+        self.pack_into(&mut out);
+        out
+    }
+
+    /// Flatten all parameters into an existing arena, reusing its
+    /// allocation — the pipelined coordinator's double-buffered broadcast
+    /// repacks every step, so the buffers must not churn the allocator.
+    pub fn pack_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(self.num_scalars());
         for t in &self.tensors {
             out.extend_from_slice(t.data());
         }
-        out
     }
 
     /// Restore from a packed vector (must match the current layout).

@@ -51,6 +51,25 @@ impl BenchConfig {
     }
 }
 
+/// Walk up from the current directory looking for the repo root (the
+/// ROADMAP.md marker).  Bench binaries run with cwd = the crate dir
+/// (`rust/`), but the `BENCH_*.json` perf trajectory files they emit
+/// belong at the repo root; falls back to the cwd when no marker is
+/// found within a few levels.
+pub fn repo_root() -> std::path::PathBuf {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    for _ in 0..5 {
+        if dir.join("ROADMAP.md").exists() {
+            return dir;
+        }
+        match dir.parent() {
+            Some(p) => dir = p.to_path_buf(),
+            None => break,
+        }
+    }
+    std::env::current_dir().unwrap_or_else(|_| ".".into())
+}
+
 /// Time a closure under the given config and return robust statistics.
 pub fn bench<F: FnMut()>(name: &str, cfg: BenchConfig, mut f: F) -> Stats {
     // warmup + calibration
@@ -233,6 +252,319 @@ impl PerfJson {
     }
 }
 
+// ------------------------------------------------------ perf JSON reading
+
+/// A parsed JSON value — the reading half of the perf-record story (the
+/// writer is [`PerfJson`]; both exist because serde is not in the
+/// offline vendor set).  Only what perf records need: objects keep
+/// insertion order, numbers are f64.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Look a key up in an object (first occurrence).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+struct JsonParser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl JsonParser<'_> {
+    fn err(&self, msg: &str) -> String {
+        format!("json parse error at byte {}: {msg}", self.pos)
+    }
+
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.skip_ws();
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        match self.peek() {
+            Some(c) if c == b => {
+                self.pos += 1;
+                Ok(())
+            }
+            other => Err(self.err(&format!(
+                "expected {:?}, found {:?}",
+                b as char,
+                other.map(|c| c as char)
+            ))),
+        }
+    }
+
+    fn literal(&mut self, word: &str, value: Json) -> Result<Json, String> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(value)
+        } else {
+            Err(self.err(&format!("expected {word}")))
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(&b) = self.bytes.get(self.pos) else {
+                return Err(self.err("unterminated string"));
+            };
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(&esc) = self.bytes.get(self.pos) else {
+                        return Err(self.err("dangling escape"));
+                    };
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let hex = self
+                                .bytes
+                                .get(self.pos..self.pos + 4)
+                                .ok_or_else(|| self.err("truncated \\u escape"))?;
+                            let hex = std::str::from_utf8(hex)
+                                .map_err(|_| self.err("non-ascii \\u escape"))?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            self.pos += 4;
+                            // surrogate pairs don't appear in our own
+                            // writer's output; map lone surrogates to
+                            // the replacement character
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        other => {
+                            return Err(self.err(&format!("bad escape \\{}", other as char)))
+                        }
+                    }
+                }
+                _ => {
+                    // collect the full UTF-8 sequence starting at b
+                    let start = self.pos - 1;
+                    let mut end = self.pos;
+                    while end < self.bytes.len() && self.bytes[end] & 0xC0 == 0x80 {
+                        end += 1;
+                    }
+                    let s = std::str::from_utf8(&self.bytes[start..end])
+                        .map_err(|_| self.err("invalid utf-8 in string"))?;
+                    out.push_str(s);
+                    self.pos = end;
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        while self
+            .bytes
+            .get(self.pos)
+            .is_some_and(|b| b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E'))
+        {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap_or("");
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| self.err(&format!("bad number {text:?}")))
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            Some(b'{') => {
+                self.pos += 1;
+                let mut fields = Vec::new();
+                if self.peek() == Some(b'}') {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                loop {
+                    self.skip_ws();
+                    let key = self.string()?;
+                    self.expect(b':')?;
+                    fields.push((key, self.value()?));
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b'}') => {
+                            self.pos += 1;
+                            return Ok(Json::Obj(fields));
+                        }
+                        _ => return Err(self.err("expected ',' or '}' in object")),
+                    }
+                }
+            }
+            Some(b'[') => {
+                self.pos += 1;
+                let mut items = Vec::new();
+                if self.peek() == Some(b']') {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                loop {
+                    items.push(self.value()?);
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b']') => {
+                            self.pos += 1;
+                            return Ok(Json::Arr(items));
+                        }
+                        _ => return Err(self.err("expected ',' or ']' in array")),
+                    }
+                }
+            }
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(_) => self.number(),
+            None => Err(self.err("unexpected end of input")),
+        }
+    }
+}
+
+/// Parse a JSON document (sufficient for perf records; no streaming, no
+/// surrogate-pair pedantry).
+pub fn parse_json(text: &str) -> Result<Json, String> {
+    let mut p = JsonParser { bytes: text.as_bytes(), pos: 0 };
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(p.err("trailing garbage after document"));
+    }
+    Ok(v)
+}
+
+/// What [`validate_perf_json`] reports for a valid perf record.
+#[derive(Debug)]
+pub struct PerfSummary {
+    /// the record's `bench` name
+    pub bench: String,
+    /// number of records in the file
+    pub records: usize,
+}
+
+fn timing_field(key: &str) -> bool {
+    key.ends_with("_s") || key.ends_with("_ns") || key.ends_with("_us") || key.ends_with("_ms")
+}
+
+/// Validate a `BENCH_*.json` perf record, the CI bench stage's gate: a
+/// refactored bench that silently emits an empty or malformed perf
+/// record fails here instead of landing.
+///
+/// Rules:
+///  * top level is an object with a string `bench` and a non-empty
+///    `records` array of flat objects;
+///  * every record carries `case` (string), `threads` (integer >= 1),
+///    and `wall_ns` (number >= 0) — the minimal schema every perf
+///    trajectory consumer can rely on;
+///  * every timing field (`*_s` / `*_ms` / `*_us` / `*_ns`, including
+///    `wall_ns`) is finite and non-negative;
+///  * where a record carries percentile timings of one unit
+///    (`min_*`/`p50_*`/`p95_*`/`max_*`), they are monotone
+///    non-decreasing.
+pub fn validate_perf_json(text: &str) -> Result<PerfSummary, String> {
+    let doc = parse_json(text)?;
+    let bench = doc
+        .get("bench")
+        .and_then(Json::as_str)
+        .ok_or("missing or non-string \"bench\" key")?
+        .to_string();
+    let Some(Json::Arr(records)) = doc.get("records") else {
+        return Err("missing \"records\" array".into());
+    };
+    if records.is_empty() {
+        return Err("\"records\" is empty — the bench produced no perf data".into());
+    }
+    for (i, rec) in records.iter().enumerate() {
+        let Json::Obj(fields) = rec else {
+            return Err(format!("record {i} is not an object"));
+        };
+        rec.get("case")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("record {i}: missing or non-string \"case\""))?;
+        let threads = rec
+            .get("threads")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("record {i}: missing or non-numeric \"threads\""))?;
+        if threads < 1.0 || threads.fract() != 0.0 {
+            return Err(format!("record {i}: \"threads\" = {threads} is not a positive integer"));
+        }
+        rec.get("wall_ns")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("record {i}: missing or non-numeric \"wall_ns\""))?;
+        for (key, value) in fields {
+            if timing_field(key) {
+                let v = value
+                    .as_f64()
+                    .ok_or_else(|| format!("record {i}: timing field {key:?} is not a number"))?;
+                if !v.is_finite() || v < 0.0 {
+                    return Err(format!(
+                        "record {i}: timing field {key:?} = {v} is not finite and non-negative"
+                    ));
+                }
+            }
+        }
+        // percentile monotonicity per unit suffix
+        for suffix in ["_s", "_ms", "_us", "_ns"] {
+            let stat = |name: &str| {
+                rec.get(&format!("{name}{suffix}")).and_then(Json::as_f64)
+            };
+            let present: Vec<f64> = ["min", "p50", "p95", "max"]
+                .iter()
+                .filter_map(|n| stat(n))
+                .collect();
+            if present.windows(2).any(|w| w[0] > w[1]) {
+                return Err(format!(
+                    "record {i}: min/p50/p95/max{suffix} timings are not monotone: {present:?}"
+                ));
+            }
+        }
+    }
+    Ok(PerfSummary { bench, records: records.len() })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -312,6 +644,113 @@ mod tests {
         // balanced braces/brackets as a cheap well-formedness check
         assert_eq!(s.matches('{').count(), s.matches('}').count());
         assert_eq!(s.matches('[').count(), s.matches(']').count());
+    }
+
+    fn valid_doc() -> PerfJson {
+        let mut p = PerfJson::new("demo");
+        p.push(&[
+            ("case", JsonValue::Str("matmul".into())),
+            ("threads", JsonValue::Int(4)),
+            ("wall_ns", JsonValue::Int(12_500)),
+            ("mean_s", JsonValue::Num(1.25e-5)),
+            ("p50_s", JsonValue::Num(1.2e-5)),
+            ("p95_s", JsonValue::Num(1.4e-5)),
+            ("smoke", JsonValue::Bool(true)),
+        ]);
+        p
+    }
+
+    #[test]
+    fn parse_json_roundtrips_writer_output() {
+        let doc = parse_json(&valid_doc().render()).expect("writer output must parse");
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("demo"));
+        let Some(Json::Arr(recs)) = doc.get("records") else {
+            panic!("records array missing");
+        };
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].get("threads").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(recs[0].get("case").and_then(Json::as_str), Some("matmul"));
+    }
+
+    #[test]
+    fn parse_json_handles_escapes_and_nesting() {
+        let doc = parse_json(
+            r#"{"a": "x\"y\nA", "b": [1, -2.5, true, null], "c": {"d": []}}"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("a").and_then(Json::as_str), Some("x\"y\nA"));
+        let Some(Json::Arr(b)) = doc.get("b") else { panic!() };
+        assert_eq!(b[0].as_f64(), Some(1.0));
+        assert_eq!(b[1].as_f64(), Some(-2.5));
+        assert_eq!(b[2], Json::Bool(true));
+        assert_eq!(b[3], Json::Null);
+        assert!(parse_json("{\"a\": 1} trailing").is_err());
+        assert!(parse_json("{\"a\": }").is_err());
+    }
+
+    #[test]
+    fn validate_accepts_well_formed_record() {
+        let s = valid_doc().render();
+        let summary = validate_perf_json(&s).expect("valid record rejected");
+        assert_eq!(summary.bench, "demo");
+        assert_eq!(summary.records, 1);
+    }
+
+    #[test]
+    fn validate_rejects_missing_required_keys() {
+        for missing in ["case", "threads", "wall_ns"] {
+            let mut p = PerfJson::new("demo");
+            let fields: Vec<(&str, JsonValue)> = [
+                ("case", JsonValue::Str("x".into())),
+                ("threads", JsonValue::Int(1)),
+                ("wall_ns", JsonValue::Int(5)),
+            ]
+            .into_iter()
+            .filter(|(k, _)| *k != missing)
+            .collect();
+            p.push(&fields);
+            let err = validate_perf_json(&p.render()).unwrap_err();
+            assert!(err.contains(missing), "error {err:?} should name {missing}");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_empty_and_malformed_records() {
+        let empty = PerfJson::new("demo").render();
+        assert!(validate_perf_json(&empty).unwrap_err().contains("empty"));
+        assert!(validate_perf_json("not json at all").is_err());
+        assert!(validate_perf_json("{\"records\": []}").is_err(), "bench key required");
+    }
+
+    #[test]
+    fn validate_rejects_bad_timings() {
+        // negative timing
+        let mut p = PerfJson::new("demo");
+        p.push(&[
+            ("case", JsonValue::Str("x".into())),
+            ("threads", JsonValue::Int(2)),
+            ("wall_ns", JsonValue::Int(-1)),
+        ]);
+        assert!(validate_perf_json(&p.render()).is_err());
+        // non-integer thread count
+        let mut p = PerfJson::new("demo");
+        p.push(&[
+            ("case", JsonValue::Str("x".into())),
+            ("threads", JsonValue::Num(1.5)),
+            ("wall_ns", JsonValue::Int(1)),
+        ]);
+        assert!(validate_perf_json(&p.render()).is_err());
+        // non-monotone percentiles
+        let mut p = PerfJson::new("demo");
+        p.push(&[
+            ("case", JsonValue::Str("x".into())),
+            ("threads", JsonValue::Int(2)),
+            ("wall_ns", JsonValue::Int(1)),
+            ("p50_s", JsonValue::Num(2.0)),
+            ("p95_s", JsonValue::Num(1.0)),
+        ]);
+        let err = validate_perf_json(&p.render()).unwrap_err();
+        assert!(err.contains("monotone"), "{err}");
     }
 
     #[test]

@@ -212,6 +212,11 @@ pub struct TrainConfig {
     pub log_every: usize,
     pub workers: usize,
     pub threads: usize,
+    /// `train-dp`: overlap the optimizer stage with the next batch's
+    /// replica forward/backward (staleness-1 pipeline, double-buffered
+    /// broadcast).  Off keeps the bulk-synchronous, bit-reproducible
+    /// reference path.
+    pub pipeline: bool,
 }
 
 impl Default for TrainConfig {
@@ -227,6 +232,7 @@ impl Default for TrainConfig {
             log_every: 50,
             workers: 1,
             threads: 0,
+            pipeline: false,
         }
     }
 }
@@ -252,6 +258,7 @@ impl TrainConfig {
             log_every: c.usize_or(&k("log_every"), d.log_every),
             workers: c.usize_or(&k("workers"), d.workers),
             threads: c.usize_or(&k("threads"), d.threads),
+            pipeline: c.bool_or(&k("pipeline"), d.pipeline),
         }
     }
 
@@ -339,6 +346,14 @@ theta = 784.0
         let c = Config::parse("[train]\nthreads = 4").unwrap();
         let t = TrainConfig::from_config(&c, "train");
         assert_eq!(t.threads, 4);
+        assert!(!t.pipeline, "pipeline must default off");
+    }
+
+    #[test]
+    fn pipeline_knob_parses() {
+        let c = Config::parse("[train]\npipeline = true").unwrap();
+        let t = TrainConfig::from_config(&c, "train");
+        assert!(t.pipeline);
     }
 
     #[test]

@@ -117,11 +117,28 @@ pub struct DataParallelConfig {
     pub grad_clip: Option<f32>,
     /// base RNG seed; replica `w` shuffles with `seed ^ hash(w)`
     pub seed: u64,
+    /// Overlap the optimizer stage of step `k` (pack → all-reduce →
+    /// apply → broadcast) with batch `k+1`'s replica forward/backward.
+    /// Batch `k+1` then reads the parameters batch `k` read — the
+    /// classic staleness-1 pipeline of Martin & Cundy (2018) — through a
+    /// double-buffered broadcast arena, so no replica ever observes a
+    /// half-updated model.  Off (the default) keeps the bulk-synchronous
+    /// path, bit-identical to previous releases; on, runs are
+    /// deterministic given this knob (two pipelined runs are
+    /// bit-identical to each other at every thread count).
+    pub pipeline: bool,
 }
 
 impl Default for DataParallelConfig {
     fn default() -> Self {
-        DataParallelConfig { workers: 2, epochs: 1, batch_size: 16, grad_clip: None, seed: 0 }
+        DataParallelConfig {
+            workers: 2,
+            epochs: 1,
+            batch_size: 16,
+            grad_clip: None,
+            seed: 0,
+            pipeline: false,
+        }
     }
 }
 
@@ -241,61 +258,247 @@ impl DataParallelCoordinator {
             })
             .collect();
 
-        let mut step_losses = Vec::new();
-        let mut steps = 0usize;
-        loop {
-            // stage one batch per replica that still has data, then fan
-            // out over the *live* replicas only — with uneven shards the
-            // exhausted ones would otherwise hog chunk slots and cluster
-            // the remaining work onto fewer threads
-            for r in replicas.iter_mut() {
-                r.pull_batch();
-            }
-            let mut live: Vec<&mut Replica<M>> =
-                replicas.iter_mut().filter(|r| r.pending.is_some()).collect();
-            if live.is_empty() {
-                break;
-            }
-            let live_n = live.len();
-            // broadcast: every replica reads the same packed parameters
-            let packed = canon_store.pack();
-            // replica fan-out: one pool job whose worker count is capped
-            // at the thread budget.  With R < threads live replicas each
-            // chunk inherits a `threads / R` sub-budget and the kernels
-            // inside fan out as nested pool jobs; with R >= threads the
-            // sub-budget is 1 and kernels serialize.  One steal-chunk per
-            // replica, so replicas that finish early free their thread to
-            // the stragglers' nested kernels.
-            let plan = exec::plan_for(live_n, usize::MAX);
-            exec::parallel_rows_mut(&mut live, 1, plan, |_, block| {
-                for r in block.iter_mut() {
-                    r.step(&packed);
-                }
-            });
-            drop(live);
-            // gather + deterministic all-reduce (replica order)
-            let parts: Vec<&[f32]> = replicas
-                .iter()
-                .filter_map(|r| r.out.as_ref().map(|(_, g)| g.as_slice()))
-                .collect();
-            let loss_sum: f32 =
-                replicas.iter().filter_map(|r| r.out.as_ref().map(|(l, _)| *l)).sum();
-            let got = parts.len();
-            debug_assert_eq!(got, live_n, "every staged replica must produce gradients");
-            let avg = allreduce_mean(&parts);
-            let mut grads = unpack_grads(&canon_store, &avg);
-            if let Some(c) = cfg.grad_clip {
-                clip_global_norm(&mut grads, c);
-            }
-            opt.step(&mut canon_store, &grads);
-            step_losses.push(loss_sum / got as f32);
-            steps += 1;
-            for r in replicas.iter_mut() {
-                r.out = None;
-            }
+        if cfg.pipeline {
+            run_pipelined(&mut canon_store, &mut replicas, opt, cfg)
+        } else {
+            run_sync(&mut canon_store, &mut replicas, opt, cfg)
         }
-        DataParallelResult { step_losses, final_params: canon_store.pack(), steps }
     }
+}
+
+/// The bulk-synchronous step loop (see the module docs for the step
+/// anatomy) — every step barriers on the all-reduce before the next
+/// batch starts.  This is the reference semantics: final parameters are
+/// bit-identical at every thread count.
+fn run_sync<M: TrainableModel + Send>(
+    canon_store: &mut ParamStore,
+    replicas: &mut [Replica<M>],
+    opt: &mut dyn Optimizer,
+    cfg: &DataParallelConfig,
+) -> DataParallelResult {
+    let mut step_losses = Vec::new();
+    let mut steps = 0usize;
+    loop {
+        // stage one batch per replica that still has data, then fan
+        // out over the *live* replicas only — with uneven shards the
+        // exhausted ones would otherwise hog chunk slots and cluster
+        // the remaining work onto fewer threads
+        for r in replicas.iter_mut() {
+            r.pull_batch();
+        }
+        let mut live: Vec<&mut Replica<M>> =
+            replicas.iter_mut().filter(|r| r.pending.is_some()).collect();
+        if live.is_empty() {
+            break;
+        }
+        let live_n = live.len();
+        // broadcast: every replica reads the same packed parameters
+        let packed = canon_store.pack();
+        // replica fan-out: one pool job whose worker count is capped
+        // at the thread budget.  With R < threads live replicas each
+        // chunk inherits a `threads / R` sub-budget and the kernels
+        // inside fan out as nested pool jobs; with R >= threads the
+        // sub-budget is 1 and kernels serialize.  One steal-chunk per
+        // replica, so replicas that finish early free their thread to
+        // the stragglers' nested kernels.
+        let plan = exec::plan_for(live_n, usize::MAX);
+        exec::parallel_rows_mut(&mut live, 1, plan, |_, block| {
+            for r in block.iter_mut() {
+                r.step(&packed);
+            }
+        });
+        drop(live);
+        // gather + deterministic all-reduce (replica order)
+        let parts: Vec<&[f32]> = replicas
+            .iter()
+            .filter_map(|r| r.out.as_ref().map(|(_, g)| g.as_slice()))
+            .collect();
+        let loss_sum: f32 =
+            replicas.iter().filter_map(|r| r.out.as_ref().map(|(l, _)| *l)).sum();
+        let got = parts.len();
+        debug_assert_eq!(got, live_n, "every staged replica must produce gradients");
+        let avg = allreduce_mean(&parts);
+        let mut grads = unpack_grads(canon_store, &avg);
+        if let Some(c) = cfg.grad_clip {
+            clip_global_norm(&mut grads, c);
+        }
+        opt.step(canon_store, &grads);
+        step_losses.push(loss_sum / got as f32);
+        steps += 1;
+        for r in replicas.iter_mut() {
+            r.out = None;
+        }
+    }
+    DataParallelResult { step_losses, final_params: canon_store.pack(), steps }
+}
+
+/// The staleness-1 pipelined step loop: while the coordinator consumes
+/// batch `k`'s gradients (all-reduce → clip → Adam → pack), the replicas
+/// are already running batch `k+1`'s forward/backward as an **async pool
+/// job** against the parameter snapshot batch `k` read.
+///
+/// ```text
+///   arena A = θ_k   ──read──►  async replica job (batch k+1)
+///   arena B         ◄─write──  optimizer stage   (batch k's grads → θ_(k+1))
+///   (swap A/B once the job has drained; repeat)
+/// ```
+///
+/// Two invariants make this safe and reproducible:
+///
+///  * **Double-buffered broadcast.**  The optimizer packs θ_(k+1) into
+///    the arena the *finished* job was reading, never the one the
+///    in-flight job reads, so a replica can never observe a half-updated
+///    model.  The swap happens only after `JobHandle::wait` — i.e. with
+///    zero readers on either arena.
+///  * **Budget split across the two in-flight stages.**  The async job
+///    is dispatched with an explicit budget of `threads - 1`; the
+///    coordinator's own stage runs serially on its thread (the pool's
+///    admission gate is held by the async job, so any kernel the
+///    optimizer stage dispatches degrades to serial with a unit budget).
+///    Peak busy threads therefore stay ≤ `threads` even with both stages
+///    in flight — pinned by `rust/tests/exec_equivalence.rs`.
+///
+/// Gradients are computed on parameters one step stale (batch 0 is the
+/// exception: there is nothing to overlap with, so it reads θ_0
+/// fresh).  Every batch still contributes exactly one optimizer step in
+/// replica order, so pipelined runs are bit-identical to each other at
+/// EVERY thread count — with one thread the same schedule simply runs
+/// its two stages back-to-back on the caller (no overlap to hide, no
+/// extra thread) — and only the staleness schedule differs from the
+/// synchronous path.
+fn run_pipelined<M: TrainableModel + Send>(
+    canon_store: &mut ParamStore,
+    replicas: &mut [Replica<M>],
+    opt: &mut dyn Optimizer,
+    cfg: &DataParallelConfig,
+) -> DataParallelResult {
+    let threads = exec::threads();
+    let replica_budget = threads.saturating_sub(1).max(1);
+    let mut read_arena = canon_store.pack();
+    let mut write_arena = vec![0.0f32; read_arena.len()];
+    let mut step_losses = Vec::new();
+    let mut steps = 0usize;
+    // (loss, packed grads) of the batch whose optimizer stage is pending
+    let mut pending_outs: Option<Vec<(f32, Vec<f32>)>> = None;
+    loop {
+        for r in replicas.iter_mut() {
+            r.pull_batch();
+        }
+        let mut live: Vec<&mut Replica<M>> =
+            replicas.iter_mut().filter(|r| r.pending.is_some()).collect();
+        let live_n = live.len();
+        if live_n == 0 {
+            break;
+        }
+        let workers = replica_budget.min(live_n);
+        let applied = if threads >= 2 {
+            let packed: &[f32] = &read_arena;
+            // batch k+1 in flight as an async pool job (one steal-chunk
+            // per live replica, sub-budgets summing to `threads - 1`)
+            // while the optimizer stage consumes batch k's gradients on
+            // the coordinator's reserved thread
+            exec::parallel_rows_overlap(
+                &mut live,
+                1,
+                workers,
+                replica_budget,
+                move |_, block| {
+                    for r in block.iter_mut() {
+                        r.step(packed);
+                    }
+                },
+                || {
+                    optimizer_stage(
+                        &mut pending_outs,
+                        canon_store,
+                        opt,
+                        cfg,
+                        &mut write_arena,
+                        &mut step_losses,
+                        &mut steps,
+                    )
+                },
+            )
+        } else {
+            // one thread: nothing to overlap with — run the two stages
+            // back-to-back with the SAME staleness-1 schedule, so
+            // pipelined results never depend on the thread count
+            let packed: &[f32] = &read_arena;
+            for r in live.iter_mut() {
+                r.step(packed);
+            }
+            optimizer_stage(
+                &mut pending_outs,
+                canon_store,
+                opt,
+                cfg,
+                &mut write_arena,
+                &mut step_losses,
+                &mut steps,
+            )
+        };
+        drop(live);
+        let outs: Vec<(f32, Vec<f32>)> =
+            replicas.iter_mut().filter_map(|r| r.out.take()).collect();
+        debug_assert_eq!(outs.len(), live_n, "every staged replica must produce gradients");
+        pending_outs = Some(outs);
+        if applied {
+            // θ_(k+1) becomes the next dispatch's broadcast source; the
+            // arena the drained job was reading becomes the next write
+            // target (it has no readers left)
+            std::mem::swap(&mut read_arena, &mut write_arena);
+        }
+    }
+    // drain the final in-flight gradient set (nothing left to overlap)
+    if let Some(outs) = pending_outs.take() {
+        apply_step(canon_store, opt, cfg, &outs, &mut write_arena, &mut step_losses);
+        steps += 1;
+    }
+    DataParallelResult { step_losses, final_params: canon_store.pack(), steps }
+}
+
+/// The pipeline's optimizer stage: consume the previous batch's
+/// gradients if any are pending; returns whether a step was applied
+/// (i.e. whether the arenas should swap).
+fn optimizer_stage(
+    pending_outs: &mut Option<Vec<(f32, Vec<f32>)>>,
+    canon_store: &mut ParamStore,
+    opt: &mut dyn Optimizer,
+    cfg: &DataParallelConfig,
+    arena: &mut Vec<f32>,
+    step_losses: &mut Vec<f32>,
+    steps: &mut usize,
+) -> bool {
+    match pending_outs.take() {
+        Some(outs) => {
+            apply_step(canon_store, opt, cfg, &outs, arena, step_losses);
+            *steps += 1;
+            true
+        }
+        None => false,
+    }
+}
+
+/// One optimizer stage body: deterministic replica-order all-reduce,
+/// optional global-norm clip, optimizer update applied to the canonical
+/// store and packed into the target broadcast arena.
+fn apply_step(
+    canon_store: &mut ParamStore,
+    opt: &mut dyn Optimizer,
+    cfg: &DataParallelConfig,
+    outs: &[(f32, Vec<f32>)],
+    arena: &mut Vec<f32>,
+    step_losses: &mut Vec<f32>,
+) {
+    let parts: Vec<&[f32]> = outs.iter().map(|(_, g)| g.as_slice()).collect();
+    let avg = allreduce_mean(&parts);
+    let mut grads = unpack_grads(canon_store, &avg);
+    if let Some(c) = cfg.grad_clip {
+        clip_global_norm(&mut grads, c);
+    }
+    let loss_sum: f32 = outs.iter().map(|(l, _)| *l).sum();
+    opt.step_into(canon_store, &grads, arena);
+    step_losses.push(loss_sum / outs.len() as f32);
 }
 
 /// Split a dataset into `k` shards (round-robin).
@@ -415,6 +618,7 @@ mod tests {
             batch_size: 8,
             grad_clip: Some(5.0),
             seed: 0,
+            pipeline: false,
         };
         let res = DataParallelCoordinator::run(factory(8), shards, &mut opt, &cfg);
         assert!(res.steps >= 8, "too few steps: {}", res.steps);
@@ -437,6 +641,7 @@ mod tests {
             batch_size: 8,
             grad_clip: None,
             seed: 0,
+            pipeline: false,
         };
         let res = DataParallelCoordinator::run(factory(8), shards, &mut opt, &cfg);
         assert_eq!(res.steps, 8); // 32/8 * 2 epochs
@@ -456,10 +661,72 @@ mod tests {
             batch_size: 3,
             grad_clip: None,
             seed: 0,
+            pipeline: false,
         };
         let res = DataParallelCoordinator::run(factory(8), shards, &mut opt, &cfg);
         assert!(res.steps >= 2, "steps {}", res.steps);
         assert!(res.step_losses.iter().all(|l| l.is_finite()));
+    }
+
+    #[test]
+    fn pipelined_runs_are_deterministic_and_converge() {
+        // pipeline on: staleness-1 gradients, but a fixed deterministic
+        // schedule — two runs must agree bit-for-bit, consume exactly as
+        // many optimizer steps as the synchronous path, and still learn
+        let run = |pipeline: bool| {
+            let (xs, ys) = toy_data(64, 8, 1);
+            let shards = shard_dataset(xs, ys, 2);
+            let mut opt = Adam::new(5e-3);
+            let cfg = DataParallelConfig {
+                workers: 2,
+                epochs: 4,
+                batch_size: 8,
+                grad_clip: Some(5.0),
+                seed: 0,
+                pipeline,
+            };
+            DataParallelCoordinator::run(factory(8), shards, &mut opt, &cfg)
+        };
+        let a = run(true);
+        let b = run(true);
+        let sync = run(false);
+        assert_eq!(a.steps, sync.steps, "pipelining must not change the step count");
+        assert_eq!(a.step_losses.len(), b.step_losses.len());
+        for (i, (x, y)) in a.final_params.iter().zip(&b.final_params).enumerate() {
+            assert!(
+                x.to_bits() == y.to_bits(),
+                "pipelined run not reproducible at param {i}: {x} vs {y}"
+            );
+        }
+        for (x, y) in a.step_losses.iter().zip(&b.step_losses) {
+            assert!(x.to_bits() == y.to_bits(), "pipelined losses not reproducible");
+        }
+        let k = a.step_losses.len();
+        let early: f32 = a.step_losses[..3].iter().sum::<f32>() / 3.0;
+        let late: f32 = a.step_losses[k - 3..].iter().sum::<f32>() / 3.0;
+        assert!(late < early, "pipelined loss did not fall: {early} -> {late}");
+    }
+
+    #[test]
+    fn pipelined_uneven_shards_drain_cleanly() {
+        // replicas exhaust their shards at different steps; the pipeline
+        // must keep dispatching the shrinking live set and drain the
+        // final in-flight gradients
+        let (xs, ys) = toy_data(10, 8, 5);
+        let shards = shard_dataset(xs, ys, 3);
+        let mut opt = Adam::new(1e-2);
+        let cfg = DataParallelConfig {
+            workers: 3,
+            epochs: 2,
+            batch_size: 3,
+            grad_clip: None,
+            seed: 0,
+            pipeline: true,
+        };
+        let res = DataParallelCoordinator::run(factory(8), shards, &mut opt, &cfg);
+        assert!(res.steps >= 2, "steps {}", res.steps);
+        assert!(res.step_losses.iter().all(|l| l.is_finite()));
+        assert_eq!(res.final_params.len(), factory(8)().0.num_scalars());
     }
 
     #[test]

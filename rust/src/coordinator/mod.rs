@@ -28,4 +28,4 @@ pub use data_parallel::{
     allreduce_mean, pack_grads, unpack_grads, DataParallelConfig, DataParallelCoordinator,
 };
 pub use engine::{NativeStreamingEngine, StreamingEngine};
-pub use server::{DynamicBatcher, Router, ServerConfig, StreamingServer};
+pub use server::{DynamicBatcher, EngineFactory, Router, ServerConfig, StreamingServer};

@@ -30,6 +30,11 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
+/// A deferred engine constructor, run INSIDE the batcher's control
+/// thread — the escape hatch for engines that are not `Send`/`Sync`
+/// (e.g. PJRT clients holding thread-bound handles).
+pub type EngineFactory = Box<dyn FnOnce() -> Box<dyn StreamingEngine> + Send>;
+
 /// A step request: advance `session` with input `x`, reply on `reply`.
 pub struct StepRequest {
     /// session id whose DN state this step advances
@@ -60,11 +65,20 @@ pub struct ServerConfig {
     pub max_batch: usize,
     /// how long the batcher waits to fill a batch
     pub window: Duration,
+    /// Pipeline batches: dispatch batch `k+1`'s session fan-out as an
+    /// async pool job and deliver batch `k`'s replies while it computes,
+    /// so the control thread's reply packing overlaps pool compute
+    /// instead of serializing after it.  Per-session outputs and their
+    /// order are unchanged (states always advance batch-by-batch); the
+    /// cost is up to one extra batch window of reply latency when the
+    /// request stream goes idle.  Only `Sync` engines pipeline;
+    /// thread-bound (factory) engines always run the serial path.
+    pub pipeline: bool,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_batch: 32, window: Duration::from_micros(500) }
+        ServerConfig { max_batch: 32, window: Duration::from_micros(500), pipeline: false }
     }
 }
 
@@ -123,7 +137,7 @@ enum EngineSource {
     /// a `Sync` engine moved into the thread — batches fan out on the pool
     Shared(Box<dyn StreamingEngine + Send + Sync>),
     /// built inside the thread (thread-bound handles) — batches run serial
-    Factory(Box<dyn FnOnce() -> Box<dyn StreamingEngine> + Send>),
+    Factory(EngineFactory),
 }
 
 /// The engine as held by the running batcher thread.
@@ -150,17 +164,15 @@ struct SessionRun {
     outs: Vec<Vec<f32>>,
 }
 
-/// Execute one filled batch: group requests by session (per-session order
-/// preserved), fan the independent sessions out on the exec pool (shared
-/// engines) or run them serialized (thread-bound engines), then reinsert
-/// states and deliver replies.
-fn execute_batch(
-    engine: &BatchEngine,
+/// Group a window's requests by session (per-session arrival order
+/// preserved), pulling each session's state out of the table — or
+/// zero-initializing a fresh one — so the independent groups can cross
+/// to pool threads.
+fn build_groups(
+    state_size: usize,
     sessions: &mut HashMap<u64, Vec<f32>>,
     pending: &mut Vec<StepRequest>,
-    metrics: &ServerMetrics,
-) {
-    let state_size = engine.engine().state_size();
+) -> Vec<SessionRun> {
     let mut groups: Vec<SessionRun> = Vec::new();
     let mut index: HashMap<u64, usize> = HashMap::new();
     for req in pending.drain(..) {
@@ -172,6 +184,48 @@ fn execute_batch(
         });
         groups[gi].reqs.push(req);
     }
+    groups
+}
+
+/// Return every group's advanced state to the session table.  This must
+/// happen before the NEXT batch is grouped (a session present in both
+/// batches must see its advanced state), which is why it is split from
+/// reply delivery in the pipelined path.
+fn reinsert_states(groups: &mut [SessionRun], sessions: &mut HashMap<u64, Vec<f32>>) {
+    for g in groups.iter_mut() {
+        sessions.insert(g.session, std::mem::take(&mut g.state));
+    }
+}
+
+/// Send a computed batch's replies (per-session arrival order preserved)
+/// and update the request metrics.  In pipelined mode this is the
+/// control thread's overlapped stage: it runs while the next batch's
+/// session fan-out computes on the pool.
+fn deliver_replies(parked: &mut Vec<SessionRun>, metrics: &ServerMetrics) {
+    for g in parked.drain(..) {
+        for (req, output) in g.reqs.into_iter().zip(g.outs) {
+            let latency = req.enqueued.elapsed();
+            metrics.requests.fetch_add(1, Ordering::Relaxed);
+            metrics
+                .total_latency_us
+                .fetch_add(latency.as_micros() as u64, Ordering::Relaxed);
+            let _ = req.reply.send(StepResponse { session: req.session, output, latency });
+        }
+    }
+}
+
+/// Execute one filled batch synchronously: group requests by session,
+/// fan the independent sessions out on the exec pool (shared engines) or
+/// run them serialized (thread-bound engines), then reinsert states and
+/// deliver replies.
+fn execute_batch(
+    engine: &BatchEngine,
+    sessions: &mut HashMap<u64, Vec<f32>>,
+    pending: &mut Vec<StepRequest>,
+    metrics: &ServerMetrics,
+) {
+    let state_size = engine.engine().state_size();
+    let mut groups = build_groups(state_size, sessions, pending);
     let total_reqs: usize = groups.iter().map(|g| g.reqs.len()).sum();
     match engine {
         BatchEngine::Shared(e) => {
@@ -205,17 +259,65 @@ fn execute_batch(
         }
     }
     metrics.batches.fetch_add(1, Ordering::Relaxed);
-    for g in groups {
-        sessions.insert(g.session, g.state);
-        for (req, output) in g.reqs.into_iter().zip(g.outs) {
-            let latency = req.enqueued.elapsed();
-            metrics.requests.fetch_add(1, Ordering::Relaxed);
-            metrics
-                .total_latency_us
-                .fetch_add(latency.as_micros() as u64, Ordering::Relaxed);
-            let _ = req.reply.send(StepResponse { session: req.session, output, latency });
+    reinsert_states(&mut groups, sessions);
+    deliver_replies(&mut groups, metrics);
+}
+
+/// Execute one filled batch in pipelined mode: the session fan-out is
+/// dispatched as an **async** pool job and the previous batch's replies
+/// are delivered while it computes.  After the job drains, states return
+/// to the session table immediately (the next batch's grouping needs
+/// them) and the fresh replies are parked in `undelivered` until the
+/// next batch is in flight — or the batcher goes idle, which flushes
+/// them within one window.
+fn pipelined_batch(
+    eng: &(dyn StreamingEngine + Send + Sync),
+    sessions: &mut HashMap<u64, Vec<f32>>,
+    pending: &mut Vec<StepRequest>,
+    undelivered: &mut Vec<SessionRun>,
+    metrics: &ServerMetrics,
+) {
+    let mut groups = build_groups(eng.state_size(), sessions, pending);
+    let total_reqs: usize = groups.iter().map(|g| g.reqs.len()).sum();
+    let plan = exec::plan_for(groups.len(), total_reqs * eng.step_work());
+    if plan.is_serial() {
+        // too small to fan out: flush owed replies first (per-session
+        // reply order), then compute and deliver inline
+        deliver_replies(undelivered, metrics);
+        for g in groups.iter_mut() {
+            for req in &g.reqs {
+                g.outs.push(eng.step(&mut g.state, &req.x));
+            }
         }
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+        reinsert_states(&mut groups, sessions);
+        deliver_replies(&mut groups, metrics);
+        return;
     }
+    // the control thread reserves itself for reply packing; the session
+    // fan-out gets the remaining budget, so both in-flight stages sum to
+    // at most the configured thread count
+    let budget = exec::threads().saturating_sub(1).max(1);
+    let workers = plan.workers.min(budget);
+    exec::parallel_rows_overlap(
+        &mut groups,
+        1,
+        workers,
+        budget,
+        move |_, block| {
+            for g in block.iter_mut() {
+                for req in &g.reqs {
+                    g.outs.push(eng.step(&mut g.state, &req.x));
+                }
+            }
+        },
+        // overlapped stage: previous batch's replies go out while this
+        // batch computes on the pool
+        || deliver_replies(undelivered, metrics),
+    );
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    reinsert_states(&mut groups, sessions);
+    *undelivered = groups;
 }
 
 impl DynamicBatcher {
@@ -229,10 +331,7 @@ impl DynamicBatcher {
     /// thread — required for engines that are not `Send`/`Sync` (the PJRT
     /// client holds thread-bound handles).  Batches for such engines run
     /// serially on the control thread.
-    pub fn with_factory(
-        factory: Box<dyn FnOnce() -> Box<dyn StreamingEngine> + Send>,
-        cfg: ServerConfig,
-    ) -> Self {
+    pub fn with_factory(factory: EngineFactory, cfg: ServerConfig) -> Self {
         Self::start(EngineSource::Factory(factory), cfg)
     }
 
@@ -247,19 +346,42 @@ impl DynamicBatcher {
             };
             let mut sessions: HashMap<u64, Vec<f32>> = HashMap::new();
             let mut pending: Vec<StepRequest> = Vec::new();
+            // pipelined mode: the last computed batch, states already
+            // reinserted, replies not yet sent
+            let mut undelivered: Vec<SessionRun> = Vec::new();
             let mut shutdown = false;
             while !shutdown {
-                // block for the first request (or control message)
-                let first = match rx.recv() {
-                    Ok(BatcherCmd::Step(r)) => Some(r),
-                    Ok(BatcherCmd::Reset(sid)) => {
+                // block for the first request (or control message); with
+                // replies still owed, bound the block by one window so an
+                // idle channel can never stall them
+                let first = if undelivered.is_empty() {
+                    match rx.recv() {
+                        Ok(cmd) => Some(cmd),
+                        Err(_) => break,
+                    }
+                } else {
+                    match rx.recv_timeout(cfg.window) {
+                        Ok(cmd) => Some(cmd),
+                        Err(mpsc::RecvTimeoutError::Timeout) => None,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            shutdown = true;
+                            None
+                        }
+                    }
+                };
+                match first {
+                    Some(BatcherCmd::Step(r)) => pending.push(r),
+                    Some(BatcherCmd::Reset(sid)) => {
                         sessions.remove(&sid);
                         continue;
                     }
-                    Ok(BatcherCmd::Shutdown) | Err(_) => break,
-                };
-                if let Some(r) = first {
-                    pending.push(r);
+                    Some(BatcherCmd::Shutdown) => shutdown = true,
+                    None => {}
+                }
+                if pending.is_empty() {
+                    // idle or shutting down: flush owed replies, re-loop
+                    deliver_replies(&mut undelivered, &m);
+                    continue;
                 }
                 // fill the window
                 let deadline = Instant::now() + cfg.window;
@@ -283,6 +405,21 @@ impl DynamicBatcher {
                         Err(mpsc::RecvTimeoutError::Timeout) => break,
                     }
                 }
+                match (&engine, cfg.pipeline) {
+                    (BatchEngine::Shared(e), true) => {
+                        pipelined_batch(&**e, &mut sessions, &mut pending, &mut undelivered, &m);
+                    }
+                    _ => {
+                        // per-session reply order: anything a pipelined
+                        // batch parked goes out before this batch does
+                        deliver_replies(&mut undelivered, &m);
+                        execute_batch(&engine, &mut sessions, &mut pending, &m);
+                    }
+                }
+            }
+            // shutdown: flush parked replies, then any still-queued batch
+            deliver_replies(&mut undelivered, &m);
+            if !pending.is_empty() {
                 execute_batch(&engine, &mut sessions, &mut pending, &m);
             }
         });
@@ -402,10 +539,7 @@ impl StreamingServer {
 
     /// Build from per-replica factories run inside each batcher thread
     /// (for non-`Send` engines, e.g. PJRT-backed ones).
-    pub fn with_factories(
-        factories: Vec<Box<dyn FnOnce() -> Box<dyn StreamingEngine> + Send>>,
-        cfg: ServerConfig,
-    ) -> Self {
+    pub fn with_factories(factories: Vec<EngineFactory>, cfg: ServerConfig) -> Self {
         let batchers = factories
             .into_iter()
             .map(|f| DynamicBatcher::with_factory(f, cfg.clone()))
@@ -427,6 +561,18 @@ mod tests {
         let mut store = ParamStore::new();
         let spec = LmuSpec::new(1, 1, 4, 8.0, 3);
         let layer = LmuParallelLayer::new(spec.clone(), 8, &mut store, &mut rng, "srv");
+        NativeStreamingEngine::from_store(&spec, &layer.params, &store)
+    }
+
+    /// Wide enough that a multi-session batch crosses
+    /// `exec::MIN_PARALLEL_WORK`, so the pipelined batcher's ASYNC
+    /// fan-out path (not just its serial-degenerate branch) is
+    /// exercised whenever the machine has more than one thread.
+    fn make_wide_engine(seed: u64) -> NativeStreamingEngine {
+        let mut rng = Rng::new(seed);
+        let mut store = ParamStore::new();
+        let spec = LmuSpec::new(1, 1, 32, 64.0, 32);
+        let layer = LmuParallelLayer::new(spec.clone(), 64, &mut store, &mut rng, "srvw");
         NativeStreamingEngine::from_store(&spec, &layer.params, &store)
     }
 
@@ -509,6 +655,71 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn pipelined_batcher_matches_serial_reference() {
+        // pipeline on: batch k+1's fan-out overlaps batch k's reply
+        // delivery — every session's stream must still be bit-identical
+        // to stepping a standalone engine serially
+        let b = DynamicBatcher::new(
+            Box::new(make_wide_engine(9)),
+            ServerConfig { pipeline: true, ..Default::default() },
+        );
+        let reference = make_wide_engine(9);
+        let n_sessions = 6u64;
+        let rounds = 4usize;
+        let mut rxs: Vec<(u64, mpsc::Receiver<StepResponse>)> = Vec::new();
+        for t in 0..rounds {
+            for s in 0..n_sessions {
+                let (tx, rx) = mpsc::channel();
+                b.submit(s, vec![(s as f32 + 1.0) * 0.1 + t as f32 * 0.01], tx);
+                rxs.push((s, rx));
+            }
+        }
+        let mut got: HashMap<u64, Vec<Vec<f32>>> = HashMap::new();
+        for (s, rx) in rxs {
+            let resp = rx.recv().expect("pipelined batcher died");
+            assert_eq!(resp.session, s);
+            got.entry(s).or_default().push(resp.output);
+        }
+        for s in 0..n_sessions {
+            let mut state = vec![0.0f32; reference.state_size()];
+            for (t, out) in got[&s].iter().enumerate() {
+                let want =
+                    reference.step(&mut state, &[(s as f32 + 1.0) * 0.1 + t as f32 * 0.01]);
+                assert_eq!(out.len(), want.len());
+                for (a, b) in out.iter().zip(&want) {
+                    assert!(
+                        a.to_bits() == b.to_bits(),
+                        "pipelined session {s} step {t}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_sequential_clients_always_get_replies() {
+        // sequential step_blocking leaves each reply owed while the
+        // channel sits idle — the idle-flush path must deliver it within
+        // a window, and outputs must match the synchronous batcher
+        // bit-for-bit
+        let p = DynamicBatcher::new(
+            Box::new(make_engine(5)),
+            ServerConfig { pipeline: true, ..Default::default() },
+        );
+        let s = DynamicBatcher::new(Box::new(make_engine(5)), ServerConfig::default());
+        for t in 0..6 {
+            let x = vec![(t as f32 * 0.2).cos()];
+            let rp = p.step_blocking(3, x.clone());
+            let rs = s.step_blocking(3, x);
+            assert_eq!(rp.output.len(), rs.output.len());
+            for (a, b) in rp.output.iter().zip(&rs.output) {
+                assert!(a.to_bits() == b.to_bits(), "pipelined batcher diverged at step {t}");
+            }
+        }
+        assert_eq!(p.metrics.requests.load(Ordering::Relaxed), 6);
     }
 
     #[test]

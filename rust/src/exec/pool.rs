@@ -414,6 +414,161 @@ pub(super) fn run(chunks: usize, workers: usize, f: &(dyn Fn(usize) + Sync)) {
     }
 }
 
+// ------------------------------------------------------------ async jobs
+
+/// One asynchronously dispatched job: its registry entry plus the
+/// top-level dispatch-gate ownership, which is held until the job
+/// completes so concurrent top-level dispatchers keep degrading to
+/// serial instead of oversubscribing alongside the in-flight job.
+///
+/// Callers get this wrapped in `exec::JobHandle`, whose `wait`/`Drop`
+/// funnels into [`wait_async`]; the handle keeps the chunk closure alive
+/// until then (see [`run_async`]'s safety contract).
+pub(super) struct AsyncJob {
+    core: Arc<JobCore>,
+    owner: Option<MutexGuard<'static, ()>>,
+}
+
+/// Register `chunks` chunk indices of `f` as a pool job and return
+/// WITHOUT waiting: helpers execute the chunks while the caller overlaps
+/// other work, up to `workers` threads at once, each chunk handed a share
+/// of the explicit `budget` (the async analogue of the dispatcher-budget
+/// split in [`run`] — the caller passes the budget because its own thread
+/// keeps working and typically reserves itself a share of the global
+/// knob).
+///
+/// Returns `None` when the job already ran inline — an empty job, a
+/// nested dispatch (from inside a pool chunk, already paid for by that
+/// chunk's sub-budget), or a pool owned by another top-level dispatcher
+/// (degrades to serial with a unit budget, exactly like [`run`]).  Inline
+/// execution means a panic surfaces here instead of at `wait`.
+///
+/// SAFETY contract (enforced by `exec::JobHandle`): the closure behind
+/// `f` must stay alive and at a stable address until [`wait_async`] has
+/// returned for the job this call registers.
+pub(super) fn run_async(
+    chunks: usize,
+    workers: usize,
+    budget: usize,
+    f: &(dyn Fn(usize) + Sync),
+) -> Option<AsyncJob> {
+    if chunks == 0 {
+        return None;
+    }
+    let pool = pool();
+    if super::chunk_depth() > 0 {
+        // nested dispatch cannot overlap with its caller (the chunk IS
+        // the caller's work); run inline under the chunk's budget
+        for i in 0..chunks {
+            f(i);
+        }
+        return None;
+    }
+    let owner = match pool.dispatch.try_lock() {
+        Ok(g) => g,
+        Err(TryLockError::Poisoned(p)) => p.into_inner(),
+        Err(TryLockError::WouldBlock) => {
+            // pool owned elsewhere (including an earlier async job of
+            // THIS thread — one overlapped job per thread): degrade to
+            // serial with a unit budget, like `run`
+            let _busy = BusyGuard::new(pool);
+            let _env = super::enter_chunk(1);
+            for i in 0..chunks {
+                f(i);
+            }
+            return None;
+        }
+    };
+    let cap = workers.max(1).min(chunks);
+    let budget = budget.max(1);
+    // SAFETY: see the function-level contract — `exec::JobHandle` owns
+    // the boxed closure and blocks in wait/Drop until `done == chunks`.
+    let job_fn = {
+        let f_erased: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
+        JobFn(f_erased)
+    };
+    let core = Arc::new(JobCore {
+        f: job_fn,
+        chunks,
+        next: AtomicUsize::new(0),
+        done: AtomicUsize::new(0),
+        workers_cap: cap,
+        budget_base: budget / cap,
+        budget_extra: budget % cap,
+        // unlike `run`, the dispatcher does NOT occupy a slot: it walks
+        // away to overlap other work, so all `cap` slots go to helpers
+        attached: AtomicUsize::new(0),
+        panic: Mutex::new(None),
+    });
+    let to_spawn = {
+        let mut st = lock(&pool.state);
+        st.jobs.push(core.clone());
+        let want: usize = st
+            .jobs
+            .iter()
+            .filter(|c| c.has_work())
+            .map(|c| c.workers_cap.saturating_sub(c.attached.load(Ordering::Relaxed)))
+            .sum();
+        let available = st.helpers - st.busy_helpers;
+        let deficit =
+            want.saturating_sub(available).min(MAX_HELPERS.saturating_sub(st.helpers));
+        st.helpers += deficit;
+        for _ in 0..cap {
+            pool.cv_work.notify_one();
+        }
+        deficit
+    };
+    for _ in 0..to_spawn {
+        spawn_helper(pool);
+    }
+    Some(AsyncJob { core, owner })
+}
+
+/// Block until every chunk of an async job has completed, remove it from
+/// the registry, and release the dispatch gate.  The waiter steals
+/// remaining chunks itself when a worker slot is free (it respects
+/// `workers_cap` like any helper, so the job's concurrency cap — and the
+/// budget invariant derived from it — holds even while waiting).
+///
+/// A chunk panic is re-raised here when `propagate` is true, else
+/// swallowed (the drop-while-unwinding path).
+pub(super) fn wait_async(mut job: AsyncJob, propagate: bool) {
+    let pool = pool();
+    let core = &job.core;
+    let attach = {
+        let st = lock(&pool.state);
+        let free = core.has_work() && core.attached.load(Ordering::Relaxed) < core.workers_cap;
+        if free {
+            core.attached.fetch_add(1, Ordering::Relaxed);
+        }
+        drop(st);
+        free
+    };
+    if attach {
+        drain(pool, core);
+        let st = lock(&pool.state);
+        core.attached.fetch_sub(1, Ordering::Relaxed);
+        drop(st);
+    }
+    if !core.is_done() {
+        let mut st = lock(&pool.state);
+        while !core.is_done() {
+            st = wait(&pool.cv_done, st);
+        }
+    }
+    {
+        let mut st = lock(&pool.state);
+        st.jobs.retain(|c| !Arc::ptr_eq(c, core));
+    }
+    job.owner.take();
+    let panic = job.core.panic.lock().unwrap_or_else(|e| e.into_inner()).take();
+    if let Some(p) = panic {
+        if propagate {
+            std::panic::resume_unwind(p);
+        }
+    }
+}
+
 /// High-water mark of concurrently busy exec threads since the last
 /// [`reset_peak`] (each OS thread counted once, however deeply nested).
 pub(super) fn peak_concurrency() -> usize {

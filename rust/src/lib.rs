@@ -28,7 +28,12 @@
 //! (nested kernels get a sub-budget share instead of serializing).
 //! Serial (`threads = 1`) and parallel execution are bit-exact,
 //! mirroring the paper's claim that the parallel and recurrent forms
-//! compute the same function.
+//! compute the same function.  The pool also runs **async jobs**
+//! (scoped via [`exec::parallel_rows_overlap`]): the data-parallel
+//! coordinator's `pipeline` mode overlaps the optimizer stage with the
+//! next batch's replica compute (staleness-1, double-buffered parameter
+//! broadcast), and the serving batcher overlaps reply delivery with the
+//! next batch's session fan-out — still within the one budget.
 //!
 //! See DESIGN.md for the experiment index and architecture notes, and
 //! EXPERIMENTS.md for results and perf records.

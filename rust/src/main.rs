@@ -1,17 +1,19 @@
 //! `plmu` — the framework launcher.
 //!
 //! Subcommands (first positional argument):
-//!   info      platform + artifact inventory
-//!   train     train a model natively (psmnist)
-//!   train-dp  data-parallel training across worker threads
-//!   serve     demo the streaming-inference server on synthetic traffic
-//!   exec      compile + run an AOT artifact once (sanity check)
+//!   info         platform + artifact inventory
+//!   train        train a model natively (psmnist)
+//!   train-dp     data-parallel training across worker threads
+//!   serve        demo the streaming-inference server on synthetic traffic
+//!   exec         compile + run an AOT artifact once (sanity check)
+//!   bench-check  validate BENCH_*.json perf records (CI gate)
 //!
 //! Examples:
 //!   plmu train --task psmnist --model parallel --epochs 3
-//!   plmu train-dp --workers 4 --epochs 2
+//!   plmu train-dp --workers 4 --epochs 2 --pipeline
 //!   plmu serve --sessions 16 --tokens 100 --replicas 2
 //!   plmu exec --artifact dn_fwd_fft
+//!   plmu bench-check BENCH_threads.json BENCH_pool.json
 
 use plmu::autograd::ParamStore;
 use plmu::cli::Args;
@@ -47,6 +49,12 @@ fn main() -> Result<()> {
              0 = all cores (capped), 1 = serial reference — results are bit-identical either way",
         )
         .opt("workers", "2", "train-dp: data-parallel replicas (they share the --threads budget)")
+        .flag(
+            "pipeline",
+            "train-dp/serve: overlap the optimizer/reply stage with the next batch's \
+             compute (staleness-1 gradients in train-dp; identical outputs in serve). \
+             Off = bulk-synchronous reference path",
+        )
         .opt("sessions", "8", "serve: concurrent sessions")
         .opt("tokens", "64", "serve: tokens per session")
         .opt("replicas", "1", "serve: engine replicas")
@@ -68,6 +76,7 @@ fn main() -> Result<()> {
         "train-dp" => train_dp(&args),
         "serve" => serve(&args),
         "exec" => exec(&args),
+        "bench-check" => bench_check(&args),
         other => {
             eprintln!("unknown command {other:?}\n{}", args.help_text());
             std::process::exit(2);
@@ -205,6 +214,17 @@ fn train(args: &Args) -> Result<()> {
 }
 
 fn train_dp(args: &Args) -> Result<()> {
+    // config file (if given) supplies threads/pipeline defaults; the
+    // explicit CLI flags win where set
+    let mut pipeline = args.get_flag("pipeline");
+    let cfg_path = args.get("config");
+    if !cfg_path.is_empty() {
+        let c = plmu::config::Config::load(std::path::Path::new(&cfg_path))?;
+        println!("loaded config {} ({})", cfg_path, c.str_or("name", "?"));
+        let t = plmu::config::TrainConfig::from_config(&c, "train");
+        t.apply_threads(); // [train] threads wins over --threads
+        pipeline = pipeline || t.pipeline;
+    }
     let workers = args.get_usize("workers");
     let side = args.get_usize("side");
     let n = args.get_usize("examples");
@@ -222,7 +242,10 @@ fn train_dp(args: &Args) -> Result<()> {
             SeqClassifier::new(ModelKind::LmuParallel, seq_len, 1, d, hidden, 10, &mut store, &mut rng);
         (store, model)
     };
-    println!("data-parallel training: {workers} workers, {n} examples");
+    println!(
+        "data-parallel training: {workers} workers, {n} examples, pipeline {}",
+        if pipeline { "on (staleness-1)" } else { "off (synchronous)" }
+    );
     let mut opt = Adam::new(args.get_f32("lr"));
     let cfg = DataParallelConfig {
         workers,
@@ -230,16 +253,59 @@ fn train_dp(args: &Args) -> Result<()> {
         batch_size: args.get_usize("batch"),
         grad_clip: Some(5.0),
         seed,
+        pipeline,
     };
     let timer = Timer::start();
     let res = DataParallelCoordinator::run(factory, shards, &mut opt, &cfg);
     println!(
-        "done: {} sync steps in {:.1}s, loss {:.4} -> {:.4}",
+        "done: {} {} steps in {:.1}s, loss {:.4} -> {:.4}",
         res.steps,
+        if pipeline { "pipelined" } else { "sync" },
         timer.elapsed(),
         res.step_losses.first().unwrap_or(&f32::NAN),
         res.step_losses.last().unwrap_or(&f32::NAN)
     );
+    // canonical determinism fingerprint: losses + final parameters,
+    // bit-sensitive and order-sensitive.  The CI determinism matrix runs
+    // this subcommand under PLMU_THREADS ∈ {1, 2, 8} and fails on any
+    // difference in this line.
+    let fp = plmu::util::bit_fingerprint(
+        res.step_losses.iter().copied().chain(res.final_params.iter().copied()),
+    );
+    println!("train fingerprint: {fp:016x} over {} losses + {} params", res.step_losses.len(), res.final_params.len());
+    Ok(())
+}
+
+/// Validate BENCH_*.json perf records (the CI bench stage's gate): every
+/// file must parse, carry the required keys, and hold sane timings.
+fn bench_check(args: &Args) -> Result<()> {
+    let files: Vec<&String> =
+        args.positionals().iter().skip(1).collect();
+    if files.is_empty() {
+        eprintln!("usage: plmu bench-check FILE.json [FILE.json ...]");
+        std::process::exit(2);
+    }
+    let mut failed = false;
+    for f in files {
+        match std::fs::read_to_string(f) {
+            Err(e) => {
+                println!("  {f}: UNREADABLE ({e})");
+                failed = true;
+            }
+            Ok(text) => match plmu::benchlib::validate_perf_json(&text) {
+                Ok(summary) => {
+                    println!("  {f}: OK ({}, {} records)", summary.bench, summary.records)
+                }
+                Err(e) => {
+                    println!("  {f}: INVALID — {e}");
+                    failed = true;
+                }
+            },
+        }
+    }
+    if failed {
+        std::process::exit(1);
+    }
     Ok(())
 }
 
@@ -252,7 +318,8 @@ fn serve(args: &Args) -> Result<()> {
     let spec = LmuSpec::new(1, 1, args.get_usize("d"), 64.0, args.get_usize("hidden"));
     let layer = LmuParallelLayer::new(spec.clone(), 64, &mut store, &mut rng, "srv");
     // engines share the trained weights (here: fresh init for the demo)
-    let server = StreamingServer::new(replicas, ServerConfig::default(), || {
+    let server_cfg = ServerConfig { pipeline: args.get_flag("pipeline"), ..Default::default() };
+    let server = StreamingServer::new(replicas, server_cfg, || {
         Box::new(NativeStreamingEngine::from_store(&spec, &layer.params, &store))
     });
     println!("serving {sessions} sessions x {tokens} tokens on {replicas} replica(s)");

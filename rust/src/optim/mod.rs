@@ -22,6 +22,23 @@ pub fn clip_global_norm(grads: &mut [(ParamId, Tensor)], max_norm: f32) -> f32 {
 pub trait Optimizer {
     /// Apply one update step given (param, grad) pairs.
     fn step(&mut self, store: &mut ParamStore, grads: &[(ParamId, Tensor)]);
+
+    /// Apply one update step and pack the updated parameters into
+    /// `arena` (reusing its allocation).  This is the broadcast form the
+    /// pipelined data-parallel coordinator consumes: the update lands in
+    /// the store AND in the target half of the double-buffered parameter
+    /// arenas in one call, while the other half is still being read by
+    /// the in-flight replica job.
+    fn step_into(
+        &mut self,
+        store: &mut ParamStore,
+        grads: &[(ParamId, Tensor)],
+        arena: &mut Vec<f32>,
+    ) {
+        self.step(store, grads);
+        store.pack_into(arena);
+    }
+
     fn set_lr(&mut self, lr: f32);
     fn lr(&self) -> f32;
 }
@@ -205,6 +222,35 @@ mod tests {
         adam.step(&mut store, &grads);
         let delta = store.get(x).sub(&before);
         assert!(delta.abs_max() <= 0.01 * 1.01, "step {:?}", delta);
+    }
+
+    #[test]
+    fn step_into_matches_step_plus_pack() {
+        let mut rng = Rng::new(5);
+        let build = |rng: &mut Rng| {
+            let mut s = ParamStore::new();
+            s.add("a", Tensor::randn(&[3, 4], 1.0, rng));
+            s.add("b", Tensor::randn(&[5], 1.0, rng));
+            s
+        };
+        let mut s1 = build(&mut rng);
+        let mut rng2 = Rng::new(5);
+        let mut s2 = build(&mut rng2);
+        let grads: Vec<(ParamId, Tensor)> = s1
+            .ids()
+            .map(|id| (id, Tensor::randn(s1.get(id).shape(), 1.0, &mut rng)))
+            .collect();
+        let mut a1 = Adam::new(1e-2);
+        let mut a2 = Adam::new(1e-2);
+        a1.step(&mut s1, &grads);
+        let want = s1.pack();
+        // arena reuse: start with stale garbage of the wrong length
+        let mut arena = vec![f32::NAN; 3];
+        a2.step_into(&mut s2, &grads, &mut arena);
+        assert_eq!(arena.len(), want.len());
+        for (a, b) in arena.iter().zip(&want) {
+            assert!(a.to_bits() == b.to_bits(), "step_into diverged from step+pack");
+        }
     }
 
     #[test]

@@ -51,9 +51,36 @@ pub fn human_count(n: usize) -> String {
     out
 }
 
+/// Order-sensitive FNV-1a fold over the raw bit patterns of a float
+/// sequence: two sequences hash equal iff they are bit-identical in the
+/// same order.  This is the canonical training fingerprint the CI
+/// determinism matrix diffs across `PLMU_THREADS` settings — any
+/// reordering or last-ulp drift in losses/parameters changes it.
+pub fn bit_fingerprint<I: IntoIterator<Item = f32>>(vals: I) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for v in vals {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fingerprint_is_order_and_bit_sensitive() {
+        let a = bit_fingerprint([1.0f32, 2.0, 3.0]);
+        assert_eq!(a, bit_fingerprint([1.0f32, 2.0, 3.0]));
+        assert_ne!(a, bit_fingerprint([2.0f32, 1.0, 3.0]), "order must matter");
+        assert_ne!(a, bit_fingerprint([1.0f32, 2.0, 3.0000002]), "ulps must matter");
+        // -0.0 and 0.0 are different bit patterns, and NaN is stable
+        assert_ne!(bit_fingerprint([0.0f32]), bit_fingerprint([-0.0f32]));
+        assert_eq!(bit_fingerprint([f32::NAN]), bit_fingerprint([f32::NAN]));
+    }
 
     #[test]
     fn bytes_formatting() {
