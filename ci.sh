@@ -14,9 +14,10 @@
 #                report-only so formatting drift never masks test signal
 #   docs         rustdoc build with warnings as errors
 #   determinism  the determinism matrix: the exec-equivalence suite under
-#                PLMU_THREADS in {1, 2, 8}, plus a canonical training-loss
+#                PLMU_THREADS in {1, 2, 8}, the simd-equivalence suite
+#                under PLMU_SIMD in {1, 0}, plus a canonical training-loss
 #                fingerprint (plmu train-dp) diffed byte-for-byte across
-#                the three thread counts
+#                PLMU_THREADS in {1, 2, 8} x PLMU_SIMD in {1, 0}
 #   bench        smoke-runs the perf benches and validates every emitted
 #                BENCH_*.json artifact (plmu bench-check): required keys,
 #                sane timings — a bench refactor cannot silently emit an
@@ -58,32 +59,42 @@ stage_docs() {
 }
 
 stage_determinism() {
-    # the exec-equivalence suite must hold under every pool size, and a
+    # the exec-equivalence suite must hold under every pool size, the
+    # simd-equivalence suite under both vector-path settings, and a
     # canonical training run must produce a byte-identical fingerprint
-    # whether the pool has 1, 2, or 8 threads
+    # across the whole matrix PLMU_THREADS in {1, 2, 8} x PLMU_SIMD in
+    # {on, off}
     cargo build --release || return 1
+    for t in 1 2 8; do
+        echo "-- determinism: exec_equivalence, PLMU_THREADS=$t --"
+        PLMU_THREADS=$t cargo test -q --test exec_equivalence || return 1
+    done
+    for s in 1 0; do
+        echo "-- determinism: simd_equivalence, PLMU_SIMD=$s --"
+        PLMU_SIMD=$s cargo test -q --test simd_equivalence || return 1
+    done
     local ref_fp="" out fp
     for t in 1 2 8; do
-        echo "-- determinism: PLMU_THREADS=$t --"
-        PLMU_THREADS=$t cargo test -q --test exec_equivalence || return 1
-        out=$(PLMU_THREADS=$t ./target/release/plmu train-dp \
-            --workers 2 --epochs 1 --examples 32 --side 8 --batch 8) || return 1
-        fp=$(printf '%s\n' "$out" | grep '^train fingerprint:')
-        if [ -z "$fp" ]; then
-            echo "no 'train fingerprint:' line in train-dp output"
-            return 1
-        fi
-        echo "   PLMU_THREADS=$t -> $fp"
-        if [ -z "$ref_fp" ]; then
-            ref_fp="$fp"
-        elif [ "$fp" != "$ref_fp" ]; then
-            echo "DETERMINISM MISMATCH: PLMU_THREADS=$t fingerprint differs from the 1-thread run"
-            echo "  1-thread: $ref_fp"
-            echo "  $t-thread: $fp"
-            return 1
-        fi
+        for s in 1 0; do
+            out=$(PLMU_SIMD=$s PLMU_THREADS=$t ./target/release/plmu train-dp \
+                --workers 2 --epochs 1 --examples 32 --side 8 --batch 8) || return 1
+            fp=$(printf '%s\n' "$out" | grep '^train fingerprint:')
+            if [ -z "$fp" ]; then
+                echo "no 'train fingerprint:' line in train-dp output"
+                return 1
+            fi
+            echo "   PLMU_THREADS=$t PLMU_SIMD=$s -> $fp"
+            if [ -z "$ref_fp" ]; then
+                ref_fp="$fp"
+            elif [ "$fp" != "$ref_fp" ]; then
+                echo "DETERMINISM MISMATCH: (threads=$t, simd=$s) differs from (threads=1, simd=1)"
+                echo "  reference: $ref_fp"
+                echo "  this run:  $fp"
+                return 1
+            fi
+        done
     done
-    echo "fingerprints byte-identical across PLMU_THREADS in {1, 2, 8}"
+    echo "fingerprints byte-identical across PLMU_THREADS in {1, 2, 8} x PLMU_SIMD in {1, 0}"
 }
 
 stage_bench() {
@@ -91,9 +102,10 @@ stage_bench() {
     PLMU_BENCH_SMOKE=1 cargo bench --bench fig1_threads || return 1
     PLMU_BENCH_SMOKE=1 cargo bench --bench pool_crossover || return 1
     PLMU_BENCH_SMOKE=1 cargo bench --bench coordinator || return 1
+    PLMU_BENCH_SMOKE=1 cargo bench --bench simd_kernels || return 1
     echo "-- validating perf records --"
     ./target/release/plmu bench-check \
-        BENCH_threads.json BENCH_pool.json BENCH_coordinator.json
+        BENCH_threads.json BENCH_pool.json BENCH_coordinator.json BENCH_simd.json
 }
 
 # ----------------------------------------------------------------- driver

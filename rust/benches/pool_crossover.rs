@@ -24,20 +24,10 @@
 //! Run: cargo bench --bench pool_crossover
 //! Smoke mode (CI): PLMU_BENCH_SMOKE=1 cargo bench --bench pool_crossover
 
-use plmu::benchlib::{bench, repo_root, BenchConfig, JsonValue, PerfJson, Table};
+use plmu::benchlib::{bench, checksum_f32 as checksum, repo_root, BenchConfig, JsonValue, PerfJson, Table};
 use plmu::exec::{self, Plan};
 use plmu::util::Rng;
 use plmu::Tensor;
-
-fn checksum(xs: &[f32]) -> u64 {
-    // order-sensitive bit-level fingerprint: equal iff bit-identical
-    let mut h = 0xcbf29ce484222325u64;
-    for v in xs {
-        h ^= v.to_bits() as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
-}
 
 /// The scoped-spawn dispatch the pool replaced (verbatim partition logic
 /// of the pre-pool exec substrate) — the bench baseline.

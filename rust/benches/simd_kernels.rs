@@ -1,0 +1,205 @@
+//! A/B bench for the `plmu::simd` 8-lane kernel layer: vector path vs
+//! scalar reference wall time for dot, axpy, elementwise add, the
+//! complex spectrum MAC, and full matmul, at sizes spanning the lane
+//! remainder cases (8k-1 / 8k / 8k+1).  Emits `BENCH_simd.json` at the
+//! repo root (validated by `plmu bench-check` in the CI bench stage).
+//!
+//! Before timing each case, the two paths are asserted bit-identical —
+//! the layer's core contract (`rust/tests/simd_equivalence.rs` is the
+//! exhaustive version).  Timing runs serial (`threads = 1`): this bench
+//! measures single-thread kernel throughput, the quantity the SIMD
+//! layer exists to raise; thread scaling stays `fig1_threads`' job.
+//!
+//! Run: cargo bench --bench simd_kernels
+//! Smoke mode (CI): PLMU_BENCH_SMOKE=1 cargo bench --bench simd_kernels
+
+use plmu::benchlib::{
+    bench, checksum_f32 as checksum, checksum_f64, repo_root, BenchConfig, JsonValue, PerfJson,
+    Table,
+};
+use plmu::exec;
+use plmu::simd;
+use plmu::util::Rng;
+use plmu::Tensor;
+
+struct Case {
+    name: String,
+    /// scalar ops per run (for throughput)
+    items: f64,
+    /// run the vector path, returning a result fingerprint
+    vec: Box<dyn Fn() -> u64>,
+    /// run the scalar reference, returning a result fingerprint
+    scalar: Box<dyn Fn() -> u64>,
+}
+
+fn main() {
+    let smoke = std::env::var("PLMU_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
+    let cfg = if smoke {
+        BenchConfig { warmup_secs: 0.02, measure_secs: 0.06, max_iters: 30, min_iters: 2 }
+    } else {
+        BenchConfig { warmup_secs: 0.1, measure_secs: 0.5, max_iters: 400, min_iters: 3 }
+    };
+    // single-thread kernel throughput: keep the exec pool out of the frame
+    exec::set_threads(1);
+    println!(
+        "simd kernel A/B (vector vs scalar reference), serial{}",
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let mut rng = Rng::new(0);
+    let mut cases: Vec<Case> = Vec::new();
+
+    // ---- dot + axpy + elementwise at lane-remainder lengths ------------
+    let lens: &[usize] =
+        if smoke { &[63, 64, 65, 4095, 4096, 4097] } else { &[63, 64, 65, 4095, 4096, 4097, 65535, 65536, 65537] };
+    for &n in lens {
+        let a: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        {
+            let (a, b) = (a.clone(), b.clone());
+            let (a2, b2) = (a.clone(), b.clone());
+            cases.push(Case {
+                name: format!("dot_{n}"),
+                items: (2 * n) as f64,
+                vec: Box::new(move || simd::dot_vec(&a, &b).to_bits() as u64),
+                scalar: Box::new(move || simd::dot_scalar(&a2, &b2).to_bits() as u64),
+            });
+        }
+        {
+            let (a, b) = (a.clone(), b.clone());
+            let (a2, b2) = (a.clone(), b.clone());
+            cases.push(Case {
+                name: format!("axpy_{n}"),
+                items: (2 * n) as f64,
+                vec: Box::new(move || {
+                    let mut y = b.clone();
+                    simd::axpy_vec(1.25, &a, &mut y);
+                    checksum(&y)
+                }),
+                scalar: Box::new(move || {
+                    let mut y = b2.clone();
+                    simd::axpy_scalar(1.25, &a2, &mut y);
+                    checksum(&y)
+                }),
+            });
+        }
+        {
+            let (a, b) = (a.clone(), b.clone());
+            let (a2, b2) = (a.clone(), b.clone());
+            cases.push(Case {
+                name: format!("add_{n}"),
+                items: n as f64,
+                vec: Box::new(move || {
+                    let mut out = vec![0.0f32; a.len()];
+                    simd::add_vec(&a, &b, &mut out);
+                    checksum(&out)
+                }),
+                scalar: Box::new(move || {
+                    let mut out = vec![0.0f32; a2.len()];
+                    simd::add_scalar(&a2, &b2, &mut out);
+                    checksum(&out)
+                }),
+            });
+        }
+    }
+
+    // ---- complex spectrum MAC (the RfftCache inner loop) ---------------
+    let clens: &[usize] = if smoke { &[127, 128, 129] } else { &[127, 128, 129, 4095, 4096, 4097] };
+    for &n in clens {
+        let a: Vec<f64> = (0..2 * n).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..2 * n).map(|_| rng.normal()).collect();
+        let (a2, b2) = (a.clone(), b.clone());
+        cases.push(Case {
+            name: format!("cmul_{n}"),
+            items: (6 * n) as f64,
+            vec: Box::new(move || {
+                let mut out = vec![0.0f64; a.len()];
+                simd::cmul_vec(&a, &b, &mut out);
+                checksum_f64(&out)
+            }),
+            scalar: Box::new(move || {
+                let mut out = vec![0.0f64; a2.len()];
+                simd::cmul_scalar(&a2, &b2, &mut out);
+                checksum_f64(&out)
+            }),
+        });
+    }
+
+    // ---- full matmul through the runtime knob --------------------------
+    let shapes: &[(usize, usize, usize)] =
+        if smoke { &[(32, 31, 33), (64, 64, 64)] } else { &[(64, 63, 65), (128, 128, 128), (256, 255, 257)] };
+    for &(m, k, n) in shapes {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let (a2, b2) = (a.clone(), b.clone());
+        cases.push(Case {
+            name: format!("matmul_{m}x{k}x{n}"),
+            items: (2 * m * k * n) as f64,
+            vec: Box::new(move || {
+                simd::set_enabled(true);
+                checksum(a.matmul(&b).data())
+            }),
+            scalar: Box::new(move || {
+                simd::set_enabled(false);
+                let h = checksum(a2.matmul(&b2).data());
+                simd::set_enabled(true);
+                h
+            }),
+        });
+    }
+
+    let mut record = PerfJson::new("simd_kernels");
+    let mut table = Table::new(&["case", "vector (µs)", "scalar (µs)", "speedup"]);
+    let mut worst: Option<(String, f64)> = None;
+
+    for case in &cases {
+        // contract first: the two paths must be bit-identical
+        let (v, s) = ((case.vec)(), (case.scalar)());
+        assert_eq!(v, s, "{}: vector and scalar paths disagree", case.name);
+
+        let vec_stats = bench(&case.name, cfg, || {
+            std::hint::black_box((case.vec)());
+        });
+        let scalar_stats = bench(&case.name, cfg, || {
+            std::hint::black_box((case.scalar)());
+        });
+        let speedup = scalar_stats.mean / vec_stats.mean;
+        if worst.as_ref().map(|(_, w)| speedup < *w).unwrap_or(true) {
+            worst = Some((case.name.clone(), speedup));
+        }
+        table.row(&[
+            case.name.clone(),
+            format!("{:.2}", vec_stats.mean * 1e6),
+            format!("{:.2}", scalar_stats.mean * 1e6),
+            format!("{speedup:.2}x"),
+        ]);
+        record.push(&[
+            ("case", JsonValue::Str(case.name.clone())),
+            ("threads", JsonValue::Int(1)),
+            ("wall_ns", JsonValue::Int((vec_stats.mean * 1e9) as i64)),
+            ("simd_s", JsonValue::Num(vec_stats.mean)),
+            ("scalar_s", JsonValue::Num(scalar_stats.mean)),
+            ("p50_s", JsonValue::Num(vec_stats.p50)),
+            ("items_per_s", JsonValue::Num(case.items / vec_stats.mean)),
+            ("speedup_vs_scalar", JsonValue::Num(speedup)),
+            ("smoke", JsonValue::Bool(smoke)),
+        ]);
+    }
+
+    table.print("simd kernels — vector vs scalar reference (serial)");
+
+    let out = repo_root().join("BENCH_simd.json");
+    match record.write(&out) {
+        Ok(()) => println!("\nwrote {} ({} records)", out.display(), record.len()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", out.display()),
+    }
+
+    // acceptance: the vector path must never lose badly to the scalar
+    // reference (with the portable backend both lower to similar code,
+    // so ~1.0x is expected; a large regression means the vector path
+    // grew overhead)
+    if let Some((name, w)) = worst {
+        let verdict = if w > 0.8 { "PASS" } else { "MISS" };
+        println!("\nacceptance (worst vector-vs-scalar ratio > 0.8x): {name} {w:.2}x  {verdict}");
+    }
+}

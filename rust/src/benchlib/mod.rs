@@ -70,6 +70,30 @@ pub fn repo_root() -> std::path::PathBuf {
     std::env::current_dir().unwrap_or_else(|_| ".".into())
 }
 
+/// Order-sensitive FNV-style fingerprint over `f32` bit patterns: equal
+/// iff the sequence is bit-identical.  Benches hash kernel results with
+/// it to assert a parallel/vector path matches its serial/scalar
+/// reference before timing it (one shared definition so the scheme
+/// cannot diverge between benches).
+pub fn checksum_f32(xs: &[f32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for v in xs {
+        h ^= v.to_bits() as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// `f64` variant of [`checksum_f32`].
+pub fn checksum_f64(xs: &[f64]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for v in xs {
+        h ^= v.to_bits();
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
 /// Time a closure under the given config and return robust statistics.
 pub fn bench<F: FnMut()>(name: &str, cfg: BenchConfig, mut f: F) -> Stats {
     // warmup + calibration

@@ -17,12 +17,18 @@
 //! serial op sequence, so results are bit-exact at any thread count.
 
 use crate::exec;
+use crate::simd;
 use std::collections::HashMap;
 use std::f64::consts::PI;
 use std::sync::{Arc, OnceLock, RwLock};
 
 /// Complex number (f64 — convolution error compounds across long sequences,
 /// and the FFT is a small fraction of total time).
+///
+/// `repr(C)` is load-bearing: a `&[Cpx]` is reinterpreted as interleaved
+/// `(re, im)` `f64`s (`cpx_floats`) so the spectrum product can run on
+/// the `crate::simd` complex-multiply kernel.
+#[repr(C)]
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Cpx {
     pub re: f64,
@@ -61,6 +67,31 @@ impl Cpx {
     pub fn scale(self, s: f64) -> Cpx {
         Cpx::new(self.re * s, self.im * s)
     }
+}
+
+/// View a complex slice as interleaved `(re, im)` `f64`s for the simd
+/// complex-multiply kernel.
+#[inline]
+fn cpx_floats(xs: &[Cpx]) -> &[f64] {
+    // SAFETY: Cpx is #[repr(C)] { re: f64, im: f64 } — size 16, align 8,
+    // no padding — so n Cpx values are exactly 2n contiguous f64s.
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const f64, xs.len() * 2) }
+}
+
+/// Mutable variant of [`cpx_floats`].
+#[inline]
+fn cpx_floats_mut(xs: &mut [Cpx]) -> &mut [f64] {
+    // SAFETY: as in cpx_floats; the borrow is exclusive.
+    unsafe { std::slice::from_raw_parts_mut(xs.as_mut_ptr() as *mut f64, xs.len() * 2) }
+}
+
+/// Elementwise spectrum product `out[k] = a[k] · b[k]` on the simd
+/// complex-MAC kernel — the one inner loop of every FFT convolution
+/// here (eq. 26's `F{H} · F{U}`); `a` and `b` may be longer than `out`
+/// (extra bins are ignored).
+fn spectrum_product(a: &[Cpx], b: &[Cpx], out: &mut [Cpx]) {
+    let n = out.len();
+    simd::cmul(cpx_floats(&a[..n]), cpx_floats(&b[..n]), cpx_floats_mut(out));
 }
 
 /// Next power of two >= n (n >= 1).
@@ -298,7 +329,8 @@ pub fn conv_causal(a: &[f32], b: &[f32], out_len: usize) -> Vec<f32> {
     let nfft = next_pow2(need.max(out_len));
     let fa = rfft(a, nfft);
     let fb = rfft(b, nfft);
-    let prod: Vec<Cpx> = fa.iter().zip(&fb).map(|(x, y)| x.mul(*y)).collect();
+    let mut prod = vec![Cpx::ZERO; nfft];
+    spectrum_product(&fa, &fb, &mut prod);
     irfft_real(prod, out_len)
 }
 
@@ -323,14 +355,14 @@ impl RfftCache {
         self.conv_spectrum(&fs, out_len)
     }
 
-    /// Convolve a precomputed signal half-spectrum with the cached kernel.
+    /// Convolve a precomputed signal half-spectrum with the cached
+    /// kernel.  The bin product runs on the simd complex-MAC kernel —
+    /// elementwise, so `simd on/off` and every thread count produce the
+    /// identical bits.
     pub fn conv_spectrum(&self, signal_spectrum: &[Cpx], out_len: usize) -> Vec<f32> {
-        let prod: Vec<Cpx> = self
-            .spectrum
-            .iter()
-            .zip(signal_spectrum)
-            .map(|(x, y)| x.mul(*y))
-            .collect();
+        let bins = self.spectrum.len().min(signal_spectrum.len());
+        let mut prod = vec![Cpx::ZERO; bins];
+        spectrum_product(&self.spectrum, signal_spectrum, &mut prod);
         irfft_half(&prod, self.nfft, out_len)
     }
 

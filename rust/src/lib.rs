@@ -28,7 +28,12 @@
 //! (nested kernels get a sub-budget share instead of serializing).
 //! Serial (`threads = 1`) and parallel execution are bit-exact,
 //! mirroring the paper's claim that the parallel and recurrent forms
-//! compute the same function.  The pool also runs **async jobs**
+//! compute the same function.  Below the thread level, the hot inner
+//! loops (dot/axpy, elementwise chains, the FFT spectrum product) run
+//! through the [`simd`] 8-lane kernel layer, whose vector and scalar
+//! paths share one canonical blocked accumulation order — so
+//! `simd on/off` is as bit-exact as `threads ∈ {1, 2, 8}`
+//! (`rust/tests/simd_equivalence.rs`).  The pool also runs **async jobs**
 //! (scoped via [`exec::parallel_rows_overlap`]): the data-parallel
 //! coordinator's `pipeline` mode overlaps the optimizer stage with the
 //! next batch's replica compute (staleness-1, double-buffered parameter
@@ -53,6 +58,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod optim;
 pub mod runtime;
+pub mod simd;
 pub mod tensor;
 pub mod train;
 pub mod util;

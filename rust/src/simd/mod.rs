@@ -1,0 +1,750 @@
+//! Explicit 8-lane SIMD kernel layer for the native substrate's hot
+//! inner loops — and the **canonical blocked accumulation order** that
+//! makes vectorization a no-op at the bit level.
+//!
+//! The paper turns LMU training into batched dense kernels, so past the
+//! thread levers (`crate::exec`, PRs 1–4) wall clock is bounded by
+//! single-thread kernel throughput: the dot/axpy loops in
+//! `tensor/matmul.rs`, the elementwise chains in `tensor/mod.rs`, and
+//! the complex multiply behind `fft::RfftCache::conv_batch`.  This
+//! module gives those loops an explicit vector shape ([`F32x8`]) while
+//! preserving the repo's determinism gate: every kernel exists as a
+//! *vector* path and a *scalar reference* path that produce
+//! **bit-identical** results, so `threads ∈ {1, 2, 8}` × `simd on/off`
+//! all print the same `train fingerprint:` line
+//! (`rust/tests/simd_equivalence.rs` pins kernel-level bit-equality;
+//! `./ci.sh determinism` diffs the end-to-end fingerprint).
+//!
+//! # The canonical blocked accumulation order
+//!
+//! Reductions are where vectorization usually changes bits: an 8-lane
+//! sum reassociates the adds.  Instead of letting each path pick its
+//! own association, *one* order is defined here and every path —
+//! scalar fallback, portable lane loops, feature-gated AVX — implements
+//! it exactly:
+//!
+//!  1. Eight accumulators `acc[0..8]`, all starting at `+0.0` (or
+//!     `-inf` for max).  Element `i` of the input always folds into
+//!     `acc[i % 8]`, block by block: `acc[j] += a[8k+j] * b[8k+j]`
+//!     (multiply, then add — two roundings, never a fused FMA, with the
+//!     accumulator on the add's left).
+//!  2. The lane tail (`len % 8` trailing elements) folds into the low
+//!     lanes only; the vector path's zero-filled tail load adds `+0.0`
+//!     to the high lanes, which is the bitwise identity because an
+//!     accumulator that starts at `+0.0` can never become `-0.0`
+//!     (`x + (-x)` rounds to `+0.0`, and `+0.0 + (-0.0) = +0.0`).
+//!  3. One fixed horizontal reduction tree:
+//!     `((acc0+acc1) + (acc2+acc3)) + ((acc4+acc5) + (acc6+acc7))`.
+//!
+//! Elementwise kernels (axpy, add/sub/mul/div, scaling, the complex
+//! multiply) need no such care — each output element is one fixed
+//! expression — but their vector and scalar paths still keep identical
+//! operand order, so even NaN-payload selection agrees.
+//!
+//! # Backends and the runtime knob
+//!
+//! [`F32x8`] is a plain `[f32; 8]` by default (compiles on the offline
+//! toolchain; the fixed width auto-vectorizes well).  Building with
+//! `--features simd-intrinsics` on `x86_64` swaps in an AVX backend
+//! behind the identical API (see `simd/x86.rs` for its contract).
+//! Orthogonally, the `PLMU_SIMD` environment variable (or
+//! [`set_enabled`]) routes the dispatching kernels to the scalar
+//! reference paths at runtime — `PLMU_SIMD=0` is how the CI determinism
+//! matrix proves the vector paths change no bits.
+
+#[cfg(not(all(feature = "simd-intrinsics", target_arch = "x86_64")))]
+mod portable;
+#[cfg(not(all(feature = "simd-intrinsics", target_arch = "x86_64")))]
+pub use portable::F32x8;
+
+#[cfg(all(feature = "simd-intrinsics", target_arch = "x86_64"))]
+mod x86;
+#[cfg(all(feature = "simd-intrinsics", target_arch = "x86_64"))]
+pub use x86::F32x8;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Vector width of [`F32x8`]: every blocked kernel processes this many
+/// elements per step and carries this many accumulators.
+pub const LANES: usize = 8;
+
+// --------------------------------------- the one canonical reduction tree
+//
+// Defined exactly once and shared by the scalar kernels below and both
+// F32x8 backends (which call in via `super::`), so the association can
+// never drift between paths — the bit-equality contract is upheld by
+// construction, not just by the differential tests.
+
+/// THE canonical horizontal sum: adjacent pairs, then pairs of pairs.
+#[inline]
+fn tree_sum(l: [f32; 8]) -> f32 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+/// The canonical max combine rule: strict-greater, so NaN candidates
+/// and ties (±0.0 included) keep the incumbent — total and
+/// deterministic where IEEE `maxNum` is not.
+#[inline]
+fn lane_gt(m: f32, v: f32) -> f32 {
+    if v > m {
+        v
+    } else {
+        m
+    }
+}
+
+/// THE canonical horizontal max: `tree_sum`'s tree shape combined with
+/// the `lane_gt` rule.
+#[inline]
+fn tree_max_gt(l: [f32; 8]) -> f32 {
+    lane_gt(
+        lane_gt(lane_gt(l[0], l[1]), lane_gt(l[2], l[3])),
+        lane_gt(lane_gt(l[4], l[5]), lane_gt(l[6], l[7])),
+    )
+}
+
+/// Runtime vector-path knob: 0 = unresolved, 1 = on, 2 = off.
+static SIMD_ENABLED: AtomicUsize = AtomicUsize::new(0);
+
+fn resolve_default() -> bool {
+    match std::env::var("PLMU_SIMD") {
+        Ok(v) => {
+            let v = v.trim();
+            !(v == "0" || v.eq_ignore_ascii_case("off") || v.eq_ignore_ascii_case("false"))
+        }
+        Err(_) => true,
+    }
+}
+
+/// Whether the dispatching kernels take the vector path (default: on,
+/// unless `PLMU_SIMD=0`/`off`/`false`).  Both settings are bit-identical
+/// by construction; the knob exists so the determinism gate can prove
+/// it end-to-end.
+pub fn enabled() -> bool {
+    match SIMD_ENABLED.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => {
+            let on = resolve_default();
+            // racy double-resolve is benign: resolve_default is deterministic
+            SIMD_ENABLED.store(if on { 1 } else { 2 }, Ordering::Relaxed);
+            on
+        }
+    }
+}
+
+/// Set the vector-path knob (tests and benches; production reads
+/// `PLMU_SIMD` once).  Flipping it mid-run is safe — the paths are
+/// bit-identical — but A/B timers should serialize on their own lock.
+pub fn set_enabled(on: bool) {
+    SIMD_ENABLED.store(if on { 1 } else { 2 }, Ordering::Relaxed);
+}
+
+// ------------------------------------------------------------ reductions
+
+/// Dot product in the canonical blocked order (module docs).  The entry
+/// point every row kernel uses: `matmul_nt` and `matvec` call it per
+/// output element.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    if enabled() {
+        dot_vec(a, b)
+    } else {
+        dot_scalar(a, b)
+    }
+}
+
+/// Vector path of [`dot`].
+pub fn dot_vec(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let blocks = n / LANES;
+    let mut acc = F32x8::zero();
+    for i in 0..blocks {
+        let o = i * LANES;
+        acc = acc.mul_acc(F32x8::load(&a[o..]), F32x8::load(&b[o..]));
+    }
+    let tail = blocks * LANES;
+    if tail < n {
+        // zero-filled high lanes add +0.0 — the bitwise identity (see
+        // the module docs' -0.0 argument)
+        acc = acc.mul_acc(F32x8::load_or(&a[tail..], 0.0), F32x8::load_or(&b[tail..], 0.0));
+    }
+    acc.hsum()
+}
+
+/// Resolve the [`dot`] path once — hot loops that compute many dots
+/// (`matmul_nt`, `matvec`) hoist the knob read out of their inner loop
+/// by calling through the returned function pointer.
+#[inline]
+pub fn dot_kernel() -> fn(&[f32], &[f32]) -> f32 {
+    if enabled() {
+        dot_vec
+    } else {
+        dot_scalar
+    }
+}
+
+/// Scalar reference of [`dot`]: the identical canonical order written
+/// as plain loops — bit-equal to the vector path on every input,
+/// NaN/Inf included.
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let blocks = n / LANES;
+    let mut acc = [0.0f32; LANES];
+    for i in 0..blocks {
+        let o = i * LANES;
+        for j in 0..LANES {
+            acc[j] += a[o + j] * b[o + j];
+        }
+    }
+    let tail = blocks * LANES;
+    for j in 0..n - tail {
+        acc[j] += a[tail + j] * b[tail + j];
+    }
+    tree_sum(acc)
+}
+
+/// Sum in the canonical blocked order (the softmax normalizer pass).
+#[inline]
+pub fn sum(xs: &[f32]) -> f32 {
+    if enabled() {
+        sum_vec(xs)
+    } else {
+        sum_scalar(xs)
+    }
+}
+
+/// Vector path of [`sum`].
+pub fn sum_vec(xs: &[f32]) -> f32 {
+    let n = xs.len();
+    let blocks = n / LANES;
+    let mut acc = F32x8::zero();
+    for i in 0..blocks {
+        acc = acc.add(F32x8::load(&xs[i * LANES..]));
+    }
+    let tail = blocks * LANES;
+    if tail < n {
+        acc = acc.add(F32x8::load_or(&xs[tail..], 0.0));
+    }
+    acc.hsum()
+}
+
+/// Scalar reference of [`sum`] — same canonical order, plain loops.
+pub fn sum_scalar(xs: &[f32]) -> f32 {
+    let n = xs.len();
+    let blocks = n / LANES;
+    let mut acc = [0.0f32; LANES];
+    for i in 0..blocks {
+        let o = i * LANES;
+        for j in 0..LANES {
+            acc[j] += xs[o + j];
+        }
+    }
+    let tail = blocks * LANES;
+    for j in 0..n - tail {
+        acc[j] += xs[tail + j];
+    }
+    tree_sum(acc)
+}
+
+/// Max under the canonical strict-greater rule and blocked order (the
+/// softmax stabilizer pass).  NaN never wins, ±0.0 ties keep the
+/// earlier value, an empty or all-NaN input yields `-inf` — total and
+/// deterministic, like `Tensor::argmax_rows`.
+#[inline]
+pub fn max(xs: &[f32]) -> f32 {
+    if enabled() {
+        max_vec(xs)
+    } else {
+        max_scalar(xs)
+    }
+}
+
+/// Vector path of [`max`].
+pub fn max_vec(xs: &[f32]) -> f32 {
+    let n = xs.len();
+    let blocks = n / LANES;
+    let mut acc = F32x8::splat(f32::NEG_INFINITY);
+    for i in 0..blocks {
+        acc = acc.max_gt(F32x8::load(&xs[i * LANES..]));
+    }
+    let tail = blocks * LANES;
+    if tail < n {
+        // -inf-filled high lanes never win the strict-greater rule
+        acc = acc.max_gt(F32x8::load_or(&xs[tail..], f32::NEG_INFINITY));
+    }
+    acc.hmax_gt()
+}
+
+/// Scalar reference of [`max`] — same canonical order, plain loops.
+pub fn max_scalar(xs: &[f32]) -> f32 {
+    let n = xs.len();
+    let blocks = n / LANES;
+    let mut acc = [f32::NEG_INFINITY; LANES];
+    for i in 0..blocks {
+        let o = i * LANES;
+        for j in 0..LANES {
+            acc[j] = lane_gt(acc[j], xs[o + j]);
+        }
+    }
+    let tail = blocks * LANES;
+    for j in 0..n - tail {
+        acc[j] = lane_gt(acc[j], xs[tail + j]);
+    }
+    tree_max_gt(acc)
+}
+
+// ----------------------------------------------------------------- scans
+
+/// One pass checking every value is finite (no NaN/Inf) — the shared
+/// gate for the matmul zero-skip (`0 · NaN` must stay `NaN`; see
+/// `tensor/matmul.rs`).  Boolean result, so the paths need no order
+/// discipline — they only must agree.
+#[inline]
+pub fn all_finite(xs: &[f32]) -> bool {
+    if enabled() {
+        all_finite_vec(xs)
+    } else {
+        all_finite_scalar(xs)
+    }
+}
+
+/// Vector path of [`all_finite`]: `v * 0.0` is `±0.0` exactly when `v`
+/// is finite and `NaN` otherwise, so a blocked sum of `v * 0.0` equals
+/// `0.0` iff every value is finite — branch-free per block.
+pub fn all_finite_vec(xs: &[f32]) -> bool {
+    let n = xs.len();
+    let blocks = n / LANES;
+    let zero = F32x8::zero();
+    let mut acc = F32x8::zero();
+    for i in 0..blocks {
+        acc = acc.add(F32x8::load(&xs[i * LANES..]).mul(zero));
+    }
+    let tail = blocks * LANES;
+    if tail < n {
+        acc = acc.add(F32x8::load_or(&xs[tail..], 0.0).mul(zero));
+    }
+    acc.hsum() == 0.0
+}
+
+/// Scalar reference of [`all_finite`].
+pub fn all_finite_scalar(xs: &[f32]) -> bool {
+    xs.iter().all(|v| v.is_finite())
+}
+
+// ----------------------------------------------------------- elementwise
+//
+// Elementwise kernels compute each output element with one fixed
+// expression, so vector and scalar paths are bit-identical by
+// construction; both exist anyway so the A/B bench and the differential
+// harness can time and pin them.
+
+/// `y[i] += alpha * x[i]` — the axpy behind the matmul row kernels and
+/// `Tensor::axpy`.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    if enabled() {
+        axpy_vec(alpha, x, y)
+    } else {
+        axpy_scalar(alpha, x, y)
+    }
+}
+
+/// Resolve the [`axpy`] path once — the matmul row kernels call it
+/// per rank-1 update, so the knob read is hoisted to the kernel entry.
+#[inline]
+pub fn axpy_kernel() -> fn(f32, &[f32], &mut [f32]) {
+    if enabled() {
+        axpy_vec
+    } else {
+        axpy_scalar
+    }
+}
+
+/// Vector path of [`axpy`].
+pub fn axpy_vec(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = y.len();
+    let blocks = n / LANES;
+    let a = F32x8::splat(alpha);
+    for i in 0..blocks {
+        let o = i * LANES;
+        F32x8::load(&y[o..]).mul_acc(a, F32x8::load(&x[o..])).store(&mut y[o..]);
+    }
+    for j in blocks * LANES..n {
+        y[j] += alpha * x[j];
+    }
+}
+
+/// Scalar reference of [`axpy`].
+pub fn axpy_scalar(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += alpha * xv;
+    }
+}
+
+/// `y[i] += x[i]` (`Tensor::add_assign`, the `add_row` bias broadcast).
+#[inline]
+pub fn add_assign(y: &mut [f32], x: &[f32]) {
+    if enabled() {
+        add_assign_vec(y, x)
+    } else {
+        add_assign_scalar(y, x)
+    }
+}
+
+/// Vector path of [`add_assign`].
+pub fn add_assign_vec(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = y.len();
+    let blocks = n / LANES;
+    for i in 0..blocks {
+        let o = i * LANES;
+        F32x8::load(&y[o..]).add(F32x8::load(&x[o..])).store(&mut y[o..]);
+    }
+    for j in blocks * LANES..n {
+        y[j] += x[j];
+    }
+}
+
+/// Scalar reference of [`add_assign`].
+pub fn add_assign_scalar(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += xv;
+    }
+}
+
+/// `xs[i] *= s` (the softmax normalize pass, `Tensor::scale`).
+#[inline]
+pub fn scale_assign(xs: &mut [f32], s: f32) {
+    if enabled() {
+        scale_assign_vec(xs, s)
+    } else {
+        scale_assign_scalar(xs, s)
+    }
+}
+
+/// Vector path of [`scale_assign`].
+pub fn scale_assign_vec(xs: &mut [f32], s: f32) {
+    let n = xs.len();
+    let blocks = n / LANES;
+    let sv = F32x8::splat(s);
+    for i in 0..blocks {
+        let o = i * LANES;
+        F32x8::load(&xs[o..]).mul(sv).store(&mut xs[o..]);
+    }
+    for x in &mut xs[blocks * LANES..] {
+        *x *= s;
+    }
+}
+
+/// Scalar reference of [`scale_assign`].
+pub fn scale_assign_scalar(xs: &mut [f32], s: f32) {
+    for x in xs.iter_mut() {
+        *x *= s;
+    }
+}
+
+macro_rules! binary_kernel {
+    ($name:ident, $vec:ident, $scalar:ident, $method:ident, $op:tt, $doc:expr) => {
+        #[doc = $doc]
+        #[inline]
+        pub fn $name(a: &[f32], b: &[f32], out: &mut [f32]) {
+            if enabled() {
+                $vec(a, b, out)
+            } else {
+                $scalar(a, b, out)
+            }
+        }
+
+        /// Vector path (bit-identical to the scalar reference).
+        pub fn $vec(a: &[f32], b: &[f32], out: &mut [f32]) {
+            debug_assert!(a.len() == out.len() && b.len() == out.len());
+            let n = out.len();
+            let blocks = n / LANES;
+            for i in 0..blocks {
+                let o = i * LANES;
+                F32x8::load(&a[o..]).$method(F32x8::load(&b[o..])).store(&mut out[o..]);
+            }
+            for j in blocks * LANES..n {
+                out[j] = a[j] $op b[j];
+            }
+        }
+
+        /// Scalar reference (bit-identical to the vector path).
+        pub fn $scalar(a: &[f32], b: &[f32], out: &mut [f32]) {
+            debug_assert!(a.len() == out.len() && b.len() == out.len());
+            for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+                *o = x $op y;
+            }
+        }
+    };
+}
+
+binary_kernel!(add, add_vec, add_scalar, add, +, "`out[i] = a[i] + b[i]` (`Tensor::add`).");
+binary_kernel!(sub, sub_vec, sub_scalar, sub, -, "`out[i] = a[i] - b[i]` (`Tensor::sub`).");
+binary_kernel!(mul, mul_vec, mul_scalar, mul, *, "`out[i] = a[i] * b[i]` (`Tensor::mul`).");
+binary_kernel!(div, div_vec, div_scalar, div, /, "`out[i] = a[i] / b[i]` (`Tensor::div`).");
+
+/// `out[i] = x[i] * s` (`Tensor::scale` out of place).
+#[inline]
+pub fn scale(x: &[f32], s: f32, out: &mut [f32]) {
+    if enabled() {
+        scale_vec(x, s, out)
+    } else {
+        scale_scalar(x, s, out)
+    }
+}
+
+/// Vector path of [`scale`].
+pub fn scale_vec(x: &[f32], s: f32, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    let n = out.len();
+    let blocks = n / LANES;
+    let sv = F32x8::splat(s);
+    for i in 0..blocks {
+        let o = i * LANES;
+        F32x8::load(&x[o..]).mul(sv).store(&mut out[o..]);
+    }
+    for j in blocks * LANES..n {
+        out[j] = x[j] * s;
+    }
+}
+
+/// Scalar reference of [`scale`].
+pub fn scale_scalar(x: &[f32], s: f32, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = v * s;
+    }
+}
+
+// ------------------------------------------------------- complex multiply
+
+/// Elementwise complex multiply over interleaved `(re, im)` `f64`
+/// pairs — the spectrum product inside `fft::RfftCache` (`F{H} · F{U}`,
+/// the paper's eq. 26 hot loop).  `a`, `b`, and `out` have the same
+/// even length; element `k` computes exactly `Cpx::mul`'s expression:
+/// `re = a.re*b.re - a.im*b.im`, `im = a.re*b.im + a.im*b.re`.
+///
+/// The FFT works in `f64`, so this kernel is four 4-wide lanes' worth
+/// of work per 8-`f64` block rather than an [`F32x8`] — the portable
+/// backend's fixed-width straight-line blocks auto-vectorize the same
+/// way.  Elementwise, so both paths are bit-identical by construction.
+#[inline]
+pub fn cmul(a: &[f64], b: &[f64], out: &mut [f64]) {
+    if enabled() {
+        cmul_vec(a, b, out)
+    } else {
+        cmul_scalar(a, b, out)
+    }
+}
+
+/// Vector path of [`cmul`]: blocks of four complex values (eight
+/// `f64`s) as straight-line code, then a per-pair tail.
+pub fn cmul_vec(a: &[f64], b: &[f64], out: &mut [f64]) {
+    debug_assert!(a.len() == out.len() && b.len() == out.len());
+    debug_assert_eq!(out.len() % 2, 0, "interleaved (re, im) pairs");
+    let pairs = out.len() / 2;
+    let blocks = pairs / 4;
+    for i in 0..blocks {
+        let o = i * 8;
+        let (ab, bb) = (&a[o..o + 8], &b[o..o + 8]);
+        let ob = &mut out[o..o + 8];
+        for j in 0..4 {
+            let (re, im) = (2 * j, 2 * j + 1);
+            ob[re] = ab[re] * bb[re] - ab[im] * bb[im];
+            ob[im] = ab[re] * bb[im] + ab[im] * bb[re];
+        }
+    }
+    for k in blocks * 4..pairs {
+        let (re, im) = (2 * k, 2 * k + 1);
+        out[re] = a[re] * b[re] - a[im] * b[im];
+        out[im] = a[re] * b[im] + a[im] * b[re];
+    }
+}
+
+/// Scalar reference of [`cmul`].
+pub fn cmul_scalar(a: &[f64], b: &[f64], out: &mut [f64]) {
+    debug_assert!(a.len() == out.len() && b.len() == out.len());
+    debug_assert_eq!(out.len() % 2, 0, "interleaved (re, im) pairs");
+    for k in 0..out.len() / 2 {
+        let (re, im) = (2 * k, 2 * k + 1);
+        out[re] = a[re] * b[re] - a[im] * b[im];
+        out[im] = a[re] * b[im] + a[im] * b[re];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // --------------------------------------------------- F32x8 itself
+
+    #[test]
+    fn load_store_roundtrip_at_every_alignment_offset() {
+        // a deliberately unaligned window into a larger buffer at every
+        // offset 0..8: load then store must reproduce the exact bits
+        let buf: Vec<f32> = (0..24).map(|i| (i as f32) * 1.25 - 7.5).collect();
+        for off in 0..LANES {
+            let v = F32x8::load(&buf[off..]);
+            assert_eq!(v.to_array(), &buf[off..off + 8]);
+            let mut out = [0.0f32; 8];
+            v.store(&mut out);
+            for (a, b) in out.iter().zip(&buf[off..off + 8]) {
+                assert_eq!(a.to_bits(), b.to_bits(), "offset {off}");
+            }
+        }
+    }
+
+    #[test]
+    fn partial_load_fills_high_lanes_and_partial_store_stops() {
+        let xs = [1.0f32, 2.0, 3.0];
+        for take in 0..=LANES {
+            let src = &xs[..take.min(xs.len())];
+            let v = F32x8::load_or(src, -9.0);
+            let arr = v.to_array();
+            for (j, lane) in arr.iter().enumerate() {
+                let want = if j < src.len() { src[j] } else { -9.0 };
+                assert_eq!(lane.to_bits(), want.to_bits(), "take={take} lane={j}");
+            }
+        }
+        // store_partial writes exactly n lanes
+        let v = F32x8::splat(4.0);
+        let mut out = [0.0f32; 8];
+        v.store_partial(&mut out, 3);
+        assert_eq!(out, [4.0, 4.0, 4.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn hsum_tree_order_is_pinned() {
+        // 1e8 + 1.0 rounds to 1e8 in f32, so the three natural
+        // reduction orders give three different answers on this input:
+        //   adjacent-pairs tree (canonical): ((1e8+1)+(-1e8+1)) + ... = 0.0
+        //   sequential left fold:                                      1.0
+        //   low/high-halves tree:                                      4.0
+        // asserting 0.0 exactly pins the canonical tree.
+        let v = F32x8::load(&[1e8, 1.0, -1e8, 1.0, 1e8, 1.0, -1e8, 1.0]);
+        assert_eq!(v.hsum().to_bits(), 0.0f32.to_bits());
+        // and the scalar kernels reduce through the identical tree
+        assert_eq!(sum_scalar(&[1e8, 1.0, -1e8, 1.0, 1e8, 1.0, -1e8, 1.0]).to_bits(), 0.0f32.to_bits());
+        assert_eq!(sum_vec(&[1e8, 1.0, -1e8, 1.0, 1e8, 1.0, -1e8, 1.0]).to_bits(), 0.0f32.to_bits());
+    }
+
+    #[test]
+    fn mul_acc_uses_two_roundings_not_fma() {
+        // with a = 1 + 2^-12: a*a = 1 + 2^-11 + 2^-24, which rounds to
+        // 1 + 2^-11 as an f32 multiply; a fused FMA of (a*a - 1) would
+        // keep the 2^-24 term.  The canonical order demands the rounded
+        // (two-op) result.
+        let a = 1.0f32 + f32::powi(2.0, -12);
+        let acc = F32x8::splat(-1.0);
+        let r = acc.mul_acc(F32x8::splat(a), F32x8::splat(a)).to_array();
+        let want = f32::powi(2.0, -11);
+        for lane in r {
+            assert_eq!(lane.to_bits(), want.to_bits(), "{lane} vs {want}");
+        }
+    }
+
+    #[test]
+    fn max_gt_rule_is_total_and_tie_stable() {
+        // NaN candidates never win; +0.0 vs -0.0 ties keep self
+        let m = F32x8::load(&[1.0, f32::NEG_INFINITY, 0.0, -0.0, 5.0, -1.0, 2.0, 0.5]);
+        let o = F32x8::load(&[f32::NAN, 3.0, -0.0, 0.0, f32::NAN, -2.0, 2.0, 0.75]);
+        let r = m.max_gt(o).to_array();
+        assert_eq!(r[0].to_bits(), 1.0f32.to_bits(), "NaN must not win");
+        assert_eq!(r[1].to_bits(), 3.0f32.to_bits());
+        assert_eq!(r[2].to_bits(), 0.0f32.to_bits(), "-0.0 is not > 0.0");
+        assert_eq!(r[3].to_bits(), (-0.0f32).to_bits(), "0.0 is not > -0.0");
+        assert_eq!(r[4].to_bits(), 5.0f32.to_bits());
+        assert_eq!(r[5].to_bits(), (-1.0f32).to_bits());
+        assert_eq!(r[6].to_bits(), 2.0f32.to_bits());
+        assert_eq!(r[7].to_bits(), 0.75f32.to_bits());
+    }
+
+    #[test]
+    fn hmax_tree_matches_scalar_kernel() {
+        let xs = [3.0f32, -1.0, 7.5, 7.5, f32::NAN, 2.0, -0.0, 0.0];
+        let v = F32x8::load(&xs).hmax_gt();
+        assert_eq!(v.to_bits(), 7.5f32.to_bits());
+        assert_eq!(max_scalar(&xs).to_bits(), v.to_bits());
+        assert_eq!(max_vec(&xs).to_bits(), v.to_bits());
+    }
+
+    // ------------------------------------------------------- the knob
+
+    #[test]
+    fn knob_roundtrip_and_paths_agree() {
+        let was = enabled();
+        let xs: Vec<f32> = (0..37).map(|i| (i as f32).sin() * 100.0).collect();
+        let ys: Vec<f32> = (0..37).map(|i| (i as f32).cos() * 0.01).collect();
+        set_enabled(true);
+        assert!(enabled());
+        let on = dot(&xs, &ys);
+        set_enabled(false);
+        assert!(!enabled());
+        let off = dot(&xs, &ys);
+        assert_eq!(on.to_bits(), off.to_bits(), "vector and scalar dot differ");
+        set_enabled(was);
+    }
+
+    // --------------------------------------- kernel spot checks (the
+    // exhaustive sweep lives in rust/tests/simd_equivalence.rs)
+
+    #[test]
+    fn dot_paths_bit_equal_across_lane_remainders() {
+        for n in [0usize, 1, 7, 8, 9, 16, 17, 31, 32, 33] {
+            let a: Vec<f32> = (0..n).map(|i| 1e8 * ((i % 3) as f32 - 1.0) + i as f32).collect();
+            let b: Vec<f32> = (0..n).map(|i| ((i * 7 % 5) as f32) - 2.0).collect();
+            assert_eq!(
+                dot_vec(&a, &b).to_bits(),
+                dot_scalar(&a, &b).to_bits(),
+                "dot n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn all_finite_paths_agree_on_nan_inf_and_clean() {
+        for n in [0usize, 1, 7, 8, 9, 63, 64, 65] {
+            let clean: Vec<f32> = (0..n).map(|i| i as f32 - 3.0).collect();
+            assert_eq!(all_finite_vec(&clean), all_finite_scalar(&clean), "clean n={n}");
+            assert!(all_finite_vec(&clean));
+            for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+                for pos in [0, n.saturating_sub(1), n / 2] {
+                    if n == 0 {
+                        continue;
+                    }
+                    let mut xs = clean.clone();
+                    xs[pos] = bad;
+                    assert!(!all_finite_vec(&xs), "n={n} pos={pos} bad={bad}");
+                    assert_eq!(all_finite_vec(&xs), all_finite_scalar(&xs));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cmul_matches_complex_formula() {
+        let n = 11usize; // complex pairs: block of 4 + odd tail
+        let a: Vec<f64> = (0..2 * n).map(|i| (i as f64) * 0.3 - 2.0).collect();
+        let b: Vec<f64> = (0..2 * n).map(|i| 1.5 - (i as f64) * 0.2).collect();
+        let mut v = vec![0.0f64; 2 * n];
+        let mut s = vec![0.0f64; 2 * n];
+        cmul_vec(&a, &b, &mut v);
+        cmul_scalar(&a, &b, &mut s);
+        for k in 0..n {
+            let (re, im) = (2 * k, 2 * k + 1);
+            let wre = a[re] * b[re] - a[im] * b[im];
+            let wim = a[re] * b[im] + a[im] * b[re];
+            assert_eq!(v[re].to_bits(), wre.to_bits(), "re {k}");
+            assert_eq!(v[im].to_bits(), wim.to_bits(), "im {k}");
+            assert_eq!(v[re].to_bits(), s[re].to_bits());
+            assert_eq!(v[im].to_bits(), s[im].to_bits());
+        }
+    }
+}

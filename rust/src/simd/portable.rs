@@ -1,0 +1,161 @@
+//! Portable [`F32x8`] backend: a plain `[f32; 8]` with fixed-width lane
+//! loops.  This is the default (and the only one the offline toolchain
+//! compiles); the fixed width lets the compiler unroll and
+//! auto-vectorize each op, while the *semantics* stay exactly one IEEE
+//! operation per lane in a pinned order — which is what the canonical
+//! blocked kernels in the parent module rely on for bit-equality with
+//! their scalar references.
+
+/// Eight `f32` lanes.  Every op is one IEEE-754 operation per lane; no
+/// op ever fuses a multiply with an add (see [`F32x8::mul_acc`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct F32x8([f32; 8]);
+
+// Lane ops deliberately use the plain names `add`/`sub`/`mul`/`div` as
+// inherent methods (like `fft::Cpx`) rather than the std::ops traits:
+// operator sugar would hide that each call is one pinned IEEE op per
+// lane, which is the whole point of this type.
+#[allow(clippy::should_implement_trait)]
+impl F32x8 {
+    /// All lanes `+0.0` — the reduction identity the blocked kernels
+    /// start from.
+    #[inline]
+    pub fn zero() -> Self {
+        F32x8([0.0; 8])
+    }
+
+    /// All lanes `v`.
+    #[inline]
+    pub fn splat(v: f32) -> Self {
+        F32x8([v; 8])
+    }
+
+    /// Load the first 8 elements of `xs` (panics when `xs.len() < 8`).
+    #[inline]
+    pub fn load(xs: &[f32]) -> Self {
+        let mut lanes = [0.0f32; 8];
+        lanes.copy_from_slice(&xs[..8]);
+        F32x8(lanes)
+    }
+
+    /// Load up to 8 elements of `xs`, filling the remaining high lanes
+    /// with `fill` — the lane-tail load.  The caller picks a `fill`
+    /// that is the identity of the reduction it feeds (`+0.0` for sums
+    /// of products, `-inf` for the max rule).
+    #[inline]
+    pub fn load_or(xs: &[f32], fill: f32) -> Self {
+        let mut lanes = [fill; 8];
+        for (lane, &x) in lanes.iter_mut().zip(xs.iter().take(8)) {
+            *lane = x;
+        }
+        F32x8(lanes)
+    }
+
+    /// Store the 8 lanes into the first 8 elements of `out` (panics
+    /// when `out.len() < 8`).
+    #[inline]
+    pub fn store(self, out: &mut [f32]) {
+        out[..8].copy_from_slice(&self.0);
+    }
+
+    /// Store the low `n` lanes into `out[..n]` (`n <= 8`) — the
+    /// lane-tail store.
+    #[inline]
+    pub fn store_partial(self, out: &mut [f32], n: usize) {
+        out[..n].copy_from_slice(&self.0[..n]);
+    }
+
+    /// The lanes as a plain array.
+    #[inline]
+    pub fn to_array(self) -> [f32; 8] {
+        self.0
+    }
+
+    /// Lanewise `self + o`.
+    #[inline]
+    pub fn add(self, o: F32x8) -> Self {
+        let mut r = self.0;
+        for (a, b) in r.iter_mut().zip(&o.0) {
+            *a += b;
+        }
+        F32x8(r)
+    }
+
+    /// Lanewise `self - o`.
+    #[inline]
+    pub fn sub(self, o: F32x8) -> Self {
+        let mut r = self.0;
+        for (a, b) in r.iter_mut().zip(&o.0) {
+            *a -= b;
+        }
+        F32x8(r)
+    }
+
+    /// Lanewise `self * o`.
+    #[inline]
+    pub fn mul(self, o: F32x8) -> Self {
+        let mut r = self.0;
+        for (a, b) in r.iter_mut().zip(&o.0) {
+            *a *= b;
+        }
+        F32x8(r)
+    }
+
+    /// Lanewise `self / o`.
+    #[inline]
+    pub fn div(self, o: F32x8) -> Self {
+        let mut r = self.0;
+        for (a, b) in r.iter_mut().zip(&o.0) {
+            *a /= b;
+        }
+        F32x8(r)
+    }
+
+    /// Lanewise multiply-accumulate `self + a * b` with **two
+    /// roundings** (an IEEE multiply, then an IEEE add) — never a fused
+    /// FMA, and always with the accumulator as the add's left operand.
+    /// This is the exact expression the scalar kernels write as
+    /// `acc += a * b`, so vector and scalar paths agree bit-for-bit,
+    /// NaN payloads included.
+    #[inline]
+    pub fn mul_acc(self, a: F32x8, b: F32x8) -> Self {
+        let mut r = self.0;
+        for ((acc, x), y) in r.iter_mut().zip(&a.0).zip(&b.0) {
+            *acc += x * y;
+        }
+        F32x8(r)
+    }
+
+    /// Lanewise max under the canonical strict-greater rule: lane =
+    /// `if o > self { o } else { self }`.  NaN in `o` never wins (the
+    /// comparison is false) and ties — including `+0.0` vs `-0.0` —
+    /// keep `self`, so the result is deterministic where IEEE `maxNum`
+    /// is not.
+    #[inline]
+    pub fn max_gt(self, o: F32x8) -> Self {
+        let mut r = self.0;
+        for (m, &v) in r.iter_mut().zip(&o.0) {
+            if v > *m {
+                *m = v;
+            }
+        }
+        F32x8(r)
+    }
+
+    /// Horizontal sum in the canonical fixed reduction tree
+    /// `((l0+l1) + (l2+l3)) + ((l4+l5) + (l6+l7))` — adjacent pairs,
+    /// then pairs of pairs.  The tree is defined exactly once, in the
+    /// parent module, and shared by every backend and scalar kernel;
+    /// reassociating it changes results (see the unit tests).
+    #[inline]
+    pub fn hsum(self) -> f32 {
+        super::tree_sum(self.0)
+    }
+
+    /// Horizontal max over the same fixed tree as [`F32x8::hsum`],
+    /// combining with the [`F32x8::max_gt`] strict-greater rule.
+    #[inline]
+    pub fn hmax_gt(self) -> f32 {
+        super::tree_max_gt(self.0)
+    }
+}

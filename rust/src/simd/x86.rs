@@ -1,0 +1,153 @@
+//! AVX [`F32x8`] backend, selected by the `simd-intrinsics` feature on
+//! `x86_64`.  Same API and — critically — the same *semantics* as the
+//! portable backend: one IEEE operation per lane, accumulator on the
+//! add's left, no FMA contraction (the `vfmadd` family is deliberately
+//! not used), and horizontal reductions that extract the lanes and run
+//! the identical fixed scalar tree.  x86 NaN selection rules apply to
+//! the same operand order as the scalar kernels' expressions, so bits
+//! match even for exotic NaN payloads.
+//!
+//! Enabling the feature asserts the target supports AVX — enforced at
+//! compile time by the `compile_error!` below: build with
+//! `RUSTFLAGS="-C target-feature=+avx"` (or a `target-cpu` that implies
+//! it).  The feature is an explicit opt-in, not a runtime-detected fast
+//! path, which keeps the default offline build free of `unsafe` feature
+//! detection machinery.
+
+#[cfg(not(target_feature = "avx"))]
+compile_error!(
+    "the `simd-intrinsics` feature requires AVX codegen: build with \
+     RUSTFLAGS=\"-C target-feature=+avx\" (or a target-cpu that implies AVX)"
+);
+
+use core::arch::x86_64::{
+    __m256, _mm256_add_ps, _mm256_blendv_ps, _mm256_cmp_ps, _mm256_div_ps, _mm256_loadu_ps,
+    _mm256_mul_ps, _mm256_set1_ps, _mm256_setzero_ps, _mm256_storeu_ps, _mm256_sub_ps,
+    _CMP_GT_OQ,
+};
+
+/// Eight `f32` lanes in one AVX register.  See the portable backend for
+/// the canonical semantics every op here must reproduce bit-for-bit.
+#[derive(Clone, Copy, Debug)]
+pub struct F32x8(__m256);
+
+// Inherent `add`/`sub`/`mul`/`div` on purpose — see the portable
+// backend's note.
+#[allow(clippy::should_implement_trait)]
+impl F32x8 {
+    /// All lanes `+0.0`.
+    #[inline]
+    pub fn zero() -> Self {
+        // SAFETY: caller of this backend opted into AVX (module docs).
+        F32x8(unsafe { _mm256_setzero_ps() })
+    }
+
+    /// All lanes `v`.
+    #[inline]
+    pub fn splat(v: f32) -> Self {
+        F32x8(unsafe { _mm256_set1_ps(v) })
+    }
+
+    /// Load the first 8 elements of `xs` (panics when `xs.len() < 8`).
+    #[inline]
+    pub fn load(xs: &[f32]) -> Self {
+        assert!(xs.len() >= 8);
+        // SAFETY: bounds checked above; loadu has no alignment demand.
+        F32x8(unsafe { _mm256_loadu_ps(xs.as_ptr()) })
+    }
+
+    /// Load up to 8 elements of `xs`, filling the high lanes with
+    /// `fill` (the lane-tail load; `fill` must be the reduction
+    /// identity of whatever consumes the lanes).
+    #[inline]
+    pub fn load_or(xs: &[f32], fill: f32) -> Self {
+        let mut lanes = [fill; 8];
+        for (lane, &x) in lanes.iter_mut().zip(xs.iter().take(8)) {
+            *lane = x;
+        }
+        // SAFETY: lanes is a properly aligned-for-loadu local array.
+        F32x8(unsafe { _mm256_loadu_ps(lanes.as_ptr()) })
+    }
+
+    /// Store the 8 lanes into the first 8 elements of `out`.
+    #[inline]
+    pub fn store(self, out: &mut [f32]) {
+        assert!(out.len() >= 8);
+        // SAFETY: bounds checked above; storeu has no alignment demand.
+        unsafe { _mm256_storeu_ps(out.as_mut_ptr(), self.0) }
+    }
+
+    /// Store the low `n` lanes into `out[..n]` (`n <= 8`).
+    #[inline]
+    pub fn store_partial(self, out: &mut [f32], n: usize) {
+        out[..n].copy_from_slice(&self.to_array()[..n]);
+    }
+
+    /// The lanes as a plain array.
+    #[inline]
+    pub fn to_array(self) -> [f32; 8] {
+        let mut lanes = [0.0f32; 8];
+        // SAFETY: the local array is exactly 8 f32s.
+        unsafe { _mm256_storeu_ps(lanes.as_mut_ptr(), self.0) };
+        lanes
+    }
+
+    /// Lanewise `self + o`.
+    #[inline]
+    pub fn add(self, o: F32x8) -> Self {
+        F32x8(unsafe { _mm256_add_ps(self.0, o.0) })
+    }
+
+    /// Lanewise `self - o`.
+    #[inline]
+    pub fn sub(self, o: F32x8) -> Self {
+        F32x8(unsafe { _mm256_sub_ps(self.0, o.0) })
+    }
+
+    /// Lanewise `self * o`.
+    #[inline]
+    pub fn mul(self, o: F32x8) -> Self {
+        F32x8(unsafe { _mm256_mul_ps(self.0, o.0) })
+    }
+
+    /// Lanewise `self / o`.
+    #[inline]
+    pub fn div(self, o: F32x8) -> Self {
+        F32x8(unsafe { _mm256_div_ps(self.0, o.0) })
+    }
+
+    /// Lanewise `self + a * b`, two roundings (`vmulps` then `vaddps`,
+    /// never `vfmadd`), accumulator as the add's left operand — the
+    /// exact expression shape of the scalar kernels' `acc += a * b`.
+    #[inline]
+    pub fn mul_acc(self, a: F32x8, b: F32x8) -> Self {
+        F32x8(unsafe { _mm256_add_ps(self.0, _mm256_mul_ps(a.0, b.0)) })
+    }
+
+    /// Lanewise max under the canonical strict-greater rule
+    /// (`if o > self { o } else { self }`): an ordered-quiet greater
+    /// compare selects `o` only where it is strictly greater, so NaN
+    /// candidates never win and ±0.0 ties keep `self` — deterministic
+    /// where `vmaxps` is not.
+    #[inline]
+    pub fn max_gt(self, o: F32x8) -> Self {
+        F32x8(unsafe {
+            let gt = _mm256_cmp_ps::<_CMP_GT_OQ>(o.0, self.0);
+            _mm256_blendv_ps(self.0, o.0, gt)
+        })
+    }
+
+    /// Horizontal sum via the canonical fixed tree — the lanes are
+    /// extracted and reduced by the parent module's single shared tree
+    /// helper, so the order cannot drift between backends.
+    #[inline]
+    pub fn hsum(self) -> f32 {
+        super::tree_sum(self.to_array())
+    }
+
+    /// Horizontal max over the same fixed tree, strict-greater rule.
+    #[inline]
+    pub fn hmax_gt(self) -> f32 {
+        super::tree_max_gt(self.to_array())
+    }
+}

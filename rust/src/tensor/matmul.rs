@@ -2,7 +2,7 @@
 //! kernel of the native trainer; the layout choices matter:
 //!
 //!  * `matmul`   — C = A·B with an i-k-j loop order so the inner loop is a
-//!    contiguous axpy over B's rows (auto-vectorizes well);
+//!    contiguous axpy over B's rows (explicit 8-lane kernel, see below);
 //!  * `matmul_tn`— C = Aᵀ·B without materializing Aᵀ (used by backprop for
 //!    weight gradients: dW = Xᵀ·dY);
 //!  * `matmul_nt`— C = A·Bᵀ (used by backprop for input gradients:
@@ -28,10 +28,20 @@
 //! when B is finite the skip is bit-exact (the accumulator starts at
 //! `+0.0` and can never become `-0.0`, so adding `±0.0` is the identity),
 //! and when B carries any NaN/Inf the skip is disabled so propagation
-//! matches the naive reference exactly.
+//! matches the naive reference exactly.  Both the scan
+//! (`simd::all_finite`) and the gated inner axpy (`GatedAxpy`) live
+//! in exactly one place, shared by `matmul` and `matmul_tn`, so the
+//! SIMD and scalar paths cannot drift apart.
+//!
+//! The inner loops run on the `crate::simd` 8-lane kernel layer:
+//! the gated axpy is elementwise (bit-identical however it vectorizes)
+//! and [`dot`] uses the canonical blocked accumulation order, so
+//! `simd on/off` changes no bits anywhere in this file
+//! (`rust/tests/simd_equivalence.rs`).
 
 use super::Tensor;
 use crate::exec;
+use crate::simd;
 
 const KC: usize = 256; // k-panel height (keeps a B panel ~KC*cols*4B in cache)
 
@@ -42,26 +52,17 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(k, kb, "matmul inner dims: {:?} x {:?}", a.shape(), b.shape());
     let mut c = Tensor::zeros(&[m, n]);
     let (ad, bd) = (a.data(), b.data());
-    // zero-skip is only sound when B carries no NaN/Inf (0 · NaN = NaN)
-    let skip_zeros = all_finite(bd);
+    let gate = GatedAxpy::new(bd);
     let plan = exec::plan_for(m, m * k * n);
     exec::parallel_rows_mut(c.data_mut(), n, plan, |i0, cblock| {
-        matmul_rows(ad, bd, cblock, i0, k, n, skip_zeros);
+        matmul_rows(ad, bd, cblock, i0, k, n, gate);
     });
     c
 }
 
 /// The serial kernel over one contiguous block of C's rows
 /// (`cblock` = rows `i0 ..` of C).
-fn matmul_rows(
-    ad: &[f32],
-    bd: &[f32],
-    cblock: &mut [f32],
-    i0: usize,
-    k: usize,
-    n: usize,
-    skip_zeros: bool,
-) {
+fn matmul_rows(ad: &[f32], bd: &[f32], cblock: &mut [f32], i0: usize, k: usize, n: usize, gate: GatedAxpy) {
     let rows = if n == 0 { 0 } else { cblock.len() / n };
     for k0 in (0..k).step_by(KC) {
         let k1 = (k0 + KC).min(k);
@@ -69,16 +70,42 @@ fn matmul_rows(
             let i = i0 + r;
             let crow = &mut cblock[r * n..(r + 1) * n];
             for p in k0..k1 {
-                let aip = ad[i * k + p];
-                if aip == 0.0 && skip_zeros {
-                    continue;
-                }
-                let brow = &bd[p * n..(p + 1) * n];
-                for (cv, bv) in crow.iter_mut().zip(brow) {
-                    *cv += aip * bv;
-                }
+                gate.apply(ad[i * k + p], &bd[p * n..(p + 1) * n], crow);
             }
         }
+    }
+}
+
+/// The one shared inner kernel of `matmul` and `matmul_tn`:
+/// `crow += a * brow`, with the finiteness-gated zero skip hoisted here
+/// so the skip logic exists exactly once — the SIMD and scalar axpy
+/// paths sit behind it and cannot drift from each other.  Both the
+/// finiteness scan and the `PLMU_SIMD` dispatch resolve ONCE, at kernel
+/// entry, so the inner rank-1 loop pays neither.
+///
+/// The skip is bit-exact for finite B (adding `a · brow = ±0.0` to an
+/// accumulator that can never be `-0.0` is the identity); construction
+/// disables the skip whenever B carries NaN/Inf so `0 · NaN` propagates
+/// exactly like the naive reference.
+#[derive(Clone, Copy)]
+struct GatedAxpy {
+    /// zero-skip soundness: true iff B is entirely finite
+    skip_zeros: bool,
+    /// the resolved simd axpy path (vector or scalar reference)
+    axpy: fn(f32, &[f32], &mut [f32]),
+}
+
+impl GatedAxpy {
+    fn new(b: &[f32]) -> Self {
+        GatedAxpy { skip_zeros: simd::all_finite(b), axpy: simd::axpy_kernel() }
+    }
+
+    #[inline]
+    fn apply(&self, a: f32, brow: &[f32], crow: &mut [f32]) {
+        if a == 0.0 && self.skip_zeros {
+            return;
+        }
+        (self.axpy)(a, brow, crow);
     }
 }
 
@@ -89,7 +116,7 @@ pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(k, kb, "matmul_tn inner dims: {:?} x {:?}", a.shape(), b.shape());
     let mut c = Tensor::zeros(&[m, n]);
     let (ad, bd) = (a.data(), b.data());
-    let skip_zeros = all_finite(bd);
+    let gate = GatedAxpy::new(bd);
     let plan = exec::plan_for(m, m * k * n);
     // Each chunk owns rows [i0, i0+rows) of C and scans all k rank-1
     // updates itself: contiguous in B's row, p-ascending per element
@@ -100,14 +127,7 @@ pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
             let brow = &bd[p * n..(p + 1) * n];
             let arow = &ad[p * m..(p + 1) * m];
             for r in 0..rows {
-                let av = arow[i0 + r];
-                if av == 0.0 && skip_zeros {
-                    continue;
-                }
-                let crow = &mut cblock[r * n..(r + 1) * n];
-                for (cv, bv) in crow.iter_mut().zip(brow) {
-                    *cv += av * bv;
-                }
+                gate.apply(arow[i0 + r], brow, &mut cblock[r * n..(r + 1) * n]);
             }
         }
     });
@@ -121,6 +141,7 @@ pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(k, kb, "matmul_nt inner dims: {:?} x {:?}", a.shape(), b.shape());
     let mut c = Tensor::zeros(&[m, n]);
     let (ad, bd) = (a.data(), b.data());
+    let dot_k = simd::dot_kernel(); // resolve the knob once, not per element
     let plan = exec::plan_for(m, m * k * n);
     exec::parallel_rows_mut(c.data_mut(), n, plan, |i0, cblock| {
         let rows = if n == 0 { 0 } else { cblock.len() / n };
@@ -130,39 +151,20 @@ pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
             let crow = &mut cblock[r * n..(r + 1) * n];
             for (j, cv) in crow.iter_mut().enumerate() {
                 let brow = &bd[j * k..(j + 1) * k];
-                *cv = dot(arow, brow);
+                *cv = dot_k(arow, brow);
             }
         }
     });
     c
 }
 
-/// One pass over a buffer checking every value is finite (no NaN/Inf);
-/// O(len) against the kernels' O(m·k·n), and branch-free enough to
-/// auto-vectorize.
-fn all_finite(xs: &[f32]) -> bool {
-    xs.iter().all(|v| v.is_finite())
-}
-
-/// Contiguous dot product, 4-way unrolled for ILP.
+/// Contiguous dot product in the canonical 8-lane blocked accumulation
+/// order (see `crate::simd`): eight accumulators, element `i` folds into
+/// lane `i % 8`, one fixed horizontal reduction tree.  Identical bits
+/// whether the vector or scalar path runs.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for c in 0..chunks {
-        let i = c * 4;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
-    }
-    let mut s = s0 + s1 + s2 + s3;
-    for i in chunks * 4..n {
-        s += a[i] * b[i];
-    }
-    s
+    simd::dot(a, b)
 }
 
 fn dims2(t: &Tensor, what: &str) -> (usize, usize) {
@@ -180,11 +182,12 @@ pub fn matvec(m: &Tensor, x: &[f32]) -> Vec<f32> {
     assert_eq!(cols, x.len(), "matvec dims");
     let md = m.data();
     let mut y = vec![0.0f32; rows];
+    let dot_k = simd::dot_kernel(); // resolve the knob once, not per row
     let plan = exec::plan_for(rows, 2 * rows * cols);
     exec::parallel_rows_mut(&mut y, 1, plan, |i0, block| {
         for (r, o) in block.iter_mut().enumerate() {
             let i = i0 + r;
-            *o = dot(&md[i * cols..(i + 1) * cols], x);
+            *o = dot_k(&md[i * cols..(i + 1) * cols], x);
         }
     });
     y

@@ -8,10 +8,21 @@
 //! row-partitioned across the exec pool workers, each element is computed
 //! by the identical op sequence as the serial loop, so results are
 //! bit-exact at every thread count.
+//!
+//! Inside each partition block, the arithmetic kernels (add/sub/mul/div,
+//! scaling, the bias broadcast, and softmax's max + sum passes) run on
+//! the `crate::simd` 8-lane layer.  Elementwise kernels are bit-stable
+//! under vectorization by construction; the softmax reductions use the
+//! canonical blocked accumulation order shared by the vector and scalar
+//! paths, so `simd on/off` changes no bits either
+//! (`rust/tests/simd_equivalence.rs`).  Closure-generic [`Tensor::map`]
+//! stays scalar — nonlinearities like `tanh` are libm calls the lane
+//! layer cannot help.
 
 pub mod matmul;
 
 use crate::exec;
+use crate::simd;
 use crate::util::Rng;
 use std::fmt;
 
@@ -227,52 +238,65 @@ impl Tensor {
         });
     }
 
-    fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32 + Sync) -> Self {
+    /// Unary elementwise combinator over a slice kernel: the exec pool
+    /// partitions the output, `kernel(src_block, out_block)` runs on
+    /// each block.  Block boundaries cannot change bits — every element
+    /// is one fixed expression.
+    fn map_kernel(&self, kernel: impl Fn(&[f32], &mut [f32]) + Sync) -> Self {
+        let mut out = Tensor::zeros(&self.shape);
+        let plan = exec::plan_for(self.data.len(), self.data.len());
+        let src = &self.data;
+        exec::parallel_rows_mut(&mut out.data, 1, plan, |i0, block| {
+            kernel(&src[i0..i0 + block.len()], block);
+        });
+        out
+    }
+
+    /// Binary elementwise combinator over a slice kernel: the exec pool
+    /// partitions the output, `kernel(a_block, b_block, out_block)` runs
+    /// on each block (the simd layer's elementwise entries slot in
+    /// directly).  Block boundaries cannot change bits — every element
+    /// is one fixed expression.
+    fn zip_kernel(&self, other: &Tensor, kernel: impl Fn(&[f32], &[f32], &mut [f32]) + Sync) -> Self {
         assert_eq!(self.shape, other.shape, "elementwise shape mismatch");
         let mut out = Tensor::zeros(&self.shape);
         let plan = exec::plan_for(self.data.len(), self.data.len());
         let (a, b) = (&self.data, &other.data);
         exec::parallel_rows_mut(&mut out.data, 1, plan, |i0, block| {
-            for (k, dst) in block.iter_mut().enumerate() {
-                *dst = f(a[i0 + k], b[i0 + k]);
-            }
+            kernel(&a[i0..i0 + block.len()], &b[i0..i0 + block.len()], block);
         });
         out
     }
 
     pub fn add(&self, other: &Tensor) -> Self {
-        self.zip(other, |a, b| a + b)
+        self.zip_kernel(other, simd::add)
     }
 
     pub fn sub(&self, other: &Tensor) -> Self {
-        self.zip(other, |a, b| a - b)
+        self.zip_kernel(other, simd::sub)
     }
 
     pub fn mul(&self, other: &Tensor) -> Self {
-        self.zip(other, |a, b| a * b)
+        self.zip_kernel(other, simd::mul)
     }
 
     pub fn div(&self, other: &Tensor) -> Self {
-        self.zip(other, |a, b| a / b)
+        self.zip_kernel(other, simd::div)
     }
 
     pub fn add_assign(&mut self, other: &Tensor) {
         assert_eq!(self.shape, other.shape);
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
-            *a += b;
-        }
+        simd::add_assign(&mut self.data, &other.data);
     }
 
     /// self += alpha * other (axpy).
     pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
         assert_eq!(self.shape, other.shape);
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
-            *a += alpha * b;
-        }
+        simd::axpy(alpha, &other.data, &mut self.data);
     }
 
     pub fn scale(&self, s: f32) -> Self {
-        self.map(|v| v * s)
+        self.map_kernel(|src, out| simd::scale(src, s, out))
     }
 
     pub fn neg(&self) -> Self {
@@ -288,9 +312,7 @@ impl Tensor {
         let bd = &bias.data;
         exec::parallel_rows_mut(&mut out.data, c, plan, |_, block| {
             for row in block.chunks_mut(c) {
-                for (v, b) in row.iter_mut().zip(bd) {
-                    *v += b;
-                }
+                simd::add_assign(row, bd);
             }
         });
         out
@@ -370,22 +392,24 @@ impl Tensor {
 
     /// Row-wise softmax, numerically stabilized.  Rows are independent, so
     /// the row partition is bit-exact at any thread count.
+    ///
+    /// The stabilizer max and the normalizer sum run in the canonical
+    /// blocked order (`crate::simd`): NaN logits never win the max (a
+    /// diverged model still normalizes against a real stabilizer and
+    /// the NaN poisons the row through `exp`/`z`, exactly as the old
+    /// sequential fold behaved), and `simd on/off` changes no bits.
     pub fn softmax_rows(&self) -> Tensor {
         let c = self.cols();
         let mut out = self.clone();
         let plan = exec::plan_for(self.rows(), self.data.len() * 4);
         exec::parallel_rows_mut(&mut out.data, c, plan, |_, block| {
             for row in block.chunks_mut(c) {
-                let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-                let mut z = 0.0;
+                let mx = simd::max(row);
                 for v in row.iter_mut() {
                     *v = (*v - mx).exp();
-                    z += *v;
                 }
-                let inv = 1.0 / z;
-                for v in row.iter_mut() {
-                    *v *= inv;
-                }
+                let z = simd::sum(row);
+                simd::scale_assign(row, 1.0 / z);
             }
         });
         out

@@ -1,0 +1,555 @@
+//! Differential-testing harness for the `plmu::simd` 8-lane kernel
+//! layer: every vectorized kernel is A/B'd against a **naive scalar
+//! reference written independently in this file**, over a deterministic
+//! shape sweep that spans the lane-remainder cases (`8k-1`, `8k`,
+//! `8k+1`), width 1, empty inputs, and the odd shapes
+//! `exec_equivalence.rs` uses — asserting **bit-equality, not
+//! tolerance**.
+//!
+//! The references implement the repo's canonical blocked accumulation
+//! order (eight accumulators, element `i` into lane `i % 8`, zero-fill
+//! tail identity, one fixed reduction tree — see `rust/src/simd/mod.rs`
+//! and DESIGN.md) as the most obvious possible loops.  If either the
+//! vector or the scalar production path ever drifts from that order —
+//! a reassociated reduction, a sneaky FMA contraction, a changed tail —
+//! the order-sensitive inputs here (±1e8 cancellation patterns, NaN/Inf
+//! at lane boundaries) flip bits and the diff fails.
+//!
+//! The `PLMU_SIMD` knob is process-global, so the few tests that flip
+//! it serialize on a mutex and restore the prior setting; everything
+//! else calls the `_vec`/`_scalar` entry points directly and can run
+//! concurrently.
+
+use plmu::fft::{next_pow2, Cpx, RfftCache};
+use plmu::simd;
+use plmu::tensor::matmul::{dot, matvec};
+use plmu::util::Rng;
+use plmu::Tensor;
+use std::sync::Mutex;
+
+static SIMD_KNOB: Mutex<()> = Mutex::new(());
+
+/// Run `f` under simd on and off (serialized on the knob mutex, prior
+/// setting restored) and return both results for comparison.
+fn with_knob_both<T>(f: impl Fn() -> T) -> (T, T) {
+    let _guard = SIMD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let was = simd::enabled();
+    simd::set_enabled(true);
+    let on = f();
+    simd::set_enabled(false);
+    let off = f();
+    simd::set_enabled(was);
+    (on, off)
+}
+
+fn assert_bits_equal(label: &str, got: &[f32], want: &[f32]) {
+    assert_eq!(got.len(), want.len(), "{label}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            g.to_bits() == w.to_bits(),
+            "{label}: element {i} differs: {g} ({:#010x}) vs {w} ({:#010x})",
+            g.to_bits(),
+            w.to_bits()
+        );
+    }
+}
+
+/// Lengths spanning every lane-remainder class: 8k-1 / 8k / 8k+1 at
+/// several scales, plus width 1 and empty.
+const LENGTHS: &[usize] = &[0, 1, 2, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 65, 127, 128, 129, 1000];
+
+/// Order-sensitive fill: large ±1e8 terms that cancel only if the
+/// accumulation order is exactly the canonical one, mixed with
+/// small-magnitude noise (1e8 + small rounds the small term away, so
+/// any reassociation shows up in the bits).
+fn order_sensitive(n: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..n)
+        .map(|i| match i % 4 {
+            0 => 1e8,
+            2 => -1e8,
+            _ => rng.normal_f32(0.0, 1.0),
+        })
+        .collect()
+}
+
+// ------------------------------------------------- canonical references
+
+/// The canonical blocked dot, as naive loops: lane accumulators, tail
+/// into the low lanes, fixed adjacent-pairs tree.
+fn ref_dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 8];
+    for i in 0..a.len() {
+        acc[i % 8] += a[i] * b[i];
+    }
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+fn ref_sum(xs: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 8];
+    for (i, &x) in xs.iter().enumerate() {
+        acc[i % 8] += x;
+    }
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+/// Canonical max: strict-greater rule per lane, fixed tree, -inf
+/// identity.  NaN never wins; ties keep the earlier value.
+fn ref_max(xs: &[f32]) -> f32 {
+    fn gt(m: f32, v: f32) -> f32 {
+        if v > m {
+            v
+        } else {
+            m
+        }
+    }
+    let mut acc = [f32::NEG_INFINITY; 8];
+    for (i, &x) in xs.iter().enumerate() {
+        acc[i % 8] = gt(acc[i % 8], x);
+    }
+    gt(gt(gt(acc[0], acc[1]), gt(acc[2], acc[3])), gt(gt(acc[4], acc[5]), gt(acc[6], acc[7])))
+}
+
+/// Naive triple-loop matmul with a plain sequential f32 accumulator —
+/// the bit-reference for `matmul`/`matmul_tn`, whose per-element op
+/// order is the p-ascending axpy sweep (elementwise adds, no blocked
+/// reduction).
+fn ref_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let n = b.shape()[1];
+    let mut c = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0.0f32;
+            for p in 0..k {
+                s += a.at2(i, p) * b.at2(p, j);
+            }
+            c.set2(i, j, s);
+        }
+    }
+    c
+}
+
+/// Reference for `matmul_nt`/`matvec`: every output element is a
+/// canonical blocked dot of two contiguous rows.
+fn ref_matmul_nt(a: &Tensor, bt: &Tensor) -> Tensor {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let n = bt.shape()[0];
+    let mut c = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        for j in 0..n {
+            let s = ref_dot(&a.data()[i * k..(i + 1) * k], &bt.data()[j * k..(j + 1) * k]);
+            c.set2(i, j, s);
+        }
+    }
+    c
+}
+
+/// Canonical softmax row reference: blocked max, exp, blocked sum,
+/// scale — the exact pass structure of `Tensor::softmax_rows`.
+fn ref_softmax_row(row: &[f32]) -> Vec<f32> {
+    let mx = ref_max(row);
+    let mut out: Vec<f32> = row.iter().map(|v| (v - mx).exp()).collect();
+    let inv = 1.0 / ref_sum(&out);
+    for v in out.iter_mut() {
+        *v *= inv;
+    }
+    out
+}
+
+// ------------------------------------------------------- reduction sweep
+
+#[test]
+fn dot_sum_max_match_reference_bit_for_bit() {
+    let mut rng = Rng::new(100);
+    for &n in LENGTHS {
+        let a = order_sensitive(n, &mut rng);
+        let b: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+        let label = format!("n={n}");
+
+        let want = ref_dot(&a, &b);
+        assert_eq!(simd::dot_vec(&a, &b).to_bits(), want.to_bits(), "dot_vec {label}");
+        assert_eq!(simd::dot_scalar(&a, &b).to_bits(), want.to_bits(), "dot_scalar {label}");
+
+        let want = ref_sum(&a);
+        assert_eq!(simd::sum_vec(&a).to_bits(), want.to_bits(), "sum_vec {label}");
+        assert_eq!(simd::sum_scalar(&a).to_bits(), want.to_bits(), "sum_scalar {label}");
+
+        let want = ref_max(&a);
+        assert_eq!(simd::max_vec(&a).to_bits(), want.to_bits(), "max_vec {label}");
+        assert_eq!(simd::max_scalar(&a).to_bits(), want.to_bits(), "max_scalar {label}");
+    }
+    // the public dot entry (tensor::matmul::dot) routes through the
+    // same canonical kernel under both knob settings
+    let a = order_sensitive(129, &mut rng);
+    let b = order_sensitive(129, &mut rng);
+    let (on, off) = with_knob_both(|| dot(&a, &b));
+    assert_eq!(on.to_bits(), off.to_bits(), "dot dispatch differs across the knob");
+    assert_eq!(on.to_bits(), ref_dot(&a, &b).to_bits());
+}
+
+#[test]
+fn max_edge_cases_are_deterministic() {
+    // duplicates, signed zeros, empty: the strict-greater rule keeps
+    // the earliest occurrence and both paths agree with the reference
+    for xs in [
+        vec![],
+        vec![-0.0f32, 0.0],
+        vec![0.0f32, -0.0],
+        vec![7.5f32; 20],
+        vec![f32::NEG_INFINITY; 9],
+        vec![-1.0f32, f32::NEG_INFINITY, -2.0],
+    ] {
+        let want = ref_max(&xs);
+        assert_eq!(simd::max_vec(&xs).to_bits(), want.to_bits(), "{xs:?}");
+        assert_eq!(simd::max_scalar(&xs).to_bits(), want.to_bits(), "{xs:?}");
+    }
+}
+
+// ----------------------------------------------------- elementwise sweep
+
+#[test]
+fn elementwise_kernels_match_plain_loops_bit_for_bit() {
+    let mut rng = Rng::new(101);
+    for &n in LENGTHS {
+        let a: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 10.0)).collect();
+        let mut b: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+        // salt with special values at lane-boundary positions
+        for (pos, v) in [(0usize, -0.0f32), (7, f32::MIN_POSITIVE / 2.0), (8, 1e38)] {
+            if pos < n {
+                b[pos] = v;
+            }
+        }
+        let label = format!("n={n}");
+
+        type Slice3 = fn(&[f32], &[f32], &mut [f32]);
+        type Binary = (&'static str, Slice3, Slice3, fn(f32, f32) -> f32);
+        // both paths explicitly (never through the global knob, so
+        // coverage is deterministic under any PLMU_SIMD setting)
+        let cases: [Binary; 4] = [
+            ("add", simd::add_vec, simd::add_scalar, |x, y| x + y),
+            ("sub", simd::sub_vec, simd::sub_scalar, |x, y| x - y),
+            ("mul", simd::mul_vec, simd::mul_scalar, |x, y| x * y),
+            ("div", simd::div_vec, simd::div_scalar, |x, y| x / y),
+        ];
+        for (name, kvec, kscalar, op) in cases {
+            let want: Vec<f32> = a.iter().zip(&b).map(|(&x, &y)| op(x, y)).collect();
+            let mut got = vec![0.0f32; n];
+            kvec(&a, &b, &mut got);
+            assert_bits_equal(&format!("{name}_vec {label}"), &got, &want);
+            let mut got = vec![0.0f32; n];
+            kscalar(&a, &b, &mut got);
+            assert_bits_equal(&format!("{name}_scalar {label}"), &got, &want);
+        }
+
+        // axpy and add_assign mutate in place
+        let alpha = 1.7f32;
+        let mut got = a.clone();
+        simd::axpy_vec(alpha, &b, &mut got);
+        let mut want = a.clone();
+        for (w, &x) in want.iter_mut().zip(&b) {
+            *w += alpha * x;
+        }
+        assert_bits_equal(&format!("axpy_vec {label}"), &got, &want);
+        let mut got = a.clone();
+        simd::axpy_scalar(alpha, &b, &mut got);
+        assert_bits_equal(&format!("axpy_scalar {label}"), &got, &want);
+
+        let want: Vec<f32> = a.iter().zip(&b).map(|(&x, &y)| x + y).collect();
+        let mut got = a.clone();
+        simd::add_assign_vec(&mut got, &b);
+        assert_bits_equal(&format!("add_assign_vec {label}"), &got, &want);
+        let mut got = a.clone();
+        simd::add_assign_scalar(&mut got, &b);
+        assert_bits_equal(&format!("add_assign_scalar {label}"), &got, &want);
+
+        let want: Vec<f32> = a.iter().map(|&x| x * 0.3).collect();
+        let mut got = a.clone();
+        simd::scale_assign_vec(&mut got, 0.3);
+        assert_bits_equal(&format!("scale_assign_vec {label}"), &got, &want);
+        let mut got = a.clone();
+        simd::scale_assign_scalar(&mut got, 0.3);
+        assert_bits_equal(&format!("scale_assign_scalar {label}"), &got, &want);
+        let mut got2 = vec![0.0f32; n];
+        simd::scale_vec(&a, 0.3, &mut got2);
+        assert_bits_equal(&format!("scale_vec {label}"), &got2, &want);
+        let mut got2 = vec![0.0f32; n];
+        simd::scale_scalar(&a, 0.3, &mut got2);
+        assert_bits_equal(&format!("scale_scalar {label}"), &got2, &want);
+    }
+}
+
+#[test]
+fn tensor_elementwise_ops_stable_across_the_knob() {
+    // the Tensor-level entries (exec partition + simd block kernels):
+    // big enough to cross MIN_PARALLEL_WORK, odd element count
+    let mut rng = Rng::new(102);
+    let x = Tensor::randn(&[129, 131], 1.0, &mut rng);
+    let y = Tensor::randn(&[129, 131], 1.0, &mut rng);
+    let cases: Vec<(&str, Box<dyn Fn() -> Tensor + '_>)> = vec![
+        ("add", Box::new(|| x.add(&y))),
+        ("sub", Box::new(|| x.sub(&y))),
+        ("mul", Box::new(|| x.mul(&y))),
+        ("div", Box::new(|| x.div(&y))),
+        ("scale", Box::new(|| x.scale(0.125))),
+        ("add_row", Box::new(|| x.add_row(&y.row(0)))),
+        ("softmax", Box::new(|| x.softmax_rows())),
+    ];
+    for (name, f) in &cases {
+        let (on, off) = with_knob_both(f);
+        assert_bits_equal(&format!("Tensor::{name} knob"), on.data(), off.data());
+    }
+}
+
+// --------------------------------------------------------- matmul family
+
+#[test]
+fn matmul_family_matches_references_bit_for_bit() {
+    let mut rng = Rng::new(103);
+    // the exec_equivalence odd shapes plus lane-remainder widths
+    // (n = 8k-1 / 8k / 8k+1 / 1) and empty dimensions
+    let shapes: &[(usize, usize, usize)] = &[
+        (129, 67, 65),
+        (7, 300, 5),
+        (1, 1, 1),
+        (3, 2, 1),
+        (5, 16, 7),
+        (5, 16, 8),
+        (5, 16, 9),
+        (4, 23, 1),
+        (2, 0, 3),
+        (0, 3, 4),
+        (3, 4, 0),
+    ];
+    for &(m, k, n) in shapes {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let at = a.transpose2();
+        let bt = b.transpose2();
+        let label = format!("({m},{k},{n})");
+
+        let want = ref_matmul(&a, &b);
+        let (on, off) = with_knob_both(|| a.matmul(&b));
+        assert_bits_equal(&format!("matmul {label} knob"), on.data(), off.data());
+        assert_bits_equal(&format!("matmul {label} vs naive"), on.data(), want.data());
+
+        let (on, off) = with_knob_both(|| at.matmul_tn(&b));
+        assert_bits_equal(&format!("matmul_tn {label} knob"), on.data(), off.data());
+        assert_bits_equal(&format!("matmul_tn {label} vs naive"), on.data(), want.data());
+
+        let want_nt = ref_matmul_nt(&a, &bt);
+        let (on, off) = with_knob_both(|| a.matmul_nt(&bt));
+        assert_bits_equal(&format!("matmul_nt {label} knob"), on.data(), off.data());
+        assert_bits_equal(&format!("matmul_nt {label} vs blocked-dot ref"), on.data(), want_nt.data());
+
+        if k > 0 && n > 0 {
+            let x: Vec<f32> = (0..k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let (on, off) = with_knob_both(|| matvec(&a, &x));
+            assert_bits_equal(&format!("matvec {label} knob"), &on, &off);
+            let want: Vec<f32> = (0..m)
+                .map(|i| ref_dot(&a.data()[i * k..(i + 1) * k], &x))
+                .collect();
+            assert_bits_equal(&format!("matvec {label} vs blocked-dot ref"), &on, &want);
+        }
+    }
+}
+
+// ----------------------------------------------- NaN/Inf lane-tail suite
+//
+// Extends the PR 3 `0·NaN` regression suite to the blocked accumulation
+// order: non-finite values sitting in the last partial lane and at lane
+// boundaries must propagate exactly as in the canonical scalar
+// reference.
+
+/// Positions that straddle the lane structure of a length-`n` buffer:
+/// first/last lane of the first block, the 8k-1/8k boundary, and the
+/// lane tail (last element, which lives in a partial block whenever
+/// `n % 8 != 0`).
+fn lane_boundary_positions(n: usize) -> Vec<usize> {
+    let mut ps = vec![0, 7, 8, 15, 16];
+    if n > 0 {
+        ps.push(n - 1);
+        ps.push((n / 8) * 8); // first lane of the tail block
+    }
+    ps.retain(|&p| p < n);
+    ps.sort_unstable();
+    ps.dedup();
+    ps
+}
+
+#[test]
+fn nan_inf_in_lane_tails_propagate_like_the_reference() {
+    let mut rng = Rng::new(104);
+    for &n in &[7usize, 8, 9, 17, 23, 24, 25, 65] {
+        let base: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            for pos in lane_boundary_positions(n) {
+                let mut a = base.clone();
+                a[pos] = bad;
+                let b: Vec<f32> = (0..n).map(|i| (i as f32) * 0.5 - 1.0).collect();
+                let label = format!("n={n} pos={pos} bad={bad}");
+
+                let want = ref_dot(&a, &b);
+                let (von, voff) = (simd::dot_vec(&a, &b), simd::dot_scalar(&a, &b));
+                assert_eq!(von.to_bits(), want.to_bits(), "dot_vec {label}");
+                assert_eq!(voff.to_bits(), want.to_bits(), "dot_scalar {label}");
+
+                let want = ref_sum(&a);
+                assert_eq!(simd::sum_vec(&a).to_bits(), want.to_bits(), "sum_vec {label}");
+                assert_eq!(simd::sum_scalar(&a).to_bits(), want.to_bits(), "sum_scalar {label}");
+
+                let want = ref_max(&a);
+                assert_eq!(simd::max_vec(&a).to_bits(), want.to_bits(), "max_vec {label}");
+                assert_eq!(simd::max_scalar(&a).to_bits(), want.to_bits(), "max_scalar {label}");
+
+                // NaN/Inf alpha sweeps through the whole axpy row
+                let mut got = base.clone();
+                simd::axpy_vec(bad, &b, &mut got);
+                let mut want_row = base.clone();
+                for (w, &x) in want_row.iter_mut().zip(&b) {
+                    *w += bad * x;
+                }
+                assert_bits_equal(&format!("axpy alpha {label}"), &got, &want_row);
+            }
+        }
+    }
+}
+
+#[test]
+fn matmul_zero_skip_gate_survives_lane_tail_nan() {
+    // NaN placed in B's final element (the lane tail of the last row):
+    // the all_finite gate must disable the zero skip so 0 · NaN = NaN
+    // exactly like the naive reference, at every knob setting
+    let mut rng = Rng::new(105);
+    let (m, k, n) = (5usize, 9usize, 7usize); // odd everything
+    let mut a = Tensor::randn(&[m, k], 1.0, &mut rng);
+    // zeros exactly where the unconditional skip would drop NaN columns
+    for (i, v) in a.data_mut().iter_mut().enumerate() {
+        if i % 3 == 0 {
+            *v = 0.0;
+        }
+    }
+    for bad_pos in [k * n - 1, (k - 1) * n, n - 1, 8, 7] {
+        let mut b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        b.data_mut()[bad_pos] = f32::NAN;
+        let want = ref_matmul(&a, &b);
+        let (on, off) = with_knob_both(|| a.matmul(&b));
+        for (x, y) in on.data().iter().zip(off.data()) {
+            assert!(
+                x.to_bits() == y.to_bits(),
+                "matmul knob mismatch with NaN at {bad_pos}: {x} vs {y}"
+            );
+        }
+        for (i, (x, y)) in on.data().iter().zip(want.data()).enumerate() {
+            assert!(
+                x.to_bits() == y.to_bits(),
+                "matmul elem {i} with NaN at {bad_pos}: {x} vs naive {y}"
+            );
+        }
+        // and the gate itself agrees across paths
+        assert!(!simd::all_finite_vec(b.data()));
+        assert!(!simd::all_finite_scalar(b.data()));
+    }
+}
+
+#[test]
+fn argmax_rows_total_at_lane_boundaries() {
+    // argmax stays scalar, but its NaN totality must hold wherever the
+    // blocked kernels put lane seams: NaN at positions 7/8/tail never
+    // wins, ties keep the lowest index, an all-NaN row yields 0
+    let c = 17usize;
+    let mut data = vec![0.5f32; c * 4];
+    // row 0: NaN at lane boundary 7, max at the tail position
+    data[7] = f32::NAN;
+    data[16] = 9.0;
+    // row 1: NaN in the lane tail (last element), max at 8
+    data[c + 8] = 3.0;
+    data[c + 16] = f32::NAN;
+    // row 2: all NaN
+    for v in data[2 * c..3 * c].iter_mut() {
+        *v = f32::NAN;
+    }
+    // row 3: tie straddling the 8-boundary keeps the lower index
+    data[3 * c + 7] = 4.0;
+    data[3 * c + 8] = 4.0;
+    let t = Tensor::new(&[4, c], data);
+    assert_eq!(t.argmax_rows(), vec![16, 8, 0, 7]);
+}
+
+#[test]
+fn softmax_rows_match_canonical_reference_including_nan_inf_tails() {
+    let mut rng = Rng::new(106);
+    for &c in &[1usize, 7, 8, 9, 17, 33] {
+        let rows = 5usize;
+        let mut t = Tensor::randn(&[rows, c], 2.0, &mut rng);
+        // row 1 gets a NaN in its lane tail, row 2 an Inf at a boundary
+        if c > 1 {
+            t.set2(1, c - 1, f32::NAN);
+            let boundary = ((c / 8) * 8).min(c - 1);
+            t.set2(2, boundary, f32::INFINITY);
+        }
+        let (on, off) = with_knob_both(|| t.softmax_rows());
+        assert_bits_equal(&format!("softmax c={c} knob"), on.data(), off.data());
+        for r in 0..rows {
+            let want = ref_softmax_row(&t.data()[r * c..(r + 1) * c]);
+            let got = &on.data()[r * c..(r + 1) * c];
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    g.to_bits() == w.to_bits(),
+                    "softmax c={c} row {r} elem {i}: {g} vs {w}"
+                );
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------ fft complex MAC
+
+#[test]
+fn spectrum_product_stable_across_the_knob_and_matches_cpx_mul() {
+    let mut rng = Rng::new(107);
+    // kernel/signal lengths spanning complex-pair remainders of the
+    // 4-pair blocks
+    for &len in &[3usize, 4, 5, 31, 32, 33, 100] {
+        let kernel: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let sig: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let nfft = next_pow2(2 * len);
+        let cache = RfftCache::new(&kernel, nfft);
+        let (on, off) = with_knob_both(|| cache.conv(&sig, len));
+        assert_bits_equal(&format!("conv len={len} knob"), &on, &off);
+    }
+    // the raw kernel against the Cpx::mul formula, bitwise
+    let n = 9usize;
+    let a: Vec<Cpx> = (0..n).map(|_| Cpx::new(rng.normal(), rng.normal())).collect();
+    let b: Vec<Cpx> = (0..n).map(|_| Cpx::new(rng.normal(), rng.normal())).collect();
+    let af: Vec<f64> = a.iter().flat_map(|c| [c.re, c.im]).collect();
+    let bf: Vec<f64> = b.iter().flat_map(|c| [c.re, c.im]).collect();
+    let mut got = vec![0.0f64; 2 * n];
+    simd::cmul_vec(&af, &bf, &mut got);
+    let mut got_s = vec![0.0f64; 2 * n];
+    simd::cmul_scalar(&af, &bf, &mut got_s);
+    for k in 0..n {
+        let want = a[k].mul(b[k]);
+        assert_eq!(got[2 * k].to_bits(), want.re.to_bits(), "re {k}");
+        assert_eq!(got[2 * k + 1].to_bits(), want.im.to_bits(), "im {k}");
+        assert_eq!(got[2 * k].to_bits(), got_s[2 * k].to_bits());
+        assert_eq!(got[2 * k + 1].to_bits(), got_s[2 * k + 1].to_bits());
+    }
+}
+
+// ------------------------------------------------------- composite sweep
+
+#[test]
+fn dn_fft_operator_apply_stable_across_the_knob() {
+    // end-to-end composite (matmul + elementwise + FFT conv): the DN
+    // operator's output must be bit-identical with the vector paths on
+    // and off — the kernel-level guarantee composed through the system
+    use plmu::dn::{DelayNetwork, DnFftOperator};
+    let mut rng = Rng::new(108);
+    for &(n, d, du) in &[(65usize, 9usize, 3usize), (64, 8, 1), (33, 4, 2)] {
+        let dn = DelayNetwork::new(d, n as f64);
+        let op = DnFftOperator::new(&dn, n);
+        let u = Tensor::randn(&[n, du], 1.0, &mut rng);
+        let (on, off) = with_knob_both(|| op.apply(&u));
+        assert_bits_equal(&format!("dn apply ({n},{d},{du}) knob"), on.data(), off.data());
+    }
+}
