@@ -15,9 +15,11 @@
 #   docs         rustdoc build with warnings as errors
 #   determinism  the determinism matrix: the exec-equivalence suite under
 #                PLMU_THREADS in {1, 2, 8}, the simd-equivalence suite
-#                under PLMU_SIMD in {1, 0}, plus a canonical training-loss
-#                fingerprint (plmu train-dp) diffed byte-for-byte across
-#                PLMU_THREADS in {1, 2, 8} x PLMU_SIMD in {1, 0}
+#                under PLMU_SIMD in {1, 0}, the fusion-equivalence suite
+#                under PLMU_FUSION in {1, 0}, plus a canonical training-
+#                loss fingerprint (plmu train-dp) diffed byte-for-byte
+#                across PLMU_THREADS in {1, 2, 8} x PLMU_SIMD in {1, 0}
+#                x PLMU_FUSION in {1, 0}
 #   bench        smoke-runs the perf benches and validates every emitted
 #                BENCH_*.json artifact (plmu bench-check): required keys,
 #                sane timings — a bench refactor cannot silently emit an
@@ -60,10 +62,11 @@ stage_docs() {
 
 stage_determinism() {
     # the exec-equivalence suite must hold under every pool size, the
-    # simd-equivalence suite under both vector-path settings, and a
+    # simd-equivalence suite under both vector-path settings, the
+    # fusion-equivalence suite under both fusion settings, and a
     # canonical training run must produce a byte-identical fingerprint
     # across the whole matrix PLMU_THREADS in {1, 2, 8} x PLMU_SIMD in
-    # {on, off}
+    # {on, off} x PLMU_FUSION in {on, off}
     cargo build --release || return 1
     for t in 1 2 8; do
         echo "-- determinism: exec_equivalence, PLMU_THREADS=$t --"
@@ -73,28 +76,34 @@ stage_determinism() {
         echo "-- determinism: simd_equivalence, PLMU_SIMD=$s --"
         PLMU_SIMD=$s cargo test -q --test simd_equivalence || return 1
     done
+    for f in 1 0; do
+        echo "-- determinism: fusion_equivalence, PLMU_FUSION=$f --"
+        PLMU_FUSION=$f cargo test -q --test fusion_equivalence || return 1
+    done
     local ref_fp="" out fp
     for t in 1 2 8; do
         for s in 1 0; do
-            out=$(PLMU_SIMD=$s PLMU_THREADS=$t ./target/release/plmu train-dp \
-                --workers 2 --epochs 1 --examples 32 --side 8 --batch 8) || return 1
-            fp=$(printf '%s\n' "$out" | grep '^train fingerprint:')
-            if [ -z "$fp" ]; then
-                echo "no 'train fingerprint:' line in train-dp output"
-                return 1
-            fi
-            echo "   PLMU_THREADS=$t PLMU_SIMD=$s -> $fp"
-            if [ -z "$ref_fp" ]; then
-                ref_fp="$fp"
-            elif [ "$fp" != "$ref_fp" ]; then
-                echo "DETERMINISM MISMATCH: (threads=$t, simd=$s) differs from (threads=1, simd=1)"
-                echo "  reference: $ref_fp"
-                echo "  this run:  $fp"
-                return 1
-            fi
+            for f in 1 0; do
+                out=$(PLMU_FUSION=$f PLMU_SIMD=$s PLMU_THREADS=$t ./target/release/plmu train-dp \
+                    --workers 2 --epochs 1 --examples 32 --side 8 --batch 8) || return 1
+                fp=$(printf '%s\n' "$out" | grep '^train fingerprint:')
+                if [ -z "$fp" ]; then
+                    echo "no 'train fingerprint:' line in train-dp output"
+                    return 1
+                fi
+                echo "   PLMU_THREADS=$t PLMU_SIMD=$s PLMU_FUSION=$f -> $fp"
+                if [ -z "$ref_fp" ]; then
+                    ref_fp="$fp"
+                elif [ "$fp" != "$ref_fp" ]; then
+                    echo "DETERMINISM MISMATCH: (threads=$t, simd=$s, fusion=$f) differs from (threads=1, simd=1, fusion=1)"
+                    echo "  reference: $ref_fp"
+                    echo "  this run:  $fp"
+                    return 1
+                fi
+            done
         done
     done
-    echo "fingerprints byte-identical across PLMU_THREADS in {1, 2, 8} x PLMU_SIMD in {1, 0}"
+    echo "fingerprints byte-identical across PLMU_THREADS in {1, 2, 8} x PLMU_SIMD in {1, 0} x PLMU_FUSION in {1, 0}"
 }
 
 stage_bench() {
@@ -103,9 +112,11 @@ stage_bench() {
     PLMU_BENCH_SMOKE=1 cargo bench --bench pool_crossover || return 1
     PLMU_BENCH_SMOKE=1 cargo bench --bench coordinator || return 1
     PLMU_BENCH_SMOKE=1 cargo bench --bench simd_kernels || return 1
+    PLMU_BENCH_SMOKE=1 cargo bench --bench fusion || return 1
     echo "-- validating perf records --"
     ./target/release/plmu bench-check \
-        BENCH_threads.json BENCH_pool.json BENCH_coordinator.json BENCH_simd.json
+        BENCH_threads.json BENCH_pool.json BENCH_coordinator.json BENCH_simd.json \
+        BENCH_fusion.json
 }
 
 # ----------------------------------------------------------------- driver

@@ -1,0 +1,324 @@
+//! A/B bench for the elementwise fusion pass (`PLMU_FUSION`): fused
+//! graph builders (`affine_act` matmul epilogue, `add2_row_act`,
+//! `add3_act`) vs the unfused node chains they replace, plus a full
+//! end-to-end training step, at table-1-ish shapes.  Emits
+//! `BENCH_fusion.json` at the repo root (validated by `plmu
+//! bench-check` in the CI bench stage).
+//!
+//! Each record carries measured wall time for both paths AND a
+//! bytes-moved figure: analytic traffic estimates for the kernel
+//! chains (the unfused chain re-reads and re-writes every
+//! intermediate; the fused kernel touches each element once), and
+//! *measured* cold-step arena allocation for the train-step case.
+//! Before timing, each case asserts the two paths bit-identical —
+//! the fusion contract (`rust/tests/fusion_equivalence.rs` is the
+//! exhaustive version).
+//!
+//! Run: cargo bench --bench fusion
+//! Smoke mode (CI): PLMU_BENCH_SMOKE=1 cargo bench --bench fusion
+
+use plmu::autograd::{Act, Graph, NodeId, ParamStore};
+use plmu::benchlib::{
+    bench, checksum_f32 as checksum, repo_root, BenchConfig, JsonValue, PerfJson, Table,
+};
+use plmu::data::batcher::BatchIter;
+use plmu::data::SeqDataset;
+use plmu::exec;
+use plmu::exec::arena::Arena;
+use plmu::fusion;
+use plmu::optim::Adam;
+use plmu::train::{train_step, ModelKind, SeqClassifier};
+use plmu::util::Rng;
+use plmu::Tensor;
+use std::rc::Rc;
+
+struct Case {
+    name: String,
+    /// run with fusion on, returning a result fingerprint
+    fused: Box<dyn Fn() -> u64>,
+    /// run with fusion off (knob restored after), same fingerprint
+    unfused: Box<dyn Fn() -> u64>,
+    /// analytic bytes moved per run, fused path
+    bytes_fused: f64,
+    /// analytic bytes moved per run, unfused chain
+    bytes_unfused: f64,
+}
+
+/// Record one forward chain and fingerprint its output.
+fn run_chain(store: &ParamStore, build: &dyn Fn(&mut Graph, &ParamStore) -> NodeId) -> u64 {
+    let mut g = Graph::new();
+    let out = build(&mut g, store);
+    checksum(g.value(out).data())
+}
+
+fn chain_case(
+    name: String,
+    store: ParamStore,
+    build: Rc<dyn Fn(&mut Graph, &ParamStore) -> NodeId>,
+    bytes_fused: f64,
+    bytes_unfused: f64,
+) -> Case {
+    let store = Rc::new(store);
+    let (s1, b1) = (Rc::clone(&store), Rc::clone(&build));
+    let (s2, b2) = (store, build);
+    Case {
+        name,
+        fused: Box::new(move || {
+            fusion::set_enabled(true);
+            run_chain(&s1, b1.as_ref())
+        }),
+        unfused: Box::new(move || {
+            fusion::set_enabled(false);
+            let h = run_chain(&s2, b2.as_ref());
+            fusion::set_enabled(true);
+            h
+        }),
+        bytes_fused,
+        bytes_unfused,
+    }
+}
+
+/// Balanced ±-mean toy classification set (same recipe as the
+/// equivalence suite) — enough signal that losses stay finite.
+fn toy_dataset(n_examples: usize, seq_len: usize, seed: u64) -> SeqDataset {
+    let mut rng = Rng::new(seed);
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for i in 0..n_examples {
+        let sign = if i % 2 == 0 { 1.0f32 } else { -1.0 };
+        let mut x = Tensor::randn(&[seq_len, 1], 0.5, &mut rng);
+        x.map_inplace(|v| v + sign * 0.4);
+        xs.push(x);
+        ys.push(usize::from(sign > 0.0));
+    }
+    SeqDataset::classification(xs, ys)
+}
+
+/// One fused-or-unfused training measurement: first-step loss (for the
+/// bit-equality gate), cold-step arena allocation in bytes (the
+/// measured traffic figure), and warm steady-state step timing.
+fn measure_train(
+    fused: bool,
+    cfg: BenchConfig,
+    seq_len: usize,
+    hidden: usize,
+    order: usize,
+    batch_sz: usize,
+) -> (f32, f64, plmu::benchlib::Stats) {
+    fusion::set_enabled(fused);
+    let ds = toy_dataset(batch_sz, seq_len, 21);
+    let mut store = ParamStore::new();
+    let mut rng = Rng::new(11);
+    let model =
+        SeqClassifier::new(ModelKind::LmuParallel, seq_len, 1, order, hidden, 2, &mut store, &mut rng);
+    let batch = BatchIter::sequential(&ds, batch_sz).next().unwrap();
+    let mut opt = Adam::new(1e-3);
+    let mut g = Graph::new();
+    let mut arena = Arena::new();
+
+    let before = arena.stats();
+    let first_loss = train_step(&model, &mut store, &mut opt, &mut g, &mut arena, &batch, None);
+    let cold_bytes = arena.stats().since(&before).fresh_bytes as f64;
+    // one more step so the arena + Adam state reach steady state
+    train_step(&model, &mut store, &mut opt, &mut g, &mut arena, &batch, None);
+    let stats = bench("train_step", cfg, || {
+        std::hint::black_box(train_step(
+            &model, &mut store, &mut opt, &mut g, &mut arena, &batch, None,
+        ));
+    });
+    fusion::set_enabled(true);
+    (first_loss, cold_bytes, stats)
+}
+
+fn main() {
+    let smoke = std::env::var("PLMU_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
+    let cfg = if smoke {
+        BenchConfig { warmup_secs: 0.02, measure_secs: 0.06, max_iters: 30, min_iters: 2 }
+    } else {
+        BenchConfig { warmup_secs: 0.1, measure_secs: 0.5, max_iters: 200, min_iters: 3 }
+    };
+    // single-thread: this bench measures memory traffic saved by
+    // fusion, not thread scaling (fig1_threads' job)
+    exec::set_threads(1);
+    println!(
+        "fusion A/B (fused builders vs unfused chains), serial{}",
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let mut rng = Rng::new(0);
+    let mut cases: Vec<Case> = Vec::new();
+    const F: f64 = 4.0; // sizeof f32
+
+    // ---- affine_act: matmul + bias row + tanh, fused epilogue ----------
+    // shapes echo the paper's table-1 workloads: 784 = psMNIST sequence
+    // length, 212/128 = hidden widths used in the reproductions
+    let affine_shapes: &[(usize, usize, usize)] =
+        if smoke { &[(32, 63, 33)] } else { &[(128, 256, 128), (512, 129, 65), (256, 784, 212)] };
+    for &(m, k, n) in affine_shapes {
+        let mut store = ParamStore::new();
+        let x = store.add("x", Tensor::randn(&[m, k], 1.0, &mut rng));
+        let w = store.add("w", Tensor::randn(&[k, n], 0.5, &mut rng));
+        let b = store.add("b", Tensor::randn(&[n], 0.1, &mut rng));
+        let (mk, kn, mn, nn) = (m * k, k * n, m * n, n);
+        cases.push(chain_case(
+            format!("affine_tanh_{m}x{k}x{n}"),
+            store,
+            Rc::new(move |g, s| {
+                let (xn, wn, bn) = (g.param(s, x), g.param(s, w), g.param(s, b));
+                g.affine_act(xn, wn, bn, Some(Act::Tanh))
+            }),
+            // fused: read x, w, bias; write out once, epilogue in-tile
+            F * (mk + kn + nn + mn) as f64,
+            // unfused: + add_row pass (mn+n read, mn write) + tanh pass
+            // (mn read, mn write) over materialized intermediates
+            F * (mk + kn + nn + 5 * mn) as f64,
+        ));
+    }
+
+    // ---- add2_row_act: a + b + bias row + tanh (LMU output merge) ------
+    let add2_shapes: &[(usize, usize)] = if smoke { &[(256, 33)] } else { &[(4096, 128), (2048, 257)] };
+    for &(m, n) in add2_shapes {
+        let mut store = ParamStore::new();
+        let a = store.add("a", Tensor::randn(&[m, n], 1.0, &mut rng));
+        let b = store.add("b", Tensor::randn(&[m, n], 1.0, &mut rng));
+        let bias = store.add("bias", Tensor::randn(&[n], 0.2, &mut rng));
+        let (mn, nn) = (m * n, n);
+        cases.push(chain_case(
+            format!("add2_row_tanh_{m}x{n}"),
+            store,
+            Rc::new(move |g, s| {
+                let (an, bn, biasn) = (g.param(s, a), g.param(s, b), g.param(s, bias));
+                g.add2_row_act(an, bn, biasn, Some(Act::Tanh))
+            }),
+            // fused: read a, b, bias; write out once
+            F * (3 * mn + nn) as f64,
+            // unfused: add (2mn r, mn w) + add_row (mn+n r, mn w) + tanh
+            F * (7 * mn + nn) as f64,
+        ));
+    }
+
+    // ---- add3_act: three-way sum + tanh (original LMU cell update) -----
+    let add3_shapes: &[(usize, usize)] = if smoke { &[(256, 33)] } else { &[(4096, 128), (2048, 257)] };
+    for &(m, n) in add3_shapes {
+        let mut store = ParamStore::new();
+        let a = store.add("a", Tensor::randn(&[m, n], 1.0, &mut rng));
+        let b = store.add("b", Tensor::randn(&[m, n], 1.0, &mut rng));
+        let c = store.add("c", Tensor::randn(&[m, n], 1.0, &mut rng));
+        let mn = m * n;
+        cases.push(chain_case(
+            format!("add3_tanh_{m}x{n}"),
+            store,
+            Rc::new(move |g, s| {
+                let (an, bn, cn) = (g.param(s, a), g.param(s, b), g.param(s, c));
+                g.add3_act(an, bn, cn, Some(Act::Tanh))
+            }),
+            F * 4 * mn as f64,
+            // unfused: add + add + tanh, each materializing
+            F * 8 * mn as f64,
+        ));
+    }
+
+    let mut record = PerfJson::new("fusion");
+    let mut table = Table::new(&["case", "fused (µs)", "unfused (µs)", "speedup", "bytes f/u"]);
+    let mut worst: Option<(String, f64)> = None;
+    let mut track = |name: &str, speedup: f64, worst: &mut Option<(String, f64)>| {
+        if worst.as_ref().map(|(_, w)| speedup < *w).unwrap_or(true) {
+            *worst = Some((name.to_string(), speedup));
+        }
+    };
+
+    for case in &cases {
+        // contract first: the two paths must be bit-identical
+        let (f, u) = ((case.fused)(), (case.unfused)());
+        assert_eq!(f, u, "{}: fused and unfused paths disagree", case.name);
+        assert!(
+            case.bytes_fused < case.bytes_unfused,
+            "{}: fused traffic estimate not below unfused",
+            case.name
+        );
+
+        let fused_stats = bench(&case.name, cfg, || {
+            std::hint::black_box((case.fused)());
+        });
+        let unfused_stats = bench(&case.name, cfg, || {
+            std::hint::black_box((case.unfused)());
+        });
+        let speedup = unfused_stats.mean / fused_stats.mean;
+        track(&case.name, speedup, &mut worst);
+        table.row(&[
+            case.name.clone(),
+            format!("{:.2}", fused_stats.mean * 1e6),
+            format!("{:.2}", unfused_stats.mean * 1e6),
+            format!("{speedup:.2}x"),
+            format!("{:.2}", case.bytes_fused / case.bytes_unfused),
+        ]);
+        record.push(&[
+            ("case", JsonValue::Str(case.name.clone())),
+            ("threads", JsonValue::Int(1)),
+            ("wall_ns", JsonValue::Int((fused_stats.mean * 1e9) as i64)),
+            ("fused_s", JsonValue::Num(fused_stats.mean)),
+            ("unfused_s", JsonValue::Num(unfused_stats.mean)),
+            ("p50_s", JsonValue::Num(fused_stats.p50)),
+            ("speedup_vs_unfused", JsonValue::Num(speedup)),
+            ("bytes_moved_fused", JsonValue::Num(case.bytes_fused)),
+            ("bytes_moved_unfused", JsonValue::Num(case.bytes_unfused)),
+            ("smoke", JsonValue::Bool(smoke)),
+        ]);
+    }
+
+    // ---- end-to-end: one training step of the parallel LMU classifier --
+    // fused chains + warm arena vs unfused chains + warm arena; bytes
+    // here are *measured* cold-step arena allocation (the intermediates
+    // the unfused chain materializes show up as extra fresh buffers)
+    let (seq_len, hidden, order, batch_sz) =
+        if smoke { (16, 16, 8, 8) } else { (64, 64, 32, 32) };
+    let name = format!("train_step_lmu_T{seq_len}_h{hidden}_q{order}_B{batch_sz}");
+    let (loss_f, bytes_f, stats_f) = measure_train(true, cfg, seq_len, hidden, order, batch_sz);
+    let (loss_u, bytes_u, stats_u) = measure_train(false, cfg, seq_len, hidden, order, batch_sz);
+    assert_eq!(
+        loss_f.to_bits(),
+        loss_u.to_bits(),
+        "{name}: first-step loss differs across fusion: {loss_f} vs {loss_u}"
+    );
+    assert!(
+        bytes_f < bytes_u,
+        "{name}: fused cold-step allocation ({bytes_f}) not below unfused ({bytes_u})"
+    );
+    let speedup = stats_u.mean / stats_f.mean;
+    track(&name, speedup, &mut worst);
+    table.row(&[
+        name.clone(),
+        format!("{:.2}", stats_f.mean * 1e6),
+        format!("{:.2}", stats_u.mean * 1e6),
+        format!("{speedup:.2}x"),
+        format!("{:.2}", bytes_f / bytes_u),
+    ]);
+    record.push(&[
+        ("case", JsonValue::Str(name)),
+        ("threads", JsonValue::Int(1)),
+        ("wall_ns", JsonValue::Int((stats_f.mean * 1e9) as i64)),
+        ("fused_s", JsonValue::Num(stats_f.mean)),
+        ("unfused_s", JsonValue::Num(stats_u.mean)),
+        ("p50_s", JsonValue::Num(stats_f.p50)),
+        ("speedup_vs_unfused", JsonValue::Num(speedup)),
+        ("bytes_moved_fused", JsonValue::Num(bytes_f)),
+        ("bytes_moved_unfused", JsonValue::Num(bytes_u)),
+        ("smoke", JsonValue::Bool(smoke)),
+    ]);
+
+    table.print("fusion — fused builders vs unfused chains (serial)");
+
+    let out = repo_root().join("BENCH_fusion.json");
+    match record.write(&out) {
+        Ok(()) => println!("\nwrote {} ({} records)", out.display(), record.len()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", out.display()),
+    }
+
+    // acceptance: every case already asserted bytes_fused < bytes_unfused;
+    // the fused path must also not lose on wall time (graph-recording
+    // overhead is shared, so the kernel saving should show through)
+    if let Some((name, w)) = worst {
+        let verdict = if w > 1.0 { "PASS" } else { "MISS" };
+        println!("\nacceptance (worst fused-vs-unfused speedup > 1.0x): {name} {w:.2}x  {verdict}");
+    }
+}

@@ -20,7 +20,9 @@ pub mod params;
 pub use params::{ParamId, ParamStore};
 
 use crate::dn::DnFftOperator;
+use crate::fusion;
 use crate::tensor::Tensor;
+pub use crate::tensor::Act;
 use std::sync::Arc;
 
 pub type NodeId = usize;
@@ -47,6 +49,15 @@ enum Op {
     Tanh,
     Sigmoid,
     Relu,
+    /// fused `act(x·W + bias_row)` — parents [x, w, bias]; the epilogue
+    /// runs inside the matmul kernel (`matmul::affine_act`)
+    Affine { act: Option<Act> },
+    /// fused `act((a + b) + bias_row)` — parents [a, b, bias]; one pass,
+    /// no intermediates (`Tensor::add2_row_act`)
+    Add2RowAct { act: Option<Act> },
+    /// fused `act((a + b) + c)` elementwise — parents [a, b, c]
+    /// (`Tensor::add3_act`)
+    Add3Act { act: Option<Act> },
     MeanAll,
     SumAll,
     SliceRows { lo: usize },
@@ -92,6 +103,18 @@ impl Default for Graph {
 impl Graph {
     pub fn new() -> Self {
         Graph { nodes: Vec::with_capacity(256), param_nodes: Vec::new() }
+    }
+
+    /// Clear the tape for re-recording into retained storage: the node
+    /// and param vectors keep their capacity (no `with_capacity(256)`
+    /// plus regrowth every step), and dropping the nodes returns every
+    /// value/grad/aux buffer to the current thread's arena — so the
+    /// next step's recording re-draws the exact buffers this step
+    /// released.  The train loops call this instead of building a fresh
+    /// `Graph` per batch.
+    pub fn reset(&mut self) {
+        self.nodes.clear();
+        self.param_nodes.clear();
     }
 
     fn push(&mut self, value: Tensor, op: Op, parents: Vec<NodeId>, aux: Option<Tensor>) -> NodeId {
@@ -187,8 +210,67 @@ impl Graph {
 
     /// x @ W + b — the affine building block.
     pub fn affine(&mut self, x: NodeId, w: NodeId, b: NodeId) -> NodeId {
-        let xw = self.matmul(x, w);
-        self.add_row(xw, b)
+        self.affine_act(x, w, b, None)
+    }
+
+    /// `act(x @ W + b)` — the affine building block with its elementwise
+    /// tail.  With fusion on (the default) this records ONE node whose
+    /// forward applies bias + activation per output row inside the
+    /// matmul kernel and whose backward feeds the activation gradient
+    /// straight into the matmul/bias gradients; with fusion off it
+    /// records the original unfused chain (`matmul → add_row → act`).
+    /// Both record paths are bit-identical (see `crate::fusion`).
+    pub fn affine_act(&mut self, x: NodeId, w: NodeId, b: NodeId, act: Option<Act>) -> NodeId {
+        if fusion::enabled() {
+            let v = self.nodes[x]
+                .value
+                .affine_act(&self.nodes[w].value, &self.nodes[b].value, act);
+            self.push(v, Op::Affine { act }, vec![x, w, b], None)
+        } else {
+            let xw = self.matmul(x, w);
+            let s = self.add_row(xw, b);
+            self.apply_act(s, act)
+        }
+    }
+
+    /// `act((a + b) + bias_row)` — the fused elementwise tail of the
+    /// LMU output stage.  One node and one output pass with fusion on;
+    /// the original `add → add_row → act` chain with fusion off.
+    pub fn add2_row_act(&mut self, a: NodeId, b: NodeId, bias: NodeId, act: Option<Act>) -> NodeId {
+        if fusion::enabled() {
+            let v = self.nodes[a]
+                .value
+                .add2_row_act(&self.nodes[b].value, &self.nodes[bias].value, act);
+            self.push(v, Op::Add2RowAct { act }, vec![a, b, bias], None)
+        } else {
+            let s = self.add(a, b);
+            let s = self.add_row(s, bias);
+            self.apply_act(s, act)
+        }
+    }
+
+    /// `act((a + b) + c)` elementwise over three same-shape tensors —
+    /// the original LMU cell's recurrent sum.  One node with fusion on;
+    /// `add → add → act` with fusion off.
+    pub fn add3_act(&mut self, a: NodeId, b: NodeId, c: NodeId, act: Option<Act>) -> NodeId {
+        if fusion::enabled() {
+            let v = self.nodes[a]
+                .value
+                .add3_act(&self.nodes[b].value, &self.nodes[c].value, act);
+            self.push(v, Op::Add3Act { act }, vec![a, b, c], None)
+        } else {
+            let s = self.add(a, b);
+            let s = self.add(s, c);
+            self.apply_act(s, act)
+        }
+    }
+
+    fn apply_act(&mut self, s: NodeId, act: Option<Act>) -> NodeId {
+        match act {
+            Some(Act::Tanh) => self.tanh(s),
+            Some(Act::Relu) => self.relu(s),
+            None => s,
+        }
     }
 
     // ---------------------------------------------------------- nonlinear
@@ -464,8 +546,11 @@ impl Graph {
                 self.accum(parents[0], gx);
             }
             Op::Tanh => {
+                // g ⊙ (1 - y²) via the shared simd kernel — the same
+                // per-element expression the old `map` + `mul` pair
+                // computed, and the same kernel the fused ops use
                 let y = &self.nodes[id].value;
-                let gy = g.mul(&y.map(|v| 1.0 - v * v));
+                let gy = Tensor::tanh_bwd(&g, y);
                 self.accum(parents[0], gy);
             }
             Op::Sigmoid => {
@@ -474,9 +559,63 @@ impl Graph {
                 self.accum(parents[0], gy);
             }
             Op::Relu => {
+                // g ⊙ (x > 0 ? 1 : 0) via the shared simd kernel — a
+                // mask *multiply*, so 0 · NaN propagates like before
                 let x = &self.nodes[parents[0]].value;
-                let gy = g.mul(&x.map(|v| if v > 0.0 { 1.0 } else { 0.0 }));
+                let gy = Tensor::relu_bwd(&g, x);
                 self.accum(parents[0], gy);
+            }
+            Op::Affine { act } => {
+                // y = act(x·W + bias).  The activation gradient dz is
+                // exactly what the unfused chain's act node produced
+                // (tanh reads y; relu's mask reads y, and `y > 0` ⟺
+                // `z > 0` for every z including NaN/±Inf — relu zeroes
+                // exactly the non-positive and NaN entries), and then
+                // dx = dz·Wᵀ, dW = xᵀ·dz, dbias = dz row-sum are the
+                // identical matmul/add_row backward expressions.
+                let act = *act;
+                let y = &self.nodes[id].value;
+                let dz = match act {
+                    None => g,
+                    Some(Act::Tanh) => Tensor::tanh_bwd(&g, y),
+                    Some(Act::Relu) => Tensor::relu_bwd(&g, y),
+                };
+                let x = &self.nodes[parents[0]].value;
+                let w = &self.nodes[parents[1]].value;
+                let dx = dz.matmul_nt(w);
+                let dw = x.matmul_tn(&dz);
+                let dbias = dz.sum_rows();
+                self.accum(parents[0], dx);
+                self.accum(parents[1], dw);
+                self.accum(parents[2], dbias);
+            }
+            Op::Add2RowAct { act } => {
+                // y = act((a + b) + bias_row): dz flows unchanged to a
+                // and b, row-summed to the bias
+                let act = *act;
+                let y = &self.nodes[id].value;
+                let dz = match act {
+                    None => g,
+                    Some(Act::Tanh) => Tensor::tanh_bwd(&g, y),
+                    Some(Act::Relu) => Tensor::relu_bwd(&g, y),
+                };
+                let dbias = dz.sum_rows();
+                self.accum(parents[0], dz.clone());
+                self.accum(parents[1], dz);
+                self.accum(parents[2], dbias);
+            }
+            Op::Add3Act { act } => {
+                // y = act((a + b) + c): dz flows unchanged to all three
+                let act = *act;
+                let y = &self.nodes[id].value;
+                let dz = match act {
+                    None => g,
+                    Some(Act::Tanh) => Tensor::tanh_bwd(&g, y),
+                    Some(Act::Relu) => Tensor::relu_bwd(&g, y),
+                };
+                self.accum(parents[0], dz.clone());
+                self.accum(parents[1], dz.clone());
+                self.accum(parents[2], dz);
             }
             Op::MeanAll => {
                 let p = &self.nodes[parents[0]].value;

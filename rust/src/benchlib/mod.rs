@@ -513,6 +513,12 @@ fn timing_field(key: &str) -> bool {
     key.ends_with("_s") || key.ends_with("_ns") || key.ends_with("_us") || key.ends_with("_ms")
 }
 
+/// Byte-count fields (`bytes_moved_fused`, `fresh_bytes`, ...) carry
+/// traffic estimates; like timings they must be finite and non-negative.
+fn bytes_field(key: &str) -> bool {
+    key.contains("bytes")
+}
+
 /// Validate a `BENCH_*.json` perf record, the CI bench stage's gate: a
 /// refactored bench that silently emits an empty or malformed perf
 /// record fails here instead of landing.
@@ -525,6 +531,8 @@ fn timing_field(key: &str) -> bool {
 ///    trajectory consumer can rely on;
 ///  * every timing field (`*_s` / `*_ms` / `*_us` / `*_ns`, including
 ///    `wall_ns`) is finite and non-negative;
+///  * every byte-count field (key containing `bytes`, e.g.
+///    `bytes_moved_fused`) is a finite non-negative number;
 ///  * where a record carries percentile timings of one unit
 ///    (`min_*`/`p50_*`/`p95_*`/`max_*`), they are monotone
 ///    non-decreasing.
@@ -566,6 +574,16 @@ pub fn validate_perf_json(text: &str) -> Result<PerfSummary, String> {
                 if !v.is_finite() || v < 0.0 {
                     return Err(format!(
                         "record {i}: timing field {key:?} = {v} is not finite and non-negative"
+                    ));
+                }
+            }
+            if bytes_field(key) {
+                let v = value
+                    .as_f64()
+                    .ok_or_else(|| format!("record {i}: bytes field {key:?} is not a number"))?;
+                if !v.is_finite() || v < 0.0 {
+                    return Err(format!(
+                        "record {i}: bytes field {key:?} = {v} is not finite and non-negative"
                     ));
                 }
             }
@@ -775,6 +793,26 @@ mod tests {
         ]);
         let err = validate_perf_json(&p.render()).unwrap_err();
         assert!(err.contains("monotone"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_bad_byte_counts() {
+        let rec = |v: JsonValue| {
+            let mut p = PerfJson::new("demo");
+            p.push(&[
+                ("case", JsonValue::Str("x".into())),
+                ("threads", JsonValue::Int(2)),
+                ("wall_ns", JsonValue::Int(1)),
+                ("bytes_moved_fused", v),
+            ]);
+            p.render()
+        };
+        let err = validate_perf_json(&rec(JsonValue::Num(-1.0))).unwrap_err();
+        assert!(err.contains("bytes"), "negative byte count not rejected: {err}");
+        let err = validate_perf_json(&rec(JsonValue::Str("lots".into()))).unwrap_err();
+        assert!(err.contains("bytes"), "non-numeric byte count not rejected: {err}");
+        validate_perf_json(&rec(JsonValue::Int(4096))).expect("valid byte count rejected");
+        validate_perf_json(&rec(JsonValue::Num(0.0))).expect("zero byte count rejected");
     }
 
     #[test]

@@ -217,6 +217,10 @@ pub struct TrainConfig {
     /// broadcast).  Off keeps the bulk-synchronous, bit-reproducible
     /// reference path.
     pub pipeline: bool,
+    /// Fuse elementwise epilogues (bias add + tanh/relu) into the
+    /// producing kernels (`PLMU_FUSION`).  Both paths are bit-identical;
+    /// off exists for debugging and the CI equivalence matrix.
+    pub fusion: bool,
 }
 
 impl Default for TrainConfig {
@@ -233,6 +237,7 @@ impl Default for TrainConfig {
             workers: 1,
             threads: 0,
             pipeline: false,
+            fusion: true,
         }
     }
 }
@@ -259,6 +264,7 @@ impl TrainConfig {
             workers: c.usize_or(&k("workers"), d.workers),
             threads: c.usize_or(&k("threads"), d.threads),
             pipeline: c.bool_or(&k("pipeline"), d.pipeline),
+            fusion: c.bool_or(&k("fusion"), d.fusion),
         }
     }
 
@@ -267,6 +273,15 @@ impl TrainConfig {
     pub fn apply_threads(&self) {
         if self.threads > 0 {
             crate::exec::set_threads(self.threads);
+        }
+    }
+
+    /// Apply the `fusion` knob to the global fusion dispatch.  Only
+    /// forces the knob when the config turns fusion *off*, so a default
+    /// config still honors a `PLMU_FUSION=0` environment override.
+    pub fn apply_fusion(&self) {
+        if !self.fusion {
+            crate::fusion::set_enabled(false);
         }
     }
 }
@@ -354,6 +369,16 @@ theta = 784.0
         let c = Config::parse("[train]\npipeline = true").unwrap();
         let t = TrainConfig::from_config(&c, "train");
         assert!(t.pipeline);
+    }
+
+    #[test]
+    fn fusion_knob_parses_and_defaults_on() {
+        let c = Config::parse("").unwrap();
+        let t = TrainConfig::from_config(&c, "train");
+        assert!(t.fusion, "fusion must default on");
+        let c2 = Config::parse("[train]\nfusion = false").unwrap();
+        let t2 = TrainConfig::from_config(&c2, "train");
+        assert!(!t2.fusion);
     }
 
     #[test]

@@ -28,16 +28,23 @@
 //! steal-chunks than workers, so uneven shards (ragged tails) rebalance
 //! instead of stalling the job on its slowest static chunk.
 //!
-//! Replica state (parameter store, model, RNG, batch queue) is `Send` and
-//! migrates between pool threads across steps; the autograd [`Graph`] is
-//! built and dropped *inside* a single chunk, so tapes never cross
-//! threads.  Only packed `Vec<f32>` parameter/gradient buffers move
-//! between coordinator and replicas — which is also how a real multi-host
-//! version would wire NCCL-style collectives.
+//! Replica state (parameter store, model, RNG, batch queue, retained
+//! graph + buffer arena) is `Send` and migrates between pool threads
+//! across steps; the autograd [`Graph`] is reset and re-recorded
+//! *inside* a single chunk (between steps it is inert `Send` data like
+//! the store), so live tapes never cross threads.  Each replica carries
+//! its own [`Arena`], installed for the duration of its chunk, and the
+//! coordinator keeps a separate optimizer-side arena for the all-reduce
+//! and unpacked-gradient buffers — under `--pipeline` those are two
+//! arenas in flight on two threads.  Only packed `Vec<f32>`
+//! parameter/gradient buffers move between coordinator and replicas —
+//! which is also how a real multi-host version would wire NCCL-style
+//! collectives.
 
 use crate::autograd::{Graph, ParamId, ParamStore};
 use crate::data::batcher::{Batch, BatchIter, SeqDataset};
 use crate::exec;
+use crate::exec::arena::{self, Arena};
 use crate::optim::{clip_global_norm, Optimizer};
 use crate::train::TrainableModel;
 use crate::util::Rng;
@@ -69,7 +76,8 @@ pub fn unpack_grads(store: &ParamStore, flat: &[f32]) -> Vec<(ParamId, crate::te
     let mut ofs = 0usize;
     for id in store.ids() {
         let t = store.get(id);
-        let g = crate::tensor::Tensor::new(t.shape(), flat[ofs..ofs + t.len()].to_vec());
+        // drawn from the optimizer-side arena when one is in scope
+        let g = crate::tensor::Tensor::new(t.shape(), arena::alloc_copy(&flat[ofs..ofs + t.len()]));
         ofs += t.len();
         out.push((id, g));
     }
@@ -89,7 +97,9 @@ pub fn allreduce_mean(parts: &[&[f32]]) -> Vec<f32> {
         assert_eq!(p.len(), len, "replica gradient length mismatch");
     }
     let inv = 1.0f32 / parts.len() as f32;
-    let mut out = vec![0.0f32; len];
+    // arena-backed when a scope is installed (the caller releases it);
+    // zero-filled either way, so results are identical
+    let mut out = arena::alloc_zeroed(len);
     let plan = exec::plan_for(len, len * (parts.len() + 1));
     exec::parallel_rows_mut(&mut out, 1, plan, |i0, block| {
         for (k, o) in block.iter_mut().enumerate() {
@@ -168,6 +178,10 @@ struct Replica<M> {
     pending: Option<Batch>,
     /// (loss, packed gradient) produced by the step in flight
     out: Option<(f32, Vec<f32>)>,
+    /// tape retained across steps (reset + re-recorded each chunk)
+    graph: Graph,
+    /// this replica's buffer pool, installed while its chunk runs
+    arena: Arena,
 }
 
 impl<M: TrainableModel> Replica<M> {
@@ -200,12 +214,16 @@ impl<M: TrainableModel> Replica<M> {
     fn step(&mut self, packed_params: &[f32]) {
         if let Some(batch) = self.pending.take() {
             self.store.unpack(packed_params);
-            let mut g = Graph::new();
-            let loss = self.model.loss(&mut g, &self.store, &batch);
-            g.backward(loss);
-            let lv = g.value(loss).item();
-            let grads = g.param_grads();
-            self.out = Some((lv, pack_grads(&self.store, &grads)));
+            let g = &mut self.graph;
+            let (model, store) = (&self.model, &self.store);
+            self.out = Some(arena::scope(&mut self.arena, || {
+                g.reset();
+                let loss = model.loss(g, store, &batch);
+                g.backward(loss);
+                let lv = g.value(loss).item();
+                let grads = g.param_grads();
+                (lv, pack_grads(store, &grads))
+            }));
         }
     }
 }
@@ -255,6 +273,8 @@ impl DataParallelCoordinator {
                 queue: Vec::new(),
                 pending: None,
                 out: None,
+                graph: Graph::new(),
+                arena: Arena::new(),
             })
             .collect();
 
@@ -278,6 +298,7 @@ fn run_sync<M: TrainableModel + Send>(
 ) -> DataParallelResult {
     let mut step_losses = Vec::new();
     let mut steps = 0usize;
+    let mut opt_arena = Arena::new();
     loop {
         // stage one batch per replica that still has data, then fan
         // out over the *live* replicas only — with uneven shards the
@@ -317,12 +338,15 @@ fn run_sync<M: TrainableModel + Send>(
             replicas.iter().filter_map(|r| r.out.as_ref().map(|(l, _)| *l)).sum();
         let got = parts.len();
         debug_assert_eq!(got, live_n, "every staged replica must produce gradients");
-        let avg = allreduce_mean(&parts);
-        let mut grads = unpack_grads(canon_store, &avg);
-        if let Some(c) = cfg.grad_clip {
-            clip_global_norm(&mut grads, c);
-        }
-        opt.step(canon_store, &grads);
+        arena::scope(&mut opt_arena, || {
+            let avg = allreduce_mean(&parts);
+            let mut grads = unpack_grads(canon_store, &avg);
+            if let Some(c) = cfg.grad_clip {
+                clip_global_norm(&mut grads, c);
+            }
+            opt.step(canon_store, &grads);
+            arena::release(avg);
+        });
         step_losses.push(loss_sum / got as f32);
         steps += 1;
         for r in replicas.iter_mut() {
@@ -378,6 +402,9 @@ fn run_pipelined<M: TrainableModel + Send>(
     let mut write_arena = vec![0.0f32; read_arena.len()];
     let mut step_losses = Vec::new();
     let mut steps = 0usize;
+    // optimizer-stage buffer pool: lives on the coordinator thread while
+    // each replica's pool rides its chunk — two arenas in flight
+    let mut opt_arena = Arena::new();
     // (loss, packed grads) of the batch whose optimizer stage is pending
     let mut pending_outs: Option<Vec<(f32, Vec<f32>)>> = None;
     loop {
@@ -414,6 +441,7 @@ fn run_pipelined<M: TrainableModel + Send>(
                         opt,
                         cfg,
                         &mut write_arena,
+                        &mut opt_arena,
                         &mut step_losses,
                         &mut steps,
                     )
@@ -433,6 +461,7 @@ fn run_pipelined<M: TrainableModel + Send>(
                 opt,
                 cfg,
                 &mut write_arena,
+                &mut opt_arena,
                 &mut step_losses,
                 &mut steps,
             )
@@ -451,7 +480,7 @@ fn run_pipelined<M: TrainableModel + Send>(
     }
     // drain the final in-flight gradient set (nothing left to overlap)
     if let Some(outs) = pending_outs.take() {
-        apply_step(canon_store, opt, cfg, &outs, &mut write_arena, &mut step_losses);
+        apply_step(canon_store, opt, cfg, &outs, &mut write_arena, &mut opt_arena, &mut step_losses);
         steps += 1;
     }
     DataParallelResult { step_losses, final_params: canon_store.pack(), steps }
@@ -466,12 +495,13 @@ fn optimizer_stage(
     opt: &mut dyn Optimizer,
     cfg: &DataParallelConfig,
     arena: &mut Vec<f32>,
+    opt_arena: &mut Arena,
     step_losses: &mut Vec<f32>,
     steps: &mut usize,
 ) -> bool {
     match pending_outs.take() {
         Some(outs) => {
-            apply_step(canon_store, opt, cfg, &outs, arena, step_losses);
+            apply_step(canon_store, opt, cfg, &outs, arena, opt_arena, step_losses);
             *steps += 1;
             true
         }
@@ -488,16 +518,20 @@ fn apply_step(
     cfg: &DataParallelConfig,
     outs: &[(f32, Vec<f32>)],
     arena: &mut Vec<f32>,
+    opt_arena: &mut Arena,
     step_losses: &mut Vec<f32>,
 ) {
-    let parts: Vec<&[f32]> = outs.iter().map(|(_, g)| g.as_slice()).collect();
-    let avg = allreduce_mean(&parts);
-    let mut grads = unpack_grads(canon_store, &avg);
-    if let Some(c) = cfg.grad_clip {
-        clip_global_norm(&mut grads, c);
-    }
     let loss_sum: f32 = outs.iter().map(|(l, _)| *l).sum();
-    opt.step_into(canon_store, &grads, arena);
+    arena::scope(opt_arena, || {
+        let parts: Vec<&[f32]> = outs.iter().map(|(_, g)| g.as_slice()).collect();
+        let avg = allreduce_mean(&parts);
+        let mut grads = unpack_grads(canon_store, &avg);
+        if let Some(c) = cfg.grad_clip {
+            clip_global_norm(&mut grads, c);
+        }
+        opt.step_into(canon_store, &grads, arena);
+        arena::release(avg);
+    });
     step_losses.push(loss_sum / outs.len() as f32);
 }
 

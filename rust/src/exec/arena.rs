@@ -1,0 +1,434 @@
+//! Size-classed buffer arena: the zero-allocation memory plan for the
+//! training hot path.
+//!
+//! Every training step records the same graph over the same batch
+//! shapes, so the sequence of buffer sizes a step allocates is
+//! deterministic and identical to the sequence the previous step
+//! released.  This module exploits that: an [`Arena`] keeps freed
+//! `Vec<f32>` buffers in power-of-two **size classes**, and
+//! `Tensor`'s allocation paths (`zeros`, `full`, `Clone`) draw from the
+//! arena installed on the current thread while `Tensor`'s `Drop`
+//! returns buffers to it.  After one warmup step has populated the
+//! classes, steady-state training performs **zero heap allocation** —
+//! asserted by `train::tests::steady_state_training_allocates_nothing`
+//! and observable via `PLMU_ALLOC_STATS` (`crate::metrics::alloc_stats`).
+//!
+//! # Scoping and threading
+//!
+//! Arenas are installed per thread with [`scope`]: the arena is moved
+//! into a thread-local slot for the duration of a closure and handed
+//! back after, so the owner (a train loop, a data-parallel replica, the
+//! pipelined optimizer stage) keeps the arena across steps while the
+//! allocation hooks stay free of locks.  Outside any scope the hooks
+//! fall through to the plain allocator and counters stay untouched —
+//! code that never opts in is unaffected.
+//!
+//! Under `--pipeline`, the replica's arena (worker thread) and the
+//! optimizer's arena (coordinator thread) are **two arenas in flight**
+//! on different threads — the thread-local slot is what keeps their
+//! free lists isolated, mirroring PR 4's double-buffered parameter
+//! arenas.  `arena_unit` tests pin the isolation.
+//!
+//! # Why recycling cannot change bits
+//!
+//! The arena hands out *whole buffers*, never aliased views: a buffer
+//! is pushed to a free list only by `release` (called from `Tensor::drop`
+//! or `Graph::reset`, i.e. after its last use) and popped by exactly one
+//! later allocation.  `alloc_zeroed`/`alloc_filled`/`alloc_copy`
+//! overwrite every element before the buffer is visible, so recycled
+//! and fresh buffers are indistinguishable to the kernels — determinism
+//! is untouched, which is why the fingerprint matrix in `./ci.sh
+//! determinism` needs no arena dimension.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Per-class cap on retained free buffers.  Untracked buffers can enter
+/// through `release` (e.g. batch tensors built outside the scope but
+/// dropped inside it), so without a cap a long run could grow the free
+/// lists without bound; 32 comfortably covers the deepest per-step
+/// live-buffer population at one size.
+pub const MAX_FREE_PER_CLASS: usize = 32;
+
+/// Snapshot of allocation counters (per arena, or process-wide via
+/// [`global_stats`]).  `hits / (hits + misses)` is the arena hit rate;
+/// `misses` and `fresh_bytes` are the heap traffic — both must stay
+/// flat across steady-state steps.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Allocations served from a free list (no heap traffic).
+    pub hits: u64,
+    /// Allocations that had to touch the heap.
+    pub misses: u64,
+    /// Bytes of fresh heap capacity allocated by misses.
+    pub fresh_bytes: u64,
+    /// Buffers returned to a free list by `release`.
+    pub recycled: u64,
+    /// Buffers dropped by `release` because their class was full.
+    pub dropped: u64,
+}
+
+impl ArenaStats {
+    /// Counter-wise difference since an earlier snapshot.
+    pub fn since(&self, earlier: &ArenaStats) -> ArenaStats {
+        ArenaStats {
+            hits: self.hits - earlier.hits,
+            misses: self.misses - earlier.misses,
+            fresh_bytes: self.fresh_bytes - earlier.fresh_bytes,
+            recycled: self.recycled - earlier.recycled,
+            dropped: self.dropped - earlier.dropped,
+        }
+    }
+}
+
+// Process-wide mirrors of the per-arena counters (relaxed: they are
+// observability, not synchronization) — the backing for
+// `metrics::alloc_stats` / `PLMU_ALLOC_STATS`.
+static G_HITS: AtomicU64 = AtomicU64::new(0);
+static G_MISSES: AtomicU64 = AtomicU64::new(0);
+static G_FRESH_BYTES: AtomicU64 = AtomicU64::new(0);
+static G_RECYCLED: AtomicU64 = AtomicU64::new(0);
+static G_DROPPED: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide allocation counters, summed over every arena that has
+/// ever been active on any thread.
+pub fn global_stats() -> ArenaStats {
+    ArenaStats {
+        hits: G_HITS.load(Ordering::Relaxed),
+        misses: G_MISSES.load(Ordering::Relaxed),
+        fresh_bytes: G_FRESH_BYTES.load(Ordering::Relaxed),
+        recycled: G_RECYCLED.load(Ordering::Relaxed),
+        dropped: G_DROPPED.load(Ordering::Relaxed),
+    }
+}
+
+/// Size class that can serve a request for `len` elements: the
+/// exponent of `len.next_power_of_two()`, so class `c` serves every
+/// `len in (2^(c-1), 2^c]`.
+#[inline]
+fn class_for_len(len: usize) -> usize {
+    debug_assert!(len >= 1);
+    len.next_power_of_two().trailing_zeros() as usize
+}
+
+/// Size class a buffer of capacity `cap` belongs to: `floor(log2(cap))`,
+/// rounding *down* so every buffer in class `c` has capacity `>= 2^c`
+/// and can serve any request routed to that class.
+#[inline]
+fn class_for_cap(cap: usize) -> usize {
+    debug_assert!(cap >= 1);
+    (usize::BITS - 1 - cap.leading_zeros()) as usize
+}
+
+/// A size-classed free-list pool of `Vec<f32>` buffers.  Plain data
+/// (`Send`), owned by one train loop / replica / optimizer stage and
+/// installed per thread with [`scope`].
+#[derive(Default)]
+pub struct Arena {
+    /// `classes[c]` holds freed buffers with `capacity in [2^c, 2^(c+1))`.
+    classes: Vec<Vec<Vec<f32>>>,
+    stats: ArenaStats,
+}
+
+impl Arena {
+    pub fn new() -> Self {
+        Arena::default()
+    }
+
+    /// Snapshot of this arena's counters (read between [`scope`] calls;
+    /// per-arena counters keep concurrently-running tests and replicas
+    /// from polluting each other's assertions).
+    pub fn stats(&self) -> ArenaStats {
+        self.stats
+    }
+
+    /// Total buffers currently parked on free lists.
+    pub fn free_buffers(&self) -> usize {
+        self.classes.iter().map(|c| c.len()).sum()
+    }
+
+    fn take(&mut self, len: usize) -> Vec<f32> {
+        let c = class_for_len(len);
+        if let Some(buf) = self.classes.get_mut(c).and_then(|l| l.pop()) {
+            self.stats.hits += 1;
+            G_HITS.fetch_add(1, Ordering::Relaxed);
+            debug_assert!(buf.capacity() >= len);
+            buf
+        } else {
+            let cap = 1usize << c;
+            self.stats.misses += 1;
+            self.stats.fresh_bytes += (cap * std::mem::size_of::<f32>()) as u64;
+            G_MISSES.fetch_add(1, Ordering::Relaxed);
+            G_FRESH_BYTES.fetch_add((cap * std::mem::size_of::<f32>()) as u64, Ordering::Relaxed);
+            Vec::with_capacity(cap)
+        }
+    }
+
+    fn put(&mut self, buf: Vec<f32>) {
+        let c = class_for_cap(buf.capacity());
+        if self.classes.len() <= c {
+            self.classes.resize_with(c + 1, Vec::new);
+        }
+        let list = &mut self.classes[c];
+        if list.len() < MAX_FREE_PER_CLASS {
+            self.stats.recycled += 1;
+            G_RECYCLED.fetch_add(1, Ordering::Relaxed);
+            list.push(buf);
+        } else {
+            self.stats.dropped += 1;
+            G_DROPPED.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+thread_local! {
+    /// The arena installed on this thread by [`scope`], if any.
+    static CURRENT: RefCell<Option<Arena>> = const { RefCell::new(None) };
+}
+
+/// Run `f` with `arena` installed as this thread's allocation arena.
+///
+/// The arena is *moved* into the thread-local slot (so the hooks need
+/// no locking) and moved back out when `f` returns — including on
+/// unwind, so a panicking test does not lose its arena.  Nested scopes
+/// stack: the inner arena shadows the outer for the inner closure.
+pub fn scope<R>(arena: &mut Arena, f: impl FnOnce() -> R) -> R {
+    let prev = CURRENT.with(|c| c.borrow_mut().replace(std::mem::take(arena)));
+    struct Restore<'a> {
+        arena: &'a mut Arena,
+        prev: Option<Arena>,
+    }
+    impl Drop for Restore<'_> {
+        fn drop(&mut self) {
+            let cur = CURRENT.with(|c| std::mem::replace(&mut *c.borrow_mut(), self.prev.take()));
+            *self.arena = cur.unwrap_or_default();
+        }
+    }
+    let _restore = Restore { arena, prev };
+    f()
+}
+
+/// Whether an arena is installed on this thread.
+pub fn active() -> bool {
+    CURRENT.with(|c| c.borrow().is_some())
+}
+
+/// Allocate a zero-filled buffer of `len` elements — `Tensor::zeros`'
+/// backing.  Served from the installed arena's free lists when
+/// possible; a plain (uncounted) allocation outside any scope.
+pub fn alloc_zeroed(len: usize) -> Vec<f32> {
+    if len == 0 {
+        return Vec::new();
+    }
+    CURRENT.with(|c| match c.borrow_mut().as_mut() {
+        Some(a) => {
+            let mut buf = a.take(len);
+            buf.clear();
+            buf.resize(len, 0.0);
+            buf
+        }
+        None => vec![0.0; len],
+    })
+}
+
+/// Allocate a buffer of `len` copies of `v` — `Tensor::full`'s backing.
+pub fn alloc_filled(len: usize, v: f32) -> Vec<f32> {
+    if len == 0 {
+        return Vec::new();
+    }
+    CURRENT.with(|c| match c.borrow_mut().as_mut() {
+        Some(a) => {
+            let mut buf = a.take(len);
+            buf.clear();
+            buf.resize(len, v);
+            buf
+        }
+        None => vec![v; len],
+    })
+}
+
+/// Allocate a copy of `src` — `Tensor::clone` and the slicing ops'
+/// backing.
+pub fn alloc_copy(src: &[f32]) -> Vec<f32> {
+    if src.is_empty() {
+        return Vec::new();
+    }
+    CURRENT.with(|c| match c.borrow_mut().as_mut() {
+        Some(a) => {
+            let mut buf = a.take(src.len());
+            buf.clear();
+            buf.extend_from_slice(src);
+            buf
+        }
+        None => src.to_vec(),
+    })
+}
+
+/// Return a buffer to the installed arena's free lists (`Tensor::drop`,
+/// `Graph::reset`).  Outside any scope — or for a zero-capacity buffer
+/// — this is a plain drop.
+pub fn release(buf: Vec<f32>) {
+    if buf.capacity() == 0 {
+        return;
+    }
+    CURRENT.with(|c| {
+        if let Some(a) = c.borrow_mut().as_mut() {
+            a.put(buf);
+        }
+        // else: `buf` drops here, a plain deallocation
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_class_reuse_round_trips_buffers() {
+        let mut a = Arena::new();
+        scope(&mut a, || {
+            let b = alloc_zeroed(100); // class 7 (128)
+            release(b);
+            let b2 = alloc_zeroed(90); // same class -> must be a hit
+            assert!(b2.capacity() >= 128);
+            release(b2);
+        });
+        let s = a.stats();
+        assert_eq!(s.misses, 1, "{s:?}");
+        assert_eq!(s.hits, 1, "{s:?}");
+        assert_eq!(s.recycled, 2, "{s:?}");
+        assert_eq!(a.free_buffers(), 1);
+    }
+
+    #[test]
+    fn reused_buffers_are_fully_overwritten() {
+        let mut a = Arena::new();
+        scope(&mut a, || {
+            let mut b = alloc_zeroed(64);
+            for v in b.iter_mut() {
+                *v = f32::NAN;
+            }
+            release(b);
+            let z = alloc_zeroed(64);
+            assert!(z.iter().all(|v| v.to_bits() == 0), "stale bytes leaked");
+            let f = alloc_filled(64, 2.5);
+            assert!(f.iter().all(|&v| v == 2.5));
+            let src: Vec<f32> = (0..64).map(|i| i as f32).collect();
+            let c = alloc_copy(&src);
+            assert_eq!(c, src);
+            release(z);
+            release(f);
+            release(c);
+        });
+    }
+
+    #[test]
+    fn live_buffers_never_alias() {
+        let mut a = Arena::new();
+        scope(&mut a, || {
+            let b1 = alloc_zeroed(32);
+            let b2 = alloc_zeroed(32);
+            assert_ne!(b1.as_ptr(), b2.as_ptr(), "arena handed out an aliased live buffer");
+            release(b1);
+            let b3 = alloc_zeroed(32); // may reuse b1's storage — b1 is dead
+            assert_ne!(b3.as_ptr(), b2.as_ptr());
+            release(b2);
+            release(b3);
+        });
+        assert_eq!(a.stats().hits, 1);
+    }
+
+    #[test]
+    fn per_class_cap_bounds_growth() {
+        let mut a = Arena::new();
+        scope(&mut a, || {
+            let bufs: Vec<_> = (0..MAX_FREE_PER_CLASS + 5).map(|_| alloc_zeroed(16)).collect();
+            for b in bufs {
+                release(b);
+            }
+        });
+        let s = a.stats();
+        assert_eq!(s.recycled, MAX_FREE_PER_CLASS as u64);
+        assert_eq!(s.dropped, 5);
+        assert_eq!(a.free_buffers(), MAX_FREE_PER_CLASS);
+    }
+
+    #[test]
+    fn outside_scope_is_plain_allocation() {
+        assert!(!active());
+        let b = alloc_zeroed(128);
+        assert_eq!(b.len(), 128);
+        release(b); // no arena: plain drop, no panic
+    }
+
+    #[test]
+    fn scopes_nest_and_restore() {
+        let mut outer = Arena::new();
+        let mut inner = Arena::new();
+        scope(&mut outer, || {
+            release(alloc_zeroed(8));
+            scope(&mut inner, || {
+                release(alloc_zeroed(8));
+            });
+            assert!(active(), "outer arena restored after inner scope");
+            release(alloc_zeroed(8)); // hit against outer's free list
+        });
+        assert_eq!(outer.stats().misses, 1);
+        assert_eq!(outer.stats().hits, 1);
+        assert_eq!(inner.stats().misses, 1);
+    }
+
+    #[test]
+    fn two_arenas_on_two_threads_stay_isolated() {
+        // the pipelined coordinator's shape: a replica arena on a worker
+        // thread and an optimizer arena on the coordinator thread, both
+        // in flight at once — free lists must never cross.
+        let t1 = std::thread::spawn(|| {
+            let mut a = Arena::new();
+            for _ in 0..4 {
+                scope(&mut a, || {
+                    let b = alloc_zeroed(1000);
+                    release(b);
+                });
+            }
+            a.stats()
+        });
+        let t2 = std::thread::spawn(|| {
+            let mut a = Arena::new();
+            for _ in 0..4 {
+                scope(&mut a, || {
+                    let b = alloc_zeroed(1000);
+                    release(b);
+                });
+            }
+            a.stats()
+        });
+        let (s1, s2) = (t1.join().unwrap(), t2.join().unwrap());
+        for s in [s1, s2] {
+            assert_eq!(s.misses, 1, "each thread warms its own arena exactly once: {s:?}");
+            assert_eq!(s.hits, 3, "{s:?}");
+            assert_eq!(s.recycled, 4, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn steady_state_is_hit_only() {
+        let mut a = Arena::new();
+        // warmup: a "step" allocating a fixed size profile
+        let step = || {
+            let bufs: Vec<_> = [100usize, 200, 300, 100].iter().map(|&n| alloc_zeroed(n)).collect();
+            for b in bufs {
+                release(b);
+            }
+        };
+        scope(&mut a, step);
+        let warm = a.stats();
+        for _ in 0..10 {
+            scope(&mut a, step);
+        }
+        let delta = a.stats().since(&warm);
+        assert_eq!(delta.misses, 0, "steady state must not touch the heap: {delta:?}");
+        assert_eq!(delta.fresh_bytes, 0);
+        assert_eq!(delta.hits, 40);
+    }
+}

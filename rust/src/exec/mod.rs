@@ -41,6 +41,7 @@
 //!    hand-off (~1µs) instead of a thread spawn (~10µs) — the crossover
 //!    measured by `cargo bench --bench pool_crossover`.
 
+pub mod arena;
 mod pool;
 
 use std::cell::Cell;

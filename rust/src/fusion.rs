@@ -1,0 +1,79 @@
+//! Runtime knob for the elementwise fusion pass.
+//!
+//! When fusion is on (the default), `Graph::affine_act` and
+//! `Graph::add2_row_act` record a single fused node whose forward pass
+//! applies the bias add and optional activation per output row while
+//! the matmul tile is still cache-hot, and whose backward pass feeds
+//! the activation gradient straight into the matmul/bias gradients —
+//! no intermediate tensors are materialized.  When it is off, the same
+//! entry points record the original unfused node chain
+//! (`matmul → add_row → tanh`).
+//!
+//! Both paths are **bit-identical**: the fused kernels apply the
+//! identical canonical per-element expressions through the shared
+//! `crate::simd` entries (see `tensor/matmul.rs::affine_act` and the
+//! `Op::Affine`/`Op::Add2RowAct` arms in `autograd`), so the SIMD
+//! layer's bit-exactness argument carries over unchanged.  The knob
+//! exists so the CI determinism matrix can prove that end-to-end:
+//! `./ci.sh determinism` byte-diffs the train fingerprint across
+//! `PLMU_FUSION ∈ {1, 0}` on top of the threads × simd matrix.
+//!
+//! The knob mirrors `PLMU_SIMD` exactly: resolved once from the
+//! `PLMU_FUSION` environment variable (`0`/`off`/`false` disable it),
+//! overridable by [`set_enabled`] from tests, benches, config, and the
+//! `--no-fusion` CLI flag.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Runtime fusion knob: 0 = unresolved, 1 = on, 2 = off.
+static FUSION_ENABLED: AtomicUsize = AtomicUsize::new(0);
+
+fn resolve_default() -> bool {
+    match std::env::var("PLMU_FUSION") {
+        Ok(v) => {
+            let v = v.trim();
+            !(v == "0" || v.eq_ignore_ascii_case("off") || v.eq_ignore_ascii_case("false"))
+        }
+        Err(_) => true,
+    }
+}
+
+/// Whether the graph builders record fused nodes (default: on, unless
+/// `PLMU_FUSION=0`/`off`/`false`).  Both settings are bit-identical by
+/// construction; the knob exists so the determinism gate can prove it
+/// end-to-end.
+pub fn enabled() -> bool {
+    match FUSION_ENABLED.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => {
+            let on = resolve_default();
+            // racy double-resolve is benign: resolve_default is deterministic
+            FUSION_ENABLED.store(if on { 1 } else { 2 }, Ordering::Relaxed);
+            on
+        }
+    }
+}
+
+/// Set the fusion knob (tests, benches, config, CLI; production reads
+/// `PLMU_FUSION` once).  Flipping it mid-run is safe — already-recorded
+/// nodes keep their op, and both op forms are bit-identical — but A/B
+/// timers should serialize on their own lock.
+pub fn set_enabled(on: bool) {
+    FUSION_ENABLED.store(if on { 1 } else { 2 }, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knob_roundtrip() {
+        let was = enabled();
+        set_enabled(true);
+        assert!(enabled());
+        set_enabled(false);
+        assert!(!enabled());
+        set_enabled(was);
+    }
+}

@@ -2,7 +2,7 @@
 //! the paper's language-model blocks are DN + dense + highway), and token
 //! embedding.
 
-use crate::autograd::{Graph, NodeId, ParamId, ParamStore};
+use crate::autograd::{Act, Graph, NodeId, ParamId, ParamStore};
 use crate::tensor::Tensor;
 use crate::util::Rng;
 
@@ -55,8 +55,16 @@ impl Dense {
     pub fn forward(&self, g: &mut Graph, store: &ParamStore, x: NodeId) -> NodeId {
         let w = g.param(store, self.w);
         let b = g.param(store, self.b);
-        let a = g.affine(x, w, b);
-        self.act.apply(g, a)
+        match self.act {
+            // tanh/relu ride the fused affine epilogue; sigmoid has no
+            // fused kernel and stays a separate node
+            Activation::Tanh => g.affine_act(x, w, b, Some(Act::Tanh)),
+            Activation::Relu => g.affine_act(x, w, b, Some(Act::Relu)),
+            _ => {
+                let a = g.affine(x, w, b);
+                self.act.apply(g, a)
+            }
+        }
     }
 
     pub fn num_params(&self) -> usize {
@@ -93,8 +101,7 @@ impl Highway {
         let bh = g.param(store, self.bh);
         let ta = g.affine(x, wt, bt);
         let t = g.sigmoid(ta);
-        let ha = g.affine(x, wh, bh);
-        let h = g.tanh(ha);
+        let h = g.affine_act(x, wh, bh, Some(Act::Tanh));
         let th = g.mul(t, h);
         let one_minus_t = g.one_minus(t);
         let carry = g.mul(one_minus_t, x);

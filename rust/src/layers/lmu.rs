@@ -19,7 +19,7 @@
 //! original cells remain the serial references.  Serial and parallel
 //! execution are bit-exact, so `threads` never changes a result.
 
-use crate::autograd::{Graph, NodeId, ParamId, ParamStore};
+use crate::autograd::{Act, Graph, NodeId, ParamId, ParamStore};
 use crate::dn::{DelayNetwork, DnFftOperator};
 use crate::exec;
 use crate::tensor::Tensor;
@@ -106,12 +106,8 @@ impl LmuParallelLayer {
     fn encode(&self, g: &mut Graph, store: &ParamStore, x: NodeId) -> NodeId {
         let ux = g.param(store, self.params.ux);
         let bu = g.param(store, self.params.bu);
-        let a = g.affine(x, ux, bu);
-        if self.spec.nonlin_u {
-            g.tanh(a)
-        } else {
-            a
-        }
+        let act = if self.spec.nonlin_u { Some(Act::Tanh) } else { None };
+        g.affine_act(x, ux, bu, act)
     }
 
     /// Output map (eq. 20): o = f2(m Wm + x Wx + bo).
@@ -121,13 +117,8 @@ impl LmuParallelLayer {
         let bo = g.param(store, self.params.bo);
         let mm = g.matmul(m, wm);
         let xx = g.matmul(x, wx);
-        let s = g.add(mm, xx);
-        let s = g.add_row(s, bo);
-        if self.spec.nonlin_o {
-            g.tanh(s)
-        } else {
-            s
-        }
+        let act = if self.spec.nonlin_o { Some(Act::Tanh) } else { None };
+        g.add2_row_act(mm, xx, bo, act)
     }
 
     /// All-states forward (eq. 26 path): x (B·n, dx) -> o (B·n, hidden).
@@ -204,8 +195,8 @@ impl LmuSequentialLayer {
         let (du, d) = (self.spec.du, self.spec.d);
         let ux = g.param(store, self.params.ux);
         let bu = g.param(store, self.params.bu);
-        let u_aff = g.affine(x, ux, bu);
-        let u_full = if self.spec.nonlin_u { g.tanh(u_aff) } else { u_aff }; // (n·B, du)
+        let act_u = if self.spec.nonlin_u { Some(Act::Tanh) } else { None };
+        let u_full = g.affine_act(x, ux, bu, act_u); // (n·B, du)
 
         let abar_t = g.input(self.abar_t.clone());
         let bbar_row = g.input(self.bbar_row.clone());
@@ -227,13 +218,8 @@ impl LmuSequentialLayer {
         let bo = g.param(store, self.params.bo);
         let mm = g.matmul(m_all, wm);
         let xx = g.matmul(x, wx);
-        let s = g.add(mm, xx);
-        let s = g.add_row(s, bo);
-        if self.spec.nonlin_o {
-            g.tanh(s)
-        } else {
-            s
-        }
+        let act_o = if self.spec.nonlin_o { Some(Act::Tanh) } else { None };
+        g.add2_row_act(mm, xx, bo, act_o)
     }
 
     /// Sequential forward returning only the final step's output (B, hidden).
@@ -248,8 +234,8 @@ impl LmuSequentialLayer {
         let (du, d) = (self.spec.du, self.spec.d);
         let ux = g.param(store, self.params.ux);
         let bu = g.param(store, self.params.bu);
-        let u_aff = g.affine(x, ux, bu);
-        let u_full = if self.spec.nonlin_u { g.tanh(u_aff) } else { u_aff };
+        let act_u = if self.spec.nonlin_u { Some(Act::Tanh) } else { None };
+        let u_full = g.affine_act(x, ux, bu, act_u);
 
         let abar_t = g.input(self.abar_t.clone());
         let bbar_row = g.input(self.bbar_row.clone());
@@ -269,13 +255,8 @@ impl LmuSequentialLayer {
         let bo = g.param(store, self.params.bo);
         let mm = g.matmul(m_last, wm);
         let xx = g.matmul(x_last, wx);
-        let s = g.add(mm, xx);
-        let s = g.add_row(s, bo);
-        if self.spec.nonlin_o {
-            g.tanh(s)
-        } else {
-            s
-        }
+        let act_o = if self.spec.nonlin_o { Some(Act::Tanh) } else { None };
+        g.add2_row_act(mm, xx, bo, act_o)
     }
 }
 
@@ -352,8 +333,7 @@ impl LmuOriginalCell {
             let uxp = g.matmul(x_t, ex);
             let uhp = g.matmul(h, eh);
             let ump = g.matmul(m, em);
-            let s1 = g.add(uxp, uhp);
-            let u_t = g.add(s1, ump); // (B, 1)
+            let u_t = g.add3_act(uxp, uhp, ump, None); // (B, 1)
             // eq. 16
             let drive = g.matmul(u_t, bbar_row);
             let decay = g.matmul(m, abar_t);
@@ -362,9 +342,7 @@ impl LmuOriginalCell {
             let hx = g.matmul(x_t, wx);
             let hh = g.matmul(h, wh);
             let hm = g.matmul(m, wm);
-            let s2 = g.add(hx, hh);
-            let s3 = g.add(s2, hm);
-            h = g.tanh(s3);
+            h = g.add3_act(hx, hh, hm, Some(Act::Tanh));
         }
         h
     }
@@ -395,17 +373,14 @@ impl LmuOriginalCell {
             let uxp = g.matmul(x_t, ex);
             let uhp = g.matmul(h, eh);
             let ump = g.matmul(m, em);
-            let s1 = g.add(uxp, uhp);
-            let u_t = g.add(s1, ump);
+            let u_t = g.add3_act(uxp, uhp, ump, None);
             let drive = g.matmul(u_t, bbar_row);
             let decay = g.matmul(m, abar_t);
             m = g.add(decay, drive);
             let hx = g.matmul(x_t, wx);
             let hh = g.matmul(h, wh);
             let hm = g.matmul(m, wm);
-            let s2 = g.add(hx, hh);
-            let s3 = g.add(s2, hm);
-            h = g.tanh(s3);
+            h = g.add3_act(hx, hh, hm, Some(Act::Tanh));
             steps.push(h);
         }
         g.concat_rows(&steps)

@@ -53,8 +53,7 @@ impl LstmLayer {
         let dh = self.dh;
         let gx = g.matmul(x_t, wx);
         let gh = g.matmul(h, wh);
-        let s = g.add(gx, gh);
-        let gates = g.add_row(s, b); // (B, 4dh)
+        let gates = g.add2_row_act(gx, gh, b, None); // (B, 4dh)
         let i_g = {
             let sl = g.slice_cols(gates, 0, dh);
             g.sigmoid(sl)

@@ -53,6 +53,7 @@ pub mod dn;
 pub mod error;
 pub mod exec;
 pub mod fft;
+pub mod fusion;
 pub mod layers;
 pub mod linalg;
 pub mod metrics;

@@ -55,6 +55,12 @@ fn main() -> Result<()> {
              compute (staleness-1 gradients in train-dp; identical outputs in serve). \
              Off = bulk-synchronous reference path",
         )
+        .flag(
+            "no-fusion",
+            "disable elementwise kernel fusion (PLMU_FUSION=0 equivalent); \
+             fused and unfused paths are bit-identical — this exists for debugging \
+             and A/B timing",
+        )
         .opt("sessions", "8", "serve: concurrent sessions")
         .opt("tokens", "64", "serve: tokens per session")
         .opt("replicas", "1", "serve: engine replicas")
@@ -67,6 +73,9 @@ fn main() -> Result<()> {
     let threads = args.get_usize("threads");
     if threads > 0 {
         plmu::exec::set_threads(threads);
+    }
+    if args.get_flag("no-fusion") {
+        plmu::fusion::set_enabled(false);
     }
 
     let cmd = args.positionals().first().map(|s| s.as_str()).unwrap_or("info");
@@ -149,6 +158,7 @@ fn train(args: &Args) -> Result<()> {
         .map(|c| plmu::config::TrainConfig::from_config(c, "train"));
     if let Some(t) = tc.as_ref() {
         t.apply_threads(); // [train] threads wins over --threads
+        t.apply_fusion();
     }
     println!("exec substrate: {} worker thread(s)", plmu::exec::threads());
     let epochs = tc.as_ref().map(|t| t.epochs).unwrap_or(args.get_usize("epochs"));
@@ -223,6 +233,7 @@ fn train_dp(args: &Args) -> Result<()> {
         println!("loaded config {} ({})", cfg_path, c.str_or("name", "?"));
         let t = plmu::config::TrainConfig::from_config(&c, "train");
         t.apply_threads(); // [train] threads wins over --threads
+        t.apply_fusion();
         pipeline = pipeline || t.pipeline;
     }
     let workers = args.get_usize("workers");

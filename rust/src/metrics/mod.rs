@@ -1,8 +1,53 @@
 //! Evaluation metrics matching the paper's reporting: accuracy (Tables
 //! 2/4/5), NRMSE (Table 3), bits-per-character (Table 6 text8), and BLEU-4
-//! (Table 6 IWSLT).
+//! (Table 6 IWSLT) — plus the `PLMU_ALLOC_STATS` allocation-counter
+//! reporting that surfaces the arena's hit/miss/fresh-bytes counters.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+// ---------------------------------------------------------------------------
+// Allocation-stats reporting (PLMU_ALLOC_STATS)
+// ---------------------------------------------------------------------------
+
+/// 0 = unresolved, 1 = on, 2 = off.  Same lazy-knob pattern as
+/// `PLMU_SIMD` / `PLMU_FUSION`; default off (stats cost nothing to
+/// collect, this only gates the printing).
+static ALLOC_STATS: AtomicUsize = AtomicUsize::new(0);
+
+fn resolve_alloc_stats() -> usize {
+    match std::env::var("PLMU_ALLOC_STATS") {
+        Ok(v) if v == "1" || v.eq_ignore_ascii_case("on") || v.eq_ignore_ascii_case("true") => 1,
+        _ => 2,
+    }
+}
+
+/// Whether per-epoch arena allocation counters should be printed.
+pub fn alloc_stats_enabled() -> bool {
+    match ALLOC_STATS.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => {
+            let v = resolve_alloc_stats();
+            ALLOC_STATS.store(v, Ordering::Relaxed);
+            v == 1
+        }
+    }
+}
+
+/// Force the alloc-stats knob (tests / CLI).
+pub fn set_alloc_stats(on: bool) {
+    ALLOC_STATS.store(if on { 1 } else { 2 }, Ordering::Relaxed);
+}
+
+/// One-line report for a window of arena activity (typically an epoch
+/// delta): `alloc: hits H misses M fresh B bytes recycled R dropped D`.
+pub fn alloc_report(stats: &crate::exec::arena::ArenaStats) -> String {
+    format!(
+        "alloc: hits {} misses {} fresh {} bytes recycled {} dropped {}",
+        stats.hits, stats.misses, stats.fresh_bytes, stats.recycled, stats.dropped
+    )
+}
 
 /// Classification accuracy in percent.
 pub fn accuracy(pred: &[usize], truth: &[usize]) -> f64 {
@@ -187,6 +232,24 @@ mod tests {
         let b_full = bleu4(&full, &reference);
         let b_short = bleu4(&short, &reference);
         assert!(b_short < b_full);
+    }
+
+    #[test]
+    fn alloc_stats_knob_and_report() {
+        set_alloc_stats(true);
+        assert!(alloc_stats_enabled());
+        set_alloc_stats(false);
+        assert!(!alloc_stats_enabled());
+        let s = crate::exec::arena::ArenaStats {
+            hits: 3,
+            misses: 1,
+            fresh_bytes: 4096,
+            recycled: 2,
+            dropped: 0,
+        };
+        let line = alloc_report(&s);
+        assert!(line.contains("hits 3"), "{line}");
+        assert!(line.contains("fresh 4096 bytes"), "{line}");
     }
 
     #[test]

@@ -523,6 +523,260 @@ pub fn scale_scalar(x: &[f32], s: f32, out: &mut [f32]) {
     }
 }
 
+// ------------------------------------------------------ activations
+//
+// The tanh/relu forward and backward loops route through here so the
+// fused affine epilogue (`tensor/matmul.rs::affine_act`) and the
+// unfused `Tensor::tanh`/`Tensor::relu` paths share one per-element
+// expression — the fusion knob can then never change bits.  tanh goes
+// through libm, which [`F32x8`] cannot express, so its vector path is
+// straight-line blocks of eight scalar calls (the `cmul` precedent);
+// relu's strict-greater rule is exactly [`F32x8::max_gt`] against zero.
+
+/// `out[i] = tanh(x[i])` (`Tensor::tanh`, the fused affine epilogue).
+#[inline]
+pub fn tanh_fwd(x: &[f32], out: &mut [f32]) {
+    if enabled() {
+        tanh_fwd_vec(x, out)
+    } else {
+        tanh_fwd_scalar(x, out)
+    }
+}
+
+/// Vector path of [`tanh_fwd`]: straight-line blocks of eight libm
+/// calls, then a per-element tail.
+pub fn tanh_fwd_vec(x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    let n = out.len();
+    let blocks = n / LANES;
+    for i in 0..blocks {
+        let o = i * LANES;
+        let (xb, ob) = (&x[o..o + LANES], &mut out[o..o + LANES]);
+        for j in 0..LANES {
+            ob[j] = xb[j].tanh();
+        }
+    }
+    for j in blocks * LANES..n {
+        out[j] = x[j].tanh();
+    }
+}
+
+/// Scalar reference of [`tanh_fwd`].
+pub fn tanh_fwd_scalar(x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = v.tanh();
+    }
+}
+
+/// The canonical relu rule: strict-greater against `+0.0`, so NaN and
+/// `-0.0` both map to `+0.0` — total and deterministic, and identical
+/// in the fused epilogue and the standalone op.
+#[inline]
+fn relu_rule(v: f32) -> f32 {
+    if v > 0.0 {
+        v
+    } else {
+        0.0
+    }
+}
+
+/// `out[i] = relu(x[i])` under the canonical strict-greater rule.
+#[inline]
+pub fn relu_fwd(x: &[f32], out: &mut [f32]) {
+    if enabled() {
+        relu_fwd_vec(x, out)
+    } else {
+        relu_fwd_scalar(x, out)
+    }
+}
+
+/// Vector path of [`relu_fwd`]: [`F32x8::max_gt`] against zero is the
+/// per-lane strict-greater rule.
+pub fn relu_fwd_vec(x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    let n = out.len();
+    let blocks = n / LANES;
+    let zero = F32x8::zero();
+    for i in 0..blocks {
+        let o = i * LANES;
+        zero.max_gt(F32x8::load(&x[o..])).store(&mut out[o..]);
+    }
+    for j in blocks * LANES..n {
+        out[j] = relu_rule(x[j]);
+    }
+}
+
+/// Scalar reference of [`relu_fwd`].
+pub fn relu_fwd_scalar(x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = relu_rule(v);
+    }
+}
+
+/// `out[i] = g[i] * (1 - y[i]²)` — the tanh backward with `y = tanh(x)`
+/// from the forward pass.  Two roundings for the `1 - y·y` factor, then
+/// the multiply by `g` — the same expression the unfused node chain
+/// (`map` then `mul`) computed.
+#[inline]
+pub fn tanh_bwd(g: &[f32], y: &[f32], out: &mut [f32]) {
+    if enabled() {
+        tanh_bwd_vec(g, y, out)
+    } else {
+        tanh_bwd_scalar(g, y, out)
+    }
+}
+
+/// Vector path of [`tanh_bwd`].
+pub fn tanh_bwd_vec(g: &[f32], y: &[f32], out: &mut [f32]) {
+    debug_assert!(g.len() == out.len() && y.len() == out.len());
+    let n = out.len();
+    let blocks = n / LANES;
+    let one = F32x8::splat(1.0);
+    for i in 0..blocks {
+        let o = i * LANES;
+        let yv = F32x8::load(&y[o..]);
+        F32x8::load(&g[o..]).mul(one.sub(yv.mul(yv))).store(&mut out[o..]);
+    }
+    for j in blocks * LANES..n {
+        out[j] = g[j] * (1.0 - y[j] * y[j]);
+    }
+}
+
+/// Scalar reference of [`tanh_bwd`].
+pub fn tanh_bwd_scalar(g: &[f32], y: &[f32], out: &mut [f32]) {
+    debug_assert!(g.len() == out.len() && y.len() == out.len());
+    for ((o, &gv), &yv) in out.iter_mut().zip(g).zip(y) {
+        *o = gv * (1.0 - yv * yv);
+    }
+}
+
+/// `out[i] = g[i] * (x[i] > 0 ? 1 : 0)` — the relu backward as the
+/// unfused chain computed it: a 0/1 mask *multiplied* into `g` (not a
+/// select), so `0 · NaN = NaN` and signed zeros propagate identically.
+#[inline]
+pub fn relu_bwd(g: &[f32], x: &[f32], out: &mut [f32]) {
+    if enabled() {
+        relu_bwd_vec(g, x, out)
+    } else {
+        relu_bwd_scalar(g, x, out)
+    }
+}
+
+/// Vector path of [`relu_bwd`]: straight-line blocks (no compare/select
+/// in the [`F32x8`] API), then a per-element tail.
+pub fn relu_bwd_vec(g: &[f32], x: &[f32], out: &mut [f32]) {
+    debug_assert!(g.len() == out.len() && x.len() == out.len());
+    let n = out.len();
+    let blocks = n / LANES;
+    for i in 0..blocks {
+        let o = i * LANES;
+        let (gb, xb) = (&g[o..o + LANES], &x[o..o + LANES]);
+        let ob = &mut out[o..o + LANES];
+        for j in 0..LANES {
+            ob[j] = gb[j] * if xb[j] > 0.0 { 1.0 } else { 0.0 };
+        }
+    }
+    for j in blocks * LANES..n {
+        out[j] = g[j] * if x[j] > 0.0 { 1.0 } else { 0.0 };
+    }
+}
+
+/// Scalar reference of [`relu_bwd`].
+pub fn relu_bwd_scalar(g: &[f32], x: &[f32], out: &mut [f32]) {
+    debug_assert!(g.len() == out.len() && x.len() == out.len());
+    for ((o, &gv), &xv) in out.iter_mut().zip(g).zip(x) {
+        *o = gv * if xv > 0.0 { 1.0 } else { 0.0 };
+    }
+}
+
+/// In-place `xs[i] = tanh(xs[i])` — the fused affine epilogue applies
+/// the activation to a finished output row while it is still cache-hot.
+#[inline]
+pub fn tanh_assign(xs: &mut [f32]) {
+    if enabled() {
+        tanh_assign_vec(xs)
+    } else {
+        tanh_assign_scalar(xs)
+    }
+}
+
+/// Resolve the [`tanh_assign`] path once (the epilogue runs per output
+/// row; the knob read hoists to the kernel entry).
+#[inline]
+pub fn tanh_assign_kernel() -> fn(&mut [f32]) {
+    if enabled() {
+        tanh_assign_vec
+    } else {
+        tanh_assign_scalar
+    }
+}
+
+/// Vector path of [`tanh_assign`] — same blocks as [`tanh_fwd_vec`].
+pub fn tanh_assign_vec(xs: &mut [f32]) {
+    let n = xs.len();
+    let blocks = n / LANES;
+    for i in 0..blocks {
+        let o = i * LANES;
+        let b = &mut xs[o..o + LANES];
+        for j in 0..LANES {
+            b[j] = b[j].tanh();
+        }
+    }
+    for x in &mut xs[blocks * LANES..] {
+        *x = x.tanh();
+    }
+}
+
+/// Scalar reference of [`tanh_assign`].
+pub fn tanh_assign_scalar(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = x.tanh();
+    }
+}
+
+/// In-place `xs[i] = relu(xs[i])` under the canonical rule.
+#[inline]
+pub fn relu_assign(xs: &mut [f32]) {
+    if enabled() {
+        relu_assign_vec(xs)
+    } else {
+        relu_assign_scalar(xs)
+    }
+}
+
+/// Resolve the [`relu_assign`] path once (see [`tanh_assign_kernel`]).
+#[inline]
+pub fn relu_assign_kernel() -> fn(&mut [f32]) {
+    if enabled() {
+        relu_assign_vec
+    } else {
+        relu_assign_scalar
+    }
+}
+
+/// Vector path of [`relu_assign`].
+pub fn relu_assign_vec(xs: &mut [f32]) {
+    let n = xs.len();
+    let blocks = n / LANES;
+    let zero = F32x8::zero();
+    for i in 0..blocks {
+        let o = i * LANES;
+        zero.max_gt(F32x8::load(&xs[o..])).store(&mut xs[o..]);
+    }
+    for x in &mut xs[blocks * LANES..] {
+        *x = relu_rule(*x);
+    }
+}
+
+/// Scalar reference of [`relu_assign`].
+pub fn relu_assign_scalar(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = relu_rule(*x);
+    }
+}
+
 // ------------------------------------------------------- complex multiply
 
 /// Elementwise complex multiply over interleaved `(re, im)` `f64`
@@ -726,6 +980,73 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn activation_paths_bit_equal_across_lane_remainders() {
+        for n in [0usize, 1, 7, 8, 9, 16, 17, 31, 33] {
+            let x: Vec<f32> = (0..n)
+                .map(|i| match i % 5 {
+                    0 => (i as f32) * 0.37 - 2.0,
+                    1 => -0.0,
+                    2 => f32::NAN,
+                    3 => f32::INFINITY,
+                    _ => -(i as f32) * 0.11,
+                })
+                .collect();
+            let g: Vec<f32> = (0..n).map(|i| (i as f32).cos() * 3.0).collect();
+            let mut a = vec![0.0f32; n];
+            let mut b = vec![0.0f32; n];
+            tanh_fwd_vec(&x, &mut a);
+            tanh_fwd_scalar(&x, &mut b);
+            for j in 0..n {
+                assert_eq!(a[j].to_bits(), b[j].to_bits(), "tanh n={n} j={j}");
+            }
+            relu_fwd_vec(&x, &mut a);
+            relu_fwd_scalar(&x, &mut b);
+            for j in 0..n {
+                assert_eq!(a[j].to_bits(), b[j].to_bits(), "relu n={n} j={j}");
+            }
+            tanh_bwd_vec(&g, &x, &mut a);
+            tanh_bwd_scalar(&g, &x, &mut b);
+            for j in 0..n {
+                assert_eq!(a[j].to_bits(), b[j].to_bits(), "tanh_bwd n={n} j={j}");
+            }
+            relu_bwd_vec(&g, &x, &mut a);
+            relu_bwd_scalar(&g, &x, &mut b);
+            for j in 0..n {
+                assert_eq!(a[j].to_bits(), b[j].to_bits(), "relu_bwd n={n} j={j}");
+            }
+            // the in-place epilogue kernels match their out-of-place twins
+            let mut c = x.clone();
+            tanh_assign_vec(&mut c);
+            tanh_fwd_scalar(&x, &mut b);
+            for j in 0..n {
+                assert_eq!(c[j].to_bits(), b[j].to_bits(), "tanh_assign n={n} j={j}");
+            }
+            let mut c = x.clone();
+            relu_assign_scalar(&mut c);
+            relu_fwd_vec(&x, &mut b);
+            for j in 0..n {
+                assert_eq!(c[j].to_bits(), b[j].to_bits(), "relu_assign n={n} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn relu_rule_is_total() {
+        // NaN and -0.0 both land on +0.0; positives pass through
+        let xs = [f32::NAN, -0.0f32, 0.0, -1.5, 2.5, f32::INFINITY, f32::NEG_INFINITY, 1e-38];
+        let mut out = [9.0f32; 8];
+        relu_fwd(&xs, &mut out);
+        assert_eq!(out[0].to_bits(), 0.0f32.to_bits(), "NaN -> +0.0");
+        assert_eq!(out[1].to_bits(), 0.0f32.to_bits(), "-0.0 -> +0.0");
+        assert_eq!(out[2].to_bits(), 0.0f32.to_bits());
+        assert_eq!(out[3].to_bits(), 0.0f32.to_bits());
+        assert_eq!(out[4].to_bits(), 2.5f32.to_bits());
+        assert_eq!(out[5].to_bits(), f32::INFINITY.to_bits());
+        assert_eq!(out[6].to_bits(), 0.0f32.to_bits());
+        assert_eq!(out[7].to_bits(), 1e-38f32.to_bits());
     }
 
     #[test]

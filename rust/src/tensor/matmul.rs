@@ -39,7 +39,7 @@
 //! `simd on/off` changes no bits anywhere in this file
 //! (`rust/tests/simd_equivalence.rs`).
 
-use super::Tensor;
+use super::{Act, Tensor};
 use crate::exec;
 use crate::simd;
 
@@ -107,6 +107,42 @@ impl GatedAxpy {
         }
         (self.axpy)(a, brow, crow);
     }
+}
+
+/// C = act(A (m,k) · B (k,n) + bias (n,)) — the fused affine kernel.
+///
+/// Identical to [`matmul`] through the k sweep; once a row of C has
+/// seen its last k panel (the row loop sits inside the same chunk
+/// closure, so the block is still cache-hot), the epilogue adds the
+/// bias broadcast (`simd::add_assign`, bias on the add's right — the
+/// exact `Tensor::add_row` expression) and applies the optional
+/// activation through the same shared `crate::simd` kernel the
+/// standalone op uses.  Per element nothing differs from
+/// `matmul → add_row → act`, so fused and unfused are bit-identical;
+/// what changes is memory traffic — the two intermediate (m, n)
+/// tensors are never materialized.
+pub fn affine_act(a: &Tensor, b: &Tensor, bias: &Tensor, act: Option<Act>) -> Tensor {
+    let (m, k) = dims2(a, "affine lhs");
+    let (kb, n) = dims2(b, "affine rhs");
+    assert_eq!(k, kb, "affine inner dims: {:?} x {:?}", a.shape(), b.shape());
+    assert_eq!(bias.len(), n, "affine bias length {} != cols {n}", bias.len());
+    let mut c = Tensor::zeros(&[m, n]);
+    let (ad, bd, biasd) = (a.data(), b.data(), bias.data());
+    let gate = GatedAxpy::new(bd);
+    let act_assign = act.map(Act::assign_kernel); // resolve the knob once
+    let plan = exec::plan_for(m, m * k * n);
+    exec::parallel_rows_mut(c.data_mut(), n, plan, |i0, cblock| {
+        matmul_rows(ad, bd, cblock, i0, k, n, gate);
+        if n > 0 {
+            for crow in cblock.chunks_mut(n) {
+                simd::add_assign(crow, biasd);
+                if let Some(f) = act_assign {
+                    f(crow);
+                }
+            }
+        }
+    });
+    c
 }
 
 /// C = Aᵀ (k,m)ᵀ · B (k,n) -> (m, n)
@@ -353,6 +389,57 @@ mod tests {
         let r = naive(&a, &b);
         for (x, y) in c.data().iter().zip(r.data()) {
             assert!(x.to_bits() == y.to_bits(), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn affine_act_bit_equal_to_unfused_chain() {
+        let mut rng = Rng::new(8);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (17, 9, 4), (33, 300, 31), (64, 64, 64)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let bias = Tensor::randn(&[n], 1.0, &mut rng);
+            for act in [None, Some(Act::Tanh), Some(Act::Relu)] {
+                let fused = affine_act(&a, &b, &bias, act);
+                let mut unfused = matmul(&a, &b).add_row(&bias);
+                unfused = match act {
+                    Some(Act::Tanh) => unfused.tanh(),
+                    Some(Act::Relu) => unfused.relu(),
+                    None => unfused,
+                };
+                for (i, (x, y)) in fused.data().iter().zip(unfused.data()).enumerate() {
+                    assert!(
+                        x.to_bits() == y.to_bits(),
+                        "({m},{k},{n}) act {act:?} elem {i}: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn affine_act_propagates_non_finite_like_unfused() {
+        // NaN/Inf entering through A, B, or the bias must flow through
+        // the fused epilogue exactly as through the unfused chain
+        let a = Tensor::new(&[2, 3], vec![0.0, 1.0, 0.0, 0.5, f32::NAN, 2.0]);
+        let mut bdata = vec![1.0f32; 3 * 2];
+        bdata[0] = f32::NAN;
+        let b = Tensor::new(&[3, 2], bdata);
+        let bias = Tensor::new(&[2], vec![f32::INFINITY, -1.0]);
+        for act in [None, Some(Act::Tanh), Some(Act::Relu)] {
+            let fused = affine_act(&a, &b, &bias, act);
+            let mut unfused = matmul(&a, &b).add_row(&bias);
+            unfused = match act {
+                Some(Act::Tanh) => unfused.tanh(),
+                Some(Act::Relu) => unfused.relu(),
+                None => unfused,
+            };
+            for (i, (x, y)) in fused.data().iter().zip(unfused.data()).enumerate() {
+                assert!(
+                    x.to_bits() == y.to_bits(),
+                    "act {act:?} elem {i}: {x} vs {y}"
+                );
+            }
         }
     }
 

@@ -16,21 +16,64 @@
 //! canonical blocked accumulation order shared by the vector and scalar
 //! paths, so `simd on/off` changes no bits either
 //! (`rust/tests/simd_equivalence.rs`).  Closure-generic [`Tensor::map`]
-//! stays scalar — nonlinearities like `tanh` are libm calls the lane
-//! layer cannot help.
+//! stays scalar; the named nonlinearities (`tanh`, `relu`) route
+//! through dedicated `crate::simd` kernels so the fused affine epilogue
+//! (`matmul::affine_act`) shares their exact per-element expressions.
+//!
+//! Tensor **data buffers** come from the size-classed arena installed
+//! on the current thread (`crate::exec::arena`), when one is: `zeros`,
+//! `full`, `Clone`, and the slicing ops draw buffers from its free
+//! lists, and `Drop` returns them — so a steady-state training step
+//! allocates no fresh data buffers at all.  Outside an arena scope
+//! every path falls through to the plain allocator unchanged.
 
 pub mod matmul;
 
 use crate::exec;
+use crate::exec::arena;
 use crate::simd;
 use crate::util::Rng;
 use std::fmt;
 
+/// An elementwise activation a fused kernel may apply as its epilogue.
+/// The fused and standalone forms share one `crate::simd` kernel per
+/// variant, so fusing can never change bits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    Tanh,
+    Relu,
+}
+
+impl Act {
+    /// In-place epilogue kernel (resolved once per fused kernel entry).
+    #[inline]
+    pub fn assign_kernel(self) -> fn(&mut [f32]) {
+        match self {
+            Act::Tanh => simd::tanh_assign_kernel(),
+            Act::Relu => simd::relu_assign_kernel(),
+        }
+    }
+}
+
 /// A dense row-major f32 tensor with a dynamic shape.
-#[derive(Clone, PartialEq)]
+#[derive(PartialEq)]
 pub struct Tensor {
     shape: Vec<usize>,
     data: Vec<f32>,
+}
+
+impl Clone for Tensor {
+    fn clone(&self) -> Self {
+        Tensor { shape: self.shape.clone(), data: arena::alloc_copy(&self.data) }
+    }
+}
+
+impl Drop for Tensor {
+    fn drop(&mut self) {
+        // return the data buffer to this thread's arena (no-op outside
+        // an arena scope or for an empty buffer)
+        arena::release(std::mem::take(&mut self.data));
+    }
 }
 
 impl fmt::Debug for Tensor {
@@ -59,7 +102,7 @@ impl Tensor {
     }
 
     pub fn zeros(shape: &[usize]) -> Self {
-        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+        Tensor { shape: shape.to_vec(), data: arena::alloc_zeroed(shape.iter().product()) }
     }
 
     pub fn ones(shape: &[usize]) -> Self {
@@ -67,11 +110,11 @@ impl Tensor {
     }
 
     pub fn full(shape: &[usize], v: f32) -> Self {
-        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+        Tensor { shape: shape.to_vec(), data: arena::alloc_filled(shape.iter().product(), v) }
     }
 
     pub fn scalar(v: f32) -> Self {
-        Tensor { shape: vec![], data: vec![v] }
+        Tensor { shape: vec![], data: arena::alloc_filled(1, v) }
     }
 
     /// N(0, std) initialization.
@@ -139,8 +182,10 @@ impl Tensor {
         &mut self.data
     }
 
-    pub fn into_data(self) -> Vec<f32> {
-        self.data
+    pub fn into_data(mut self) -> Vec<f32> {
+        // `Drop` forbids moving the field out; take it so the drop sees
+        // an empty buffer and the caller owns the (untracked) Vec
+        std::mem::take(&mut self.data)
     }
 
     /// Number of rows / row length, treating the tensor as 2-D
@@ -318,18 +363,84 @@ impl Tensor {
         out
     }
 
+    /// Fused `act((self + other) + bias_row)` in one pass over the
+    /// output — the elementwise tail of the LMU output stage
+    /// (`add → add_row → tanh`) without materializing the two
+    /// intermediates.  Per element this computes exactly the unfused
+    /// chain's expression — `simd::add`, then the bias via
+    /// `simd::add_assign` (bias on the add's right), then the shared
+    /// activation kernel — so fused and unfused are bit-identical.
+    pub fn add2_row_act(&self, other: &Tensor, bias: &Tensor, act: Option<Act>) -> Tensor {
+        assert_eq!(self.shape, other.shape, "add2_row_act shape mismatch");
+        let c = self.cols();
+        assert_eq!(bias.len(), c, "bias length {} != cols {}", bias.len(), c);
+        let mut out = Tensor::zeros(&self.shape);
+        let plan = exec::plan_for(self.rows(), self.data.len() * 3);
+        let (a, b, bd) = (&self.data, &other.data, &bias.data);
+        let act_assign = act.map(Act::assign_kernel);
+        exec::parallel_rows_mut(&mut out.data, c, plan, |r0, block| {
+            for (k, orow) in block.chunks_mut(c).enumerate() {
+                let o = (r0 + k) * c;
+                simd::add(&a[o..o + c], &b[o..o + c], orow);
+                simd::add_assign(orow, bd);
+                if let Some(f) = act_assign {
+                    f(orow);
+                }
+            }
+        });
+        out
+    }
+
+    /// Fused `act((self + other) + third)` elementwise over three
+    /// same-shape tensors — the original LMU cell's recurrent sum
+    /// without the two intermediates.  Per element, exactly the unfused
+    /// `add → add → act` chain's expressions.
+    pub fn add3_act(&self, other: &Tensor, third: &Tensor, act: Option<Act>) -> Tensor {
+        assert_eq!(self.shape, other.shape, "add3_act shape mismatch");
+        assert_eq!(self.shape, third.shape, "add3_act shape mismatch");
+        let mut out = Tensor::zeros(&self.shape);
+        let plan = exec::plan_for(self.data.len(), self.data.len() * 3);
+        let (a, b, c) = (&self.data, &other.data, &third.data);
+        let act_assign = act.map(Act::assign_kernel);
+        exec::parallel_rows_mut(&mut out.data, 1, plan, |i0, block| {
+            let hi = i0 + block.len();
+            simd::add(&a[i0..hi], &b[i0..hi], block);
+            simd::add_assign(block, &c[i0..hi]);
+            if let Some(f) = act_assign {
+                f(block);
+            }
+        });
+        out
+    }
+
+    /// `g ⊙ (1 - self²)` with `self = tanh(x)` from the forward pass —
+    /// the tanh backward, shared by the standalone `Op::Tanh` and the
+    /// fused affine/add epilogues (`simd::tanh_bwd`).
+    pub fn tanh_bwd(g: &Tensor, y: &Tensor) -> Tensor {
+        g.zip_kernel(y, simd::tanh_bwd)
+    }
+
+    /// `g ⊙ (x > 0 ? 1 : 0)` — the relu backward as a mask multiply
+    /// (`0 · NaN = NaN` propagates), shared by `Op::Relu` and the fused
+    /// epilogues (`simd::relu_bwd`).
+    pub fn relu_bwd(g: &Tensor, x: &Tensor) -> Tensor {
+        g.zip_kernel(x, simd::relu_bwd)
+    }
+
     // ------------------------------------------------------------ nonlinear
 
     pub fn tanh(&self) -> Self {
-        self.map(f32::tanh)
+        self.map_kernel(simd::tanh_fwd)
     }
 
     pub fn sigmoid(&self) -> Self {
         self.map(|v| 1.0 / (1.0 + (-v).exp()))
     }
 
+    /// Relu under the canonical strict-greater rule (`simd::relu_fwd`):
+    /// NaN and `-0.0` map to `+0.0`, identical to the fused epilogue.
     pub fn relu(&self) -> Self {
-        self.map(|v| v.max(0.0))
+        self.map_kernel(simd::relu_fwd)
     }
 
     // ----------------------------------------------------------- reductions
@@ -421,13 +532,13 @@ impl Tensor {
     pub fn slice_rows(&self, lo: usize, hi: usize) -> Tensor {
         let c = self.cols();
         assert!(lo <= hi && hi <= self.rows(), "slice [{lo},{hi}) of {} rows", self.rows());
-        Tensor::new(&[hi - lo, c], self.data[lo * c..hi * c].to_vec())
+        Tensor::new(&[hi - lo, c], arena::alloc_copy(&self.data[lo * c..hi * c]))
     }
 
     /// Single row as a (c,) vector.
     pub fn row(&self, i: usize) -> Tensor {
         let c = self.cols();
-        Tensor::new(&[c], self.data[i * c..(i + 1) * c].to_vec())
+        Tensor::new(&[c], arena::alloc_copy(&self.data[i * c..(i + 1) * c]))
     }
 
     /// Concatenate along axis 0 (first dims may differ, rest must match).
@@ -435,13 +546,17 @@ impl Tensor {
         assert!(!parts.is_empty());
         let c = parts[0].cols();
         let mut rows = 0;
-        let mut data = Vec::new();
         for p in parts {
             assert_eq!(p.cols(), c, "concat col mismatch");
             rows += p.rows();
-            data.extend_from_slice(&p.data);
         }
-        Tensor::new(&[rows, c], data)
+        let mut out = Tensor::zeros(&[rows, c]);
+        let mut ofs = 0;
+        for p in parts {
+            out.data[ofs..ofs + p.data.len()].copy_from_slice(&p.data);
+            ofs += p.data.len();
+        }
+        out
     }
 
     /// Concatenate along the last axis: all parts (r, c_i) -> (r, sum c_i).
@@ -479,6 +594,13 @@ impl Tensor {
     /// self * other^T: (m, k) x (n, k) -> (m, n).
     pub fn matmul_nt(&self, other: &Tensor) -> Tensor {
         matmul::matmul_nt(self, other)
+    }
+
+    /// Fused affine: `act(self · other + bias_row)` with the bias add
+    /// and activation applied per output row while the matmul tile is
+    /// still cache-hot.  Bit-identical to `matmul → add_row → act`.
+    pub fn affine_act(&self, other: &Tensor, bias: &Tensor, act: Option<Act>) -> Tensor {
+        matmul::affine_act(self, other, bias, act)
     }
 
     // ----------------------------------------------------------- comparison

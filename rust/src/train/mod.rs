@@ -10,6 +10,7 @@ pub use models::{ModelKind, RegressorKind, SeqClassifier, SeqRegressor};
 
 use crate::autograd::{Graph, NodeId, ParamStore};
 use crate::data::batcher::{Batch, BatchIter, SeqDataset, Targets};
+use crate::exec::arena::{self, Arena};
 use crate::optim::{clip_global_norm, LrSchedule, Optimizer};
 use crate::util::{Rng, Timer};
 
@@ -65,6 +66,35 @@ impl Default for FitOptions {
     }
 }
 
+/// One optimizer step: reset the retained graph, re-record the model
+/// over `batch` with the thread's arena installed, backprop, clip, and
+/// apply.  Factored out of [`fit`] so tests and coordinators can drive
+/// single steps against the same retained graph + arena pair.
+pub fn train_step(
+    model: &dyn TrainableModel,
+    store: &mut ParamStore,
+    opt: &mut dyn Optimizer,
+    g: &mut Graph,
+    arena: &mut Arena,
+    batch: &Batch,
+    grad_clip: Option<f32>,
+) -> f32 {
+    arena::scope(arena, || {
+        // Dropping last step's nodes inside the scope returns their
+        // buffers to the arena; this step's recording draws them back.
+        g.reset();
+        let loss = model.loss(g, store, batch);
+        g.backward(loss);
+        let lv = g.value(loss).item();
+        let mut grads = g.param_grads();
+        if let Some(c) = grad_clip {
+            clip_global_norm(&mut grads, c);
+        }
+        opt.step(store, &grads);
+        lv
+    })
+}
+
 /// Train `model` on `train`, optionally evaluating on `eval` each epoch.
 pub fn fit(
     model: &dyn TrainableModel,
@@ -77,27 +107,29 @@ pub fn fit(
     let mut rng = Rng::new(opts.seed);
     let mut epochs = Vec::new();
     let mut step_losses = Vec::new();
+    // Retained across every step of the run: the graph keeps its node
+    // vector's capacity, the arena keeps the recycled tensor buffers.
+    let mut g = Graph::new();
+    let mut arena = Arena::new();
+    let mut alloc_mark = arena.stats();
     for epoch in 0..opts.epochs {
         opt.set_lr(opts.schedule.lr_at(epoch));
         let timer = Timer::start();
         let mut running = crate::metrics::Running::new();
         let mut step = 0usize;
         for batch in BatchIter::new(train, opts.batch_size, &mut rng) {
-            let mut g = Graph::new();
-            let loss = model.loss(&mut g, store, &batch);
-            g.backward(loss);
-            let lv = g.value(loss).item();
-            let mut grads = g.param_grads();
-            if let Some(c) = opts.grad_clip {
-                clip_global_norm(&mut grads, c);
-            }
-            opt.step(store, &grads);
+            let lv = train_step(model, store, opt, &mut g, &mut arena, &batch, opts.grad_clip);
             running.push(lv as f64);
             step_losses.push(lv);
             step += 1;
             if opts.verbose && opts.log_every > 0 && step % opts.log_every == 0 {
                 println!("    epoch {epoch} step {step}: loss {lv:.4}");
             }
+        }
+        if crate::metrics::alloc_stats_enabled() {
+            let now = arena.stats();
+            println!("  epoch {epoch} {}", crate::metrics::alloc_report(&now.since(&alloc_mark)));
+            alloc_mark = now;
         }
         let eval_metric = eval.map(|ds| evaluate(model, store, ds, opts.batch_size));
         let log = EpochLog {
@@ -198,6 +230,48 @@ mod tests {
         assert!(last < first * 0.7, "loss {first} -> {last}");
         let acc = res.epochs.last().unwrap().eval_metric.unwrap();
         assert!(acc > 80.0, "eval accuracy {acc}");
+    }
+
+    #[test]
+    fn steady_state_training_allocates_nothing() {
+        // After warmup has populated the arena's size classes (and Adam's
+        // moment buffers), further steps over same-shaped batches must be
+        // served entirely from the arena: zero misses, zero fresh bytes.
+        let ds = toy_classification(32, 12, 5);
+        let mut store = ParamStore::new();
+        let mut rng = Rng::new(7);
+        let model = SeqClassifier::new(
+            ModelKind::LmuParallel,
+            12, // seq len
+            1,  // dx
+            6,  // d
+            12, // hidden
+            2,  // classes
+            &mut store,
+            &mut rng,
+        );
+        let mut opt = Adam::new(1e-3);
+        let mut g = Graph::new();
+        let mut arena = Arena::new();
+        let batches: Vec<_> = crate::data::batcher::BatchIter::sequential(&ds, 8).collect();
+        assert!(batches.len() >= 2);
+        // warmup: two passes (first allocates activations + optimizer
+        // state; second settles the free-list population)
+        for _ in 0..2 {
+            for b in &batches {
+                train_step(&model, &mut store, &mut opt, &mut g, &mut arena, b, None);
+            }
+        }
+        let warm = arena.stats();
+        for _ in 0..3 {
+            for b in &batches {
+                train_step(&model, &mut store, &mut opt, &mut g, &mut arena, b, None);
+            }
+        }
+        let delta = arena.stats().since(&warm);
+        assert_eq!(delta.misses, 0, "steady-state step touched the heap: {delta:?}");
+        assert_eq!(delta.fresh_bytes, 0, "{delta:?}");
+        assert!(delta.hits > 0, "arena was never exercised: {delta:?}");
     }
 
     #[test]

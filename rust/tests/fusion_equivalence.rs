@@ -1,0 +1,217 @@
+//! Differential harness for the elementwise fusion pass (`PLMU_FUSION`):
+//! every fused graph builder — `affine_act` (matmul epilogue),
+//! `add2_row_act`, `add3_act` — must produce **bit-identical** values
+//! AND parameter gradients to the unfused node chain it replaces, over
+//! odd / lane-remainder shapes, NaN/Inf inputs, and with the buffer
+//! arena recycling allocations underneath.
+//!
+//! The fusion knob is process-global, so every test that flips it
+//! serializes on one mutex and restores the prior setting (same
+//! discipline as the `PLMU_SIMD` knob in `simd_equivalence.rs`).
+
+use plmu::autograd::{Act, Graph, NodeId, ParamStore};
+use plmu::coordinator::data_parallel::pack_grads;
+use plmu::data::batcher::BatchIter;
+use plmu::data::SeqDataset;
+use plmu::exec::arena::{self, Arena};
+use plmu::fusion;
+use plmu::train::{ModelKind, SeqClassifier, TrainableModel};
+use plmu::util::Rng;
+use plmu::Tensor;
+use std::sync::Mutex;
+
+static FUSION_KNOB: Mutex<()> = Mutex::new(());
+
+/// Run `f` with fusion on and off (serialized, prior setting restored)
+/// and return both results.
+fn with_fusion_both<T>(f: impl Fn() -> T) -> (T, T) {
+    let _guard = FUSION_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let was = fusion::enabled();
+    fusion::set_enabled(true);
+    let on = f();
+    fusion::set_enabled(false);
+    let off = f();
+    fusion::set_enabled(was);
+    (on, off)
+}
+
+fn assert_bits_equal(label: &str, got: &[f32], want: &[f32]) {
+    assert_eq!(got.len(), want.len(), "{label}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            g.to_bits() == w.to_bits(),
+            "{label}: element {i} differs: {g} ({:#010x}) vs {w} ({:#010x})",
+            g.to_bits(),
+            w.to_bits()
+        );
+    }
+}
+
+/// Output data + per-param gradient data of one recorded graph, driven
+/// to a scalar loss so the backward sweep runs end to end.
+type ChainResult = (Vec<f32>, Vec<Vec<f32>>);
+
+fn run_graph(store: &ParamStore, build: &dyn Fn(&mut Graph, &ParamStore) -> NodeId) -> ChainResult {
+    let mut g = Graph::new();
+    let out = build(&mut g, store);
+    let sq = g.mul(out, out);
+    let loss = g.mean_all(sq);
+    g.backward(loss);
+    let val = g.value(out).data().to_vec();
+    let grads = g.param_grads().into_iter().map(|(_, t)| t.data().to_vec()).collect();
+    (val, grads)
+}
+
+fn compare_chain(label: &str, store: &ParamStore, build: &dyn Fn(&mut Graph, &ParamStore) -> NodeId) {
+    let (on, off) = with_fusion_both(|| run_graph(store, build));
+    assert_bits_equal(&format!("{label}: value"), &on.0, &off.0);
+    assert_eq!(on.1.len(), off.1.len(), "{label}: grad count");
+    for (i, (g_on, g_off)) in on.1.iter().zip(&off.1).enumerate() {
+        assert_bits_equal(&format!("{label}: grad {i}"), g_on, g_off);
+    }
+}
+
+const ACTS: [Option<Act>; 3] = [None, Some(Act::Tanh), Some(Act::Relu)];
+
+#[test]
+fn affine_act_fused_chain_bit_equal_including_grads() {
+    // lane-remainder shapes: width 1, 8k-1 / 8k / 8k+1, and a k large
+    // enough to span multiple k-panels of the matmul
+    for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 5, 7), (17, 9, 4), (5, 16, 8), (33, 300, 31)] {
+        for &act in &ACTS {
+            let mut rng = Rng::new((m * 1000 + k * 10 + n) as u64);
+            let mut store = ParamStore::new();
+            let x = store.add("x", Tensor::randn(&[m, k], 1.0, &mut rng));
+            let w = store.add("w", Tensor::randn(&[k, n], 0.5, &mut rng));
+            let b = store.add("b", Tensor::randn(&[n], 0.1, &mut rng));
+            let build = move |g: &mut Graph, s: &ParamStore| {
+                let (xn, wn, bn) = (g.param(s, x), g.param(s, w), g.param(s, b));
+                g.affine_act(xn, wn, bn, act)
+            };
+            compare_chain(&format!("affine_act ({m},{k},{n}) {act:?}"), &store, &build);
+        }
+    }
+}
+
+#[test]
+fn add2_row_and_add3_fused_chains_bit_equal_including_grads() {
+    for &(m, n) in &[(1usize, 1usize), (3, 7), (9, 8), (17, 33)] {
+        for &act in &ACTS {
+            let mut rng = Rng::new((m * 100 + n) as u64);
+            let mut store = ParamStore::new();
+            let a = store.add("a", Tensor::randn(&[m, n], 1.0, &mut rng));
+            let b = store.add("b", Tensor::randn(&[m, n], 1.0, &mut rng));
+            let bias = store.add("bias", Tensor::randn(&[n], 0.2, &mut rng));
+            let c = store.add("c", Tensor::randn(&[m, n], 1.0, &mut rng));
+
+            let build2 = move |g: &mut Graph, s: &ParamStore| {
+                let (an, bn, biasn) = (g.param(s, a), g.param(s, b), g.param(s, bias));
+                g.add2_row_act(an, bn, biasn, act)
+            };
+            compare_chain(&format!("add2_row_act ({m},{n}) {act:?}"), &store, &build2);
+
+            let build3 = move |g: &mut Graph, s: &ParamStore| {
+                let (an, bn, cn) = (g.param(s, a), g.param(s, b), g.param(s, c));
+                g.add3_act(an, bn, cn, act)
+            };
+            compare_chain(&format!("add3_act ({m},{n}) {act:?}"), &store, &build3);
+        }
+    }
+}
+
+#[test]
+fn non_finite_inputs_propagate_identically_across_fusion() {
+    // NaN in x (hits the matmul zero-skip gate), Inf in the bias (sweeps
+    // a whole output column through the epilogue), -0.0 under relu
+    let (m, k, n) = (5usize, 9usize, 7usize);
+    for &act in &ACTS {
+        let mut rng = Rng::new(77);
+        let mut xt = Tensor::randn(&[m, k], 1.0, &mut rng);
+        xt.data_mut()[m * k - 1] = f32::NAN;
+        xt.data_mut()[0] = -0.0;
+        let mut bt = Tensor::randn(&[n], 0.1, &mut rng);
+        bt.data_mut()[n - 1] = f32::INFINITY;
+        let mut store = ParamStore::new();
+        let x = store.add("x", xt);
+        let w = store.add("w", Tensor::randn(&[k, n], 0.5, &mut rng));
+        let b = store.add("b", bt);
+        let build = move |g: &mut Graph, s: &ParamStore| {
+            let (xn, wn, bn) = (g.param(s, x), g.param(s, w), g.param(s, b));
+            g.affine_act(xn, wn, bn, act)
+        };
+        compare_chain(&format!("affine_act non-finite {act:?}"), &store, &build);
+    }
+}
+
+// ------------------------------------------------------ full-model sweep
+
+fn toy_classification(n_examples: usize, seq_len: usize, seed: u64) -> SeqDataset {
+    let mut rng = Rng::new(seed);
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for i in 0..n_examples {
+        let sign = if i % 2 == 0 { 1.0f32 } else { -1.0 };
+        let mut x = Tensor::randn(&[seq_len, 1], 0.5, &mut rng);
+        x.map_inplace(|v| v + sign * 0.4);
+        xs.push(x);
+        ys.push(usize::from(sign > 0.0));
+    }
+    SeqDataset::classification(xs, ys)
+}
+
+/// Loss value + packed parameter gradients of one batch through a full
+/// model — the end-to-end composition of every fused chain.
+fn model_loss_and_grads(kind: ModelKind) -> (f32, Vec<f32>) {
+    let ds = toy_classification(8, 12, 21);
+    let mut store = ParamStore::new();
+    let mut rng = Rng::new(11);
+    let model = SeqClassifier::new(kind, 12, 1, 6, 12, 2, &mut store, &mut rng);
+    let batch = BatchIter::sequential(&ds, 8).next().unwrap();
+    let mut g = Graph::new();
+    let loss = model.loss(&mut g, &store, &batch);
+    g.backward(loss);
+    let lv = g.value(loss).item();
+    let packed = pack_grads(&store, &g.param_grads());
+    (lv, packed)
+}
+
+#[test]
+fn full_models_bit_equal_across_fusion() {
+    // parallel LMU (affine_act + add2_row_act), sequential LMU (same
+    // chains around the recurrent scan), original cell (add3_act × 2),
+    // LSTM (add2_row_act gate pre-activation + Dense head)
+    for kind in [
+        ModelKind::LmuParallel,
+        ModelKind::LmuSequential,
+        ModelKind::LmuOriginal,
+        ModelKind::Lstm,
+    ] {
+        let (on, off) = with_fusion_both(|| model_loss_and_grads(kind));
+        assert_eq!(
+            on.0.to_bits(),
+            off.0.to_bits(),
+            "{kind:?}: loss differs across fusion: {} vs {}",
+            on.0,
+            off.0
+        );
+        assert_bits_equal(&format!("{kind:?}: packed grads"), &on.1, &off.1);
+    }
+}
+
+#[test]
+fn arena_recycling_does_not_change_results() {
+    // plain allocation vs a fresh arena vs a *warm* arena (second round
+    // reuses recycled buffers): all three bit-identical, and the warm
+    // round must actually hit the free lists
+    let run = || model_loss_and_grads(ModelKind::LmuParallel);
+    let plain = run();
+    let mut a = Arena::new();
+    let cold = arena::scope(&mut a, run);
+    let warm = arena::scope(&mut a, run);
+    assert_eq!(plain.0.to_bits(), cold.0.to_bits(), "cold-arena loss differs");
+    assert_eq!(plain.0.to_bits(), warm.0.to_bits(), "warm-arena loss differs");
+    assert_bits_equal("cold-arena grads", &cold.1, &plain.1);
+    assert_bits_equal("warm-arena grads", &warm.1, &plain.1);
+    let s = a.stats();
+    assert!(s.hits > 0, "second round never reused a buffer: {s:?}");
+}

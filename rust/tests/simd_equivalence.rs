@@ -279,6 +279,75 @@ fn elementwise_kernels_match_plain_loops_bit_for_bit() {
 }
 
 #[test]
+fn activation_kernels_match_plain_loops_bit_for_bit() {
+    // the tanh/relu forward, backward, and in-place kernels the fused
+    // epilogues dispatch to: both explicit paths against naive loops
+    // written here, including NaN/Inf/-0.0 salted at lane seams
+    let mut rng = Rng::new(109);
+    for &n in LENGTHS {
+        let mut x: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+        let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        for (pos, v) in
+            [(0usize, f32::NAN), (7, -0.0f32), (8, f32::INFINITY), (15, f32::NEG_INFINITY)]
+        {
+            if pos < n {
+                x[pos] = v;
+            }
+        }
+        let label = format!("n={n}");
+
+        let want: Vec<f32> = x.iter().map(|v| v.tanh()).collect();
+        let mut got = vec![0.0f32; n];
+        simd::tanh_fwd_vec(&x, &mut got);
+        assert_bits_equal(&format!("tanh_fwd_vec {label}"), &got, &want);
+        let mut got = vec![0.0f32; n];
+        simd::tanh_fwd_scalar(&x, &mut got);
+        assert_bits_equal(&format!("tanh_fwd_scalar {label}"), &got, &want);
+        let mut got = x.clone();
+        simd::tanh_assign_vec(&mut got);
+        assert_bits_equal(&format!("tanh_assign_vec {label}"), &got, &want);
+        let mut got = x.clone();
+        simd::tanh_assign_scalar(&mut got);
+        assert_bits_equal(&format!("tanh_assign_scalar {label}"), &got, &want);
+
+        // canonical relu: strict-greater against zero, NaN/-0.0 -> +0.0
+        let want: Vec<f32> = x.iter().map(|&v| if v > 0.0 { v } else { 0.0 }).collect();
+        let mut got = vec![0.0f32; n];
+        simd::relu_fwd_vec(&x, &mut got);
+        assert_bits_equal(&format!("relu_fwd_vec {label}"), &got, &want);
+        let mut got = vec![0.0f32; n];
+        simd::relu_fwd_scalar(&x, &mut got);
+        assert_bits_equal(&format!("relu_fwd_scalar {label}"), &got, &want);
+        let mut got = x.clone();
+        simd::relu_assign_vec(&mut got);
+        assert_bits_equal(&format!("relu_assign_vec {label}"), &got, &want);
+        let mut got = x.clone();
+        simd::relu_assign_scalar(&mut got);
+        assert_bits_equal(&format!("relu_assign_scalar {label}"), &got, &want);
+
+        // backward: dtanh = g * (1 - y^2) on post-activation y,
+        // drelu = g * [x > 0] (0 · NaN g still propagates NaN)
+        let y: Vec<f32> = x.iter().map(|v| v.tanh()).collect();
+        let want: Vec<f32> = g.iter().zip(&y).map(|(&gv, &yv)| gv * (1.0 - yv * yv)).collect();
+        let mut got = vec![0.0f32; n];
+        simd::tanh_bwd_vec(&g, &y, &mut got);
+        assert_bits_equal(&format!("tanh_bwd_vec {label}"), &got, &want);
+        let mut got = vec![0.0f32; n];
+        simd::tanh_bwd_scalar(&g, &y, &mut got);
+        assert_bits_equal(&format!("tanh_bwd_scalar {label}"), &got, &want);
+
+        let want: Vec<f32> =
+            g.iter().zip(&x).map(|(&gv, &xv)| gv * if xv > 0.0 { 1.0 } else { 0.0 }).collect();
+        let mut got = vec![0.0f32; n];
+        simd::relu_bwd_vec(&g, &x, &mut got);
+        assert_bits_equal(&format!("relu_bwd_vec {label}"), &got, &want);
+        let mut got = vec![0.0f32; n];
+        simd::relu_bwd_scalar(&g, &x, &mut got);
+        assert_bits_equal(&format!("relu_bwd_scalar {label}"), &got, &want);
+    }
+}
+
+#[test]
 fn tensor_elementwise_ops_stable_across_the_knob() {
     // the Tensor-level entries (exec partition + simd block kernels):
     // big enough to cross MIN_PARALLEL_WORK, odd element count
@@ -292,6 +361,8 @@ fn tensor_elementwise_ops_stable_across_the_knob() {
         ("div", Box::new(|| x.div(&y))),
         ("scale", Box::new(|| x.scale(0.125))),
         ("add_row", Box::new(|| x.add_row(&y.row(0)))),
+        ("tanh", Box::new(|| x.tanh())),
+        ("relu", Box::new(|| x.relu())),
         ("softmax", Box::new(|| x.softmax_rows())),
     ];
     for (name, f) in &cases {
