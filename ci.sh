@@ -16,10 +16,14 @@
 #   determinism  the determinism matrix: the exec-equivalence suite under
 #                PLMU_THREADS in {1, 2, 8}, the simd-equivalence suite
 #                under PLMU_SIMD in {1, 0}, the fusion-equivalence suite
-#                under PLMU_FUSION in {1, 0}, plus a canonical training-
-#                loss fingerprint (plmu train-dp) diffed byte-for-byte
-#                across PLMU_THREADS in {1, 2, 8} x PLMU_SIMD in {1, 0}
-#                x PLMU_FUSION in {1, 0}
+#                under PLMU_FUSION in {1, 0}, the scan-equivalence suite
+#                under PLMU_SCAN in {fft, scan}, plus a canonical
+#                training-loss fingerprint (plmu train-dp) diffed
+#                byte-for-byte across PLMU_THREADS in {1, 2, 8} x
+#                PLMU_SIMD in {1, 0} x PLMU_FUSION in {1, 0}, within
+#                each PLMU_SCAN in {fft, scan} (the two DN strategies
+#                associate f32 differently, so each gets its own
+#                reference fingerprint — see rust/src/dn/scan.rs)
 #   bench        smoke-runs the perf benches and validates every emitted
 #                BENCH_*.json artifact (plmu bench-check): required keys,
 #                sane timings — a bench refactor cannot silently emit an
@@ -80,30 +84,41 @@ stage_determinism() {
         echo "-- determinism: fusion_equivalence, PLMU_FUSION=$f --"
         PLMU_FUSION=$f cargo test -q --test fusion_equivalence || return 1
     done
-    local ref_fp="" out fp
-    for t in 1 2 8; do
-        for s in 1 0; do
-            for f in 1 0; do
-                out=$(PLMU_FUSION=$f PLMU_SIMD=$s PLMU_THREADS=$t ./target/release/plmu train-dp \
-                    --workers 2 --epochs 1 --examples 32 --side 8 --batch 8) || return 1
-                fp=$(printf '%s\n' "$out" | grep '^train fingerprint:')
-                if [ -z "$fp" ]; then
-                    echo "no 'train fingerprint:' line in train-dp output"
-                    return 1
-                fi
-                echo "   PLMU_THREADS=$t PLMU_SIMD=$s PLMU_FUSION=$f -> $fp"
-                if [ -z "$ref_fp" ]; then
-                    ref_fp="$fp"
-                elif [ "$fp" != "$ref_fp" ]; then
-                    echo "DETERMINISM MISMATCH: (threads=$t, simd=$s, fusion=$f) differs from (threads=1, simd=1, fusion=1)"
-                    echo "  reference: $ref_fp"
-                    echo "  this run:  $fp"
-                    return 1
-                fi
+    for sc in fft scan; do
+        echo "-- determinism: scan_equivalence, PLMU_SCAN=$sc --"
+        PLMU_SCAN=$sc cargo test -q --test scan_equivalence || return 1
+    done
+    # the scan and fft strategies associate f32 differently (each is
+    # deterministic; they agree only to ~2e-4), so the byte-diff runs
+    # within each PLMU_SCAN setting: one reference fingerprint per
+    # strategy, every thread/simd/fusion combination must match it
+    local ref_fp out fp
+    for sc in fft scan; do
+        ref_fp=""
+        for t in 1 2 8; do
+            for s in 1 0; do
+                for f in 1 0; do
+                    out=$(PLMU_SCAN=$sc PLMU_FUSION=$f PLMU_SIMD=$s PLMU_THREADS=$t ./target/release/plmu train-dp \
+                        --workers 2 --epochs 1 --examples 32 --side 8 --batch 8) || return 1
+                    fp=$(printf '%s\n' "$out" | grep '^train fingerprint:')
+                    if [ -z "$fp" ]; then
+                        echo "no 'train fingerprint:' line in train-dp output"
+                        return 1
+                    fi
+                    echo "   PLMU_SCAN=$sc PLMU_THREADS=$t PLMU_SIMD=$s PLMU_FUSION=$f -> $fp"
+                    if [ -z "$ref_fp" ]; then
+                        ref_fp="$fp"
+                    elif [ "$fp" != "$ref_fp" ]; then
+                        echo "DETERMINISM MISMATCH: (scan=$sc, threads=$t, simd=$s, fusion=$f) differs from (scan=$sc, threads=1, simd=1, fusion=1)"
+                        echo "  reference: $ref_fp"
+                        echo "  this run:  $fp"
+                        return 1
+                    fi
+                done
             done
         done
     done
-    echo "fingerprints byte-identical across PLMU_THREADS in {1, 2, 8} x PLMU_SIMD in {1, 0} x PLMU_FUSION in {1, 0}"
+    echo "fingerprints byte-identical across PLMU_THREADS in {1, 2, 8} x PLMU_SIMD in {1, 0} x PLMU_FUSION in {1, 0}, within each PLMU_SCAN in {fft, scan}"
 }
 
 stage_bench() {
@@ -113,10 +128,11 @@ stage_bench() {
     PLMU_BENCH_SMOKE=1 cargo bench --bench coordinator || return 1
     PLMU_BENCH_SMOKE=1 cargo bench --bench simd_kernels || return 1
     PLMU_BENCH_SMOKE=1 cargo bench --bench fusion || return 1
+    PLMU_BENCH_SMOKE=1 cargo bench --bench scan || return 1
     echo "-- validating perf records --"
     ./target/release/plmu bench-check \
         BENCH_threads.json BENCH_pool.json BENCH_coordinator.json BENCH_simd.json \
-        BENCH_fusion.json
+        BENCH_fusion.json BENCH_scan.json
 }
 
 # ----------------------------------------------------------------- driver

@@ -3,10 +3,15 @@
 //! the LTI version growing linearly with n while the parallel version
 //! stays ~flat (GPU); on CPU the parallel version grows sub-linearly
 //! (FFT work grows n log n but avoids the n-step dependency chain).
+//! The parallel version is run under both DN evaluation paths —
+//! `PLMU_SCAN=fft` (eq. 26) and `PLMU_SCAN=scan` (the chunked parallel
+//! scan) — so the strategy crossover shows up on the same axis
+//! (`cargo bench --bench scan` is the operator-level version).
 //!
 //! Run: cargo bench --bench fig1_seqlen
 
 use plmu::autograd::{Graph, ParamStore};
+use plmu::dn::scan::{self, ScanMode};
 use plmu::benchlib::{bench, BenchConfig, Table};
 use plmu::data::batcher::{BatchIter, SeqDataset};
 use plmu::optim::{Adam, Optimizer};
@@ -37,13 +42,21 @@ fn batch_step_time(kind: ModelKind, n: usize) -> f64 {
 
 fn main() {
     let ns = [64usize, 128, 256, 512, 1024];
-    let mut table = Table::new(&["n", "LTI (ms/step)", "parallel (ms/step)", "ratio"]);
+    let mut table =
+        Table::new(&["n", "LTI (ms/step)", "par-fft (ms/step)", "par-scan (ms/step)", "ratio"]);
     let mut first_ratio = None;
     let mut last_ratio = None;
+    let was = scan::mode();
     for &n in &ns {
         println!("n = {n}...");
         let t_lti = batch_step_time(ModelKind::LmuSequential, n);
+        // the parallel model captures its DN operator at construction,
+        // so the knob is flipped around each build+measure
+        scan::set_mode(ScanMode::Fft);
         let t_par = batch_step_time(ModelKind::LmuParallel, n);
+        scan::set_mode(ScanMode::Scan { block: scan::DEFAULT_BLOCK });
+        let t_scan = batch_step_time(ModelKind::LmuParallel, n);
+        scan::set_mode(was);
         let r = t_lti / t_par;
         if first_ratio.is_none() {
             first_ratio = Some(r);
@@ -53,6 +66,7 @@ fn main() {
             n.to_string(),
             format!("{:.2}", t_lti * 1e3),
             format!("{:.2}", t_par * 1e3),
+            format!("{:.2}", t_scan * 1e3),
             format!("{r:.1}x"),
         ]);
     }

@@ -1,0 +1,139 @@
+//! Scan-vs-FFT crossover for the DN memory: the chunked parallel scan
+//! (`PLMU_SCAN=scan`) against the whole-sequence FFT convolution
+//! (eq. 26) over the fig1 sequence-length sweep, forward and adjoint.
+//! Emits `BENCH_scan.json` at the repo root (validated by `plmu
+//! bench-check` in the CI bench stage).
+//!
+//! Before timing, every shape runs the correctness gates: scan-vs-FFT
+//! inside the cross-strategy ~2e-4 budget, the last-state short-circuit
+//! bit-identical to the full evaluation's final row, and the streaming
+//! mode bit-identical to the batch mode (the exhaustive version is
+//! `rust/tests/scan_equivalence.rs`).
+//!
+//! Run: cargo bench --bench scan
+//! Smoke mode (CI): PLMU_BENCH_SMOKE=1 cargo bench --bench scan
+
+use plmu::benchlib::{
+    bench, checksum_f32 as checksum, repo_root, BenchConfig, JsonValue, PerfJson, Table,
+};
+use plmu::dn::{scan, DelayNetwork, DnFftOperator, DnScanOperator};
+use plmu::exec;
+use plmu::util::Rng;
+use plmu::Tensor;
+
+fn main() {
+    let smoke = std::env::var("PLMU_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
+    let cfg = if smoke {
+        BenchConfig { warmup_secs: 0.02, measure_secs: 0.06, max_iters: 20, min_iters: 2 }
+    } else {
+        BenchConfig { warmup_secs: 0.1, measure_secs: 0.5, max_iters: 100, min_iters: 3 }
+    };
+    let (d, du) = (16usize, 1usize);
+    let block = scan::DEFAULT_BLOCK;
+    let ns: &[usize] = if smoke { &[64, 128] } else { &[64, 128, 256, 512, 1024] };
+    let threads = exec::threads();
+    println!(
+        "scan-vs-fft crossover, d={d} du={du} L={block}, {threads} thread(s){}",
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let mut record = PerfJson::new("scan");
+    let mut table =
+        Table::new(&["n", "fft fwd (µs)", "scan fwd (µs)", "fwd ratio", "fft adj (µs)", "scan adj (µs)"]);
+    let mut rng = Rng::new(0);
+    let mut first_ratio = None;
+    let mut last_ratio = None;
+
+    for &n in ns {
+        let dn = DelayNetwork::new(d, n as f64);
+        let fft = DnFftOperator::new(&dn, n);
+        let sc = DnScanOperator::new(&dn, n, block);
+        let u = Tensor::randn(&[n, du], 1.0, &mut rng);
+        let dm = Tensor::randn(&[n, d, du], 1.0, &mut rng);
+
+        // ---- gates before timing -------------------------------------
+        let m_fft = fft.apply(&u);
+        let m_scan = sc.apply(&u);
+        let err = m_fft.max_abs_diff(&m_scan);
+        assert!(err < 2e-4, "n={n}: scan-vs-fft err {err} outside the strategy budget");
+        let last = sc.apply_last(&u, None);
+        for (c, lv) in last.iter().enumerate().take(du * d) {
+            let (ch, s) = (c / d, c % d);
+            assert_eq!(
+                lv.to_bits(),
+                m_scan.data()[((n - 1) * d + s) * du + ch].to_bits(),
+                "n={n}: apply_last drifted from apply's final row"
+            );
+        }
+        let streamed = sc.stream(du).push(&u);
+        assert_eq!(
+            checksum(streamed.data()),
+            checksum(m_scan.data()),
+            "n={n}: streaming mode drifted from batch mode"
+        );
+
+        // ---- timings -------------------------------------------------
+        let fft_fwd = bench("fft_fwd", cfg, || {
+            std::hint::black_box(fft.apply(&u));
+        });
+        let scan_fwd = bench("scan_fwd", cfg, || {
+            std::hint::black_box(sc.apply(&u));
+        });
+        let fft_adj = bench("fft_adj", cfg, || {
+            std::hint::black_box(fft.apply_adjoint(&dm));
+        });
+        let scan_adj = bench("scan_adj", cfg, || {
+            std::hint::black_box(sc.apply_adjoint(&dm));
+        });
+
+        let ratio = scan_fwd.mean / fft_fwd.mean;
+        if first_ratio.is_none() {
+            first_ratio = Some(ratio);
+        }
+        last_ratio = Some(ratio);
+        table.row(&[
+            n.to_string(),
+            format!("{:.2}", fft_fwd.mean * 1e6),
+            format!("{:.2}", scan_fwd.mean * 1e6),
+            format!("{ratio:.2}x"),
+            format!("{:.2}", fft_adj.mean * 1e6),
+            format!("{:.2}", scan_adj.mean * 1e6),
+        ]);
+        for (case, stats) in [
+            (format!("fft_fwd_n{n}"), &fft_fwd),
+            (format!("scan_fwd_n{n}"), &scan_fwd),
+            (format!("fft_adj_n{n}"), &fft_adj),
+            (format!("scan_adj_n{n}"), &scan_adj),
+        ] {
+            record.push(&[
+                ("case", JsonValue::Str(case)),
+                ("threads", JsonValue::Int(threads as i64)),
+                ("wall_ns", JsonValue::Int((stats.mean * 1e9) as i64)),
+                ("mean_s", JsonValue::Num(stats.mean)),
+                ("p50_s", JsonValue::Num(stats.p50)),
+                ("n", JsonValue::Int(n as i64)),
+                ("d", JsonValue::Int(d as i64)),
+                ("scan_block", JsonValue::Int(block as i64)),
+                ("scan_over_fft_fwd", JsonValue::Num(ratio)),
+                ("smoke", JsonValue::Bool(smoke)),
+            ]);
+        }
+    }
+
+    table.print("scan vs fft — DN memory evaluation vs sequence length");
+    println!(
+        "\ncrossover shape: scan/fft forward ratio {:.2}x at n={} vs {:.2}x at n={} \
+         (the FFT's n log n catches up as n grows; the scan wins where chunks \
+         amortize and is the only path that streams)",
+        first_ratio.unwrap_or(0.0),
+        ns.first().unwrap(),
+        last_ratio.unwrap_or(0.0),
+        ns.last().unwrap()
+    );
+
+    let out = repo_root().join("BENCH_scan.json");
+    match record.write(&out) {
+        Ok(()) => println!("wrote {} ({} records)", out.display(), record.len()),
+        Err(e) => eprintln!("failed to write {}: {e}", out.display()),
+    }
+}

@@ -19,7 +19,7 @@ pub mod params;
 
 pub use params::{ParamId, ParamStore};
 
-use crate::dn::DnFftOperator;
+use crate::dn::{DnOperator, DnScanOperator};
 use crate::fusion;
 use crate::tensor::Tensor;
 pub use crate::tensor::Act;
@@ -73,9 +73,12 @@ enum Op {
     Embedding { ids: Vec<usize> },
     Dropout { mask: Vec<f32> },
     /// batched DN causal convolution (all states): (B·n, du) -> (B·n, du·d)
-    DnConv { op: Arc<DnFftOperator>, batch: usize },
+    DnConv { op: Arc<DnOperator>, batch: usize },
     /// batched DN final state (eq. 25): (B·n, du) -> (B, du·d); aux = H reversed (n, d)
     DnLast { batch: usize },
+    /// batched DN final state on the scan path: (B·n, du) -> (B, du·d);
+    /// aux = the entering carries (B, du·d), zeros unless streaming
+    DnLastScan { op: Arc<DnScanOperator>, batch: usize },
 }
 
 struct Node {
@@ -395,23 +398,25 @@ impl Graph {
     // ------------------------------------------------------------------ DN
 
     /// Batched DN causal convolution, all states (the parallel training
-    /// path, eq. 26).  u: (B·n, du) channel-major output: (B·n, du·d).
+    /// path: eq. 26 FFT or the chunked scan, per the [`DnOperator`] the
+    /// `PLMU_SCAN` knob built).  u: (B·n, du) channel-major output:
+    /// (B·n, du·d).
     ///
     /// The B samples are independent and each owns a contiguous block of
     /// output rows, so the batch fans out across `crate::exec` workers.
-    /// The per-channel parallelism inside [`DnFftOperator::apply`] runs
-    /// under the chunk's sub-budget: serial when the batch already fills
-    /// the thread budget, a nested pool job when spare threads remain
+    /// The inner parallelism of either operator's `apply` runs under the
+    /// chunk's sub-budget: serial when the batch already fills the
+    /// thread budget, a nested pool job when spare threads remain
     /// (e.g. under a 2-replica data-parallel run on 8 threads) — either
     /// way the tree never over-subscribes and values are bit-identical.
-    pub fn dn_conv(&mut self, u: NodeId, op: Arc<DnFftOperator>, batch: usize) -> NodeId {
+    pub fn dn_conv(&mut self, u: NodeId, op: Arc<DnOperator>, batch: usize) -> NodeId {
         let uv = &self.nodes[u].value;
-        let n = op.n;
+        let n = op.n();
         let du = uv.cols();
         assert_eq!(uv.rows(), batch * n, "dn_conv: rows {} != B*n {}", uv.rows(), batch * n);
-        let d = op.d;
+        let d = op.d();
         let mut out = Tensor::zeros(&[batch * n, du * d]);
-        let op_ref: &DnFftOperator = &op;
+        let op_ref: &DnOperator = &op;
         let sample_len = n * du * d;
         let plan = crate::exec::plan_for(batch, batch * du * (d + 1) * n * 32);
         crate::exec::parallel_rows_mut(out.data_mut(), sample_len, plan, |b0, block| {
@@ -450,6 +455,56 @@ impl Graph {
             }
         }
         self.push(out, Op::DnLast { batch }, vec![u], Some(hrev.clone()))
+    }
+
+    /// Batched DN final state on the chunked-scan path (the eq. 25
+    /// analogue of [`Graph::dn_conv`] under `PLMU_SCAN=scan`):
+    /// u: (B·n, du) -> (B, du·d) channel-major, via the sequential carry
+    /// chain of [`DnScanOperator::apply_last`] per sample, batch
+    /// fanned out over the exec pool.
+    ///
+    /// `carry0` is the (B, du·d) carry entering the window (the
+    /// streaming trainer's state); `None` means zeros and is
+    /// bit-identical to passing explicit zeros — the carry dot is always
+    /// evaluated.  Gradients flow to `u` only: the carry is truncation
+    /// state from outside the tape (TBPTT), held constant by design.
+    pub fn dn_last_scan(
+        &mut self,
+        u: NodeId,
+        op: Arc<DnScanOperator>,
+        batch: usize,
+        carry0: Option<&Tensor>,
+    ) -> NodeId {
+        let uv = &self.nodes[u].value;
+        let d = op.d;
+        let du = uv.cols();
+        // the scan tables are length-independent, so n is whatever the
+        // input carries — the streaming trainer's windows vary in length
+        assert!(batch >= 1 && uv.rows() % batch == 0, "dn_last_scan: rows not divisible by B");
+        let n = uv.rows() / batch;
+        assert!(n >= 1, "dn_last_scan: empty window");
+        let carries = match carry0 {
+            Some(c) => {
+                assert_eq!(c.shape(), &[batch, du * d], "carry must be (B, du*d)");
+                c.clone()
+            }
+            None => Tensor::zeros(&[batch, du * d]),
+        };
+        let mut out = Tensor::zeros(&[batch, du * d]);
+        let op_ref: &DnScanOperator = &op;
+        let uv_ref = &*uv;
+        let carries_ref = &carries;
+        let plan = crate::exec::plan_for(batch, batch * du * d * n * 8);
+        crate::exec::parallel_rows_mut(out.data_mut(), du * d, plan, |b0, block| {
+            for (bi, row) in block.chunks_mut(du * d).enumerate() {
+                let b = b0 + bi;
+                let u_b = uv_ref.slice_rows(b * n, (b + 1) * n);
+                let c0 = &carries_ref.data()[b * du * d..(b + 1) * du * d];
+                // apply_last returns carryᵀ (du, d) — already channel-major
+                row.copy_from_slice(&op_ref.apply_last(&u_b, Some(c0)));
+            }
+        });
+        self.push(out, Op::DnLastScan { op, batch }, vec![u], Some(carries))
     }
 
     // ------------------------------------------------------------ backward
@@ -718,15 +773,15 @@ impl Graph {
             }
             Op::DnConv { op, batch } => {
                 let (op, batch) = (op.clone(), *batch);
-                let n = op.n;
-                let d = op.d;
+                let n = op.n();
+                let d = op.d();
                 let du = self.nodes[parents[0]].value.cols();
                 // unpack channel-major (B·n, du·d) grad -> (n, d, du) per b,
                 // run the adjoint convolution, pack back into (B·n, du);
                 // samples are independent, so the batch fans out like the
                 // forward pass does.
                 let mut gu = Tensor::zeros(&[batch * n, du]);
-                let op_ref: &DnFftOperator = &op;
+                let op_ref: &DnOperator = &op;
                 let g_ref = &g;
                 let sample_len = n * du;
                 let plan = crate::exec::plan_for(batch, batch * du * (d + 1) * n * 32);
@@ -766,6 +821,29 @@ impl Graph {
                     let gb = hrev.matmul(&dm); // (n, du)
                     gu.data_mut()[b * n * du..(b + 1) * n * du].copy_from_slice(gb.data());
                 }
+                self.accum(parents[0], gu);
+            }
+            Op::DnLastScan { op, batch } => {
+                let (op, batch) = (op.clone(), *batch);
+                let d = op.d;
+                let du = self.nodes[parents[0]].value.cols();
+                let n = self.nodes[parents[0]].value.rows() / batch;
+                // each sample's grad row is already the (du, d) carryᵀ
+                // layout apply_last_adjoint expects; samples fan out like
+                // the forward.  No gradient to the entering carry (aux):
+                // it is TBPTT truncation state, constant by design.
+                let mut gu = Tensor::zeros(&[batch * n, du]);
+                let op_ref: &DnScanOperator = &op;
+                let g_ref = &g;
+                let plan = crate::exec::plan_for(batch, batch * du * d * n * 8);
+                crate::exec::parallel_rows_mut(gu.data_mut(), n * du, plan, |b0, block| {
+                    for (bi, sample) in block.chunks_mut(n * du).enumerate() {
+                        let b = b0 + bi;
+                        let dlast = &g_ref.data()[b * du * d..(b + 1) * du * d];
+                        let gb = op_ref.apply_last_adjoint(n, du, dlast); // (n, du)
+                        sample.copy_from_slice(gb.data());
+                    }
+                });
                 self.accum(parents[0], gu);
             }
         }

@@ -211,7 +211,8 @@ fn grad_dn_conv_matches_fd() {
     let mut rng = Rng::new(7);
     let (n, d, du, batch) = (12usize, 4usize, 2usize, 2usize);
     let dn = DelayNetwork::new(d, n as f64);
-    let op = std::sync::Arc::new(crate::dn::DnFftOperator::new(&dn, n));
+    let op =
+        std::sync::Arc::new(crate::dn::DnOperator::Fft(crate::dn::DnFftOperator::new(&dn, n)));
     let mut store = ParamStore::new();
     let u = store.add("u", Tensor::randn(&[batch * n, du], 0.5, &mut rng));
     let w = Tensor::randn(&[batch * n, du * d], 0.5, &mut rng);
@@ -220,6 +221,58 @@ fn grad_dn_conv_matches_fd() {
         |g, s| {
             let ui = g.param(s, u);
             let m = g.dn_conv(ui, op.clone(), batch);
+            let wi = g.input(w.clone());
+            let prod = g.mul(m, wi);
+            g.sum_all(prod)
+        },
+        2e-2,
+    );
+}
+
+#[test]
+fn grad_dn_conv_scan_matches_fd() {
+    // same harness as grad_dn_conv_matches_fd, routed through the
+    // chunked-scan operator with a block that does not divide n
+    let mut rng = Rng::new(7);
+    let (n, d, du, batch) = (12usize, 4usize, 2usize, 2usize);
+    let dn = DelayNetwork::new(d, n as f64);
+    let op = std::sync::Arc::new(crate::dn::DnOperator::Scan(std::sync::Arc::new(
+        crate::dn::DnScanOperator::new(&dn, n, 5),
+    )));
+    let mut store = ParamStore::new();
+    let u = store.add("u", Tensor::randn(&[batch * n, du], 0.5, &mut rng));
+    let w = Tensor::randn(&[batch * n, du * d], 0.5, &mut rng);
+    check_grads(
+        &mut store,
+        |g, s| {
+            let ui = g.param(s, u);
+            let m = g.dn_conv(ui, op.clone(), batch);
+            let wi = g.input(w.clone());
+            let prod = g.mul(m, wi);
+            g.sum_all(prod)
+        },
+        2e-2,
+    );
+}
+
+#[test]
+fn grad_dn_last_scan_matches_fd() {
+    let mut rng = Rng::new(8);
+    let (n, d, du, batch) = (10usize, 3usize, 2usize, 2usize);
+    let dn = DelayNetwork::new(d, n as f64);
+    let op = std::sync::Arc::new(crate::dn::DnScanOperator::new(&dn, n, 4));
+    let mut store = ParamStore::new();
+    let u = store.add("u", Tensor::randn(&[batch * n, du], 0.5, &mut rng));
+    let w = Tensor::randn(&[batch, du * d], 0.5, &mut rng);
+    // a nonzero entering carry: its contribution is constant in u, so the
+    // u-gradient check still holds while exercising the carry path
+    let mut c0 = Tensor::randn(&[batch, du * d], 0.5, &mut rng);
+    c0.data_mut()[0] = 1.0;
+    check_grads(
+        &mut store,
+        |g, s| {
+            let ui = g.param(s, u);
+            let m = g.dn_last_scan(ui, op.clone(), batch, Some(&c0));
             let wi = g.input(w.clone());
             let prod = g.mul(m, wi);
             g.sum_all(prod)

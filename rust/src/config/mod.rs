@@ -221,6 +221,10 @@ pub struct TrainConfig {
     /// producing kernels (`PLMU_FUSION`).  Both paths are bit-identical;
     /// off exists for debugging and the CI equivalence matrix.
     pub fusion: bool,
+    /// DN evaluation path (`PLMU_SCAN`): `"fft"`, `"scan"`, or
+    /// `"scan:<block>"`.  Empty (the default) leaves the knob alone so a
+    /// `PLMU_SCAN` environment override still wins.
+    pub scan: String,
 }
 
 impl Default for TrainConfig {
@@ -238,6 +242,7 @@ impl Default for TrainConfig {
             threads: 0,
             pipeline: false,
             fusion: true,
+            scan: String::new(),
         }
     }
 }
@@ -265,6 +270,7 @@ impl TrainConfig {
             threads: c.usize_or(&k("threads"), d.threads),
             pipeline: c.bool_or(&k("pipeline"), d.pipeline),
             fusion: c.bool_or(&k("fusion"), d.fusion),
+            scan: c.str_or(&k("scan"), &d.scan),
         }
     }
 
@@ -282,6 +288,19 @@ impl TrainConfig {
     pub fn apply_fusion(&self) {
         if !self.fusion {
             crate::fusion::set_enabled(false);
+        }
+    }
+
+    /// Apply the `scan` knob to the global DN-path dispatch.  Only
+    /// forces the knob when the config names a mode, so the empty
+    /// default still honors a `PLMU_SCAN` environment override.
+    /// Panics on an unparseable value — a config typo should fail loud,
+    /// not silently train on the wrong path.
+    pub fn apply_scan(&self) {
+        if !self.scan.is_empty() {
+            let mode = crate::dn::scan::parse_mode(&self.scan)
+                .unwrap_or_else(|e| panic!("bad [train] scan value: {e}"));
+            crate::dn::scan::set_mode(mode);
         }
     }
 }
@@ -379,6 +398,20 @@ theta = 784.0
         let c2 = Config::parse("[train]\nfusion = false").unwrap();
         let t2 = TrainConfig::from_config(&c2, "train");
         assert!(!t2.fusion);
+    }
+
+    #[test]
+    fn scan_knob_parses_and_defaults_empty() {
+        let c = Config::parse("").unwrap();
+        let t = TrainConfig::from_config(&c, "train");
+        assert!(t.scan.is_empty(), "scan must default to inherit (empty)");
+        let c2 = Config::parse("[train]\nscan = \"scan:32\"").unwrap();
+        let t2 = TrainConfig::from_config(&c2, "train");
+        assert_eq!(t2.scan, "scan:32");
+        assert_eq!(
+            crate::dn::scan::parse_mode(&t2.scan).unwrap(),
+            crate::dn::scan::ScanMode::Scan { block: 32 }
+        );
     }
 
     #[test]

@@ -10,7 +10,12 @@
 //!  * eq. (26)      `DnFftOperator` — FFT convolution, O(n log n d);
 //!  * plus `chunked_scan`, the Rust mirror of the L1 Pallas kernel
 //!    (block-Toeplitz matmul + Ā^L carry), used to validate the kernel's
-//!    schedule and as a cache-friendly CPU path.
+//!    schedule and as a cache-friendly CPU path;
+//!  * and [`scan`], the production chunked-parallel-scan operator behind
+//!    the `PLMU_SCAN` knob: the same block-Toeplitz + carry schedule,
+//!    dispatched over the exec pool, with a streaming mode and its own
+//!    autograd adjoints (see the module doc for the bit-exactness
+//!    contract).
 //!
 //! All strategies are *exactly* equivalent in exact arithmetic; the tests
 //! pin them against each other to ~1e-4 in f32.
@@ -26,6 +31,9 @@ use crate::exec;
 use crate::fft::{next_pow2, RfftCache};
 use crate::linalg::{expm, Mat};
 use crate::tensor::Tensor;
+
+pub mod scan;
+pub use scan::{DnOperator, DnScanOperator, ScanMode, ScanState, ScanStream};
 
 /// Continuous-time Padé matrices (A, B) of eq. (8)/(9).
 pub fn dn_continuous(d: usize, theta: f64) -> (Mat, Mat) {

@@ -1,0 +1,821 @@
+//! The chunked parallel-scan evaluation path for the DN memory, and the
+//! `PLMU_SCAN` knob that selects between it and the whole-sequence FFT
+//! path (eq. 26).
+//!
+//! Martin & Cundy ("Parallelizing Linear Recurrent Neural Nets Over
+//! Sequence Length") observe that the LTI recurrence
+//! `m_t = Ā m_{t-1} + B̄ u_t` admits a blocked (Blelloch-style) scan:
+//! split the sequence into chunks of `L` steps, evaluate each chunk
+//! against the *block impulse response* — the lower-triangular Toeplitz
+//! table `TH (d, L, L)` with `TH[s][i][j] = H[i−j, s]` — and thread the
+//! d-dim state between chunks through the precomputed carry propagators
+//! `APows[i] = Ā^{i+1}`.  The chunk-local work is embarrassingly
+//! parallel (dispatched over the `crate::exec` work-stealing pool); only
+//! the O(nblocks · d² · du) carry chain is sequential.  This is the Rust
+//! production form of the schedule sketched by
+//! `python/compile/kernels/dn_scan.py`, and — unlike the FFT path — it
+//! streams: a [`ScanStream`] carries `(d · du)` floats of state (plus at
+//! most one partial chunk) between pushes, so sequences of unbounded
+//! length train and serve at bounded memory.
+//!
+//! ## Bit-exactness contract
+//!
+//! Every element the scan family produces is computed by ONE canonical
+//! op sequence, shared by the batch path, the last-state path, and the
+//! streaming path, at every thread count and ingest granularity:
+//!
+//! ```text
+//! m[t0+i, s, c] = dot(TH[s][i][0..=i], uᵀ[c][0..=i])           (local)
+//!               + dot(APows[i][s][..], carryᵀ[c][..])          (carry)
+//! ```
+//!
+//! one canonical blocked-`F32x8` dot per term (`crate::simd::dot`) and
+//! one f32 add — the carry dot is *always* evaluated, including against
+//! the all-zero initial carry, so chunk 0, a streaming resume, and every
+//! later chunk are the same code path.  The backward pass fixes the
+//! mirrored canonical order (see [`DnScanOperator::apply_adjoint`]).
+//! `rust/tests/scan_equivalence.rs` pins the pool-dispatched operator
+//! bit-for-bit (zero epsilon, values AND gradients) against an in-file
+//! naive serial reference across chunk sizes, and the CI determinism
+//! matrix byte-diffs a training fingerprint across
+//! `PLMU_THREADS × PLMU_SIMD × PLMU_FUSION` under each `PLMU_SCAN`
+//! setting.
+//!
+//! Note what is *not* claimed: the scan and FFT paths are equal only in
+//! exact arithmetic.  In f32 they associate differently (and the FFT
+//! mixes every timestep into every output, so a planted NaN poisons
+//! non-causally), so scan-vs-FFT is pinned to the same ~2e-4 tolerance
+//! as the paper's other strategy cross-checks, while *within* the scan
+//! family equality is bit-for-bit by construction.
+
+use super::{DelayNetwork, DnFftOperator};
+use crate::exec;
+use crate::simd;
+use crate::tensor::Tensor;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+// ---------------------------------------------------------------- knob
+
+/// Default chunk length for `PLMU_SCAN=scan` (a `scan:<L>` suffix
+/// overrides it).  64 keeps the block tables small (d · L² floats) while
+/// giving the carry chain a 64× shorter sequential axis than eq. 19.
+pub const DEFAULT_BLOCK: usize = 64;
+
+/// Which evaluation path `DnOperator::for_mode` builds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScanMode {
+    /// whole-sequence FFT convolution (eq. 26) — the default
+    Fft,
+    /// chunked parallel scan with chunk length `block`
+    Scan { block: usize },
+}
+
+/// Runtime scan knob: 0 = unresolved, 1 = fft, 2 = scan (block in
+/// `SCAN_BLOCK`).  Mirrors the `PLMU_SIMD` / `PLMU_FUSION` idiom:
+/// resolved once from the `PLMU_SCAN` environment variable, overridable
+/// by [`set_mode`] from tests, benches, config, and the `--scan` CLI
+/// flag.
+static SCAN_MODE: AtomicUsize = AtomicUsize::new(0);
+static SCAN_BLOCK: AtomicUsize = AtomicUsize::new(DEFAULT_BLOCK);
+
+/// Parse a knob value: `fft` | `scan` | `scan:<block>` (case-insensitive).
+pub fn parse_mode(s: &str) -> Result<ScanMode, String> {
+    let v = s.trim();
+    if v.is_empty() || v.eq_ignore_ascii_case("fft") {
+        return Ok(ScanMode::Fft);
+    }
+    if v.eq_ignore_ascii_case("scan") {
+        return Ok(ScanMode::Scan { block: DEFAULT_BLOCK });
+    }
+    if let Some(rest) = v.strip_prefix("scan:").or_else(|| v.strip_prefix("SCAN:")) {
+        let block: usize = rest
+            .parse()
+            .map_err(|_| format!("bad PLMU_SCAN block {rest:?} (want scan:<positive int>)"))?;
+        if block == 0 {
+            return Err("PLMU_SCAN block must be >= 1".into());
+        }
+        return Ok(ScanMode::Scan { block });
+    }
+    Err(format!("bad PLMU_SCAN value {s:?} (want fft | scan | scan:<block>)"))
+}
+
+fn resolve_default() -> ScanMode {
+    match std::env::var("PLMU_SCAN") {
+        // an unparseable env value falls back to the fft default rather
+        // than panicking inside arbitrary library calls
+        Ok(v) => parse_mode(&v).unwrap_or(ScanMode::Fft),
+        Err(_) => ScanMode::Fft,
+    }
+}
+
+/// The active DN evaluation mode (default: fft, unless `PLMU_SCAN` says
+/// otherwise).  Both modes are deterministic at every thread count; they
+/// differ from each other by f32 rounding only.
+pub fn mode() -> ScanMode {
+    match SCAN_MODE.load(Ordering::Relaxed) {
+        1 => ScanMode::Fft,
+        2 => ScanMode::Scan { block: SCAN_BLOCK.load(Ordering::Relaxed).max(1) },
+        _ => {
+            let m = resolve_default();
+            // racy double-resolve is benign: resolve_default is deterministic
+            set_mode(m);
+            m
+        }
+    }
+}
+
+/// Set the scan knob (tests, benches, config, CLI; production reads
+/// `PLMU_SCAN` once).  Takes effect for operators built afterwards —
+/// layers capture their operator at construction.
+pub fn set_mode(m: ScanMode) {
+    match m {
+        ScanMode::Fft => SCAN_MODE.store(1, Ordering::Relaxed),
+        ScanMode::Scan { block } => {
+            SCAN_BLOCK.store(block.max(1), Ordering::Relaxed);
+            SCAN_MODE.store(2, Ordering::Relaxed);
+        }
+    }
+}
+
+// ------------------------------------------------------------ operator
+
+/// The chunked-scan operator: precomputed block tables for a fixed DN
+/// and chunk length, reusable across signals (A, B are frozen — paper
+/// §3.3).  `n` is the sequence length the batched autograd path expects;
+/// the tables themselves depend only on `(d, θ, L)`, which is what lets
+/// [`ScanStream`] run past `n` indefinitely.
+pub struct DnScanOperator {
+    pub n: usize,
+    pub d: usize,
+    /// chunk length L
+    pub block: usize,
+    /// (d, L, L) lower-triangular Toeplitz block impulse response:
+    /// `th[(s·L + i)·L + j] = H[i−j, s]` for j ≤ i, else 0
+    th: Vec<f32>,
+    /// (L, d, d) carry propagators: `apows[(i·d + s)·d + k] = (Ā^{i+1})[s, k]`
+    apows: Vec<f32>,
+    /// (d, L, d) transposed propagators for the adjoint:
+    /// `apt[(k·L + i)·d + s] = (Ā^{i+1})[s, k]`
+    apt: Vec<f32>,
+    /// (L, d) impulse response rows: `hflat[t·d + s] = H[t, s]`
+    hflat: Vec<f32>,
+}
+
+impl DnScanOperator {
+    pub fn new(dn: &DelayNetwork, n: usize, block: usize) -> Self {
+        let d = dn.d;
+        let l = block.max(1);
+        // H[t] = Ā^t B̄ for t < L, via the f64 impulse scan (identical
+        // construction to the FFT path's kernel, so the two strategies
+        // share their f64→f32 rounding of H)
+        let h = dn.impulse_response(l);
+        let hflat = h.data().to_vec();
+        let mut th = vec![0.0f32; d * l * l];
+        for s in 0..d {
+            for i in 0..l {
+                let row = &mut th[(s * l + i) * l..(s * l + i + 1) * l];
+                for (j, slot) in row.iter_mut().enumerate().take(i + 1) {
+                    *slot = hflat[(i - j) * d + s];
+                }
+            }
+        }
+        // Ā^{i+1} in exact-ish f64, cast once — same discipline as the
+        // naive `chunked_scan` mirror
+        let mut apows = vec![0.0f32; l * d * d];
+        let mut apt = vec![0.0f32; d * l * d];
+        let mut p = dn.abar.clone();
+        for i in 0..l {
+            let pf = p.to_f32();
+            apows[i * d * d..(i + 1) * d * d].copy_from_slice(&pf);
+            for s in 0..d {
+                for k in 0..d {
+                    apt[(k * l + i) * d + s] = pf[s * d + k];
+                }
+            }
+            p = p.matmul(&dn.abar);
+        }
+        DnScanOperator { n, d, block: l, th, apows, apt, hflat }
+    }
+
+    fn nblocks(&self, n: usize) -> usize {
+        n.div_ceil(self.block)
+    }
+
+    /// u: (n, du) -> m: (n, d, du), from a zero initial carry.
+    pub fn apply(&self, u: &Tensor) -> Tensor {
+        self.apply_from(u, None)
+    }
+
+    /// u: (n, du) -> m: (n, d, du) from an optional initial carry
+    /// (`carryᵀ`, (du, d) row-major — the layout [`ScanStream`] and the
+    /// streaming trainer persist).  Three phases:
+    ///
+    ///  1. chunk-local Toeplitz dots, parallel over chunks;
+    ///  2. the sequential carry chain (last row of each chunk only);
+    ///  3. carry application to every row, parallel over chunks.
+    ///
+    /// Per element the ops are the two canonical dots and one add of the
+    /// module contract, so the pool partition never changes a bit.
+    pub fn apply_from(&self, u: &Tensor, carry0: Option<&[f32]>) -> Tensor {
+        let (n, du) = (u.shape()[0], u.shape()[1]);
+        let (d, l) = (self.d, self.block);
+        let nb = self.nblocks(n);
+        let ud = u.data();
+        let mut out = Tensor::zeros(&[n, d, du]);
+        let dot = simd::dot_kernel();
+
+        // phase 1: local contributions.  parallel_rows_mut with one
+        // "row" per full chunk; the ragged tail chunk rides with the
+        // last dispatch block.
+        let plan = exec::plan_for(nb, n * (l + 1) * d * du);
+        let chunk_row = l * d * du;
+        exec::parallel_rows_mut(out.data_mut(), chunk_row, plan, |b0, slab| {
+            let mut ut = vec![0.0f32; du * l];
+            let mut t0 = b0 * l;
+            let mut off = 0usize;
+            while off < slab.len() {
+                let len = l.min(n - t0);
+                // uᵀ (du, len): contiguous per-channel chunk inputs
+                for c in 0..du {
+                    for j in 0..len {
+                        ut[c * l + j] = ud[(t0 + j) * du + c];
+                    }
+                }
+                for i in 0..len {
+                    let orow = &mut slab[off + i * d * du..off + (i + 1) * d * du];
+                    for s in 0..d {
+                        let trow = &self.th[(s * l + i) * l..(s * l + i) * l + i + 1];
+                        for c in 0..du {
+                            orow[s * du + c] = dot(trow, &ut[c * l..c * l + i + 1]);
+                        }
+                    }
+                }
+                off += len * d * du;
+                t0 += len;
+            }
+        });
+
+        // phase 2: sequential carry chain.  carries[k] = carryᵀ entering
+        // chunk k, (du, d) row-major; carry_{k+1} = the same expression
+        // phase 3 evaluates for the chunk's last row, so the chain state
+        // IS the last-row output bit-for-bit.
+        let mut carries = vec![0.0f32; (nb + 1) * du * d];
+        if let Some(c0) = carry0 {
+            assert_eq!(c0.len(), du * d, "carry must be (du, d)");
+            carries[..du * d].copy_from_slice(c0);
+        }
+        let od = out.data();
+        for k in 0..nb {
+            let t0 = k * l;
+            let len = l.min(n - t0);
+            let t_last = t0 + len - 1;
+            let (prev, next) = carries[k * du * d..(k + 2) * du * d].split_at_mut(du * d);
+            for c in 0..du {
+                for s in 0..d {
+                    let ap = &self.apows[((len - 1) * d + s) * d..((len - 1) * d + s + 1) * d];
+                    next[c * d + s] =
+                        od[(t_last * d + s) * du + c] + dot(ap, &prev[c * d..(c + 1) * d]);
+                }
+            }
+        }
+
+        // phase 3: apply each chunk's entering carry to all its rows
+        let carries_ref = &carries;
+        exec::parallel_rows_mut(out.data_mut(), chunk_row, plan, |b0, slab| {
+            let mut t0 = b0 * l;
+            let mut k = b0;
+            let mut off = 0usize;
+            while off < slab.len() {
+                let len = l.min(n - t0);
+                let carry = &carries_ref[k * du * d..(k + 1) * du * d];
+                for i in 0..len {
+                    let orow = &mut slab[off + i * d * du..off + (i + 1) * d * du];
+                    for s in 0..d {
+                        let ap = &self.apows[(i * d + s) * d..(i * d + s + 1) * d];
+                        for c in 0..du {
+                            orow[s * du + c] += dot(ap, &carry[c * d..(c + 1) * d]);
+                        }
+                    }
+                }
+                off += len * d * du;
+                t0 += len;
+                k += 1;
+            }
+        });
+        out
+    }
+
+    /// Adjoint (transpose) of [`apply`](Self::apply) w.r.t. u — the
+    /// backward pass of the scan convolution.  Canonical decomposition
+    /// (fixed, so chunked and whole agree bit-for-bit):
+    ///
+    ///  1. per-chunk propagator dots against the *raw* dm, parallel:
+    ///     `P[k][c][s'] = dot(APT[s'][0..len·d], dmᵀ_c[0..len·d])`;
+    ///  2. the sequential reverse carry chain
+    ///     `ĝ_k[c][s'] = P[k][c][s'] + dot((Ā^len)ᵀ[s'], ĝ_{k+1}[c])`
+    ///     with `ĝ_nblocks = 0`;
+    ///  3. per-chunk Toeplitz-transpose dots, parallel, against dm with
+    ///     the downstream carry gradient added into the last row:
+    ///     `gu[t0+j, c] = dot(Hflat[0..(len−j)·d], d̃mᵀ_c[j·d..len·d])`.
+    ///
+    /// `dm`: (n, d, du) -> `gu`: (n, du).
+    pub fn apply_adjoint(&self, dm: &Tensor) -> Tensor {
+        let (n, d, du) = (dm.shape()[0], dm.shape()[1], dm.shape()[2]);
+        assert_eq!(d, self.d);
+        let l = self.block;
+        let nb = self.nblocks(n);
+        let dmd = dm.data();
+        let dot = simd::dot_kernel();
+
+        // phase 1: P[k] (du, d), parallel over chunks
+        let p: Vec<f32> = {
+            let mut p = vec![0.0f32; nb * du * d];
+            let plan = exec::plan_for(nb, n * d * d * du);
+            exec::parallel_rows_mut(&mut p, du * d, plan, |k0, slab| {
+                let mut vt = vec![0.0f32; du * l * d];
+                for (kk, prow) in slab.chunks_mut(du * d).enumerate() {
+                    let k = k0 + kk;
+                    let t0 = k * l;
+                    let len = l.min(n - t0);
+                    transpose_dm(dmd, &mut vt, t0, len, d, du, l);
+                    for c in 0..du {
+                        let v = &vt[c * l * d..c * l * d + len * d];
+                        for s2 in 0..d {
+                            prow[c * d + s2] = dot(&self.apt[s2 * l * d..s2 * l * d + len * d], v);
+                        }
+                    }
+                }
+            });
+            p
+        };
+
+        // phase 2: reverse carry chain.  ghats[k] = ĝ_k, the gradient
+        // w.r.t. the carry *entering* chunk k; chunk k adds ĝ_{k+1}
+        // into its last row in phase 3.
+        let mut ghats = vec![0.0f32; (nb + 1) * du * d];
+        for k in (0..nb).rev() {
+            let len = l.min(n - k * l);
+            let (gk, gnext) = ghats[k * du * d..(k + 2) * du * d].split_at_mut(du * d);
+            let pk = &p[k * du * d..(k + 1) * du * d];
+            for c in 0..du {
+                for s2 in 0..d {
+                    let alt = &self.apt[(s2 * l + len - 1) * d..(s2 * l + len) * d];
+                    gk[c * d + s2] = pk[c * d + s2] + dot(alt, &gnext[c * d..(c + 1) * d]);
+                }
+            }
+        }
+
+        // phase 3: gu, parallel over chunks
+        let mut gu = Tensor::zeros(&[n, du]);
+        let plan = exec::plan_for(nb, n * (l + 1) * d * du);
+        let ghats_ref = &ghats;
+        exec::parallel_rows_mut(gu.data_mut(), l * du, plan, |b0, slab| {
+            let mut vt = vec![0.0f32; du * l * d];
+            let mut t0 = b0 * l;
+            let mut k = b0;
+            let mut off = 0usize;
+            while off < slab.len() {
+                let len = l.min(n - t0);
+                transpose_dm(dmd, &mut vt, t0, len, d, du, l);
+                let gnext = &ghats_ref[(k + 1) * du * d..(k + 2) * du * d];
+                for c in 0..du {
+                    // fold the downstream carry gradient into the last row
+                    for s in 0..d {
+                        vt[c * l * d + (len - 1) * d + s] =
+                            dmd[((t0 + len - 1) * d + s) * du + c] + gnext[c * d + s];
+                    }
+                    let v = &vt[c * l * d..c * l * d + len * d];
+                    for j in 0..len {
+                        slab[off + j * du + c] = dot(&self.hflat[..(len - j) * d], &v[j * d..]);
+                    }
+                }
+                off += len * du;
+                t0 += len;
+                k += 1;
+            }
+        });
+        gu
+    }
+
+    /// Final state only (the eq. 25 analogue on the scan path): run the
+    /// carry chain without materializing intermediate rows.
+    /// u: (n, du) -> carryᵀ (du, d) — bit-identical to the last row of
+    /// [`apply`](Self::apply) (the chain evaluates the same expression).
+    pub fn apply_last(&self, u: &Tensor, carry0: Option<&[f32]>) -> Vec<f32> {
+        let (n, du) = (u.shape()[0], u.shape()[1]);
+        let (d, l) = (self.d, self.block);
+        let nb = self.nblocks(n);
+        let ud = u.data();
+        let dot = simd::dot_kernel();
+        // chunk-local last-row dots, parallel over chunks
+        let mut locl = vec![0.0f32; nb * du * d];
+        let plan = exec::plan_for(nb, n * d * du);
+        exec::parallel_rows_mut(&mut locl, du * d, plan, |k0, slab| {
+            let mut ut = vec![0.0f32; du * l];
+            for (kk, lrow) in slab.chunks_mut(du * d).enumerate() {
+                let t0 = (k0 + kk) * l;
+                let len = l.min(n - t0);
+                for c in 0..du {
+                    for j in 0..len {
+                        ut[c * l + j] = ud[(t0 + j) * du + c];
+                    }
+                }
+                for s in 0..d {
+                    let trow = &self.th[(s * l + len - 1) * l..(s * l + len - 1) * l + len];
+                    for c in 0..du {
+                        lrow[c * d + s] = dot(trow, &ut[c * l..c * l + len]);
+                    }
+                }
+            }
+        });
+        // sequential carry chain — identical expression to apply_from's
+        // phase 2 (locl holds what phase 1 wrote at the last row there)
+        let mut carry = vec![0.0f32; du * d];
+        if let Some(c0) = carry0 {
+            assert_eq!(c0.len(), du * d, "carry must be (du, d)");
+            carry.copy_from_slice(c0);
+        }
+        let mut next = vec![0.0f32; du * d];
+        for k in 0..nb {
+            let len = l.min(n - k * l);
+            let lrow = &locl[k * du * d..(k + 1) * du * d];
+            for c in 0..du {
+                for s in 0..d {
+                    let ap = &self.apows[((len - 1) * d + s) * d..((len - 1) * d + s + 1) * d];
+                    next[c * d + s] = lrow[c * d + s] + dot(ap, &carry[c * d..(c + 1) * d]);
+                }
+            }
+            std::mem::swap(&mut carry, &mut next);
+        }
+        carry
+    }
+
+    /// Adjoint of [`apply_last`](Self::apply_last) w.r.t. u: the
+    /// last-state gradient `ĝᵀ` (du, d) flows back through the reverse
+    /// carry chain; each chunk's input rows see it through the
+    /// time-reversed impulse response.  dlast: (du, d) -> gu: (n, du).
+    pub fn apply_last_adjoint(&self, n: usize, du: usize, dlast: &[f32]) -> Tensor {
+        let (d, l) = (self.d, self.block);
+        let nb = self.nblocks(n);
+        assert_eq!(dlast.len(), du * d);
+        let dot = simd::dot_kernel();
+        // reverse chain: ghats[k] = ĝ entering chunk k's *output* side,
+        // i.e. the gradient w.r.t. the state at chunk k's last row
+        let mut ghats = vec![0.0f32; (nb + 1) * du * d];
+        ghats[nb * du * d..].copy_from_slice(dlast);
+        for k in (0..nb).rev() {
+            let len = l.min(n - k * l);
+            let (gk, gnext) = ghats[k * du * d..(k + 2) * du * d].split_at_mut(du * d);
+            for c in 0..du {
+                for s2 in 0..d {
+                    let alt = &self.apt[(s2 * l + len - 1) * d..(s2 * l + len) * d];
+                    gk[c * d + s2] = dot(alt, &gnext[c * d..(c + 1) * d]);
+                }
+            }
+        }
+        let mut gu = Tensor::zeros(&[n, du]);
+        let plan = exec::plan_for(nb, n * d * du);
+        let ghats_ref = &ghats;
+        exec::parallel_rows_mut(gu.data_mut(), l * du, plan, |b0, slab| {
+            let mut t0 = b0 * l;
+            let mut k = b0;
+            let mut off = 0usize;
+            while off < slab.len() {
+                let len = l.min(n - t0);
+                let gnext = &ghats_ref[(k + 1) * du * d..(k + 2) * du * d];
+                for j in 0..len {
+                    for c in 0..du {
+                        slab[off + j * du + c] = dot(
+                            &self.hflat[(len - 1 - j) * d..(len - j) * d],
+                            &gnext[c * d..(c + 1) * d],
+                        );
+                    }
+                }
+                off += len * du;
+                t0 += len;
+                k += 1;
+            }
+        });
+        gu
+    }
+
+    /// Open a streaming session over this operator's tables.
+    pub fn stream(&self, du: usize) -> ScanStream<'_> {
+        ScanStream {
+            op: self,
+            du,
+            state: ScanState {
+                pos: 0,
+                carry: vec![0.0f32; du * self.d],
+                pending: vec![0.0f32; du * self.block],
+                pending_len: 0,
+            },
+        }
+    }
+
+    /// Resume a streaming session from a saved [`ScanState`].
+    pub fn resume(&self, du: usize, state: ScanState) -> ScanStream<'_> {
+        assert_eq!(state.carry.len(), du * self.d, "carry shape mismatch");
+        assert_eq!(state.pending.len(), du * self.block, "pending shape mismatch");
+        assert!(state.pending_len < self.block.max(1) + 1);
+        ScanStream { op: self, du, state }
+    }
+}
+
+/// dmᵀ scratch fill: `vt[c·L·d + i·d + s] = dm[t0+i, s, c]` — the
+/// contiguous per-channel (i, s) vector both adjoint dot families read.
+fn transpose_dm(dmd: &[f32], vt: &mut [f32], t0: usize, len: usize, d: usize, du: usize, l: usize) {
+    for c in 0..du {
+        for i in 0..len {
+            for s in 0..d {
+                vt[c * l * d + i * d + s] = dmd[((t0 + i) * d + s) * du + c];
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------- streaming
+
+/// Everything a streaming session needs to resume mid-sequence: the
+/// absolute position, the (du, d) carry, and the current partial chunk
+/// (the overlap-save tail).  At a chunk boundary `pending_len == 0` and
+/// the carry alone is the state — `d · du` floats per stream.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScanState {
+    /// timesteps consumed so far
+    pub pos: usize,
+    /// carryᵀ (du, d) row-major: the DN state after `pos` steps
+    pub carry: Vec<f32>,
+    /// uᵀ (du, L) row-major buffer of the current partial chunk
+    pub pending: Vec<f32>,
+    /// filled rows of `pending` (0 ≤ pending_len < L)
+    pub pending_len: usize,
+}
+
+/// Incremental evaluation of the chunked scan: push input rows in any
+/// granularity (single steps, odd-sized windows, whole chunks) and get
+/// the same bits the batch [`DnScanOperator::apply`] produces for the
+/// concatenated sequence.  Row `i` of a chunk depends only on the chunk
+/// prefix `u[0..=i]` and the entering carry, so each output row is
+/// emitted the moment its input arrives — nothing is deferred, and a
+/// [`ScanState`] save/restore at *any* point (including mid-chunk) is
+/// invisible in the output.
+pub struct ScanStream<'a> {
+    op: &'a DnScanOperator,
+    du: usize,
+    state: ScanState,
+}
+
+impl ScanStream<'_> {
+    /// Feed `k` rows (k, du); returns their memory states (k, d, du).
+    pub fn push(&mut self, u: &Tensor) -> Tensor {
+        let (k, du) = (u.shape()[0], u.shape()[1]);
+        assert_eq!(du, self.du, "stream built for du={}, got {du}", self.du);
+        let (d, l) = (self.op.d, self.op.block);
+        let ud = u.data();
+        let dot = simd::dot_kernel();
+        let mut out = Tensor::zeros(&[k, d, du]);
+        let od = out.data_mut();
+        for r in 0..k {
+            let i = self.state.pending_len;
+            for c in 0..du {
+                self.state.pending[c * l + i] = ud[r * du + c];
+            }
+            let orow = &mut od[r * d * du..(r + 1) * d * du];
+            for s in 0..d {
+                let trow = &self.op.th[(s * l + i) * l..(s * l + i) * l + i + 1];
+                let ap = &self.op.apows[(i * d + s) * d..(i * d + s + 1) * d];
+                for c in 0..du {
+                    // the canonical element: local dot + carry dot + add
+                    orow[s * du + c] = dot(trow, &self.state.pending[c * l..c * l + i + 1])
+                        + dot(ap, &self.state.carry[c * d..(c + 1) * d]);
+                }
+            }
+            self.state.pending_len += 1;
+            self.state.pos += 1;
+            if self.state.pending_len == l {
+                // chunk complete: the row just emitted is the new carry
+                for c in 0..du {
+                    for s in 0..d {
+                        self.state.carry[c * d + s] = orow[s * du + c];
+                    }
+                }
+                self.state.pending_len = 0;
+            }
+        }
+        out
+    }
+
+    /// Snapshot the resume state (see [`ScanState`]).
+    pub fn state(&self) -> ScanState {
+        self.state.clone()
+    }
+}
+
+// ------------------------------------------------------------ dispatch
+
+/// The DN operator a parallel layer evaluates its memory through —
+/// selected once at layer construction from the `PLMU_SCAN` knob and
+/// carried through `Graph::dn_conv` / `Graph::dn_last_scan`, so both
+/// coordinators (sync and `--pipeline`) run either path unchanged.
+pub enum DnOperator {
+    Fft(DnFftOperator),
+    /// Arc'd so the graph's last-state scan op (`Graph::dn_last_scan`)
+    /// and the layer share one set of block tables.
+    Scan(Arc<DnScanOperator>),
+}
+
+impl DnOperator {
+    /// Build the operator the active [`mode`] selects.
+    pub fn for_mode(dn: &DelayNetwork, n: usize) -> DnOperator {
+        match mode() {
+            ScanMode::Fft => DnOperator::Fft(DnFftOperator::new(dn, n)),
+            ScanMode::Scan { block } => {
+                DnOperator::Scan(Arc::new(DnScanOperator::new(dn, n, block)))
+            }
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        match self {
+            DnOperator::Fft(op) => op.n,
+            DnOperator::Scan(op) => op.n,
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        match self {
+            DnOperator::Fft(op) => op.d,
+            DnOperator::Scan(op) => op.d,
+        }
+    }
+
+    /// u: (n, du) -> m: (n, d, du).
+    pub fn apply(&self, u: &Tensor) -> Tensor {
+        match self {
+            DnOperator::Fft(op) => op.apply(u),
+            DnOperator::Scan(op) => op.apply(u),
+        }
+    }
+
+    /// dm: (n, d, du) -> gu: (n, du).
+    pub fn apply_adjoint(&self, dm: &Tensor) -> Tensor {
+        match self {
+            DnOperator::Fft(op) => op.apply_adjoint(dm),
+            DnOperator::Scan(op) => op.apply_adjoint(dm),
+        }
+    }
+
+    /// The scan operator, when that's what the knob built.
+    pub fn as_scan(&self) -> Option<&Arc<DnScanOperator>> {
+        match self {
+            DnOperator::Fft(_) => None,
+            DnOperator::Scan(op) => Some(op),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use std::sync::Mutex;
+
+    /// The knob is process-global; serialize tests that flip it.
+    static KNOB: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn parse_mode_accepts_the_three_forms() {
+        assert_eq!(parse_mode("fft").unwrap(), ScanMode::Fft);
+        assert_eq!(parse_mode("").unwrap(), ScanMode::Fft);
+        assert_eq!(parse_mode("scan").unwrap(), ScanMode::Scan { block: DEFAULT_BLOCK });
+        assert_eq!(parse_mode("scan:16").unwrap(), ScanMode::Scan { block: 16 });
+        assert!(parse_mode("scan:0").is_err());
+        assert!(parse_mode("scan:x").is_err());
+        assert!(parse_mode("dft").is_err());
+    }
+
+    #[test]
+    fn knob_roundtrip_and_routing() {
+        let _g = KNOB.lock().unwrap();
+        let was = mode();
+        let dn = DelayNetwork::new(4, 12.0);
+        set_mode(ScanMode::Scan { block: 8 });
+        assert_eq!(mode(), ScanMode::Scan { block: 8 });
+        assert!(DnOperator::for_mode(&dn, 16).as_scan().is_some());
+        set_mode(ScanMode::Fft);
+        assert_eq!(mode(), ScanMode::Fft);
+        assert!(DnOperator::for_mode(&dn, 16).as_scan().is_none());
+        set_mode(was);
+    }
+
+    #[test]
+    fn scan_matches_sequential_to_tolerance() {
+        // the cheap smoke version of the cross-strategy check; the
+        // bit-level harness lives in rust/tests/scan_equivalence.rs
+        for &(n, d, du, block) in
+            &[(32usize, 8usize, 1usize, 8usize), (33, 6, 2, 8), (17, 4, 3, 5), (8, 4, 2, 16)]
+        {
+            let dn = DelayNetwork::new(d, n.max(4) as f64);
+            let mut rng = Rng::new((n + d + block) as u64);
+            let u = Tensor::randn(&[n, du], 1.0, &mut rng);
+            let op = DnScanOperator::new(&dn, n, block);
+            let err = dn.scan_sequential(&u).max_abs_diff(&op.apply(&u));
+            assert!(err < 2e-4, "n={n} d={d} du={du} block={block}: err={err}");
+        }
+    }
+
+    #[test]
+    fn apply_last_is_the_last_row_of_apply() {
+        for &(n, d, du, block) in &[(32usize, 8usize, 2usize, 8usize), (17, 4, 1, 5), (5, 3, 2, 8)]
+        {
+            let dn = DelayNetwork::new(d, n.max(4) as f64);
+            let mut rng = Rng::new(n as u64);
+            let u = Tensor::randn(&[n, du], 1.0, &mut rng);
+            let op = DnScanOperator::new(&dn, n, block);
+            let m = op.apply(&u);
+            let last = op.apply_last(&u, None);
+            for c in 0..du {
+                for s in 0..d {
+                    assert_eq!(
+                        last[c * d + s].to_bits(),
+                        m.data()[((n - 1) * d + s) * du + c].to_bits(),
+                        "n={n} block={block} s={s} c={c}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stream_matches_batch_bitwise() {
+        let (n, d, du, block) = (29usize, 5usize, 2usize, 8usize);
+        let dn = DelayNetwork::new(d, 24.0);
+        let mut rng = Rng::new(3);
+        let u = Tensor::randn(&[n, du], 1.0, &mut rng);
+        let op = DnScanOperator::new(&dn, n, block);
+        let whole = op.apply(&u);
+        let mut stream = op.stream(du);
+        let mut rows = Vec::new();
+        // deliberately ragged pushes: 1, 2, 3, ... rows at a time
+        let mut lo = 0;
+        let mut step = 1;
+        while lo < n {
+            let hi = (lo + step).min(n);
+            let part = stream.push(&u.slice_rows(lo, hi));
+            rows.extend_from_slice(part.data());
+            lo = hi;
+            step += 1;
+        }
+        assert_eq!(rows.len(), whole.data().len());
+        for (i, (a, b)) in rows.iter().zip(whole.data()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "row element {i}");
+        }
+        assert_eq!(stream.state().pos, n);
+    }
+
+    #[test]
+    fn adjoint_is_transpose_of_forward() {
+        // <apply(u), w> == <u, apply_adjoint(w)> in f64 accumulation
+        let (n, d, du, block) = (24usize, 6usize, 2usize, 7usize);
+        let dn = DelayNetwork::new(d, 20.0);
+        let op = DnScanOperator::new(&dn, n, block);
+        let mut rng = Rng::new(10);
+        let u = Tensor::randn(&[n, du], 1.0, &mut rng);
+        let w = Tensor::randn(&[n, d, du], 1.0, &mut rng);
+        let lhs: f64 = op
+            .apply(&u)
+            .data()
+            .iter()
+            .zip(w.data())
+            .map(|(a, b)| (*a as f64) * (*b as f64))
+            .sum();
+        let rhs: f64 = u
+            .data()
+            .iter()
+            .zip(op.apply_adjoint(&w).data())
+            .map(|(a, b)| (*a as f64) * (*b as f64))
+            .sum();
+        assert!((lhs - rhs).abs() < 1e-2 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn last_adjoint_is_transpose_of_apply_last() {
+        let (n, d, du, block) = (21usize, 5usize, 2usize, 6usize);
+        let dn = DelayNetwork::new(d, 18.0);
+        let op = DnScanOperator::new(&dn, n, block);
+        let mut rng = Rng::new(11);
+        let u = Tensor::randn(&[n, du], 1.0, &mut rng);
+        let mut w = vec![0.0f32; du * d];
+        for v in w.iter_mut() {
+            *v = rng.normal() as f32;
+        }
+        let last = op.apply_last(&u, None);
+        let lhs: f64 = last.iter().zip(&w).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        let gu = op.apply_last_adjoint(n, du, &w);
+        let rhs: f64 =
+            u.data().iter().zip(gu.data()).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        assert!((lhs - rhs).abs() < 1e-2 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+    }
+}

@@ -14,13 +14,15 @@
 //!
 //! [`LmuParallelLayer`]'s compute runs on the thread-parallel substrate
 //! end to end: the encoder/output matmuls, the batched DN convolution
-//! (`Graph::dn_conv` → [`DnFftOperator`]), and the eq. 25 last-state
-//! matmul all dispatch through `crate::exec`, while the sequential/
-//! original cells remain the serial references.  Serial and parallel
-//! execution are bit-exact, so `threads` never changes a result.
+//! (`Graph::dn_conv` → [`DnOperator`], FFT or chunked scan per the
+//! `PLMU_SCAN` knob), and the last-state path (eq. 25 matmul or the
+//! scan carry chain) all dispatch through `crate::exec`, while the
+//! sequential/original cells remain the serial references.  Serial and
+//! parallel execution are bit-exact, so `threads` never changes a
+//! result.
 
 use crate::autograd::{Act, Graph, NodeId, ParamId, ParamStore};
-use crate::dn::{DelayNetwork, DnFftOperator};
+use crate::dn::{DelayNetwork, DnOperator, DnScanOperator};
 use crate::exec;
 use crate::tensor::Tensor;
 use crate::util::Rng;
@@ -73,10 +75,13 @@ impl LmuParams {
 // ---------------------------------------------------------------------------
 
 /// Our model with the DN evaluated in parallel over the sequence.
+/// The DN operator is whichever path the `PLMU_SCAN` knob selects at
+/// construction time — FFT (eq. 26) or the chunked scan — and both the
+/// all-states and last-state forwards route through it.
 pub struct LmuParallelLayer {
     pub spec: LmuSpec,
     pub params: LmuParams,
-    dn_op: Arc<DnFftOperator>,
+    dn_op: Arc<DnOperator>,
     /// time-reversed impulse response for the eq. 25 last-state path
     hrev: Tensor,
     pub n: usize,
@@ -85,7 +90,7 @@ pub struct LmuParallelLayer {
 impl LmuParallelLayer {
     pub fn new(spec: LmuSpec, n: usize, store: &mut ParamStore, rng: &mut Rng, prefix: &str) -> Self {
         let dn = DelayNetwork::new(spec.d, spec.theta);
-        let dn_op = Arc::new(DnFftOperator::new(&dn, n));
+        let dn_op = Arc::new(DnOperator::for_mode(&dn, n));
         let h = dn.impulse_response(n);
         let d = spec.d;
         // time-reversal is a pure row permutation — partition output rows
@@ -128,8 +133,10 @@ impl LmuParallelLayer {
         self.output(g, store, m, x)
     }
 
-    /// Last-state forward (eq. 25 path, return_sequences=False):
-    /// x (B·n, dx), x_last (B, dx) -> o (B, hidden).
+    /// Last-state forward (return_sequences=False): x (B·n, dx),
+    /// x_last (B, dx) -> o (B, hidden).  Routes by the operator the
+    /// knob built: the eq. 25 hrev-matmul under FFT mode, the carry
+    /// chain of [`DnScanOperator::apply_last`] under scan mode.
     pub fn forward_last(
         &self,
         g: &mut Graph,
@@ -139,7 +146,32 @@ impl LmuParallelLayer {
         batch: usize,
     ) -> NodeId {
         let u = self.encode(g, store, x);
-        let m = g.dn_last(u, &self.hrev, batch); // (B, du·d)
+        let m = match self.dn_op.as_scan() {
+            Some(scan) => g.dn_last_scan(u, scan.clone(), batch, None),
+            None => g.dn_last(u, &self.hrev, batch), // (B, du·d)
+        };
+        self.output(g, store, m, x_last)
+    }
+
+    /// Last-state forward resuming from an explicit DN carry (B, du·d)
+    /// — the streaming trainer's final-window pass.  Scan mode only:
+    /// the FFT operator has no incremental state to resume from.
+    pub fn forward_last_from(
+        &self,
+        g: &mut Graph,
+        store: &ParamStore,
+        x: NodeId,
+        x_last: NodeId,
+        batch: usize,
+        carry: &Tensor,
+    ) -> NodeId {
+        let scan = self
+            .dn_op
+            .as_scan()
+            .expect("forward_last_from requires PLMU_SCAN=scan (the FFT path cannot stream)")
+            .clone();
+        let u = self.encode(g, store, x);
+        let m = g.dn_last_scan(u, scan, batch, Some(carry));
         self.output(g, store, m, x_last)
     }
 
@@ -147,6 +179,25 @@ impl LmuParallelLayer {
     /// output map — m_n of the raw input, (B, du·d) with du = dx.
     pub fn dn_only_last(&self, g: &mut Graph, x: NodeId, batch: usize) -> NodeId {
         g.dn_last(x, &self.hrev, batch)
+    }
+
+    /// The DN operator this layer routes through (knob-selected at
+    /// construction).
+    pub fn dn_operator(&self) -> &Arc<DnOperator> {
+        &self.dn_op
+    }
+
+    /// The scan operator, when `PLMU_SCAN=scan` built one.
+    pub fn scan_operator(&self) -> Option<&Arc<DnScanOperator>> {
+        self.dn_op.as_scan()
+    }
+
+    /// Value-only encoder (eq. 18), no tape: the exact kernel the graph
+    /// encode records (`Tensor::affine_act`), so streamed non-final
+    /// windows see bit-identical u values.
+    pub fn encode_values(&self, store: &ParamStore, x: &Tensor) -> Tensor {
+        let act = if self.spec.nonlin_u { Some(Act::Tanh) } else { None };
+        x.affine_act(store.get(self.params.ux), store.get(self.params.bu), act)
     }
 }
 

@@ -61,6 +61,12 @@ fn main() -> Result<()> {
              fused and unfused paths are bit-identical — this exists for debugging \
              and A/B timing",
         )
+        .opt(
+            "scan",
+            "",
+            "DN evaluation path: fft | scan | scan:<block> (PLMU_SCAN equivalent; \
+             empty = inherit env / config / default fft)",
+        )
         .opt("sessions", "8", "serve: concurrent sessions")
         .opt("tokens", "64", "serve: tokens per session")
         .opt("replicas", "1", "serve: engine replicas")
@@ -76,6 +82,16 @@ fn main() -> Result<()> {
     }
     if args.get_flag("no-fusion") {
         plmu::fusion::set_enabled(false);
+    }
+    let scan = args.get("scan");
+    if !scan.is_empty() {
+        match plmu::dn::scan::parse_mode(&scan) {
+            Ok(mode) => plmu::dn::scan::set_mode(mode),
+            Err(e) => {
+                eprintln!("bad --scan value: {e}");
+                std::process::exit(2);
+            }
+        }
     }
 
     let cmd = args.positionals().first().map(|s| s.as_str()).unwrap_or("info");
@@ -159,6 +175,7 @@ fn train(args: &Args) -> Result<()> {
     if let Some(t) = tc.as_ref() {
         t.apply_threads(); // [train] threads wins over --threads
         t.apply_fusion();
+        t.apply_scan(); // [train] scan wins over --scan / PLMU_SCAN
     }
     println!("exec substrate: {} worker thread(s)", plmu::exec::threads());
     let epochs = tc.as_ref().map(|t| t.epochs).unwrap_or(args.get_usize("epochs"));
@@ -234,6 +251,7 @@ fn train_dp(args: &Args) -> Result<()> {
         let t = plmu::config::TrainConfig::from_config(&c, "train");
         t.apply_threads(); // [train] threads wins over --threads
         t.apply_fusion();
+        t.apply_scan(); // [train] scan wins over --scan / PLMU_SCAN
         pipeline = pipeline || t.pipeline;
     }
     let workers = args.get_usize("workers");

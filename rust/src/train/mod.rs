@@ -95,6 +95,133 @@ pub fn train_step(
     })
 }
 
+/// Sample-major window gather: rows [lo, hi) of every sample in a
+/// (B·n, dx) tensor, re-packed (B·(hi−lo), dx).
+fn gather_window(x: &crate::tensor::Tensor, batch: usize, n: usize, lo: usize, hi: usize) -> crate::tensor::Tensor {
+    let dx = x.cols();
+    let w = hi - lo;
+    let mut out = crate::tensor::Tensor::zeros(&[batch * w, dx]);
+    for b in 0..batch {
+        out.data_mut()[b * w * dx..(b + 1) * w * dx]
+            .copy_from_slice(&x.data()[(b * n + lo) * dx..(b * n + hi) * dx]);
+    }
+    out
+}
+
+/// One truncated-BPTT optimizer step over an arbitrarily long batch:
+/// non-final windows advance the DN carry values-only (bounded memory —
+/// only (B, du·d) state survives a window), the final window gets the
+/// tape and the gradients.  Requires `PLMU_SCAN=scan`; `window` is
+/// rounded up to a multiple of the scan block so streamed chunk seams
+/// coincide with the whole-sequence evaluation's, which makes a window
+/// covering the full sequence bit-identical to [`train_step`].
+#[allow(clippy::too_many_arguments)]
+pub fn train_step_streaming(
+    model: &SeqClassifier,
+    store: &mut ParamStore,
+    opt: &mut dyn Optimizer,
+    g: &mut Graph,
+    arena: &mut Arena,
+    batch: &Batch,
+    window: usize,
+    grad_clip: Option<f32>,
+) -> f32 {
+    let b = batch.batch_size;
+    let n = model.seq_len;
+    let l = model
+        .scan_block()
+        .expect("streaming training requires PLMU_SCAN=scan (env, [train] scan, or --scan)");
+    let w = window.max(1).div_ceil(l) * l;
+    let labels = match &batch.targets {
+        Targets::Labels(y) => y.clone(),
+        _ => panic!("streaming trainer needs labels"),
+    };
+    let mut carry = model.carry_zeros(b);
+    let mut lo = 0usize;
+    while n - lo > w {
+        let xw = gather_window(&batch.x, b, n, lo, lo + w);
+        model.advance_carry(store, &xw, b, &mut carry);
+        lo += w;
+    }
+    let xw = gather_window(&batch.x, b, n, lo, n);
+    arena::scope(arena, || {
+        g.reset();
+        let loss = model.window_loss(g, store, &xw, &labels, b, &carry);
+        g.backward(loss);
+        let lv = g.value(loss).item();
+        let mut grads = g.param_grads();
+        if let Some(c) = grad_clip {
+            clip_global_norm(&mut grads, c);
+        }
+        opt.step(store, &grads);
+        lv
+    })
+}
+
+/// Train a classifier with truncated-BPTT streaming windows (the
+/// overlap-save mode of the chunked scan): same epoch loop, logging,
+/// and eval as [`fit`], but each step runs [`train_step_streaming`]
+/// with the given window length.  With `window >= seq_len` every step
+/// degenerates to one whole-sequence window from a zero carry, and the
+/// run is bit-identical to [`fit`] under the same knobs.
+pub fn fit_streaming(
+    model: &SeqClassifier,
+    store: &mut ParamStore,
+    opt: &mut dyn Optimizer,
+    train: &SeqDataset,
+    eval: Option<&SeqDataset>,
+    opts: &FitOptions,
+    window: usize,
+) -> TrainResult {
+    let mut rng = Rng::new(opts.seed);
+    let mut epochs = Vec::new();
+    let mut step_losses = Vec::new();
+    let mut g = Graph::new();
+    let mut arena = Arena::new();
+    for epoch in 0..opts.epochs {
+        opt.set_lr(opts.schedule.lr_at(epoch));
+        let timer = Timer::start();
+        let mut running = crate::metrics::Running::new();
+        let mut step = 0usize;
+        for batch in BatchIter::new(train, opts.batch_size, &mut rng) {
+            let lv = train_step_streaming(
+                model,
+                store,
+                opt,
+                &mut g,
+                &mut arena,
+                &batch,
+                window,
+                opts.grad_clip,
+            );
+            running.push(lv as f64);
+            step_losses.push(lv);
+            step += 1;
+            if opts.verbose && opts.log_every > 0 && step % opts.log_every == 0 {
+                println!("    epoch {epoch} step {step}: loss {lv:.4}");
+            }
+        }
+        let eval_metric = eval.map(|ds| evaluate(model, store, ds, opts.batch_size));
+        let log = EpochLog {
+            epoch,
+            mean_loss: running.mean(),
+            wall_secs: timer.elapsed(),
+            eval_metric,
+        };
+        if opts.verbose {
+            match log.eval_metric {
+                Some(m) => println!(
+                    "  epoch {epoch}: loss {:.4}, eval {m:.4}, {:.1}s",
+                    log.mean_loss, log.wall_secs
+                ),
+                None => println!("  epoch {epoch}: loss {:.4}, {:.1}s", log.mean_loss, log.wall_secs),
+            }
+        }
+        epochs.push(log);
+    }
+    TrainResult { epochs, step_losses }
+}
+
 /// Train `model` on `train`, optionally evaluating on `eval` each epoch.
 pub fn fit(
     model: &dyn TrainableModel,

@@ -105,6 +105,85 @@ impl SeqClassifier {
         let f = self.features(g, store, batch);
         self.head.forward(g, store, f)
     }
+
+    // ------------------------------------------------------- streaming
+
+    /// The scan chunk length L when this model can stream (parallel
+    /// backbone under `PLMU_SCAN=scan`), else None.
+    pub fn scan_block(&self) -> Option<usize> {
+        match &self.backbone {
+            Backbone::Parallel(layer) => layer.scan_operator().map(|op| op.block),
+            _ => None,
+        }
+    }
+
+    fn parallel_layer(&self) -> &LmuParallelLayer {
+        match &self.backbone {
+            Backbone::Parallel(layer) => layer,
+            _ => panic!("streaming training requires the parallel (scan) backbone"),
+        }
+    }
+
+    /// A zero DN carry (B, du·d) to start a stream from.
+    pub fn carry_zeros(&self, batch: usize) -> Tensor {
+        let spec = &self.parallel_layer().spec;
+        Tensor::zeros(&[batch, spec.du * spec.d])
+    }
+
+    /// Advance the DN carry (B, du·d) through a non-final window, values
+    /// only — the TBPTT truncation: no tape, no gradients, just the
+    /// d-dim state per channel.  `x_window` is sample-major (B·win, dx);
+    /// `win` must be a multiple of the scan block so the streamed chunk
+    /// seams land exactly where the whole-sequence evaluation puts them.
+    pub fn advance_carry(
+        &self,
+        store: &ParamStore,
+        x_window: &Tensor,
+        batch: usize,
+        carry: &mut Tensor,
+    ) {
+        let layer = self.parallel_layer();
+        let scan =
+            layer.scan_operator().expect("streaming training requires PLMU_SCAN=scan").clone();
+        assert_eq!(x_window.rows() % batch, 0);
+        let win = x_window.rows() / batch;
+        assert_eq!(
+            win % scan.block,
+            0,
+            "non-final stream windows must be a multiple of the scan block {}",
+            scan.block
+        );
+        // the exact encoder kernel the graph path records
+        let u = layer.encode_values(store, x_window); // (B·win, du)
+        let dud = carry.cols();
+        for b in 0..batch {
+            let u_b = u.slice_rows(b * win, (b + 1) * win);
+            let c0 = carry.data()[b * dud..(b + 1) * dud].to_vec();
+            let next = scan.apply_last(&u_b, Some(&c0));
+            carry.data_mut()[b * dud..(b + 1) * dud].copy_from_slice(&next);
+        }
+    }
+
+    /// Loss over the final stream window, resuming the DN from `carry`
+    /// (B, du·d): the only window that gets a tape and gradients.
+    pub fn window_loss(
+        &self,
+        g: &mut Graph,
+        store: &ParamStore,
+        x_window: &Tensor,
+        labels: &[usize],
+        batch: usize,
+        carry: &Tensor,
+    ) -> NodeId {
+        let layer = self.parallel_layer();
+        assert_eq!(x_window.rows() % batch, 0);
+        let win = x_window.rows() / batch;
+        let x = g.input(x_window.clone());
+        let xl = g.input(last_steps(x_window, batch, win));
+        let o = layer.forward_last_from(g, store, x, xl, batch, carry);
+        let logits = self.head.forward(g, store, o);
+        g.softmax_xent(logits, labels)
+    }
 }
 
 impl TrainableModel for SeqClassifier {
