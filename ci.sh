@@ -28,6 +28,13 @@
 #                BENCH_*.json artifact (plmu bench-check): required keys,
 #                sane timings — a bench refactor cannot silently emit an
 #                empty perf record
+#   analyze      the static-analysis gate: plmu analyze (tape verifier,
+#                arena alias/liveness replay, exec disjointness + budget
+#                audit over every model family x DN path at
+#                PLMU_VERIFY=2), plmu lint-src (source conformance),
+#                the seeded-defect suite, and a train-dp fingerprint
+#                byte-diff across PLMU_VERIFY in {0, 2} proving the
+#                instrumentation never touches the math
 set -uo pipefail
 cd "$(dirname "$0")"
 
@@ -135,6 +142,39 @@ stage_bench() {
         BENCH_fusion.json BENCH_scan.json
 }
 
+stage_analyze() {
+    cargo build --release || return 1
+    echo "-- plmu analyze (tape + arena + exec audits, PLMU_VERIFY=2) --"
+    ./target/release/plmu analyze || return 1
+    echo "-- plmu lint-src (source conformance) --"
+    ./target/release/plmu lint-src rust/src || return 1
+    echo "-- seeded-defect suite --"
+    cargo test -q --test analyze_defects || return 1
+    # the verify hooks must never change the math: the canonical train-dp
+    # fingerprint is byte-diffed across PLMU_VERIFY in {0, 2}
+    local ref_fp out fp
+    ref_fp=""
+    for v in 0 2; do
+        out=$(PLMU_VERIFY=$v ./target/release/plmu train-dp \
+            --workers 2 --epochs 1 --examples 32 --side 8 --batch 8) || return 1
+        fp=$(printf '%s\n' "$out" | grep '^train fingerprint:')
+        if [ -z "$fp" ]; then
+            echo "no 'train fingerprint:' line in train-dp output"
+            return 1
+        fi
+        echo "   PLMU_VERIFY=$v -> $fp"
+        if [ -z "$ref_fp" ]; then
+            ref_fp="$fp"
+        elif [ "$fp" != "$ref_fp" ]; then
+            echo "VERIFY-LEVEL MISMATCH: PLMU_VERIFY=$v changes the training fingerprint"
+            echo "  reference: $ref_fp"
+            echo "  this run:  $fp"
+            return 1
+        fi
+    done
+    echo "fingerprints byte-identical across PLMU_VERIFY in {0, 2}"
+}
+
 # ----------------------------------------------------------------- driver
 
 run_stage() {
@@ -151,7 +191,7 @@ run_stage() {
     STAGE_RESULTS+=("$result")
 }
 
-ALL_STAGES=(build test lint docs determinism bench)
+ALL_STAGES=(build test lint docs determinism bench analyze)
 
 requested=("$@")
 if [ ${#requested[@]} -eq 0 ]; then
@@ -162,7 +202,7 @@ to_run=()
 for arg in "${requested[@]}"; do
     case "$arg" in
         all) to_run+=("${ALL_STAGES[@]}") ;;
-        build|test|lint|docs|determinism|bench) to_run+=("$arg") ;;
+        build|test|lint|docs|determinism|bench|analyze) to_run+=("$arg") ;;
         *)
             echo "unknown stage '$arg' (stages: ${ALL_STAGES[*]} | all)" >&2
             exit 2

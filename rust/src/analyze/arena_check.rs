@@ -1,0 +1,251 @@
+//! Pass 2: arena alias/liveness analysis.
+//!
+//! At `PLMU_VERIFY=2` every [`crate::exec::arena::Arena`] records a
+//! buffer-identity event per `take` (issue) and per `put`/`release`
+//! (reclaim) — the buffer's pointer value as an opaque identity, its
+//! capacity in bytes, and for reclaims which arena (if any) originally
+//! issued the buffer.  [`check_arena_log`] replays that stream and
+//! proves the liveness discipline the recycler's safety rests on:
+//!
+//!  * **no aliased issue** — a buffer identity is never issued while a
+//!    previous issue of the same identity is still live (two `Tensor`s
+//!    believing they own the same allocation);
+//!  * **no double-release / use-after-release** — a reclaim of an
+//!    identity that is not currently live means either the same buffer
+//!    was released twice or a buffer kept being used after its identity
+//!    was re-issued to someone else;
+//!  * **no cross-arena release** — a reclaim whose issuing arena is a
+//!    *different* arena: the `--pipeline` hazard where two arenas are in
+//!    flight and a tensor recorded under one is dropped under the
+//!    other, silently migrating buffers between free lists.  (Reclaims
+//!    with no issuing arena are legitimate: foreign `Vec`s — e.g. a
+//!    tensor built outside any scope — are adopted by design.)
+//!
+//! The replay also computes a **peak-liveness memory plan** — the high-
+//! water mark of concurrently-live issued bytes — and cross-checks the
+//! event stream against the arena's own [`ArenaStats`] counters:
+//! issues = hits + misses, fresh issues = misses, and peak-live bytes
+//! bounded by the fresh bytes the arena ever allocated (recycling can
+//! only reduce the footprint, never grow it).
+
+use super::{Finding, Pass};
+use crate::exec::arena::ArenaStats;
+use std::collections::HashMap;
+
+/// One buffer-identity event, recorded by the instrumented arena at
+/// `PLMU_VERIFY=2`.  `buf` is the buffer's pointer value — an opaque
+/// identity, never dereferenced.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArenaEvent {
+    /// `take` handed out a buffer: `fresh` = newly allocated (miss),
+    /// otherwise recycled off a free list (hit).  `bytes` = capacity.
+    Issue { buf: usize, bytes: usize, fresh: bool },
+    /// `put`/`release` got a buffer back.  `issued_by` = the arena that
+    /// the identity registry says issued it (`None` = foreign buffer,
+    /// adopted silently by design).
+    Reclaim { buf: usize, bytes: usize, issued_by: Option<u64> },
+}
+
+/// Replay result: findings plus the memory plan.
+#[derive(Debug, Default)]
+pub struct ArenaReport {
+    pub findings: Vec<Finding>,
+    /// high-water mark of concurrently-live issued bytes
+    pub peak_live_bytes: usize,
+    /// issued-and-never-reclaimed identities at end of log (not a
+    /// finding by itself: tensors legitimately outlive a scope)
+    pub leaked: usize,
+}
+
+/// Replay `events` (one arena's log, in order) and check the liveness
+/// discipline; `stats` (when given) is cross-checked against the event
+/// stream.  `arena_id` is only used for provenance in messages.
+pub fn check_arena_log(arena_id: u64, events: &[ArenaEvent], stats: Option<&ArenaStats>) -> ArenaReport {
+    let mut report = ArenaReport::default();
+    // identity -> bytes for currently-live issues
+    let mut live: HashMap<usize, usize> = HashMap::new();
+    let mut live_bytes = 0usize;
+    let (mut issues, mut fresh_issues, mut reclaims) = (0u64, 0u64, 0u64);
+
+    for (i, ev) in events.iter().enumerate() {
+        match *ev {
+            ArenaEvent::Issue { buf, bytes, fresh } => {
+                issues += 1;
+                fresh_issues += fresh as u64;
+                if let Some(prev) = live.insert(buf, bytes) {
+                    report.findings.push(Finding::new(
+                        Pass::Arena,
+                        format!(
+                            "arena {arena_id} event {i}: buffer {buf:#x} ({bytes} B) issued while a \
+                             previous issue ({prev} B) is still live — aliased ownership"
+                        ),
+                    ));
+                    live_bytes -= prev;
+                }
+                live_bytes += bytes;
+                report.peak_live_bytes = report.peak_live_bytes.max(live_bytes);
+            }
+            ArenaEvent::Reclaim { buf, bytes, issued_by } => {
+                reclaims += 1;
+                match issued_by {
+                    Some(owner) if owner != arena_id => {
+                        report.findings.push(Finding::new(
+                            Pass::Arena,
+                            format!(
+                                "arena {arena_id} event {i}: buffer {buf:#x} ({bytes} B) released here \
+                                 but issued by arena {owner} — cross-arena release (two arenas in \
+                                 flight under --pipeline?)"
+                            ),
+                        ));
+                    }
+                    Some(_) => match live.remove(&buf) {
+                        Some(b) => live_bytes -= b,
+                        None => {
+                            report.findings.push(Finding::new(
+                                Pass::Arena,
+                                format!(
+                                    "arena {arena_id} event {i}: buffer {buf:#x} ({bytes} B) reclaimed \
+                                     while not live — double-release, or use after its identity was \
+                                     re-issued"
+                                ),
+                            ));
+                        }
+                    },
+                    // foreign buffer adopted — by-design flow, nothing to check
+                    None => {
+                        if let Some(b) = live.remove(&buf) {
+                            live_bytes -= b;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    report.leaked = live.len();
+
+    if let Some(s) = stats {
+        if issues != s.hits + s.misses {
+            report.findings.push(Finding::new(
+                Pass::Arena,
+                format!(
+                    "arena {arena_id}: {issues} issue events but stats say hits {} + misses {} = {}",
+                    s.hits,
+                    s.misses,
+                    s.hits + s.misses
+                ),
+            ));
+        }
+        if fresh_issues != s.misses {
+            report.findings.push(Finding::new(
+                Pass::Arena,
+                format!("arena {arena_id}: {fresh_issues} fresh issues but stats count {} misses", s.misses),
+            ));
+        }
+        if reclaims != s.recycled + s.dropped {
+            report.findings.push(Finding::new(
+                Pass::Arena,
+                format!(
+                    "arena {arena_id}: {reclaims} reclaim events but stats say recycled {} + dropped {} = {}",
+                    s.recycled,
+                    s.dropped,
+                    s.recycled + s.dropped
+                ),
+            ));
+        }
+        if report.peak_live_bytes as u64 > s.fresh_bytes {
+            report.findings.push(Finding::new(
+                Pass::Arena,
+                format!(
+                    "arena {arena_id}: peak-live plan {} B exceeds fresh allocation {} B — \
+                     liveness replay and allocator disagree",
+                    report.peak_live_bytes, s.fresh_bytes
+                ),
+            ));
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const A: u64 = 1;
+
+    fn issue(buf: usize, bytes: usize, fresh: bool) -> ArenaEvent {
+        ArenaEvent::Issue { buf, bytes, fresh }
+    }
+
+    fn reclaim(buf: usize, bytes: usize, issued_by: Option<u64>) -> ArenaEvent {
+        ArenaEvent::Reclaim { buf, bytes, issued_by }
+    }
+
+    #[test]
+    fn clean_cycle_no_findings_and_peak_plan() {
+        let events = [
+            issue(0x100, 64, true),
+            issue(0x200, 128, true),
+            reclaim(0x100, 64, Some(A)),
+            issue(0x100, 64, false), // recycled
+            reclaim(0x100, 64, Some(A)),
+            reclaim(0x200, 128, Some(A)),
+        ];
+        let r = check_arena_log(A, &events, None);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        assert_eq!(r.peak_live_bytes, 192);
+        assert_eq!(r.leaked, 0);
+    }
+
+    #[test]
+    fn double_release_is_caught() {
+        let events = [
+            issue(0x100, 64, true),
+            reclaim(0x100, 64, Some(A)),
+            reclaim(0x100, 64, Some(A)),
+        ];
+        let r = check_arena_log(A, &events, None);
+        assert_eq!(r.findings.len(), 1);
+        assert!(r.findings[0].detail.contains("double-release"), "{}", r.findings[0]);
+    }
+
+    #[test]
+    fn aliased_issue_is_caught() {
+        let events = [issue(0x100, 64, true), issue(0x100, 64, false)];
+        let r = check_arena_log(A, &events, None);
+        assert_eq!(r.findings.len(), 1);
+        assert!(r.findings[0].detail.contains("aliased"), "{}", r.findings[0]);
+    }
+
+    #[test]
+    fn cross_arena_release_is_caught() {
+        let events = [reclaim(0x300, 32, Some(7))];
+        let r = check_arena_log(A, &events, None);
+        assert_eq!(r.findings.len(), 1);
+        assert!(r.findings[0].detail.contains("cross-arena"), "{}", r.findings[0]);
+    }
+
+    #[test]
+    fn foreign_adoption_is_silent() {
+        let r = check_arena_log(A, &[reclaim(0x400, 16, None)], None);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn stats_cross_check() {
+        let events = [issue(0x100, 64, true), reclaim(0x100, 64, Some(A)), issue(0x100, 64, false)];
+        let good = ArenaStats { hits: 1, misses: 1, fresh_bytes: 64, recycled: 1, dropped: 0 };
+        assert!(check_arena_log(A, &events, Some(&good)).findings.is_empty());
+        let bad = ArenaStats { hits: 5, misses: 1, fresh_bytes: 64, recycled: 1, dropped: 0 };
+        let r = check_arena_log(A, &events, Some(&bad));
+        assert!(!r.findings.is_empty());
+        assert!(r.findings[0].detail.contains("stats"), "{}", r.findings[0]);
+    }
+
+    #[test]
+    fn peak_exceeding_fresh_bytes_is_flagged() {
+        let events = [issue(0x100, 4096, true)];
+        let s = ArenaStats { hits: 0, misses: 1, fresh_bytes: 64, recycled: 0, dropped: 0 };
+        let r = check_arena_log(A, &events, Some(&s));
+        assert!(r.findings.iter().any(|f| f.detail.contains("peak-live")), "{:?}", r.findings);
+    }
+}

@@ -1,0 +1,111 @@
+//! Level-2 audit event sink for the exec pool.
+//!
+//! Worker threads must be able to record events without contending on a
+//! single lock in the hot path, and without perturbing scheduling (the
+//! audit must not change which thread claims which chunk more than any
+//! profiler would).  So the sink is a classic per-thread log:
+//!
+//!  * each recording thread owns a `thread_local` `Arc<Mutex<Vec<..>>>`
+//!    that only it pushes to (its mutex is therefore uncontended —
+//!    `drain` is the only other party, and only at checkpoint time);
+//!  * a global registry holds a clone of every thread's Arc so the logs
+//!    survive thread exit and can all be drained centrally;
+//!  * every event carries a ticket from one global atomic sequence
+//!    counter, giving the offline checker a single total order to
+//!    replay (the fetch_add is the only cross-thread traffic per event).
+//!
+//! Nothing here touches f32 values or chunk assignment, so recording
+//! cannot change results — CI pins that with a byte-identical
+//! fingerprint under `PLMU_VERIFY=2`.
+
+use super::exec_check::PoolEvent;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+type Log = Arc<Mutex<Vec<(u64, PoolEvent)>>>;
+
+/// Global order for events across threads.
+static SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Job ids for [`next_job_id`]; starts at 1 so 0 can mean "audit off"
+/// in `JobCore`.
+static JOB_IDS: AtomicU64 = AtomicU64::new(1);
+
+/// All thread logs ever registered (threads come and go; Arcs persist).
+static REGISTRY: OnceLock<Mutex<Vec<Log>>> = OnceLock::new();
+
+thread_local! {
+    static LOCAL: Log = {
+        let log: Log = Arc::new(Mutex::new(Vec::new()));
+        REGISTRY
+            .get_or_init(|| Mutex::new(Vec::new()))
+            .lock()
+            .unwrap()
+            .push(log.clone());
+        log
+    };
+}
+
+/// A fresh nonzero job id for `JobCore` when auditing is on.
+pub fn next_job_id() -> u64 {
+    JOB_IDS.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Record one pool event into the calling thread's log, stamped with
+/// the global sequence ticket.  Callers gate on
+/// [`super::audit_enabled`] *before* building the event.
+pub fn record(ev: PoolEvent) {
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    LOCAL.with(|log| log.lock().unwrap().push((seq, ev)));
+}
+
+/// Drain every thread's log and return the merged stream sorted by
+/// sequence ticket.  Events recorded concurrently with the drain land
+/// in the next drain — callers checkpoint at quiescent points (after
+/// `pool::run` returns, all chunk events for that job are in).
+pub fn drain_pool_events() -> Vec<(u64, PoolEvent)> {
+    let mut merged = Vec::new();
+    if let Some(reg) = REGISTRY.get() {
+        for log in reg.lock().unwrap().iter() {
+            merged.append(&mut log.lock().unwrap());
+        }
+    }
+    merged.sort_unstable_by_key(|(seq, _)| *seq);
+    merged
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_drain_roundtrip() {
+        drain_pool_events(); // isolate from other tests on this thread
+        let job = next_job_id();
+        record(PoolEvent::JobBegin { job, chunks: 2, workers_cap: 1, budget: 1, root: 1 });
+        record(PoolEvent::ChunkStart { job, idx: 0, sub_budget: 1 });
+        record(PoolEvent::ChunkEnd { job, idx: 0 });
+        record(PoolEvent::ChunkStart { job, idx: 1, sub_budget: 1 });
+        record(PoolEvent::ChunkEnd { job, idx: 1 });
+        record(PoolEvent::JobEnd { job, panicked: false });
+        let evs = drain_pool_events();
+        let ours: Vec<_> = evs
+            .iter()
+            .filter(|(_, e)| e.job() == job)
+            .collect();
+        assert_eq!(ours.len(), 6);
+        // sequence tickets strictly increase in the merged stream
+        for w in evs.windows(2) {
+            assert!(w[0].0 < w[1].0);
+        }
+        // drained means gone
+        assert!(drain_pool_events().iter().all(|(_, e)| e.job() != job));
+    }
+
+    #[test]
+    fn job_ids_are_nonzero_and_unique() {
+        let a = next_job_id();
+        let b = next_job_id();
+        assert!(a != 0 && b != 0 && a != b);
+    }
+}

@@ -1,0 +1,438 @@
+//! Pass 3: exec disjointness + budget audit.
+//!
+//! The exec layer's one `unsafe` contract is the `SendPtr` fan-out in
+//! `parallel_rows_mut`/`parallel_rows_async`: chunk closures get
+//! `&mut [f32]` slices manufactured from a shared base pointer, which
+//! is sound **iff** the chunk ranges are pairwise disjoint and in
+//! bounds.  The dynamic suites (`exec_equivalence`) catch a violation
+//! only if two racing chunks happen to collide during a sampled run;
+//! [`check_ranges`] proves the property statically from the partition
+//! itself, and at `PLMU_VERIFY>=1` the dispatch sites call it on every
+//! fan-out *before* the first `from_raw_parts_mut`.
+//!
+//! At `PLMU_VERIFY=2` the pool additionally records a [`PoolEvent`] log
+//! (via [`super::audit`]) and [`check_pool_events`] replays it offline —
+//! the static companion to `exec_equivalence`'s peak-concurrency
+//! assertions:
+//!
+//!  * every chunk index of a completed job claimed **exactly once**
+//!    (at-most-once for panicked jobs, whose drain intentionally
+//!    abandons unclaimed chunks);
+//!  * no chunk event after its job's completion event (a straggler
+//!    helper touching a job the caller already returned from would be a
+//!    use-after-free of the transmuted closure);
+//!  * at every instant the set of in-flight chunks is within the job's
+//!    `workers_cap`, and the sum of their sub-budgets within the job's
+//!    budget — which itself must not exceed the root thread budget
+//!    (`PLMU_THREADS`), proving budget splits never over-subscribe.
+
+use super::{audit, Finding, Pass};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Count of chunk partitions validated by [`check_ranges`] since
+/// process start — lets `plmu analyze` report how many fan-outs each
+/// case actually exercised.
+static PARTITIONS_VALIDATED: AtomicU64 = AtomicU64::new(0);
+
+pub fn partitions_validated() -> u64 {
+    PARTITIONS_VALIDATED.load(Ordering::Relaxed)
+}
+
+/// Validate one chunk partition of `[0, total_len)`: every range in
+/// bounds and well-formed, ranges pairwise disjoint, and the union
+/// covering the whole buffer (the dispatchers never skip elements).
+/// Returns findings; empty = the fan-out is sound.
+pub fn check_ranges(total_len: usize, ranges: &[(usize, usize)]) -> Vec<Finding> {
+    PARTITIONS_VALIDATED.fetch_add(1, Ordering::Relaxed);
+    let mut findings = Vec::new();
+    for (i, &(start, end)) in ranges.iter().enumerate() {
+        if start > end {
+            findings.push(Finding::new(
+                Pass::Exec,
+                format!("chunk {i}: inverted range [{start}, {end})"),
+            ));
+        }
+        if end > total_len {
+            findings.push(Finding::new(
+                Pass::Exec,
+                format!("chunk {i}: range [{start}, {end}) exceeds buffer length {total_len}"),
+            ));
+        }
+    }
+    if !findings.is_empty() {
+        return findings;
+    }
+    let mut sorted: Vec<(usize, usize, usize)> =
+        ranges.iter().enumerate().map(|(i, &(s, e))| (s, e, i)).collect();
+    sorted.sort_unstable();
+    let mut covered = 0usize;
+    for w in sorted.windows(2) {
+        let (s0, e0, i0) = w[0];
+        let (s1, e1, i1) = w[1];
+        if e0 > s1 {
+            findings.push(Finding::new(
+                Pass::Exec,
+                format!(
+                    "chunks {i0} and {i1} overlap: [{s0}, {e0}) ∩ [{s1}, {e1}) — aliased &mut slices"
+                ),
+            ));
+        }
+    }
+    if findings.is_empty() {
+        // disjoint: coverage is just endpoint stitching
+        for &(s, e, i) in &sorted {
+            if s != covered {
+                findings.push(Finding::new(
+                    Pass::Exec,
+                    format!("gap before chunk {i}: [{covered}, {s}) is never written"),
+                ));
+            }
+            covered = e;
+        }
+        if covered != total_len && !sorted.is_empty() {
+            findings.push(Finding::new(
+                Pass::Exec,
+                format!("tail [{covered}, {total_len}) is never written"),
+            ));
+        }
+    }
+    findings
+}
+
+/// One pool event at `PLMU_VERIFY=2` (recorded via [`audit::record`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolEvent {
+    /// a multi-chunk job entered the pool (inline/serial paths record
+    /// nothing — there is no concurrency to audit)
+    JobBegin { job: u64, chunks: usize, workers_cap: usize, budget: usize, root: usize },
+    /// a worker claimed chunk `idx` and entered it with `sub_budget`
+    ChunkStart { job: u64, idx: usize, sub_budget: usize },
+    ChunkEnd { job: u64, idx: usize },
+    /// the submitting thread observed completion and returned
+    JobEnd { job: u64, panicked: bool },
+}
+
+impl PoolEvent {
+    pub fn job(&self) -> u64 {
+        match *self {
+            PoolEvent::JobBegin { job, .. }
+            | PoolEvent::ChunkStart { job, .. }
+            | PoolEvent::ChunkEnd { job, .. }
+            | PoolEvent::JobEnd { job, .. } => job,
+        }
+    }
+}
+
+/// Replay a drained, seq-ordered pool event stream (the output of
+/// [`audit::drain_pool_events`]) and check the claiming/budget
+/// discipline per job.  Jobs with no `JobEnd` in the stream were still
+/// in flight at drain time and are skipped (their events complete in
+/// the next drain).
+pub fn check_pool_events(events: &[(u64, PoolEvent)]) -> Vec<Finding> {
+    use std::collections::{HashMap, HashSet};
+    let mut findings = Vec::new();
+
+    let mut jobs: HashMap<u64, Vec<(u64, PoolEvent)>> = HashMap::new();
+    let mut order: Vec<u64> = Vec::new();
+    for &(seq, ev) in events {
+        let id = ev.job();
+        let per = jobs.entry(id).or_default();
+        if per.is_empty() {
+            order.push(id);
+        }
+        per.push((seq, ev));
+    }
+
+    for id in order {
+        let evs = &jobs[&id];
+        let Some(&(end_seq, PoolEvent::JobEnd { panicked, .. })) =
+            evs.iter().find(|(_, e)| matches!(e, PoolEvent::JobEnd { .. }))
+        else {
+            continue; // in flight at drain time
+        };
+        let Some(&(begin_seq, PoolEvent::JobBegin { chunks, workers_cap, budget, root, .. })) =
+            evs.iter().find(|(_, e)| matches!(e, PoolEvent::JobBegin { .. }))
+        else {
+            findings.push(Finding::new(Pass::Exec, format!("job {id}: completed without a JobBegin event")));
+            continue;
+        };
+
+        if budget > root {
+            findings.push(Finding::new(
+                Pass::Exec,
+                format!("job {id}: budget {budget} exceeds the root thread budget {root}"),
+            ));
+        }
+
+        let mut claims: HashMap<usize, usize> = HashMap::new();
+        let mut active: HashSet<usize> = HashSet::new();
+        let mut active_budget = 0usize;
+        for &(seq, ev) in evs {
+            match ev {
+                PoolEvent::JobBegin { .. } | PoolEvent::JobEnd { .. } => {}
+                PoolEvent::ChunkStart { idx, sub_budget, .. } => {
+                    if seq < begin_seq || seq > end_seq {
+                        findings.push(Finding::new(
+                            Pass::Exec,
+                            format!("job {id}: chunk {idx} started outside the job's lifetime — \
+                                     a straggler worker raced job completion"),
+                        ));
+                    }
+                    *claims.entry(idx).or_insert(0) += 1;
+                    if idx >= chunks {
+                        findings.push(Finding::new(
+                            Pass::Exec,
+                            format!("job {id}: claimed chunk {idx} out of range {chunks}"),
+                        ));
+                    }
+                    if !active.insert(idx) {
+                        findings.push(Finding::new(
+                            Pass::Exec,
+                            format!("job {id}: chunk {idx} started while already running"),
+                        ));
+                    }
+                    active_budget += sub_budget;
+                    if active.len() > workers_cap {
+                        findings.push(Finding::new(
+                            Pass::Exec,
+                            format!(
+                                "job {id}: {} chunks in flight exceeds workers_cap {workers_cap}",
+                                active.len()
+                            ),
+                        ));
+                    }
+                    // `sub_budget` floors at 1 per chunk, so a job whose
+                    // budget is below its workers_cap legitimately sums
+                    // to workers_cap — the invariant is the max of both
+                    if active_budget > budget.max(workers_cap) {
+                        findings.push(Finding::new(
+                            Pass::Exec,
+                            format!(
+                                "job {id}: concurrent sub-budgets sum to {active_budget}, \
+                                 over the job budget {budget}"
+                            ),
+                        ));
+                    }
+                }
+                PoolEvent::ChunkEnd { idx, .. } => {
+                    if seq > end_seq {
+                        findings.push(Finding::new(
+                            Pass::Exec,
+                            format!("job {id}: chunk {idx} finished after JobEnd — \
+                                     use-after-return of the job closure"),
+                        ));
+                    }
+                    match evs.iter().find(|(s2, e2)| {
+                        *s2 < seq && matches!(e2, PoolEvent::ChunkStart { idx: i2, .. } if *i2 == idx)
+                    }) {
+                        Some(_) => {
+                            if active.remove(&idx) {
+                                // find this chunk's sub_budget to retire it
+                                if let Some((_, PoolEvent::ChunkStart { sub_budget, .. })) =
+                                    evs.iter().rev().find(|(s2, e2)| {
+                                        *s2 < seq
+                                            && matches!(e2, PoolEvent::ChunkStart { idx: i2, .. } if *i2 == idx)
+                                    })
+                                {
+                                    active_budget -= sub_budget;
+                                }
+                            }
+                        }
+                        None => {
+                            findings.push(Finding::new(
+                                Pass::Exec,
+                                format!("job {id}: chunk {idx} ended without a start"),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        for idx in 0..chunks {
+            match claims.get(&idx).copied().unwrap_or(0) {
+                0 if !panicked => findings.push(Finding::new(
+                    Pass::Exec,
+                    format!("job {id}: chunk {idx} was never claimed"),
+                )),
+                n if n > 1 => findings.push(Finding::new(
+                    Pass::Exec,
+                    format!("job {id}: chunk {idx} claimed {n} times — the claim counter raced"),
+                )),
+                _ => {}
+            }
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // ---- check_ranges
+
+    #[test]
+    fn exact_partition_is_clean() {
+        assert!(check_ranges(10, &[(0, 4), (4, 8), (8, 10)]).is_empty());
+        assert!(check_ranges(0, &[]).is_empty());
+    }
+
+    #[test]
+    fn overlap_is_caught() {
+        let f = check_ranges(10, &[(0, 5), (4, 10)]);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].detail.contains("overlap"), "{}", f[0]);
+    }
+
+    #[test]
+    fn out_of_bounds_is_caught() {
+        let f = check_ranges(8, &[(0, 4), (4, 9)]);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].detail.contains("exceeds buffer length"), "{}", f[0]);
+    }
+
+    #[test]
+    fn gap_and_tail_are_caught() {
+        let f = check_ranges(10, &[(0, 3), (5, 8)]);
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f[0].detail.contains("gap"), "{}", f[0]);
+        assert!(f[1].detail.contains("tail"), "{}", f[1]);
+    }
+
+    #[test]
+    fn inverted_range_is_caught() {
+        let f = check_ranges(10, &[(6, 2)]);
+        assert!(f.iter().any(|x| x.detail.contains("inverted")), "{f:?}");
+    }
+
+    #[test]
+    fn validation_counter_advances() {
+        let before = partitions_validated();
+        check_ranges(4, &[(0, 4)]);
+        assert!(partitions_validated() > before);
+    }
+
+    // ---- check_pool_events
+
+    fn job(id: u64, seq0: u64, chunks: usize, cap: usize, budget: usize) -> Vec<(u64, PoolEvent)> {
+        // serial claim order: start/end each chunk in sequence
+        let mut evs = vec![(seq0, PoolEvent::JobBegin { job: id, chunks, workers_cap: cap, budget, root: budget })];
+        let mut seq = seq0 + 1;
+        for idx in 0..chunks {
+            evs.push((seq, PoolEvent::ChunkStart { job: id, idx, sub_budget: budget / cap.max(1).min(chunks).max(1) }));
+            evs.push((seq + 1, PoolEvent::ChunkEnd { job: id, idx }));
+            seq += 2;
+        }
+        evs.push((seq, PoolEvent::JobEnd { job: id, panicked: false }));
+        evs
+    }
+
+    #[test]
+    fn serial_claims_are_clean() {
+        let evs = job(1, 0, 4, 2, 2);
+        assert!(check_pool_events(&evs).is_empty(), "{:?}", check_pool_events(&evs));
+    }
+
+    #[test]
+    fn double_claim_is_caught() {
+        let evs = vec![
+            (0, PoolEvent::JobBegin { job: 2, chunks: 2, workers_cap: 2, budget: 2, root: 2 }),
+            (1, PoolEvent::ChunkStart { job: 2, idx: 0, sub_budget: 1 }),
+            (2, PoolEvent::ChunkEnd { job: 2, idx: 0 }),
+            (3, PoolEvent::ChunkStart { job: 2, idx: 1, sub_budget: 1 }),
+            (4, PoolEvent::ChunkEnd { job: 2, idx: 1 }),
+            (5, PoolEvent::ChunkStart { job: 2, idx: 0, sub_budget: 1 }), // raced claim counter
+            (6, PoolEvent::ChunkEnd { job: 2, idx: 0 }),
+            (7, PoolEvent::JobEnd { job: 2, panicked: false }),
+        ];
+        let f = check_pool_events(&evs);
+        assert!(f.iter().any(|x| x.detail.contains("claimed 2 times")), "{f:?}");
+    }
+
+    #[test]
+    fn unclaimed_chunk_is_caught() {
+        let evs = vec![
+            (0, PoolEvent::JobBegin { job: 3, chunks: 2, workers_cap: 2, budget: 2, root: 2 }),
+            (1, PoolEvent::ChunkStart { job: 3, idx: 0, sub_budget: 1 }),
+            (2, PoolEvent::ChunkEnd { job: 3, idx: 0 }),
+            (3, PoolEvent::JobEnd { job: 3, panicked: false }),
+        ];
+        let f = check_pool_events(&evs);
+        assert!(f.iter().any(|x| x.detail.contains("never claimed")), "{f:?}");
+    }
+
+    #[test]
+    fn panicked_job_may_abandon_chunks() {
+        let evs = vec![
+            (0, PoolEvent::JobBegin { job: 4, chunks: 3, workers_cap: 2, budget: 2, root: 2 }),
+            (1, PoolEvent::ChunkStart { job: 4, idx: 0, sub_budget: 1 }),
+            (2, PoolEvent::ChunkEnd { job: 4, idx: 0 }),
+            (3, PoolEvent::JobEnd { job: 4, panicked: true }),
+        ];
+        assert!(check_pool_events(&evs).is_empty(), "{:?}", check_pool_events(&evs));
+    }
+
+    #[test]
+    fn chunk_after_job_end_is_caught() {
+        let evs = vec![
+            (0, PoolEvent::JobBegin { job: 5, chunks: 1, workers_cap: 1, budget: 1, root: 1 }),
+            (1, PoolEvent::ChunkStart { job: 5, idx: 0, sub_budget: 1 }),
+            (2, PoolEvent::JobEnd { job: 5, panicked: false }),
+            (3, PoolEvent::ChunkEnd { job: 5, idx: 0 }),
+        ];
+        let f = check_pool_events(&evs);
+        assert!(f.iter().any(|x| x.detail.contains("after JobEnd")), "{f:?}");
+    }
+
+    #[test]
+    fn over_budget_event_log_is_caught() {
+        // two chunks live at once, each with sub-budget 2, job budget 2
+        let evs = vec![
+            (0, PoolEvent::JobBegin { job: 6, chunks: 2, workers_cap: 2, budget: 2, root: 4 }),
+            (1, PoolEvent::ChunkStart { job: 6, idx: 0, sub_budget: 2 }),
+            (2, PoolEvent::ChunkStart { job: 6, idx: 1, sub_budget: 2 }),
+            (3, PoolEvent::ChunkEnd { job: 6, idx: 0 }),
+            (4, PoolEvent::ChunkEnd { job: 6, idx: 1 }),
+            (5, PoolEvent::JobEnd { job: 6, panicked: false }),
+        ];
+        let f = check_pool_events(&evs);
+        assert!(f.iter().any(|x| x.detail.contains("over the job budget")), "{f:?}");
+    }
+
+    #[test]
+    fn budget_over_root_is_caught() {
+        let evs = vec![
+            (0, PoolEvent::JobBegin { job: 7, chunks: 1, workers_cap: 1, budget: 8, root: 4 }),
+            (1, PoolEvent::ChunkStart { job: 7, idx: 0, sub_budget: 8 }),
+            (2, PoolEvent::ChunkEnd { job: 7, idx: 0 }),
+            (3, PoolEvent::JobEnd { job: 7, panicked: false }),
+        ];
+        let f = check_pool_events(&evs);
+        assert!(f.iter().any(|x| x.detail.contains("root thread budget")), "{f:?}");
+    }
+
+    #[test]
+    fn workers_cap_violation_is_caught() {
+        let evs = vec![
+            (0, PoolEvent::JobBegin { job: 8, chunks: 3, workers_cap: 1, budget: 3, root: 3 }),
+            (1, PoolEvent::ChunkStart { job: 8, idx: 0, sub_budget: 1 }),
+            (2, PoolEvent::ChunkStart { job: 8, idx: 1, sub_budget: 1 }),
+            (3, PoolEvent::ChunkEnd { job: 8, idx: 0 }),
+            (4, PoolEvent::ChunkEnd { job: 8, idx: 1 }),
+            (5, PoolEvent::ChunkStart { job: 8, idx: 2, sub_budget: 1 }),
+            (6, PoolEvent::ChunkEnd { job: 8, idx: 2 }),
+            (7, PoolEvent::JobEnd { job: 8, panicked: false }),
+        ];
+        let f = check_pool_events(&evs);
+        assert!(f.iter().any(|x| x.detail.contains("workers_cap")), "{f:?}");
+    }
+
+    #[test]
+    fn in_flight_jobs_are_skipped() {
+        let evs = vec![
+            (0, PoolEvent::JobBegin { job: 9, chunks: 2, workers_cap: 2, budget: 2, root: 2 }),
+            (1, PoolEvent::ChunkStart { job: 9, idx: 0, sub_budget: 1 }),
+        ];
+        assert!(check_pool_events(&evs).is_empty());
+    }
+}

@@ -1,0 +1,236 @@
+//! Pass 4: source conformance lint (`plmu lint-src`).
+//!
+//! A small textual scanner over `rust/src` for repo rules that clippy
+//! cannot express — each one guards an invariant another subsystem
+//! depends on:
+//!
+//!  * **thread-spawn** — `thread::spawn` is allowed only under `exec/`:
+//!    threads created elsewhere escape the pool's budget accounting,
+//!    so the peak-concurrency and budget audits would be blind to them.
+//!  * **hashmap** — no `HashMap` on fingerprinted paths (`tensor/`,
+//!    `fft/`, `dn/`, `autograd/`, `simd/`, `exec/`, `optim/`,
+//!    `train/`, `layers/`): iteration order is nondeterministic, and a
+//!    map iterated on a value path silently breaks the bit-exactness
+//!    story.  Lookup-only maps are fine — waive them explicitly so the
+//!    reviewer sees the claim.
+//!  * **env-knob** — `env::var` is read only inside `util::env_knob`:
+//!    scattered readers are how the `PLMU_SCAN` silent-fallback bug
+//!    happened (accepted spellings drifting per call site).
+//!  * **simd-triple** — every explicit simd kernel entry `X_vec` keeps
+//!    its `X_scalar` sibling and `X` dispatcher, so the differential
+//!    suites always have both lanes to pin against each other.
+//!
+//! A rule is waived for a line by the comment `lint-src: allow(<rule>)`
+//! on that line or the line directly above.  Comment-only lines are
+//! skipped (prose may mention HashMap freely).
+
+use super::{Finding, Pass};
+use std::path::Path;
+
+const RULES: [&str; 4] = ["thread-spawn", "hashmap", "env-knob", "simd-triple"];
+
+/// Fingerprinted path prefixes (relative to `rust/src/`) where HashMap
+/// iteration could change reported bits.
+const FINGERPRINTED: [&str; 9] = [
+    "tensor/", "fft/", "dn/", "autograd/", "simd/", "exec/", "optim/", "train/", "layers/",
+];
+
+fn waived(lines: &[&str], i: usize, rule: &str) -> bool {
+    let needle = format!("lint-src: allow({rule})");
+    lines[i].contains(&needle) || (i > 0 && lines[i - 1].contains(&needle))
+}
+
+/// True for lines that are only a comment (`//`, `//!`, `///`) — prose,
+/// not code.
+fn comment_only(line: &str) -> bool {
+    line.trim_start().starts_with("//")
+}
+
+/// Lint one file's source.  `rel` is the path relative to the scan root
+/// (e.g. `exec/pool.rs`), used both for provenance and for the
+/// path-scoped rules.
+pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    // the linter's own source necessarily spells out every needle it
+    // scans for (rule strings, messages, tests) — exempt it wholesale,
+    // the way `util/env_knob.rs` is exempt from the env-knob rule
+    if rel == "analyze/lint.rs" {
+        return findings;
+    }
+    let lines: Vec<&str> = src.lines().collect();
+    let in_exec = rel.starts_with("exec/");
+    let fingerprinted = FINGERPRINTED.iter().any(|p| rel.starts_with(p));
+    let is_knob_home = rel == "util/env_knob.rs";
+
+    for (i, line) in lines.iter().enumerate() {
+        if comment_only(line) {
+            continue;
+        }
+        let lineno = i + 1;
+        if !in_exec && line.contains("thread::spawn") && !waived(&lines, i, "thread-spawn") {
+            findings.push(Finding::new(
+                Pass::Lint,
+                format!(
+                    "{rel}:{lineno}: thread::spawn outside exec/ — threads here escape the pool's \
+                     budget accounting (waive with `lint-src: allow(thread-spawn)` if deliberate)"
+                ),
+            ));
+        }
+        if fingerprinted && line.contains("HashMap") && !waived(&lines, i, "hashmap") {
+            findings.push(Finding::new(
+                Pass::Lint,
+                format!(
+                    "{rel}:{lineno}: HashMap on a fingerprinted path — iteration order is \
+                     nondeterministic (waive with `lint-src: allow(hashmap)` if lookup-only)"
+                ),
+            ));
+        }
+        if !is_knob_home && line.contains("env::var(") && !waived(&lines, i, "env-knob") {
+            findings.push(Finding::new(
+                Pass::Lint,
+                format!(
+                    "{rel}:{lineno}: env::var outside util::env_knob — knob spellings must come \
+                     from the one parser (use str_knob/bool_knob/usize_knob/level_knob)"
+                ),
+            ));
+        }
+    }
+
+    // simd-triple: per simd/ file, every explicit `fn X_vec` has both an
+    // `fn X_scalar` and a dispatcher `fn X(`.  Macro template names
+    // ($name / $vec / $scalar) are skipped — the macro guarantees the
+    // triple structurally.
+    if rel.starts_with("simd/") {
+        let mut fns: Vec<String> = Vec::new();
+        for line in &lines {
+            if comment_only(line) {
+                continue;
+            }
+            let mut rest = *line;
+            while let Some(pos) = rest.find("fn ") {
+                let after = &rest[pos + 3..];
+                let name: String = after
+                    .chars()
+                    .take_while(|c| c.is_alphanumeric() || *c == '_')
+                    .collect();
+                if !name.is_empty() {
+                    fns.push(name);
+                }
+                rest = after;
+            }
+        }
+        for name in fns.iter().filter(|n| n.ends_with("_vec")) {
+            let base = &name[..name.len() - 4];
+            if base.is_empty() || base.starts_with('$') {
+                continue;
+            }
+            let has_scalar = fns.iter().any(|f| f == &format!("{base}_scalar"));
+            let has_dispatch = fns.iter().any(|f| f == base);
+            if !(has_scalar && has_dispatch) {
+                findings.push(Finding::new(
+                    Pass::Lint,
+                    format!(
+                        "{rel}: kernel `{name}` is missing its `{base}_scalar`/`{base}` \
+                         dispatch triple — the differential suites need both lanes"
+                    ),
+                ));
+            }
+        }
+    }
+    findings
+}
+
+/// Walk `root` (the `rust/src` directory), lint every `.rs` file in
+/// sorted order, and return all findings.
+pub fn lint_tree(root: &Path) -> std::io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for f in files {
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(&f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(&f)?;
+        findings.extend(lint_source(&rel, &src));
+    }
+    Ok(findings)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// The rule names, for `plmu lint-src --help`-style output.
+pub fn rule_names() -> &'static [&'static str] {
+    &RULES
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spawn_outside_exec_is_flagged_and_waivable() {
+        let src = "fn f() { std::thread::spawn(|| {}); }\n";
+        let f = lint_source("coordinator/server.rs", src);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].detail.contains("thread::spawn"), "{}", f[0]);
+
+        let waived = "// lint-src: allow(thread-spawn)\nfn f() { std::thread::spawn(|| {}); }\n";
+        assert!(lint_source("coordinator/server.rs", waived).is_empty());
+        // and exec/ itself is always allowed
+        assert!(lint_source("exec/pool.rs", src).is_empty());
+    }
+
+    #[test]
+    fn the_linter_is_exempt_from_itself() {
+        let src = "let x = \"thread::spawn env::var( HashMap\";\n";
+        assert!(lint_source("analyze/lint.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hashmap_on_fingerprinted_path_only() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(lint_source("optim/mod.rs", src).len(), 1);
+        assert!(lint_source("metrics/mod.rs", src).is_empty(), "metrics is not fingerprinted");
+        // prose mentioning HashMap is fine
+        assert!(lint_source("fft/mod.rs", "//! keyed by a HashMap\n").is_empty());
+        // same-line waiver
+        let waived = "use std::collections::HashMap; // lint-src: allow(hashmap)\n";
+        assert!(lint_source("optim/mod.rs", waived).is_empty());
+    }
+
+    #[test]
+    fn env_var_outside_the_knob_home_is_flagged() {
+        let src = "let v = std::env::var(\"PLMU_THREADS\");\n";
+        assert_eq!(lint_source("exec/mod.rs", src).len(), 1);
+        assert!(lint_source("util/env_knob.rs", src).is_empty());
+    }
+
+    #[test]
+    fn simd_triple_enforced() {
+        let ok = "fn dot(a: f32) {}\nfn dot_vec(a: f32) {}\nfn dot_scalar(a: f32) {}\n";
+        assert!(lint_source("simd/mod.rs", ok).is_empty());
+        let broken = "fn dot_vec(a: f32) {}\nfn dot_scalar(a: f32) {}\n";
+        let f = lint_source("simd/mod.rs", broken);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].detail.contains("dot_vec"), "{}", f[0]);
+        // macro templates are skipped
+        let mac = "macro_rules! m { ($name:ident, $vec:ident) => { fn $vec() {} } }\n";
+        assert!(lint_source("simd/mod.rs", mac).is_empty());
+        // the triple rule only applies under simd/
+        assert!(lint_source("fft/mod.rs", broken).is_empty());
+    }
+}

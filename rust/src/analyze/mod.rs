@@ -1,0 +1,327 @@
+//! Static analysis over the crate's three unsafe-adjacent substrates:
+//! the autograd tape, the buffer arena, and the exec dispatch plan.
+//!
+//! The repo's bit-exactness story is enforced *dynamically* by the
+//! differential suites (`exec_equivalence`, `simd_equivalence`,
+//! `fusion_equivalence`, `scan_equivalence`) — tests that must happen
+//! to hit a violation.  This module adds the *static* companion: four
+//! passes that check the invariants those suites rely on **before**
+//! execution, over recorded structures rather than sampled runs.
+//!
+//!  1. **Tape verifier** ([`tape`]) — walks a [`tape::TapeView`] of the
+//!     recorded autograd graph and checks topology (parents strictly
+//!     earlier, so a `NodeId` held across `Graph::reset` is caught as a
+//!     forward reference), per-op operand shape/arity legality, and
+//!     fused-op rewrite legality (an `Affine`/`Add2RowAct`/`Add3Act`
+//!     node must match the documented exact-rewrite pattern from
+//!     `fusion.rs`/DESIGN.md), with op-provenance error messages.
+//!  2. **Arena alias/liveness analysis** ([`arena_check`]) — replays the
+//!     buffer-identity event stream `exec/arena.rs` records at level 2
+//!     and proves no double-release, no re-issue of a live buffer, no
+//!     cross-arena release (the `--pipeline` two-arenas hazard), and a
+//!     peak-liveness memory plan consistent with `ArenaStats`.
+//!  3. **Exec disjointness + budget audit** ([`exec_check`]) — validates
+//!     every `parallel_rows_*` chunk partition pairwise-disjoint,
+//!     in-bounds, and covering before the `SendPtr` fan-out (level >= 1,
+//!     at the dispatch site), and replays the level-2 pool event log to
+//!     prove every chunk claimed exactly once, no chunk executed after
+//!     its job completed, and concurrent sub-budget sums within each
+//!     job's budget.
+//!  4. **Source conformance lint** ([`lint`]) — a scanner over
+//!     `rust/src` enforcing repo rules clippy cannot express (thread
+//!     spawns outside `exec/`, `HashMap` on fingerprinted paths, env
+//!     knobs read outside `util::env_knob`, simd kernel triples).
+//!
+//! # The `PLMU_VERIFY` knob
+//!
+//! * `0` (default) — off.  The hooks compile to one relaxed atomic load
+//!   and a predictable branch per *dispatch/backward* (never per
+//!   element); no events are recorded, no allocation happens.
+//! * `1` — cheap checks: tape verification before every `backward`,
+//!   chunk-partition validation before every `SendPtr` fan-out.
+//! * `2` — full audit: level 1 plus arena buffer-identity events and
+//!   the pool event log for offline replay.
+//!
+//! Resolved once via [`crate::util::env_knob`], overridable with
+//! [`set_level`] (the `plmu analyze` driver forces level 2 for its
+//! runs).  None of the instrumentation touches f32 math or scheduling
+//! decisions, so fingerprints are byte-identical across levels — CI
+//! proves that by running the train-dp fingerprint under
+//! `PLMU_VERIFY=2` against the level-0 reference.
+
+pub mod arena_check;
+pub mod audit;
+pub mod exec_check;
+pub mod lint;
+pub mod tape;
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+// ----------------------------------------------------------------- knob
+
+/// Verify-level knob: 0 = unresolved, else `level + 1` (the resolved
+/// level is 0, 1, or 2).  Same lazy idiom as `PLMU_SIMD`/`PLMU_FUSION`.
+static VERIFY_LEVEL: AtomicUsize = AtomicUsize::new(0);
+
+/// The active `PLMU_VERIFY` level (0 = off, 1 = cheap checks, 2 = full
+/// audit), resolving the env default on first read.
+pub fn level() -> usize {
+    match VERIFY_LEVEL.load(Ordering::Relaxed) {
+        0 => {
+            let l = crate::util::env_knob::level_knob("PLMU_VERIFY", 2, 0);
+            // racy double-resolve is benign: level_knob is deterministic
+            VERIFY_LEVEL.store(l + 1, Ordering::Relaxed);
+            l
+        }
+        v => v - 1,
+    }
+}
+
+/// Force the verify level (tests, the `plmu analyze` driver; production
+/// reads `PLMU_VERIFY` once).  Values above 2 clamp to 2.
+pub fn set_level(l: usize) {
+    VERIFY_LEVEL.store(l.min(2) + 1, Ordering::Relaxed);
+}
+
+/// Whether level-2 event recording (arena identities, pool events) is
+/// active.  One relaxed load on the instrumented paths.
+pub fn audit_enabled() -> bool {
+    level() >= 2
+}
+
+// ------------------------------------------------------------- findings
+
+/// Which analysis pass produced a finding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pass {
+    Tape,
+    Arena,
+    Exec,
+    Lint,
+}
+
+impl Pass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Pass::Tape => "tape",
+            Pass::Arena => "arena",
+            Pass::Exec => "exec",
+            Pass::Lint => "lint-src",
+        }
+    }
+}
+
+/// One analyzer finding: the pass that produced it and a provenance
+/// message (node id + op name for tape findings, buffer/arena ids for
+/// arena findings, job/chunk ids for exec findings, file:line for lint
+/// findings).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    pub pass: Pass,
+    pub detail: String,
+}
+
+impl Finding {
+    pub fn new(pass: Pass, detail: impl Into<String>) -> Self {
+        Finding { pass, detail: detail.into() }
+    }
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}", self.pass.name(), self.detail)
+    }
+}
+
+// ------------------------------------------------------------- driver
+
+/// Result of one pass over one model-family case.
+#[derive(Debug)]
+pub struct CaseReport {
+    /// e.g. `"LmuParallel/fft"`
+    pub case: String,
+    /// tape nodes verified
+    pub tape_nodes: usize,
+    /// arena events replayed
+    pub arena_events: usize,
+    /// pool events replayed
+    pub pool_events: usize,
+    /// chunk partitions validated at the dispatch sites during the case
+    pub partitions: u64,
+    /// peak concurrently-live arena bytes (the memory plan)
+    pub peak_live_bytes: usize,
+    pub findings: Vec<Finding>,
+}
+
+/// Aggregate of [`analyze_models`]: one [`CaseReport`] per model family
+/// x DN path.
+#[derive(Debug, Default)]
+pub struct AnalyzeReport {
+    pub cases: Vec<CaseReport>,
+}
+
+impl AnalyzeReport {
+    pub fn total_findings(&self) -> usize {
+        self.cases.iter().map(|c| c.findings.len()).sum()
+    }
+
+    /// Per-pass report table plus every finding, the format `plmu
+    /// analyze` prints.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<22} {:>10} {:>12} {:>11} {:>11} {:>14} {:>9}\n",
+            "case", "tape nodes", "arena events", "pool events", "partitions", "peak live", "findings"
+        ));
+        for c in &self.cases {
+            out.push_str(&format!(
+                "{:<22} {:>10} {:>12} {:>11} {:>11} {:>14} {:>9}\n",
+                c.case,
+                c.tape_nodes,
+                c.arena_events,
+                c.pool_events,
+                c.partitions,
+                crate::util::human_bytes(c.peak_live_bytes),
+                c.findings.len(),
+            ));
+        }
+        for c in &self.cases {
+            for f in &c.findings {
+                out.push_str(&format!("{}: {f}\n", c.case));
+            }
+        }
+        out
+    }
+}
+
+/// Run passes 1-3 over every in-tree model family (LmuParallel,
+/// LmuSequential, LmuOriginal, Lstm) under both DN evaluation paths
+/// (`fft` and `scan`): record a training tape and verify it, replay the
+/// arena's buffer-identity events from three real optimizer steps, and
+/// replay the pool's event log from those steps plus one synthetic
+/// multi-chunk dispatch (the toy models are small enough that their own
+/// kernels may legitimately stay serial).
+///
+/// Forces `PLMU_VERIFY=2` for the duration (restoring the previous
+/// level) so the event streams exist to be checked.
+pub fn analyze_models() -> AnalyzeReport {
+    use crate::data::batcher::{BatchIter, SeqDataset};
+    use crate::dn::scan::{self, ScanMode, DEFAULT_BLOCK};
+    use crate::exec::arena::Arena;
+    use crate::optim::Adam;
+    use crate::tensor::Tensor;
+    use crate::train::models::{ModelKind, SeqClassifier};
+    use crate::train::train_step;
+    use crate::util::Rng;
+
+    let prev_level = level();
+    set_level(2);
+    let prev_mode = scan::mode();
+
+    let kinds = [
+        (ModelKind::LmuParallel, "LmuParallel"),
+        (ModelKind::LmuSequential, "LmuSequential"),
+        (ModelKind::LmuOriginal, "LmuOriginal"),
+        (ModelKind::Lstm, "Lstm"),
+    ];
+    let modes = [(ScanMode::Fft, "fft"), (ScanMode::Scan { block: DEFAULT_BLOCK }, "scan")];
+
+    let mut report = AnalyzeReport::default();
+    for (kind, kname) in kinds {
+        for (mode, mname) in modes {
+            scan::set_mode(mode);
+            let case = format!("{kname}/{mname}");
+            let mut findings = Vec::new();
+
+            // toy classification problem, same shape the train tests use
+            let (b, n, dx, d, hidden, classes) = (4usize, 16usize, 1usize, 6usize, 8usize, 2usize);
+            let mut rng = Rng::new(7);
+            let mut store = crate::autograd::ParamStore::new();
+            let model = SeqClassifier::new(kind, n, dx, d, hidden, classes, &mut store, &mut rng);
+            let xs: Vec<Tensor> = (0..b).map(|_| Tensor::randn(&[n, dx], 1.0, &mut rng)).collect();
+            let ys: Vec<usize> = (0..b).map(|i| i % classes).collect();
+            let ds = SeqDataset::classification(xs, ys);
+            let batch = BatchIter::sequential(&ds, b).next().expect("toy batch");
+
+            // ---- passes 2+3 setup: drain stale pool events, count partitions
+            audit::drain_pool_events();
+            let partitions_before = exec_check::partitions_validated();
+
+            // ---- pass 1: tape verification over a recorded loss graph
+            let mut g = crate::autograd::Graph::new();
+            let mut arena = Arena::new();
+            let mut opt = Adam::new(1e-3);
+            // three real steps: warmup (all fresh allocations), then two
+            // steady-state steps that exercise recycling
+            for _ in 0..3 {
+                train_step(&model, &mut store, &mut opt, &mut g, &mut arena, &batch, None);
+            }
+            let view = g.tape_view();
+            let tape_nodes = view.nodes.len();
+            findings.extend(tape::verify(&view));
+
+            // one synthetic fan-out so the pool log is never vacuously
+            // empty (also covered: partition validation on a ragged tail)
+            let mut buf = vec![0.0f32; 4096 + 3];
+            let plan = crate::exec::Plan::sized(crate::exec::threads().max(2), 512, 1 << 20);
+            crate::exec::parallel_rows_mut(&mut buf, 8, plan, |r0, block| {
+                for (i, v) in block.iter_mut().enumerate() {
+                    *v = (r0 + i) as f32;
+                }
+            });
+
+            // ---- pass 2: replay the arena's buffer-identity events
+            let events = arena.take_audit_events();
+            let arena_events = events.len();
+            let arena_report = arena_check::check_arena_log(arena.id(), &events, Some(&arena.stats()));
+            let peak_live_bytes = arena_report.peak_live_bytes;
+            findings.extend(arena_report.findings);
+
+            // ---- pass 3: replay the pool event log
+            let pool_log = audit::drain_pool_events();
+            let pool_events = pool_log.len();
+            findings.extend(exec_check::check_pool_events(&pool_log));
+            let partitions = exec_check::partitions_validated() - partitions_before;
+
+            report.cases.push(CaseReport {
+                case,
+                tape_nodes,
+                arena_events,
+                pool_events,
+                partitions,
+                peak_live_bytes,
+                findings,
+            });
+        }
+    }
+
+    scan::set_mode(prev_mode);
+    set_level(prev_level);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_knob_roundtrip() {
+        let was = level();
+        set_level(2);
+        assert_eq!(level(), 2);
+        assert!(audit_enabled());
+        set_level(0);
+        assert_eq!(level(), 0);
+        assert!(!audit_enabled());
+        set_level(9);
+        assert_eq!(level(), 2, "levels clamp to 2");
+        set_level(was);
+    }
+
+    #[test]
+    fn finding_display_carries_pass_name() {
+        let f = Finding::new(Pass::Tape, "node 3 (MatMul): inner dims 4 != 5");
+        assert_eq!(f.to_string(), "[tape] node 3 (MatMul): inner dims 4 != 5");
+    }
+}

@@ -1,0 +1,608 @@
+//! Pass 1: the tape verifier.
+//!
+//! [`crate::autograd::Graph`] keeps its node and op representation
+//! private (backward is one `match` over a sealed enum).  For analysis
+//! it exports a [`TapeView`] — a public, value-free mirror of the
+//! recorded tape: per node, the op (with the metadata its backward rule
+//! consumes), parent ids, and the value/aux shapes.  [`verify`] walks
+//! that view and checks, per node:
+//!
+//!  * **topology** — every parent id is strictly smaller than the node's
+//!    own id.  `Graph::push` guarantees this by construction for ids
+//!    minted by the same recording, so a violation means a `NodeId` was
+//!    held across `Graph::reset()` and re-used against the next tape
+//!    (the classic dangling-reference bug this pass exists to catch);
+//!  * **arity** — the op's parent count matches its backward rule;
+//!  * **shape legality** — the operand shapes satisfy the op's contract
+//!    (elementwise ops exact-match, matmul inner dims agree, bias rows
+//!    broadcast, slices stay in bounds, concat widths sum, DN ops agree
+//!    with their operator's `(n, d)` and the batch layout);
+//!  * **fusion-rule legality** — a fused node must be shape-for-shape
+//!    replaceable by the unfused chain it rewrites (`Affine` ⇔
+//!    `matmul → add_row → act`, `Add2RowAct` ⇔ `add → add_row → act`,
+//!    `Add3Act` ⇔ `add → add → act`; see `fusion.rs` / DESIGN.md
+//!    §Fusion).  Since the rewrites are exact, the legality conditions
+//!    are precisely the shape contracts of the unfused chain, checked
+//!    here against the single fused node.
+//!
+//! Every finding carries op provenance: `node {id} ({OpName}): ...`.
+
+use super::{Finding, Pass};
+use crate::tensor::Act;
+
+/// Public mirror of one recorded tape node (no values, just structure).
+#[derive(Clone, Debug)]
+pub struct TapeNode {
+    pub op: TapeOp,
+    pub parents: Vec<usize>,
+    /// shape of the node's value tensor
+    pub shape: Vec<usize>,
+    /// shape of the op-specific cached tensor, if any (softmax probs,
+    /// MSE target, H_rev, entering carries)
+    pub aux_shape: Option<Vec<usize>>,
+}
+
+/// Public mirror of `autograd::Op`, carrying exactly the metadata the
+/// shape rules need (never the tensor data).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TapeOp {
+    Leaf,
+    Param,
+    Add,
+    Sub,
+    Mul,
+    Neg,
+    Scale,
+    OneMinus,
+    Abs,
+    AddRow,
+    MatMul,
+    MatMulNT,
+    SoftmaxRows,
+    Tanh,
+    Sigmoid,
+    Relu,
+    /// fused `act(x·W + bias_row)` — parents [x, w, bias]
+    Affine { act: Option<Act> },
+    /// fused `act((a + b) + bias_row)` — parents [a, b, bias]
+    Add2RowAct { act: Option<Act> },
+    /// fused `act((a + b) + c)` — parents [a, b, c]
+    Add3Act { act: Option<Act> },
+    MeanAll,
+    SumAll,
+    SliceRows { lo: usize },
+    SliceCols { lo: usize, hi: usize },
+    ConcatCols { widths: Vec<usize> },
+    ConcatRows { heights: Vec<usize> },
+    Reshape { from: Vec<usize> },
+    /// `batch` = labels.len(); `max_label` = max recorded label
+    SoftmaxXent { batch: usize, max_label: Option<usize> },
+    /// `target_len` = element count of the cached target
+    Mse { target_len: usize },
+    /// `count` = ids.len(); `max_id` = max recorded token id
+    Embedding { count: usize, max_id: Option<usize> },
+    Dropout { mask_len: usize },
+    /// operator dims captured from the recorded `Arc<DnOperator>`
+    DnConv { n: usize, d: usize, batch: usize },
+    DnLast { n: usize, d: usize, batch: usize },
+    DnLastScan { d: usize, batch: usize },
+}
+
+impl TapeOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TapeOp::Leaf => "Leaf",
+            TapeOp::Param => "Param",
+            TapeOp::Add => "Add",
+            TapeOp::Sub => "Sub",
+            TapeOp::Mul => "Mul",
+            TapeOp::Neg => "Neg",
+            TapeOp::Scale => "Scale",
+            TapeOp::OneMinus => "OneMinus",
+            TapeOp::Abs => "Abs",
+            TapeOp::AddRow => "AddRow",
+            TapeOp::MatMul => "MatMul",
+            TapeOp::MatMulNT => "MatMulNT",
+            TapeOp::SoftmaxRows => "SoftmaxRows",
+            TapeOp::Tanh => "Tanh",
+            TapeOp::Sigmoid => "Sigmoid",
+            TapeOp::Relu => "Relu",
+            TapeOp::Affine { .. } => "Affine",
+            TapeOp::Add2RowAct { .. } => "Add2RowAct",
+            TapeOp::Add3Act { .. } => "Add3Act",
+            TapeOp::MeanAll => "MeanAll",
+            TapeOp::SumAll => "SumAll",
+            TapeOp::SliceRows { .. } => "SliceRows",
+            TapeOp::SliceCols { .. } => "SliceCols",
+            TapeOp::ConcatCols { .. } => "ConcatCols",
+            TapeOp::ConcatRows { .. } => "ConcatRows",
+            TapeOp::Reshape { .. } => "Reshape",
+            TapeOp::SoftmaxXent { .. } => "SoftmaxXent",
+            TapeOp::Mse { .. } => "Mse",
+            TapeOp::Embedding { .. } => "Embedding",
+            TapeOp::Dropout { .. } => "Dropout",
+            TapeOp::DnConv { .. } => "DnConv",
+            TapeOp::DnLast { .. } => "DnLast",
+            TapeOp::DnLastScan { .. } => "DnLastScan",
+        }
+    }
+
+    /// Expected parent count; `None` = variadic (the concats: >= 1,
+    /// length pinned by the widths/heights metadata instead).
+    fn arity(&self) -> Option<usize> {
+        match self {
+            TapeOp::Leaf | TapeOp::Param => Some(0),
+            TapeOp::Neg
+            | TapeOp::Scale
+            | TapeOp::OneMinus
+            | TapeOp::Abs
+            | TapeOp::SoftmaxRows
+            | TapeOp::Tanh
+            | TapeOp::Sigmoid
+            | TapeOp::Relu
+            | TapeOp::MeanAll
+            | TapeOp::SumAll
+            | TapeOp::SliceRows { .. }
+            | TapeOp::SliceCols { .. }
+            | TapeOp::Reshape { .. }
+            | TapeOp::SoftmaxXent { .. }
+            | TapeOp::Mse { .. }
+            | TapeOp::Embedding { .. }
+            | TapeOp::Dropout { .. }
+            | TapeOp::DnConv { .. }
+            | TapeOp::DnLast { .. }
+            | TapeOp::DnLastScan { .. } => Some(1),
+            TapeOp::Add | TapeOp::Sub | TapeOp::Mul | TapeOp::AddRow | TapeOp::MatMul | TapeOp::MatMulNT => Some(2),
+            TapeOp::Affine { .. } | TapeOp::Add2RowAct { .. } | TapeOp::Add3Act { .. } => Some(3),
+            TapeOp::ConcatCols { .. } | TapeOp::ConcatRows { .. } => None,
+        }
+    }
+}
+
+/// The exported tape: `nodes[i]` mirrors `Graph`'s node `i`.
+#[derive(Clone, Debug, Default)]
+pub struct TapeView {
+    pub nodes: Vec<TapeNode>,
+}
+
+// Same row/col semantics as `Tensor`: rows = product of all-but-last
+// dims (1 if the shape is empty — scalars), cols = last dim (1 if
+// empty).
+fn rows(shape: &[usize]) -> usize {
+    match shape.split_last() {
+        Some((_, rest)) => rest.iter().product(),
+        None => 1,
+    }
+}
+
+fn cols(shape: &[usize]) -> usize {
+    shape.last().copied().unwrap_or(1)
+}
+
+fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+/// Verify a tape view; returns one [`Finding`] per violation (empty =
+/// clean).  Checks are per-node and keep going after a finding, so one
+/// report covers the whole tape.
+pub fn verify(view: &TapeView) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let mut fail = |id: usize, op: &TapeOp, msg: String| {
+        findings.push(Finding::new(Pass::Tape, format!("node {id} ({}): {msg}", op.name())));
+    };
+
+    for (id, node) in view.nodes.iter().enumerate() {
+        let op = &node.op;
+
+        // -- topology: parents strictly earlier on the tape
+        let mut topology_ok = true;
+        for &p in &node.parents {
+            if p >= id {
+                topology_ok = false;
+                fail(
+                    id,
+                    op,
+                    format!(
+                        "parent {p} is not earlier on the tape — a NodeId held across Graph::reset()?"
+                    ),
+                );
+            }
+        }
+
+        // -- arity
+        let arity_ok = match op.arity() {
+            Some(n) if node.parents.len() != n => {
+                fail(id, op, format!("arity {} (expected {n})", node.parents.len()));
+                false
+            }
+            None if node.parents.is_empty() => {
+                fail(id, op, "concat with no parents".to_string());
+                false
+            }
+            _ => true,
+        };
+        if !(topology_ok && arity_ok) {
+            // parent shapes unusable; shape rules would index garbage
+            continue;
+        }
+
+        // -- shape legality (fusion legality for the fused ops: these
+        //    are exactly the unfused chain's contracts)
+        let p = |i: usize| -> &[usize] { &view.nodes[node.parents[i]].shape };
+        let out = &node.shape[..];
+        match op {
+            TapeOp::Leaf | TapeOp::Param => {}
+            TapeOp::Add | TapeOp::Sub | TapeOp::Mul => {
+                if p(0) != p(1) {
+                    fail(id, op, format!("operand shapes differ: {:?} vs {:?}", p(0), p(1)));
+                } else if out != p(0) {
+                    fail(id, op, format!("output shape {:?} != operand {:?}", out, p(0)));
+                }
+            }
+            TapeOp::Neg | TapeOp::Scale | TapeOp::OneMinus | TapeOp::Abs | TapeOp::Tanh | TapeOp::Sigmoid | TapeOp::Relu => {
+                if out != p(0) {
+                    fail(id, op, format!("output shape {:?} != operand {:?}", out, p(0)));
+                }
+            }
+            TapeOp::SoftmaxRows => {
+                if out != p(0) {
+                    fail(id, op, format!("output shape {:?} != operand {:?}", out, p(0)));
+                }
+                if node.aux_shape.as_deref() != Some(out) {
+                    fail(id, op, format!("cached probs shape {:?} != output {:?}", node.aux_shape, out));
+                }
+            }
+            TapeOp::AddRow => {
+                if rows(p(1)) != 1 || cols(p(1)) != cols(p(0)) {
+                    fail(id, op, format!("bias {:?} is not a ({},)-row for operand {:?}", p(1), cols(p(0)), p(0)));
+                } else if out != p(0) {
+                    fail(id, op, format!("output shape {:?} != operand {:?}", out, p(0)));
+                }
+            }
+            TapeOp::MatMul => {
+                if cols(p(0)) != rows(p(1)) {
+                    fail(id, op, format!("inner dims disagree: {:?} · {:?}", p(0), p(1)));
+                } else if rows(out) != rows(p(0)) || cols(out) != cols(p(1)) {
+                    fail(id, op, format!("output {:?} != ({}, {})", out, rows(p(0)), cols(p(1))));
+                }
+            }
+            TapeOp::MatMulNT => {
+                if cols(p(0)) != cols(p(1)) {
+                    fail(id, op, format!("inner dims disagree: {:?} · {:?}ᵀ", p(0), p(1)));
+                } else if rows(out) != rows(p(0)) || cols(out) != rows(p(1)) {
+                    fail(id, op, format!("output {:?} != ({}, {})", out, rows(p(0)), rows(p(1))));
+                }
+            }
+            TapeOp::Affine { .. } => {
+                // fused matmul → add_row → act: x (r, k) · w (k, m) + bias (m)
+                let (k, m) = (cols(p(0)), cols(p(1)));
+                if rows(p(1)) != k {
+                    fail(id, op, format!("x {:?} · w {:?}: inner dims disagree", p(0), p(1)));
+                } else if rows(p(2)) != 1 || cols(p(2)) != m {
+                    fail(id, op, format!("bias {:?} is not a ({m},)-row", p(2)));
+                } else if rows(out) != rows(p(0)) || cols(out) != m {
+                    fail(id, op, format!("output {:?} != ({}, {m})", out, rows(p(0))));
+                }
+            }
+            TapeOp::Add2RowAct { .. } => {
+                // fused add → add_row → act
+                if p(0) != p(1) {
+                    fail(id, op, format!("addend shapes differ: {:?} vs {:?}", p(0), p(1)));
+                } else if rows(p(2)) != 1 || cols(p(2)) != cols(p(0)) {
+                    fail(id, op, format!("bias {:?} is not a ({},)-row", p(2), cols(p(0))));
+                } else if out != p(0) {
+                    fail(id, op, format!("output shape {:?} != operand {:?}", out, p(0)));
+                }
+            }
+            TapeOp::Add3Act { .. } => {
+                // fused add → add → act, all elementwise
+                if p(0) != p(1) || p(1) != p(2) {
+                    fail(id, op, format!("operand shapes differ: {:?}, {:?}, {:?}", p(0), p(1), p(2)));
+                } else if out != p(0) {
+                    fail(id, op, format!("output shape {:?} != operand {:?}", out, p(0)));
+                }
+            }
+            TapeOp::MeanAll | TapeOp::SumAll => {
+                if numel(out) != 1 {
+                    fail(id, op, format!("output {:?} is not scalar", out));
+                }
+            }
+            TapeOp::SliceRows { lo } => {
+                if cols(out) != cols(p(0)) {
+                    fail(id, op, format!("output cols {} != operand cols {}", cols(out), cols(p(0))));
+                } else if lo + rows(out) > rows(p(0)) {
+                    fail(id, op, format!("rows [{lo}, {}) out of bounds for {:?}", lo + rows(out), p(0)));
+                }
+            }
+            TapeOp::SliceCols { lo, hi } => {
+                if *lo > *hi || *hi > cols(p(0)) {
+                    fail(id, op, format!("cols [{lo}, {hi}) out of bounds for {:?}", p(0)));
+                } else if rows(out) != rows(p(0)) || cols(out) != hi - lo {
+                    fail(id, op, format!("output {:?} != ({}, {})", out, rows(p(0)), hi - lo));
+                }
+            }
+            TapeOp::ConcatCols { widths } => {
+                if widths.len() != node.parents.len() {
+                    fail(id, op, format!("{} widths for {} parents", widths.len(), node.parents.len()));
+                } else {
+                    let r = rows(p(0));
+                    for (i, w) in widths.iter().enumerate() {
+                        if cols(p(i)) != *w {
+                            fail(id, op, format!("part {i} cols {} != recorded width {w}", cols(p(i))));
+                        }
+                        if rows(p(i)) != r {
+                            fail(id, op, format!("part {i} rows {} != part 0 rows {r}", rows(p(i))));
+                        }
+                    }
+                    let total: usize = widths.iter().sum();
+                    if rows(out) != r || cols(out) != total {
+                        fail(id, op, format!("output {:?} != ({r}, {total})", out));
+                    }
+                }
+            }
+            TapeOp::ConcatRows { heights } => {
+                if heights.len() != node.parents.len() {
+                    fail(id, op, format!("{} heights for {} parents", heights.len(), node.parents.len()));
+                } else {
+                    let c = cols(p(0));
+                    for (i, h) in heights.iter().enumerate() {
+                        if rows(p(i)) != *h {
+                            fail(id, op, format!("part {i} rows {} != recorded height {h}", rows(p(i))));
+                        }
+                        if cols(p(i)) != c {
+                            fail(id, op, format!("part {i} cols {} != part 0 cols {c}", cols(p(i))));
+                        }
+                    }
+                    let total: usize = heights.iter().sum();
+                    if rows(out) != total || cols(out) != c {
+                        fail(id, op, format!("output {:?} != ({total}, {c})", out));
+                    }
+                }
+            }
+            TapeOp::Reshape { from } => {
+                if from != p(0) {
+                    fail(id, op, format!("recorded source shape {:?} != operand {:?}", from, p(0)));
+                } else if numel(out) != numel(from) {
+                    fail(id, op, format!("element count changes: {:?} -> {:?}", from, out));
+                }
+            }
+            TapeOp::SoftmaxXent { batch, max_label } => {
+                if *batch != rows(p(0)) {
+                    fail(id, op, format!("{batch} labels for {} logit rows", rows(p(0))));
+                }
+                if let Some(ml) = max_label {
+                    if *ml >= cols(p(0)) {
+                        fail(id, op, format!("label {ml} out of range {}", cols(p(0))));
+                    }
+                }
+                if numel(out) != 1 {
+                    fail(id, op, format!("output {:?} is not scalar", out));
+                }
+                if node.aux_shape.as_deref() != Some(p(0)) {
+                    fail(id, op, format!("cached probs shape {:?} != logits {:?}", node.aux_shape, p(0)));
+                }
+            }
+            TapeOp::Mse { target_len } => {
+                if *target_len != numel(p(0)) {
+                    fail(id, op, format!("target has {target_len} elements, prediction {:?}", p(0)));
+                }
+                if numel(out) != 1 {
+                    fail(id, op, format!("output {:?} is not scalar", out));
+                }
+            }
+            TapeOp::Embedding { count, max_id } => {
+                if let Some(mi) = max_id {
+                    if *mi >= rows(p(0)) {
+                        fail(id, op, format!("token id {mi} out of vocab {}", rows(p(0))));
+                    }
+                }
+                if rows(out) != *count || cols(out) != cols(p(0)) {
+                    fail(id, op, format!("output {:?} != ({count}, {})", out, cols(p(0))));
+                }
+            }
+            TapeOp::Dropout { mask_len } => {
+                if *mask_len != numel(p(0)) {
+                    fail(id, op, format!("mask has {mask_len} elements, operand {:?}", p(0)));
+                }
+                if out != p(0) {
+                    fail(id, op, format!("output shape {:?} != operand {:?}", out, p(0)));
+                }
+            }
+            TapeOp::DnConv { n, d, batch } => {
+                let du = cols(p(0));
+                if rows(p(0)) != batch * n {
+                    fail(id, op, format!("input rows {} != B·n = {}·{}", rows(p(0)), batch, n));
+                } else if rows(out) != batch * n || cols(out) != du * d {
+                    fail(id, op, format!("output {:?} != ({}, {})", out, batch * n, du * d));
+                }
+            }
+            TapeOp::DnLast { n, d, batch } => {
+                let du = cols(p(0));
+                if rows(p(0)) != batch * n {
+                    fail(id, op, format!("input rows {} != B·n = {}·{}", rows(p(0)), batch, n));
+                } else if rows(out) != *batch || cols(out) != du * d {
+                    fail(id, op, format!("output {:?} != ({}, {})", out, batch, du * d));
+                }
+                if node.aux_shape.as_deref() != Some(&[*n, *d][..]) {
+                    fail(id, op, format!("cached H_rev shape {:?} != ({n}, {d})", node.aux_shape));
+                }
+            }
+            TapeOp::DnLastScan { d, batch } => {
+                let du = cols(p(0));
+                if *batch == 0 || rows(p(0)) % batch != 0 || rows(p(0)) / batch == 0 {
+                    fail(id, op, format!("input rows {} not divisible into batch {batch}", rows(p(0))));
+                } else if rows(out) != *batch || cols(out) != du * d {
+                    fail(id, op, format!("output {:?} != ({}, {})", out, batch, du * d));
+                }
+                if node.aux_shape.as_deref() != Some(&[*batch, du * d][..]) {
+                    fail(id, op, format!("entering carries shape {:?} != ({batch}, {})", node.aux_shape, du * d));
+                }
+            }
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn leaf(shape: &[usize]) -> TapeNode {
+        TapeNode { op: TapeOp::Leaf, parents: vec![], shape: shape.to_vec(), aux_shape: None }
+    }
+
+    #[test]
+    fn clean_chain_passes() {
+        // x (4, 3) · w (3, 2) + b (2) fused with tanh, then mean
+        let view = TapeView {
+            nodes: vec![
+                leaf(&[4, 3]),
+                leaf(&[3, 2]),
+                leaf(&[2]),
+                TapeNode {
+                    op: TapeOp::Affine { act: Some(Act::Tanh) },
+                    parents: vec![0, 1, 2],
+                    shape: vec![4, 2],
+                    aux_shape: None,
+                },
+                TapeNode { op: TapeOp::MeanAll, parents: vec![3], shape: vec![], aux_shape: None },
+            ],
+        };
+        assert!(verify(&view).is_empty(), "{:?}", verify(&view));
+    }
+
+    #[test]
+    fn forward_reference_is_caught() {
+        let view = TapeView {
+            nodes: vec![
+                leaf(&[2, 2]),
+                TapeNode { op: TapeOp::Add, parents: vec![0, 5], shape: vec![2, 2], aux_shape: None },
+            ],
+        };
+        let f = verify(&view);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].detail.contains("node 1 (Add)"), "{}", f[0]);
+        assert!(f[0].detail.contains("not earlier"), "{}", f[0]);
+    }
+
+    #[test]
+    fn self_reference_is_caught() {
+        let view = TapeView {
+            nodes: vec![TapeNode { op: TapeOp::Neg, parents: vec![0], shape: vec![2], aux_shape: None }],
+        };
+        assert_eq!(verify(&view).len(), 1);
+    }
+
+    #[test]
+    fn wrong_arity_fused_op_is_caught() {
+        // Affine with two parents — the bias got lost in a bad rewrite
+        let view = TapeView {
+            nodes: vec![
+                leaf(&[4, 3]),
+                leaf(&[3, 2]),
+                TapeNode {
+                    op: TapeOp::Affine { act: None },
+                    parents: vec![0, 1],
+                    shape: vec![4, 2],
+                    aux_shape: None,
+                },
+            ],
+        };
+        let f = verify(&view);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].detail.contains("(Affine)"), "{}", f[0]);
+        assert!(f[0].detail.contains("arity 2 (expected 3)"), "{}", f[0]);
+    }
+
+    #[test]
+    fn fused_bias_shape_is_checked() {
+        // bias (4, 2) is not a row — the fused rewrite would be illegal
+        let view = TapeView {
+            nodes: vec![
+                leaf(&[4, 3]),
+                leaf(&[3, 2]),
+                leaf(&[4, 2]),
+                TapeNode {
+                    op: TapeOp::Affine { act: None },
+                    parents: vec![0, 1, 2],
+                    shape: vec![4, 2],
+                    aux_shape: None,
+                },
+            ],
+        };
+        let f = verify(&view);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].detail.contains("bias"), "{}", f[0]);
+    }
+
+    #[test]
+    fn matmul_inner_dim_mismatch_is_caught() {
+        let view = TapeView {
+            nodes: vec![
+                leaf(&[4, 3]),
+                leaf(&[5, 2]),
+                TapeNode { op: TapeOp::MatMul, parents: vec![0, 1], shape: vec![4, 2], aux_shape: None },
+            ],
+        };
+        let f = verify(&view);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].detail.contains("inner dims"), "{}", f[0]);
+    }
+
+    #[test]
+    fn dn_conv_batch_layout_is_checked() {
+        // rows 30 != batch 4 * n 8
+        let view = TapeView {
+            nodes: vec![
+                leaf(&[30, 1]),
+                TapeNode {
+                    op: TapeOp::DnConv { n: 8, d: 6, batch: 4 },
+                    parents: vec![0],
+                    shape: vec![32, 6],
+                    aux_shape: None,
+                },
+            ],
+        };
+        let f = verify(&view);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].detail.contains("B·n"), "{}", f[0]);
+    }
+
+    #[test]
+    fn softmax_xent_label_range_is_checked() {
+        let view = TapeView {
+            nodes: vec![
+                leaf(&[4, 2]),
+                TapeNode {
+                    op: TapeOp::SoftmaxXent { batch: 4, max_label: Some(2) },
+                    parents: vec![0],
+                    shape: vec![],
+                    aux_shape: Some(vec![4, 2]),
+                },
+            ],
+        };
+        let f = verify(&view);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].detail.contains("label 2 out of range 2"), "{}", f[0]);
+    }
+
+    #[test]
+    fn concat_widths_must_match() {
+        let view = TapeView {
+            nodes: vec![
+                leaf(&[2, 3]),
+                leaf(&[2, 4]),
+                TapeNode {
+                    op: TapeOp::ConcatCols { widths: vec![3, 5] },
+                    parents: vec![0, 1],
+                    shape: vec![2, 8],
+                    aux_shape: None,
+                },
+            ],
+        };
+        let f = verify(&view);
+        assert!(!f.is_empty());
+        assert!(f[0].detail.contains("width"), "{}", f[0]);
+    }
+}

@@ -507,10 +507,105 @@ impl Graph {
         self.push(out, Op::DnLastScan { op, batch }, vec![u], Some(carries))
     }
 
+    // ------------------------------------------------------------ analysis
+
+    /// Export the recorded tape as a value-free
+    /// [`TapeView`](crate::analyze::tape::TapeView) for the static tape
+    /// verifier: per node, the op (with the metadata its backward rule
+    /// consumes), parent ids, and the value/aux shapes — never tensor
+    /// data.  `Op` itself stays private; this mirror is the only window
+    /// `analyze` gets into the tape.
+    pub fn tape_view(&self) -> crate::analyze::tape::TapeView {
+        use crate::analyze::tape::{TapeNode, TapeOp};
+        let nodes = self
+            .nodes
+            .iter()
+            .map(|node| {
+                let op = match &node.op {
+                    Op::Leaf => TapeOp::Leaf,
+                    Op::Param => TapeOp::Param,
+                    Op::Add => TapeOp::Add,
+                    Op::Sub => TapeOp::Sub,
+                    Op::Mul => TapeOp::Mul,
+                    Op::Neg => TapeOp::Neg,
+                    Op::Scale(_) => TapeOp::Scale,
+                    Op::OneMinus => TapeOp::OneMinus,
+                    Op::Abs => TapeOp::Abs,
+                    Op::AddRow => TapeOp::AddRow,
+                    Op::MatMul => TapeOp::MatMul,
+                    Op::MatMulNT => TapeOp::MatMulNT,
+                    Op::SoftmaxRows => TapeOp::SoftmaxRows,
+                    Op::Tanh => TapeOp::Tanh,
+                    Op::Sigmoid => TapeOp::Sigmoid,
+                    Op::Relu => TapeOp::Relu,
+                    Op::Affine { act } => TapeOp::Affine { act: *act },
+                    Op::Add2RowAct { act } => TapeOp::Add2RowAct { act: *act },
+                    Op::Add3Act { act } => TapeOp::Add3Act { act: *act },
+                    Op::MeanAll => TapeOp::MeanAll,
+                    Op::SumAll => TapeOp::SumAll,
+                    Op::SliceRows { lo } => TapeOp::SliceRows { lo: *lo },
+                    Op::SliceCols { lo, hi } => TapeOp::SliceCols { lo: *lo, hi: *hi },
+                    Op::ConcatCols { widths } => {
+                        TapeOp::ConcatCols { widths: widths.clone() }
+                    }
+                    Op::ConcatRows { heights } => {
+                        TapeOp::ConcatRows { heights: heights.clone() }
+                    }
+                    Op::Reshape { from } => TapeOp::Reshape { from: from.clone() },
+                    Op::SoftmaxXent { labels } => TapeOp::SoftmaxXent {
+                        batch: labels.len(),
+                        max_label: labels.iter().copied().max(),
+                    },
+                    Op::Mse => {
+                        TapeOp::Mse { target_len: node.aux.as_ref().map_or(0, |t| t.len()) }
+                    }
+                    Op::Embedding { ids } => TapeOp::Embedding {
+                        count: ids.len(),
+                        max_id: ids.iter().copied().max(),
+                    },
+                    Op::Dropout { mask } => TapeOp::Dropout { mask_len: mask.len() },
+                    Op::DnConv { op, batch } => {
+                        TapeOp::DnConv { n: op.n(), d: op.d(), batch: *batch }
+                    }
+                    Op::DnLast { batch } => {
+                        // aux is H_rev with shape (n, d)
+                        let hs = node.aux.as_ref().map_or(&[][..], |t| t.shape());
+                        TapeOp::DnLast {
+                            n: hs.first().copied().unwrap_or(0),
+                            d: hs.get(1).copied().unwrap_or(0),
+                            batch: *batch,
+                        }
+                    }
+                    Op::DnLastScan { op, batch } => {
+                        TapeOp::DnLastScan { d: op.d, batch: *batch }
+                    }
+                };
+                TapeNode {
+                    op,
+                    parents: node.parents.clone(),
+                    shape: node.value.shape().to_vec(),
+                    aux_shape: node.aux.as_ref().map(|t| t.shape().to_vec()),
+                }
+            })
+            .collect();
+        crate::analyze::tape::TapeView { nodes }
+    }
+
     // ------------------------------------------------------------ backward
 
     /// Reverse-mode sweep from a scalar loss node.
     pub fn backward(&mut self, loss: NodeId) {
+        // PLMU_VERIFY>=1: verify the recorded tape before the sweep
+        // consumes it, so a stale NodeId or illegal shape surfaces with
+        // op provenance instead of as a slice panic mid-backward
+        if crate::analyze::level() >= 1 {
+            let findings = crate::analyze::tape::verify(&self.tape_view());
+            assert!(
+                findings.is_empty(),
+                "tape verification failed:\n{}",
+                findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+            );
+        }
         assert_eq!(self.nodes[loss].value.len(), 1, "backward from non-scalar");
         self.nodes[loss].grad = Some(Tensor::scalar(1.0));
         for id in (0..=loss).rev() {

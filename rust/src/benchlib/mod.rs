@@ -519,6 +519,13 @@ fn bytes_field(key: &str) -> bool {
     key.contains("bytes")
 }
 
+/// Ratio fields (`speedup`, `scan_over_fft`, `hit_ratio`, ...) compare
+/// two measurements; a 0, NaN, or ∞ here means one side of the division
+/// was missing or zero — a broken bench, not a slow one.
+fn ratio_field(key: &str) -> bool {
+    key.contains("speedup") || key.contains("_over_") || key.contains("ratio")
+}
+
 /// Validate a `BENCH_*.json` perf record, the CI bench stage's gate: a
 /// refactored bench that silently emits an empty or malformed perf
 /// record fails here instead of landing.
@@ -533,6 +540,9 @@ fn bytes_field(key: &str) -> bool {
 ///    `wall_ns`) is finite and non-negative;
 ///  * every byte-count field (key containing `bytes`, e.g.
 ///    `bytes_moved_fused`) is a finite non-negative number;
+///  * every ratio field (key containing `speedup`, `_over_`, or
+///    `ratio`) is finite and strictly positive — a 0/NaN/∞ comparison
+///    means a division against a missing or zero measurement;
 ///  * where a record carries percentile timings of one unit
 ///    (`min_*`/`p50_*`/`p95_*`/`max_*`), they are monotone
 ///    non-decreasing.
@@ -584,6 +594,17 @@ pub fn validate_perf_json(text: &str) -> Result<PerfSummary, String> {
                 if !v.is_finite() || v < 0.0 {
                     return Err(format!(
                         "record {i}: bytes field {key:?} = {v} is not finite and non-negative"
+                    ));
+                }
+            }
+            if ratio_field(key) {
+                let v = value
+                    .as_f64()
+                    .ok_or_else(|| format!("record {i}: ratio field {key:?} is not a number"))?;
+                if !v.is_finite() || v <= 0.0 {
+                    return Err(format!(
+                        "record {i}: ratio field {key:?} = {v} is not finite and positive — \
+                         one side of the comparison was missing or zero"
                     ));
                 }
             }
@@ -813,6 +834,36 @@ mod tests {
         assert!(err.contains("bytes"), "non-numeric byte count not rejected: {err}");
         validate_perf_json(&rec(JsonValue::Int(4096))).expect("valid byte count rejected");
         validate_perf_json(&rec(JsonValue::Num(0.0))).expect("zero byte count rejected");
+    }
+
+    #[test]
+    fn validate_rejects_bad_ratios() {
+        let rec = |key: &str, v: JsonValue| {
+            let mut p = PerfJson::new("demo");
+            p.push(&[
+                ("case", JsonValue::Str("x".into())),
+                ("threads", JsonValue::Int(2)),
+                ("wall_ns", JsonValue::Int(1)),
+                (key, v),
+            ]);
+            p.render()
+        };
+        // zero means one side of the comparison was missing
+        let err = validate_perf_json(&rec("speedup", JsonValue::Num(0.0))).unwrap_err();
+        assert!(err.contains("ratio"), "zero speedup not rejected: {err}");
+        let err = validate_perf_json(&rec("scan_over_fft", JsonValue::Num(-3.0))).unwrap_err();
+        assert!(err.contains("ratio"), "negative ratio not rejected: {err}");
+        let err = validate_perf_json(&rec("hit_ratio", JsonValue::Num(f64::NAN))).unwrap_err();
+        assert!(err.contains("ratio"), "NaN ratio not rejected: {err}");
+        let err =
+            validate_perf_json(&rec("speedup", JsonValue::Num(f64::INFINITY))).unwrap_err();
+        assert!(err.contains("ratio"), "infinite speedup not rejected: {err}");
+        let err = validate_perf_json(&rec("speedup", JsonValue::Str("2x".into()))).unwrap_err();
+        assert!(err.contains("ratio"), "non-numeric speedup not rejected: {err}");
+        // sane values pass, sub-1.0 included (slowdowns are valid data)
+        validate_perf_json(&rec("speedup", JsonValue::Num(3.7))).expect("valid speedup rejected");
+        validate_perf_json(&rec("scan_over_fft", JsonValue::Num(0.8)))
+            .expect("sub-1.0 ratio rejected");
     }
 
     #[test]

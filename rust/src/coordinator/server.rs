@@ -339,6 +339,8 @@ impl DynamicBatcher {
         let (tx, rx) = mpsc::channel::<BatcherCmd>();
         let metrics = Arc::new(ServerMetrics::default());
         let m = metrics.clone();
+        // lint-src: allow(thread-spawn) — the batcher is a long-lived service
+        // thread, deliberately outside the pool's work budget
         let handle = std::thread::spawn(move || {
             let engine = match source {
                 EngineSource::Shared(e) => BatchEngine::Shared(e),
@@ -750,6 +752,7 @@ mod tests {
         let mut handles = Vec::new();
         for client in 0..8u64 {
             let s = server.clone();
+            // lint-src: allow(thread-spawn) — test clients must be real threads
             handles.push(std::thread::spawn(move || {
                 let mut outs = Vec::new();
                 for t in 0..20 {

@@ -101,11 +101,20 @@ pub fn parse_mode(s: &str) -> Result<ScanMode, String> {
 }
 
 fn resolve_default() -> ScanMode {
-    match std::env::var("PLMU_SCAN") {
+    match crate::util::env_knob::str_knob("PLMU_SCAN") {
         // an unparseable env value falls back to the fft default rather
-        // than panicking inside arbitrary library calls
-        Ok(v) => parse_mode(&v).unwrap_or(ScanMode::Fft),
-        Err(_) => ScanMode::Fft,
+        // than panicking inside arbitrary library calls — but it warns
+        // once to stderr so the fallback is never silent.  The config
+        // and CLI paths keep failing loud (`config::apply_scan`,
+        // `main.rs --scan`).
+        Some(v) => parse_mode(&v).unwrap_or_else(|e| {
+            crate::util::env_knob::warn_once(
+                "PLMU_SCAN",
+                &format!("ignoring PLMU_SCAN ({e}); using the fft default"),
+            );
+            ScanMode::Fft
+        }),
+        None => ScanMode::Fft,
     }
 }
 

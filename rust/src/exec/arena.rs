@@ -41,7 +41,9 @@
 //! determinism` needs no arena dimension.
 
 use std::cell::RefCell;
+use std::collections::HashMap; // lint-src: allow(hashmap) — identity registry below is insert/remove/lookup only, never iterated
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
 
 /// Per-class cap on retained free buffers.  Untracked buffers can enter
 /// through `release` (e.g. batch tensors built outside the scope but
@@ -102,6 +104,44 @@ pub fn global_stats() -> ArenaStats {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Buffer-identity tracking (debug builds and PLMU_VERIFY=2)
+// ---------------------------------------------------------------------------
+
+/// Arena ids for release-provenance checks; starts at 1 so 0 never
+/// names a real arena.
+static NEXT_ARENA_ID: AtomicU64 = AtomicU64::new(1);
+
+/// `ptr -> issuing arena id` for buffers currently issued by some
+/// arena.  Insert on `take`, remove on `release`/[`untrack`] — so an
+/// entry exists exactly while an arena-issued buffer is live, and a
+/// `release` can verify the buffer comes home to the arena that issued
+/// it.  Never iterated (lookup-only), so it cannot affect determinism.
+static ISSUED_BY: OnceLock<Mutex<HashMap<usize, u64>>> = OnceLock::new(); // lint-src: allow(hashmap)
+
+/// Whether identity tracking is on: always in debug builds (the
+/// [`Arena::put`] identity check), and in release builds at
+/// `PLMU_VERIFY=2` (the audit event stream needs provenance).  In a
+/// level-0 release build this is one relaxed load.
+#[inline]
+fn tracking() -> bool {
+    cfg!(debug_assertions) || crate::analyze::audit_enabled()
+}
+
+fn registry() -> &'static Mutex<HashMap<usize, u64>> { // lint-src: allow(hashmap)
+    ISSUED_BY.get_or_init(|| Mutex::new(HashMap::new())) // lint-src: allow(hashmap)
+}
+
+/// Forget a buffer's arena provenance.  Called by every path that moves
+/// an arena-issued buffer out of arena management without a `release`
+/// (`Tensor::into_data`), so the registry never holds a stale entry for
+/// an address the allocator may reuse.
+pub(crate) fn untrack(ptr: *const f32) {
+    if tracking() {
+        registry().lock().unwrap().remove(&(ptr as usize));
+    }
+}
+
 /// Size class that can serve a request for `len` elements: the
 /// exponent of `len.next_power_of_two()`, so class `c` serves every
 /// `len in (2^(c-1), 2^c]`.
@@ -123,16 +163,43 @@ fn class_for_cap(cap: usize) -> usize {
 /// A size-classed free-list pool of `Vec<f32>` buffers.  Plain data
 /// (`Send`), owned by one train loop / replica / optimizer stage and
 /// installed per thread with [`scope`].
-#[derive(Default)]
 pub struct Arena {
     /// `classes[c]` holds freed buffers with `capacity in [2^c, 2^(c+1))`.
     classes: Vec<Vec<Vec<f32>>>,
     stats: ArenaStats,
+    /// process-unique identity, for release-provenance checks
+    id: u64,
+    /// buffer-identity event log, populated at `PLMU_VERIFY=2` and
+    /// drained by [`Arena::take_audit_events`] (the `plmu analyze`
+    /// arena pass replays it)
+    audit_log: Vec<crate::analyze::arena_check::ArenaEvent>,
+}
+
+impl Default for Arena {
+    fn default() -> Self {
+        Arena {
+            classes: Vec::new(),
+            stats: ArenaStats::default(),
+            id: NEXT_ARENA_ID.fetch_add(1, Ordering::Relaxed),
+            audit_log: Vec::new(),
+        }
+    }
 }
 
 impl Arena {
     pub fn new() -> Self {
         Arena::default()
+    }
+
+    /// This arena's process-unique identity.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Drain the buffer-identity event log recorded at `PLMU_VERIFY=2`
+    /// (empty below level 2).
+    pub fn take_audit_events(&mut self) -> Vec<crate::analyze::arena_check::ArenaEvent> {
+        std::mem::take(&mut self.audit_log)
     }
 
     /// Snapshot of this arena's counters (read between [`scope`] calls;
@@ -149,22 +216,65 @@ impl Arena {
 
     fn take(&mut self, len: usize) -> Vec<f32> {
         let c = class_for_len(len);
-        if let Some(buf) = self.classes.get_mut(c).and_then(|l| l.pop()) {
+        let (buf, fresh) = if let Some(buf) = self.classes.get_mut(c).and_then(|l| l.pop()) {
             self.stats.hits += 1;
             G_HITS.fetch_add(1, Ordering::Relaxed);
             debug_assert!(buf.capacity() >= len);
-            buf
+            (buf, false)
         } else {
             let cap = 1usize << c;
             self.stats.misses += 1;
             self.stats.fresh_bytes += (cap * std::mem::size_of::<f32>()) as u64;
             G_MISSES.fetch_add(1, Ordering::Relaxed);
             G_FRESH_BYTES.fetch_add((cap * std::mem::size_of::<f32>()) as u64, Ordering::Relaxed);
-            Vec::with_capacity(cap)
+            (Vec::with_capacity(cap), true)
+        };
+        if tracking() {
+            // overwrite is deliberate: the allocator may reuse an address
+            // whose previous tenant left arena management untracked
+            registry().lock().unwrap().insert(buf.as_ptr() as usize, self.id);
         }
+        if crate::analyze::audit_enabled() {
+            self.audit_log.push(crate::analyze::arena_check::ArenaEvent::Issue {
+                buf: buf.as_ptr() as usize,
+                bytes: buf.capacity() * std::mem::size_of::<f32>(),
+                fresh,
+            });
+        }
+        buf
     }
 
     fn put(&mut self, buf: Vec<f32>) {
+        let ptr = buf.as_ptr() as usize;
+        let issued_by = if tracking() { registry().lock().unwrap().remove(&ptr) } else { None };
+        // The identity check `release` promises: a buffer coming home
+        // must have been issued by THIS arena (cross-arena release is
+        // the --pipeline free-list-migration hazard) and must not
+        // already be parked on a free list (double release).  Buffers
+        // with no provenance are foreign Vecs adopted by design (e.g.
+        // batch tensors built outside the scope, dropped inside it).
+        #[cfg(debug_assertions)]
+        {
+            if let Some(owner) = issued_by {
+                assert_eq!(
+                    owner, self.id,
+                    "arena {}: released buffer {ptr:#x} was issued by arena {owner} — cross-arena release",
+                    self.id
+                );
+            }
+            assert!(
+                !self.classes.iter().flatten().any(|b| b.as_ptr() as usize == ptr),
+                "arena {}: buffer {ptr:#x} is already on a free list — double release",
+                self.id
+            );
+        }
+        if crate::analyze::audit_enabled() {
+            self.audit_log.push(crate::analyze::arena_check::ArenaEvent::Reclaim {
+                buf: ptr,
+                bytes: buf.capacity() * std::mem::size_of::<f32>(),
+                issued_by,
+            });
+        }
         let c = class_for_cap(buf.capacity());
         if self.classes.len() <= c {
             self.classes.resize_with(c + 1, Vec::new);
@@ -274,8 +384,11 @@ pub fn release(buf: Vec<f32>) {
     CURRENT.with(|c| {
         if let Some(a) = c.borrow_mut().as_mut() {
             a.put(buf);
+        } else {
+            // `buf` drops here, a plain deallocation — forget its
+            // provenance so the registry never maps a freed address
+            untrack(buf.as_ptr());
         }
-        // else: `buf` drops here, a plain deallocation
     });
 }
 

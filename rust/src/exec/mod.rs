@@ -71,12 +71,8 @@ pub const CHUNK_WORK_TARGET: usize = 1 << 12;
 pub const MAX_CHUNKS_PER_WORKER: usize = 8;
 
 fn resolve_default() -> usize {
-    if let Ok(v) = std::env::var("PLMU_THREADS") {
-        if let Ok(n) = v.trim().parse::<usize>() {
-            if n >= 1 {
-                return n;
-            }
-        }
+    if let Some(n) = crate::util::env_knob::usize_knob("PLMU_THREADS", 1) {
+        return n;
     }
     std::thread::available_parallelism()
         .map(|n| n.get())
@@ -273,6 +269,20 @@ where
         return;
     }
     let total_len = out.len();
+    // PLMU_VERIFY>=1: prove the SAFETY claim below — the chunk ranges
+    // must partition [0, total_len) — before any `&mut` fans out
+    if crate::analyze::level() >= 1 {
+        let ranges: Vec<(usize, usize)> = (0..chunks)
+            .map(|ci| {
+                let start = ci * chunk_rows * row_len;
+                let end =
+                    if ci + 1 == chunks { total_len } else { start + chunk_rows * row_len };
+                (start, end)
+            })
+            .collect();
+        let findings = crate::analyze::exec_check::check_ranges(total_len, &ranges);
+        assert!(findings.is_empty(), "parallel_rows_mut chunk plan is unsound: {findings:?}");
+    }
     let base = SendPtr(out.as_mut_ptr());
     pool::run(chunks, plan.workers, &|ci| {
         let start = ci * chunk_rows * row_len;
@@ -443,6 +453,19 @@ where
     // an undersized buffer (fewer elements than one row) is still handed
     // to `f` whole, as one chunk — mirroring `parallel_rows_mut`
     let chunks = if total_len == 0 { 0 } else { rows.max(1) };
+    // PLMU_VERIFY>=1: same pre-dispatch disjointness proof as
+    // `parallel_rows_mut`, for the one-row-per-chunk partition
+    if chunks > 0 && crate::analyze::level() >= 1 {
+        let ranges: Vec<(usize, usize)> = (0..chunks)
+            .map(|ci| {
+                let start = ci * row_len;
+                let end = if ci + 1 >= rows { total_len } else { start + row_len };
+                (start, end)
+            })
+            .collect();
+        let findings = crate::analyze::exec_check::check_ranges(total_len, &ranges);
+        assert!(findings.is_empty(), "parallel_rows_async chunk plan is unsound: {findings:?}");
+    }
     let body = move |ci: usize| {
         let start = ci * row_len;
         // the last row absorbs any ragged tail beyond rows * row_len

@@ -106,6 +106,9 @@ struct JobCore {
     attached: AtomicUsize,
     /// first panic payload observed in a chunk of this job
     panic: Mutex<Option<Box<dyn Any + Send>>>,
+    /// nonzero = the `PLMU_VERIFY=2` audit id events for this job carry
+    /// (zero = auditing off at dispatch time; chunks record nothing)
+    audit_id: u64,
 }
 
 impl JobCore {
@@ -268,15 +271,32 @@ fn drain(pool: &Pool, core: &JobCore) {
 /// Execute one chunk: busy accounting, sub-budget install, panic capture.
 fn run_chunk(pool: &Pool, core: &JobCore, idx: usize) -> Option<Box<dyn Any + Send>> {
     let _busy = BusyGuard::new(pool);
-    let _env = super::enter_chunk(core.sub_budget(idx));
-    catch_unwind(AssertUnwindSafe(|| {
+    let sub = core.sub_budget(idx);
+    let _env = super::enter_chunk(sub);
+    if core.audit_id != 0 {
+        crate::analyze::audit::record(crate::analyze::exec_check::PoolEvent::ChunkStart {
+            job: core.audit_id,
+            idx,
+            sub_budget: sub,
+        });
+    }
+    let result = catch_unwind(AssertUnwindSafe(|| {
         // SAFETY: see `JobFn` — the dispatcher keeps the closure alive
         // until `done == chunks`, and this call's `finish` contribution
         // happens only after `f` returns.
         let f = unsafe { &*core.f.0 };
         f(idx)
     }))
-    .err()
+    .err();
+    // recorded on the panic path too: the chunk *stopped running*, which
+    // is what the offline active-set/budget replay needs to know
+    if core.audit_id != 0 {
+        crate::analyze::audit::record(crate::analyze::exec_check::PoolEvent::ChunkEnd {
+            job: core.audit_id,
+            idx,
+        });
+    }
+    result
 }
 
 /// Record `n` chunks as executed/abandoned; on completion, wake the
@@ -350,6 +370,8 @@ pub(super) fn run(chunks: usize, workers: usize, f: &(dyn Fn(usize) + Sync)) {
         let f_erased: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
         JobFn(f_erased)
     };
+    let audit_id =
+        if crate::analyze::audit_enabled() { crate::analyze::audit::next_job_id() } else { 0 };
     let core = Arc::new(JobCore {
         f: job_fn,
         chunks,
@@ -360,7 +382,19 @@ pub(super) fn run(chunks: usize, workers: usize, f: &(dyn Fn(usize) + Sync)) {
         budget_extra: budget % cap,
         attached: AtomicUsize::new(1), // the dispatcher occupies one slot
         panic: Mutex::new(None),
+        audit_id,
     });
+    if audit_id != 0 {
+        // stamped before the job is visible in the registry, so every
+        // chunk event of this job sequences after its JobBegin
+        crate::analyze::audit::record(crate::analyze::exec_check::PoolEvent::JobBegin {
+            job: audit_id,
+            chunks,
+            workers_cap: cap,
+            budget,
+            root: super::threads(),
+        });
+    }
     let to_spawn = {
         let mut st = lock(&pool.state);
         st.jobs.push(core.clone());
@@ -409,6 +443,14 @@ pub(super) fn run(chunks: usize, workers: usize, f: &(dyn Fn(usize) + Sync)) {
     }
     drop(owner);
     let panic = core.panic.lock().unwrap_or_else(|e| e.into_inner()).take();
+    if audit_id != 0 {
+        // every chunk's End event is already stamped (done == chunks
+        // was observed), so JobEnd sequences after all of them
+        crate::analyze::audit::record(crate::analyze::exec_check::PoolEvent::JobEnd {
+            job: audit_id,
+            panicked: panic.is_some(),
+        });
+    }
     if let Some(p) = panic {
         std::panic::resume_unwind(p);
     }
@@ -487,6 +529,8 @@ pub(super) fn run_async(
         let f_erased: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
         JobFn(f_erased)
     };
+    let audit_id =
+        if crate::analyze::audit_enabled() { crate::analyze::audit::next_job_id() } else { 0 };
     let core = Arc::new(JobCore {
         f: job_fn,
         chunks,
@@ -499,7 +543,17 @@ pub(super) fn run_async(
         // away to overlap other work, so all `cap` slots go to helpers
         attached: AtomicUsize::new(0),
         panic: Mutex::new(None),
+        audit_id,
     });
+    if audit_id != 0 {
+        crate::analyze::audit::record(crate::analyze::exec_check::PoolEvent::JobBegin {
+            job: audit_id,
+            chunks,
+            workers_cap: cap,
+            budget,
+            root: super::threads(),
+        });
+    }
     let to_spawn = {
         let mut st = lock(&pool.state);
         st.jobs.push(core.clone());
@@ -562,6 +616,14 @@ pub(super) fn wait_async(mut job: AsyncJob, propagate: bool) {
     }
     job.owner.take();
     let panic = job.core.panic.lock().unwrap_or_else(|e| e.into_inner()).take();
+    if job.core.audit_id != 0 {
+        // done == chunks was observed above, so every ChunkEnd is already
+        // sequence-stamped before this JobEnd
+        crate::analyze::audit::record(crate::analyze::exec_check::PoolEvent::JobEnd {
+            job: job.core.audit_id,
+            panicked: panic.is_some(),
+        });
+    }
     if let Some(p) = panic {
         if propagate {
             std::panic::resume_unwind(p);

@@ -18,7 +18,7 @@
 
 use crate::exec;
 use crate::simd;
-use std::collections::HashMap;
+use std::collections::HashMap; // lint-src: allow(hashmap) — caches below, lookup-only
 use std::f64::consts::PI;
 use std::sync::{Arc, OnceLock, RwLock};
 
@@ -188,19 +188,21 @@ impl Plan {
     }
 }
 
+// lint-src: allow(hashmap) — plan/twiddle caches are get-or-build by key, never iterated
 static PLAN_CACHE: OnceLock<RwLock<HashMap<usize, Arc<Plan>>>> = OnceLock::new();
 /// post-twiddles w^k = exp(-2pi i k / nfft), k in [0, nfft/2] — shared
 /// by rfft_half / irfft_half (recomputing trig per call dominated the
 /// half-spectrum savings; see EXPERIMENTS.md §Perf).
+// lint-src: allow(hashmap)
 static RTWIDDLE_CACHE: OnceLock<RwLock<HashMap<usize, Arc<Vec<Cpx>>>>> = OnceLock::new();
 
 /// Read-mostly lookup in a global keyed cache, building on miss.
 fn cached<V: Clone>(
-    cache: &OnceLock<RwLock<HashMap<usize, V>>>,
+    cache: &OnceLock<RwLock<HashMap<usize, V>>>, // lint-src: allow(hashmap)
     key: usize,
     build: impl FnOnce() -> V,
 ) -> V {
-    let lock = cache.get_or_init(|| RwLock::new(HashMap::new()));
+    let lock = cache.get_or_init(|| RwLock::new(HashMap::new())); // lint-src: allow(hashmap)
     if let Some(v) = lock.read().expect("fft cache poisoned").get(&key) {
         return v.clone();
     }
@@ -560,6 +562,7 @@ mod tests {
     fn plan_cache_shared_across_threads() {
         // the global Arc cache must hand identical plans to worker threads
         let p_main = plan(64);
+        // lint-src: allow(thread-spawn) — test needs a raw OS thread, not pool work
         let p_thread = std::thread::spawn(|| plan(64)).join().unwrap();
         assert!(Arc::ptr_eq(&p_main, &p_thread), "plan cache not shared across threads");
     }

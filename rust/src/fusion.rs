@@ -19,9 +19,10 @@
 //! `PLMU_FUSION ∈ {1, 0}` on top of the threads × simd matrix.
 //!
 //! The knob mirrors `PLMU_SIMD` exactly: resolved once from the
-//! `PLMU_FUSION` environment variable (`0`/`off`/`false` disable it),
-//! overridable by [`set_enabled`] from tests, benches, config, and the
-//! `--no-fusion` CLI flag.
+//! `PLMU_FUSION` environment variable via the unified
+//! [`crate::util::env_knob`] parser (`0`/`off`/`false`/`no` disable
+//! it), overridable by [`set_enabled`] from tests, benches, config,
+//! and the `--no-fusion` CLI flag.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -29,19 +30,13 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 static FUSION_ENABLED: AtomicUsize = AtomicUsize::new(0);
 
 fn resolve_default() -> bool {
-    match std::env::var("PLMU_FUSION") {
-        Ok(v) => {
-            let v = v.trim();
-            !(v == "0" || v.eq_ignore_ascii_case("off") || v.eq_ignore_ascii_case("false"))
-        }
-        Err(_) => true,
-    }
+    crate::util::env_knob::bool_knob("PLMU_FUSION", true)
 }
 
 /// Whether the graph builders record fused nodes (default: on, unless
-/// `PLMU_FUSION=0`/`off`/`false`).  Both settings are bit-identical by
-/// construction; the knob exists so the determinism gate can prove it
-/// end-to-end.
+/// `PLMU_FUSION=0`/`off`/`false`/`no`).  Both settings are
+/// bit-identical by construction; the knob exists so the determinism
+/// gate can prove it end-to-end.
 pub fn enabled() -> bool {
     match FUSION_ENABLED.load(Ordering::Relaxed) {
         1 => true,

@@ -43,6 +43,7 @@
 //! See DESIGN.md for the experiment index and architecture notes, and
 //! EXPERIMENTS.md for results and perf records.
 
+pub mod analyze;
 pub mod autograd;
 pub mod benchlib;
 pub mod cli;

@@ -7,6 +7,8 @@
 //!   serve        demo the streaming-inference server on synthetic traffic
 //!   exec         compile + run an AOT artifact once (sanity check)
 //!   bench-check  validate BENCH_*.json perf records (CI gate)
+//!   analyze      run the PLMU_VERIFY=2 tape/arena/exec audits (CI gate)
+//!   lint-src     source-conformance lint over the crate sources (CI gate)
 //!
 //! Examples:
 //!   plmu train --task psmnist --model parallel --epochs 3
@@ -14,6 +16,8 @@
 //!   plmu serve --sessions 16 --tokens 100 --replicas 2
 //!   plmu exec --artifact dn_fwd_fft
 //!   plmu bench-check BENCH_threads.json BENCH_pool.json
+//!   plmu analyze
+//!   plmu lint-src rust/src
 
 use plmu::autograd::ParamStore;
 use plmu::cli::Args;
@@ -102,6 +106,8 @@ fn main() -> Result<()> {
         "serve" => serve(&args),
         "exec" => exec(&args),
         "bench-check" => bench_check(&args),
+        "analyze" => analyze(&args),
+        "lint-src" => lint_src(&args),
         other => {
             eprintln!("unknown command {other:?}\n{}", args.help_text());
             std::process::exit(2);
@@ -338,6 +344,50 @@ fn bench_check(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Run the PLMU_VERIFY=2 analysis passes — tape verifier, arena
+/// alias/liveness replay, exec disjointness + budget audit — over every
+/// model family x DN path, and gate on the findings (the CI analyze
+/// stage's first gate).
+fn analyze(_args: &Args) -> Result<()> {
+    let report = plmu::analyze::analyze_models();
+    print!("{}", report.render());
+    if report.total_findings() > 0 {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
+/// Source-conformance lint (analysis pass 4): walk the crate sources and
+/// enforce the repo's structural rules — no ad-hoc thread spawns outside
+/// exec/, no HashMap on fingerprinted paths, env knobs via the unified
+/// helper, complete simd dispatch triples.  Second CI analyze gate.
+fn lint_src(args: &Args) -> Result<()> {
+    let root = args
+        .positionals()
+        .get(1)
+        .cloned()
+        .unwrap_or_else(|| "rust/src".to_string());
+    let findings = match plmu::analyze::lint::lint_tree(std::path::Path::new(&root)) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("lint-src: cannot walk {root}: {e}");
+            std::process::exit(2);
+        }
+    };
+    for f in &findings {
+        println!("{f}");
+    }
+    println!(
+        "lint-src: {} finding(s) over {root} ({} rules)",
+        findings.len(),
+        plmu::analyze::lint::rule_names().len()
+    );
+    if !findings.is_empty() {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
 fn serve(args: &Args) -> Result<()> {
     let sessions = args.get_u64("sessions");
     let tokens = args.get_usize("tokens");
@@ -357,6 +407,7 @@ fn serve(args: &Args) -> Result<()> {
     let mut handles = Vec::new();
     for sid in 0..sessions {
         let s = server.clone();
+        // lint-src: allow(thread-spawn) — synthetic client traffic, not kernel work
         handles.push(std::thread::spawn(move || {
             for t in 0..tokens {
                 let x = ((t as f32) * 0.1 + sid as f32).sin();

@@ -16,9 +16,10 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 static ALLOC_STATS: AtomicUsize = AtomicUsize::new(0);
 
 fn resolve_alloc_stats() -> usize {
-    match std::env::var("PLMU_ALLOC_STATS") {
-        Ok(v) if v == "1" || v.eq_ignore_ascii_case("on") || v.eq_ignore_ascii_case("true") => 1,
-        _ => 2,
+    if crate::util::env_knob::bool_knob("PLMU_ALLOC_STATS", false) {
+        1
+    } else {
+        2
     }
 }
 

@@ -4,6 +4,8 @@
 
 use crate::autograd::{ParamId, ParamStore};
 use crate::tensor::Tensor;
+// lint-src: allow(hashmap) — optimizer state maps are keyed lookups only;
+// update order is driven by the caller's (ParamId, Tensor) slice
 use std::collections::HashMap;
 
 /// Clip a set of gradients to a maximum global L2 norm (in place).
@@ -50,13 +52,14 @@ pub struct Adam {
     pub beta2: f32,
     pub eps: f32,
     t: u64,
-    m: HashMap<ParamId, Tensor>,
-    v: HashMap<ParamId, Tensor>,
+    m: HashMap<ParamId, Tensor>, // lint-src: allow(hashmap)
+    v: HashMap<ParamId, Tensor>, // lint-src: allow(hashmap)
 }
 
 impl Adam {
     /// Keras-default settings, as the paper uses throughout.
     pub fn new(lr: f32) -> Self {
+        // lint-src: allow(hashmap)
         Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, t: 0, m: HashMap::new(), v: HashMap::new() }
     }
 
@@ -107,12 +110,12 @@ impl Optimizer for Adam {
 pub struct Sgd {
     pub lr: f32,
     pub momentum: f32,
-    velocity: HashMap<ParamId, Tensor>,
+    velocity: HashMap<ParamId, Tensor>, // lint-src: allow(hashmap)
 }
 
 impl Sgd {
     pub fn new(lr: f32, momentum: f32) -> Self {
-        Sgd { lr, momentum, velocity: HashMap::new() }
+        Sgd { lr, momentum, velocity: HashMap::new() } // lint-src: allow(hashmap)
     }
 }
 

@@ -107,19 +107,13 @@ fn tree_max_gt(l: [f32; 8]) -> f32 {
 static SIMD_ENABLED: AtomicUsize = AtomicUsize::new(0);
 
 fn resolve_default() -> bool {
-    match std::env::var("PLMU_SIMD") {
-        Ok(v) => {
-            let v = v.trim();
-            !(v == "0" || v.eq_ignore_ascii_case("off") || v.eq_ignore_ascii_case("false"))
-        }
-        Err(_) => true,
-    }
+    crate::util::env_knob::bool_knob("PLMU_SIMD", true)
 }
 
 /// Whether the dispatching kernels take the vector path (default: on,
-/// unless `PLMU_SIMD=0`/`off`/`false`).  Both settings are bit-identical
-/// by construction; the knob exists so the determinism gate can prove
-/// it end-to-end.
+/// unless `PLMU_SIMD=0`/`off`/`false`/`no`).  Both settings are
+/// bit-identical by construction; the knob exists so the determinism
+/// gate can prove it end-to-end.
 pub fn enabled() -> bool {
     match SIMD_ENABLED.load(Ordering::Relaxed) {
         1 => true,

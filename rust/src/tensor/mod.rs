@@ -184,8 +184,13 @@ impl Tensor {
 
     pub fn into_data(mut self) -> Vec<f32> {
         // `Drop` forbids moving the field out; take it so the drop sees
-        // an empty buffer and the caller owns the (untracked) Vec
-        std::mem::take(&mut self.data)
+        // an empty buffer and the caller owns the Vec.  The buffer
+        // leaves arena management here without a `release`, so forget
+        // its issue provenance — the identity registry must never map
+        // an address the caller will free on their own.
+        let data = std::mem::take(&mut self.data);
+        arena::untrack(data.as_ptr());
+        data
     }
 
     /// Number of rows / row length, treating the tensor as 2-D

@@ -1,0 +1,220 @@
+//! Unified parsing for the `PLMU_*` environment knobs.
+//!
+//! Every runtime knob (`PLMU_THREADS`, `PLMU_SIMD`, `PLMU_FUSION`,
+//! `PLMU_SCAN`, `PLMU_VERIFY`, `PLMU_ALLOC_STATS`) resolves its
+//! environment default through this module, so all knobs accept the
+//! same spellings and misspelled values behave the same way
+//! everywhere: **warn once to stderr, fall back to the documented
+//! default**.  Env knobs are convenience overrides for ad-hoc runs;
+//! the config-file and CLI paths keep failing loud (a typo in a
+//! checked-in config is a bug, a typo in a shell export is a shrug).
+//!
+//! Accepted spellings (case-insensitive, surrounding whitespace
+//! ignored):
+//!
+//! * boolean knobs — on: `1`/`on`/`true`/`yes`; off: `0`/`off`/`false`/`no`
+//! * integer knobs — a plain base-10 integer within the knob's range
+//! * string knobs (`PLMU_SCAN`) — the caller parses; on failure it
+//!   routes the complaint through [`warn_once`]
+//!
+//! An empty value is treated as unset.  The `plmu lint-src` pass
+//! enforces that no code outside this module reads `PLMU_*` variables
+//! directly (see `analyze::lint`).
+
+use std::sync::{Mutex, OnceLock};
+
+/// Knob names that have already produced a warning (warn-once: a knob
+/// is typically resolved once and cached in an atomic, but the racy
+/// double-resolve idiom the knobs share may re-read the environment).
+static WARNED: OnceLock<Mutex<Vec<String>>> = OnceLock::new();
+
+/// Print `msg` to stderr at most once per knob `name` for the process
+/// lifetime.
+pub fn warn_once(name: &str, msg: &str) {
+    let warned = WARNED.get_or_init(|| Mutex::new(Vec::new()));
+    let mut seen = warned.lock().unwrap();
+    if !seen.iter().any(|n| n == name) {
+        seen.push(name.to_string());
+        eprintln!("plmu: warning: {msg}");
+    }
+}
+
+/// Test-only: forget previous warnings so warn-once behavior is
+/// observable per test.
+#[cfg(test)]
+fn reset_warnings() {
+    if let Some(warned) = WARNED.get() {
+        warned.lock().unwrap().clear();
+    }
+}
+
+/// Raw string value of an env knob; `None` when unset or empty.
+pub fn str_knob(name: &str) -> Option<String> {
+    match std::env::var(name) {
+        Ok(v) => {
+            let v = v.trim();
+            if v.is_empty() {
+                None
+            } else {
+                Some(v.to_string())
+            }
+        }
+        Err(_) => None,
+    }
+}
+
+/// Boolean knob: `1`/`on`/`true`/`yes` and `0`/`off`/`false`/`no`
+/// (case-insensitive).  Unset or empty -> `default`; anything else
+/// warns once and falls back to `default`.
+pub fn bool_knob(name: &str, default: bool) -> bool {
+    let Some(v) = str_knob(name) else { return default };
+    match parse_bool(&v) {
+        Some(b) => b,
+        None => {
+            let d = if default { "on" } else { "off" };
+            warn_once(
+                name,
+                &format!(
+                    "unrecognized {name}={v:?} (expected 1/on/true/yes or 0/off/false/no); \
+                     using default ({d})"
+                ),
+            );
+            default
+        }
+    }
+}
+
+fn parse_bool(v: &str) -> Option<bool> {
+    if v == "1"
+        || v.eq_ignore_ascii_case("on")
+        || v.eq_ignore_ascii_case("true")
+        || v.eq_ignore_ascii_case("yes")
+    {
+        Some(true)
+    } else if v == "0"
+        || v.eq_ignore_ascii_case("off")
+        || v.eq_ignore_ascii_case("false")
+        || v.eq_ignore_ascii_case("no")
+    {
+        Some(false)
+    } else {
+        None
+    }
+}
+
+/// Integer knob with a minimum (e.g. `PLMU_THREADS` >= 1).  `None`
+/// means unset/empty or unparseable (the caller applies its automatic
+/// default); unparseable or below-minimum values warn once.
+pub fn usize_knob(name: &str, min: usize) -> Option<usize> {
+    let v = str_knob(name)?;
+    match v.parse::<usize>() {
+        Ok(n) if n >= min => Some(n),
+        _ => {
+            warn_once(
+                name,
+                &format!("unrecognized {name}={v:?} (expected an integer >= {min}); using default"),
+            );
+            None
+        }
+    }
+}
+
+/// Bounded-level knob (e.g. `PLMU_VERIFY` in `0..=max`).  Unset/empty
+/// -> `default`; out-of-range or unparseable warns once and falls back
+/// to `default`.
+pub fn level_knob(name: &str, max: usize, default: usize) -> usize {
+    let Some(v) = str_knob(name) else { return default };
+    match v.parse::<usize>() {
+        Ok(n) if n <= max => n,
+        _ => {
+            warn_once(
+                name,
+                &format!("unrecognized {name}={v:?} (expected 0..={max}); using default ({default})"),
+            );
+            default
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Each test uses its own variable name: libtest runs tests in
+    // parallel and the process environment is shared.
+
+    #[test]
+    fn bool_spellings() {
+        for (s, want) in [
+            ("1", true),
+            ("on", true),
+            ("TRUE", true),
+            ("yes", true),
+            ("0", false),
+            ("off", false),
+            ("False", false),
+            ("NO", false),
+            (" 1 ", true),
+        ] {
+            std::env::set_var("PLMU_TEST_BOOL_SPELL", s);
+            assert_eq!(bool_knob("PLMU_TEST_BOOL_SPELL", !want), want, "spelling {s:?}");
+        }
+        std::env::remove_var("PLMU_TEST_BOOL_SPELL");
+        assert!(bool_knob("PLMU_TEST_BOOL_SPELL", true));
+        assert!(!bool_knob("PLMU_TEST_BOOL_SPELL", false));
+    }
+
+    #[test]
+    fn bool_garbage_falls_back_to_default() {
+        std::env::set_var("PLMU_TEST_BOOL_BAD", "banana");
+        assert!(bool_knob("PLMU_TEST_BOOL_BAD", true));
+        assert!(!bool_knob("PLMU_TEST_BOOL_BAD", false));
+        std::env::remove_var("PLMU_TEST_BOOL_BAD");
+    }
+
+    #[test]
+    fn empty_is_unset() {
+        std::env::set_var("PLMU_TEST_EMPTY", "  ");
+        assert_eq!(str_knob("PLMU_TEST_EMPTY"), None);
+        assert!(bool_knob("PLMU_TEST_EMPTY", true));
+        assert_eq!(usize_knob("PLMU_TEST_EMPTY", 1), None);
+        assert_eq!(level_knob("PLMU_TEST_EMPTY", 2, 0), 0);
+        std::env::remove_var("PLMU_TEST_EMPTY");
+    }
+
+    #[test]
+    fn usize_minimum_and_garbage() {
+        std::env::set_var("PLMU_TEST_USIZE", "4");
+        assert_eq!(usize_knob("PLMU_TEST_USIZE", 1), Some(4));
+        std::env::set_var("PLMU_TEST_USIZE", "0");
+        assert_eq!(usize_knob("PLMU_TEST_USIZE", 1), None);
+        std::env::set_var("PLMU_TEST_USIZE", "many");
+        assert_eq!(usize_knob("PLMU_TEST_USIZE", 1), None);
+        std::env::remove_var("PLMU_TEST_USIZE");
+        assert_eq!(usize_knob("PLMU_TEST_USIZE", 1), None);
+    }
+
+    #[test]
+    fn level_range() {
+        std::env::set_var("PLMU_TEST_LEVEL", "2");
+        assert_eq!(level_knob("PLMU_TEST_LEVEL", 2, 0), 2);
+        std::env::set_var("PLMU_TEST_LEVEL", "3");
+        assert_eq!(level_knob("PLMU_TEST_LEVEL", 2, 0), 0);
+        std::env::set_var("PLMU_TEST_LEVEL", "-1");
+        assert_eq!(level_knob("PLMU_TEST_LEVEL", 2, 1), 1);
+        std::env::remove_var("PLMU_TEST_LEVEL");
+        assert_eq!(level_knob("PLMU_TEST_LEVEL", 2, 0), 0);
+    }
+
+    #[test]
+    fn warnings_fire_once_per_name() {
+        reset_warnings();
+        let warned = WARNED.get_or_init(|| Mutex::new(Vec::new()));
+        warn_once("PLMU_TEST_WARN", "first");
+        warn_once("PLMU_TEST_WARN", "second");
+        warn_once("PLMU_TEST_WARN_OTHER", "third");
+        let seen = warned.lock().unwrap();
+        assert_eq!(seen.iter().filter(|n| n.as_str() == "PLMU_TEST_WARN").count(), 1);
+        assert_eq!(seen.iter().filter(|n| n.as_str() == "PLMU_TEST_WARN_OTHER").count(), 1);
+    }
+}

@@ -1,6 +1,7 @@
 //! Small utilities shared across the framework: a seedable PRNG (no `rand`
 //! crate is available offline), wall-clock timing helpers and formatting.
 
+pub mod env_knob;
 pub mod rng;
 pub mod timer;
 

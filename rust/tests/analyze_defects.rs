@@ -1,0 +1,159 @@
+//! Seeded-defect suite for the static analysis passes (`plmu analyze`):
+//! each test constructs the exact defect a pass exists to catch — a
+//! forward-referencing tape node, a wrong-arity fused op, a
+//! double-release in the arena event stream, overlapping chunk ranges,
+//! an over-budget pool event log — and asserts the checker flags it
+//! with the right provenance.  The final test is the clean half of the
+//! differential: the full `analyze_models` sweep (all four model
+//! families x both DN paths, instrumentation forced to `PLMU_VERIFY=2`)
+//! must come back with zero findings.
+//!
+//! The defect tests feed the checkers hand-built inputs only — no
+//! global knobs — so they can run concurrently with the clean sweep.
+
+use plmu::analyze::arena_check::{check_arena_log, ArenaEvent};
+use plmu::analyze::exec_check::{check_pool_events, check_ranges, PoolEvent};
+use plmu::analyze::tape::{verify, TapeNode, TapeOp, TapeView};
+
+fn node(op: TapeOp, parents: Vec<usize>, shape: Vec<usize>) -> TapeNode {
+    TapeNode { op, parents, shape, aux_shape: None }
+}
+
+// --------------------------------------------------------------- pass 1
+
+/// A `NodeId` held across `Graph::reset()` shows up as a parent id >=
+/// the node's own id on the next tape.
+#[test]
+fn forward_referencing_tape_node_is_caught() {
+    let view = TapeView {
+        nodes: vec![
+            node(TapeOp::Leaf, vec![], vec![2, 3]),
+            // parent 7 does not exist yet: a stale NodeId from the
+            // previous recording
+            node(TapeOp::Neg, vec![7], vec![2, 3]),
+        ],
+    };
+    let findings = verify(&view);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert!(findings[0].detail.contains("node 1 (Neg)"), "{}", findings[0]);
+    assert!(findings[0].detail.contains("reset"), "{}", findings[0]);
+}
+
+/// A fused `Affine` rewrites `matmul -> add_row -> act`, so it must have
+/// exactly three parents [x, w, bias]; two parents means the fusion
+/// rewrite dropped an operand.
+#[test]
+fn wrong_arity_fused_op_is_caught() {
+    let view = TapeView {
+        nodes: vec![
+            node(TapeOp::Leaf, vec![], vec![4, 3]),
+            node(TapeOp::Leaf, vec![], vec![3, 5]),
+            // missing the bias parent
+            node(TapeOp::Affine { act: None }, vec![0, 1], vec![4, 5]),
+        ],
+    };
+    let findings = verify(&view);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert!(findings[0].detail.contains("node 2 (Affine)"), "{}", findings[0]);
+    assert!(findings[0].detail.contains("arity 2"), "{}", findings[0]);
+}
+
+// --------------------------------------------------------------- pass 2
+
+/// The same buffer identity reclaimed twice without an intervening
+/// re-issue is a double-release — exactly the bug the recycler's
+/// free-list scan assert exists for, caught here offline.
+#[test]
+fn double_release_event_log_is_caught() {
+    const ARENA: u64 = 3;
+    let events = [
+        ArenaEvent::Issue { buf: 0xbeef0, bytes: 256, fresh: true },
+        ArenaEvent::Reclaim { buf: 0xbeef0, bytes: 256, issued_by: Some(ARENA) },
+        ArenaEvent::Reclaim { buf: 0xbeef0, bytes: 256, issued_by: Some(ARENA) },
+    ];
+    let report = check_arena_log(ARENA, &events, None);
+    assert_eq!(report.findings.len(), 1, "{:?}", report.findings);
+    assert!(report.findings[0].detail.contains("double-release"), "{}", report.findings[0]);
+}
+
+/// A reclaim whose issuing arena differs from the replaying arena is the
+/// `--pipeline` two-arenas-in-flight hazard.
+#[test]
+fn cross_arena_release_event_log_is_caught() {
+    let events = [ArenaEvent::Reclaim { buf: 0xf00d0, bytes: 64, issued_by: Some(9) }];
+    let report = check_arena_log(1, &events, None);
+    assert_eq!(report.findings.len(), 1, "{:?}", report.findings);
+    assert!(report.findings[0].detail.contains("cross-arena"), "{}", report.findings[0]);
+}
+
+// --------------------------------------------------------------- pass 3
+
+/// Overlapping chunk ranges would alias two `&mut` sub-slices across
+/// pool threads — the one memory-safety contract the `SendPtr` fan-out
+/// rests on.
+#[test]
+fn overlapping_chunk_ranges_are_caught() {
+    // [0,128) and [96,224) overlap by 32 elements
+    let findings = check_ranges(224, &[(0, 128), (96, 224)]);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert!(findings[0].detail.contains("overlap"), "{}", findings[0]);
+
+    // the clean partition of the same buffer passes
+    assert!(check_ranges(224, &[(0, 128), (128, 224)]).is_empty());
+}
+
+/// Concurrent chunk sub-budgets summing past the job's thread budget
+/// means nested dispatches could oversubscribe the machine.
+#[test]
+fn over_budget_event_log_is_caught() {
+    const JOB: u64 = 11;
+    let events: Vec<(u64, PoolEvent)> = vec![
+        (1, PoolEvent::JobBegin { job: JOB, chunks: 2, workers_cap: 2, budget: 2, root: 8 }),
+        // both chunks claim a sub-budget of 2 concurrently: 4 > max(2, 2)
+        (2, PoolEvent::ChunkStart { job: JOB, idx: 0, sub_budget: 2 }),
+        (3, PoolEvent::ChunkStart { job: JOB, idx: 1, sub_budget: 2 }),
+        (4, PoolEvent::ChunkEnd { job: JOB, idx: 0 }),
+        (5, PoolEvent::ChunkEnd { job: JOB, idx: 1 }),
+        (6, PoolEvent::JobEnd { job: JOB, panicked: false }),
+    ];
+    let findings = check_pool_events(&events);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert!(findings[0].detail.contains("budget"), "{}", findings[0]);
+}
+
+/// The same serialized log with legal sub-budgets (1 + 1 = budget) is
+/// clean — the differential pair for the over-budget test.
+#[test]
+fn within_budget_event_log_is_clean() {
+    const JOB: u64 = 12;
+    let events: Vec<(u64, PoolEvent)> = vec![
+        (1, PoolEvent::JobBegin { job: JOB, chunks: 2, workers_cap: 2, budget: 2, root: 8 }),
+        (2, PoolEvent::ChunkStart { job: JOB, idx: 0, sub_budget: 1 }),
+        (3, PoolEvent::ChunkStart { job: JOB, idx: 1, sub_budget: 1 }),
+        (4, PoolEvent::ChunkEnd { job: JOB, idx: 0 }),
+        (5, PoolEvent::ChunkEnd { job: JOB, idx: 1 }),
+        (6, PoolEvent::JobEnd { job: JOB, panicked: false }),
+    ];
+    let findings = check_pool_events(&events);
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+// ----------------------------------------------------------- clean half
+
+/// The full sweep — every model family x both DN paths, three real
+/// optimizer steps each under forced `PLMU_VERIFY=2`, tape + arena +
+/// pool replay — must produce zero findings and non-vacuous evidence
+/// (a single test so the process-global verify/scan knobs are not
+/// flipped concurrently).
+#[test]
+fn clean_models_sweep_has_zero_findings() {
+    let report = plmu::analyze::analyze_models();
+    assert_eq!(report.cases.len(), 8, "4 families x 2 DN paths");
+    assert_eq!(report.total_findings(), 0, "\n{}", report.render());
+    for case in &report.cases {
+        assert!(case.tape_nodes > 0, "{}: empty tape", case.case);
+        assert!(case.arena_events > 0, "{}: no arena events recorded", case.case);
+        assert!(case.partitions > 0, "{}: no chunk partitions validated", case.case);
+        assert!(case.peak_live_bytes > 0, "{}: empty memory plan", case.case);
+    }
+}
