@@ -12,7 +12,11 @@
 #   lint         cargo clippy --all-targets -- -D warnings  (skipped with a
 #                note when clippy is not installed); cargo fmt stays
 #                report-only so formatting drift never masks test signal
-#   docs         rustdoc build with warnings as errors
+#   docs         rustdoc build with warnings as errors, plus the doc-sync
+#                gate: the knob-doc lint rule checks every PLMU_* knob
+#                read in rust/src against the README's `## Knob reference`
+#                table, and a seeded drift (an undocumented knob in a
+#                temp tree) proves the gate actually fires
 #   determinism  the determinism matrix: the exec-equivalence suite under
 #                PLMU_THREADS in {1, 2, 8}, the simd-equivalence suite
 #                under PLMU_SIMD in {1, 0}, the fusion-equivalence suite
@@ -23,7 +27,10 @@
 #                PLMU_SIMD in {1, 0} x PLMU_FUSION in {1, 0}, within
 #                each PLMU_SCAN in {fft, scan} (the two DN strategies
 #                associate f32 differently, so each gets its own
-#                reference fingerprint — see rust/src/dn/scan.rs)
+#                reference fingerprint — see rust/src/dn/scan.rs), and
+#                the serving load sim's output checksum byte-diffed
+#                across two same-seed runs (virtual time: the report is
+#                a pure function of seed + config)
 #   bench        smoke-runs the perf benches and validates every emitted
 #                BENCH_*.json artifact (plmu bench-check): required keys,
 #                sane timings — a bench refactor cannot silently emit an
@@ -68,7 +75,44 @@ stage_lint() {
 }
 
 stage_docs() {
-    RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+    RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet || return 1
+    # doc-sync gate: every PLMU_* knob read in rust/src must appear in
+    # the README's `## Knob reference` table (the knob-doc lint rule),
+    # and the rule itself is probed with a seeded drift it must catch
+    cargo build --release || return 1
+    echo "-- doc-sync: knob-doc rule over rust/src vs README.md --"
+    ./target/release/plmu lint-src rust/src || return 1
+    echo "-- doc-sync: seeded drift (undocumented knob) must fail --"
+    local tmp
+    tmp=$(mktemp -d) || return 1
+    mkdir -p "$tmp/src"
+    printf 'pub fn probe() -> Option<usize> {\n    crate::util::env_knob::usize_knob("PLMU_CI_DRIFT_PROBE", 1)\n}\n' \
+        > "$tmp/src/probe.rs"
+    printf '# probe\n\n## Knob reference\n\n| Knob | Meaning |\n|---|---|\n| `PLMU_THREADS` | pool size |\n\n## End\n' \
+        > "$tmp/src/README.md"
+    if ./target/release/plmu lint-src "$tmp/src" > "$tmp/out.txt" 2>&1; then
+        echo "doc-sync gate FAILED to flag undocumented knob PLMU_CI_DRIFT_PROBE:"
+        cat "$tmp/out.txt"
+        rm -rf "$tmp"
+        return 1
+    fi
+    if ! grep -q PLMU_CI_DRIFT_PROBE "$tmp/out.txt"; then
+        echo "lint-src failed for the wrong reason:"
+        cat "$tmp/out.txt"
+        rm -rf "$tmp"
+        return 1
+    fi
+    # documenting the knob clears the finding
+    printf '# probe\n\n## Knob reference\n\n| Knob | Meaning |\n|---|---|\n| `PLMU_THREADS` | pool size |\n| `PLMU_CI_DRIFT_PROBE` | drift probe |\n\n## End\n' \
+        > "$tmp/src/README.md"
+    if ! ./target/release/plmu lint-src "$tmp/src" > "$tmp/out.txt" 2>&1; then
+        echo "documented knob still flagged:"
+        cat "$tmp/out.txt"
+        rm -rf "$tmp"
+        return 1
+    fi
+    rm -rf "$tmp"
+    echo "doc-sync OK: undocumented knob fails, documented knob passes"
 }
 
 stage_determinism() {
@@ -126,6 +170,22 @@ stage_determinism() {
         done
     done
     echo "fingerprints byte-identical across PLMU_THREADS in {1, 2, 8} x PLMU_SIMD in {1, 0} x PLMU_FUSION in {1, 0}, within each PLMU_SCAN in {fft, scan}"
+    # the serving load sim runs in virtual time, so its output checksum
+    # is a pure function of (seed, config): two same-seed smoke runs
+    # must print byte-identical `serving fingerprint:` lines
+    local sfp1 sfp2
+    echo "-- determinism: serving fingerprint, two same-seed runs --"
+    out=$(PLMU_BENCH_SMOKE=1 cargo bench --bench serving) || return 1
+    sfp1=$(printf '%s\n' "$out" | grep '^serving fingerprint:')
+    out=$(PLMU_BENCH_SMOKE=1 cargo bench --bench serving) || return 1
+    sfp2=$(printf '%s\n' "$out" | grep '^serving fingerprint:')
+    if [ -z "$sfp1" ] || [ "$sfp1" != "$sfp2" ]; then
+        echo "SERVING DETERMINISM MISMATCH:"
+        echo "  run 1: $sfp1"
+        echo "  run 2: $sfp2"
+        return 1
+    fi
+    echo "   $sfp1 (both runs)"
 }
 
 stage_bench() {
@@ -136,10 +196,11 @@ stage_bench() {
     PLMU_BENCH_SMOKE=1 cargo bench --bench simd_kernels || return 1
     PLMU_BENCH_SMOKE=1 cargo bench --bench fusion || return 1
     PLMU_BENCH_SMOKE=1 cargo bench --bench scan || return 1
+    PLMU_BENCH_SMOKE=1 cargo bench --bench serving || return 1
     echo "-- validating perf records --"
     ./target/release/plmu bench-check \
         BENCH_threads.json BENCH_pool.json BENCH_coordinator.json BENCH_simd.json \
-        BENCH_fusion.json BENCH_scan.json
+        BENCH_fusion.json BENCH_scan.json BENCH_serving.json
 }
 
 stage_analyze() {

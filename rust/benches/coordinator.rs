@@ -152,6 +152,7 @@ fn main() {
                 max_batch,
                 window: Duration::from_micros(window_us),
                 pipeline,
+                ..Default::default()
             },
             || Box::new(NativeStreamingEngine::from_store(&spec, &layer.params, &store)),
         );

@@ -1,0 +1,215 @@
+//! Serving-stack bench, recorded to `BENCH_serving.json`:
+//!
+//! An open-loop load generator (deterministic LCG: Poisson session
+//! arrivals, heavy-tailed Pareto session lengths) drives the session
+//! store + continuous-batching kernel in **virtual time** — latency is
+//! measured in whole batch windows, so every reported number except the
+//! wall clock is a pure function of (seed, config), independent of
+//! thread count and machine speed.  The CI determinism stage byte-diffs
+//! the `serving fingerprint:` line across two runs.
+//!
+//! Cases:
+//!
+//!  1. **steady_1e5** — ~3·10^5 sessions arrive over 2000 windows and
+//!     >10^5 are concurrently live at the peak, against a session-store
+//!     byte budget sized for 1.2·10^5 resident sessions, so LRU +
+//!     idle-deadline eviction runs hot while latency holds at one
+//!     window.  This is the 10^5-concurrent-sessions acceptance case.
+//!  2. **overload_reject / overload_drop** — service capacity is set
+//!     below the offered token rate, so the bounded queue fills and the
+//!     two shed policies (reject-with-retry vs drop-oldest) are
+//!     exercised under real backpressure; p95/p99 degrade visibly.
+//!
+//! Run: cargo bench --bench serving
+//! Smoke mode (CI): PLMU_BENCH_SMOKE=1 cargo bench --bench serving
+
+use plmu::autograd::ParamStore;
+use plmu::benchlib::{repo_root, JsonValue, PerfJson, Table};
+use plmu::coordinator::sessions::{
+    run_load_sim, session_bytes, LoadSimConfig, ShedPolicy, SESSION_OVERHEAD_BYTES,
+};
+use plmu::coordinator::{NativeStreamingEngine, StreamingEngine};
+use plmu::exec;
+use plmu::layers::lmu::{LmuParallelLayer, LmuSpec};
+use plmu::util::{Rng, Timer};
+
+fn main() {
+    let smoke = std::env::var("PLMU_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let threads = hw.min(8);
+    exec::set_threads(threads);
+    let mut record = PerfJson::new("serving");
+
+    // A d=8 engine: serving cost is dominated by per-session state, so
+    // the smallest useful DN keeps the 10^5-session profile fast while
+    // exercising the full store/queue/batching machinery.
+    let mut rng = Rng::new(0);
+    let mut store = ParamStore::new();
+    let spec = LmuSpec::new(1, 1, 8, 64.0, 16);
+    let layer = LmuParallelLayer::new(spec.clone(), 64, &mut store, &mut rng, "srv");
+    let eng = NativeStreamingEngine::from_store(&spec, &layer.params, &store);
+    let per_session = session_bytes(eng.state_size());
+    // N bytes/session x 10^6 sessions = N MB
+    println!(
+        "session cost: {per_session} B/session ({} B state + {SESSION_OVERHEAD_BYTES} B overhead) \
+         — 10^6 concurrent sessions = {per_session} MB of state",
+        eng.state_size() * 4
+    );
+
+    // resident-session budgets (sessions, not bytes) per profile
+    let steady_budget_sessions = if smoke { 64usize } else { 120_000 };
+    let overload_budget_sessions = if smoke { 64usize } else { 40_000 };
+
+    let steady = LoadSimConfig {
+        seed: 42,
+        windows: if smoke { 120 } else { 2000 },
+        window_us: 500,
+        arrivals_per_window: if smoke { 4.0 } else { 150.0 },
+        session_tokens_mean: if smoke { 3.0 } else { 4.0 },
+        token_gap_windows: if smoke { 10 } else { 300 },
+        dx: 1,
+        queue_cap: if smoke { 128 } else { 4096 },
+        batch_cap: if smoke { 64 } else { 2048 },
+        session_mem_bytes: steady_budget_sessions * per_session,
+        idle_deadline_windows: Some(if smoke { 30 } else { 600 }),
+        shed: ShedPolicy::RejectNew,
+        retry_windows: 3,
+        slo_us: 1500,
+    };
+    let overload = LoadSimConfig {
+        seed: 42,
+        windows: if smoke { 100 } else { 600 },
+        window_us: 500,
+        arrivals_per_window: if smoke { 10.0 } else { 80.0 },
+        session_tokens_mean: if smoke { 4.0 } else { 6.0 },
+        token_gap_windows: if smoke { 4 } else { 20 },
+        dx: 1,
+        queue_cap: if smoke { 48 } else { 512 },
+        batch_cap: if smoke { 16 } else { 256 },
+        session_mem_bytes: overload_budget_sessions * per_session,
+        idle_deadline_windows: None,
+        shed: ShedPolicy::RejectNew,
+        retry_windows: 5,
+        slo_us: 1500,
+    };
+    let overload_drop =
+        LoadSimConfig { shed: ShedPolicy::DropOldest, ..overload.clone() };
+
+    // reproducibility gate before timing anything: two runs of the same
+    // (seed, config) must agree to the last output bit
+    {
+        let probe = LoadSimConfig { windows: 40, ..steady.clone() };
+        let a = run_load_sim(&eng, &probe);
+        let b = run_load_sim(&eng, &probe);
+        assert_eq!(a.checksum, b.checksum, "load sim not reproducible for one seed");
+    }
+
+    println!(
+        "\n=== serving under load ({threads} threads on {hw} hw{}) ===",
+        if smoke { ", smoke" } else { "" }
+    );
+    let mut table = Table::new(&[
+        "case",
+        "served",
+        "shed",
+        "peak live",
+        "store peak",
+        "evicted",
+        "p50/p95/p99 us",
+        "slo viol",
+        "tokens/s",
+    ]);
+    let mut fingerprints: Vec<String> = Vec::new();
+    for (name, cfg) in [
+        ("steady_1e5", &steady),
+        ("overload_reject", &overload),
+        ("overload_drop", &overload_drop),
+    ] {
+        exec::reset_dispatch_counts();
+        let t = Timer::start();
+        let rep = run_load_sim(&eng, cfg);
+        let wall = t.elapsed();
+        let (pooled, serial) = exec::dispatch_counts();
+        assert!(
+            !rep.budget_exceeded,
+            "{name}: session store exceeded its byte budget — LRU invariant broken"
+        );
+        let offered = rep.served + rep.shed;
+        let shed_rate = rep.shed as f64 / offered.max(1) as f64;
+        let evict_rate =
+            (rep.evicted_lru + rep.evicted_idle) as f64 / rep.sessions_started.max(1) as f64;
+        table.row(&[
+            name.to_string(),
+            rep.served.to_string(),
+            rep.shed.to_string(),
+            rep.peak_live_sessions.to_string(),
+            format!("{} sess / {} B", rep.peak_store_sessions, rep.peak_store_bytes),
+            format!("{}+{}", rep.evicted_lru, rep.evicted_idle),
+            format!("{}/{}/{}", rep.p50_us, rep.p95_us, rep.p99_us),
+            rep.slo_violations.to_string(),
+            format!("{:.0}", rep.served as f64 / wall),
+        ]);
+        record.push(&[
+            ("case", JsonValue::Str(name.into())),
+            ("threads", JsonValue::Int(threads as i64)),
+            ("wall_ns", JsonValue::Int((wall * 1e9) as i64)),
+            ("tokens_per_s", JsonValue::Num(rep.served as f64 / wall)),
+            ("served", JsonValue::Int(rep.served as i64)),
+            ("shed_rate", JsonValue::Num(shed_rate)),
+            ("evict_rate", JsonValue::Num(evict_rate)),
+            ("sessions_started", JsonValue::Int(rep.sessions_started as i64)),
+            ("peak_live_sessions", JsonValue::Int(rep.peak_live_sessions as i64)),
+            ("peak_store_sessions", JsonValue::Int(rep.peak_store_sessions as i64)),
+            ("session_bytes", JsonValue::Int(per_session as i64)),
+            ("peak_store_bytes", JsonValue::Int(rep.peak_store_bytes as i64)),
+            ("session_mem_bytes", JsonValue::Int(cfg.session_mem_bytes as i64)),
+            ("evicted_lru", JsonValue::Int(rep.evicted_lru as i64)),
+            ("evicted_idle", JsonValue::Int(rep.evicted_idle as i64)),
+            ("p50_us", JsonValue::Int(rep.p50_us as i64)),
+            ("p95_us", JsonValue::Int(rep.p95_us as i64)),
+            ("p99_us", JsonValue::Int(rep.p99_us as i64)),
+            ("max_us", JsonValue::Int(rep.max_us as i64)),
+            ("mean_us", JsonValue::Num(rep.mean_us)),
+            ("slo_us", JsonValue::Int(cfg.slo_us as i64)),
+            ("slo_violations", JsonValue::Int(rep.slo_violations as i64)),
+            ("pooled_dispatches", JsonValue::Int(pooled as i64)),
+            ("serial_dispatches", JsonValue::Int(serial as i64)),
+            ("checksum", JsonValue::Str(format!("{:016x}", rep.checksum))),
+            ("smoke", JsonValue::Bool(smoke)),
+            ("hw_threads", JsonValue::Int(hw as i64)),
+        ]);
+        fingerprints.push(format!("{name}={:016x}", rep.checksum));
+        if name == "steady_1e5" {
+            if smoke {
+                println!(
+                    "steady_1e5 (smoke): {} peak live sessions — full profile targets >= 1e5",
+                    rep.peak_live_sessions
+                );
+            } else if rep.peak_live_sessions >= 100_000 {
+                println!(
+                    "PASS: {} concurrent sessions at peak (>= 1e5) in {} B of store \
+                     (budget {} B)",
+                    rep.peak_live_sessions, rep.peak_store_bytes, cfg.session_mem_bytes
+                );
+            } else {
+                println!(
+                    "MISS: only {} concurrent sessions at peak (< 1e5)",
+                    rep.peak_live_sessions
+                );
+            }
+        }
+        if name != "steady_1e5" {
+            assert!(rep.shed > 0, "{name}: overload profile produced no shedding");
+        }
+    }
+    table.print("serving under load (latencies in virtual time)");
+    // the determinism witness: pure function of (seed, config)
+    println!("serving fingerprint: {}", fingerprints.join(" "));
+    exec::set_threads(1);
+
+    let out = repo_root().join("BENCH_serving.json");
+    match record.write(&out) {
+        Ok(()) => println!("\nwrote {} ({} records)", out.display(), record.len()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", out.display()),
+    }
+}

@@ -19,6 +19,11 @@
 //!  * **simd-triple** — every explicit simd kernel entry `X_vec` keeps
 //!    its `X_scalar` sibling and `X` dispatcher, so the differential
 //!    suites always have both lanes to pin against each other.
+//!  * **knob-doc** — every `PLMU_*` name passed to a `util::env_knob`
+//!    reader must appear in the README's `## Knob reference` table
+//!    (`lint_knob_docs`): the table is the one authoritative list of
+//!    tuning knobs, and an undocumented knob is a knob nobody can find.
+//!    Names starting `PLMU_TEST_` are exempt (test-only fixtures).
 //!
 //! A rule is waived for a line by the comment `lint-src: allow(<rule>)`
 //! on that line or the line directly above.  Comment-only lines are
@@ -27,7 +32,13 @@
 use super::{Finding, Pass};
 use std::path::Path;
 
-const RULES: [&str; 4] = ["thread-spawn", "hashmap", "env-knob", "simd-triple"];
+const RULES: [&str; 5] = [
+    "thread-spawn",
+    "hashmap",
+    "env-knob",
+    "simd-triple",
+    "knob-doc",
+];
 
 /// Fingerprinted path prefixes (relative to `rust/src/`) where HashMap
 /// iteration could change reported bits.
@@ -140,6 +151,98 @@ pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
     findings
 }
 
+/// Extract the `PLMU_*` knob names documented in the README's
+/// `## Knob reference` section — only names between that heading and
+/// the next `## ` heading count, so a knob mentioned in passing
+/// elsewhere does not satisfy the rule.
+pub fn documented_knobs(readme: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut in_section = false;
+    for line in readme.lines() {
+        if line.starts_with("## ") {
+            in_section = line.trim() == "## Knob reference";
+            continue;
+        }
+        if in_section {
+            collect_plmu_names(line, &mut out);
+        }
+    }
+    out.sort();
+    out.dedup();
+    out
+}
+
+/// Append every maximal `PLMU_[A-Z0-9_]*` token in `line` to `out`.
+fn collect_plmu_names(line: &str, out: &mut Vec<String>) {
+    let mut rest = line;
+    while let Some(pos) = rest.find("PLMU_") {
+        let name: String = rest[pos..]
+            .chars()
+            .take_while(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || *c == '_')
+            .collect();
+        out.push(name);
+        rest = &rest[pos + 5..];
+    }
+}
+
+/// knob-doc: scan one file for `util::env_knob` reader call sites
+/// (`str_knob(` / `bool_knob(` / `usize_knob(` / `level_knob(`) and
+/// flag any `PLMU_*` name on those lines that is absent from
+/// `documented` (the README table, via [`documented_knobs`]).
+pub fn check_knob_docs(rel: &str, src: &str, documented: &[String]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    // the knob parser's own tests and this linter spell names freely
+    if rel == "analyze/lint.rs" || rel == "util/env_knob.rs" {
+        return findings;
+    }
+    let lines: Vec<&str> = src.lines().collect();
+    for (i, line) in lines.iter().enumerate() {
+        if comment_only(line) || !line.contains("_knob(") || waived(&lines, i, "knob-doc") {
+            continue;
+        }
+        let mut names = Vec::new();
+        collect_plmu_names(line, &mut names);
+        for name in names {
+            if name.starts_with("PLMU_TEST_") {
+                continue;
+            }
+            if !documented.iter().any(|d| d == &name) {
+                findings.push(Finding::new(
+                    Pass::Lint,
+                    format!(
+                        "{rel}:{}: knob `{name}` is read here but missing from the README's \
+                         `## Knob reference` table — document it there or waive with \
+                         `lint-src: allow(knob-doc)`",
+                        i + 1
+                    ),
+                ));
+            }
+        }
+    }
+    findings
+}
+
+/// Walk `root` like [`lint_tree`] and run the knob-doc rule against the
+/// given README contents.  Kept separate from [`lint_tree`] because it
+/// needs the README as an input, which the per-file rules do not.
+pub fn lint_knob_docs(root: &Path, readme: &str) -> std::io::Result<Vec<Finding>> {
+    let documented = documented_knobs(readme);
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for f in files {
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(&f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(&f)?;
+        findings.extend(check_knob_docs(&rel, &src, &documented));
+    }
+    Ok(findings)
+}
+
 /// Walk `root` (the `rust/src` directory), lint every `.rs` file in
 /// sorted order, and return all findings.
 pub fn lint_tree(root: &Path) -> std::io::Result<Vec<Finding>> {
@@ -232,5 +335,50 @@ mod tests {
         assert!(lint_source("simd/mod.rs", mac).is_empty());
         // the triple rule only applies under simd/
         assert!(lint_source("fft/mod.rs", broken).is_empty());
+    }
+
+    const FAKE_README: &str = "\
+# demo\n\n## Knob reference\n\n| Knob | Meaning |\n|---|---|\n\
+| `PLMU_THREADS` | worker pool size |\n| `PLMU_SIMD` | simd on/off |\n\n\
+## Elsewhere\n\n`PLMU_NOT_IN_TABLE` mentioned outside the table does not count.\n";
+
+    #[test]
+    fn documented_knobs_parses_only_the_reference_section() {
+        let d = documented_knobs(FAKE_README);
+        assert_eq!(d, vec!["PLMU_SIMD".to_string(), "PLMU_THREADS".to_string()]);
+    }
+
+    #[test]
+    fn knob_doc_flags_drift_and_honors_exemptions() {
+        let documented = documented_knobs(FAKE_README);
+        let ok = "let n = crate::util::env_knob::usize_knob(\"PLMU_THREADS\", 1);\n";
+        assert!(check_knob_docs("exec/mod.rs", ok, &documented).is_empty());
+
+        // seeded drift: a knob read in source but absent from the table
+        let drift = "let b = crate::util::env_knob::bool_knob(\"PLMU_BOGUS\", false);\n";
+        let f = check_knob_docs("exec/mod.rs", drift, &documented);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].detail.contains("PLMU_BOGUS"), "{}", f[0]);
+
+        // waivable on the line or the line above
+        let waived = "let b = bool_knob(\"PLMU_BOGUS\", false); // lint-src: allow(knob-doc)\n";
+        assert!(check_knob_docs("exec/mod.rs", waived, &documented).is_empty());
+        // test-only fixture names are exempt
+        let fixture = "let b = bool_knob(\"PLMU_TEST_FIXTURE\", false);\n";
+        assert!(check_knob_docs("exec/mod.rs", fixture, &documented).is_empty());
+        // prose mentioning a knob next to `_knob(` is not a call site
+        let prose = "// usize_knob(\"PLMU_BOGUS\", 1) would be flagged here\n";
+        assert!(check_knob_docs("exec/mod.rs", prose, &documented).is_empty());
+        // the knob parser itself spells names freely
+        assert!(check_knob_docs("util/env_knob.rs", drift, &documented).is_empty());
+    }
+
+    #[test]
+    fn real_tree_knobs_are_all_documented() {
+        let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let readme = Path::new(env!("CARGO_MANIFEST_DIR")).join("../README.md");
+        let readme = std::fs::read_to_string(readme).expect("README.md beside rust/");
+        let f = lint_knob_docs(&src, &readme).unwrap();
+        assert!(f.is_empty(), "undocumented knobs: {f:?}");
     }
 }

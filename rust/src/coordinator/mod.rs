@@ -9,11 +9,15 @@
 //!    the shared `crate::exec` worker pool, the coordinator all-reduces
 //!    (deterministic replica-order mean) and steps Adam, then broadcasts
 //!    fresh parameters;
-//!  * **serving** (`server`, `engine`): the *same* trained weights run in
-//!    the recurrent form (eq. 19) for O(d) per-token streaming inference —
-//!    sessions hold DN state, a dynamic batcher groups concurrent step
-//!    requests and fans the batch's sessions out on the same pool, and a
-//!    router spreads sessions across engine replicas.
+//!  * **serving** (`server`, `sessions`, `engine`): the *same* trained
+//!    weights run in the recurrent form (eq. 19) for O(d) per-token
+//!    streaming inference — session DN states live in a byte-budgeted
+//!    LRU/idle-deadline store (`sessions::SessionStore`), a bounded
+//!    request queue sheds load under overload (`sessions::ShedPolicy`),
+//!    a dynamic batcher continuously packs ready steps from live
+//!    sessions into one pool fan-out (`sessions::execute_packed`), a
+//!    router spreads sessions across engine replicas, and per-request
+//!    latency streams into p50/p95/p99 histograms against an SLO.
 //!
 //! Both halves dispatch their thread-level fan-out through `crate::exec`,
 //! so replica-level and kernel-level parallelism share one process-wide
@@ -23,9 +27,17 @@
 pub mod data_parallel;
 pub mod engine;
 pub mod server;
+pub mod sessions;
 
 pub use data_parallel::{
     allreduce_mean, pack_grads, unpack_grads, DataParallelConfig, DataParallelCoordinator,
 };
 pub use engine::{NativeStreamingEngine, StreamingEngine};
-pub use server::{DynamicBatcher, EngineFactory, Router, ServerConfig, StreamingServer};
+pub use server::{
+    DynamicBatcher, EngineFactory, MetricsSnapshot, Router, ServerConfig, StepReply,
+    StreamingServer,
+};
+pub use sessions::{
+    execute_packed, run_load_sim, LoadSimConfig, LoadSimReport, PackedRun, SessionStore,
+    ShedPolicy,
+};

@@ -1,8 +1,27 @@
-//! The streaming-inference server: session table, dynamic batcher, and a
-//! round-robin router over engine replicas (vllm-router-style, scaled to
-//! this paper: the "KV cache" of an LMU is a single (d·du) DN state per
-//! session, constant in sequence length — the paper's memory-constrained
-//! inference story).
+//! The streaming-inference server: bounded session store, admission
+//! control, continuous batcher, and a round-robin router over engine
+//! replicas (vllm-router-style, scaled to this paper: the "KV cache" of
+//! an LMU is a single (d·du) DN state per session, constant in sequence
+//! length — the paper's memory-constrained inference story).
+//!
+//! ## Production shape
+//!
+//! * Session states live in a byte-budgeted
+//!   [`SessionStore`](super::sessions::SessionStore) (`session_mem`)
+//!   with LRU + idle-deadline eviction — an evicted session's next step
+//!   restarts from the zero state, so memory stays bounded at any
+//!   session count.
+//! * The request queue is bounded (`queue_cap`); past it, load is shed
+//!   per [`ShedPolicy`](super::sessions::ShedPolicy) and the shed
+//!   request gets [`StepReply::Rejected`] with a retry-after hint —
+//!   overload degrades into rejections, never into OOM.
+//! * Each window, the batcher packs the oldest ready steps from the
+//!   live sessions into one continuous batch executed by
+//!   [`execute_packed`](super::sessions::execute_packed) on the exec
+//!   pool — bit-identical to per-session serial stepping.
+//! * Per-request latency streams into a constant-memory p50/p95/p99
+//!   histogram checked against the `slo_us` knob; the raced mean
+//!   counters are read under a seqlock snapshot.
 //!
 //! ## Thread-budget story
 //!
@@ -24,7 +43,10 @@
 //! `exec::run_serialized`, so their kernel calls don't fan out either.
 
 use super::engine::StreamingEngine;
+use super::sessions::{execute_packed, parse_bytes, PackedRun, SessionStore, ShedPolicy};
 use crate::exec;
+use crate::metrics::LatencyHistogram;
+use crate::util::env_knob;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -39,10 +61,11 @@ pub type EngineFactory = Box<dyn FnOnce() -> Box<dyn StreamingEngine> + Send>;
 pub struct StepRequest {
     /// session id whose DN state this step advances
     pub session: u64,
-    /// one input vector (dx floats)
+    /// one input vector (dx floats); taken into the batch's
+    /// [`PackedRun`] when the request is grouped
     pub x: Vec<f32>,
-    /// channel the [`StepResponse`] is delivered on
-    pub reply: mpsc::Sender<StepResponse>,
+    /// channel the [`StepReply`] is delivered on
+    pub reply: mpsc::Sender<StepReply>,
     /// when the request entered the batcher queue
     pub enqueued: Instant,
 }
@@ -56,6 +79,22 @@ pub struct StepResponse {
     pub output: Vec<f32>,
     /// time from enqueue to completion
     pub latency: Duration,
+}
+
+/// What comes back on a request's reply channel: the step's output, or
+/// a load-shed rejection carrying the retry-after hint.  Admission
+/// control means *every* submitted request gets exactly one reply —
+/// overload degrades into rejections, never into silence or OOM.
+#[derive(Clone, Debug)]
+pub enum StepReply {
+    /// the step executed; here is its output
+    Output(StepResponse),
+    /// the request was shed by admission control — resubmit no sooner
+    /// than `retry_after`
+    Rejected {
+        /// client back-off hint (the server's configured `retry_after`)
+        retry_after: Duration,
+    },
 }
 
 /// Dynamic-batching knobs.
@@ -74,16 +113,61 @@ pub struct ServerConfig {
     /// request stream goes idle.  Only `Sync` engines pipeline;
     /// thread-bound (factory) engines always run the serial path.
     pub pipeline: bool,
+    /// Bounded request-queue depth (admission control): at most this
+    /// many steps may be queued or in flight; beyond it, `shed`
+    /// decides who gets the [`StepReply::Rejected`].
+    pub queue_cap: usize,
+    /// what load-shedding does when the queue is full
+    pub shed: ShedPolicy,
+    /// back-off hint carried by rejections
+    pub retry_after: Duration,
+    /// session-store byte budget (`usize::MAX` = unbounded); over it,
+    /// least-recently-used session states are evicted and those
+    /// sessions restart from the zero state on their next step
+    pub session_mem: usize,
+    /// evict sessions untouched for this many batch windows
+    pub idle_batches: Option<u64>,
+    /// latency SLO in µs; requests over it count as
+    /// `ServerMetrics::slo_violations`
+    pub slo_us: u64,
 }
 
 impl Default for ServerConfig {
+    /// Defaults, overridable by env knobs (see README "Knob
+    /// reference"): `PLMU_SESSION_MEM` (byte budget, `64M`-style
+    /// suffixes), `PLMU_QUEUE_CAP`, `PLMU_SLO_US`.
     fn default() -> Self {
-        ServerConfig { max_batch: 32, window: Duration::from_micros(500), pipeline: false }
+        let session_mem = env_knob::str_knob("PLMU_SESSION_MEM")
+            .as_deref()
+            .and_then(parse_bytes)
+            .unwrap_or(usize::MAX);
+        let queue_cap = env_knob::usize_knob("PLMU_QUEUE_CAP", 1).unwrap_or(4096);
+        let slo_us = env_knob::usize_knob("PLMU_SLO_US", 1).unwrap_or(10_000) as u64;
+        ServerConfig {
+            max_batch: 32,
+            window: Duration::from_micros(500),
+            pipeline: false,
+            queue_cap,
+            shed: ShedPolicy::RejectNew,
+            retry_after: Duration::from_micros(200),
+            session_mem,
+            idle_batches: None,
+            slo_us,
+        }
     }
 }
 
-/// Aggregate serving metrics (updated by the batcher thread, read from
-/// anywhere through the shared `Arc`).
+/// Aggregate serving metrics (updated by the batcher's control thread,
+/// read from anywhere through the shared `Arc`).
+///
+/// The raced pair — `requests` and `total_latency_us` — is guarded by
+/// a sequence lock: the control thread (the *only* writer of the pair)
+/// brackets each batch of updates with `seq` increments, and
+/// [`snapshot`](Self::snapshot) retries until it reads an even,
+/// unchanged `seq` on both sides.  A reader can no longer observe a
+/// request count without its latency sum (the bug the old two-relaxed-
+/// loads `mean_latency_us` had).  `shed` is written by submitting
+/// threads and deliberately lives outside the seqlock.
 #[derive(Default)]
 pub struct ServerMetrics {
     /// total step requests completed
@@ -92,16 +176,99 @@ pub struct ServerMetrics {
     pub batches: AtomicU64,
     /// sum of request latencies in microseconds
     pub total_latency_us: AtomicU64,
+    /// seqlock guarding the (`requests`, `total_latency_us`) pair:
+    /// odd while the control thread updates them
+    seq: AtomicU64,
+    /// requests shed by admission control (written by submitters)
+    pub shed: AtomicU64,
+    /// replies whose receiver had gone away (counted, not silently
+    /// discarded — a leak of abandoned clients shows up here)
+    pub dropped_replies: AtomicU64,
+    /// completed requests whose latency exceeded the SLO
+    pub slo_violations: AtomicU64,
+    /// streaming p50/p95/p99 latency histogram (µs)
+    pub latency: LatencyHistogram,
+    /// gauge: session states currently resident in the store
+    pub store_sessions: AtomicU64,
+    /// gauge: bytes currently resident in the store
+    pub store_bytes: AtomicU64,
+    /// high-water mark of `store_bytes`
+    pub store_peak_bytes: AtomicU64,
+    /// cumulative LRU (byte-budget) evictions
+    pub evicted_lru: AtomicU64,
+    /// cumulative idle-deadline evictions
+    pub evicted_idle: AtomicU64,
+}
+
+/// One consistent read of a batcher's [`ServerMetrics`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MetricsSnapshot {
+    /// completed requests
+    pub requests: u64,
+    /// executed batch windows
+    pub batches: u64,
+    /// sum of request latencies, µs (consistent with `requests`)
+    pub total_latency_us: u64,
+    /// shed requests
+    pub shed: u64,
+    /// replies dropped because the receiver went away
+    pub dropped_replies: u64,
+    /// requests over the SLO
+    pub slo_violations: u64,
+    /// median latency, µs
+    pub p50_us: u64,
+    /// 95th-percentile latency, µs
+    pub p95_us: u64,
+    /// 99th-percentile latency, µs
+    pub p99_us: u64,
+    /// worst latency, µs
+    pub max_us: u64,
+    /// resident sessions (gauge)
+    pub store_sessions: u64,
+    /// resident store bytes (gauge)
+    pub store_bytes: u64,
+    /// peak resident store bytes
+    pub store_peak_bytes: u64,
+    /// cumulative LRU evictions
+    pub evicted_lru: u64,
+    /// cumulative idle evictions
+    pub evicted_idle: u64,
 }
 
 impl ServerMetrics {
-    /// Mean request latency in microseconds (0 before the first request).
+    /// Control-thread side of the seqlock: run `f`'s updates to the
+    /// guarded pair between two `seq` increments.
+    fn write_locked(&self, f: impl FnOnce()) {
+        self.seq.fetch_add(1, Ordering::Release); // odd: write in progress
+        f();
+        self.seq.fetch_add(1, Ordering::Release); // even: stable
+    }
+
+    /// Consistent read of the raced (`requests`, `total_latency_us`)
+    /// pair; spins while the writer is mid-update.
+    fn read_pair(&self) -> (u64, u64) {
+        loop {
+            let s1 = self.seq.load(Ordering::Acquire);
+            if s1 & 1 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            let n = self.requests.load(Ordering::Acquire);
+            let t = self.total_latency_us.load(Ordering::Acquire);
+            if self.seq.load(Ordering::Acquire) == s1 {
+                return (n, t);
+            }
+        }
+    }
+
+    /// Mean request latency in microseconds (0 before the first
+    /// request), read under a consistent snapshot.
     pub fn mean_latency_us(&self) -> f64 {
-        let n = self.requests.load(Ordering::Relaxed);
+        let (n, t) = self.read_pair();
         if n == 0 {
             0.0
         } else {
-            self.total_latency_us.load(Ordering::Relaxed) as f64 / n as f64
+            t as f64 / n as f64
         }
     }
 
@@ -111,7 +278,30 @@ impl ServerMetrics {
         if b == 0 {
             0.0
         } else {
-            self.requests.load(Ordering::Relaxed) as f64 / b as f64
+            self.read_pair().0 as f64 / b as f64
+        }
+    }
+
+    /// One consistent view of everything, for status prints and the
+    /// bench record.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let (requests, total_latency_us) = self.read_pair();
+        MetricsSnapshot {
+            requests,
+            batches: self.batches.load(Ordering::Relaxed),
+            total_latency_us,
+            shed: self.shed.load(Ordering::Relaxed),
+            dropped_replies: self.dropped_replies.load(Ordering::Relaxed),
+            slo_violations: self.slo_violations.load(Ordering::Relaxed),
+            p50_us: self.latency.quantile_us(0.50),
+            p95_us: self.latency.quantile_us(0.95),
+            p99_us: self.latency.quantile_us(0.99),
+            max_us: self.latency.max_us(),
+            store_sessions: self.store_sessions.load(Ordering::Relaxed),
+            store_bytes: self.store_bytes.load(Ordering::Relaxed),
+            store_peak_bytes: self.store_peak_bytes.load(Ordering::Relaxed),
+            evicted_lru: self.evicted_lru.load(Ordering::Relaxed),
+            evicted_idle: self.evicted_idle.load(Ordering::Relaxed),
         }
     }
 }
@@ -123,6 +313,12 @@ pub struct DynamicBatcher {
     tx: mpsc::Sender<BatcherCmd>,
     /// live serving metrics of this replica
     pub metrics: Arc<ServerMetrics>,
+    /// queued + in-flight requests, shared with the control thread —
+    /// the submit-side admission gate reads it
+    depth: Arc<AtomicUsize>,
+    queue_cap: usize,
+    shed: ShedPolicy,
+    retry_after: Duration,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -155,143 +351,228 @@ impl BatchEngine {
     }
 }
 
-/// One session's share of a batch: its state, its requests (arrival
-/// order), and the outputs produced for them.
-struct SessionRun {
-    session: u64,
-    state: Vec<f32>,
-    reqs: Vec<StepRequest>,
-    outs: Vec<Vec<f32>>,
+/// A grouped continuous batch: `runs[i]` is one session's packed steps
+/// (state + inputs — this is what crosses to pool threads), `reqs[i]`
+/// its requests in arrival order (reply channels stay on the control
+/// thread).  The two vectors are index-aligned.
+#[derive(Default)]
+struct BatchGroups {
+    runs: Vec<PackedRun>,
+    reqs: Vec<Vec<StepRequest>>,
 }
 
-/// Group a window's requests by session (per-session arrival order
-/// preserved), pulling each session's state out of the table — or
-/// zero-initializing a fresh one — so the independent groups can cross
-/// to pool threads.
+impl BatchGroups {
+    fn is_empty(&self) -> bool {
+        self.runs.is_empty()
+    }
+}
+
+/// Group the oldest `take` queued requests by session (per-session
+/// arrival order preserved), pulling each session's state out of the
+/// store — or zero-initializing a fresh one: an *evicted* session is
+/// indistinguishable from a new one and restarts from the zero state,
+/// the documented degradation under memory pressure.
 fn build_groups(
     state_size: usize,
-    sessions: &mut HashMap<u64, Vec<f32>>,
-    pending: &mut Vec<StepRequest>,
-) -> Vec<SessionRun> {
-    let mut groups: Vec<SessionRun> = Vec::new();
+    store: &mut SessionStore,
+    pending: &mut std::collections::VecDeque<StepRequest>,
+    take: usize,
+) -> BatchGroups {
+    let mut g = BatchGroups::default();
     let mut index: HashMap<u64, usize> = HashMap::new();
-    for req in pending.drain(..) {
+    for mut req in pending.drain(..take) {
         let gi = *index.entry(req.session).or_insert_with(|| {
             let state =
-                sessions.remove(&req.session).unwrap_or_else(|| vec![0.0f32; state_size]);
-            groups.push(SessionRun { session: req.session, state, reqs: Vec::new(), outs: Vec::new() });
-            groups.len() - 1
+                store.take(req.session).unwrap_or_else(|| vec![0.0f32; state_size]);
+            g.runs.push(PackedRun {
+                session: req.session,
+                state,
+                xs: Vec::new(),
+                outs: Vec::new(),
+            });
+            g.reqs.push(Vec::new());
+            g.runs.len() - 1
         });
-        groups[gi].reqs.push(req);
+        g.runs[gi].xs.push(std::mem::take(&mut req.x));
+        g.reqs[gi].push(req);
     }
-    groups
+    g
 }
 
-/// Return every group's advanced state to the session table.  This must
-/// happen before the NEXT batch is grouped (a session present in both
-/// batches must see its advanced state), which is why it is split from
-/// reply delivery in the pipelined path.
-fn reinsert_states(groups: &mut [SessionRun], sessions: &mut HashMap<u64, Vec<f32>>) {
-    for g in groups.iter_mut() {
-        sessions.insert(g.session, std::mem::take(&mut g.state));
+/// Return every run's advanced state to the store at tick `tick`
+/// (refreshing its LRU/idle position).  This must happen before the
+/// NEXT batch is grouped (a session present in both batches must see
+/// its advanced state), which is why it is split from reply delivery
+/// in the pipelined path.
+fn reinsert_states(groups: &mut BatchGroups, store: &mut SessionStore, tick: u64) {
+    for r in groups.runs.iter_mut() {
+        store.put(r.session, std::mem::take(&mut r.state), tick);
     }
 }
 
-/// Send a computed batch's replies (per-session arrival order preserved)
-/// and update the request metrics.  In pipelined mode this is the
-/// control thread's overlapped stage: it runs while the next batch's
-/// session fan-out computes on the pool.
-fn deliver_replies(parked: &mut Vec<SessionRun>, metrics: &ServerMetrics) {
-    for g in parked.drain(..) {
-        for (req, output) in g.reqs.into_iter().zip(g.outs) {
+/// Send a computed batch's replies (per-session arrival order
+/// preserved) and update the request metrics: the latency histogram
+/// and SLO counter per request, then the raced (`requests`,
+/// `total_latency_us`) pair once per flush under the seqlock.  Sends
+/// whose receiver has gone away are **counted** in `dropped_replies`,
+/// not silently discarded.  In pipelined mode this is the control
+/// thread's overlapped stage: it runs while the next batch's session
+/// fan-out computes on the pool — it is always the control thread, so
+/// the seqlock keeps its single writer.
+fn deliver_replies(
+    parked: &mut BatchGroups,
+    metrics: &ServerMetrics,
+    depth: &AtomicUsize,
+    slo_us: u64,
+) {
+    let runs = std::mem::take(&mut parked.runs);
+    let reqs = std::mem::take(&mut parked.reqs);
+    let mut delivered = 0u64;
+    let mut latency_sum_us = 0u64;
+    for (run, rs) in runs.into_iter().zip(reqs) {
+        for (req, output) in rs.into_iter().zip(run.outs) {
             let latency = req.enqueued.elapsed();
-            metrics.requests.fetch_add(1, Ordering::Relaxed);
-            metrics
-                .total_latency_us
-                .fetch_add(latency.as_micros() as u64, Ordering::Relaxed);
-            let _ = req.reply.send(StepResponse { session: req.session, output, latency });
+            let us = latency.as_micros() as u64;
+            delivered += 1;
+            latency_sum_us += us;
+            metrics.latency.record_us(us);
+            if us > slo_us {
+                metrics.slo_violations.fetch_add(1, Ordering::Relaxed);
+            }
+            depth.fetch_sub(1, Ordering::Relaxed);
+            let resp = StepResponse { session: req.session, output, latency };
+            if req.reply.send(StepReply::Output(resp)).is_err() {
+                metrics.dropped_replies.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+    if delivered > 0 {
+        metrics.write_locked(|| {
+            metrics.requests.fetch_add(delivered, Ordering::Relaxed);
+            metrics.total_latency_us.fetch_add(latency_sum_us, Ordering::Relaxed);
+        });
+    }
+}
+
+/// Enforce the bounded queue on the control thread: everything beyond
+/// `queue_cap` is shed with a [`StepReply::Rejected`].  `RejectNew`
+/// sheds from the back (newest arrivals), `DropOldest` from the front.
+/// This is the backstop behind the submit-side fast reject — several
+/// submitters can race past that gate, the backlog cannot grow past
+/// the cap here.
+fn shed_overflow(
+    pending: &mut std::collections::VecDeque<StepRequest>,
+    cfg: &ServerConfig,
+    metrics: &ServerMetrics,
+    depth: &AtomicUsize,
+) {
+    while pending.len() > cfg.queue_cap {
+        let req = match cfg.shed {
+            ShedPolicy::RejectNew => pending.pop_back(),
+            ShedPolicy::DropOldest => pending.pop_front(),
+        };
+        let Some(req) = req else { break };
+        metrics.shed.fetch_add(1, Ordering::Relaxed);
+        depth.fetch_sub(1, Ordering::Relaxed);
+        if req
+            .reply
+            .send(StepReply::Rejected { retry_after: cfg.retry_after })
+            .is_err()
+        {
+            metrics.dropped_replies.fetch_add(1, Ordering::Relaxed);
         }
     }
 }
 
-/// Execute one filled batch synchronously: group requests by session,
-/// fan the independent sessions out on the exec pool (shared engines) or
-/// run them serialized (thread-bound engines), then reinsert states and
-/// deliver replies.
+/// Mirror the (single-threaded) store's gauges into the shared metrics
+/// after each batch, so observers see occupancy without touching the
+/// control thread's state.
+fn mirror_store_gauges(store: &SessionStore, metrics: &ServerMetrics) {
+    let stats = store.stats();
+    metrics.store_sessions.store(store.len() as u64, Ordering::Relaxed);
+    metrics.store_bytes.store(store.bytes() as u64, Ordering::Relaxed);
+    metrics.store_peak_bytes.store(stats.peak_bytes, Ordering::Relaxed);
+    metrics.evicted_lru.store(stats.evicted_lru, Ordering::Relaxed);
+    metrics.evicted_idle.store(stats.evicted_idle, Ordering::Relaxed);
+}
+
+/// Execute one continuous batch synchronously: group the oldest ready
+/// steps by session, fan the independent sessions out on the exec pool
+/// via [`execute_packed`] (shared engines) or run them serialized
+/// (thread-bound engines), then reinsert states and deliver replies.
+#[allow(clippy::too_many_arguments)]
 fn execute_batch(
     engine: &BatchEngine,
-    sessions: &mut HashMap<u64, Vec<f32>>,
-    pending: &mut Vec<StepRequest>,
+    store: &mut SessionStore,
+    pending: &mut std::collections::VecDeque<StepRequest>,
+    take: usize,
+    tick: u64,
     metrics: &ServerMetrics,
+    depth: &AtomicUsize,
+    slo_us: u64,
 ) {
     let state_size = engine.engine().state_size();
-    let mut groups = build_groups(state_size, sessions, pending);
-    let total_reqs: usize = groups.iter().map(|g| g.reqs.len()).sum();
+    let mut groups = build_groups(state_size, store, pending, take);
     match engine {
         BatchEngine::Shared(e) => {
-            let eng: &(dyn StreamingEngine + Send + Sync) = &**e;
-            // distinct sessions are independent; requests within a session
-            // stay in order inside their chunk.  Fewer sessions than
-            // threads hands each session chunk a sub-budget, so a big
-            // per-step kernel can still fan out beneath it; session
-            // chunks are stolen off the shared counter, so a batch with
-            // one long session no longer stalls the whole window on a
-            // static partition.
-            let plan = exec::plan_for(groups.len(), total_reqs * eng.step_work());
-            exec::parallel_rows_mut(&mut groups, 1, plan, |_, block| {
-                for g in block.iter_mut() {
-                    for req in &g.reqs {
-                        g.outs.push(eng.step(&mut g.state, &req.x));
-                    }
-                }
-            });
+            // the continuous-batching kernel shared with the load sim:
+            // distinct sessions are independent rows, requests within a
+            // session stay in order inside their chunk, and the
+            // partition depends only on the run count — bit-identical
+            // to per-session serial stepping at any thread count
+            execute_packed(&**e, &mut groups.runs);
         }
         BatchEngine::Local(e) => {
             // thread-bound engine: serial, and flagged so nested kernels
             // don't fan out under a control thread
             exec::run_serialized(|| {
-                for g in groups.iter_mut() {
-                    for req in &g.reqs {
-                        g.outs.push(e.step(&mut g.state, &req.x));
+                for r in groups.runs.iter_mut() {
+                    for x in &r.xs {
+                        r.outs.push(e.step(&mut r.state, x));
                     }
                 }
             });
         }
     }
     metrics.batches.fetch_add(1, Ordering::Relaxed);
-    reinsert_states(&mut groups, sessions);
-    deliver_replies(&mut groups, metrics);
+    reinsert_states(&mut groups, store, tick);
+    deliver_replies(&mut groups, metrics, depth, slo_us);
 }
 
-/// Execute one filled batch in pipelined mode: the session fan-out is
-/// dispatched as an **async** pool job and the previous batch's replies
-/// are delivered while it computes.  After the job drains, states return
-/// to the session table immediately (the next batch's grouping needs
-/// them) and the fresh replies are parked in `undelivered` until the
-/// next batch is in flight — or the batcher goes idle, which flushes
-/// them within one window.
+/// Execute one continuous batch in pipelined mode: the session fan-out
+/// is dispatched as an **async** pool job and the previous batch's
+/// replies are delivered while it computes.  After the job drains,
+/// states return to the store immediately (the next batch's grouping
+/// needs them) and the fresh replies are parked in `undelivered` until
+/// the next batch is in flight — or the batcher goes idle, which
+/// flushes them within one window.
+#[allow(clippy::too_many_arguments)]
 fn pipelined_batch(
     eng: &(dyn StreamingEngine + Send + Sync),
-    sessions: &mut HashMap<u64, Vec<f32>>,
-    pending: &mut Vec<StepRequest>,
-    undelivered: &mut Vec<SessionRun>,
+    store: &mut SessionStore,
+    pending: &mut std::collections::VecDeque<StepRequest>,
+    take: usize,
+    tick: u64,
+    undelivered: &mut BatchGroups,
     metrics: &ServerMetrics,
+    depth: &AtomicUsize,
+    slo_us: u64,
 ) {
-    let mut groups = build_groups(eng.state_size(), sessions, pending);
-    let total_reqs: usize = groups.iter().map(|g| g.reqs.len()).sum();
-    let plan = exec::plan_for(groups.len(), total_reqs * eng.step_work());
+    let mut groups = build_groups(eng.state_size(), store, pending, take);
+    let total_steps: usize = groups.runs.iter().map(|r| r.xs.len()).sum();
+    let plan = exec::plan_for(groups.runs.len(), total_steps * eng.step_work());
     if plan.is_serial() {
         // too small to fan out: flush owed replies first (per-session
         // reply order), then compute and deliver inline
-        deliver_replies(undelivered, metrics);
-        for g in groups.iter_mut() {
-            for req in &g.reqs {
-                g.outs.push(eng.step(&mut g.state, &req.x));
+        deliver_replies(undelivered, metrics, depth, slo_us);
+        for r in groups.runs.iter_mut() {
+            for x in &r.xs {
+                r.outs.push(eng.step(&mut r.state, x));
             }
         }
         metrics.batches.fetch_add(1, Ordering::Relaxed);
-        reinsert_states(&mut groups, sessions);
-        deliver_replies(&mut groups, metrics);
+        reinsert_states(&mut groups, store, tick);
+        deliver_replies(&mut groups, metrics, depth, slo_us);
         return;
     }
     // the control thread reserves itself for reply packing; the session
@@ -300,23 +581,23 @@ fn pipelined_batch(
     let budget = exec::threads().saturating_sub(1).max(1);
     let workers = plan.workers.min(budget);
     exec::parallel_rows_overlap(
-        &mut groups,
+        &mut groups.runs,
         1,
         workers,
         budget,
         move |_, block| {
-            for g in block.iter_mut() {
-                for req in &g.reqs {
-                    g.outs.push(eng.step(&mut g.state, &req.x));
+            for r in block.iter_mut() {
+                for x in &r.xs {
+                    r.outs.push(eng.step(&mut r.state, x));
                 }
             }
         },
         // overlapped stage: previous batch's replies go out while this
         // batch computes on the pool
-        || deliver_replies(undelivered, metrics),
+        || deliver_replies(undelivered, metrics, depth, slo_us),
     );
     metrics.batches.fetch_add(1, Ordering::Relaxed);
-    reinsert_states(&mut groups, sessions);
+    reinsert_states(&mut groups, store, tick);
     *undelivered = groups;
 }
 
@@ -338,7 +619,10 @@ impl DynamicBatcher {
     fn start(source: EngineSource, cfg: ServerConfig) -> Self {
         let (tx, rx) = mpsc::channel::<BatcherCmd>();
         let metrics = Arc::new(ServerMetrics::default());
+        let depth = Arc::new(AtomicUsize::new(0));
+        let (queue_cap, shed, retry_after) = (cfg.queue_cap, cfg.shed, cfg.retry_after);
         let m = metrics.clone();
+        let d = depth.clone();
         // lint-src: allow(thread-spawn) — the batcher is a long-lived service
         // thread, deliberately outside the pool's work budget
         let handle = std::thread::spawn(move || {
@@ -346,17 +630,25 @@ impl DynamicBatcher {
                 EngineSource::Shared(e) => BatchEngine::Shared(e),
                 EngineSource::Factory(f) => BatchEngine::Local(f()),
             };
-            let mut sessions: HashMap<u64, Vec<f32>> = HashMap::new();
-            let mut pending: Vec<StepRequest> = Vec::new();
+            let state_size = engine.engine().state_size();
+            let mut store = SessionStore::new(state_size, cfg.session_mem, cfg.idle_batches);
+            // the bounded backlog: requests not yet batched.  A batch
+            // takes the oldest `max_batch`; the rest persists here,
+            // clamped to `queue_cap` by `shed_overflow`.
+            let mut pending: std::collections::VecDeque<StepRequest> =
+                std::collections::VecDeque::new();
             // pipelined mode: the last computed batch, states already
             // reinserted, replies not yet sent
-            let mut undelivered: Vec<SessionRun> = Vec::new();
+            let mut undelivered = BatchGroups::default();
+            // logical batch clock: drives the store's LRU timestamps and
+            // the idle deadline (deterministic in the request stream)
+            let mut tick: u64 = 0;
             let mut shutdown = false;
             while !shutdown {
                 // block for the first request (or control message); with
-                // replies still owed, bound the block by one window so an
-                // idle channel can never stall them
-                let first = if undelivered.is_empty() {
+                // replies owed or a backlog queued, bound the block by one
+                // window so an idle channel can never stall them
+                let first = if undelivered.is_empty() && pending.is_empty() {
                     match rx.recv() {
                         Ok(cmd) => Some(cmd),
                         Err(_) => break,
@@ -372,9 +664,9 @@ impl DynamicBatcher {
                     }
                 };
                 match first {
-                    Some(BatcherCmd::Step(r)) => pending.push(r),
+                    Some(BatcherCmd::Step(r)) => pending.push_back(r),
                     Some(BatcherCmd::Reset(sid)) => {
-                        sessions.remove(&sid);
+                        store.remove(sid);
                         continue;
                     }
                     Some(BatcherCmd::Shutdown) => shutdown = true,
@@ -382,7 +674,7 @@ impl DynamicBatcher {
                 }
                 if pending.is_empty() {
                     // idle or shutting down: flush owed replies, re-loop
-                    deliver_replies(&mut undelivered, &m);
+                    deliver_replies(&mut undelivered, &m, &d, cfg.slo_us);
                     continue;
                 }
                 // fill the window
@@ -393,9 +685,9 @@ impl DynamicBatcher {
                         break;
                     }
                     match rx.recv_timeout(deadline - now) {
-                        Ok(BatcherCmd::Step(r)) => pending.push(r),
+                        Ok(BatcherCmd::Step(r)) => pending.push_back(r),
                         Ok(BatcherCmd::Reset(sid)) => {
-                            sessions.remove(&sid);
+                            store.remove(sid);
                         }
                         // drain the already-queued requests before exiting,
                         // or their blocked step_blocking callers would
@@ -407,29 +699,82 @@ impl DynamicBatcher {
                         Err(mpsc::RecvTimeoutError::Timeout) => break,
                     }
                 }
+                // admission backstop: clamp the backlog to queue_cap
+                shed_overflow(&mut pending, &cfg, &m, &d);
+                // continuous batch: the oldest ready steps; the rest of
+                // the backlog persists into the next window
+                let take = pending.len().min(cfg.max_batch);
+                if take == 0 {
+                    continue;
+                }
+                tick += 1;
                 match (&engine, cfg.pipeline) {
                     (BatchEngine::Shared(e), true) => {
-                        pipelined_batch(&**e, &mut sessions, &mut pending, &mut undelivered, &m);
+                        pipelined_batch(
+                            &**e,
+                            &mut store,
+                            &mut pending,
+                            take,
+                            tick,
+                            &mut undelivered,
+                            &m,
+                            &d,
+                            cfg.slo_us,
+                        );
                     }
                     _ => {
                         // per-session reply order: anything a pipelined
                         // batch parked goes out before this batch does
-                        deliver_replies(&mut undelivered, &m);
-                        execute_batch(&engine, &mut sessions, &mut pending, &m);
+                        deliver_replies(&mut undelivered, &m, &d, cfg.slo_us);
+                        execute_batch(
+                            &engine,
+                            &mut store,
+                            &mut pending,
+                            take,
+                            tick,
+                            &m,
+                            &d,
+                            cfg.slo_us,
+                        );
                     }
                 }
+                store.sweep_idle(tick);
+                mirror_store_gauges(&store, &m);
             }
-            // shutdown: flush parked replies, then any still-queued batch
-            deliver_replies(&mut undelivered, &m);
-            if !pending.is_empty() {
-                execute_batch(&engine, &mut sessions, &mut pending, &m);
+            // shutdown: flush parked replies, then drain the backlog
+            deliver_replies(&mut undelivered, &m, &d, cfg.slo_us);
+            while !pending.is_empty() {
+                let take = pending.len().min(cfg.max_batch);
+                tick += 1;
+                execute_batch(&engine, &mut store, &mut pending, take, tick, &m, &d, cfg.slo_us);
             }
+            mirror_store_gauges(&store, &m);
         });
-        DynamicBatcher { tx, metrics, handle: Some(handle) }
+        DynamicBatcher { tx, metrics, depth, queue_cap, shed, retry_after, handle: Some(handle) }
     }
 
-    /// Enqueue one step; the response arrives on `reply`.
-    pub fn submit(&self, session: u64, x: Vec<f32>, reply: mpsc::Sender<StepResponse>) {
+    /// Enqueue one step; exactly one [`StepReply`] arrives on `reply`.
+    ///
+    /// Admission control: under [`ShedPolicy::RejectNew`], a full
+    /// queue rejects right here — `Rejected { retry_after }` comes
+    /// back immediately and the control thread is never touched.  The
+    /// gate is a relaxed read, so a handful of concurrent submitters
+    /// can slip past it; the control thread's `shed_overflow` backstop
+    /// still clamps the backlog to `queue_cap`.
+    pub fn submit(&self, session: u64, x: Vec<f32>, reply: mpsc::Sender<StepReply>) {
+        if self.shed == ShedPolicy::RejectNew
+            && self.depth.load(Ordering::Relaxed) >= self.queue_cap
+        {
+            self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+            if reply
+                .send(StepReply::Rejected { retry_after: self.retry_after })
+                .is_err()
+            {
+                self.metrics.dropped_replies.fetch_add(1, Ordering::Relaxed);
+            }
+            return;
+        }
+        self.depth.fetch_add(1, Ordering::Relaxed);
         let _ = self.tx.send(BatcherCmd::Step(StepRequest {
             session,
             x,
@@ -438,16 +783,27 @@ impl DynamicBatcher {
         }));
     }
 
+    /// Queued + in-flight requests right now (the admission gauge).
+    pub fn queue_depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
     /// Drop a session's state.
     pub fn reset_session(&self, session: u64) {
         let _ = self.tx.send(BatcherCmd::Reset(session));
     }
 
-    /// Synchronous convenience: submit and wait.
+    /// Synchronous convenience: submit and wait, backing off and
+    /// resubmitting whenever admission control rejects.
     pub fn step_blocking(&self, session: u64, x: Vec<f32>) -> StepResponse {
-        let (tx, rx) = mpsc::channel();
-        self.submit(session, x, tx);
-        rx.recv().expect("batcher died")
+        loop {
+            let (tx, rx) = mpsc::channel();
+            self.submit(session, x.clone(), tx);
+            match rx.recv().expect("batcher died") {
+                StepReply::Output(resp) => return resp,
+                StepReply::Rejected { retry_after } => std::thread::sleep(retry_after),
+            }
+        }
     }
 }
 
@@ -566,6 +922,14 @@ mod tests {
         NativeStreamingEngine::from_store(&spec, &layer.params, &store)
     }
 
+    /// Unwrap a reply that must be an executed step.
+    fn out(reply: StepReply) -> StepResponse {
+        match reply {
+            StepReply::Output(r) => r,
+            StepReply::Rejected { .. } => panic!("unexpected rejection"),
+        }
+    }
+
     /// Wide enough that a multi-session batch crosses
     /// `exec::MIN_PARALLEL_WORK`, so the pipelined batcher's ASYNC
     /// fan-out path (not just its serial-degenerate branch) is
@@ -627,7 +991,7 @@ mod tests {
         let reference = make_engine(9);
         let n_sessions = 6u64;
         let rounds = 4usize;
-        let mut rxs: Vec<(u64, mpsc::Receiver<StepResponse>)> = Vec::new();
+        let mut rxs: Vec<(u64, mpsc::Receiver<StepReply>)> = Vec::new();
         for t in 0..rounds {
             let mut round_rx = Vec::new();
             for s in 0..n_sessions {
@@ -639,7 +1003,7 @@ mod tests {
         }
         let mut got: HashMap<u64, Vec<Vec<f32>>> = HashMap::new();
         for (s, rx) in rxs {
-            let resp = rx.recv().expect("batcher died");
+            let resp = out(rx.recv().expect("batcher died"));
             assert_eq!(resp.session, s);
             got.entry(s).or_default().push(resp.output);
         }
@@ -671,7 +1035,7 @@ mod tests {
         let reference = make_wide_engine(9);
         let n_sessions = 6u64;
         let rounds = 4usize;
-        let mut rxs: Vec<(u64, mpsc::Receiver<StepResponse>)> = Vec::new();
+        let mut rxs: Vec<(u64, mpsc::Receiver<StepReply>)> = Vec::new();
         for t in 0..rounds {
             for s in 0..n_sessions {
                 let (tx, rx) = mpsc::channel();
@@ -681,7 +1045,7 @@ mod tests {
         }
         let mut got: HashMap<u64, Vec<Vec<f32>>> = HashMap::new();
         for (s, rx) in rxs {
-            let resp = rx.recv().expect("pipelined batcher died");
+            let resp = out(rx.recv().expect("pipelined batcher died"));
             assert_eq!(resp.session, s);
             got.entry(s).or_default().push(resp.output);
         }
@@ -768,5 +1132,127 @@ mod tests {
             assert!(outs.iter().all(|v| v.is_finite()));
         }
         assert_eq!(server.router.total_requests(), 8 * 20);
+    }
+
+    #[test]
+    fn full_queue_rejects_with_retry_after() {
+        let cfg = ServerConfig {
+            queue_cap: 0, // every request is over the admission limit
+            retry_after: Duration::from_micros(123),
+            ..Default::default()
+        };
+        let b = DynamicBatcher::new(Box::new(make_engine(13)), cfg);
+        let (tx, rx) = mpsc::channel();
+        b.submit(1, vec![0.1], tx);
+        match rx.recv().expect("no reply") {
+            StepReply::Rejected { retry_after } => {
+                assert_eq!(retry_after, Duration::from_micros(123));
+            }
+            StepReply::Output(_) => panic!("request should have been shed"),
+        }
+        assert!(b.metrics.shed.load(Ordering::Relaxed) >= 1);
+        assert_eq!(b.metrics.snapshot().requests, 0);
+    }
+
+    #[test]
+    fn drop_oldest_policy_sheds_queued_request() {
+        let cfg = ServerConfig {
+            queue_cap: 0,
+            shed: ShedPolicy::DropOldest,
+            ..Default::default()
+        };
+        let b = DynamicBatcher::new(Box::new(make_engine(14)), cfg);
+        // DropOldest admits at submit time; the control thread's
+        // backstop sheds it from the queue front
+        let (tx, rx) = mpsc::channel();
+        b.submit(1, vec![0.5], tx);
+        match rx.recv().expect("no reply") {
+            StepReply::Rejected { .. } => {}
+            StepReply::Output(_) => panic!("cap 0 must shed every request"),
+        }
+        assert_eq!(b.metrics.shed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn evicted_session_restarts_from_zeros() {
+        use crate::coordinator::sessions::session_bytes;
+        let state_size = make_engine(11).state_size();
+        let cfg = ServerConfig {
+            session_mem: session_bytes(state_size), // exactly one resident session
+            ..Default::default()
+        };
+        let b = DynamicBatcher::new(Box::new(make_engine(11)), cfg);
+        let first = b.step_blocking(1, vec![0.7]);
+        b.step_blocking(1, vec![0.7]); // session 1's state is now nonzero
+        b.step_blocking(2, vec![0.3]); // inserting 2 evicts 1 (budget = 1 session)
+        // documented semantics: the evicted session restarts from the
+        // zero state — bit-identical to its very first step
+        let again = b.step_blocking(1, vec![0.7]);
+        assert_eq!(first.output.len(), again.output.len());
+        for (a, c) in first.output.iter().zip(&again.output) {
+            assert!(a.to_bits() == c.to_bits(), "evicted session did not restart from zeros");
+        }
+        let snap = b.metrics.snapshot();
+        assert!(snap.evicted_lru >= 1);
+        assert!(snap.store_bytes <= session_bytes(state_size) as u64);
+    }
+
+    #[test]
+    fn idle_deadline_fires_before_lru_budget() {
+        let cfg = ServerConfig {
+            // unbounded memory: only the idle deadline can evict
+            idle_batches: Some(2),
+            ..Default::default()
+        };
+        let b = DynamicBatcher::new(Box::new(make_engine(12)), cfg);
+        let first = b.step_blocking(1, vec![0.4]);
+        for _ in 0..4 {
+            b.step_blocking(2, vec![0.2]); // batch ticks pass; session 1 idles out
+        }
+        let again = b.step_blocking(1, vec![0.4]);
+        for (a, c) in first.output.iter().zip(&again.output) {
+            assert!(a.to_bits() == c.to_bits(), "idle session was not evicted to zeros");
+        }
+        let snap = b.metrics.snapshot();
+        assert!(snap.evicted_idle >= 1, "idle deadline did not fire");
+        assert_eq!(snap.evicted_lru, 0, "idle deadline must fire before any LRU eviction");
+    }
+
+    #[test]
+    fn dropped_reply_receivers_are_counted() {
+        let b = DynamicBatcher::new(Box::new(make_engine(6)), ServerConfig::default());
+        let (tx, rx) = mpsc::channel();
+        drop(rx); // client abandoned before the step executed
+        b.submit(9, vec![0.1], tx);
+        // this later request completes only after the abandoned one's
+        // batch was delivered (channel FIFO, per-batch delivery order)
+        let _ = b.step_blocking(10, vec![0.2]);
+        assert_eq!(b.metrics.dropped_replies.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn metrics_seqlock_never_tears() {
+        let m = Arc::new(ServerMetrics::default());
+        let w = m.clone();
+        // lint-src: allow(thread-spawn) — racing a real reader against the
+        // writer is the point of this test
+        let writer = std::thread::spawn(move || {
+            for _ in 0..100_000 {
+                w.write_locked(|| {
+                    w.requests.fetch_add(1, Ordering::Relaxed);
+                    w.total_latency_us.fetch_add(7, Ordering::Relaxed);
+                });
+            }
+        });
+        // every request adds exactly 7µs, so any consistent snapshot has
+        // total == 7 * requests; the old two-relaxed-loads read could
+        // observe a count without its latency
+        for _ in 0..20_000 {
+            let (n, t) = m.read_pair();
+            assert_eq!(t, 7 * n, "seqlock snapshot tore: n={n} t={t}");
+        }
+        writer.join().unwrap();
+        assert!((m.mean_latency_us() - 7.0).abs() < 1e-12);
+        assert_eq!(m.snapshot().total_latency_us, 7 * m.snapshot().requests);
     }
 }

@@ -1,0 +1,824 @@
+//! Bounded session-state store, admission policy, continuous-batch
+//! packing, and the deterministic load simulator behind the serving
+//! bench.
+//!
+//! The paper's deployment story is that a trained LMU *executes as an
+//! RNN*: each live session costs exactly one `d·du` DN state vector
+//! (`state_size` f32s) and each token costs O(1) work.  This module
+//! makes that concrete at production scale:
+//!
+//! * [`SessionStore`] — a byte-budgeted slab of session states with an
+//!   intrusive LRU list and an optional idle deadline.  Its invariant:
+//!   **the store never holds more than `max_bytes`** — inserting past
+//!   the budget evicts least-recently-used states first.  Evicted
+//!   sessions are not errors: their next step simply restarts from the
+//!   zero state (the DN state of a fresh session), the documented
+//!   degradation under memory pressure.
+//! * [`ShedPolicy`] — what admission control does when the bounded
+//!   request queue is full: reject the *new* request with a
+//!   retry-after hint, or drop the *oldest* queued one in its favor.
+//! * [`PackedRun`] / [`execute_packed`] — the continuous-batching
+//!   kernel: ready steps from many live sessions packed into one
+//!   pool-dispatched fan-out.  Sessions are independent rows, so the
+//!   partition is the exec substrate's deterministic row split and the
+//!   outputs are bit-identical to stepping each session serially at
+//!   any thread count.
+//! * [`run_load_sim`] — an open-loop load generator (LCG-seeded
+//!   Poisson session arrivals, heavy-tailed Pareto session lengths)
+//!   that drives the store + batching kernel in *virtual time*:
+//!   latency is measured in whole batch windows, so a run's latency
+//!   histogram, eviction counts, and output checksum are byte-for-byte
+//!   reproducible at any thread count — which is what lets CI diff two
+//!   smoke runs and the `PLMU_THREADS ∈ {1, 8}` pair.
+
+use super::engine::StreamingEngine;
+use crate::exec;
+use crate::metrics::LatencyHistogram;
+use std::collections::{HashMap, VecDeque};
+
+/// Fixed per-session bookkeeping charge added to the raw state bytes
+/// when sizing the store: the slab slot (id, links, timestamps), the
+/// map entry, and the `Vec` header.  Deliberately conservative.
+pub const SESSION_OVERHEAD_BYTES: usize = 96;
+
+/// Bytes one session costs in the store: `state_size` f32s plus
+/// [`SESSION_OVERHEAD_BYTES`] of bookkeeping.
+///
+/// ```
+/// // a d=8, du=1 DN state costs 8*4 + 96 = 128 bytes, so 10^6
+/// // concurrent sessions fit in 128 MB:
+/// assert_eq!(plmu::coordinator::sessions::session_bytes(8), 128);
+/// ```
+pub const fn session_bytes(state_size: usize) -> usize {
+    state_size * 4 + SESSION_OVERHEAD_BYTES
+}
+
+/// Cumulative [`SessionStore`] counters (single-writer: the thread
+/// driving the store).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StoreStats {
+    /// states inserted (first sight of a session, or re-insert after take)
+    pub inserted: u64,
+    /// states evicted because the byte budget was exceeded
+    pub evicted_lru: u64,
+    /// states evicted because the idle deadline fired
+    pub evicted_idle: u64,
+    /// high-water mark of resident sessions
+    pub peak_sessions: u64,
+    /// high-water mark of resident bytes
+    pub peak_bytes: u64,
+}
+
+const NIL: usize = usize::MAX;
+
+struct Slot {
+    session: u64,
+    state: Vec<f32>,
+    last_used: u64,
+    /// neighbor toward the head (more recently used)
+    prev: usize,
+    /// neighbor toward the tail (less recently used)
+    next: usize,
+}
+
+/// Byte-budgeted LRU session-state store with an optional idle
+/// deadline, the serving subsystem's only per-session memory.
+///
+/// Time is a logical tick supplied by the caller (the server uses its
+/// batch counter, the load sim its window index), so eviction order is
+/// a pure function of the request stream — no wall clock, fully
+/// deterministic.
+///
+/// ```
+/// use plmu::coordinator::sessions::{session_bytes, SessionStore};
+/// // room for exactly two 4-float states, idle deadline 10 ticks
+/// let mut s = SessionStore::new(4, 2 * session_bytes(4), Some(10));
+/// s.put(1, vec![0.1; 4], 0);
+/// s.put(2, vec![0.2; 4], 1);
+/// s.put(3, vec![0.3; 4], 2); // over budget: evicts session 1 (LRU)
+/// assert_eq!(s.take(1), None); // cold — next step restarts from zeros
+/// assert_eq!(s.len(), 2); // sessions 2 and 3 are resident
+/// assert!(s.bytes() <= s.max_bytes());
+/// ```
+pub struct SessionStore {
+    state_size: usize,
+    max_bytes: usize,
+    idle_deadline: Option<u64>,
+    map: HashMap<u64, usize>,
+    slots: Vec<Slot>,
+    free: Vec<usize>,
+    head: usize,
+    tail: usize,
+    bytes: usize,
+    stats: StoreStats,
+}
+
+impl SessionStore {
+    /// A store for `state_size`-float sessions holding at most
+    /// `max_bytes` (use `usize::MAX` for unbounded); sessions untouched
+    /// for `idle_deadline` ticks are evicted by [`sweep_idle`].
+    ///
+    /// [`sweep_idle`]: SessionStore::sweep_idle
+    pub fn new(state_size: usize, max_bytes: usize, idle_deadline: Option<u64>) -> Self {
+        SessionStore {
+            state_size,
+            max_bytes,
+            idle_deadline,
+            map: HashMap::new(),
+            slots: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            bytes: 0,
+            stats: StoreStats::default(),
+        }
+    }
+
+    /// Bytes one resident session costs ([`session_bytes`]).
+    pub fn bytes_per_session(&self) -> usize {
+        session_bytes(self.state_size)
+    }
+
+    /// How many sessions fit in the byte budget.
+    pub fn capacity_sessions(&self) -> usize {
+        if self.max_bytes == usize::MAX {
+            usize::MAX
+        } else {
+            self.max_bytes / self.bytes_per_session()
+        }
+    }
+
+    /// Resident session count.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when no sessions are resident.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Resident bytes (always `<= max_bytes` — the store's invariant).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// The configured byte budget.
+    pub fn max_bytes(&self) -> usize {
+        self.max_bytes
+    }
+
+    /// Cumulative counters.
+    pub fn stats(&self) -> StoreStats {
+        self.stats
+    }
+
+    fn unlink(&mut self, i: usize) {
+        let (p, n) = (self.slots[i].prev, self.slots[i].next);
+        if p == NIL {
+            self.head = n;
+        } else {
+            self.slots[p].next = n;
+        }
+        if n == NIL {
+            self.tail = p;
+        } else {
+            self.slots[n].prev = p;
+        }
+        self.slots[i].prev = NIL;
+        self.slots[i].next = NIL;
+    }
+
+    fn push_head(&mut self, i: usize) {
+        self.slots[i].prev = NIL;
+        self.slots[i].next = self.head;
+        if self.head != NIL {
+            self.slots[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+
+    /// Unlink slot `i` and recycle it, dropping its session entirely.
+    fn evict_slot(&mut self, i: usize) {
+        self.unlink(i);
+        let sid = self.slots[i].session;
+        self.map.remove(&sid);
+        self.slots[i].state = Vec::new();
+        self.free.push(i);
+        self.bytes -= self.bytes_per_session();
+    }
+
+    /// Remove and return a session's state (a *take*, not an eviction:
+    /// the caller is about to advance it and `put` it back).  `None`
+    /// means the session is cold — evicted or never seen — and its
+    /// next step starts from the zero state.
+    pub fn take(&mut self, session: u64) -> Option<Vec<f32>> {
+        let i = self.map.remove(&session)?;
+        self.unlink(i);
+        let state = std::mem::take(&mut self.slots[i].state);
+        self.free.push(i);
+        self.bytes -= self.bytes_per_session();
+        Some(state)
+    }
+
+    /// Insert (or refresh) a session's state at tick `now`, marking it
+    /// most-recently-used, then evict LRU states until the byte budget
+    /// holds again.  A budget smaller than one session evicts the
+    /// incoming state itself — the invariant `bytes() <= max_bytes`
+    /// is unconditional.
+    pub fn put(&mut self, session: u64, state: Vec<f32>, now: u64) {
+        debug_assert_eq!(state.len(), self.state_size);
+        if let Some(&i) = self.map.get(&session) {
+            self.slots[i].state = state;
+            self.slots[i].last_used = now;
+            self.unlink(i);
+            self.push_head(i);
+            return;
+        }
+        let i = match self.free.pop() {
+            Some(i) => {
+                self.slots[i] =
+                    Slot { session, state, last_used: now, prev: NIL, next: NIL };
+                i
+            }
+            None => {
+                self.slots.push(Slot { session, state, last_used: now, prev: NIL, next: NIL });
+                self.slots.len() - 1
+            }
+        };
+        self.map.insert(session, i);
+        self.push_head(i);
+        self.bytes += self.bytes_per_session();
+        self.stats.inserted += 1;
+        while self.bytes > self.max_bytes && self.tail != NIL {
+            let victim = self.tail;
+            self.evict_slot(victim);
+            self.stats.evicted_lru += 1;
+        }
+        self.stats.peak_sessions = self.stats.peak_sessions.max(self.map.len() as u64);
+        self.stats.peak_bytes = self.stats.peak_bytes.max(self.bytes as u64);
+    }
+
+    /// Evict every session untouched for at least the idle deadline as
+    /// of tick `now`.  No-op when no deadline is configured.  Runs from
+    /// the LRU tail, so it stops at the first fresh-enough session.
+    pub fn sweep_idle(&mut self, now: u64) {
+        let Some(deadline) = self.idle_deadline else { return };
+        while self.tail != NIL
+            && now.saturating_sub(self.slots[self.tail].last_used) >= deadline
+        {
+            let victim = self.tail;
+            self.evict_slot(victim);
+            self.stats.evicted_idle += 1;
+        }
+    }
+
+    /// Drop a session outright (client ended it). Returns whether it
+    /// was resident.
+    pub fn remove(&mut self, session: u64) -> bool {
+        match self.map.get(&session) {
+            Some(&i) => {
+                self.evict_slot(i);
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+/// What admission control does when the bounded request queue is full.
+///
+/// ```
+/// use plmu::coordinator::sessions::ShedPolicy;
+/// assert_eq!(ShedPolicy::parse("reject"), Some(ShedPolicy::RejectNew));
+/// assert_eq!(ShedPolicy::parse("drop-oldest"), Some(ShedPolicy::DropOldest));
+/// assert_eq!(ShedPolicy::parse("nope"), None);
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Refuse the incoming request with a retry-after hint; queued
+    /// requests keep their place.  Favors work already admitted.
+    RejectNew,
+    /// Admit the incoming request and shed the oldest queued one.
+    /// Favors fresh traffic; the shed request gets the reject reply.
+    DropOldest,
+}
+
+impl ShedPolicy {
+    /// Parse a CLI/config spelling (`reject` | `drop-oldest`/`oldest`).
+    pub fn parse(s: &str) -> Option<ShedPolicy> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "reject" | "reject-new" => Some(ShedPolicy::RejectNew),
+            "drop-oldest" | "oldest" | "drop" => Some(ShedPolicy::DropOldest),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a human byte size: a plain number, or with a `K`/`M`/`G`
+/// suffix (optionally followed by `B`), case-insensitive.
+///
+/// ```
+/// use plmu::coordinator::sessions::parse_bytes;
+/// assert_eq!(parse_bytes("4096"), Some(4096));
+/// assert_eq!(parse_bytes("64M"), Some(64 * 1024 * 1024));
+/// assert_eq!(parse_bytes("1gb"), Some(1024 * 1024 * 1024));
+/// assert_eq!(parse_bytes("lots"), None);
+/// ```
+pub fn parse_bytes(s: &str) -> Option<usize> {
+    let t = s.trim().to_ascii_lowercase();
+    let t = t.strip_suffix('b').unwrap_or(&t);
+    let (num, mult) = match t.chars().last()? {
+        'k' => (&t[..t.len() - 1], 1usize << 10),
+        'm' => (&t[..t.len() - 1], 1usize << 20),
+        'g' => (&t[..t.len() - 1], 1usize << 30),
+        _ => (t, 1usize),
+    };
+    num.trim().parse::<usize>().ok()?.checked_mul(mult)
+}
+
+/// One session's share of a continuous batch: its state, the inputs
+/// for its ready steps (arrival order), and the outputs produced.
+/// Distinct sessions are independent, which is what lets
+/// [`execute_packed`] fan a batch out across the exec pool without
+/// changing a single output bit.
+pub struct PackedRun {
+    /// session id whose DN state this run advances
+    pub session: u64,
+    /// the session's `state_size` DN state (advanced in place)
+    pub state: Vec<f32>,
+    /// one input vector per ready step, in arrival order
+    pub xs: Vec<Vec<f32>>,
+    /// one engine output per input, filled by [`execute_packed`]
+    pub outs: Vec<Vec<f32>>,
+}
+
+/// Execute a continuous batch: every run's steps advance its own state
+/// in order, runs fan out across the exec pool under the hierarchical
+/// thread budget.  The row partition depends only on the run count, so
+/// the outputs are **bit-identical** to stepping each session serially
+/// — at any `PLMU_THREADS`, pinned by `rust/tests/serving.rs`.
+pub fn execute_packed(eng: &(dyn StreamingEngine + Send + Sync), runs: &mut [PackedRun]) {
+    let total_steps: usize = runs.iter().map(|r| r.xs.len()).sum();
+    let plan = exec::plan_for(runs.len(), total_steps * eng.step_work());
+    exec::parallel_rows_mut(runs, 1, plan, |_, block| {
+        for r in block.iter_mut() {
+            for x in &r.xs {
+                r.outs.push(eng.step(&mut r.state, x));
+            }
+        }
+    });
+}
+
+/// Deterministic 64-bit LCG (Knuth MMIX constants, xorshifted output)
+/// — the load generator's only randomness source, so a seed fully
+/// determines the arrival process.
+///
+/// ```
+/// let mut a = plmu::coordinator::sessions::Lcg::new(7);
+/// let mut b = plmu::coordinator::sessions::Lcg::new(7);
+/// assert_eq!(a.next_u64(), b.next_u64());
+/// ```
+pub struct Lcg(u64);
+
+impl Lcg {
+    /// Seeded generator; distinct seeds give distinct streams.
+    pub fn new(seed: u64) -> Self {
+        Lcg(seed.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(0xd1b5_4a32_d192_ed03))
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        let x = self.0;
+        (x ^ (x >> 33)).wrapping_mul(0xff51_afd7_ed55_8ccd)
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / 9007199254740992.0)
+    }
+
+    /// Poisson sample: Knuth's product method for small means, a
+    /// rounded normal approximation above 30 (fine for a load model).
+    pub fn poisson(&mut self, mean: f64) -> u64 {
+        if mean <= 0.0 {
+            return 0;
+        }
+        if mean <= 30.0 {
+            let limit = (-mean).exp();
+            let mut k = 0u64;
+            let mut p = 1.0f64;
+            loop {
+                p *= 1.0 - self.next_f64(); // (0, 1]
+                if p <= limit {
+                    return k;
+                }
+                k += 1;
+            }
+        }
+        let u1 = 1.0 - self.next_f64();
+        let u2 = self.next_f64();
+        let z = (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos();
+        (mean + mean.sqrt() * z).round().max(0.0) as u64
+    }
+}
+
+/// Knobs for [`run_load_sim`] — see `docs/SERVING.md` for the worked
+/// profiles the serving bench uses.
+#[derive(Clone, Debug)]
+pub struct LoadSimConfig {
+    /// LCG seed: same seed + same config = byte-identical report
+    pub seed: u64,
+    /// virtual batch windows to simulate
+    pub windows: u32,
+    /// virtual duration of one window, µs (latency unit)
+    pub window_us: u64,
+    /// mean NEW sessions per window (open-loop Poisson)
+    pub arrivals_per_window: f64,
+    /// mean session length in tokens (Pareto α=1.5, heavy-tailed)
+    pub session_tokens_mean: f64,
+    /// mean think-time between a session's tokens, in windows
+    pub token_gap_windows: u32,
+    /// engine input width (floats per token)
+    pub dx: usize,
+    /// bounded request-queue depth (admission control)
+    pub queue_cap: usize,
+    /// max steps served per window (service capacity)
+    pub batch_cap: usize,
+    /// session-store byte budget (`usize::MAX` = unbounded)
+    pub session_mem_bytes: usize,
+    /// evict sessions idle for this many windows
+    pub idle_deadline_windows: Option<u64>,
+    /// what to do when the queue is full
+    pub shed: ShedPolicy,
+    /// a shed token retries after this many windows
+    pub retry_windows: u32,
+    /// latency SLO in (virtual) µs
+    pub slo_us: u64,
+}
+
+/// What one [`run_load_sim`] run observed.  Everything except the
+/// caller-measured wall clock is deterministic in (seed, config).
+#[derive(Clone, Debug)]
+pub struct LoadSimReport {
+    /// tokens served
+    pub served: u64,
+    /// tokens shed by admission control
+    pub shed: u64,
+    /// sessions that arrived
+    pub sessions_started: u64,
+    /// sessions that served their last token
+    pub sessions_completed: u64,
+    /// high-water mark of open (concurrent) sessions
+    pub peak_live_sessions: u64,
+    /// LRU evictions (byte budget)
+    pub evicted_lru: u64,
+    /// idle-deadline evictions
+    pub evicted_idle: u64,
+    /// high-water mark of store-resident sessions
+    pub peak_store_sessions: u64,
+    /// high-water mark of store-resident bytes
+    pub peak_store_bytes: u64,
+    /// store-resident bytes at sim end
+    pub final_store_bytes: u64,
+    /// bytes one resident session costs
+    pub bytes_per_session: u64,
+    /// true iff the store was ever observed above its byte budget
+    /// (must stay false — the store's invariant)
+    pub budget_exceeded: bool,
+    /// latency quantiles in virtual µs (whole windows × `window_us`)
+    pub p50_us: u64,
+    /// 95th-percentile latency, virtual µs
+    pub p95_us: u64,
+    /// 99th-percentile latency, virtual µs
+    pub p99_us: u64,
+    /// worst latency, virtual µs
+    pub max_us: u64,
+    /// mean latency, virtual µs
+    pub mean_us: f64,
+    /// tokens whose latency exceeded the SLO
+    pub slo_violations: u64,
+    /// FNV-1a over every output f32's bit pattern, in service order —
+    /// the determinism witness CI byte-diffs
+    pub checksum: u64,
+}
+
+struct SimReq {
+    sess: u32,
+    tok: u32,
+    arrival: u32,
+}
+
+fn fnv1a_f32(h: u64, v: f32) -> u64 {
+    (h ^ v.to_bits() as u64).wrapping_mul(0x100000001b3)
+}
+
+/// Pareto(α=1.5) session length with mean `mean`, clamped to
+/// [1, 50·mean] so a single tail sample cannot dominate the sim.
+fn sample_session_len(rng: &mut Lcg, mean: f64) -> u32 {
+    const ALPHA: f64 = 1.5;
+    let xm = mean * (ALPHA - 1.0) / ALPHA;
+    let u = 1.0 - rng.next_f64(); // (0, 1]
+    let len = xm * u.powf(-1.0 / ALPHA);
+    (len.ceil().max(1.0)).min((mean * 50.0).max(1.0)) as u32
+}
+
+/// Deterministic per-token input: a splitmix64 hash of (session,
+/// token, lane) mapped into [-1, 1).
+fn token_input(sess: u32, tok: u32, dx: usize) -> Vec<f32> {
+    let base = ((sess as u64) << 32) | tok as u64;
+    (0..dx)
+        .map(|j| {
+            let mut z = base
+                .wrapping_add((j as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+            z ^= z >> 31;
+            ((z >> 40) as f32) / ((1u64 << 23) as f32) - 1.0
+        })
+        .collect()
+}
+
+/// Drive the session store + continuous-batching kernel with an
+/// open-loop synthetic workload in virtual time.
+///
+/// Each window: (1) Poisson session arrivals join the timing wheel;
+/// (2) due tokens enter the bounded queue, shedding per the policy
+/// when it is full (shed tokens retry after `retry_windows`); (3) up
+/// to `batch_cap` queued tokens are packed into one [`execute_packed`]
+/// batch against the **real** engine and exec pool; served sessions
+/// schedule their next token after a think-time gap, finished ones
+/// leave the store.  A token's latency is
+/// `(service_window − arrival_window + 1) · window_us`.
+///
+/// Because time is virtual and the batch kernel is bit-exact, the
+/// whole report — checksum included — is a pure function of
+/// (seed, config), independent of thread count and machine speed.
+pub fn run_load_sim(
+    eng: &(dyn StreamingEngine + Send + Sync),
+    cfg: &LoadSimConfig,
+) -> LoadSimReport {
+    let state_size = eng.state_size();
+    let mut rng = Lcg::new(cfg.seed);
+    let mut store =
+        SessionStore::new(state_size, cfg.session_mem_bytes, cfg.idle_deadline_windows);
+    let hist = LatencyHistogram::default();
+    let windows = cfg.windows as usize;
+    let mut wheel: Vec<Vec<(u32, u32)>> = vec![Vec::new(); windows];
+    let mut remaining: Vec<u32> = Vec::new();
+    let mut queue: VecDeque<SimReq> = VecDeque::new();
+    let mut shed = 0u64;
+    let mut served = 0u64;
+    let mut slo_violations = 0u64;
+    let mut checksum = 0xcbf29ce484222325u64;
+    let mut live = 0u64;
+    let mut peak_live = 0u64;
+    let mut completed = 0u64;
+    let mut budget_exceeded = false;
+
+    for w in 0..windows {
+        // (1) open-loop session arrivals
+        for _ in 0..rng.poisson(cfg.arrivals_per_window) {
+            let sid = remaining.len() as u32;
+            remaining.push(sample_session_len(&mut rng, cfg.session_tokens_mean));
+            live += 1;
+            peak_live = peak_live.max(live);
+            wheel[w].push((sid, 0));
+        }
+        // (2) due tokens hit the bounded queue
+        let due = std::mem::take(&mut wheel[w]);
+        for (sess, tok) in due {
+            if queue.len() >= cfg.queue_cap {
+                shed += 1;
+                let retry = w + cfg.retry_windows.max(1) as usize;
+                match cfg.shed {
+                    ShedPolicy::RejectNew => {
+                        if retry < windows {
+                            wheel[retry].push((sess, tok));
+                        }
+                    }
+                    ShedPolicy::DropOldest => {
+                        if let Some(old) = queue.pop_front() {
+                            if retry < windows {
+                                wheel[retry].push((old.sess, old.tok));
+                            }
+                        }
+                        queue.push_back(SimReq { sess, tok, arrival: w as u32 });
+                    }
+                }
+            } else {
+                queue.push_back(SimReq { sess, tok, arrival: w as u32 });
+            }
+        }
+        // (3) serve one continuous batch
+        let n = queue.len().min(cfg.batch_cap);
+        if n > 0 {
+            let mut runs: Vec<PackedRun> = Vec::new();
+            let mut reqs: Vec<Vec<SimReq>> = Vec::new();
+            let mut index: HashMap<u32, usize> = HashMap::new();
+            for r in queue.drain(..n) {
+                let gi = *index.entry(r.sess).or_insert_with(|| {
+                    let state = store
+                        .take(r.sess as u64)
+                        .unwrap_or_else(|| vec![0.0f32; state_size]);
+                    runs.push(PackedRun {
+                        session: r.sess as u64,
+                        state,
+                        xs: Vec::new(),
+                        outs: Vec::new(),
+                    });
+                    reqs.push(Vec::new());
+                    runs.len() - 1
+                });
+                runs[gi].xs.push(token_input(r.sess, r.tok, cfg.dx));
+                reqs[gi].push(r);
+            }
+            execute_packed(eng, &mut runs);
+            for (run, rs) in runs.iter_mut().zip(&reqs) {
+                for (req, out) in rs.iter().zip(&run.outs) {
+                    let lat_us =
+                        (w as u64 + 1 - req.arrival as u64) * cfg.window_us;
+                    hist.record_us(lat_us);
+                    if lat_us > cfg.slo_us {
+                        slo_violations += 1;
+                    }
+                    for v in out {
+                        checksum = fnv1a_f32(checksum, *v);
+                    }
+                    served += 1;
+                    let sid = req.sess as usize;
+                    remaining[sid] -= 1;
+                    if remaining[sid] == 0 {
+                        live -= 1;
+                        completed += 1;
+                    } else {
+                        let gap_mean = cfg.token_gap_windows.max(1) as u64;
+                        let gap = 1 + rng.next_u64() % (2 * gap_mean - 1).max(1);
+                        let next = w + gap as usize;
+                        if next < windows {
+                            wheel[next].push((req.sess, req.tok + 1));
+                        }
+                    }
+                }
+                if remaining[run.session as usize] > 0 {
+                    store.put(run.session, std::mem::take(&mut run.state), w as u64);
+                } else {
+                    store.remove(run.session);
+                }
+            }
+            store.sweep_idle(w as u64);
+        }
+        if store.bytes() > store.max_bytes() {
+            budget_exceeded = true;
+        }
+    }
+
+    let stats = store.stats();
+    LoadSimReport {
+        served,
+        shed,
+        sessions_started: remaining.len() as u64,
+        sessions_completed: completed,
+        peak_live_sessions: peak_live,
+        evicted_lru: stats.evicted_lru,
+        evicted_idle: stats.evicted_idle,
+        peak_store_sessions: stats.peak_sessions,
+        peak_store_bytes: stats.peak_bytes,
+        final_store_bytes: store.bytes() as u64,
+        bytes_per_session: store.bytes_per_session() as u64,
+        budget_exceeded,
+        p50_us: hist.quantile_us(0.50),
+        p95_us: hist.quantile_us(0.95),
+        p99_us: hist.quantile_us(0.99),
+        max_us: hist.max_us(),
+        mean_us: hist.mean_us(),
+        slo_violations,
+        checksum,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn budget_for(state_size: usize, sessions: usize) -> usize {
+        sessions * session_bytes(state_size)
+    }
+
+    #[test]
+    fn store_lru_evicts_oldest_first_and_budget_holds() {
+        let mut s = SessionStore::new(4, budget_for(4, 3), None);
+        for (t, sid) in [10u64, 11, 12].iter().enumerate() {
+            s.put(*sid, vec![*sid as f32; 4], t as u64);
+            assert!(s.bytes() <= s.max_bytes());
+        }
+        // touch 10 so 11 becomes LRU
+        let st = s.take(10).unwrap();
+        s.put(10, st, 3);
+        s.put(13, vec![13.0; 4], 4); // evicts 11
+        assert!(s.bytes() <= s.max_bytes());
+        assert_eq!(s.len(), 3);
+        assert!(s.take(11).is_none(), "LRU victim should be 11");
+        assert!(s.take(10).is_some());
+        assert_eq!(s.stats().evicted_lru, 1);
+    }
+
+    #[test]
+    fn store_budget_never_exceeded_even_for_single_oversized_entry() {
+        // budget below one session: the incoming state itself is evicted
+        let mut s = SessionStore::new(8, 1, None);
+        s.put(1, vec![0.0; 8], 0);
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.bytes(), 0);
+        assert!(s.take(1).is_none());
+    }
+
+    #[test]
+    fn store_idle_deadline_fires_before_lru_budget() {
+        // plenty of byte budget — only the idle deadline can evict
+        let mut s = SessionStore::new(4, budget_for(4, 100), Some(5));
+        s.put(1, vec![1.0; 4], 0);
+        s.put(2, vec![2.0; 4], 3);
+        s.sweep_idle(4); // nobody idle >= 5 ticks yet
+        assert_eq!(s.len(), 2);
+        s.sweep_idle(5); // session 1 idle exactly 5 ticks
+        assert_eq!(s.len(), 1);
+        assert!(s.take(1).is_none());
+        assert!(s.take(2).is_some());
+        let st = s.stats();
+        assert_eq!(st.evicted_idle, 1);
+        assert_eq!(st.evicted_lru, 0, "idle deadline must fire before any LRU eviction");
+    }
+
+    #[test]
+    fn store_take_put_roundtrip_and_remove() {
+        let mut s = SessionStore::new(2, usize::MAX, None);
+        s.put(7, vec![0.5, -0.5], 0);
+        let mut st = s.take(7).unwrap();
+        assert_eq!(st, vec![0.5, -0.5]);
+        st[0] = 9.0;
+        s.put(7, st, 1);
+        assert_eq!(s.len(), 1);
+        assert!(s.remove(7));
+        assert!(!s.remove(7));
+        assert!(s.is_empty());
+        assert_eq!(s.bytes(), 0);
+    }
+
+    #[test]
+    fn store_slot_reuse_keeps_links_consistent() {
+        // churn sessions through a small store; the intrusive list must
+        // stay coherent across free-list reuse
+        let mut s = SessionStore::new(1, budget_for(1, 2), None);
+        for t in 0..50u64 {
+            s.put(t, vec![t as f32], t);
+            assert!(s.len() <= 2);
+            assert!(s.bytes() <= s.max_bytes());
+        }
+        // the two newest survive
+        assert!(s.take(49).is_some());
+        assert!(s.take(48).is_some());
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn parse_helpers() {
+        assert_eq!(parse_bytes("0"), Some(0));
+        assert_eq!(parse_bytes("512"), Some(512));
+        assert_eq!(parse_bytes("2K"), Some(2048));
+        assert_eq!(parse_bytes("3mb"), Some(3 << 20));
+        assert_eq!(parse_bytes(""), None);
+        assert_eq!(parse_bytes("12q"), None);
+        assert_eq!(ShedPolicy::parse("REJECT"), Some(ShedPolicy::RejectNew));
+        assert_eq!(ShedPolicy::parse("oldest"), Some(ShedPolicy::DropOldest));
+    }
+
+    #[test]
+    fn lcg_deterministic_and_poisson_sane() {
+        let mut a = Lcg::new(42);
+        let mut b = Lcg::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut r = Lcg::new(1);
+        let mean: f64 =
+            (0..2000).map(|_| r.poisson(4.0) as f64).sum::<f64>() / 2000.0;
+        assert!((mean - 4.0).abs() < 0.5, "poisson mean drifted: {mean}");
+        assert_eq!(Lcg::new(0).poisson(0.0), 0);
+    }
+
+    #[test]
+    fn session_lengths_heavy_tailed_but_bounded() {
+        let mut r = Lcg::new(3);
+        let lens: Vec<u32> = (0..5000).map(|_| sample_session_len(&mut r, 4.0)).collect();
+        assert!(lens.iter().all(|&l| l >= 1 && l <= 200));
+        let mean = lens.iter().map(|&l| l as f64).sum::<f64>() / lens.len() as f64;
+        assert!(mean > 2.0 && mean < 8.0, "pareto mean drifted: {mean}");
+        // heavy tail: some session is several times the mean
+        assert!(lens.iter().any(|&l| l as f64 > 3.0 * mean));
+    }
+}

@@ -259,15 +259,18 @@ where
 {
     let rows = if row_len == 0 { 0 } else { out.len() / row_len };
     if plan.is_serial() || rows <= 1 {
+        DISPATCH_SERIAL.fetch_add(1, Ordering::Relaxed);
         f(0, out);
         return;
     }
     let chunk_rows = rows.div_ceil(plan.chunks.min(rows));
     let chunks = rows.div_ceil(chunk_rows);
     if chunks <= 1 {
+        DISPATCH_SERIAL.fetch_add(1, Ordering::Relaxed);
         f(0, out);
         return;
     }
+    DISPATCH_POOLED.fetch_add(1, Ordering::Relaxed);
     let total_len = out.len();
     // PLMU_VERIFY>=1: prove the SAFETY claim below — the chunk ranges
     // must partition [0, total_len) — before any `&mut` fans out
@@ -305,6 +308,7 @@ where
     F: Fn(usize, usize) + Sync,
 {
     if plan.is_serial() || n <= 1 {
+        DISPATCH_SERIAL.fetch_add(1, Ordering::Relaxed);
         if n > 0 {
             f(0, n);
         }
@@ -313,9 +317,11 @@ where
     let chunk = n.div_ceil(plan.chunks.min(n));
     let chunks = n.div_ceil(chunk);
     if chunks <= 1 {
+        DISPATCH_SERIAL.fetch_add(1, Ordering::Relaxed);
         f(0, n);
         return;
     }
+    DISPATCH_POOLED.fetch_add(1, Ordering::Relaxed);
     pool::run(chunks, plan.workers, &|ci| {
         let lo = ci * chunk;
         let hi = ((ci + 1) * chunk).min(n);
@@ -518,6 +524,30 @@ where
 }
 
 // ------------------------------------------------------- pool observability
+
+/// Row/range dispatches that fanned out on the pool since the last
+/// [`reset_dispatch_counts`].
+static DISPATCH_POOLED: AtomicUsize = AtomicUsize::new(0);
+/// Row/range dispatches that short-circuited to the serial path
+/// (serial plan, single row, or a degenerate chunk count).
+static DISPATCH_SERIAL: AtomicUsize = AtomicUsize::new(0);
+
+/// Queue observability for the serving stack: how many
+/// `parallel_rows_mut` / `parallel_ranges` dispatches went to the pool
+/// vs. ran serially since the last [`reset_dispatch_counts`].  Returns
+/// `(pooled, serial)`.  The serving bench reports these so a
+/// continuous-batching configuration that silently degenerates to
+/// serial dispatch (batches below `MIN_PARALLEL_WORK`) is visible in
+/// `BENCH_serving.json` instead of masquerading as pool throughput.
+pub fn dispatch_counts() -> (usize, usize) {
+    (DISPATCH_POOLED.load(Ordering::Relaxed), DISPATCH_SERIAL.load(Ordering::Relaxed))
+}
+
+/// Zero the [`dispatch_counts`] counters.
+pub fn reset_dispatch_counts() {
+    DISPATCH_POOLED.store(0, Ordering::Relaxed);
+    DISPATCH_SERIAL.store(0, Ordering::Relaxed);
+}
 
 /// High-water mark of concurrently busy exec threads (each OS thread
 /// counted once, however deeply nested) since the last

@@ -74,6 +74,37 @@ fn main() -> Result<()> {
         .opt("sessions", "8", "serve: concurrent sessions")
         .opt("tokens", "64", "serve: tokens per session")
         .opt("replicas", "1", "serve: engine replicas")
+        .opt(
+            "session-mem",
+            "",
+            "serve: session-store byte budget per replica, e.g. 64m or 2g \
+             (PLMU_SESSION_MEM equivalent; empty = inherit env / unbounded). \
+             LRU sessions are evicted past the budget and restart from zeros",
+        )
+        .opt(
+            "queue-cap",
+            "0",
+            "serve: bounded request-queue depth per replica (PLMU_QUEUE_CAP \
+             equivalent; 0 = inherit env / default 4096)",
+        )
+        .opt(
+            "shed",
+            "",
+            "serve: overload policy once the queue is full: reject | drop-oldest \
+             (empty = reject new requests with a retry-after hint)",
+        )
+        .opt(
+            "slo-us",
+            "0",
+            "serve: per-step latency SLO in microseconds for the violation counter \
+             (PLMU_SLO_US equivalent; 0 = inherit env / default 10000)",
+        )
+        .opt(
+            "idle-windows",
+            "0",
+            "serve: evict a session idle for this many batch windows even under \
+             budget (0 = never; idle eviction runs before LRU pressure)",
+        )
         .opt("artifact", "dn_fwd_fft", "exec: artifact name")
         .opt("artifacts-dir", "artifacts", "artifact directory")
         .opt("seed", "0", "RNG seed")
@@ -360,20 +391,40 @@ fn analyze(_args: &Args) -> Result<()> {
 /// Source-conformance lint (analysis pass 4): walk the crate sources and
 /// enforce the repo's structural rules — no ad-hoc thread spawns outside
 /// exec/, no HashMap on fingerprinted paths, env knobs via the unified
-/// helper, complete simd dispatch triples.  Second CI analyze gate.
+/// helper, complete simd dispatch triples, and every knob read in source
+/// documented in the README's `## Knob reference` table.  Second CI
+/// analyze gate.
 fn lint_src(args: &Args) -> Result<()> {
     let root = args
         .positionals()
         .get(1)
         .cloned()
         .unwrap_or_else(|| "rust/src".to_string());
-    let findings = match plmu::analyze::lint::lint_tree(std::path::Path::new(&root)) {
+    let root_path = std::path::Path::new(&root);
+    let mut findings = match plmu::analyze::lint::lint_tree(root_path) {
         Ok(f) => f,
         Err(e) => {
             eprintln!("lint-src: cannot walk {root}: {e}");
             std::process::exit(2);
         }
     };
+    // knob-doc needs the README as input: look beside the scan root
+    // (rust/src -> repo root two levels up) and at the cwd
+    let readme = ["README.md", "../README.md", "../../README.md"]
+        .iter()
+        .map(|c| root_path.join(c))
+        .chain(std::iter::once(std::path::PathBuf::from("README.md")))
+        .find_map(|p| std::fs::read_to_string(p).ok());
+    match readme {
+        Some(text) => match plmu::analyze::lint::lint_knob_docs(root_path, &text) {
+            Ok(f) => findings.extend(f),
+            Err(e) => {
+                eprintln!("lint-src: knob-doc walk failed: {e}");
+                std::process::exit(2);
+            }
+        },
+        None => println!("lint-src: no README.md found near {root} — knob-doc rule skipped"),
+    }
     for f in &findings {
         println!("{f}");
     }
@@ -389,6 +440,7 @@ fn lint_src(args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
+    use plmu::coordinator::sessions::{parse_bytes, session_bytes, ShedPolicy};
     let sessions = args.get_u64("sessions");
     let tokens = args.get_usize("tokens");
     let replicas = args.get_usize("replicas");
@@ -397,11 +449,53 @@ fn serve(args: &Args) -> Result<()> {
     let spec = LmuSpec::new(1, 1, args.get_usize("d"), 64.0, args.get_usize("hidden"));
     let layer = LmuParallelLayer::new(spec.clone(), 64, &mut store, &mut rng, "srv");
     // engines share the trained weights (here: fresh init for the demo)
-    let server_cfg = ServerConfig { pipeline: args.get_flag("pipeline"), ..Default::default() };
+    let mut server_cfg = ServerConfig { pipeline: args.get_flag("pipeline"), ..Default::default() };
+    let sm = args.get("session-mem");
+    if !sm.is_empty() {
+        match parse_bytes(&sm) {
+            Some(b) => server_cfg.session_mem = b,
+            None => {
+                eprintln!("bad --session-mem value {sm:?} (want e.g. 64m, 2g, 4096)");
+                std::process::exit(2);
+            }
+        }
+    }
+    let qc = args.get_usize("queue-cap");
+    if qc > 0 {
+        server_cfg.queue_cap = qc;
+    }
+    let shed = args.get("shed");
+    if !shed.is_empty() {
+        match ShedPolicy::parse(&shed) {
+            Some(p) => server_cfg.shed = p,
+            None => {
+                eprintln!("bad --shed value {shed:?} (want reject | drop-oldest)");
+                std::process::exit(2);
+            }
+        }
+    }
+    let slo = args.get_usize("slo-us");
+    if slo > 0 {
+        server_cfg.slo_us = slo as u64;
+    }
+    let idle = args.get_u64("idle-windows");
+    if idle > 0 {
+        server_cfg.idle_batches = Some(idle);
+    }
+    let session_mem = server_cfg.session_mem;
     let server = StreamingServer::new(replicas, server_cfg, || {
         Box::new(NativeStreamingEngine::from_store(&spec, &layer.params, &store))
     });
+    let per_session = session_bytes(spec.d * spec.du);
     println!("serving {sessions} sessions x {tokens} tokens on {replicas} replica(s)");
+    // N bytes/session x 10^6 sessions = N MB: the per-session figure IS
+    // the megabyte cost of a million concurrent sessions
+    println!(
+        "session cost: {per_session} B each ({} B state + overhead) — 10^6 sessions = {per_session} MB; \
+         budget {}",
+        spec.d * spec.du * 4,
+        if session_mem == usize::MAX { "unbounded".to_string() } else { format!("{session_mem} B") }
+    );
     let timer = Timer::start();
     let server = std::sync::Arc::new(server);
     let mut handles = Vec::new();
@@ -424,6 +518,24 @@ fn serve(args: &Args) -> Result<()> {
         "served {total} steps in {wall:.2}s = {:.0} tokens/s",
         total as f64 / wall
     );
+    for i in 0..server.router.replicas() {
+        let snap = server.router.metrics_of(i).snapshot();
+        println!(
+            "replica {i}: p50 {} us, p95 {} us, p99 {} us, max {} us | shed {} | \
+             slo>{} | store {} sessions / {} B (peak {} B) | evicted {} lru + {} idle",
+            snap.p50_us,
+            snap.p95_us,
+            snap.p99_us,
+            snap.max_us,
+            snap.shed,
+            snap.slo_violations,
+            snap.store_sessions,
+            snap.store_bytes,
+            snap.store_peak_bytes,
+            snap.evicted_lru,
+            snap.evicted_idle,
+        );
+    }
     Ok(())
 }
 

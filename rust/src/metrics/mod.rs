@@ -1,10 +1,12 @@
 //! Evaluation metrics matching the paper's reporting: accuracy (Tables
 //! 2/4/5), NRMSE (Table 3), bits-per-character (Table 6 text8), and BLEU-4
 //! (Table 6 IWSLT) — plus the `PLMU_ALLOC_STATS` allocation-counter
-//! reporting that surfaces the arena's hit/miss/fresh-bytes counters.
+//! reporting that surfaces the arena's hit/miss/fresh-bytes counters and
+//! the streaming [`LatencyHistogram`] the serving stack records request
+//! latencies into (p50/p95/p99 against an SLO, constant memory).
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 // ---------------------------------------------------------------------------
 // Allocation-stats reporting (PLMU_ALLOC_STATS)
@@ -175,6 +177,127 @@ impl Running {
     }
 }
 
+/// Sub-buckets per octave in [`LatencyHistogram`].  4 keeps the
+/// worst-case relative quantile error at 1/4 of the bucket's octave
+/// (~6%) with 256 buckets total.
+const HIST_SUB: usize = 4;
+/// Bucket count: octaves 1..=63 × 4 sub-buckets, plus the exact
+/// buckets 0..4 at the front (indices 0..4 are exact microseconds).
+const HIST_BUCKETS: usize = 63 * HIST_SUB + HIST_SUB;
+
+/// Streaming log-linear latency histogram with lock-free recording.
+///
+/// Values are microseconds.  Buckets below 4µs are exact; above, each
+/// power-of-two octave is split into [`HIST_SUB`] linear sub-buckets,
+/// so quantile estimates carry at most ~1/[`HIST_SUB`] relative error
+/// per octave while the whole structure stays at a fixed ~2KiB
+/// regardless of request count — suitable for recording millions of
+/// per-request latencies from the serving path.
+///
+/// All counters are relaxed atomics: `record_us` is wait-free and safe
+/// to call from any thread; readers see a possibly slightly stale but
+/// always internally valid view (each bucket count is independently
+/// monotone).
+///
+/// ```
+/// let h = plmu::metrics::LatencyHistogram::default();
+/// for us in [100u64, 200, 300, 400, 1000] {
+///     h.record_us(us);
+/// }
+/// assert_eq!(h.count(), 5);
+/// assert!(h.quantile_us(0.5) >= 200 && h.quantile_us(0.5) <= 400);
+/// assert_eq!(h.max_us(), 1000);
+/// ```
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    /// Bucket index for a microsecond value.  0..4 map to themselves;
+    /// above, the octave is `floor(log2 us)` and the sub-bucket is the
+    /// two bits below the leading one.
+    fn bucket_of(us: u64) -> usize {
+        if us < 4 {
+            return us as usize;
+        }
+        let oct = 63 - us.leading_zeros() as usize; // >= 2
+        let sub = ((us >> (oct - 2)) & 3) as usize;
+        ((oct - 1) * HIST_SUB + sub).min(HIST_BUCKETS - 1)
+    }
+
+    /// Inclusive upper bound (µs) of bucket `b` — the value reported
+    /// for quantiles that land in it (conservative: never understates).
+    fn bucket_upper(b: usize) -> u64 {
+        if b < HIST_SUB {
+            return b as u64;
+        }
+        let oct = b / HIST_SUB + 1;
+        let sub = (b % HIST_SUB) as u64;
+        (1u64 << oct) + (sub + 1) * (1u64 << (oct - 2)) - 1
+    }
+
+    /// Record one latency observation, in microseconds.
+    pub fn record_us(&self, us: u64) {
+        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Number of recorded observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency in microseconds (0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Largest recorded value in microseconds (exact, not bucketed).
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Quantile estimate in microseconds: the upper bound of the bucket
+    /// containing the `ceil(q·count)`-th observation.  Clamped to the
+    /// exact max so p100 never overstates.  Returns 0 when empty.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut seen = 0u64;
+        for (b, c) in self.buckets.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
+            if seen >= rank {
+                return Self::bucket_upper(b).min(self.max_us());
+            }
+        }
+        self.max_us()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -262,5 +385,58 @@ mod tests {
         assert_eq!(r.mean(), 2.0);
         assert_eq!(r.min, 1.0);
         assert_eq!(r.max, 3.0);
+    }
+
+    #[test]
+    fn hist_bucket_mapping_monotone_and_bounded() {
+        // bucket_of must be monotone non-decreasing and every value must
+        // land at or below its bucket's inclusive upper bound.
+        let mut prev = 0usize;
+        for us in 0u64..10_000 {
+            let b = LatencyHistogram::bucket_of(us);
+            assert!(b >= prev, "bucket_of not monotone at {us}");
+            assert!(us <= LatencyHistogram::bucket_upper(b), "{us} above bucket {b} upper");
+            prev = b;
+        }
+        // spot-check the octave boundaries
+        assert_eq!(LatencyHistogram::bucket_of(3), 3);
+        assert_eq!(LatencyHistogram::bucket_of(4), 4);
+        assert_eq!(LatencyHistogram::bucket_of(7), 7);
+        assert!(LatencyHistogram::bucket_of(8) > LatencyHistogram::bucket_of(7));
+        // the largest u64 must not index out of range
+        assert!(LatencyHistogram::bucket_of(u64::MAX) < HIST_BUCKETS);
+    }
+
+    #[test]
+    fn hist_empty_is_zero() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.max_us(), 0);
+        assert_eq!(h.quantile_us(0.5), 0);
+        assert_eq!(h.quantile_us(0.99), 0);
+    }
+
+    #[test]
+    fn hist_quantiles_bracket_and_order() {
+        let h = LatencyHistogram::default();
+        for us in 1..=1000u64 {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.max_us(), 1000);
+        let p50 = h.quantile_us(0.50);
+        let p95 = h.quantile_us(0.95);
+        let p99 = h.quantile_us(0.99);
+        // quantiles are ordered and conservative (bucket upper bound):
+        // never below the true rank value, never above max by more than
+        // one sub-bucket width (clamped to max).
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        assert!((500..=640).contains(&p50), "p50 {p50}");
+        assert!((950..=1000).contains(&p95), "p95 {p95}");
+        assert!((990..=1000).contains(&p99), "p99 {p99}");
+        assert_eq!(h.quantile_us(1.0), 1000);
+        let mean = h.mean_us();
+        assert!((mean - 500.5).abs() < 1e-9, "{mean}");
     }
 }

@@ -1,13 +1,17 @@
 //! Unified parsing for the `PLMU_*` environment knobs.
 //!
 //! Every runtime knob (`PLMU_THREADS`, `PLMU_SIMD`, `PLMU_FUSION`,
-//! `PLMU_SCAN`, `PLMU_VERIFY`, `PLMU_ALLOC_STATS`) resolves its
-//! environment default through this module, so all knobs accept the
-//! same spellings and misspelled values behave the same way
+//! `PLMU_SCAN`, `PLMU_VERIFY`, `PLMU_ALLOC_STATS`, and the serving
+//! knobs `PLMU_SESSION_MEM`, `PLMU_QUEUE_CAP`, `PLMU_SLO_US`) resolves
+//! its environment default through this module, so all knobs accept
+//! the same spellings and misspelled values behave the same way
 //! everywhere: **warn once to stderr, fall back to the documented
 //! default**.  Env knobs are convenience overrides for ad-hoc runs;
 //! the config-file and CLI paths keep failing loud (a typo in a
 //! checked-in config is a bug, a typo in a shell export is a shrug).
+//! The authoritative knob list is the README's `## Knob reference`
+//! table — the `knob-doc` lint rule fails CI when a knob is read here
+//! but missing there.
 //!
 //! Accepted spellings (case-insensitive, surrounding whitespace
 //! ignored):

@@ -1,0 +1,125 @@
+//! Serving-stack pins: continuous batching must be **bit-identical** to
+//! per-session serial stepping, and the whole load simulation — served
+//! counts, evictions, latency quantiles, output checksum — must be a
+//! pure function of (seed, config), independent of `PLMU_THREADS`.
+//!
+//! Everything lives in one test fn because `exec::set_threads` is
+//! process-global and the assertions sweep it.
+
+use plmu::autograd::ParamStore;
+use plmu::coordinator::sessions::{
+    execute_packed, run_load_sim, LoadSimConfig, PackedRun, ShedPolicy,
+};
+use plmu::coordinator::{NativeStreamingEngine, StreamingEngine};
+use plmu::exec;
+use plmu::layers::lmu::{LmuParallelLayer, LmuSpec};
+use plmu::util::Rng;
+
+fn engine() -> NativeStreamingEngine {
+    let mut rng = Rng::new(7);
+    let mut store = ParamStore::new();
+    let spec = LmuSpec::new(1, 1, 8, 64.0, 16);
+    let layer = LmuParallelLayer::new(spec.clone(), 64, &mut store, &mut rng, "t");
+    NativeStreamingEngine::from_store(&spec, &layer.params, &store)
+}
+
+/// Deterministic pseudo-input for (session, token, lane).
+fn x_for(s: usize, t: usize) -> Vec<f32> {
+    vec![((s * 31 + t * 7 + 1) as f32 * 0.137).sin()]
+}
+
+#[test]
+fn continuous_batching_is_bit_exact_and_thread_invariant() {
+    let eng = engine();
+    let state_size = eng.state_size();
+
+    // --- packed batch vs serial reference, at 1 and 8 threads ---------
+    // 37 sessions with ragged step counts (1..=5) in one packed batch
+    let sessions = 37usize;
+    let serial: Vec<Vec<Vec<f32>>> = (0..sessions)
+        .map(|s| {
+            let mut state = vec![0.0f32; state_size];
+            (0..(s % 5 + 1)).map(|t| eng.step(&mut state, &x_for(s, t))).collect()
+        })
+        .collect();
+    for threads in [1usize, 8] {
+        exec::set_threads(threads);
+        let mut runs: Vec<PackedRun> = (0..sessions)
+            .map(|s| PackedRun {
+                session: s as u64,
+                state: vec![0.0f32; state_size],
+                xs: (0..(s % 5 + 1)).map(|t| x_for(s, t)).collect(),
+                outs: Vec::new(),
+            })
+            .collect();
+        execute_packed(&eng, &mut runs);
+        for (s, run) in runs.iter().enumerate() {
+            assert_eq!(run.outs.len(), serial[s].len());
+            for (t, (got, want)) in run.outs.iter().zip(&serial[s]).enumerate() {
+                assert_eq!(got.len(), want.len());
+                for (i, (a, b)) in got.iter().zip(want.iter()).enumerate() {
+                    assert!(
+                        a.to_bits() == b.to_bits(),
+                        "packed output differs from serial at session {s} step {t} \
+                         lane {i} ({threads} threads): {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    // --- the full load sim is a pure function of (seed, config) -------
+    // small but non-trivial: arrivals, think-time, LRU + idle eviction,
+    // and queue shedding all fire
+    let cfg = LoadSimConfig {
+        seed: 3,
+        windows: 200,
+        window_us: 500,
+        arrivals_per_window: 6.0,
+        session_tokens_mean: 4.0,
+        token_gap_windows: 8,
+        dx: 1,
+        queue_cap: 24,
+        batch_cap: 12,
+        session_mem_bytes: 40 * plmu::coordinator::sessions::session_bytes(state_size),
+        idle_deadline_windows: Some(40),
+        shed: ShedPolicy::RejectNew,
+        retry_windows: 3,
+        slo_us: 1500,
+    };
+    let mut reports = Vec::new();
+    for threads in [1usize, 8] {
+        exec::set_threads(threads);
+        reports.push((threads, run_load_sim(&eng, &cfg)));
+    }
+    let (_, ref base) = reports[0];
+    assert!(base.served > 0, "sim served nothing");
+    assert!(base.shed > 0, "sim config did not exercise shedding");
+    assert!(
+        base.evicted_lru + base.evicted_idle > 0,
+        "sim config did not exercise eviction"
+    );
+    assert!(!base.budget_exceeded, "store byte budget violated");
+    for (threads, rep) in &reports {
+        assert_eq!(
+            rep.checksum, base.checksum,
+            "output checksum differs at {threads} threads"
+        );
+        assert_eq!(rep.served, base.served, "served count differs at {threads} threads");
+        assert_eq!(rep.shed, base.shed, "shed count differs at {threads} threads");
+        assert_eq!(
+            (rep.evicted_lru, rep.evicted_idle),
+            (base.evicted_lru, base.evicted_idle),
+            "eviction counts differ at {threads} threads"
+        );
+        assert_eq!(
+            (rep.p50_us, rep.p95_us, rep.p99_us, rep.max_us),
+            (base.p50_us, base.p95_us, base.p99_us, base.max_us),
+            "latency quantiles differ at {threads} threads"
+        );
+    }
+    // same seed, same thread count, run again: byte-identical
+    let again = run_load_sim(&eng, &cfg);
+    assert_eq!(again.checksum, base.checksum, "same-seed rerun differs");
+    exec::set_threads(1);
+}
