@@ -19,16 +19,17 @@
 #                temp tree) proves the gate actually fires
 #   determinism  the determinism matrix: the exec-equivalence suite under
 #                PLMU_THREADS in {1, 2, 8}, the simd-equivalence suite
-#                under PLMU_SIMD in {1, 0}, the fusion-equivalence suite
-#                under PLMU_FUSION in {1, 0}, the scan-equivalence suite
-#                under PLMU_SCAN in {fft, scan}, plus a canonical
-#                training-loss fingerprint (plmu train-dp) diffed
-#                byte-for-byte across PLMU_THREADS in {1, 2, 8} x
-#                PLMU_SIMD in {1, 0} x PLMU_FUSION in {1, 0}, within
-#                each PLMU_SCAN in {fft, scan} (the two DN strategies
-#                associate f32 differently, so each gets its own
-#                reference fingerprint — see rust/src/dn/scan.rs), and
-#                the serving load sim's output checksum byte-diffed
+#                under PLMU_SIMD in {1, 0} x PLMU_GEMM in {axpy, packed},
+#                the fusion-equivalence suite under PLMU_FUSION in
+#                {1, 0}, the scan-equivalence suite under PLMU_SCAN in
+#                {fft, scan}, plus a canonical training-loss fingerprint
+#                (plmu train-dp) diffed byte-for-byte across
+#                PLMU_THREADS in {1, 2, 8} x PLMU_SIMD in {1, 0} x
+#                PLMU_FUSION in {1, 0} x PLMU_GEMM in {axpy, packed},
+#                within each PLMU_SCAN in {fft, scan} (the two DN
+#                strategies associate f32 differently, so each gets its
+#                own reference fingerprint — see rust/src/dn/scan.rs),
+#                and the serving load sim's output checksum byte-diffed
 #                across two same-seed runs (virtual time: the report is
 #                a pure function of seed + config)
 #   bench        smoke-runs the perf benches and validates every emitted
@@ -117,19 +118,22 @@ stage_docs() {
 
 stage_determinism() {
     # the exec-equivalence suite must hold under every pool size, the
-    # simd-equivalence suite under both vector-path settings, the
-    # fusion-equivalence suite under both fusion settings, and a
-    # canonical training run must produce a byte-identical fingerprint
-    # across the whole matrix PLMU_THREADS in {1, 2, 8} x PLMU_SIMD in
-    # {on, off} x PLMU_FUSION in {on, off}
+    # simd-equivalence suite under both vector-path settings crossed
+    # with both GEMM inner paths, the fusion-equivalence suite under
+    # both fusion settings, and a canonical training run must produce a
+    # byte-identical fingerprint across the whole matrix PLMU_THREADS in
+    # {1, 2, 8} x PLMU_SIMD in {on, off} x PLMU_FUSION in {on, off} x
+    # PLMU_GEMM in {axpy, packed}
     cargo build --release || return 1
     for t in 1 2 8; do
         echo "-- determinism: exec_equivalence, PLMU_THREADS=$t --"
         PLMU_THREADS=$t cargo test -q --test exec_equivalence || return 1
     done
     for s in 1 0; do
-        echo "-- determinism: simd_equivalence, PLMU_SIMD=$s --"
-        PLMU_SIMD=$s cargo test -q --test simd_equivalence || return 1
+        for g in axpy packed; do
+            echo "-- determinism: simd_equivalence, PLMU_SIMD=$s PLMU_GEMM=$g --"
+            PLMU_SIMD=$s PLMU_GEMM=$g cargo test -q --test simd_equivalence || return 1
+        done
     done
     for f in 1 0; do
         echo "-- determinism: fusion_equivalence, PLMU_FUSION=$f --"
@@ -149,27 +153,29 @@ stage_determinism() {
         for t in 1 2 8; do
             for s in 1 0; do
                 for f in 1 0; do
-                    out=$(PLMU_SCAN=$sc PLMU_FUSION=$f PLMU_SIMD=$s PLMU_THREADS=$t ./target/release/plmu train-dp \
-                        --workers 2 --epochs 1 --examples 32 --side 8 --batch 8) || return 1
-                    fp=$(printf '%s\n' "$out" | grep '^train fingerprint:')
-                    if [ -z "$fp" ]; then
-                        echo "no 'train fingerprint:' line in train-dp output"
-                        return 1
-                    fi
-                    echo "   PLMU_SCAN=$sc PLMU_THREADS=$t PLMU_SIMD=$s PLMU_FUSION=$f -> $fp"
-                    if [ -z "$ref_fp" ]; then
-                        ref_fp="$fp"
-                    elif [ "$fp" != "$ref_fp" ]; then
-                        echo "DETERMINISM MISMATCH: (scan=$sc, threads=$t, simd=$s, fusion=$f) differs from (scan=$sc, threads=1, simd=1, fusion=1)"
-                        echo "  reference: $ref_fp"
-                        echo "  this run:  $fp"
-                        return 1
-                    fi
+                    for g in axpy packed; do
+                        out=$(PLMU_SCAN=$sc PLMU_GEMM=$g PLMU_FUSION=$f PLMU_SIMD=$s PLMU_THREADS=$t ./target/release/plmu train-dp \
+                            --workers 2 --epochs 1 --examples 32 --side 8 --batch 8) || return 1
+                        fp=$(printf '%s\n' "$out" | grep '^train fingerprint:')
+                        if [ -z "$fp" ]; then
+                            echo "no 'train fingerprint:' line in train-dp output"
+                            return 1
+                        fi
+                        echo "   PLMU_SCAN=$sc PLMU_THREADS=$t PLMU_SIMD=$s PLMU_FUSION=$f PLMU_GEMM=$g -> $fp"
+                        if [ -z "$ref_fp" ]; then
+                            ref_fp="$fp"
+                        elif [ "$fp" != "$ref_fp" ]; then
+                            echo "DETERMINISM MISMATCH: (scan=$sc, threads=$t, simd=$s, fusion=$f, gemm=$g) differs from (scan=$sc, threads=1, simd=1, fusion=1, gemm=axpy)"
+                            echo "  reference: $ref_fp"
+                            echo "  this run:  $fp"
+                            return 1
+                        fi
+                    done
                 done
             done
         done
     done
-    echo "fingerprints byte-identical across PLMU_THREADS in {1, 2, 8} x PLMU_SIMD in {1, 0} x PLMU_FUSION in {1, 0}, within each PLMU_SCAN in {fft, scan}"
+    echo "fingerprints byte-identical across PLMU_THREADS in {1, 2, 8} x PLMU_SIMD in {1, 0} x PLMU_FUSION in {1, 0} x PLMU_GEMM in {axpy, packed}, within each PLMU_SCAN in {fft, scan}"
     # the serving load sim runs in virtual time, so its output checksum
     # is a pure function of (seed, config): two same-seed smoke runs
     # must print byte-identical `serving fingerprint:` lines

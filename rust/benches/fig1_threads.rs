@@ -84,6 +84,22 @@ fn main() {
             },
         },
         Case {
+            name: "matmul_packed",
+            items: (m * k * n) as f64,
+            run: {
+                let (a, b) = (a.clone(), b.clone());
+                Box::new(move || {
+                    // packed path for this run only; per-chunk packing
+                    // must scale like (and match bits with) the default
+                    use plmu::tensor::packed::{set_gemm_path, GemmPath};
+                    set_gemm_path(GemmPath::Packed);
+                    let h = checksum(a.matmul(&b).data());
+                    set_gemm_path(GemmPath::Axpy);
+                    h
+                })
+            },
+        },
+        Case {
             name: "matmul_tn",
             items: (m * k * n) as f64,
             run: {

@@ -1,8 +1,13 @@
 //! A/B bench for the `plmu::simd` 8-lane kernel layer: vector path vs
-//! scalar reference wall time for dot, axpy, elementwise add, the
-//! complex spectrum MAC, and full matmul, at sizes spanning the lane
-//! remainder cases (8k-1 / 8k / 8k+1).  Emits `BENCH_simd.json` at the
-//! repo root (validated by `plmu bench-check` in the CI bench stage).
+//! scalar reference wall time for dot, axpy, elementwise add, the f64
+//! complex kernels behind the FFT (`f64_cmul`, `f64_conj_cmul`,
+//! `f64_cmul_add`, `f64_butterfly`), full matmul through the
+//! `PLMU_SIMD` knob, and the packed-vs-axpy GEMM paths (`gemm_*`,
+//! Table 1 training shapes) through the `PLMU_GEMM` knob, at sizes
+//! spanning the lane remainder cases (8k-1 / 8k / 8k+1).  Emits
+//! `BENCH_simd.json` at the repo root (validated by `plmu bench-check`
+//! in the CI bench stage, which requires the `f64_*` and `gemm_*`
+//! speedup records to be present, finite, and positive).
 //!
 //! Before timing each case, the two paths are asserted bit-identical —
 //! the layer's core contract (`rust/tests/simd_equivalence.rs` is the
@@ -19,6 +24,7 @@ use plmu::benchlib::{
 };
 use plmu::exec;
 use plmu::simd;
+use plmu::tensor::packed::{set_gemm_path, GemmPath};
 use plmu::util::Rng;
 use plmu::Tensor;
 
@@ -103,26 +109,87 @@ fn main() {
         }
     }
 
-    // ---- complex spectrum MAC (the RfftCache inner loop) ---------------
+    // ---- f64 complex kernels (the FFT / RfftCache inner loops) ---------
     let clens: &[usize] = if smoke { &[127, 128, 129] } else { &[127, 128, 129, 4095, 4096, 4097] };
     for &n in clens {
         let a: Vec<f64> = (0..2 * n).map(|_| rng.normal()).collect();
         let b: Vec<f64> = (0..2 * n).map(|_| rng.normal()).collect();
-        let (a2, b2) = (a.clone(), b.clone());
-        cases.push(Case {
-            name: format!("cmul_{n}"),
-            items: (6 * n) as f64,
-            vec: Box::new(move || {
-                let mut out = vec![0.0f64; a.len()];
-                simd::cmul_vec(&a, &b, &mut out);
-                checksum_f64(&out)
-            }),
-            scalar: Box::new(move || {
-                let mut out = vec![0.0f64; a2.len()];
-                simd::cmul_scalar(&a2, &b2, &mut out);
-                checksum_f64(&out)
-            }),
-        });
+        {
+            let (a, b) = (a.clone(), b.clone());
+            let (a2, b2) = (a.clone(), b.clone());
+            cases.push(Case {
+                name: format!("f64_cmul_{n}"),
+                items: (6 * n) as f64,
+                vec: Box::new(move || {
+                    let mut out = vec![0.0f64; a.len()];
+                    simd::cmul_vec(&a, &b, &mut out);
+                    checksum_f64(&out)
+                }),
+                scalar: Box::new(move || {
+                    let mut out = vec![0.0f64; a2.len()];
+                    simd::cmul_scalar(&a2, &b2, &mut out);
+                    checksum_f64(&out)
+                }),
+            });
+        }
+        {
+            let (a, b) = (a.clone(), b.clone());
+            let (a2, b2) = (a.clone(), b.clone());
+            cases.push(Case {
+                name: format!("f64_conj_cmul_{n}"),
+                items: (6 * n) as f64,
+                vec: Box::new(move || {
+                    let mut out = vec![0.0f64; a.len()];
+                    simd::conj_cmul_vec(&a, &b, &mut out);
+                    checksum_f64(&out)
+                }),
+                scalar: Box::new(move || {
+                    let mut out = vec![0.0f64; a2.len()];
+                    simd::conj_cmul_scalar(&a2, &b2, &mut out);
+                    checksum_f64(&out)
+                }),
+            });
+        }
+        {
+            let (a, b) = (a.clone(), b.clone());
+            let (a2, b2) = (a.clone(), b.clone());
+            cases.push(Case {
+                name: format!("f64_cmul_add_{n}"),
+                items: (8 * n) as f64,
+                vec: Box::new(move || {
+                    let mut out = vec![0.5f64; a.len()];
+                    simd::cmul_add_vec(&a, &b, &mut out);
+                    checksum_f64(&out)
+                }),
+                scalar: Box::new(move || {
+                    let mut out = vec![0.5f64; a2.len()];
+                    simd::cmul_add_scalar(&a2, &b2, &mut out);
+                    checksum_f64(&out)
+                }),
+            });
+        }
+        {
+            // one radix-2 stage at `n` butterflies (tw = a, hi = b)
+            let (tw, hi0) = (a.clone(), b.clone());
+            let lo0: Vec<f64> = (0..2 * n).map(|_| rng.normal()).collect();
+            let (tw2, hi2, lo2) = (tw.clone(), hi0.clone(), lo0.clone());
+            cases.push(Case {
+                name: format!("f64_butterfly_{n}"),
+                items: (10 * n) as f64,
+                vec: Box::new(move || {
+                    let mut lo = lo0.clone();
+                    let mut hi = hi0.clone();
+                    simd::butterfly_vec(&tw, &mut lo, &mut hi);
+                    checksum_f64(&lo) ^ checksum_f64(&hi).rotate_left(1)
+                }),
+                scalar: Box::new(move || {
+                    let mut lo = lo2.clone();
+                    let mut hi = hi2.clone();
+                    simd::butterfly_scalar(&tw2, &mut lo, &mut hi);
+                    checksum_f64(&lo) ^ checksum_f64(&hi).rotate_left(1)
+                }),
+            });
+        }
     }
 
     // ---- full matmul through the runtime knob --------------------------
@@ -144,6 +211,33 @@ fn main() {
                 let h = checksum(a2.matmul(&b2).data());
                 simd::set_enabled(true);
                 h
+            }),
+        });
+    }
+
+    // ---- packed vs axpy GEMM at Table 1 training shapes ----------------
+    // (m = batch·seq rows against the paper's d=16..1024 hidden sizes;
+    // "vec" is the PLMU_GEMM=packed micro-kernel, "scalar" the axpy
+    // default, both on the same simd backend)
+    let gemm_shapes: &[(usize, usize, usize)] = if smoke {
+        &[(64, 64, 64), (128, 96, 33)]
+    } else {
+        &[(256, 256, 256), (1024, 256, 256), (512, 1024, 16)]
+    };
+    for &(m, k, n) in gemm_shapes {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let (a2, b2) = (a.clone(), b.clone());
+        cases.push(Case {
+            name: format!("gemm_{m}x{k}x{n}"),
+            items: (2 * m * k * n) as f64,
+            vec: Box::new(move || {
+                set_gemm_path(GemmPath::Packed);
+                checksum(a.matmul(&b).data())
+            }),
+            scalar: Box::new(move || {
+                set_gemm_path(GemmPath::Axpy);
+                checksum(a2.matmul(&b2).data())
             }),
         });
     }

@@ -545,7 +545,12 @@ fn ratio_field(key: &str) -> bool {
 ///    means a division against a missing or zero measurement;
 ///  * where a record carries percentile timings of one unit
 ///    (`min_*`/`p50_*`/`p95_*`/`max_*`), they are monotone
-///    non-decreasing.
+///    non-decreasing;
+///  * a `simd_kernels` record must cover the f64 FFT kernels and the
+///    packed GEMM path: at least one `f64_*` case and one `gemm_*`
+///    case, each carrying a `speedup_vs_scalar` ratio (which the ratio
+///    rule above already forces finite and strictly positive) — a bench
+///    refactor that silently drops either A/B family fails here.
 pub fn validate_perf_json(text: &str) -> Result<PerfSummary, String> {
     let doc = parse_json(text)?;
     let bench = doc
@@ -559,13 +564,23 @@ pub fn validate_perf_json(text: &str) -> Result<PerfSummary, String> {
     if records.is_empty() {
         return Err("\"records\" is empty — the bench produced no perf data".into());
     }
+    let mut f64_speedups = 0usize;
+    let mut gemm_speedups = 0usize;
     for (i, rec) in records.iter().enumerate() {
         let Json::Obj(fields) = rec else {
             return Err(format!("record {i} is not an object"));
         };
-        rec.get("case")
+        let case = rec
+            .get("case")
             .and_then(Json::as_str)
             .ok_or_else(|| format!("record {i}: missing or non-string \"case\""))?;
+        let has_speedup = rec.get("speedup_vs_scalar").and_then(Json::as_f64).is_some();
+        if case.starts_with("f64_") && has_speedup {
+            f64_speedups += 1;
+        }
+        if case.starts_with("gemm_") && has_speedup {
+            gemm_speedups += 1;
+        }
         let threads = rec
             .get("threads")
             .and_then(Json::as_f64)
@@ -623,6 +638,18 @@ pub fn validate_perf_json(text: &str) -> Result<PerfSummary, String> {
                     "record {i}: min/p50/p95/max{suffix} timings are not monotone: {present:?}"
                 ));
             }
+        }
+    }
+    if bench == "simd_kernels" {
+        if f64_speedups == 0 {
+            return Err("simd_kernels record has no f64_* case with a \
+                        speedup_vs_scalar ratio — the f64 FFT kernel A/B is missing"
+                .into());
+        }
+        if gemm_speedups == 0 {
+            return Err("simd_kernels record has no gemm_* case with a \
+                        speedup_vs_scalar ratio — the packed GEMM A/B is missing"
+                .into());
         }
     }
     Ok(PerfSummary { bench, records: records.len() })
@@ -814,6 +841,47 @@ mod tests {
         ]);
         let err = validate_perf_json(&p.render()).unwrap_err();
         assert!(err.contains("monotone"), "{err}");
+    }
+
+    #[test]
+    fn validate_requires_f64_and_gemm_speedups_for_simd_kernels() {
+        let rec = |case: &str| {
+            vec![
+                ("case", JsonValue::Str(case.into())),
+                ("threads", JsonValue::Int(1)),
+                ("wall_ns", JsonValue::Int(5)),
+                ("speedup_vs_scalar", JsonValue::Num(1.1)),
+            ]
+        };
+        // both families present: valid
+        let mut p = PerfJson::new("simd_kernels");
+        p.push(&rec("f64_cmul_128"));
+        p.push(&rec("gemm_256x256x256"));
+        validate_perf_json(&p.render()).expect("complete simd_kernels record rejected");
+        // missing gemm family
+        let mut p = PerfJson::new("simd_kernels");
+        p.push(&rec("f64_cmul_128"));
+        let err = validate_perf_json(&p.render()).unwrap_err();
+        assert!(err.contains("gemm"), "{err}");
+        // missing f64 family
+        let mut p = PerfJson::new("simd_kernels");
+        p.push(&rec("gemm_256x256x256"));
+        let err = validate_perf_json(&p.render()).unwrap_err();
+        assert!(err.contains("f64"), "{err}");
+        // a gemm case WITHOUT the speedup ratio does not count as coverage
+        let mut p = PerfJson::new("simd_kernels");
+        p.push(&rec("f64_cmul_128"));
+        p.push(&[
+            ("case", JsonValue::Str("gemm_64x64x64".into())),
+            ("threads", JsonValue::Int(1)),
+            ("wall_ns", JsonValue::Int(5)),
+        ]);
+        let err = validate_perf_json(&p.render()).unwrap_err();
+        assert!(err.contains("gemm"), "{err}");
+        // other benches are exempt from the rule
+        let mut p = PerfJson::new("fig1_threads");
+        p.push(&rec("matmul"));
+        validate_perf_json(&p.render()).expect("non-simd_kernels bench wrongly gated");
     }
 
     #[test]

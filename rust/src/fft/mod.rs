@@ -104,6 +104,12 @@ pub struct Plan {
     n: usize,
     /// `twiddles[s]` holds the n/2 factors for stage with half-size m/2
     twiddles: Vec<Vec<Cpx>>,
+    /// conjugates of `twiddles`, stage by stage — precomputed so the
+    /// inverse transform runs the identical butterfly kernel with a
+    /// different table instead of conjugating per butterfly
+    /// (conjugation is an exact sign flip, so the values are the same
+    /// bits the old per-butterfly `conj()` produced)
+    twiddles_inv: Vec<Vec<Cpx>>,
     bitrev: Vec<usize>,
 }
 
@@ -129,7 +135,9 @@ impl Plan {
             twiddles.push(tw);
             m <<= 1;
         }
-        Plan { n, twiddles, bitrev }
+        let twiddles_inv =
+            twiddles.iter().map(|tw| tw.iter().map(|w| w.conj()).collect()).collect();
+        Plan { n, twiddles, twiddles_inv, bitrev }
     }
 
     pub fn len(&self) -> usize {
@@ -167,20 +175,21 @@ impl Plan {
                 buf.swap(i, j);
             }
         }
-        // butterflies
+        // butterflies: per stage, each block splits into a lo and a hi
+        // half and runs the simd butterfly kernel over the interleaved
+        // pair views — per complex element the expression is exactly
+        // the scalar `b = hi·w; lo' = lo + b; hi' = lo − b`, so the
+        // vectorization changes no bits (`rust/tests/simd_equivalence.rs`)
+        let tables = if invert { &self.twiddles_inv } else { &self.twiddles };
+        let bf = simd::butterfly_kernel(); // resolve the knob once per transform
         let mut m = 2;
         let mut stage = 0;
         while m <= n {
             let half = m / 2;
-            let tw = &self.twiddles[stage];
+            let tw = cpx_floats(&tables[stage]);
             for start in (0..n).step_by(m) {
-                for k in 0..half {
-                    let w = if invert { tw[k].conj() } else { tw[k] };
-                    let a = buf[start + k];
-                    let b = buf[start + k + half].mul(w);
-                    buf[start + k] = a.add(b);
-                    buf[start + k + half] = a.sub(b);
-                }
+                let (lo, hi) = buf[start..start + m].split_at_mut(half);
+                bf(tw, cpx_floats_mut(lo), cpx_floats_mut(hi));
             }
             m <<= 1;
             stage += 1;
@@ -228,8 +237,15 @@ pub fn plan(n: usize) -> Arc<Plan> {
     cached(&PLAN_CACHE, n, || Arc::new(Plan::new(n)))
 }
 
-/// FFT of a real signal zero-padded to `nfft` (power of two).
+/// FFT of a real signal zero-padded to `nfft` (power of two).  The
+/// signal must fit: an over-length signal would silently truncate and
+/// yield a wrong (aliased) convolution, so it is rejected loudly.
 pub fn rfft(signal: &[f32], nfft: usize) -> Vec<Cpx> {
+    assert!(
+        signal.len() <= nfft,
+        "rfft: signal length {} exceeds nfft {nfft} — the tail would be silently dropped",
+        signal.len()
+    );
     let p = plan(nfft);
     let mut buf = vec![Cpx::ZERO; nfft];
     for (b, &s) in buf.iter_mut().zip(signal.iter()) {
@@ -245,6 +261,11 @@ pub fn rfft(signal: &[f32], nfft: usize) -> Vec<Cpx> {
 /// complex transform on a real input).  Returns nfft/2 + 1 bins.
 pub fn rfft_half(signal: &[f32], nfft: usize) -> Vec<Cpx> {
     assert!(nfft.is_power_of_two() && nfft >= 2);
+    assert!(
+        signal.len() <= nfft,
+        "rfft_half: signal length {} exceeds nfft {nfft} — the tail would be silently dropped",
+        signal.len()
+    );
     let half = nfft / 2;
     if half == 1 {
         // nfft == 2: trivial DFT
@@ -262,16 +283,20 @@ pub fn rfft_half(signal: &[f32], nfft: usize) -> Vec<Cpx> {
     p.forward(&mut buf);
     // unpack: X[k] = E[k] + w^k O[k] with
     //   E[k] = (Z[k] + conj(Z[half-k]))/2, O[k] = -i (Z[k] - conj(Z[half-k]))/2
+    // The cross-indexed E/O extraction stays scalar; the post-twiddle
+    // multiply-accumulate `E[k] + w^k·O[k]` runs on the simd
+    // complex-MAC kernel over the whole half-spectrum at once.
     let tw = rtwiddles(nfft);
     let mut out = vec![Cpx::ZERO; half + 1];
+    let mut odd = vec![Cpx::ZERO; half + 1];
     for k in 0..=half {
         let zk = if k == half { buf[0] } else { buf[k] };
         let zc = buf[(half - k) % half].conj();
-        let e = zk.add(zc).scale(0.5);
+        out[k] = zk.add(zc).scale(0.5); // E[k]
         let o_times_i = zk.sub(zc).scale(0.5); // = i·O[k]
-        let o = Cpx::new(o_times_i.im, -o_times_i.re); // divide by i
-        out[k] = e.add(tw[k].mul(o));
+        odd[k] = Cpx::new(o_times_i.im, -o_times_i.re); // divide by i
     }
+    simd::cmul_add(cpx_floats(&tw[..=half]), cpx_floats(&odd), cpx_floats_mut(&mut out));
     out
 }
 
@@ -288,15 +313,24 @@ pub fn irfft_half(spectrum: &[Cpx], nfft: usize, out_len: usize) -> Vec<f32> {
     }
     // repack: Z[k] = E[k] + i·O[k] where
     //   E[k] = (X[k] + conj(X[half-k]))/2, O[k] = w^{-k} (X[k] - conj(X[half-k]))/2
+    // As in rfft_half the cross-indexed E/diff extraction stays scalar;
+    // the `w^{-k}·diff` twiddle runs on the simd conjugated-multiply
+    // kernel (conj(w^k)·diff — same expression, no conjugated table).
     let p = plan(half);
     let tw = rtwiddles(nfft);
-    let mut buf = vec![Cpx::ZERO; half];
-    for (k, b) in buf.iter_mut().enumerate() {
+    let mut evens = vec![Cpx::ZERO; half];
+    let mut diffs = vec![Cpx::ZERO; half];
+    for k in 0..half {
         let xk = spectrum[k];
         let xc = spectrum[half - k].conj();
-        let e = xk.add(xc).scale(0.5);
-        let diff = xk.sub(xc).scale(0.5);
-        let o = tw[k].conj().mul(diff);
+        evens[k] = xk.add(xc).scale(0.5);
+        diffs[k] = xk.sub(xc).scale(0.5);
+    }
+    let mut odds = vec![Cpx::ZERO; half];
+    simd::conj_cmul(cpx_floats(&tw[..half]), cpx_floats(&diffs), cpx_floats_mut(&mut odds));
+    let mut buf = vec![Cpx::ZERO; half];
+    for (k, b) in buf.iter_mut().enumerate() {
+        let (e, o) = (evens[k], odds[k]);
         // Z[k] = E[k] + i·O[k]
         *b = Cpx::new(e.re - o.im, e.im + o.re);
     }
@@ -327,6 +361,11 @@ pub fn irfft_real(mut spectrum: Vec<Cpx>, out_len: usize) -> Vec<f32> {
 /// Causal (linear) convolution of two real sequences, truncated to `out_len`:
 /// `out[t] = sum_{j<=t} a[j] b[t-j]`.
 pub fn conv_causal(a: &[f32], b: &[f32], out_len: usize) -> Vec<f32> {
+    if a.is_empty() || b.is_empty() {
+        // an empty operand makes every output sum empty — all zeros
+        // (and `a.len() + b.len() - 1` below would underflow)
+        return vec![0.0; out_len];
+    }
     let need = a.len() + b.len() - 1;
     let nfft = next_pow2(need.max(out_len));
     let fa = rfft(a, nfft);
@@ -353,6 +392,13 @@ impl RfftCache {
 
     /// Convolve a real signal with the cached kernel, truncated to out_len.
     pub fn conv(&self, signal: &[f32], out_len: usize) -> Vec<f32> {
+        assert!(
+            signal.len() <= self.nfft,
+            "RfftCache::conv: signal length {} exceeds the cache's nfft {} — rebuild the \
+             cache at next_pow2(signal_len + kernel_len - 1)",
+            signal.len(),
+            self.nfft
+        );
         let fs = rfft_half(signal, self.nfft);
         self.conv_spectrum(&fs, out_len)
     }
@@ -360,8 +406,21 @@ impl RfftCache {
     /// Convolve a precomputed signal half-spectrum with the cached
     /// kernel.  The bin product runs on the simd complex-MAC kernel —
     /// elementwise, so `simd on/off` and every thread count produce the
-    /// identical bits.
+    /// identical bits.  The signal spectrum must cover all of the
+    /// cache's `nfft/2 + 1` bins — a short spectrum means it was built
+    /// at a smaller FFT size and the bin-wise product would alias.
     pub fn conv_spectrum(&self, signal_spectrum: &[Cpx], out_len: usize) -> Vec<f32> {
+        let bins = self.nfft / 2 + 1;
+        assert!(
+            signal_spectrum.len() >= bins,
+            "RfftCache::conv_spectrum: signal half-spectrum has {} bins but the cache was \
+             built at nfft {} ({} bins, kernel spectrum {}) — both spectra must come from \
+             the same FFT size",
+            signal_spectrum.len(),
+            self.nfft,
+            bins,
+            self.spectrum.len()
+        );
         let bins = self.spectrum.len().min(signal_spectrum.len());
         let mut prod = vec![Cpx::ZERO; bins];
         spectrum_product(&self.spectrum, signal_spectrum, &mut prod);
@@ -578,6 +637,73 @@ mod tests {
                 assert!((a - b).abs() < 1e-5, "nfft={nfft}: {a} vs {b}");
             }
         }
+    }
+
+    #[test]
+    fn conv_causal_empty_operands_yield_zeros() {
+        // empty a, empty b, both empty: no terms in any output sum, so
+        // all zeros — and no `a.len() + b.len() - 1` underflow panic
+        let sig = [1.0f32, 2.0, 3.0];
+        for (a, b) in [(&sig[..], &[][..]), (&[][..], &sig[..]), (&[][..], &[][..])] {
+            let out = conv_causal(a, b, 4);
+            assert_eq!(out, vec![0.0f32; 4], "a.len()={} b.len()={}", a.len(), b.len());
+            assert_eq!(out, conv_causal_naive(a, b, 4));
+        }
+        // out_len 0 stays fine too
+        assert!(conv_causal(&[], &sig, 0).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds nfft")]
+    fn rfft_rejects_over_length_signal() {
+        let sig = vec![1.0f32; 9];
+        rfft(&sig, 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds nfft")]
+    fn rfft_half_rejects_over_length_signal() {
+        let sig = vec![1.0f32; 9];
+        rfft_half(&sig, 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds nfft")]
+    fn rfft_half_rejects_over_length_signal_at_nfft_2() {
+        // the nfft == 2 trivial-DFT branch must reject too, not
+        // silently drop signal[2..]
+        rfft_half(&[1.0, 2.0, 3.0], 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "RfftCache::conv: signal length")]
+    fn cache_conv_rejects_over_length_signal() {
+        let kernel = [1.0f32, 0.5];
+        let cache = RfftCache::new(&kernel, 8);
+        let sig = vec![1.0f32; 9];
+        cache.conv(&sig, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "RfftCache::conv_spectrum")]
+    fn conv_spectrum_rejects_short_spectrum() {
+        // a spectrum from a smaller FFT size must fail loudly at entry,
+        // naming the cache size — not deep inside irfft_half
+        let kernel = [1.0f32, 0.5, 0.25];
+        let cache = RfftCache::new(&kernel, 16); // 9 bins
+        let short = rfft_half(&kernel, 8); // 5 bins
+        cache.conv_spectrum(&short, 4);
+    }
+
+    #[test]
+    fn fit_signals_still_pass_the_length_guards() {
+        // the guards must not reject the sizes in-tree callers use:
+        // signal length == nfft (exact fit) and shorter
+        let sig: Vec<f32> = (0..8).map(|i| i as f32 * 0.5 - 2.0).collect();
+        assert_eq!(rfft(&sig, 8).len(), 8);
+        assert_eq!(rfft_half(&sig, 8).len(), 5);
+        let cache = RfftCache::new(&sig[..4], 8);
+        assert_eq!(cache.conv(&sig, 8).len(), 8);
     }
 
     #[test]

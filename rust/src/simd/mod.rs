@@ -44,9 +44,11 @@
 //! # Backends and the runtime knob
 //!
 //! [`F32x8`] is a plain `[f32; 8]` by default (compiles on the offline
-//! toolchain; the fixed width auto-vectorizes well).  Building with
-//! `--features simd-intrinsics` on `x86_64` swaps in an AVX backend
-//! behind the identical API (see `simd/x86.rs` for its contract).
+//! toolchain; the fixed width auto-vectorizes well), and [`F64x4`] is
+//! its double-precision sibling for the FFT's interleaved complex
+//! pairs.  Building with `--features simd-intrinsics` on `x86_64`
+//! swaps in AVX backends behind the identical API (see `simd/x86.rs`
+//! for the contract).
 //! Orthogonally, the `PLMU_SIMD` environment variable (or
 //! [`set_enabled`]) routes the dispatching kernels to the scalar
 //! reference paths at runtime — `PLMU_SIMD=0` is how the CI determinism
@@ -55,18 +57,22 @@
 #[cfg(not(all(feature = "simd-intrinsics", target_arch = "x86_64")))]
 mod portable;
 #[cfg(not(all(feature = "simd-intrinsics", target_arch = "x86_64")))]
-pub use portable::F32x8;
+pub use portable::{F32x8, F64x4};
 
 #[cfg(all(feature = "simd-intrinsics", target_arch = "x86_64"))]
 mod x86;
 #[cfg(all(feature = "simd-intrinsics", target_arch = "x86_64"))]
-pub use x86::F32x8;
+pub use x86::{F32x8, F64x4};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Vector width of [`F32x8`]: every blocked kernel processes this many
 /// elements per step and carries this many accumulators.
 pub const LANES: usize = 8;
+
+/// Vector width of [`F64x4`] — the double-precision sibling used by the
+/// FFT kernels.  One register holds two interleaved `(re, im)` pairs.
+pub const LANES64: usize = 4;
 
 // --------------------------------------- the one canonical reduction tree
 //
@@ -771,18 +777,40 @@ pub fn relu_assign_scalar(xs: &mut [f32]) {
     }
 }
 
-// ------------------------------------------------------- complex multiply
+// -------------------------------------------------- complex f64 kernels
+//
+// The FFT works on interleaved `(re, im)` `f64` pairs (`fft::Cpx` is
+// repr(C), so a `&[Cpx]` reinterprets as these slices).  One [`F64x4`]
+// holds two complex values; the product decomposition below is the
+// standard AVX complex multiply, chosen because each lane computes the
+// *exact* scalar expression of `Cpx::mul` — same operand order, one
+// IEEE op per term — so the vector and scalar paths are bit-identical
+// by construction, NaN payloads included:
+//
+//   p1 = dup_even(a) · b             = [ar·br, ar·bi, ...]
+//   p2 = dup_odd(a) · swap_pairs(b)  = [ai·bi, ai·br, ...]
+//   out = addsub(p1, p2)             = [ar·br − ai·bi, ar·bi + ai·br, ...]
+
+/// Two complex products per register: exactly `Cpx::mul`'s expression
+/// (`re = a.re·b.re − a.im·b.im`, `im = a.re·b.im + a.im·b.re`).
+#[inline]
+fn cmul_f64x4(a: F64x4, b: F64x4) -> F64x4 {
+    a.dup_even().mul(b).addsub(a.dup_odd().mul(b.swap_pairs()))
+}
+
+/// Two conjugated products per register: `conj(a) · b`
+/// (`re = a.re·b.re + a.im·b.im`, `im = a.re·b.im − a.im·b.re`) — the
+/// `subadd` mirror of [`cmul_f64x4`], with no explicit negation so the
+/// scalar expressions match term for term.
+#[inline]
+fn conj_cmul_f64x4(a: F64x4, b: F64x4) -> F64x4 {
+    a.dup_even().mul(b).subadd(a.dup_odd().mul(b.swap_pairs()))
+}
 
 /// Elementwise complex multiply over interleaved `(re, im)` `f64`
 /// pairs — the spectrum product inside `fft::RfftCache` (`F{H} · F{U}`,
 /// the paper's eq. 26 hot loop).  `a`, `b`, and `out` have the same
-/// even length; element `k` computes exactly `Cpx::mul`'s expression:
-/// `re = a.re*b.re - a.im*b.im`, `im = a.re*b.im + a.im*b.re`.
-///
-/// The FFT works in `f64`, so this kernel is four 4-wide lanes' worth
-/// of work per 8-`f64` block rather than an [`F32x8`] — the portable
-/// backend's fixed-width straight-line blocks auto-vectorize the same
-/// way.  Elementwise, so both paths are bit-identical by construction.
+/// even length; element `k` computes exactly `Cpx::mul`'s expression.
 #[inline]
 pub fn cmul(a: &[f64], b: &[f64], out: &mut [f64]) {
     if enabled() {
@@ -792,24 +820,18 @@ pub fn cmul(a: &[f64], b: &[f64], out: &mut [f64]) {
     }
 }
 
-/// Vector path of [`cmul`]: blocks of four complex values (eight
-/// `f64`s) as straight-line code, then a per-pair tail.
+/// Vector path of [`cmul`]: [`F64x4`] blocks of two complex values,
+/// then a per-pair tail.
 pub fn cmul_vec(a: &[f64], b: &[f64], out: &mut [f64]) {
     debug_assert!(a.len() == out.len() && b.len() == out.len());
     debug_assert_eq!(out.len() % 2, 0, "interleaved (re, im) pairs");
-    let pairs = out.len() / 2;
-    let blocks = pairs / 4;
+    let n = out.len();
+    let blocks = n / LANES64;
     for i in 0..blocks {
-        let o = i * 8;
-        let (ab, bb) = (&a[o..o + 8], &b[o..o + 8]);
-        let ob = &mut out[o..o + 8];
-        for j in 0..4 {
-            let (re, im) = (2 * j, 2 * j + 1);
-            ob[re] = ab[re] * bb[re] - ab[im] * bb[im];
-            ob[im] = ab[re] * bb[im] + ab[im] * bb[re];
-        }
+        let o = i * LANES64;
+        cmul_f64x4(F64x4::load(&a[o..]), F64x4::load(&b[o..])).store(&mut out[o..]);
     }
-    for k in blocks * 4..pairs {
+    for k in blocks * 2..n / 2 {
         let (re, im) = (2 * k, 2 * k + 1);
         out[re] = a[re] * b[re] - a[im] * b[im];
         out[im] = a[re] * b[im] + a[im] * b[re];
@@ -824,6 +846,159 @@ pub fn cmul_scalar(a: &[f64], b: &[f64], out: &mut [f64]) {
         let (re, im) = (2 * k, 2 * k + 1);
         out[re] = a[re] * b[re] - a[im] * b[im];
         out[im] = a[re] * b[im] + a[im] * b[re];
+    }
+}
+
+/// Radix-2 butterfly over interleaved pairs: per complex element `k`,
+/// `t = hi[k]·tw[k]`, then `lo[k] = lo[k] + t` and `hi[k] = lo[k] − t`
+/// (original `lo`).  This is `fft::Plan::dispatch`'s stage inner loop
+/// with the twiddle table (forward or pre-conjugated inverse) passed
+/// in; `tw`, `lo`, and `hi` have the same even length.
+#[inline]
+pub fn butterfly(tw: &[f64], lo: &mut [f64], hi: &mut [f64]) {
+    if enabled() {
+        butterfly_vec(tw, lo, hi)
+    } else {
+        butterfly_scalar(tw, lo, hi)
+    }
+}
+
+/// Resolve the [`butterfly`] path once — `Plan::dispatch` runs one
+/// butterfly call per (stage, block), so the knob read hoists out of
+/// the stage loops.
+#[inline]
+pub fn butterfly_kernel() -> fn(&[f64], &mut [f64], &mut [f64]) {
+    if enabled() {
+        butterfly_vec
+    } else {
+        butterfly_scalar
+    }
+}
+
+/// Vector path of [`butterfly`]: two complex elements per [`F64x4`]
+/// step, then a per-pair tail.
+pub fn butterfly_vec(tw: &[f64], lo: &mut [f64], hi: &mut [f64]) {
+    debug_assert!(tw.len() == lo.len() && hi.len() == lo.len());
+    debug_assert_eq!(lo.len() % 2, 0, "interleaved (re, im) pairs");
+    let n = lo.len();
+    let blocks = n / LANES64;
+    for i in 0..blocks {
+        let o = i * LANES64;
+        let a = F64x4::load(&lo[o..]);
+        let b = cmul_f64x4(F64x4::load(&hi[o..]), F64x4::load(&tw[o..]));
+        a.add(b).store(&mut lo[o..]);
+        a.sub(b).store(&mut hi[o..]);
+    }
+    for k in blocks * 2..n / 2 {
+        let (re, im) = (2 * k, 2 * k + 1);
+        let bre = hi[re] * tw[re] - hi[im] * tw[im];
+        let bim = hi[re] * tw[im] + hi[im] * tw[re];
+        let (are, aim) = (lo[re], lo[im]);
+        lo[re] = are + bre;
+        lo[im] = aim + bim;
+        hi[re] = are - bre;
+        hi[im] = aim - bim;
+    }
+}
+
+/// Scalar reference of [`butterfly`] — the identical per-pair
+/// expression as plain loops.
+pub fn butterfly_scalar(tw: &[f64], lo: &mut [f64], hi: &mut [f64]) {
+    debug_assert!(tw.len() == lo.len() && hi.len() == lo.len());
+    debug_assert_eq!(lo.len() % 2, 0, "interleaved (re, im) pairs");
+    for k in 0..lo.len() / 2 {
+        let (re, im) = (2 * k, 2 * k + 1);
+        let bre = hi[re] * tw[re] - hi[im] * tw[im];
+        let bim = hi[re] * tw[im] + hi[im] * tw[re];
+        let (are, aim) = (lo[re], lo[im]);
+        lo[re] = are + bre;
+        lo[im] = aim + bim;
+        hi[re] = are - bre;
+        hi[im] = aim - bim;
+    }
+}
+
+/// Complex multiply-accumulate over interleaved pairs:
+/// `out[k] = out[k] + a[k]·b[k]` with the accumulator on the add's left
+/// — `rfft_half`'s post-twiddle `E[k] + w^k·O[k]` with `out` preloaded
+/// to `E`.
+#[inline]
+pub fn cmul_add(a: &[f64], b: &[f64], out: &mut [f64]) {
+    if enabled() {
+        cmul_add_vec(a, b, out)
+    } else {
+        cmul_add_scalar(a, b, out)
+    }
+}
+
+/// Vector path of [`cmul_add`].
+pub fn cmul_add_vec(a: &[f64], b: &[f64], out: &mut [f64]) {
+    debug_assert!(a.len() == out.len() && b.len() == out.len());
+    debug_assert_eq!(out.len() % 2, 0, "interleaved (re, im) pairs");
+    let n = out.len();
+    let blocks = n / LANES64;
+    for i in 0..blocks {
+        let o = i * LANES64;
+        let acc = F64x4::load(&out[o..]);
+        acc.add(cmul_f64x4(F64x4::load(&a[o..]), F64x4::load(&b[o..]))).store(&mut out[o..]);
+    }
+    for k in blocks * 2..n / 2 {
+        let (re, im) = (2 * k, 2 * k + 1);
+        out[re] += a[re] * b[re] - a[im] * b[im];
+        out[im] += a[re] * b[im] + a[im] * b[re];
+    }
+}
+
+/// Scalar reference of [`cmul_add`].
+pub fn cmul_add_scalar(a: &[f64], b: &[f64], out: &mut [f64]) {
+    debug_assert!(a.len() == out.len() && b.len() == out.len());
+    debug_assert_eq!(out.len() % 2, 0, "interleaved (re, im) pairs");
+    for k in 0..out.len() / 2 {
+        let (re, im) = (2 * k, 2 * k + 1);
+        out[re] += a[re] * b[re] - a[im] * b[im];
+        out[im] += a[re] * b[im] + a[im] * b[re];
+    }
+}
+
+/// Conjugated complex multiply over interleaved pairs:
+/// `out[k] = conj(a[k])·b[k]` — `irfft_half`'s repack twiddle
+/// `w^{-k}·(X[k] − conj(X[half−k]))/2` without materializing the
+/// conjugated table.  The expression is `re = a.re·b.re + a.im·b.im`,
+/// `im = a.re·b.im − a.im·b.re`: negation-free, so no NaN sign flips.
+#[inline]
+pub fn conj_cmul(a: &[f64], b: &[f64], out: &mut [f64]) {
+    if enabled() {
+        conj_cmul_vec(a, b, out)
+    } else {
+        conj_cmul_scalar(a, b, out)
+    }
+}
+
+/// Vector path of [`conj_cmul`].
+pub fn conj_cmul_vec(a: &[f64], b: &[f64], out: &mut [f64]) {
+    debug_assert!(a.len() == out.len() && b.len() == out.len());
+    debug_assert_eq!(out.len() % 2, 0, "interleaved (re, im) pairs");
+    let n = out.len();
+    let blocks = n / LANES64;
+    for i in 0..blocks {
+        let o = i * LANES64;
+        conj_cmul_f64x4(F64x4::load(&a[o..]), F64x4::load(&b[o..])).store(&mut out[o..]);
+    }
+    for k in blocks * 2..n / 2 {
+        let (re, im) = (2 * k, 2 * k + 1);
+        out[re] = a[re] * b[re] + a[im] * b[im];
+        out[im] = a[re] * b[im] - a[im] * b[re];
+    }
+}
+
+/// Scalar reference of [`conj_cmul`].
+pub fn conj_cmul_scalar(a: &[f64], b: &[f64], out: &mut [f64]) {
+    debug_assert!(a.len() == out.len() && b.len() == out.len());
+    debug_assert_eq!(out.len() % 2, 0, "interleaved (re, im) pairs");
+    for k in 0..out.len() / 2 {
+        let (re, im) = (2 * k, 2 * k + 1);
+        out[re] = a[re] * b[re] + a[im] * b[im];
+        out[im] = a[re] * b[im] - a[im] * b[re];
     }
 }
 
@@ -1045,7 +1220,7 @@ mod tests {
 
     #[test]
     fn cmul_matches_complex_formula() {
-        let n = 11usize; // complex pairs: block of 4 + odd tail
+        let n = 11usize; // complex pairs: F64x4 blocks + odd tail
         let a: Vec<f64> = (0..2 * n).map(|i| (i as f64) * 0.3 - 2.0).collect();
         let b: Vec<f64> = (0..2 * n).map(|i| 1.5 - (i as f64) * 0.2).collect();
         let mut v = vec![0.0f64; 2 * n];
@@ -1061,5 +1236,101 @@ mod tests {
             assert_eq!(v[re].to_bits(), s[re].to_bits());
             assert_eq!(v[im].to_bits(), s[im].to_bits());
         }
+    }
+
+    // ----------------------------------------------------- F64x4 itself
+
+    #[test]
+    fn f64x4_shuffles_and_alternating_ops() {
+        let a = F64x4::load(&[1.0, 2.0, 3.0, 4.0]);
+        let b = F64x4::load(&[10.0, 20.0, 30.0, 40.0]);
+        assert_eq!(a.dup_even().to_array(), [1.0, 1.0, 3.0, 3.0]);
+        assert_eq!(a.dup_odd().to_array(), [2.0, 2.0, 4.0, 4.0]);
+        assert_eq!(a.swap_pairs().to_array(), [2.0, 1.0, 4.0, 3.0]);
+        assert_eq!(a.addsub(b).to_array(), [-9.0, 22.0, -27.0, 44.0]);
+        assert_eq!(a.subadd(b).to_array(), [11.0, -18.0, 33.0, -36.0]);
+        assert_eq!(a.add(b).to_array(), [11.0, 22.0, 33.0, 44.0]);
+        assert_eq!(a.sub(b).to_array(), [-9.0, -18.0, -27.0, -36.0]);
+        assert_eq!(a.mul(b).to_array(), [10.0, 40.0, 90.0, 160.0]);
+        assert_eq!(F64x4::splat(7.0).to_array(), [7.0; 4]);
+        assert_eq!(F64x4::zero().to_array(), [0.0; 4]);
+        let mut out = [0.0f64; 5];
+        a.store(&mut out);
+        assert_eq!(out, [1.0, 2.0, 3.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn f64_kernels_bit_equal_across_pair_remainders() {
+        // pair counts straddling the 2-pairs-per-register boundary
+        // (2k−1, 2k, 2k+1) plus empty; NaN/Inf salted in so the operand
+        // order of every term is pinned, not just the finite math
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 31, 32, 33] {
+            let a: Vec<f64> = (0..2 * n)
+                .map(|i| match i % 7 {
+                    0 => f64::NAN,
+                    1 => f64::INFINITY,
+                    _ => (i as f64) * 0.37 - 2.0,
+                })
+                .collect();
+            let b: Vec<f64> = (0..2 * n).map(|i| 1.5 - (i as f64) * 0.21).collect();
+            let c: Vec<f64> = (0..2 * n).map(|i| (i as f64).sin() * 3.0).collect();
+
+            let mut v = vec![0.0f64; 2 * n];
+            let mut s = vec![0.0f64; 2 * n];
+            cmul_vec(&a, &b, &mut v);
+            cmul_scalar(&a, &b, &mut s);
+            for j in 0..2 * n {
+                assert_eq!(v[j].to_bits(), s[j].to_bits(), "cmul n={n} j={j}");
+            }
+
+            conj_cmul_vec(&a, &b, &mut v);
+            conj_cmul_scalar(&a, &b, &mut s);
+            for j in 0..2 * n {
+                assert_eq!(v[j].to_bits(), s[j].to_bits(), "conj_cmul n={n} j={j}");
+                // pin the conjugate formula itself
+                let (re, im) = (2 * (j / 2), 2 * (j / 2) + 1);
+                let want = if j % 2 == 0 {
+                    a[re] * b[re] + a[im] * b[im]
+                } else {
+                    a[re] * b[im] - a[im] * b[re]
+                };
+                assert!(
+                    v[j].to_bits() == want.to_bits() || (v[j].is_nan() && want.is_nan()),
+                    "conj_cmul formula n={n} j={j}"
+                );
+            }
+
+            let mut v = c.clone();
+            let mut s = c.clone();
+            cmul_add_vec(&a, &b, &mut v);
+            cmul_add_scalar(&a, &b, &mut s);
+            for j in 0..2 * n {
+                assert_eq!(v[j].to_bits(), s[j].to_bits(), "cmul_add n={n} j={j}");
+            }
+
+            let (mut lo_v, mut hi_v) = (b.clone(), c.clone());
+            let (mut lo_s, mut hi_s) = (b.clone(), c.clone());
+            butterfly_vec(&a, &mut lo_v, &mut hi_v);
+            butterfly_scalar(&a, &mut lo_s, &mut hi_s);
+            for j in 0..2 * n {
+                assert_eq!(lo_v[j].to_bits(), lo_s[j].to_bits(), "butterfly lo n={n} j={j}");
+                assert_eq!(hi_v[j].to_bits(), hi_s[j].to_bits(), "butterfly hi n={n} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn butterfly_matches_cpx_expressions() {
+        // one pair computed by hand: t = hi·tw, lo' = lo + t, hi' = lo − t
+        let tw = [0.6, -0.8];
+        let mut lo = [1.0, 2.0];
+        let mut hi = [3.0, 4.0];
+        butterfly_scalar(&tw, &mut lo, &mut hi);
+        let tre = 3.0 * 0.6 - 4.0 * (-0.8);
+        let tim = 3.0 * (-0.8) + 4.0 * 0.6;
+        assert_eq!(lo[0].to_bits(), (1.0 + tre).to_bits());
+        assert_eq!(lo[1].to_bits(), (2.0 + tim).to_bits());
+        assert_eq!(hi[0].to_bits(), (1.0 - tre).to_bits());
+        assert_eq!(hi[1].to_bits(), (2.0 - tim).to_bits());
     }
 }

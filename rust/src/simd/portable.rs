@@ -1,6 +1,6 @@
-//! Portable [`F32x8`] backend: a plain `[f32; 8]` with fixed-width lane
-//! loops.  This is the default (and the only one the offline toolchain
-//! compiles); the fixed width lets the compiler unroll and
+//! Portable [`F32x8`] / [`F64x4`] backends: plain fixed-width arrays
+//! with lane loops.  This is the default (and the only one the offline
+//! toolchain compiles); the fixed width lets the compiler unroll and
 //! auto-vectorize each op, while the *semantics* stay exactly one IEEE
 //! operation per lane in a pinned order — which is what the canonical
 //! blocked kernels in the parent module rely on for bit-equality with
@@ -157,5 +157,124 @@ impl F32x8 {
     #[inline]
     pub fn hmax_gt(self) -> f32 {
         super::tree_max_gt(self.0)
+    }
+}
+
+/// Four `f64` lanes — the double-precision sibling of [`F32x8`], sized
+/// for the FFT's interleaved `(re, im)` pairs: one register holds two
+/// complex values.  Every op is one IEEE-754 operation per lane with a
+/// pinned operand order (never FMA), so the complex-multiply
+/// decomposition in the parent module is expression-identical to the
+/// scalar `Cpx::mul` formula, bit for bit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct F64x4([f64; 4]);
+
+// Inherent `add`/`sub`/`mul` on purpose — see the F32x8 note above.
+#[allow(clippy::should_implement_trait)]
+impl F64x4 {
+    /// All lanes `+0.0`.
+    #[inline]
+    pub fn zero() -> Self {
+        F64x4([0.0; 4])
+    }
+
+    /// All lanes `v`.
+    #[inline]
+    pub fn splat(v: f64) -> Self {
+        F64x4([v; 4])
+    }
+
+    /// Load the first 4 elements of `xs` (panics when `xs.len() < 4`).
+    #[inline]
+    pub fn load(xs: &[f64]) -> Self {
+        let mut lanes = [0.0f64; 4];
+        lanes.copy_from_slice(&xs[..4]);
+        F64x4(lanes)
+    }
+
+    /// Store the 4 lanes into the first 4 elements of `out` (panics
+    /// when `out.len() < 4`).
+    #[inline]
+    pub fn store(self, out: &mut [f64]) {
+        out[..4].copy_from_slice(&self.0);
+    }
+
+    /// The lanes as a plain array.
+    #[inline]
+    pub fn to_array(self) -> [f64; 4] {
+        self.0
+    }
+
+    /// Lanewise `self + o`.
+    #[inline]
+    pub fn add(self, o: F64x4) -> Self {
+        let mut r = self.0;
+        for (a, b) in r.iter_mut().zip(&o.0) {
+            *a += b;
+        }
+        F64x4(r)
+    }
+
+    /// Lanewise `self - o`.
+    #[inline]
+    pub fn sub(self, o: F64x4) -> Self {
+        let mut r = self.0;
+        for (a, b) in r.iter_mut().zip(&o.0) {
+            *a -= b;
+        }
+        F64x4(r)
+    }
+
+    /// Lanewise `self * o`.
+    #[inline]
+    pub fn mul(self, o: F64x4) -> Self {
+        let mut r = self.0;
+        for (a, b) in r.iter_mut().zip(&o.0) {
+            *a *= b;
+        }
+        F64x4(r)
+    }
+
+    /// Duplicate the even lanes: `[a0, a0, a2, a2]` — on interleaved
+    /// complex pairs this broadcasts each real part over its pair
+    /// (AVX `vmovddup`).
+    #[inline]
+    pub fn dup_even(self) -> Self {
+        let a = self.0;
+        F64x4([a[0], a[0], a[2], a[2]])
+    }
+
+    /// Duplicate the odd lanes: `[a1, a1, a3, a3]` — broadcasts each
+    /// imaginary part over its pair.
+    #[inline]
+    pub fn dup_odd(self) -> Self {
+        let a = self.0;
+        F64x4([a[1], a[1], a[3], a[3]])
+    }
+
+    /// Swap each adjacent lane pair: `[a1, a0, a3, a2]` — swaps `(re,
+    /// im)` within each complex value.
+    #[inline]
+    pub fn swap_pairs(self) -> Self {
+        let a = self.0;
+        F64x4([a[1], a[0], a[3], a[2]])
+    }
+
+    /// Alternating subtract/add, subtract first (AVX `vaddsubpd`):
+    /// even lanes `self - o`, odd lanes `self + o`.  Each lane is one
+    /// IEEE op with `self` on the left, so NaN selection matches the
+    /// scalar expressions exactly.
+    #[inline]
+    pub fn addsub(self, o: F64x4) -> Self {
+        let (a, b) = (self.0, o.0);
+        F64x4([a[0] - b[0], a[1] + b[1], a[2] - b[2], a[3] + b[3]])
+    }
+
+    /// Alternating add/subtract, add first — the mirror of
+    /// [`F64x4::addsub`]: even lanes `self + o`, odd lanes `self - o`.
+    #[inline]
+    pub fn subadd(self, o: F64x4) -> Self {
+        let (a, b) = (self.0, o.0);
+        F64x4([a[0] + b[0], a[1] - b[1], a[2] + b[2], a[3] - b[3]])
     }
 }

@@ -21,9 +21,11 @@ compile_error!(
 );
 
 use core::arch::x86_64::{
-    __m256, _mm256_add_ps, _mm256_blendv_ps, _mm256_cmp_ps, _mm256_div_ps, _mm256_loadu_ps,
-    _mm256_mul_ps, _mm256_set1_ps, _mm256_setzero_ps, _mm256_storeu_ps, _mm256_sub_ps,
-    _CMP_GT_OQ,
+    __m256, __m256d, _mm256_add_pd, _mm256_add_ps, _mm256_addsub_pd, _mm256_blend_pd,
+    _mm256_blendv_ps, _mm256_cmp_ps, _mm256_div_ps, _mm256_loadu_pd, _mm256_loadu_ps,
+    _mm256_movedup_pd, _mm256_mul_pd, _mm256_mul_ps, _mm256_permute_pd, _mm256_set1_pd,
+    _mm256_set1_ps, _mm256_setzero_pd, _mm256_setzero_ps, _mm256_storeu_pd, _mm256_storeu_ps,
+    _mm256_sub_pd, _mm256_sub_ps, _CMP_GT_OQ,
 };
 
 /// Eight `f32` lanes in one AVX register.  See the portable backend for
@@ -149,5 +151,113 @@ impl F32x8 {
     #[inline]
     pub fn hmax_gt(self) -> f32 {
         super::tree_max_gt(self.to_array())
+    }
+}
+
+/// Four `f64` lanes in one AVX register — the double-precision sibling
+/// of [`F32x8`] behind the identical portable API.  Same contract: one
+/// IEEE operation per lane, `self` on each op's left, no FMA.  The pair
+/// shuffles map 1:1 onto AVX: `dup_even` is `vmovddup`, `dup_odd` and
+/// `swap_pairs` are `vpermilpd`, `addsub` is `vaddsubpd`; `subadd` has
+/// no single instruction and blends a `vaddpd`/`vsubpd` pair, which
+/// keeps every lane the exact scalar expression (a negate-then-addsub
+/// trick would flip NaN payload signs).
+#[derive(Clone, Copy, Debug)]
+pub struct F64x4(__m256d);
+
+// Inherent `add`/`sub`/`mul` on purpose — see the F32x8 note above.
+#[allow(clippy::should_implement_trait)]
+impl F64x4 {
+    /// All lanes `+0.0`.
+    #[inline]
+    pub fn zero() -> Self {
+        // SAFETY: caller of this backend opted into AVX (module docs).
+        F64x4(unsafe { _mm256_setzero_pd() })
+    }
+
+    /// All lanes `v`.
+    #[inline]
+    pub fn splat(v: f64) -> Self {
+        F64x4(unsafe { _mm256_set1_pd(v) })
+    }
+
+    /// Load the first 4 elements of `xs` (panics when `xs.len() < 4`).
+    #[inline]
+    pub fn load(xs: &[f64]) -> Self {
+        assert!(xs.len() >= 4);
+        // SAFETY: bounds checked above; loadu has no alignment demand.
+        F64x4(unsafe { _mm256_loadu_pd(xs.as_ptr()) })
+    }
+
+    /// Store the 4 lanes into the first 4 elements of `out`.
+    #[inline]
+    pub fn store(self, out: &mut [f64]) {
+        assert!(out.len() >= 4);
+        // SAFETY: bounds checked above; storeu has no alignment demand.
+        unsafe { _mm256_storeu_pd(out.as_mut_ptr(), self.0) }
+    }
+
+    /// The lanes as a plain array.
+    #[inline]
+    pub fn to_array(self) -> [f64; 4] {
+        let mut lanes = [0.0f64; 4];
+        // SAFETY: the local array is exactly 4 f64s.
+        unsafe { _mm256_storeu_pd(lanes.as_mut_ptr(), self.0) };
+        lanes
+    }
+
+    /// Lanewise `self + o`.
+    #[inline]
+    pub fn add(self, o: F64x4) -> Self {
+        F64x4(unsafe { _mm256_add_pd(self.0, o.0) })
+    }
+
+    /// Lanewise `self - o`.
+    #[inline]
+    pub fn sub(self, o: F64x4) -> Self {
+        F64x4(unsafe { _mm256_sub_pd(self.0, o.0) })
+    }
+
+    /// Lanewise `self * o`.
+    #[inline]
+    pub fn mul(self, o: F64x4) -> Self {
+        F64x4(unsafe { _mm256_mul_pd(self.0, o.0) })
+    }
+
+    /// Duplicate the even lanes: `[a0, a0, a2, a2]` (`vmovddup`).
+    #[inline]
+    pub fn dup_even(self) -> Self {
+        F64x4(unsafe { _mm256_movedup_pd(self.0) })
+    }
+
+    /// Duplicate the odd lanes: `[a1, a1, a3, a3]`.
+    #[inline]
+    pub fn dup_odd(self) -> Self {
+        F64x4(unsafe { _mm256_permute_pd::<0b1111>(self.0) })
+    }
+
+    /// Swap each adjacent lane pair: `[a1, a0, a3, a2]`.
+    #[inline]
+    pub fn swap_pairs(self) -> Self {
+        F64x4(unsafe { _mm256_permute_pd::<0b0101>(self.0) })
+    }
+
+    /// Even lanes `self - o`, odd lanes `self + o` (`vaddsubpd`).
+    #[inline]
+    pub fn addsub(self, o: F64x4) -> Self {
+        F64x4(unsafe { _mm256_addsub_pd(self.0, o.0) })
+    }
+
+    /// Even lanes `self + o`, odd lanes `self - o` — blended from a
+    /// full add and a full sub so each lane is the exact one-op scalar
+    /// expression (no operand negation, so NaN bits agree too).
+    #[inline]
+    pub fn subadd(self, o: F64x4) -> Self {
+        F64x4(unsafe {
+            let sum = _mm256_add_pd(self.0, o.0);
+            let diff = _mm256_sub_pd(self.0, o.0);
+            // lanes 1 and 3 (imm bits set) come from the second operand
+            _mm256_blend_pd::<0b1010>(sum, diff)
+        })
     }
 }

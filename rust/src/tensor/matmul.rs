@@ -38,12 +38,22 @@
 //! and [`dot`] uses the canonical blocked accumulation order, so
 //! `simd on/off` changes no bits anywhere in this file
 //! (`rust/tests/simd_equivalence.rs`).
+//!
+//! `PLMU_GEMM=packed` swaps the chunk bodies of `matmul`, `matmul_tn`,
+//! `matmul_nt`, and `affine_act` for the BLIS-style packed micro-kernel
+//! in `tensor::packed` — same exec row partition, same per-element
+//! operation chains, bit-identical output (the module docs over there
+//! carry the argument).  `matvec` stays on the dot kernel: its rows are
+//! single dot products with nothing to pack.
 
+use super::packed::{self, GemmPath};
 use super::{Act, Tensor};
 use crate::exec;
 use crate::simd;
 
-const KC: usize = 256; // k-panel height (keeps a B panel ~KC*cols*4B in cache)
+// k-panel height (keeps a B panel ~KC*cols*4B in cache); shared with the
+// packed path so both walk identical k-panels
+pub(crate) const KC: usize = 256;
 
 /// C = A (m,k) · B (k,n)
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
@@ -52,11 +62,17 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(k, kb, "matmul inner dims: {:?} x {:?}", a.shape(), b.shape());
     let mut c = Tensor::zeros(&[m, n]);
     let (ad, bd) = (a.data(), b.data());
-    let gate = GatedAxpy::new(bd);
     let plan = exec::plan_for(m, m * k * n);
-    exec::parallel_rows_mut(c.data_mut(), n, plan, |i0, cblock| {
-        matmul_rows(ad, bd, cblock, i0, k, n, gate);
-    });
+    if packed::gemm_path() == GemmPath::Packed {
+        exec::parallel_rows_mut(c.data_mut(), n, plan, |i0, cblock| {
+            packed::gemm_rows(ad, bd, cblock, i0, k, n, m, false);
+        });
+    } else {
+        let gate = GatedAxpy::new(bd);
+        exec::parallel_rows_mut(c.data_mut(), n, plan, |i0, cblock| {
+            matmul_rows(ad, bd, cblock, i0, k, n, gate);
+        });
+    }
     c
 }
 
@@ -128,11 +144,19 @@ pub fn affine_act(a: &Tensor, b: &Tensor, bias: &Tensor, act: Option<Act>) -> Te
     assert_eq!(bias.len(), n, "affine bias length {} != cols {n}", bias.len());
     let mut c = Tensor::zeros(&[m, n]);
     let (ad, bd, biasd) = (a.data(), b.data(), bias.data());
-    let gate = GatedAxpy::new(bd);
+    // resolve both knobs once; the gate's finiteness scan only runs when
+    // the axpy path (the only consumer of the skip) is selected
+    let gate = match packed::gemm_path() {
+        GemmPath::Axpy => Some(GatedAxpy::new(bd)),
+        GemmPath::Packed => None,
+    };
     let act_assign = act.map(Act::assign_kernel); // resolve the knob once
     let plan = exec::plan_for(m, m * k * n);
     exec::parallel_rows_mut(c.data_mut(), n, plan, |i0, cblock| {
-        matmul_rows(ad, bd, cblock, i0, k, n, gate);
+        match gate {
+            Some(g) => matmul_rows(ad, bd, cblock, i0, k, n, g),
+            None => packed::gemm_rows(ad, bd, cblock, i0, k, n, m, false),
+        }
         if n > 0 {
             for crow in cblock.chunks_mut(n) {
                 simd::add_assign(crow, biasd);
@@ -152,8 +176,16 @@ pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(k, kb, "matmul_tn inner dims: {:?} x {:?}", a.shape(), b.shape());
     let mut c = Tensor::zeros(&[m, n]);
     let (ad, bd) = (a.data(), b.data());
-    let gate = GatedAxpy::new(bd);
     let plan = exec::plan_for(m, m * k * n);
+    if packed::gemm_path() == GemmPath::Packed {
+        // the packed A panel reads A column-major ((k, m) layout), which
+        // is exactly matmul_tn's storage — tn = true selects that gather
+        exec::parallel_rows_mut(c.data_mut(), n, plan, |i0, cblock| {
+            packed::gemm_rows(ad, bd, cblock, i0, k, n, m, true);
+        });
+        return c;
+    }
+    let gate = GatedAxpy::new(bd);
     // Each chunk owns rows [i0, i0+rows) of C and scans all k rank-1
     // updates itself: contiguous in B's row, p-ascending per element
     // exactly like the serial p-outer loop.
@@ -177,8 +209,16 @@ pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(k, kb, "matmul_nt inner dims: {:?} x {:?}", a.shape(), b.shape());
     let mut c = Tensor::zeros(&[m, n]);
     let (ad, bd) = (a.data(), b.data());
-    let dot_k = simd::dot_kernel(); // resolve the knob once, not per element
     let plan = exec::plan_for(m, m * k * n);
+    if packed::gemm_path() == GemmPath::Packed {
+        // register-blocks 8 columns of dots; each column's chain is the
+        // canonical blocked dot, so per element nothing differs
+        exec::parallel_rows_mut(c.data_mut(), n, plan, |i0, cblock| {
+            packed::gemm_nt_rows(ad, bd, cblock, i0, k, n);
+        });
+        return c;
+    }
+    let dot_k = simd::dot_kernel(); // resolve the knob once, not per element
     exec::parallel_rows_mut(c.data_mut(), n, plan, |i0, cblock| {
         let rows = if n == 0 { 0 } else { cblock.len() / n };
         for r in 0..rows {
@@ -439,6 +479,126 @@ mod tests {
                     x.to_bits() == y.to_bits(),
                     "act {act:?} elem {i}: {x} vs {y}"
                 );
+            }
+        }
+    }
+
+    /// Degenerate GEMM shapes (m == 0, n == 0, k == 0) across every
+    /// entry point: the output must exist with the right shape and,
+    /// where it has elements (k == 0), be exactly +0.0 / the bias.
+    /// Direct calls into the packed kernels cover the same degenerate
+    /// cases without flipping the global knob.
+    #[test]
+    fn degenerate_shapes_yield_empty_or_zero_outputs() {
+        for &(m, k, n) in &[(0usize, 3usize, 4usize), (2, 0, 3), (3, 4, 0), (0, 0, 0)] {
+            let a = Tensor::zeros(&[m, k]);
+            let b = Tensor::zeros(&[k, n]);
+            let c = matmul(&a, &b);
+            assert_eq!(c.shape(), &[m, n], "matmul ({m},{k},{n})");
+            assert!(c.data().iter().all(|v| v.to_bits() == 0), "matmul ({m},{k},{n})");
+
+            let at = Tensor::zeros(&[k, m]);
+            let c_tn = matmul_tn(&at, &b);
+            assert_eq!(c_tn.shape(), &[m, n], "matmul_tn ({m},{k},{n})");
+            assert!(c_tn.data().iter().all(|v| v.to_bits() == 0));
+
+            let bt = Tensor::zeros(&[n, k]);
+            let c_nt = matmul_nt(&a, &bt);
+            assert_eq!(c_nt.shape(), &[m, n], "matmul_nt ({m},{k},{n})");
+            assert!(c_nt.data().iter().all(|v| v.to_bits() == 0));
+
+            let bias = Tensor::new(&[n], (0..n).map(|j| j as f32 + 1.0).collect());
+            let c_aa = affine_act(&a, &b, &bias, Some(Act::Relu));
+            assert_eq!(c_aa.shape(), &[m, n], "affine_act ({m},{k},{n})");
+            for row in c_aa.data().chunks(n.max(1)) {
+                for (j, v) in row.iter().enumerate() {
+                    assert_eq!(*v, j as f32 + 1.0, "affine_act bias row ({m},{k},{n})");
+                }
+            }
+
+            // packed kernels, called directly on the degenerate blocks
+            let mut cp = vec![0.0f32; m * n];
+            packed::gemm_rows(a.data(), b.data(), &mut cp, 0, k, n, m, false);
+            assert!(cp.iter().all(|v| v.to_bits() == 0));
+            packed::gemm_rows(at.data(), b.data(), &mut cp, 0, k, n, m, true);
+            assert!(cp.iter().all(|v| v.to_bits() == 0));
+            packed::gemm_nt_rows(a.data(), bt.data(), &mut cp, 0, k, n);
+            assert!(cp.iter().all(|v| v.to_bits() == 0));
+        }
+        // matvec degenerate: zero rows and zero cols
+        let y = matvec(&Tensor::zeros(&[0, 5]), &[1.0; 5]);
+        assert!(y.is_empty());
+        let y = matvec(&Tensor::zeros(&[4, 0]), &[]);
+        assert_eq!(y, vec![0.0; 4]);
+    }
+
+    /// The packed kernels, called directly (no knob flip — the lib test
+    /// binary runs tests concurrently), must be bit-identical to the
+    /// axpy entry points on ragged shapes that exercise every tile
+    /// remainder, including zero-dense A and non-finite B (the packed
+    /// path has no zero-skip, so it must match both gate outcomes).
+    #[test]
+    fn packed_kernels_bit_equal_to_axpy_entry_points() {
+        let mut rng = Rng::new(9);
+        for &(m, k, n) in &[(1, 1, 1), (7, 9, 8), (8, 256, 16), (9, 257, 17), (16, 300, 33)] {
+            for salt in [false, true] {
+                let mut a = Tensor::randn(&[m, k], 1.0, &mut rng);
+                let mut b = Tensor::randn(&[k, n], 1.0, &mut rng);
+                for (i, v) in a.data_mut().iter_mut().enumerate() {
+                    if i % 3 == 0 {
+                        *v = 0.0;
+                    }
+                }
+                if salt {
+                    let bl = b.len();
+                    b.data_mut()[0] = f32::NAN;
+                    b.data_mut()[bl - 1] = f32::INFINITY;
+                }
+
+                let c_ref = matmul(&a, &b);
+                let mut cp = vec![0.0f32; m * n];
+                packed::gemm_rows(a.data(), b.data(), &mut cp, 0, k, n, m, false);
+                for (i, (x, y)) in cp.iter().zip(c_ref.data()).enumerate() {
+                    assert!(x.to_bits() == y.to_bits(), "matmul ({m},{k},{n}) salt {salt} elem {i}: {x} vs {y}");
+                }
+
+                let at = a.transpose2();
+                let c_tn_ref = matmul_tn(&at, &b);
+                cp.iter_mut().for_each(|v| *v = 0.0);
+                packed::gemm_rows(at.data(), b.data(), &mut cp, 0, k, n, m, true);
+                for (i, (x, y)) in cp.iter().zip(c_tn_ref.data()).enumerate() {
+                    assert!(x.to_bits() == y.to_bits(), "matmul_tn ({m},{k},{n}) salt {salt} elem {i}: {x} vs {y}");
+                }
+
+                let bt = b.transpose2();
+                let c_nt_ref = matmul_nt(&a, &bt);
+                cp.iter_mut().for_each(|v| *v = 0.0);
+                packed::gemm_nt_rows(a.data(), bt.data(), &mut cp, 0, k, n);
+                for (i, (x, y)) in cp.iter().zip(c_nt_ref.data()).enumerate() {
+                    assert!(x.to_bits() == y.to_bits(), "matmul_nt ({m},{k},{n}) salt {salt} elem {i}: {x} vs {y}");
+                }
+            }
+        }
+    }
+
+    /// Chunked packed calls (the exec sharding pattern: disjoint row
+    /// blocks with their own pack buffers) must agree bit-for-bit with
+    /// one whole-matrix call — the thread count cannot change bytes.
+    #[test]
+    fn packed_chunks_match_whole_matrix_call() {
+        let mut rng = Rng::new(10);
+        let (m, k, n) = (13usize, 37usize, 21usize);
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let mut whole = vec![0.0f32; m * n];
+        packed::gemm_rows(a.data(), b.data(), &mut whole, 0, k, n, m, false);
+        for split in [1usize, 5, 8, 12] {
+            let mut chunked = vec![0.0f32; m * n];
+            let (lo, hi) = chunked.split_at_mut(split * n);
+            packed::gemm_rows(a.data(), b.data(), lo, 0, k, n, m, false);
+            packed::gemm_rows(a.data(), b.data(), hi, split, k, n, m, false);
+            for (i, (x, y)) in chunked.iter().zip(&whole).enumerate() {
+                assert!(x.to_bits() == y.to_bits(), "split {split} elem {i}");
             }
         }
     }

@@ -28,6 +28,7 @@
 //! every path falls through to the plain allocator unchanged.
 
 pub mod matmul;
+pub mod packed;
 
 use crate::exec;
 use crate::exec::arena;

@@ -1,0 +1,354 @@
+//! BLIS-style packed GEMM path behind the `PLMU_GEMM` knob.
+//!
+//! The axpy kernels in `tensor/matmul.rs` are row-sharded but untiled:
+//! every rank-1 update streams a full row of B through cache and each
+//! output element is touched `k` times from memory.  This module packs
+//! operand panels once per job chunk and runs an `MR × NR` register
+//! micro-kernel over them, BLIS-style:
+//!
+//!  * B's k-panel (`KC` rows) is repacked into width-[`NR`] column
+//!    tiles, so the micro-kernel's B loads are contiguous and the tile
+//!    stays in L1 across all of the chunk's row panels;
+//!  * A's `MR`-row micro-panel is repacked p-major (`ap[p·MR + r]`),
+//!    so the per-p broadcast reads are contiguous;
+//!  * the micro-kernel holds an `MR`-row × `NR`-column tile of C in
+//!    [`F32x8`] registers ([`MR`] accumulators) and folds the whole
+//!    k-panel into it with one splat·load multiply-add per (p, row).
+//!
+//! # Why bit-exactness survives the tiling
+//!
+//! Lane `j` of accumulator `r` holds `C[i0+r0+r, j0+j]` and the p loop
+//! performs `acc += splat(A[i,p]) · B[p, j0..]` — multiply then add,
+//! accumulator on the add's left, p ascending.  That is *per element*
+//! the identical sequential chain the axpy path writes as
+//! `crow[j] += a[i,p] * b[p,j]`: same k-panel order (both use [`KC`]),
+//! same expression, no horizontal reduction anywhere, so no
+//! reassociation exists to change bits.  The tile's round-trips through
+//! memory between k-panels are exact, and the axpy path's
+//! finiteness-gated zero-skip is bit-invisible by the same argument
+//! that makes it sound there (adding `a·b = ±0.0` to an accumulator
+//! that can never be `-0.0` is the identity; with non-finite B the
+//! axpy path disables the skip and performs every add, exactly like
+//! this path always does).  `matmul_nt`'s packed kernel instead blocks
+//! eight *columns* of dot products whose per-column chains are exactly
+//! `simd::dot_vec`'s canonical blocked order.  Pinned bit-for-bit
+//! against the axpy path in `rust/tests/simd_equivalence.rs` and
+//! across the `PLMU_THREADS × PLMU_SIMD × PLMU_GEMM` matrix by
+//! `./ci.sh determinism`.
+//!
+//! Padded B-tile lanes are zero-filled and their accumulator lanes are
+//! never stored (partial stores), so ragged `n` is handled without
+//! branches in the inner loop; ragged `m` runs the micro-kernel with
+//! fewer live accumulators.
+
+use crate::simd::{F32x8, LANES};
+use crate::util::env_knob;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::matmul::KC;
+
+/// Micro-tile rows: one [`F32x8`] accumulator per row.
+pub const MR: usize = 8;
+/// Micro-tile columns: the [`F32x8`] lane count.
+pub const NR: usize = LANES;
+
+/// Which GEMM inner path the matmul entry points run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmPath {
+    /// The untiled rank-1/axpy kernels (default; `tensor/matmul.rs`).
+    Axpy,
+    /// The packed-panel register micro-kernel in this module.
+    Packed,
+}
+
+/// Runtime GEMM-path knob: 0 = unresolved, 1 = axpy, 2 = packed.
+static GEMM_PATH: AtomicUsize = AtomicUsize::new(0);
+
+fn parse_path(s: &str) -> Result<GemmPath, String> {
+    if s.eq_ignore_ascii_case("axpy") {
+        Ok(GemmPath::Axpy)
+    } else if s.eq_ignore_ascii_case("packed") {
+        Ok(GemmPath::Packed)
+    } else {
+        Err(format!("bad PLMU_GEMM value {s:?} (want axpy | packed)"))
+    }
+}
+
+fn resolve_default() -> GemmPath {
+    match env_knob::str_knob("PLMU_GEMM") {
+        // like PLMU_SCAN: a garbled env value warns once and falls back
+        // to the default rather than panicking inside library calls
+        Some(v) => parse_path(&v).unwrap_or_else(|e| {
+            env_knob::warn_once("PLMU_GEMM", &format!("ignoring PLMU_GEMM ({e}); using the axpy default"));
+            GemmPath::Axpy
+        }),
+        None => GemmPath::Axpy,
+    }
+}
+
+/// The active GEMM path (default: axpy, unless `PLMU_GEMM=packed`).
+/// Both paths are bit-identical on every input; the knob exists so the
+/// determinism gate can prove it end-to-end and the benches can A/B it.
+pub fn gemm_path() -> GemmPath {
+    match GEMM_PATH.load(Ordering::Relaxed) {
+        1 => GemmPath::Axpy,
+        2 => GemmPath::Packed,
+        _ => {
+            let p = resolve_default();
+            // racy double-resolve is benign: resolve_default is deterministic
+            set_gemm_path(p);
+            p
+        }
+    }
+}
+
+/// Set the GEMM-path knob (tests and benches; production reads
+/// `PLMU_GEMM` once).  Resolved once per matmul entry call, so flipping
+/// it mid-run is safe.
+pub fn set_gemm_path(p: GemmPath) {
+    GEMM_PATH.store(
+        match p {
+            GemmPath::Axpy => 1,
+            GemmPath::Packed => 2,
+        },
+        Ordering::Relaxed,
+    );
+}
+
+/// Pack rows `k0 .. k0+kc` of B (k, n) into width-[`NR`] column tiles:
+/// `bp[t·KC·NR + p·NR + c] = B[k0+p, t·NR + c]`, zero-padding the last
+/// tile's missing columns (those lanes are never stored back to C).
+fn pack_b(bd: &[f32], n: usize, k0: usize, kc: usize, n_tiles: usize, bp: &mut [f32]) {
+    for t in 0..n_tiles {
+        let j0 = t * NR;
+        let nr = (j0 + NR).min(n) - j0;
+        let tile = &mut bp[t * KC * NR..t * KC * NR + kc * NR];
+        for p in 0..kc {
+            let src = &bd[(k0 + p) * n + j0..(k0 + p) * n + j0 + nr];
+            let dst = &mut tile[p * NR..(p + 1) * NR];
+            dst[..nr].copy_from_slice(src);
+            for pad in &mut dst[nr..] {
+                *pad = 0.0;
+            }
+        }
+    }
+}
+
+/// Pack an `mr`-row micro-panel of A p-major: `ap[p·MR + r]` holds the
+/// element multiplying into output row `r` at reduction index `k0+p`.
+/// `tn` selects A's layout: `false` reads `A[(i_first+r)·k + k0+p]`
+/// (matmul: A is (m, k)); `true` reads `A[(k0+p)·m + i_first+r]`
+/// (matmul_tn: A is (k, m), C-row index = A-column index).  Slots for
+/// rows `>= mr` go stale but are never read.
+#[allow(clippy::too_many_arguments)]
+fn pack_a(
+    ad: &[f32],
+    tn: bool,
+    i_first: usize,
+    k0: usize,
+    kc: usize,
+    mr: usize,
+    k: usize,
+    m: usize,
+    ap: &mut [f32],
+) {
+    if tn {
+        for p in 0..kc {
+            let arow = &ad[(k0 + p) * m + i_first..(k0 + p) * m + i_first + mr];
+            let dst = &mut ap[p * MR..p * MR + mr];
+            dst.copy_from_slice(arow);
+        }
+    } else {
+        for r in 0..mr {
+            let arow = &ad[(i_first + r) * k + k0..(i_first + r) * k + k0 + kc];
+            for (p, &v) in arow.iter().enumerate() {
+                ap[p * MR + r] = v;
+            }
+        }
+    }
+}
+
+/// The register micro-kernel: fold one packed k-panel into the
+/// `mr × nr` C tile at (`r0`, `j0`) of the chunk.  Accumulator `r`
+/// starts from C's current tile row (accumulation continues across
+/// k-panels) and the p loop is the per-element sequential chain the
+/// module docs pin against the axpy path.
+#[allow(clippy::too_many_arguments)]
+fn micro_kernel(
+    ap: &[f32],
+    btile: &[f32],
+    kc: usize,
+    mr: usize,
+    nr: usize,
+    cblock: &mut [f32],
+    r0: usize,
+    j0: usize,
+    n: usize,
+) {
+    let mut acc = [F32x8::zero(); MR];
+    for (r, a) in acc.iter_mut().enumerate().take(mr) {
+        let crow = &cblock[(r0 + r) * n + j0..];
+        *a = if nr == NR { F32x8::load(crow) } else { F32x8::load_or(&crow[..nr], 0.0) };
+    }
+    for p in 0..kc {
+        let bv = F32x8::load(&btile[p * NR..]);
+        for (r, a) in acc.iter_mut().enumerate().take(mr) {
+            *a = a.mul_acc(F32x8::splat(ap[p * MR + r]), bv);
+        }
+    }
+    for (r, a) in acc.iter().enumerate().take(mr) {
+        let crow = &mut cblock[(r0 + r) * n + j0..];
+        if nr == NR {
+            a.store(crow);
+        } else {
+            a.store_partial(crow, nr);
+        }
+    }
+}
+
+/// Packed serial kernel over one contiguous block of C's rows (rows
+/// `i0 ..` of C, `cblock`) — the packed twin of `matmul_rows` /
+/// `matmul_tn`'s chunk body.  Pack buffers are allocated per chunk:
+/// each exec chunk packs its own panels, so chunks share nothing and
+/// the thread count cannot change bytes.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_rows(
+    ad: &[f32],
+    bd: &[f32],
+    cblock: &mut [f32],
+    i0: usize,
+    k: usize,
+    n: usize,
+    m: usize,
+    tn: bool,
+) {
+    let rows = if n == 0 { 0 } else { cblock.len() / n };
+    if rows == 0 || n == 0 || k == 0 {
+        return; // degenerate shapes: C is already all zeros
+    }
+    let n_tiles = n.div_ceil(NR);
+    let mut bp = vec![0.0f32; KC * n_tiles * NR];
+    let mut ap = vec![0.0f32; KC * MR];
+    for k0 in (0..k).step_by(KC) {
+        let kc = (k0 + KC).min(k) - k0;
+        pack_b(bd, n, k0, kc, n_tiles, &mut bp);
+        for r0 in (0..rows).step_by(MR) {
+            let mr = (r0 + MR).min(rows) - r0;
+            pack_a(ad, tn, i0 + r0, k0, kc, mr, k, m, &mut ap);
+            for t in 0..n_tiles {
+                let j0 = t * NR;
+                let nr = (j0 + NR).min(n) - j0;
+                micro_kernel(&ap, &bp[t * KC * NR..], kc, mr, nr, cblock, r0, j0, n);
+            }
+        }
+    }
+}
+
+/// Packed serial kernel for `matmul_nt` (C = A·Bᵀ) over one chunk of
+/// C's rows.  B's rows are already contiguous in `k`, so nothing needs
+/// repacking; instead the kernel register-blocks [`NR`] *columns* of
+/// dot products, sharing each loaded A block across all eight.  Every
+/// per-column accumulation chain is exactly `simd::dot_vec`'s
+/// canonical blocked order (eight lanes, element `i` into lane
+/// `i % 8`, the one fixed reduction tree), so each output element is
+/// bit-identical to the axpy path's per-element `dot`.
+pub fn gemm_nt_rows(ad: &[f32], bd: &[f32], cblock: &mut [f32], i0: usize, k: usize, n: usize) {
+    let rows = if n == 0 { 0 } else { cblock.len() / n };
+    for r in 0..rows {
+        let i = i0 + r;
+        let arow = &ad[i * k..(i + 1) * k];
+        let crow = &mut cblock[r * n..(r + 1) * n];
+        let blocks = k / LANES;
+        let tail = blocks * LANES;
+        let mut j0 = 0;
+        while j0 + NR <= n {
+            let mut acc = [F32x8::zero(); NR];
+            for bi in 0..blocks {
+                let o = bi * LANES;
+                let av = F32x8::load(&arow[o..]);
+                for (c, a) in acc.iter_mut().enumerate() {
+                    *a = a.mul_acc(av, F32x8::load(&bd[(j0 + c) * k + o..]));
+                }
+            }
+            if tail < k {
+                let av = F32x8::load_or(&arow[tail..], 0.0);
+                for (c, a) in acc.iter_mut().enumerate() {
+                    let brow = &bd[(j0 + c) * k + tail..(j0 + c + 1) * k];
+                    *a = a.mul_acc(av, F32x8::load_or(brow, 0.0));
+                }
+            }
+            for (c, a) in acc.iter().enumerate() {
+                crow[j0 + c] = a.hsum();
+            }
+            j0 += NR;
+        }
+        // column tail: plain canonical dots, same chain as the blocks
+        for j in j0..n {
+            crow[j] = crate::simd::dot_vec(arow, &bd[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knob_roundtrip() {
+        let was = gemm_path();
+        set_gemm_path(GemmPath::Packed);
+        assert_eq!(gemm_path(), GemmPath::Packed);
+        set_gemm_path(GemmPath::Axpy);
+        assert_eq!(gemm_path(), GemmPath::Axpy);
+        set_gemm_path(was);
+    }
+
+    #[test]
+    fn parse_accepts_both_paths_case_insensitively() {
+        assert_eq!(parse_path("axpy"), Ok(GemmPath::Axpy));
+        assert_eq!(parse_path("Packed"), Ok(GemmPath::Packed));
+        assert_eq!(parse_path("PACKED"), Ok(GemmPath::Packed));
+        assert!(parse_path("blis").is_err());
+    }
+
+    #[test]
+    fn pack_b_tiles_and_pads() {
+        // B is (2, 10): two tiles, the second ragged by 2 columns
+        let n = 10usize;
+        let bd: Vec<f32> = (0..2 * n).map(|i| i as f32).collect();
+        let n_tiles = n.div_ceil(NR);
+        let mut bp = vec![-1.0f32; KC * n_tiles * NR];
+        pack_b(&bd, n, 0, 2, n_tiles, &mut bp);
+        // tile 0, p = 1, c = 3 -> B[1, 3] = 13
+        assert_eq!(bp[NR + 3], 13.0);
+        // tile 1, p = 0, c = 1 -> B[0, 9] = 9
+        assert_eq!(bp[KC * NR + 1], 9.0);
+        // tile 1 padded lanes are +0.0
+        assert_eq!(bp[KC * NR + 2], 0.0);
+        assert_eq!(bp[KC * NR + NR + 7], 0.0);
+    }
+
+    #[test]
+    fn pack_a_layouts_agree() {
+        // a 3×4 A packed from the (m, k) and (k, m) layouts must yield
+        // the identical p-major micro-panel
+        let (m, k) = (3usize, 4usize);
+        let a_mk: Vec<f32> = (0..m * k).map(|i| i as f32).collect();
+        let mut a_km = vec![0.0f32; m * k];
+        for i in 0..m {
+            for p in 0..k {
+                a_km[p * m + i] = a_mk[i * k + p];
+            }
+        }
+        let mut ap1 = vec![0.0f32; KC * MR];
+        let mut ap2 = vec![0.0f32; KC * MR];
+        pack_a(&a_mk, false, 0, 0, k, m, k, m, &mut ap1);
+        pack_a(&a_km, true, 0, 0, k, m, k, m, &mut ap2);
+        for p in 0..k {
+            for r in 0..m {
+                assert_eq!(ap1[p * MR + r], ap2[p * MR + r], "p={p} r={r}");
+                assert_eq!(ap1[p * MR + r], a_mk[r * k + p]);
+            }
+        }
+    }
+}

@@ -80,6 +80,10 @@ fn matvec_bit_equal() {
 #[test]
 fn matmul_family_bit_equal() {
     let _k = knob_guard();
+    // both PLMU_GEMM paths must be thread-count invariant: the packed
+    // path packs per exec chunk, so the partition must not change bytes
+    use plmu::tensor::packed::{gemm_path, set_gemm_path, GemmPath};
+    let was = gemm_path();
     let mut rng = Rng::new(1);
     let shapes: &[(usize, usize, usize)] =
         &[(129, 67, 65), (517, 33, 31), (7, 300, 5), (1, 1, 1), (3, 2, 1)];
@@ -88,16 +92,20 @@ fn matmul_family_bit_equal() {
         let b = Tensor::randn(&[k, n], 1.0, &mut rng);
         let at = Tensor::randn(&[k, m], 1.0, &mut rng);
         let bt = Tensor::randn(&[n, k], 1.0, &mut rng);
-        assert_equal_across_threads(&format!("matmul {m}x{k}x{n}"), || {
-            a.matmul(&b).data().to_vec()
-        });
-        assert_equal_across_threads(&format!("matmul_tn {m}x{k}x{n}"), || {
-            at.matmul_tn(&b).data().to_vec()
-        });
-        assert_equal_across_threads(&format!("matmul_nt {m}x{k}x{n}"), || {
-            a.matmul_nt(&bt).data().to_vec()
-        });
+        for path in [GemmPath::Axpy, GemmPath::Packed] {
+            set_gemm_path(path);
+            assert_equal_across_threads(&format!("matmul {m}x{k}x{n} {path:?}"), || {
+                a.matmul(&b).data().to_vec()
+            });
+            assert_equal_across_threads(&format!("matmul_tn {m}x{k}x{n} {path:?}"), || {
+                at.matmul_tn(&b).data().to_vec()
+            });
+            assert_equal_across_threads(&format!("matmul_nt {m}x{k}x{n} {path:?}"), || {
+                a.matmul_nt(&bt).data().to_vec()
+            });
+        }
     }
+    set_gemm_path(was);
 }
 
 #[test]

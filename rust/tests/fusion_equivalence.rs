@@ -199,6 +199,32 @@ fn full_models_bit_equal_across_fusion() {
 }
 
 #[test]
+fn full_model_bit_equal_across_gemm_paths() {
+    // the PLMU_GEMM packed path under the fused graph: loss and packed
+    // gradients of a whole training batch must be bit-identical to the
+    // axpy default, with fusion at its ambient setting (serialized on
+    // the same knob mutex so no other test flips fusion mid-run)
+    use plmu::tensor::packed::{gemm_path, set_gemm_path, GemmPath};
+    let _guard = FUSION_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let was = gemm_path();
+    for kind in [ModelKind::LmuParallel, ModelKind::Lstm] {
+        set_gemm_path(GemmPath::Axpy);
+        let axpy = model_loss_and_grads(kind);
+        set_gemm_path(GemmPath::Packed);
+        let packed = model_loss_and_grads(kind);
+        assert_eq!(
+            packed.0.to_bits(),
+            axpy.0.to_bits(),
+            "{kind:?}: loss differs across PLMU_GEMM: {} vs {}",
+            packed.0,
+            axpy.0
+        );
+        assert_bits_equal(&format!("{kind:?}: packed grads across PLMU_GEMM"), &packed.1, &axpy.1);
+    }
+    set_gemm_path(was);
+}
+
+#[test]
 fn arena_recycling_does_not_change_results() {
     // plain allocation vs a fresh arena vs a *warm* arena (second round
     // reuses recycled buffers): all three bit-identical, and the warm

@@ -20,9 +20,11 @@
 //! else calls the `_vec`/`_scalar` entry points directly and can run
 //! concurrently.
 
-use plmu::fft::{next_pow2, Cpx, RfftCache};
+use plmu::fft::{irfft_half, next_pow2, rfft_half, Cpx, Plan, RfftCache};
 use plmu::simd;
-use plmu::tensor::matmul::{dot, matvec};
+use plmu::tensor::matmul::{affine_act, dot, matvec};
+use plmu::tensor::packed::{gemm_path, set_gemm_path, GemmPath};
+use plmu::tensor::Act;
 use plmu::util::Rng;
 use plmu::Tensor;
 use std::sync::Mutex;
@@ -40,6 +42,20 @@ fn with_knob_both<T>(f: impl Fn() -> T) -> (T, T) {
     let off = f();
     simd::set_enabled(was);
     (on, off)
+}
+
+/// Run `f` under `PLMU_GEMM` packed and axpy (serialized on the same
+/// process-global knob mutex, prior setting restored) and return
+/// (packed, axpy) for comparison.
+fn with_gemm_both<T>(f: impl Fn() -> T) -> (T, T) {
+    let _guard = SIMD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let was = gemm_path();
+    set_gemm_path(GemmPath::Packed);
+    let packed = f();
+    set_gemm_path(GemmPath::Axpy);
+    let axpy = f();
+    set_gemm_path(was);
+    (packed, axpy)
 }
 
 fn assert_bits_equal(label: &str, got: &[f32], want: &[f32]) {
@@ -604,6 +620,259 @@ fn spectrum_product_stable_across_the_knob_and_matches_cpx_mul() {
         assert_eq!(got[2 * k + 1].to_bits(), want.im.to_bits(), "im {k}");
         assert_eq!(got[2 * k].to_bits(), got_s[2 * k].to_bits());
         assert_eq!(got[2 * k + 1].to_bits(), got_s[2 * k + 1].to_bits());
+    }
+}
+
+// ------------------------------------------------------ f64 kernel sweep
+//
+// The F64x4 kernel triples behind the FFT butterflies and spectrum
+// products, A/B'd against naive Cpx-formula references written here,
+// over pair counts spanning every 2-pair-block remainder (4 f64 lanes =
+// 2 complex pairs per block) and the 8k-1 / 8k / 8k+1 lane classes.
+
+fn assert_bits_equal_f64(label: &str, got: &[f64], want: &[f64]) {
+    assert_eq!(got.len(), want.len(), "{label}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            g.to_bits() == w.to_bits(),
+            "{label}: element {i} differs: {g} ({:#018x}) vs {w} ({:#018x})",
+            g.to_bits(),
+            w.to_bits()
+        );
+    }
+}
+
+/// Complex pair counts: every remainder class of the 2-pair vector
+/// blocks, plus 8k-1 / 8k / 8k+1 in f64-lane terms (pairs 3/4/5 give
+/// lane counts 6/8/10 etc.), empty, and a long tail.
+const PAIR_COUNTS: &[usize] = &[0, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 500];
+
+/// Interleaved (re, im) buffer with NaN/Inf salted at block seams.
+fn cpx_buf(pairs: usize, rng: &mut Rng, salt: bool) -> Vec<f64> {
+    let mut v: Vec<f64> = (0..2 * pairs).map(|_| rng.normal()).collect();
+    if salt {
+        for (pos, bad) in [(0usize, f64::NAN), (3, f64::INFINITY), (4, f64::NEG_INFINITY), (2 * pairs - 1, f64::NAN)] {
+            if pos < v.len() {
+                v[pos] = bad;
+            }
+        }
+    }
+    v
+}
+
+#[test]
+fn f64_cmul_and_conj_cmul_match_cpx_formulas_bit_for_bit() {
+    let mut rng = Rng::new(110);
+    for &pairs in PAIR_COUNTS {
+        for salt in [false, true] {
+            let a = cpx_buf(pairs, &mut rng, salt);
+            let b = cpx_buf(pairs, &mut rng, salt);
+            let label = format!("pairs={pairs} salt={salt}");
+
+            // cmul: (ar + i·ai)(br + i·bi)
+            let mut want = vec![0.0f64; 2 * pairs];
+            for p in 0..pairs {
+                let (ar, ai, br, bi) = (a[2 * p], a[2 * p + 1], b[2 * p], b[2 * p + 1]);
+                want[2 * p] = ar * br - ai * bi;
+                want[2 * p + 1] = ar * bi + ai * br;
+            }
+            let mut got = vec![0.0f64; 2 * pairs];
+            simd::cmul_vec(&a, &b, &mut got);
+            assert_bits_equal_f64(&format!("cmul_vec {label}"), &got, &want);
+            let mut got = vec![0.0f64; 2 * pairs];
+            simd::cmul_scalar(&a, &b, &mut got);
+            assert_bits_equal_f64(&format!("cmul_scalar {label}"), &got, &want);
+
+            // conj_cmul: conj(a) · b
+            for p in 0..pairs {
+                let (ar, ai, br, bi) = (a[2 * p], a[2 * p + 1], b[2 * p], b[2 * p + 1]);
+                want[2 * p] = ar * br + ai * bi;
+                want[2 * p + 1] = ar * bi - ai * br;
+            }
+            let mut got = vec![0.0f64; 2 * pairs];
+            simd::conj_cmul_vec(&a, &b, &mut got);
+            assert_bits_equal_f64(&format!("conj_cmul_vec {label}"), &got, &want);
+            let mut got = vec![0.0f64; 2 * pairs];
+            simd::conj_cmul_scalar(&a, &b, &mut got);
+            assert_bits_equal_f64(&format!("conj_cmul_scalar {label}"), &got, &want);
+
+            // cmul_add: out += a · b, accumulator on the add's left
+            let base = cpx_buf(pairs, &mut rng, false);
+            let mut want_acc = base.clone();
+            for p in 0..pairs {
+                let (ar, ai, br, bi) = (a[2 * p], a[2 * p + 1], b[2 * p], b[2 * p + 1]);
+                want_acc[2 * p] += ar * br - ai * bi;
+                want_acc[2 * p + 1] += ar * bi + ai * br;
+            }
+            let mut got = base.clone();
+            simd::cmul_add_vec(&a, &b, &mut got);
+            assert_bits_equal_f64(&format!("cmul_add_vec {label}"), &got, &want_acc);
+            let mut got = base.clone();
+            simd::cmul_add_scalar(&a, &b, &mut got);
+            assert_bits_equal_f64(&format!("cmul_add_scalar {label}"), &got, &want_acc);
+        }
+    }
+}
+
+#[test]
+fn f64_butterfly_matches_cpx_formula_bit_for_bit() {
+    let mut rng = Rng::new(111);
+    for &pairs in PAIR_COUNTS {
+        for salt in [false, true] {
+            let tw = cpx_buf(pairs, &mut rng, salt);
+            let lo0 = cpx_buf(pairs, &mut rng, salt);
+            let hi0 = cpx_buf(pairs, &mut rng, false);
+            let label = format!("pairs={pairs} salt={salt}");
+
+            // b = hi · tw; lo = a + b; hi = a - b (a = old lo)
+            let mut want_lo = lo0.clone();
+            let mut want_hi = hi0.clone();
+            for p in 0..pairs {
+                let (hr, hi_) = (hi0[2 * p], hi0[2 * p + 1]);
+                let (tr, ti) = (tw[2 * p], tw[2 * p + 1]);
+                let br = hr * tr - hi_ * ti;
+                let bi = hr * ti + hi_ * tr;
+                let (ar, ai) = (lo0[2 * p], lo0[2 * p + 1]);
+                want_lo[2 * p] = ar + br;
+                want_lo[2 * p + 1] = ai + bi;
+                want_hi[2 * p] = ar - br;
+                want_hi[2 * p + 1] = ai - bi;
+            }
+            let (mut lo, mut hi) = (lo0.clone(), hi0.clone());
+            simd::butterfly_vec(&tw, &mut lo, &mut hi);
+            assert_bits_equal_f64(&format!("butterfly_vec lo {label}"), &lo, &want_lo);
+            assert_bits_equal_f64(&format!("butterfly_vec hi {label}"), &hi, &want_hi);
+            let (mut lo, mut hi) = (lo0.clone(), hi0.clone());
+            simd::butterfly_scalar(&tw, &mut lo, &mut hi);
+            assert_bits_equal_f64(&format!("butterfly_scalar lo {label}"), &lo, &want_lo);
+            assert_bits_equal_f64(&format!("butterfly_scalar hi {label}"), &hi, &want_hi);
+        }
+    }
+}
+
+#[test]
+fn fft_plan_and_real_transforms_stable_across_the_knob() {
+    // whole transforms through the public entry points: the vectorized
+    // butterflies and the rfft_half/irfft_half pack/unpack kernels must
+    // change no bits when PLMU_SIMD flips
+    let mut rng = Rng::new(112);
+    for &n in &[2usize, 8, 64, 256] {
+        let sig: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let (on, off) = with_knob_both(|| {
+            let p = Plan::new(n);
+            let mut buf: Vec<Cpx> = sig.iter().map(|&v| Cpx::new(v, 0.0)).collect();
+            p.forward(&mut buf);
+            let mut rt = buf.clone();
+            p.inverse(&mut rt);
+            (buf, rt)
+        });
+        for (a, b) in on.0.iter().zip(&off.0).chain(on.1.iter().zip(&off.1)) {
+            assert!(a.re.to_bits() == b.re.to_bits() && a.im.to_bits() == b.im.to_bits(), "plan n={n} knob");
+        }
+    }
+    for &len in &[1usize, 5, 17, 100] {
+        let sig: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let nfft = next_pow2(2 * len);
+        let (on, off) = with_knob_both(|| {
+            let spec = rfft_half(&sig, nfft);
+            let back = irfft_half(&spec, nfft, len);
+            (spec, back)
+        });
+        for (a, b) in on.0.iter().zip(&off.0) {
+            assert!(a.re.to_bits() == b.re.to_bits() && a.im.to_bits() == b.im.to_bits(), "rfft_half len={len} knob");
+        }
+        assert_bits_equal(&format!("irfft_half len={len} knob"), &on.1, &off.1);
+    }
+}
+
+// ----------------------------------------------------- PLMU_GEMM matrix
+//
+// The packed GEMM path must be bit-identical to the axpy path at every
+// entry point, over degenerate and lane-remainder shapes, with NaN/Inf
+// in B (the packed path has no zero-skip — it must match both outcomes
+// of the axpy gate), and through gradients (backprop routes through
+// matmul_tn / matmul_nt, so a full autograd chain pins all of them).
+
+#[test]
+fn matmul_family_bit_equal_across_gemm_paths() {
+    let mut rng = Rng::new(113);
+    let shapes: &[(usize, usize, usize)] = &[
+        (129, 67, 65),
+        (7, 300, 5),
+        (1, 1, 1),
+        (5, 16, 7),
+        (5, 16, 8),
+        (5, 16, 9),
+        (8, 257, 16),
+        (9, 300, 33),
+        (2, 0, 3),
+        (0, 3, 4),
+        (3, 4, 0),
+    ];
+    for &(m, k, n) in shapes {
+        for salt in [false, true] {
+            let mut a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let mut b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            // zeros in A tempt the axpy zero-skip; non-finite B disables
+            // its gate — the packed path must match either way
+            for (i, v) in a.data_mut().iter_mut().enumerate() {
+                if i % 3 == 0 {
+                    *v = 0.0;
+                }
+            }
+            if salt && !b.data().is_empty() {
+                let bl = b.len();
+                b.data_mut()[0] = f32::NAN;
+                b.data_mut()[bl - 1] = f32::INFINITY;
+            }
+            let at = a.transpose2();
+            let bt = b.transpose2();
+            let bias = Tensor::randn(&[n], 0.1, &mut rng);
+            let label = format!("({m},{k},{n}) salt={salt}");
+
+            let (p, x) = with_gemm_both(|| a.matmul(&b));
+            assert_bits_equal(&format!("matmul {label} gemm"), p.data(), x.data());
+            let (p, x) = with_gemm_both(|| at.matmul_tn(&b));
+            assert_bits_equal(&format!("matmul_tn {label} gemm"), p.data(), x.data());
+            let (p, x) = with_gemm_both(|| a.matmul_nt(&bt));
+            assert_bits_equal(&format!("matmul_nt {label} gemm"), p.data(), x.data());
+            let (p, x) = with_gemm_both(|| affine_act(&a, &b, &bias, Some(Act::Tanh)));
+            assert_bits_equal(&format!("affine_act {label} gemm"), p.data(), x.data());
+            if k > 0 {
+                let xv: Vec<f32> = (0..k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let (p, x) = with_gemm_both(|| matvec(&a, &xv));
+                assert_bits_equal(&format!("matvec {label} gemm"), &p, &x);
+            }
+        }
+    }
+}
+
+#[test]
+fn gradients_bit_equal_across_gemm_paths() {
+    use plmu::autograd::{Graph, ParamStore};
+    // forward affine_act routes matmul; backward routes matmul_tn (dW)
+    // and matmul_nt (dX) — one chain pins values AND gradients across
+    // the knob, at a k spanning multiple KC panels and ragged n
+    for &(m, k, n) in &[(3usize, 5usize, 7usize), (17, 300, 9), (8, 64, 33)] {
+        let mut rng = Rng::new((m + 10 * k + 1000 * n) as u64);
+        let mut store = ParamStore::new();
+        let x = store.add("x", Tensor::randn(&[m, k], 1.0, &mut rng));
+        let w = store.add("w", Tensor::randn(&[k, n], 0.5, &mut rng));
+        let b = store.add("b", Tensor::randn(&[n], 0.1, &mut rng));
+        let (p, ax) = with_gemm_both(|| {
+            let mut g = Graph::new();
+            let (xn, wn, bn) = (g.param(&store, x), g.param(&store, w), g.param(&store, b));
+            let o = g.affine_act(xn, wn, bn, Some(plmu::autograd::Act::Tanh));
+            let sq = g.mul(o, o);
+            let loss = g.mean_all(sq);
+            g.backward(loss);
+            let mut flat = g.value(o).data().to_vec();
+            for (_, grad) in g.param_grads() {
+                flat.extend_from_slice(grad.data());
+            }
+            flat
+        });
+        assert_bits_equal(&format!("affine grads ({m},{k},{n}) gemm"), &p, &ax);
     }
 }
 
